@@ -1,0 +1,123 @@
+//! End-to-end driver (the repo's E2E validation, EXPERIMENTS.md §E2E):
+//! corpus generation → ground-truth labeling → tokenize/encode → train the
+//! paper's Conv1D model via the AOT `train_step` on PJRT → evaluate →
+//! serve one prediction — all from one Rust process, Python long gone.
+//!
+//! Budgets are env-tunable: E2E_COUNT (base graphs), E2E_STEPS.
+//! Defaults keep the run to a few minutes on one CPU core.
+//!
+//! Run: `cargo run --release --example end_to_end`
+
+use anyhow::Result;
+use mlir_cost::bundle::Bundle;
+use mlir_cost::dataset::{Dataset, EncodedSet, TargetStats};
+use mlir_cost::runtime::{Manifest, Runtime};
+use mlir_cost::sim::Target;
+use mlir_cost::tokenizer::{count_oov, Scheme, Vocab};
+use mlir_cost::train::{metrics, TrainConfig, Trainer};
+use std::path::Path;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> Result<()> {
+    let count = env_usize("E2E_COUNT", 1500);
+    let steps = env_usize("E2E_STEPS", 300);
+    let model = std::env::var("E2E_MODEL").unwrap_or_else(|_| "conv_ops".into());
+    let target = Target::RegPressure;
+    let scheme = Scheme::OpsOnly;
+
+    // 1. Corpus: graphs -> MLIR text -> compile+simulate ground truth.
+    let t0 = std::time::Instant::now();
+    let ds = Dataset::generate(42, count, 1)?;
+    println!(
+        "[1/5] corpus: {} labeled samples in {:.1}s",
+        ds.len(),
+        t0.elapsed().as_secs_f64()
+    );
+    let (train, test) = ds.split(7, 0.1);
+
+    // 2. Tokenize + encode (vocab on train only; report OOV rate on test).
+    let streams_tr = train.token_streams(scheme)?;
+    let streams_te = test.token_streams(scheme)?;
+    let vocab = Vocab::build(streams_tr.iter(), 2);
+    let oov: usize = streams_te.iter().map(|s| count_oov(s, &vocab)).sum();
+    let total: usize = streams_te.iter().map(Vec::len).sum();
+    println!(
+        "[2/5] vocab {} tokens; test OOV rate {:.2}% ({} / {})",
+        vocab.len(),
+        100.0 * oov as f64 / total as f64,
+        oov,
+        total
+    );
+    let stats = TargetStats::for_dataset(&train, target);
+    let manifest = Manifest::load(Path::new("artifacts"))?;
+    let mm = manifest.model(&model)?;
+    let enc_tr = EncodedSet::build(&train, &streams_tr, &vocab, mm.max_len, target, &stats);
+    let enc_te = EncodedSet::build(&test, &streams_te, &vocab, mm.max_len, target, &stats);
+
+    // 3. Train via the AOT train_step executable.
+    let rt = Runtime::cpu()?;
+    let mut trainer = Trainer::new(&rt, &manifest, &model)?;
+    let cfg = TrainConfig {
+        model: model.clone(),
+        steps,
+        seed: 0,
+        eval_every: (steps / 3).max(1),
+        log_every: (steps / 10).max(1),
+    };
+    let report = trainer.run(&cfg, &enc_tr, &enc_te)?;
+    println!(
+        "[3/5] trained {steps} steps at {:.2} steps/s; loss curve: {:?}",
+        report.steps_per_sec,
+        report
+            .losses
+            .iter()
+            .map(|(s, l)| format!("{s}:{l:.3}"))
+            .collect::<Vec<_>>()
+    );
+
+    // 4. Evaluate in paper terms.
+    let preds: Vec<f64> = trainer
+        .predict_set(&enc_te)?
+        .iter()
+        .map(|&p| stats.denormalize(p))
+        .collect();
+    let truth: Vec<f64> = test.samples.iter().map(|s| target.of(&s.labels)).collect();
+    let rmse_pct = metrics::rmse_pct(&preds, &truth, stats.range());
+    println!(
+        "[4/5] test: RMSE {:.3} ({:.2}% of range {:.0}), MAE {:.3}, exact {:.1}%",
+        metrics::rmse(&preds, &truth),
+        rmse_pct,
+        stats.range(),
+        metrics::mae(&preds, &truth),
+        metrics::pct_exact_rounded(&preds, &truth)
+    );
+
+    // 5. Persist the serving bundle + show one served prediction.
+    let bundle = Bundle {
+        model: model.clone(),
+        target,
+        scheme,
+        max_len: mm.max_len,
+        vocab,
+        stats,
+        params: trainer.params().to_vec(),
+    };
+    let out = Path::new("runs/e2e_bundle");
+    bundle.save(out, &manifest)?;
+    let sample = &test.samples[0];
+    let service = std::sync::Arc::new(mlir_cost::coordinator::Service::start(
+        std::sync::Arc::new(manifest),
+        vec![Bundle::load(out, &Manifest::load(Path::new("artifacts"))?)?],
+        mlir_cost::coordinator::batcher::BatchPolicy::default(),
+        true,
+    )?);
+    let served = service.predict(target, &sample.mlir_text)?;
+    println!(
+        "[5/5] bundle {out:?}; served prediction for '{}': {:.2} (truth {})",
+        sample.name, served, sample.labels.regpressure
+    );
+    Ok(())
+}

@@ -1,0 +1,69 @@
+//! Quickstart: generate a dataflow graph, print its MLIR, get the
+//! compiler+simulator ground truth, and query the served cost model.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use anyhow::Result;
+use mlir_cost::bundle::Bundle;
+use mlir_cost::coordinator::{batcher::BatchPolicy, Service};
+use mlir_cost::dataset::TargetStats;
+use mlir_cost::graphgen::{generate, Family, GraphSpec};
+use mlir_cost::mlir::print_function;
+use mlir_cost::runtime::Manifest;
+use mlir_cost::sim::{ground_truth_default, Target};
+use mlir_cost::tokenizer::{tokenize, Scheme, Vocab};
+use std::path::Path;
+use std::sync::Arc;
+
+fn main() -> Result<()> {
+    // 1. A ResNet-style subgraph from the corpus generator.
+    let spec = GraphSpec { family: Family::Resnet, structure_seed: 7, shape_seed: 9 };
+    let func = generate(&spec)?;
+    let text = print_function(&func);
+    println!("--- MLIR ({} ops) ---\n{text}", func.num_ops());
+
+    // 2. Ground truth: what the DL-compiler + xPU simulator measure.
+    let labels = ground_truth_default(&func)?;
+    println!(
+        "--- ground truth ---\nregpressure = {}\nxpuutil     = {:.2}%\ncycles      = {}",
+        labels.regpressure, labels.xpu_util, labels.cycles
+    );
+
+    // 3. The paper's tokenization (ops-only).
+    let toks = tokenize(&func, Scheme::OpsOnly);
+    println!("--- tokens ({}) ---\n{}", toks.len(), toks.join(" "));
+
+    // 4. Query the ML cost model through the serving coordinator. Uses a
+    //    trained bundle when present (runs/e1/conv_regpressure), otherwise
+    //    untrained weights (prediction quality then meaningless, but the
+    //    full parse→tokenize→batch→PJRT path is identical).
+    let manifest = Arc::new(Manifest::load(Path::new("artifacts"))?);
+    let bundle_dir = Path::new("runs/e1/conv_regpressure");
+    let bundle = if bundle_dir.join("bundle.json").exists() {
+        println!("--- using trained bundle {bundle_dir:?} ---");
+        Bundle::load(bundle_dir, &manifest)?
+    } else {
+        println!("--- no trained bundle found; using untrained weights ---");
+        let streams = vec![toks.clone()];
+        Bundle::untrained(
+            &manifest,
+            "conv_ops",
+            Target::RegPressure,
+            Scheme::OpsOnly,
+            Vocab::build(streams.iter(), 1),
+            TargetStats { mean: 20.0, std: 8.0, min: 2.0, max: 70.0 },
+        )?
+    };
+    let service = Arc::new(Service::start(
+        manifest,
+        vec![bundle],
+        BatchPolicy::default(),
+        true, // Pallas-kernel predict path
+    )?);
+    let pred = service.predict(Target::RegPressure, &text)?;
+    println!(
+        "--- model prediction ---\nregpressure ≈ {pred:.2} (truth {})",
+        labels.regpressure
+    );
+    Ok(())
+}

@@ -1,0 +1,125 @@
+"""AOT export: lower the L2 models once to HLO *text* + a JSON manifest.
+
+Interchange is HLO text, not serialized HloModuleProto: jax >= 0.5 emits
+protos with 64-bit instruction ids that the runtime's xla_extension 0.5.1
+rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Outputs, per model variant, under artifacts/:
+  predict_<variant>_b<B>.hlo.txt      (ref path, batch size B)
+  predict_<variant>_b<B>_pallas.hlo.txt  (conv models: Pallas-kernel path)
+  train_step_<variant>_b<B>.hlo.txt
+  init_<variant>.npz-like flat f32 blob per param (raw little-endian)
+  manifest.json                        (shapes, orders, file inventory)
+
+Run via `make artifacts`. Python never runs after this point.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+from compile import model as M  # noqa: E402
+
+PREDICT_BATCHES = (1, 32)
+TRAIN_BATCH = 32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def export_variant(name: str, outdir: str, manifest: dict) -> None:
+    cfg = M.CONFIGS[name]
+    params = M.init_params(name, seed=0)
+    order = M.param_order(params)
+    param_specs = [spec(params[k].shape) for k in order]
+    max_len = cfg["max_len"]
+
+    entry = {
+        "config": {k: v for k, v in cfg.items()},
+        "param_order": order,
+        "param_shapes": {k: list(params[k].shape) for k in order},
+        "max_len": max_len,
+        "vocab_size": M.VOCAB_SIZE,
+        "predict_batches": list(PREDICT_BATCHES),
+        "train_batch": TRAIN_BATCH,
+        "files": {},
+    }
+
+    # Initial parameters: one raw f32 little-endian blob per tensor.
+    init_dir = os.path.join(outdir, f"init_{name}")
+    os.makedirs(init_dir, exist_ok=True)
+    for k in order:
+        np.asarray(params[k], dtype=np.float32).tofile(os.path.join(init_dir, f"{k}.f32"))
+    entry["files"]["init_dir"] = f"init_{name}"
+
+    # Predict executables.
+    for bsz in PREDICT_BATCHES:
+        ids_spec = spec((bsz, max_len), jnp.int32)
+        fn = functools.partial(M.predict_flat, name, order)
+        low = jax.jit(fn).lower(*param_specs, ids_spec)
+        path = f"predict_{name}_b{bsz}.hlo.txt"
+        with open(os.path.join(outdir, path), "w") as f:
+            f.write(to_hlo_text(low))
+        entry["files"][f"predict_b{bsz}"] = path
+        if cfg["kind"] == "conv":
+            fnp = functools.partial(M.predict_flat_pallas, name, order)
+            lowp = jax.jit(fnp).lower(*param_specs, ids_spec)
+            pathp = f"predict_{name}_b{bsz}_pallas.hlo.txt"
+            with open(os.path.join(outdir, pathp), "w") as f:
+                f.write(to_hlo_text(lowp))
+            entry["files"][f"predict_b{bsz}_pallas"] = pathp
+
+    # Train step executable.
+    ids_spec = spec((TRAIN_BATCH, max_len), jnp.int32)
+    tgt_spec = spec((TRAIN_BATCH,), jnp.float32)
+    step_spec = spec((), jnp.float32)
+    fn = functools.partial(M.train_step_flat, name, order)
+    low = jax.jit(fn).lower(
+        *param_specs, *param_specs, *param_specs, step_spec, ids_spec, tgt_spec
+    )
+    path = f"train_step_{name}_b{TRAIN_BATCH}.hlo.txt"
+    with open(os.path.join(outdir, path), "w") as f:
+        f.write(to_hlo_text(low))
+    entry["files"]["train_step"] = path
+
+    manifest["models"][name] = entry
+    print(f"exported {name}: {len(entry['files'])} artifact files")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=os.path.join(os.path.dirname(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__)))), "artifacts"))
+    ap.add_argument("--models", nargs="*", default=list(M.CONFIGS.keys()))
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    manifest = {"version": 1, "vocab_size": M.VOCAB_SIZE, "models": {}}
+    for name in args.models:
+        export_variant(name, args.out, manifest)
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"manifest written to {args.out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,128 @@
+"""L1 Pallas kernel: fused stacked-Conv1D + global MaxPool.
+
+This is the hot path of the paper's best model (Fig 5: six Conv1D layers →
+MaxPool1D → FC). The kernel fuses the whole conv stack and the pooling for
+one block of the (batch, sequence) iteration space, so intermediate
+activations never leave VMEM.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): a GPU would give each
+threadblock a sequence tile and use shared memory; on TPU we instead
+
+  * express each conv tap as a channel-contraction matmul
+    ``x_shifted[L, Cin] @ w[tap][Cin, Cout]`` so the inner loop runs on the
+    MXU systolic array (bf16/f32 matmul), not as pointwise VPU work;
+  * tile the sequence dimension with BlockSpec so one (batch-row, L-block)
+    of activations plus all taps fit in VMEM (footprint analysis in
+    DESIGN.md §Perf);
+  * overlap rows via the Pallas grid — the HBM→VMEM schedule a CUDA kernel
+    writes by hand falls out of the BlockSpec index map.
+
+The kernel MUST run with ``interpret=True`` in this image: real-TPU
+lowering emits a Mosaic custom-call the CPU PJRT plugin cannot execute.
+Numerics are validated against ``ref.py`` by pytest/hypothesis.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Keep the padded left-halo of the deepest stack bounded; max total shift =
+# sum(K_i - 1) over the stack. For the paper's two configs: fs=2 x6 -> 6,
+# fs=16,16,8,8,2,1 -> 44.
+
+
+def _stack_kernel(x_ref, *refs, n_layers: int, taps: tuple[int, ...]):
+    """Pallas kernel body: refs = [w_0, b_0, ..., w_{n-1}, b_{n-1}, out].
+
+    x_ref: [BLK_B, L, Cin] block (already left-padded by the caller).
+    out:   [BLK_B, C_out] pooled features.
+    """
+    out_ref = refs[-1]
+    x = x_ref[...]
+    for layer in range(n_layers):
+        w = refs[2 * layer][...]  # [K, Cin, Cout]
+        b = refs[2 * layer + 1][...]  # [Cout]
+        k = taps[layer]
+        length = x.shape[1]
+        acc = jnp.zeros((x.shape[0], length, w.shape[2]), dtype=x.dtype)
+        for tap in range(k):
+            shift = k - 1 - tap
+            # Static shift: a roll + zero-mask keeps everything vectorized
+            # (dynamic_slice per tap would serialize the MXU pipeline).
+            if shift == 0:
+                xs = x
+            else:
+                pad = jnp.zeros((x.shape[0], shift, x.shape[2]), dtype=x.dtype)
+                xs = jnp.concatenate([pad, x[:, : length - shift, :]], axis=1)
+            # Channel contraction on the MXU: [B, L, Cin] @ [Cin, Cout].
+            acc = acc + jax.lax.dot_general(
+                xs,
+                w[tap],
+                dimension_numbers=(((2,), (0,)), ((), ())),
+                preferred_element_type=x.dtype,
+            )
+        x = jnp.maximum(acc + b, 0.0)
+    # Global max pool over the sequence axis.
+    out_ref[...] = jnp.max(x, axis=1)
+
+
+def conv_stack_pool_pallas(x, taps_w, taps_b, *, block_b: int = 8):
+    """Fused conv-stack + maxpool via pallas_call (interpret mode).
+
+    Args:
+      x: [B, L, Cin] embeddings.
+      taps_w: list of [K_i, C_in_i, C_out_i] filters.
+      taps_b: list of [C_out_i] biases.
+      block_b: batch rows per grid step (VMEM tile height).
+
+    Returns:
+      [B, C_out_last] pooled features, identical to
+      ``ref.conv_stack_pool``.
+    """
+    bsz, length, _ = x.shape
+    n_layers = len(taps_w)
+    taps = tuple(int(w.shape[0]) for w in taps_w)
+    c_out = int(taps_w[-1].shape[2])
+    if bsz % block_b != 0:
+        block_b = 1  # degenerate but always valid
+
+    kernel = functools.partial(_stack_kernel, n_layers=n_layers, taps=taps)
+    in_specs = [pl.BlockSpec((block_b, length, x.shape[2]), lambda i: (i, 0, 0))]
+    operands = [x]
+    for w, b in zip(taps_w, taps_b):
+        in_specs.append(pl.BlockSpec(w.shape, lambda i: (0,) * w.ndim))
+        in_specs.append(pl.BlockSpec(b.shape, lambda i: (0,)))
+        operands.extend([w, b])
+    return pl.pallas_call(
+        kernel,
+        grid=(bsz // block_b,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_b, c_out), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, c_out), x.dtype),
+        interpret=True,
+    )(*operands)
+
+
+def vmem_footprint_bytes(block_b: int, length: int, channels: list[int], taps: list[int],
+                         dtype_bytes: int = 4) -> int:
+    """Analytic VMEM footprint of one grid step (DESIGN.md §Perf L1).
+
+    Activations double-buffer (current + next layer) plus all filter taps.
+    """
+    act = 2 * block_b * length * max(channels) * dtype_bytes
+    weights = sum(k * cin * cout * dtype_bytes
+                  for k, cin, cout in zip(taps, channels[:-1], channels[1:]))
+    return act + weights
+
+
+def mxu_macs(length: int, channels: list[int], taps: list[int]) -> int:
+    """MACs per sample routed to the MXU — used for the utilization
+    estimate in EXPERIMENTS.md §Perf."""
+    total = 0
+    for k, cin, cout in zip(taps, channels[:-1], channels[1:]):
+        total += k * length * cin * cout
+    return total

@@ -1,0 +1,62 @@
+"""Pure-jnp oracle for the L1 Pallas kernels.
+
+Everything the Pallas kernel computes is specified here first; pytest
+(`python/tests/test_kernels.py`) asserts the two agree to float tolerance
+across a hypothesis sweep of shapes. The training path also uses these
+reference ops (Pallas interpret-mode has no autodiff rule), so train and
+serve are numerically the same function.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def conv1d_same(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """1-D convolution with left-zero-padded 'same' output length.
+
+    Args:
+      x: [B, L, Cin] activations.
+      w: [K, Cin, Cout] filter taps.
+      b: [Cout] bias.
+
+    Returns:
+      [B, L, Cout]: ``out[:, t] = sum_k x[:, t-(K-1-k)] @ w[k] + b`` with
+      zero padding on the left — tap K-1 sees the current position.
+      Expressing the conv as K channel-contraction matmuls is exactly how
+      the Pallas kernel maps it to the MXU.
+    """
+    bsz, length, cin = x.shape
+    k, cin2, cout = w.shape
+    assert cin == cin2, f"channel mismatch {cin} vs {cin2}"
+    out = jnp.zeros((bsz, length, cout), dtype=x.dtype)
+    for tap in range(k):
+        shift = k - 1 - tap
+        if shift == 0:
+            xs = x
+        else:
+            xs = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, :length, :]
+        out = out + xs @ w[tap]
+    return out + b
+
+
+def conv1d_relu(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """conv1d_same followed by ReLU — one stack layer."""
+    return jnp.maximum(conv1d_same(x, w, b), 0.0)
+
+
+def conv_stack(x, taps, biases):
+    """The paper's stacked Conv1D feature extractor (Fig 5 / Fig 6)."""
+    for w, b in zip(taps, biases):
+        x = conv1d_relu(x, w, b)
+    return x
+
+
+def global_maxpool(x: jnp.ndarray) -> jnp.ndarray:
+    """MaxPool1D over the full sequence: [B, L, C] -> [B, C]."""
+    return jnp.max(x, axis=1)
+
+
+def conv_stack_pool(x, taps, biases):
+    """Stack + pool: the fused region the Pallas kernel implements."""
+    return global_maxpool(conv_stack(x, taps, biases))

@@ -1,0 +1,210 @@
+"""L2: the paper's three regressor families in JAX.
+
+Models (paper §3 "The Actual ML-model"):
+  * ``fc``    — bag-of-tokens: embed → masked mean over positions → 3 FC.
+  * ``lstm``  — embed → single-layer LSTM → last hidden state → FC head.
+  * ``conv``  — embed → stacked Conv1D(+ReLU) → global MaxPool → 3 FC
+                (Fig 5; filter sizes [2]*6 for ops-only, Fig 6;
+                [16,16,8,8,2,1] for ops+operands).
+
+All parameters live in a flat ``dict[str, jnp.ndarray]``; the AOT boundary
+flattens it in sorted-key order (the Rust runtime reconstructs the same
+order from the manifest). Python here is build-time only — the functions
+get lowered to HLO text once and executed forever from Rust via PJRT.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import conv1d as pk
+from .kernels import ref
+
+PAD_ID = 0
+
+# ---------------------------------------------------------------------------
+# Model configurations
+# ---------------------------------------------------------------------------
+
+# Paper: embedding dim 64. Channel widths chosen so a few hundred training
+# steps are tractable on this CPU-only image; structure matches Fig 5/6.
+CONFIGS = {
+    # E1 models (ops-only tokenization, seq 128).
+    "fc_ops": dict(kind="fc", max_len=128, embed=64, fc=[128, 64, 1]),
+    "lstm_ops": dict(kind="lstm", max_len=128, embed=64, hidden=64, fc=[64, 1]),
+    "conv_ops": dict(
+        kind="conv", max_len=128, embed=64, channels=[32] * 6,
+        filters=[2, 2, 2, 2, 2, 2], fc=[64, 32, 1],
+    ),
+    # E2 model (ops+operands tokenization, ~4x longer sequences, Fig 6
+    # filter sizes 16,16,8,8,2,1).
+    "conv_full": dict(
+        kind="conv", max_len=512, embed=64, channels=[32] * 6,
+        filters=[16, 16, 8, 8, 2, 1], fc=[64, 32, 1],
+    ),
+}
+
+VOCAB_SIZE = 8192  # embedding rows; Rust vocabularies stay well under this
+
+
+def _dense_init(key, fan_in, fan_out):
+    scale = math.sqrt(2.0 / fan_in)
+    return jax.random.normal(key, (fan_in, fan_out), jnp.float32) * scale
+
+
+def init_params(name: str, seed: int = 0) -> dict[str, jnp.ndarray]:
+    """Initialize a parameter dict for model config `name`."""
+    cfg = CONFIGS[name]
+    key = jax.random.PRNGKey(seed)
+    keys = iter(jax.random.split(key, 64))
+    p: dict[str, jnp.ndarray] = {}
+    p["embed"] = jax.random.normal(next(keys), (VOCAB_SIZE, cfg["embed"]), jnp.float32) * 0.1
+
+    if cfg["kind"] == "conv":
+        cin = cfg["embed"]
+        for i, (k, cout) in enumerate(zip(cfg["filters"], cfg["channels"])):
+            p[f"conv{i}_w"] = _dense_init(next(keys), k * cin, cout).reshape(k, cin, cout)
+            p[f"conv{i}_b"] = jnp.zeros((cout,), jnp.float32)
+            cin = cout
+        fan = cin
+    elif cfg["kind"] == "lstm":
+        h = cfg["hidden"]
+        e = cfg["embed"]
+        p["lstm_wx"] = _dense_init(next(keys), e, 4 * h)
+        p["lstm_wh"] = _dense_init(next(keys), h, 4 * h)
+        p["lstm_b"] = jnp.zeros((4 * h,), jnp.float32)
+        fan = h
+    else:  # fc / bag-of-tokens
+        fan = cfg["embed"]
+
+    for i, width in enumerate(cfg["fc"]):
+        p[f"fc{i}_w"] = _dense_init(next(keys), fan, width)
+        p[f"fc{i}_b"] = jnp.zeros((width,), jnp.float32)
+        fan = width
+    return p
+
+
+def param_order(params: dict[str, jnp.ndarray]) -> list[str]:
+    """Canonical flattening order shared with the Rust runtime."""
+    return sorted(params.keys())
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+
+def _fc_head(p, x, n_fc):
+    for i in range(n_fc):
+        x = x @ p[f"fc{i}_w"] + p[f"fc{i}_b"]
+        if i + 1 < n_fc:
+            x = jnp.maximum(x, 0.0)
+    return x[:, 0]
+
+
+def forward(name: str, p: dict[str, jnp.ndarray], ids: jnp.ndarray,
+            *, use_pallas: bool = False) -> jnp.ndarray:
+    """Predict the (normalized) target for a batch of token-id rows.
+
+    ids: [B, max_len] int32, 0 = padding.  Returns [B] float32.
+    """
+    cfg = CONFIGS[name]
+    mask = (ids != PAD_ID).astype(jnp.float32)  # [B, L]
+    emb = p["embed"][ids] * mask[:, :, None]  # zero out padding rows
+
+    if cfg["kind"] == "fc":
+        # Bag of tokens: masked mean (order-free, exactly the paper's
+        # "considers the input token sequence as a bag-of-tokens").
+        denom = jnp.maximum(mask.sum(axis=1, keepdims=True), 1.0)
+        x = emb.sum(axis=1) / denom
+    elif cfg["kind"] == "lstm":
+        h = cfg["hidden"]
+
+        def step(carry, xt):
+            hprev, cprev = carry
+            z = xt @ p["lstm_wx"] + hprev @ p["lstm_wh"] + p["lstm_b"]
+            i, f, g, o = jnp.split(z, 4, axis=-1)
+            c = jax.nn.sigmoid(f) * cprev + jax.nn.sigmoid(i) * jnp.tanh(g)
+            hnew = jax.nn.sigmoid(o) * jnp.tanh(c)
+            return (hnew, c), None
+
+        bsz = ids.shape[0]
+        h0 = (jnp.zeros((bsz, h), jnp.float32), jnp.zeros((bsz, h), jnp.float32))
+        (hlast, _), _ = jax.lax.scan(step, h0, jnp.swapaxes(emb, 0, 1))
+        x = hlast
+    else:  # conv
+        taps = [p[f"conv{i}_w"] for i in range(len(cfg["filters"]))]
+        biases = [p[f"conv{i}_b"] for i in range(len(cfg["filters"]))]
+        if use_pallas:
+            x = pk.conv_stack_pool_pallas(emb, taps, biases)
+        else:
+            x = ref.conv_stack_pool(emb, taps, biases)
+
+    return _fc_head(p, x, len(cfg["fc"]))
+
+
+# ---------------------------------------------------------------------------
+# Loss + Adam (hand-rolled: no optax at build time either)
+# ---------------------------------------------------------------------------
+
+
+def mse_loss(name, p, ids, targets):
+    pred = forward(name, p, ids)
+    return jnp.mean((pred - targets) ** 2)
+
+
+def init_opt(params):
+    zeros = {k: jnp.zeros_like(v) for k, v in params.items()}
+    return zeros, {k: jnp.zeros_like(v) for k, v in params.items()}
+
+
+def train_step(name, p, m, v, step, ids, targets, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    """One Adam step. Returns (new_p, new_m, new_v, new_step, loss)."""
+    loss, grads = jax.value_and_grad(lambda q: mse_loss(name, q, ids, targets))(p)
+    step = step + 1.0
+    bc1 = 1.0 - b1 ** step
+    bc2 = 1.0 - b2 ** step
+    new_p, new_m, new_v = {}, {}, {}
+    for k in p:
+        g = grads[k]
+        new_m[k] = b1 * m[k] + (1.0 - b1) * g
+        new_v[k] = b2 * v[k] + (1.0 - b2) * g * g
+        mhat = new_m[k] / bc1
+        vhat = new_v[k] / bc2
+        new_p[k] = p[k] - lr * mhat / (jnp.sqrt(vhat) + eps)
+    return new_p, new_m, new_v, step, loss
+
+
+# ---------------------------------------------------------------------------
+# AOT-facing flat signatures (params as positional leaves, sorted by key)
+# ---------------------------------------------------------------------------
+
+
+def predict_flat(name: str, order: list[str], *args):
+    """args = [*params(sorted), ids] → (pred,)"""
+    p = dict(zip(order, args[: len(order)]))
+    ids = args[len(order)]
+    return (forward(name, p, ids, use_pallas=False),)
+
+
+def predict_flat_pallas(name: str, order: list[str], *args):
+    """Same as predict_flat but through the Pallas kernel (conv models)."""
+    p = dict(zip(order, args[: len(order)]))
+    ids = args[len(order)]
+    return (forward(name, p, ids, use_pallas=True),)
+
+
+def train_step_flat(name: str, order: list[str], *args):
+    """args = [*p, *m, *v, step, ids, targets] →
+    (*new_p, *new_m, *new_v, new_step, loss)"""
+    n = len(order)
+    p = dict(zip(order, args[:n]))
+    m = dict(zip(order, args[n : 2 * n]))
+    v = dict(zip(order, args[2 * n : 3 * n]))
+    step, ids, targets = args[3 * n], args[3 * n + 1], args[3 * n + 2]
+    new_p, new_m, new_v, new_step, loss = train_step(name, p, m, v, step, ids, targets)
+    out = [new_p[k] for k in order] + [new_m[k] for k in order] + [new_v[k] for k in order]
+    return (*out, new_step, loss)

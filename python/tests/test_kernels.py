@@ -1,0 +1,117 @@
+"""L1 correctness: Pallas kernel vs pure-jnp oracle (hypothesis sweep)."""
+
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+from compile.kernels import conv1d as pk  # noqa: E402
+from compile.kernels import ref  # noqa: E402
+
+
+def _rand(key, shape):
+    return jax.random.normal(key, shape, jnp.float32)
+
+
+def _stack(key, taps, channels, cin):
+    ws, bs = [], []
+    chans = [cin] + channels
+    for i, k in enumerate(taps):
+        key, k1, k2 = jax.random.split(key, 3)
+        ws.append(_rand(k1, (k, chans[i], chans[i + 1])) * 0.3)
+        bs.append(_rand(k2, (chans[i + 1],)) * 0.1)
+    return ws, bs
+
+
+class TestConvRef:
+    def test_conv1d_same_matches_manual(self):
+        # K=2: out[t] = x[t-1] @ w0 + x[t] @ w1 + b.
+        x = jnp.arange(12, dtype=jnp.float32).reshape(1, 4, 3)
+        w = jnp.ones((2, 3, 2), jnp.float32)
+        b = jnp.zeros((2,), jnp.float32)
+        out = ref.conv1d_same(x, w, b)
+        assert out.shape == (1, 4, 2)
+        # t=0: only current tap (left pad is zero).
+        np.testing.assert_allclose(out[0, 0], x[0, 0].sum() * np.ones(2), rtol=1e-6)
+        # t=1: x[0] + x[1] contributions.
+        np.testing.assert_allclose(
+            out[0, 1], (x[0, 0].sum() + x[0, 1].sum()) * np.ones(2), rtol=1e-6
+        )
+
+    def test_relu_clamps(self):
+        x = -jnp.ones((1, 4, 3), jnp.float32)
+        w = jnp.ones((1, 3, 2), jnp.float32)
+        b = jnp.zeros((2,), jnp.float32)
+        out = ref.conv1d_relu(x, w, b)
+        assert (np.asarray(out) >= 0).all()
+
+    def test_maxpool(self):
+        x = jnp.array([[[1.0, 5.0], [3.0, 2.0]]])
+        np.testing.assert_allclose(ref.global_maxpool(x), [[3.0, 5.0]])
+
+
+class TestPallasVsRef:
+    @settings(max_examples=12, deadline=None)
+    @given(
+        bsz=st.sampled_from([1, 2, 4, 8]),
+        length=st.sampled_from([8, 16, 33]),
+        cin=st.sampled_from([4, 8]),
+        depth=st.integers(min_value=1, max_value=3),
+        seed=st.integers(min_value=0, max_value=2**31 - 1),
+    )
+    def test_stack_pool_matches_ref(self, bsz, length, cin, depth, seed):
+        key = jax.random.PRNGKey(seed)
+        key, kx = jax.random.split(key)
+        x = _rand(kx, (bsz, length, cin))
+        taps = [2, 3, 4][:depth]
+        channels = [8] * depth
+        ws, bs = _stack(key, taps, channels, cin)
+        got = pk.conv_stack_pool_pallas(x, ws, bs)
+        want = ref.conv_stack_pool(x, ws, bs)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+    def test_paper_fig5_config(self):
+        # 6 layers, fs=2, like the ops-only model.
+        key = jax.random.PRNGKey(7)
+        key, kx = jax.random.split(key)
+        x = _rand(kx, (8, 32, 16))
+        ws, bs = _stack(key, [2] * 6, [16] * 6, 16)
+        got = pk.conv_stack_pool_pallas(x, ws, bs)
+        want = ref.conv_stack_pool(x, ws, bs)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+    def test_paper_fig6_filter_sizes(self):
+        # fs = 16,16,8,8,2,1 on a longer sequence (ops+operands model).
+        key = jax.random.PRNGKey(9)
+        key, kx = jax.random.split(key)
+        x = _rand(kx, (2, 64, 8))
+        ws, bs = _stack(key, [16, 16, 8, 8, 2, 1], [8] * 6, 8)
+        got = pk.conv_stack_pool_pallas(x, ws, bs)
+        want = ref.conv_stack_pool(x, ws, bs)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-5, atol=3e-5)
+
+    def test_odd_batch_falls_back_to_block1(self):
+        key = jax.random.PRNGKey(3)
+        key, kx = jax.random.split(key)
+        x = _rand(kx, (3, 16, 4))
+        ws, bs = _stack(key, [2, 2], [4, 4], 4)
+        got = pk.conv_stack_pool_pallas(x, ws, bs)
+        want = ref.conv_stack_pool(x, ws, bs)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+class TestPerfModels:
+    def test_vmem_footprint_is_sane(self):
+        # Fig 5 config at serving shape must fit a ~16 MiB VMEM budget.
+        fp = pk.vmem_footprint_bytes(8, 128, [64] + [32] * 6, [2] * 6)
+        assert fp < 16 << 20, fp
+
+    def test_mxu_macs_positive_and_scales(self):
+        small = pk.mxu_macs(128, [64, 32], [2])
+        big = pk.mxu_macs(512, [64, 32], [2])
+        assert big == 4 * small > 0

@@ -1,0 +1,127 @@
+"""L2 tests: model structure (paper Fig 5/6), shapes, training step."""
+
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+from compile import model as M  # noqa: E402
+
+
+def _ids(bsz, max_len, seed=0, vocab=100):
+    key = jax.random.PRNGKey(seed)
+    ids = jax.random.randint(key, (bsz, max_len), 2, vocab)
+    # Pad the tail third of each row.
+    return ids.at[:, 2 * max_len // 3 :].set(M.PAD_ID)
+
+
+class TestStructure:
+    def test_fig5_conv_ops_structure(self):
+        cfg = M.CONFIGS["conv_ops"]
+        assert cfg["filters"] == [2] * 6, "Fig 5: six stacked Conv1D, fs=2"
+        assert len(cfg["fc"]) == 3, "Fig 5: three FC layers"
+        assert cfg["embed"] == 64, "paper: embedding dim 64"
+
+    def test_fig6_conv_full_structure(self):
+        cfg = M.CONFIGS["conv_full"]
+        assert cfg["filters"] == [16, 16, 8, 8, 2, 1], "Fig 6 filter sizes"
+        assert cfg["max_len"] == 4 * M.CONFIGS["conv_ops"]["max_len"], "~4x longer sequences"
+
+    def test_param_manifest_matches_config(self):
+        p = M.init_params("conv_ops")
+        for i, (k, c) in enumerate(zip([2] * 6, [32] * 6)):
+            assert p[f"conv{i}_w"].shape[0] == k
+            assert p[f"conv{i}_w"].shape[2] == c
+        assert p["embed"].shape == (M.VOCAB_SIZE, 64)
+
+    def test_param_order_is_sorted_and_stable(self):
+        p = M.init_params("lstm_ops")
+        order = M.param_order(p)
+        assert order == sorted(order)
+        assert set(order) == set(p.keys())
+
+
+class TestForward:
+    @pytest.mark.parametrize("name", list(M.CONFIGS.keys()))
+    def test_forward_shapes(self, name):
+        cfg = M.CONFIGS[name]
+        p = M.init_params(name)
+        ids = _ids(4, cfg["max_len"])
+        out = M.forward(name, p, ids)
+        assert out.shape == (4,)
+        assert np.isfinite(np.asarray(out)).all()
+
+    def test_fc_is_order_invariant(self):
+        # Bag-of-tokens: permuting the (unpadded) tokens must not change
+        # the prediction.
+        p = M.init_params("fc_ops")
+        ids = _ids(2, 128, seed=3)
+        perm = jax.random.permutation(jax.random.PRNGKey(1), 128 * 2 // 3)
+        ids2 = ids.at[:, : len(perm)].set(ids[:, perm])
+        a = M.forward("fc_ops", p, ids)
+        b = M.forward("fc_ops", p, ids2)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5)
+
+    def test_conv_is_order_sensitive(self):
+        # The sequence models must NOT be bag-of-tokens.
+        p = M.init_params("conv_ops")
+        ids = _ids(1, 128, seed=5)
+        ids2 = ids.at[0, :8].set(ids[0, :8][::-1])
+        a = M.forward("conv_ops", p, ids)
+        b = M.forward("conv_ops", p, ids2)
+        assert not np.allclose(np.asarray(a), np.asarray(b))
+
+    def test_padding_is_inert(self):
+        # Extending pure padding must not change predictions (mask works).
+        p = M.init_params("conv_ops")
+        ids = _ids(2, 128, seed=7)
+        more_pad = ids.at[:, 100:].set(M.PAD_ID)
+        a = M.forward("conv_ops", p, more_pad)
+        ids3 = more_pad.at[:, 120:].set(M.PAD_ID)  # no-op
+        b = M.forward("conv_ops", p, ids3)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+    def test_pallas_path_matches_ref_path(self):
+        p = M.init_params("conv_ops")
+        ids = _ids(8, 128, seed=11)
+        a = M.forward("conv_ops", p, ids, use_pallas=False)
+        b = M.forward("conv_ops", p, ids, use_pallas=True)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-5, atol=2e-5)
+
+
+class TestTraining:
+    def test_loss_decreases_on_fixed_batch(self):
+        name = "conv_ops"
+        p = M.init_params(name, seed=1)
+        m, v = M.init_opt(p)
+        ids = _ids(16, 128, seed=2)
+        targets = jnp.linspace(-1.0, 1.0, 16)
+        step = jnp.asarray(0.0)
+        step_fn = jax.jit(lambda p, m, v, s: M.train_step(name, p, m, v, s, ids, targets))
+        losses = []
+        for _ in range(25):
+            p, m, v, step, loss = step_fn(p, m, v, step)
+            losses.append(float(loss))
+        assert losses[-1] < losses[0] * 0.5, losses
+
+    def test_flat_signatures_roundtrip(self):
+        name = "fc_ops"
+        p = M.init_params(name)
+        order = M.param_order(p)
+        ids = _ids(4, 128)
+        flat = [p[k] for k in order]
+        (pred,) = M.predict_flat(name, order, *flat, ids)
+        np.testing.assert_allclose(
+            np.asarray(pred), np.asarray(M.forward(name, p, ids)), rtol=1e-6
+        )
+        m, v = M.init_opt(p)
+        args = flat + [m[k] for k in order] + [v[k] for k in order]
+        out = M.train_step_flat(
+            name, order, *args, jnp.asarray(0.0), ids, jnp.zeros((4,), jnp.float32)
+        )
+        assert len(out) == 3 * len(order) + 2
+        assert np.isfinite(float(out[-1]))

@@ -1,0 +1,108 @@
+//! E2 — regenerates Fig 6: operator+operand modelling.
+//!
+//! Paper claims (shape): (a) sequences ~4x longer than ops-only;
+//! (b) training slower; (c) accuracy improves vs ops-only — ~75% of
+//! register-pressure predictions exact; (d) unseen %argk/%k tokens are the
+//! OOV hazard. (a) and (d) are measured directly here; (c) reads the
+//! metric JSONs from `make experiments` (runs/e2/) next to the ops-only
+//! baseline (runs/e1/conv_regpressure.json).
+
+use mlir_cost::benchkit;
+use mlir_cost::dataset::Dataset;
+use mlir_cost::json;
+use mlir_cost::tokenizer::{count_oov, Scheme, Vocab};
+
+fn repo_root() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).parent().unwrap().to_path_buf()
+}
+
+
+fn main() {
+    benchkit::section("E2 / Fig 6: ops+operands modelling");
+
+    // (a) sequence-length ratio + (d) OOV from %k value tokens.
+    let ds = Dataset::generate(777, 400, 0).expect("corpus");
+    let (train, test) = ds.split(5, 0.25);
+    let tr_ops = train.token_streams(Scheme::OpsOnly).unwrap();
+    let tr_full = train.token_streams(Scheme::OpsOperands).unwrap();
+    let te_full = test.token_streams(Scheme::OpsOperands).unwrap();
+    let len_ops: usize = tr_ops.iter().map(Vec::len).sum();
+    let len_full: usize = tr_full.iter().map(Vec::len).sum();
+    let ratio = len_full as f64 / len_ops as f64;
+    benchkit::kv("mean sequence-length ratio (paper: ~4x)", format!("{ratio:.2}x"));
+
+    let vocab_full = Vocab::build(tr_full.iter(), 1);
+    let oov: usize = te_full.iter().map(|s| count_oov(s, &vocab_full)).sum();
+    let total: usize = te_full.iter().map(Vec::len).sum();
+    benchkit::kv(
+        "test OOV rate under ops+operands (Fig 6 hazard)",
+        format!("{:.2}% ({oov}/{total})", 100.0 * oov as f64 / total as f64),
+    );
+    // Which tokens go OOV? Count %-value tokens among them (paper: "Unseen
+    // %argk or %k cause bad vector mapping").
+    let mut oov_value_tokens = 0usize;
+    let mut oov_other = 0usize;
+    for s in &te_full {
+        for t in s {
+            if vocab_full.id_of(t) == mlir_cost::tokenizer::OOV_ID {
+                if t.starts_with('%') {
+                    oov_value_tokens += 1;
+                } else {
+                    oov_other += 1;
+                }
+            }
+        }
+    }
+    benchkit::kv(
+        "OOV split: %value-tokens vs other",
+        format!("{oov_value_tokens} vs {oov_other}"),
+    );
+
+    // (b)+(c): trained results from `make experiments`.
+    let root = repo_root();
+    let ops_only = root.join("runs/e1/conv_regpressure.json");
+    let full = root.join("runs/e2/convfull_regpressure.json");
+    match (
+        std::fs::read_to_string(&ops_only).ok().and_then(|t| json::parse(&t).ok()),
+        std::fs::read_to_string(&full).ok().and_then(|t| json::parse(&t).ok()),
+    ) {
+        (Some(a), Some(b)) => {
+            let (ra, rb) = (
+                a.req_f64("rmse_pct_of_range").unwrap_or(f64::NAN),
+                b.req_f64("rmse_pct_of_range").unwrap_or(f64::NAN),
+            );
+            let (ea, eb) = (
+                a.req_f64("pct_exact").unwrap_or(f64::NAN),
+                b.req_f64("pct_exact").unwrap_or(f64::NAN),
+            );
+            let (sa, sb) = (
+                a.req_f64("steps_per_sec").unwrap_or(f64::NAN),
+                b.req_f64("steps_per_sec").unwrap_or(f64::NAN),
+            );
+            benchkit::kv("RMSE%: ops-only -> ops+operands", format!("{ra:.2}% -> {rb:.2}%"));
+            benchkit::kv("exact%: ops-only -> ops+operands (paper: ~75%)", format!("{ea:.1}% -> {eb:.1}%"));
+            benchkit::kv(
+                "training speed (steps/s), ops-only vs full (paper: slower)",
+                format!("{sa:.2} vs {sb:.2}"),
+            );
+            if let Ok(hist) = b.req_arr("abs_error_histogram") {
+                let bars: Vec<String> = hist
+                    .iter()
+                    .enumerate()
+                    .map(|(i, h)| format!("|e|={i}: {}", h.as_u64().unwrap_or(0)))
+                    .collect();
+                benchkit::kv("Fig 6 error histogram (rounded)", bars.join("  "));
+            }
+            benchkit::kv(
+                "paper-shape: ops+operands more accurate",
+                if rb <= ra { "OK" } else { "VIOLATED" },
+            );
+        }
+        _ => {
+            println!(
+                "  trained E2 metrics not found ({ops_only:?}, {full:?});\n  \
+                 run `make experiments` to fill in accuracy/speed rows"
+            );
+        }
+    }
+}

@@ -1,0 +1,119 @@
+//! E3 — serving-path benchmark (DESIGN.md E5): latency/throughput of the
+//! coordinator a DL-compiler queries, comparing batching policies and the
+//! effect of the prediction cache.
+
+use mlir_cost::benchkit;
+use mlir_cost::bundle::Bundle;
+use mlir_cost::coordinator::{batcher::BatchPolicy, Service};
+use mlir_cost::dataset::TargetStats;
+use mlir_cost::graphgen::{generate, Family, GraphSpec};
+use mlir_cost::mlir::print_function;
+use mlir_cost::runtime::Manifest;
+use mlir_cost::sim::Target;
+use mlir_cost::tokenizer::{Scheme, Vocab};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn repo_root() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).parent().unwrap().to_path_buf()
+}
+
+
+fn make_service(max_batch: usize, max_wait_us: u64) -> Arc<Service> {
+    let manifest = Arc::new(Manifest::load(&repo_root().join("artifacts")).expect("artifacts built"));
+    let vocab = Vocab::build(vec![vec!["x".to_string()]].iter(), 1);
+    let stats = TargetStats { mean: 20.0, std: 8.0, min: 2.0, max: 70.0 };
+    let bundle = Bundle::untrained(
+        &manifest,
+        "conv_ops",
+        Target::RegPressure,
+        Scheme::OpsOnly,
+        vocab,
+        stats,
+    )
+    .unwrap();
+    Arc::new(
+        Service::start(
+            manifest,
+            vec![bundle],
+            BatchPolicy { max_batch, max_wait: Duration::from_micros(max_wait_us) },
+            true,
+        )
+        .unwrap(),
+    )
+}
+
+fn corpus(n: usize) -> Vec<String> {
+    (0..n)
+        .map(|i| {
+            let spec = GraphSpec {
+                family: Family::ALL[i % 7],
+                structure_seed: i as u64,
+                shape_seed: 9000 + i as u64,
+            };
+            print_function(&generate(&spec).unwrap())
+        })
+        .collect()
+}
+
+fn throughput(svc: &Arc<Service>, texts: &[String], threads: usize) -> (f64, f64) {
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for chunk in texts.chunks(texts.len().div_ceil(threads)) {
+            let svc = svc.clone();
+            s.spawn(move || {
+                for t in chunk {
+                    svc.predict(Target::RegPressure, t).unwrap();
+                }
+            });
+        }
+    });
+    let dt = t0.elapsed().as_secs_f64();
+    (texts.len() as f64 / dt, dt)
+}
+
+fn main() {
+    benchkit::section("E3: serving coordinator (compiler query path)");
+    let texts = corpus(192);
+
+    // Single-query latency (no batching benefit, cold cache).
+    let svc1 = make_service(1, 100);
+    let mut idx = 0usize;
+    let lat = benchkit::bench("predict latency (b=1, cold-ish cache)", 3, 40, || {
+        let t = &texts[idx % texts.len()];
+        idx += 1;
+        let _ = svc1.predict(Target::RegPressure, t).unwrap();
+    });
+    println!("{}", lat.row());
+    std::mem::forget(svc1);
+
+    // Batched throughput under concurrency.
+    for (max_batch, wait_us) in [(1usize, 100u64), (8, 2000), (32, 2000)] {
+        let svc = make_service(max_batch, wait_us);
+        let (qps, dt) = throughput(&svc, &texts, 8);
+        benchkit::kv(
+            &format!("throughput max_batch={max_batch} wait={wait_us}us (8 client threads)"),
+            format!("{qps:.0} pred/s ({dt:.2}s, mean batch {:.1})", svc.stats.mean_batch_size()),
+        );
+        // Leak the service: tearing down a PJRT client while the next
+        // policy's client spins up can wedge xla_extension 0.5.1 on this
+        // single-core image; the process exits right after anyway.
+        std::mem::forget(svc);
+    }
+
+    // Cache effect: re-query the same 192 graphs.
+    let svc = make_service(32, 2000);
+    let (cold_qps, _) = throughput(&svc, &texts, 8);
+    let (warm_qps, _) = throughput(&svc, &texts, 8);
+    let (hits, misses) = svc.cache.stats();
+    benchkit::kv("cold pass", format!("{cold_qps:.0} pred/s"));
+    benchkit::kv(
+        "warm pass (prediction cache)",
+        format!("{warm_qps:.0} pred/s ({hits} hits / {misses} misses)"),
+    );
+    std::mem::forget(svc);
+    benchkit::kv(
+        "paper-shape: batching helps concurrent compiler queries",
+        "see throughput rows above",
+    );
+}

@@ -1,0 +1,52 @@
+//! E4 — paper §5 claim: the Conv1D+MaxPool model is "extremely fast ...
+//! compared to the likes of LSTM". Measures predict-executable latency per
+//! model family at batch 1 and 32, ref vs Pallas-kernel lowering for conv.
+
+use mlir_cost::benchkit;
+use mlir_cost::runtime::{Manifest, Runtime, Tensor};
+
+fn repo_root() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).parent().unwrap().to_path_buf()
+}
+
+
+fn main() {
+    benchkit::section("E4: predict-path latency per model (PJRT CPU)");
+    let manifest = Manifest::load(&repo_root().join("artifacts")).expect("artifacts built");
+    let rt = Runtime::cpu().expect("PJRT client");
+
+    for (model, keys) in [
+        ("fc_ops", vec!["predict_b1", "predict_b32"]),
+        ("lstm_ops", vec!["predict_b1", "predict_b32"]),
+        ("conv_ops", vec!["predict_b1", "predict_b32", "predict_b32_pallas"]),
+        ("conv_full", vec!["predict_b32", "predict_b32_pallas"]),
+    ] {
+        let mm = manifest.model(model).unwrap();
+        let params = manifest.load_init_params(model).unwrap();
+        for key in keys {
+            let Ok(file) = mm.file(key) else { continue };
+            let exe = rt.load(&manifest.path_of(file)).unwrap();
+            let batch: i64 = key
+                .trim_start_matches("predict_b")
+                .trim_end_matches("_pallas")
+                .parse()
+                .unwrap();
+            let ids = Tensor::i32(
+                vec![batch, mm.max_len as i64],
+                (0..batch * mm.max_len as i64).map(|i| 2 + (i % 64) as i32).collect(),
+            )
+            .unwrap();
+            let mut inputs = params.clone();
+            inputs.push(ids);
+            let iters = if model == "conv_full" { 10 } else { 25 };
+            let s = benchkit::bench(&format!("{model:<10} {key}"), 2, iters, || {
+                let _ = exe.run(&inputs).unwrap();
+            });
+            println!("{}  ({:.1} us/graph)", s.row(), s.mean_us / batch as f64);
+        }
+    }
+    benchkit::kv(
+        "paper-shape: conv per-graph latency << lstm at equal seq len",
+        "compare conv_ops vs lstm_ops b32 rows",
+    );
+}

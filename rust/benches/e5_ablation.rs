@@ -1,0 +1,95 @@
+//! E5 — ablations over the DESIGN.md design choices in the ground-truth
+//! substrate: fusion on/off, unroll factor, tokenization cost, and the
+//! label-generation pipeline's own speed (it must label 20k+ graphs).
+
+use mlir_cost::benchkit;
+use mlir_cost::dataset::Dataset;
+use mlir_cost::graphgen::{corpus_specs, generate};
+use mlir_cost::lower::{analyze, lower, CodegenOpts};
+use mlir_cost::mlir::{parse_function, print_function};
+use mlir_cost::sim::{ground_truth, simulate, XpuConfig};
+use mlir_cost::tokenizer::{tokenize, Scheme};
+
+fn main() {
+    benchkit::section("E5: substrate ablations");
+    let cfg = XpuConfig::default();
+    let funcs: Vec<_> = corpus_specs(31337, 60, 0)
+        .iter()
+        .map(|s| generate(s).unwrap())
+        .collect();
+
+    // Fusion ablation: cycles + pressure with/without operator fusion.
+    let mut fused_cycles = 0.0;
+    let mut unfused_cycles = 0.0;
+    let mut fused_rp = 0.0;
+    let mut unfused_rp = 0.0;
+    for f in &funcs {
+        let a = ground_truth(f, &CodegenOpts::default(), &cfg).unwrap();
+        let b = ground_truth(f, &CodegenOpts { fuse: false, ..Default::default() }, &cfg).unwrap();
+        fused_cycles += a.cycles;
+        unfused_cycles += b.cycles;
+        fused_rp += a.regpressure;
+        unfused_rp += b.regpressure;
+    }
+    benchkit::kv(
+        "fusion speedup (gecycles, 60 graphs)",
+        format!("{:.2}x", unfused_cycles / fused_cycles),
+    );
+    benchkit::kv(
+        "mean regpressure fused vs unfused",
+        format!("{:.1} vs {:.1}", fused_rp / 60.0, unfused_rp / 60.0),
+    );
+
+    // Unroll sweep: pressure growth (the trade-off the model must learn).
+    print!("  unroll sweep mean regpressure:");
+    for u in [1u32, 2, 4, 8] {
+        let mut rp = 0.0;
+        for f in &funcs {
+            let prog = lower(f, &CodegenOpts { unroll: Some(u), ..Default::default() }).unwrap();
+            rp += analyze(&prog).max_live as f64;
+        }
+        print!("  u{u}={:.1}", rp / funcs.len() as f64);
+    }
+    println!();
+
+    // Hot-path micro-benchmarks (the perf-pass targets).
+    let texts: Vec<String> = funcs.iter().map(print_function).collect();
+    let mut k = 0usize;
+    let s = benchkit::bench("parse MLIR text", 3, 200, || {
+        let _ = parse_function(&texts[k % texts.len()]).unwrap();
+        k += 1;
+    });
+    println!("{}", s.row());
+    let s = benchkit::bench("tokenize ops-only", 3, 500, || {
+        let _ = tokenize(&funcs[k % funcs.len()], Scheme::OpsOnly);
+        k += 1;
+    });
+    println!("{}", s.row());
+    let s = benchkit::bench("tokenize ops+operands", 3, 500, || {
+        let _ = tokenize(&funcs[k % funcs.len()], Scheme::OpsOperands);
+        k += 1;
+    });
+    println!("{}", s.row());
+    let s = benchkit::bench("ground-truth (lower+regalloc+simulate)", 2, 100, || {
+        let f = &funcs[k % funcs.len()];
+        let _ = ground_truth(f, &CodegenOpts::default(), &cfg).unwrap();
+        k += 1;
+    });
+    println!("{}", s.row());
+    let s = benchkit::bench("simulate only", 2, 100, || {
+        let f = &funcs[k % funcs.len()];
+        let prog = lower(f, &CodegenOpts::default()).unwrap();
+        let _ = simulate(&prog, &cfg);
+        k += 1;
+    });
+    println!("{}", s.row());
+
+    // Dataset-generation throughput (labels 20k+ graphs in the paper).
+    let t0 = std::time::Instant::now();
+    let ds = Dataset::generate(99, 200, 0).unwrap();
+    let dt = t0.elapsed().as_secs_f64();
+    benchkit::kv(
+        "dataset generation throughput",
+        format!("{:.0} samples/s ({} samples in {dt:.2}s)", ds.len() as f64 / dt, ds.len()),
+    );
+}

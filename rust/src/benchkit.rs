@@ -1,0 +1,99 @@
+//! Mini benchmarking harness (criterion is not vendored in this image).
+//!
+//! Used by the `benches/` targets (`harness = false`): warmup, timed
+//! iterations, mean/stddev/percentiles, and aligned table printing for the
+//! paper-table regeneration benches.
+
+use std::time::Instant;
+
+/// Timing summary over N iterations.
+#[derive(Debug, Clone)]
+pub struct Summary {
+    pub name: String,
+    pub iters: usize,
+    pub mean_us: f64,
+    pub stddev_us: f64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+}
+
+impl Summary {
+    pub fn row(&self) -> String {
+        format!(
+            "{:<42} {:>8} iters  mean {:>10.1} us  sd {:>9.1}  p50 {:>10.1}  p95 {:>10.1}",
+            self.name, self.iters, self.mean_us, self.stddev_us, self.p50_us, self.p95_us
+        )
+    }
+}
+
+/// Benchmark a closure: `warmup` untimed runs then `iters` timed runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> Summary {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e6);
+    }
+    summarize(name, &samples)
+}
+
+/// Summarize raw microsecond samples.
+pub fn summarize(name: &str, samples: &[f64]) -> Summary {
+    let n = samples.len().max(1) as f64;
+    let mean = samples.iter().sum::<f64>() / n;
+    let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n;
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(f64::total_cmp);
+    let pct = |p: f64| -> f64 {
+        if sorted.is_empty() {
+            0.0
+        } else {
+            sorted[((sorted.len() as f64 * p) as usize).min(sorted.len() - 1)]
+        }
+    };
+    Summary {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean_us: mean,
+        stddev_us: var.sqrt(),
+        p50_us: pct(0.50),
+        p95_us: pct(0.95),
+    }
+}
+
+/// Print a section header in bench output.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+/// Print an aligned key/value table row.
+pub fn kv(key: &str, value: impl std::fmt::Display) {
+    println!("  {key:<44} {value}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let s = bench("noop", 2, 50, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(s.iters, 50);
+        assert!(s.mean_us < 1000.0);
+        assert!(s.p50_us <= s.p95_us);
+    }
+
+    #[test]
+    fn summarize_percentiles() {
+        let samples: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let s = summarize("x", &samples);
+        assert!((s.mean_us - 50.5).abs() < 1e-9);
+        assert_eq!(s.p50_us, 51.0);
+        assert_eq!(s.p95_us, 96.0);
+    }
+}

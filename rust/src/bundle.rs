@@ -1,0 +1,135 @@
+//! Serving bundle: everything needed to answer cost queries for one
+//! (model, target, tokenization-scheme) triple, produced by `mlir-cost
+//! train` and consumed by `mlir-cost serve`, the benches and the examples.
+//!
+//! Layout of a bundle directory:
+//!   bundle.json     — model name, target, scheme, max_len, stats
+//!   vocab.json      — token vocabulary (train split only)
+//!   <param>.f32 ... — trained parameters (checkpoint format)
+
+use crate::dataset::TargetStats;
+use crate::json::{parse, Json};
+use crate::runtime::{Manifest, Tensor};
+use crate::sim::Target;
+use crate::tokenizer::{Scheme, Vocab};
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+
+/// In-memory serving bundle.
+pub struct Bundle {
+    pub model: String,
+    pub target: Target,
+    pub scheme: Scheme,
+    pub max_len: usize,
+    pub vocab: Vocab,
+    pub stats: TargetStats,
+    pub params: Vec<Tensor>,
+}
+
+impl Bundle {
+    /// Write to `dir` (creating it).
+    pub fn save(&self, dir: &Path, manifest: &Manifest) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let mm = manifest.model(&self.model)?;
+        for (k, t) in mm.param_order.iter().zip(&self.params) {
+            t.to_f32_file(&dir.join(format!("{k}.f32")))?;
+        }
+        self.vocab.save(&dir.join("vocab.json"))?;
+        let doc = Json::obj()
+            .with("model", Json::str(&self.model))
+            .with("target", Json::str(self.target.name()))
+            .with("scheme", Json::str(self.scheme.name()))
+            .with("max_len", Json::num(self.max_len as f64))
+            .with("stats", self.stats.to_json());
+        std::fs::write(dir.join("bundle.json"), doc.to_string())?;
+        Ok(())
+    }
+
+    /// Load from `dir`.
+    pub fn load(dir: &Path, manifest: &Manifest) -> Result<Bundle> {
+        let doc = parse(
+            &std::fs::read_to_string(dir.join("bundle.json"))
+                .with_context(|| format!("no bundle.json in {dir:?}"))?,
+        )?;
+        let model = doc.req_str("model")?.to_string();
+        let target = Target::parse(doc.req_str("target")?)
+            .ok_or_else(|| anyhow!("bad target in bundle"))?;
+        let scheme = Scheme::parse(doc.req_str("scheme")?)
+            .ok_or_else(|| anyhow!("bad scheme in bundle"))?;
+        let max_len = doc.req_f64("max_len")? as usize;
+        let stats = TargetStats::from_json(doc.req("stats")?)?;
+        let vocab = Vocab::load(&dir.join("vocab.json"))?;
+        let mm = manifest.model(&model)?;
+        let params: Vec<Tensor> = mm
+            .param_order
+            .iter()
+            .map(|k| {
+                Tensor::from_f32_file(&dir.join(format!("{k}.f32")), mm.param_shapes[k].clone())
+            })
+            .collect::<Result<_>>()?;
+        Ok(Bundle { model, target, scheme, max_len, vocab, stats, params })
+    }
+
+    /// An untrained bundle straight from the AOT init params (useful for
+    /// smoke tests and serving-path benches where accuracy is irrelevant).
+    pub fn untrained(
+        manifest: &Manifest,
+        model: &str,
+        target: Target,
+        scheme: Scheme,
+        vocab: Vocab,
+        stats: TargetStats,
+    ) -> Result<Bundle> {
+        let mm = manifest.model(model)?;
+        Ok(Bundle {
+            model: model.to_string(),
+            target,
+            scheme,
+            max_len: mm.max_len,
+            vocab,
+            stats,
+            params: manifest.load_init_params(model)?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn artifacts_dir() -> PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).parent().unwrap().join("artifacts")
+    }
+
+    #[test]
+    fn bundle_roundtrip() {
+        let adir = artifacts_dir();
+        if !adir.join("manifest.json").exists() {
+            return;
+        }
+        let manifest = Manifest::load(&adir).unwrap();
+        let streams = vec![vec!["xpu.matmul".to_string(), "4x8xf32".to_string()]];
+        let vocab = Vocab::build(streams.iter(), 1);
+        let stats = TargetStats { mean: 10.0, std: 2.0, min: 4.0, max: 40.0 };
+        let b = Bundle::untrained(
+            &manifest,
+            "fc_ops",
+            Target::RegPressure,
+            Scheme::OpsOnly,
+            vocab,
+            stats.clone(),
+        )
+        .unwrap();
+        let dir = std::env::temp_dir().join("mlir_cost_bundle_test");
+        b.save(&dir, &manifest).unwrap();
+        let b2 = Bundle::load(&dir, &manifest).unwrap();
+        assert_eq!(b2.model, "fc_ops");
+        assert_eq!(b2.target, Target::RegPressure);
+        assert_eq!(b2.scheme, Scheme::OpsOnly);
+        assert_eq!(b2.stats, stats);
+        assert_eq!(b2.params.len(), b.params.len());
+        assert_eq!(b2.params[0], b.params[0]);
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

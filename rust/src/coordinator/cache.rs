@@ -1,0 +1,126 @@
+//! Prediction cache: compilers re-query the same subgraphs constantly
+//! (every pass, every heuristic probe), so a small exact-match cache keyed
+//! by the encoded token sequence removes most model invocations.
+
+use std::collections::hash_map::DefaultHasher;
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::Mutex;
+
+/// Bounded FIFO-evicting exact-match cache.
+pub struct PredictionCache {
+    map: Mutex<Inner>,
+    capacity: usize,
+}
+
+struct Inner {
+    entries: HashMap<u64, f64>,
+    order: std::collections::VecDeque<u64>,
+    hits: u64,
+    misses: u64,
+}
+
+/// Key = hash of (model name, encoded ids).
+pub fn cache_key(model: &str, ids: &[u32]) -> u64 {
+    let mut h = DefaultHasher::new();
+    model.hash(&mut h);
+    ids.hash(&mut h);
+    h.finish()
+}
+
+impl PredictionCache {
+    pub fn new(capacity: usize) -> Self {
+        PredictionCache {
+            map: Mutex::new(Inner {
+                entries: HashMap::new(),
+                order: std::collections::VecDeque::new(),
+                hits: 0,
+                misses: 0,
+            }),
+            capacity: capacity.max(1),
+        }
+    }
+
+    pub fn get(&self, key: u64) -> Option<f64> {
+        let mut inner = self.map.lock().unwrap();
+        match inner.entries.get(&key).copied() {
+            Some(v) => {
+                inner.hits += 1;
+                Some(v)
+            }
+            None => {
+                inner.misses += 1;
+                None
+            }
+        }
+    }
+
+    pub fn put(&self, key: u64, value: f64) {
+        let mut inner = self.map.lock().unwrap();
+        if inner.entries.len() >= self.capacity && !inner.entries.contains_key(&key) {
+            if let Some(old) = inner.order.pop_front() {
+                inner.entries.remove(&old);
+            }
+        }
+        if inner.entries.insert(key, value).is_none() {
+            inner.order.push_back(key);
+        }
+    }
+
+    /// (hits, misses) so far.
+    pub fn stats(&self) -> (u64, u64) {
+        let inner = self.map.lock().unwrap();
+        (inner.hits, inner.misses)
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hit_miss_accounting() {
+        let c = PredictionCache::new(8);
+        let k = cache_key("m", &[1, 2, 3]);
+        assert_eq!(c.get(k), None);
+        c.put(k, 7.5);
+        assert_eq!(c.get(k), Some(7.5));
+        assert_eq!(c.stats(), (1, 1));
+    }
+
+    #[test]
+    fn distinct_keys() {
+        assert_ne!(cache_key("a", &[1, 2]), cache_key("b", &[1, 2]));
+        assert_ne!(cache_key("a", &[1, 2]), cache_key("a", &[2, 1]));
+    }
+
+    #[test]
+    fn eviction_respects_capacity() {
+        let c = PredictionCache::new(3);
+        for i in 0..10u32 {
+            c.put(cache_key("m", &[i]), i as f64);
+        }
+        assert_eq!(c.len(), 3);
+        // The newest entries survive.
+        assert_eq!(c.get(cache_key("m", &[9])), Some(9.0));
+        assert_eq!(c.get(cache_key("m", &[0])), None);
+    }
+
+    #[test]
+    fn put_same_key_updates_without_growth() {
+        let c = PredictionCache::new(2);
+        let k = cache_key("m", &[5]);
+        c.put(k, 1.0);
+        c.put(k, 2.0);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.get(k), Some(2.0));
+    }
+}

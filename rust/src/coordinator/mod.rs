@@ -1,0 +1,300 @@
+//! The serving coordinator: the "deploy the model which the DL-compiler
+//! can invoke while compiling" half of the paper, built like a production
+//! inference router — per-target heads, dynamic batching, prediction
+//! cache, metrics, and a line-protocol TCP front end.
+//!
+//! Python is never here: predictions run through the AOT-compiled HLO
+//! executables via PJRT.
+
+pub mod batcher;
+pub mod cache;
+pub mod server;
+pub mod stats;
+
+use crate::bundle::Bundle;
+use crate::mlir::parse_function;
+use crate::runtime::{Executable, Manifest, Runtime, Tensor};
+use crate::sim::Target;
+use crate::tokenizer::{encode, tokenize};
+use anyhow::{anyhow, Result};
+use batcher::{BatchPolicy, BatchQueue, Pending};
+use cache::{cache_key, PredictionCache};
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// One target's serving head: bundle + batch queue + worker thread.
+struct Head {
+    bundle: Bundle,
+    queue: Arc<BatchQueue>,
+    worker: Option<JoinHandle<()>>,
+}
+
+/// The cost-model service a DL-compiler connects to.
+pub struct Service {
+    heads: HashMap<Target, Head>,
+    pub cache: Arc<PredictionCache>,
+    pub stats: Arc<stats::ServiceStats>,
+}
+
+impl Service {
+    /// Spin up one worker per bundle. `use_pallas` selects the
+    /// Pallas-kernel predict executables for conv models.
+    ///
+    /// Each worker owns its own PJRT client: the `xla` crate's handles are
+    /// deliberately `!Send` (non-atomic refcounts around the C API), so
+    /// the executable is compiled inside the worker thread it serves from.
+    pub fn start(
+        manifest: Arc<Manifest>,
+        bundles: Vec<Bundle>,
+        policy: BatchPolicy,
+        use_pallas: bool,
+    ) -> Result<Service> {
+        let cache = Arc::new(PredictionCache::new(65536));
+        let stats = Arc::new(stats::ServiceStats::default());
+        let mut heads = HashMap::new();
+        for bundle in bundles {
+            let mm = manifest.model(&bundle.model)?;
+            let (key, batch) = mm.predict_key_for(policy.max_batch, use_pallas);
+            let key = if use_pallas && mm.files.get(&key).is_none() {
+                // Non-conv models have no pallas variant; fall back.
+                mm.predict_key_for(policy.max_batch, false).0
+            } else {
+                key
+            };
+            let path = manifest.path_of(mm.file(&key)?);
+            let queue = BatchQueue::new(policy.clone());
+            let worker = spawn_worker(
+                path,
+                bundle.params.clone(),
+                bundle.max_len,
+                batch,
+                queue.clone(),
+                stats.clone(),
+            );
+            heads.insert(
+                bundle.target,
+                Head { bundle, queue, worker: Some(worker) },
+            );
+        }
+        Ok(Service { heads, cache, stats })
+    }
+
+    pub fn targets(&self) -> Vec<Target> {
+        self.heads.keys().copied().collect()
+    }
+
+    /// Predict a hardware characteristic for a raw MLIR function text.
+    /// This is the full request path: parse → tokenize → encode → cache →
+    /// batch → PJRT → denormalize.
+    pub fn predict(&self, target: Target, mlir_text: &str) -> Result<f64> {
+        let t0 = Instant::now();
+        self.stats.requests.fetch_add(1, Ordering::Relaxed);
+        let head = self
+            .heads
+            .get(&target)
+            .ok_or_else(|| anyhow!("no model serving target '{}'", target.name()))?;
+        let func = parse_function(mlir_text)?;
+        let toks = tokenize(&func, head.bundle.scheme);
+        let ids = encode(&toks, &head.bundle.vocab, head.bundle.max_len);
+        let key = cache_key(&head.bundle.model, &ids);
+        if let Some(v) = self.cache.get(key) {
+            self.stats.cache_hits.fetch_add(1, Ordering::Relaxed);
+            self.stats.record_latency_us(t0.elapsed().as_micros() as u64);
+            return Ok(v);
+        }
+        let rx = head.queue.submit(ids);
+        let norm = rx.recv().map_err(|_| anyhow!("prediction worker gone"))?;
+        let value = head.bundle.stats.denormalize(norm);
+        self.cache.put(key, value);
+        self.stats.record_latency_us(t0.elapsed().as_micros() as u64);
+        Ok(value)
+    }
+
+    /// Shut down workers (drains in-flight batches).
+    pub fn shutdown(&mut self) {
+        for head in self.heads.values_mut() {
+            head.queue.close();
+            if let Some(w) = head.worker.take() {
+                let _ = w.join();
+            }
+        }
+    }
+}
+
+impl Drop for Service {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn spawn_worker(
+    path: PathBuf,
+    params: Vec<Tensor>,
+    max_len: usize,
+    batch: usize,
+    queue: Arc<BatchQueue>,
+    stats: Arc<stats::ServiceStats>,
+) -> JoinHandle<()> {
+    std::thread::spawn(move || {
+        // Per-thread PJRT client + compile (see Service::start docs).
+        let rt = match Runtime::cpu() {
+            Ok(rt) => rt,
+            Err(e) => {
+                eprintln!("[coordinator] worker failed to create PJRT client: {e:#}");
+                return;
+            }
+        };
+        let exe = match rt.load(&path) {
+            Ok(exe) => exe,
+            Err(e) => {
+                eprintln!("[coordinator] worker failed to compile {path:?}: {e:#}");
+                return;
+            }
+        };
+        eprintln!(
+            "[coordinator] worker ready: {} compiled in {:.1} ms",
+            exe.path, exe.compile_ms
+        );
+        while let Some(pending) = queue.next_batch() {
+            if pending.is_empty() {
+                continue;
+            }
+            match run_batch(&exe, &params, max_len, batch, &pending) {
+                Ok(values) => {
+                    stats.batches.fetch_add(1, Ordering::Relaxed);
+                    stats
+                        .batched_queries
+                        .fetch_add(pending.len() as u64, Ordering::Relaxed);
+                    for (p, v) in pending.iter().zip(values) {
+                        let _ = p.respond.send(v);
+                    }
+                }
+                Err(e) => {
+                    stats.errors.fetch_add(1, Ordering::Relaxed);
+                    eprintln!("[coordinator] batch failed: {e:#}");
+                    // Drop senders → receivers see disconnect.
+                }
+            }
+        }
+    })
+}
+
+fn run_batch(
+    exe: &Executable,
+    params: &[Tensor],
+    max_len: usize,
+    batch: usize,
+    pending: &[Pending],
+) -> Result<Vec<f64>> {
+    let mut out = Vec::with_capacity(pending.len());
+    for chunk in pending.chunks(batch) {
+        let mut ids: Vec<i32> = Vec::with_capacity(batch * max_len);
+        for p in chunk {
+            ids.extend(p.ids.iter().map(|&x| x as i32));
+        }
+        ids.resize(batch * max_len, 0);
+        let mut inputs = params.to_vec();
+        inputs.push(Tensor::i32(vec![batch as i64, max_len as i64], ids)?);
+        let res = exe.run(&inputs)?;
+        let vals = res[0].as_f32()?;
+        out.extend(vals[..chunk.len()].iter().map(|&v| v as f64));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::TargetStats;
+    use crate::graphgen::{generate, Family, GraphSpec};
+    use crate::mlir::print_function;
+    use crate::tokenizer::{Scheme, Vocab};
+    use std::path::{Path, PathBuf};
+
+    fn artifacts_dir() -> PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).parent().unwrap().join("artifacts")
+    }
+
+    fn test_service() -> Option<Service> {
+        let adir = artifacts_dir();
+        if !adir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        let manifest = Arc::new(Manifest::load(&adir).unwrap());
+        let streams = vec![vec!["xpu.matmul".to_string()]];
+        let vocab = Vocab::build(streams.iter(), 1);
+        let stats = TargetStats { mean: 20.0, std: 5.0, min: 4.0, max: 60.0 };
+        let bundle = Bundle::untrained(
+            &manifest,
+            "fc_ops",
+            Target::RegPressure,
+            Scheme::OpsOnly,
+            vocab,
+            stats,
+        )
+        .unwrap();
+        Some(
+            Service::start(manifest, vec![bundle], BatchPolicy::default(), false).unwrap(),
+        )
+    }
+
+    #[test]
+    fn end_to_end_predict() {
+        let Some(svc) = test_service() else { return };
+        let spec = GraphSpec { family: Family::Mlp, structure_seed: 1, shape_seed: 2 };
+        let text = print_function(&generate(&spec).unwrap());
+        let v = svc.predict(Target::RegPressure, &text).unwrap();
+        assert!(v.is_finite());
+        // Same query → cache hit, identical answer.
+        let v2 = svc.predict(Target::RegPressure, &text).unwrap();
+        assert_eq!(v, v2);
+        let (hits, _) = svc.cache.stats();
+        assert_eq!(hits, 1);
+    }
+
+    #[test]
+    fn unknown_target_is_error() {
+        let Some(svc) = test_service() else { return };
+        let spec = GraphSpec { family: Family::Mlp, structure_seed: 1, shape_seed: 2 };
+        let text = print_function(&generate(&spec).unwrap());
+        assert!(svc.predict(Target::Cycles, &text).is_err());
+    }
+
+    #[test]
+    fn concurrent_queries_batch_together() {
+        let Some(svc) = test_service() else { return };
+        let svc = Arc::new(svc);
+        let texts: Vec<String> = (0..24)
+            .map(|i| {
+                let spec = GraphSpec {
+                    family: Family::ALL[i % 7],
+                    structure_seed: i as u64,
+                    shape_seed: 1000 + i as u64,
+                };
+                print_function(&generate(&spec).unwrap())
+            })
+            .collect();
+        let mut handles = Vec::new();
+        for t in texts {
+            let svc = svc.clone();
+            handles.push(std::thread::spawn(move || {
+                svc.predict(Target::RegPressure, &t).unwrap()
+            }));
+        }
+        for h in handles {
+            assert!(h.join().unwrap().is_finite());
+        }
+        assert!(svc.stats.mean_batch_size() > 1.0, "no batching happened");
+    }
+
+    #[test]
+    fn malformed_mlir_is_rejected() {
+        let Some(svc) = test_service() else { return };
+        assert!(svc.predict(Target::RegPressure, "not mlir at all").is_err());
+    }
+}

@@ -1,0 +1,268 @@
+//! TCP front end: newline-delimited JSON, one request per line.
+//!
+//! Request:  {"id": 7, "target": "regpressure", "mlir": "func.func @f..."}
+//!           {"id": 8, "cmd": "stats"}
+//!           {"id": 9, "cmd": "ping"}
+//! Response: {"id": 7, "ok": true, "prediction": 27.4, "us": 812}
+//!           {"id": 8, "ok": true, "stats": {...}}
+//!           {"id": 7, "ok": false, "error": "..."}
+//!
+//! A DL-compiler links a 30-line client (see `examples/`) and calls this
+//! from its pass pipeline. Threads, not tokio: no async runtime is
+//! vendored in this image, and one thread per compiler connection is the
+//! right shape for this workload anyway (few long-lived clients).
+
+use super::Service;
+use crate::json::{parse, Json};
+use crate::sim::Target;
+use anyhow::{Context, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Serve until `stop` flips (or forever).
+pub fn serve(service: Arc<Service>, addr: &str, stop: Arc<AtomicBool>) -> Result<()> {
+    let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+    serve_on(service, listener, stop)
+}
+
+/// Serve on an already-bound listener (lets tests bind port 0).
+pub fn serve_on(service: Arc<Service>, listener: TcpListener, stop: Arc<AtomicBool>) -> Result<()> {
+    listener.set_nonblocking(true)?;
+    eprintln!("[server] cost-model service listening on {}", listener.local_addr()?);
+    let mut handles = Vec::new();
+    while !stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, peer)) => {
+                eprintln!("[server] compiler connected from {peer}");
+                let svc = service.clone();
+                let stop = stop.clone();
+                handles.push(std::thread::spawn(move || {
+                    if let Err(e) = handle_conn(svc, stream, stop) {
+                        eprintln!("[server] connection ended: {e:#}");
+                    }
+                }));
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(std::time::Duration::from_millis(10));
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    Ok(())
+}
+
+fn handle_conn(service: Arc<Service>, stream: TcpStream, stop: Arc<AtomicBool>) -> Result<()> {
+    // Read with a timeout so shutdown can interrupt an idle connection.
+    stream.set_read_timeout(Some(std::time::Duration::from_millis(200)))?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    loop {
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) => return Ok(()), // client closed
+            Ok(_) => {
+                if line.trim().is_empty() {
+                    continue;
+                }
+                let response = handle_line(&service, &line);
+                writer.write_all(response.to_string().as_bytes())?;
+                writer.write_all(b"\n")?;
+                writer.flush()?;
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                if stop.load(Ordering::Relaxed) {
+                    return Ok(());
+                }
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+}
+
+/// Process one request line (exposed for tests + in-process clients).
+pub fn handle_line(service: &Service, line: &str) -> Json {
+    let t0 = Instant::now();
+    let req = match parse(line) {
+        Ok(r) => r,
+        Err(e) => {
+            return Json::obj()
+                .with("ok", Json::Bool(false))
+                .with("error", Json::str(format!("bad json: {e}")))
+        }
+    };
+    let id = req.get("id").cloned().unwrap_or(Json::Null);
+    let fail = |msg: String| {
+        Json::obj()
+            .with("id", id.clone())
+            .with("ok", Json::Bool(false))
+            .with("error", Json::str(msg))
+    };
+    if let Some(cmd) = req.get("cmd").and_then(Json::as_str) {
+        return match cmd {
+            "ping" => Json::obj()
+                .with("id", id.clone())
+                .with("ok", Json::Bool(true))
+                .with("pong", Json::Bool(true)),
+            "stats" => Json::obj()
+                .with("id", id.clone())
+                .with("ok", Json::Bool(true))
+                .with("stats", service.stats.to_json()),
+            "targets" => Json::obj().with("id", id.clone()).with("ok", Json::Bool(true)).with(
+                "targets",
+                Json::Arr(
+                    service.targets().iter().map(|t| Json::str(t.name())).collect(),
+                ),
+            ),
+            other => fail(format!("unknown cmd '{other}'")),
+        };
+    }
+    let target = match req.req_str("target").ok().and_then(Target::parse) {
+        Some(t) => t,
+        None => return fail("missing/invalid 'target'".into()),
+    };
+    let mlir = match req.req_str("mlir") {
+        Ok(m) => m,
+        Err(e) => return fail(e.to_string()),
+    };
+    match service.predict(target, mlir) {
+        Ok(v) => Json::obj()
+            .with("id", id)
+            .with("ok", Json::Bool(true))
+            .with("prediction", Json::num(v))
+            .with("us", Json::num(t0.elapsed().as_micros() as f64)),
+        Err(e) => fail(format!("{e:#}")),
+    }
+}
+
+/// Minimal blocking client for the line protocol (used by examples and
+/// the serving bench).
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    next_id: u64,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+        Ok(Client { reader: BufReader::new(stream.try_clone()?), writer: stream, next_id: 1 })
+    }
+
+    fn roundtrip(&mut self, req: Json) -> Result<Json> {
+        self.writer.write_all(req.to_string().as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        let resp = parse(&line)?;
+        if resp.get("ok").and_then(Json::as_bool) != Some(true) {
+            anyhow::bail!(
+                "server error: {}",
+                resp.get("error").and_then(Json::as_str).unwrap_or("unknown")
+            );
+        }
+        Ok(resp)
+    }
+
+    /// Query a prediction.
+    pub fn predict(&mut self, target: Target, mlir: &str) -> Result<f64> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let req = Json::obj()
+            .with("id", Json::num(id as f64))
+            .with("target", Json::str(target.name()))
+            .with("mlir", Json::str(mlir));
+        let resp = self.roundtrip(req)?;
+        resp.req_f64("prediction")
+    }
+
+    /// Fetch server stats.
+    pub fn stats(&mut self) -> Result<Json> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let req = Json::obj()
+            .with("id", Json::num(id as f64))
+            .with("cmd", Json::str("stats"));
+        Ok(self.roundtrip(req)?.req("stats")?.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bundle::Bundle;
+    use crate::coordinator::batcher::BatchPolicy;
+    use crate::dataset::TargetStats;
+    use crate::graphgen::{generate, Family, GraphSpec};
+    use crate::mlir::print_function;
+    use crate::runtime::Manifest;
+    use crate::tokenizer::{Scheme, Vocab};
+    use std::path::Path;
+
+    fn service() -> Option<Arc<Service>> {
+        let adir = Path::new(env!("CARGO_MANIFEST_DIR")).parent().unwrap().join("artifacts");
+        if !adir.join("manifest.json").exists() {
+            return None;
+        }
+        let manifest = Arc::new(Manifest::load(&adir).unwrap());
+        let vocab = Vocab::build(vec![vec!["x".to_string()]].iter(), 1);
+        let stats = TargetStats { mean: 0.0, std: 1.0, min: 0.0, max: 10.0 };
+        let bundle =
+            Bundle::untrained(&manifest, "fc_ops", Target::RegPressure, Scheme::OpsOnly, vocab, stats)
+                .unwrap();
+        Some(Arc::new(
+            Service::start(manifest, vec![bundle], BatchPolicy::default(), false).unwrap(),
+        ))
+    }
+
+    #[test]
+    fn line_protocol_handles_commands() {
+        let Some(svc) = service() else { return };
+        let pong = handle_line(&svc, r#"{"id": 1, "cmd": "ping"}"#);
+        assert_eq!(pong.get("pong").and_then(Json::as_bool), Some(true));
+        let stats = handle_line(&svc, r#"{"id": 2, "cmd": "stats"}"#);
+        assert!(stats.get("stats").is_some());
+        let targets = handle_line(&svc, r#"{"id": 3, "cmd": "targets"}"#);
+        assert_eq!(targets.req_arr("targets").unwrap().len(), 1);
+        let bad = handle_line(&svc, "{nope");
+        assert_eq!(bad.get("ok").and_then(Json::as_bool), Some(false));
+        let missing = handle_line(&svc, r#"{"id": 4}"#);
+        assert_eq!(missing.get("ok").and_then(Json::as_bool), Some(false));
+    }
+
+    #[test]
+    fn tcp_roundtrip_with_client() {
+        let Some(svc) = service() else { return };
+        let stop = Arc::new(AtomicBool::new(false));
+        // Bind port 0: no collisions with other test runs.
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = {
+            let svc = svc.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || serve_on(svc, listener, stop))
+        };
+        std::thread::sleep(std::time::Duration::from_millis(100));
+        let mut client = Client::connect(&addr).unwrap();
+        let spec = GraphSpec { family: Family::Mlp, structure_seed: 3, shape_seed: 4 };
+        let text = print_function(&generate(&spec).unwrap());
+        let v = client.predict(Target::RegPressure, &text).unwrap();
+        assert!(v.is_finite());
+        let stats = client.stats().unwrap();
+        assert!(stats.req_f64("requests").unwrap() >= 1.0);
+        stop.store(true, Ordering::Relaxed);
+        let _ = server.join();
+    }
+}

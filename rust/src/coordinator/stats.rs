@@ -1,0 +1,108 @@
+//! Serving metrics: counters + latency reservoir, exported over the wire
+//! protocol's `stats` command.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Lock-light metrics for one service.
+#[derive(Default)]
+pub struct ServiceStats {
+    pub requests: AtomicU64,
+    pub cache_hits: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_queries: AtomicU64,
+    pub errors: AtomicU64,
+    latencies_us: Mutex<Reservoir>,
+}
+
+#[derive(Default)]
+struct Reservoir {
+    samples: Vec<u64>,
+}
+
+const RESERVOIR_CAP: usize = 4096;
+
+impl ServiceStats {
+    pub fn record_latency_us(&self, us: u64) {
+        let mut r = self.latencies_us.lock().unwrap();
+        if r.samples.len() < RESERVOIR_CAP {
+            r.samples.push(us);
+        } else {
+            // Simple overwrite ring.
+            let idx = (self.requests.load(Ordering::Relaxed) as usize) % RESERVOIR_CAP;
+            r.samples[idx] = us;
+        }
+    }
+
+    /// (p50, p95, p99, mean) request latency in microseconds.
+    pub fn latency_summary_us(&self) -> (u64, u64, u64, f64) {
+        let r = self.latencies_us.lock().unwrap();
+        if r.samples.is_empty() {
+            return (0, 0, 0, 0.0);
+        }
+        let mut s = r.samples.clone();
+        s.sort_unstable();
+        let pct = |p: f64| s[((s.len() as f64 * p) as usize).min(s.len() - 1)];
+        let mean = s.iter().sum::<u64>() as f64 / s.len() as f64;
+        (pct(0.50), pct(0.95), pct(0.99), mean)
+    }
+
+    /// Mean queries per executed batch (batching effectiveness).
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            0.0
+        } else {
+            self.batched_queries.load(Ordering::Relaxed) as f64 / b as f64
+        }
+    }
+
+    pub fn to_json(&self) -> crate::json::Json {
+        let (p50, p95, p99, mean) = self.latency_summary_us();
+        crate::json::Json::obj()
+            .with("requests", crate::json::Json::num(self.requests.load(Ordering::Relaxed) as f64))
+            .with("cache_hits", crate::json::Json::num(self.cache_hits.load(Ordering::Relaxed) as f64))
+            .with("batches", crate::json::Json::num(self.batches.load(Ordering::Relaxed) as f64))
+            .with("mean_batch_size", crate::json::Json::num(self.mean_batch_size()))
+            .with("errors", crate::json::Json::num(self.errors.load(Ordering::Relaxed) as f64))
+            .with("latency_p50_us", crate::json::Json::num(p50 as f64))
+            .with("latency_p95_us", crate::json::Json::num(p95 as f64))
+            .with("latency_p99_us", crate::json::Json::num(p99 as f64))
+            .with("latency_mean_us", crate::json::Json::num(mean))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn latency_percentiles() {
+        let s = ServiceStats::default();
+        for us in 1..=100u64 {
+            s.requests.fetch_add(1, Ordering::Relaxed);
+            s.record_latency_us(us);
+        }
+        let (p50, p95, p99, mean) = s.latency_summary_us();
+        assert!((45..=55).contains(&p50), "p50 {p50}");
+        assert!((93..=98).contains(&p95), "p95 {p95}");
+        assert!(p99 >= p95);
+        assert!((mean - 50.5).abs() < 1.0);
+    }
+
+    #[test]
+    fn batch_effectiveness() {
+        let s = ServiceStats::default();
+        s.batches.fetch_add(2, Ordering::Relaxed);
+        s.batched_queries.fetch_add(10, Ordering::Relaxed);
+        assert_eq!(s.mean_batch_size(), 5.0);
+    }
+
+    #[test]
+    fn json_export() {
+        let s = ServiceStats::default();
+        s.requests.fetch_add(3, Ordering::Relaxed);
+        let j = s.to_json();
+        assert_eq!(j.req_f64("requests").unwrap(), 3.0);
+    }
+}

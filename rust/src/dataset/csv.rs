@@ -1,0 +1,127 @@
+//! Minimal RFC-4180-style CSV with quoting — the corpus files hold full
+//! MLIR text (newlines, commas) in one column, exactly like the paper's
+//! "csv file for training consisting of: 1) Full MLIR Text sequence ...".
+
+use anyhow::{bail, ensure, Result};
+
+/// Write one row, quoting fields that need it.
+pub fn write_row(out: &mut String, fields: &[&str]) {
+    for (i, f) in fields.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        if f.contains(',') || f.contains('"') || f.contains('\n') || f.contains('\r') {
+            out.push('"');
+            for c in f.chars() {
+                if c == '"' {
+                    out.push('"');
+                }
+                out.push(c);
+            }
+            out.push('"');
+        } else {
+            out.push_str(f);
+        }
+    }
+    out.push('\n');
+}
+
+/// Parse an entire CSV document into rows of fields.
+pub fn parse(src: &str) -> Result<Vec<Vec<String>>> {
+    let mut rows = Vec::new();
+    let mut row: Vec<String> = Vec::new();
+    let mut field = String::new();
+    let mut chars = src.chars().peekable();
+    let mut in_quotes = false;
+    let mut any = false;
+    while let Some(c) = chars.next() {
+        any = true;
+        if in_quotes {
+            match c {
+                '"' => {
+                    if chars.peek() == Some(&'"') {
+                        chars.next();
+                        field.push('"');
+                    } else {
+                        in_quotes = false;
+                    }
+                }
+                c => field.push(c),
+            }
+        } else {
+            match c {
+                '"' => {
+                    ensure!(field.is_empty(), "quote in the middle of an unquoted field");
+                    in_quotes = true;
+                }
+                ',' => {
+                    row.push(std::mem::take(&mut field));
+                }
+                '\r' => {}
+                '\n' => {
+                    row.push(std::mem::take(&mut field));
+                    rows.push(std::mem::take(&mut row));
+                }
+                c => field.push(c),
+            }
+        }
+    }
+    if in_quotes {
+        bail!("unterminated quoted field");
+    }
+    if any && (!field.is_empty() || !row.is_empty()) {
+        row.push(field);
+        rows.push(row);
+    }
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_with_mlir_text() {
+        let mlir = "func.func @f(%arg0: tensor<1x2xf32>) {\n  return\n}\n";
+        let mut out = String::new();
+        write_row(&mut out, &["name1", "resnet", "12.5", mlir]);
+        write_row(&mut out, &["name2", "bert", "7", "plain"]);
+        let rows = parse(&out).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0][3], mlir);
+        assert_eq!(rows[1], vec!["name2", "bert", "7", "plain"]);
+    }
+
+    #[test]
+    fn quotes_inside_fields() {
+        let mut out = String::new();
+        write_row(&mut out, &["a", "say \"hi\", ok", "b"]);
+        let rows = parse(&out).unwrap();
+        assert_eq!(rows[0][1], "say \"hi\", ok");
+    }
+
+    #[test]
+    fn empty_fields() {
+        let rows = parse("a,,c\n,,\n").unwrap();
+        assert_eq!(rows[0], vec!["a", "", "c"]);
+        assert_eq!(rows[1], vec!["", "", ""]);
+    }
+
+    #[test]
+    fn crlf_handling() {
+        let rows = parse("a,b\r\nc,d\r\n").unwrap();
+        assert_eq!(rows, vec![vec!["a", "b"], vec!["c", "d"]]);
+    }
+
+    #[test]
+    fn errors() {
+        assert!(parse("\"unterminated").is_err());
+        assert!(parse("ab\"cd\n").is_err());
+    }
+
+    #[test]
+    fn no_trailing_newline() {
+        let rows = parse("a,b").unwrap();
+        assert_eq!(rows, vec![vec!["a", "b"]]);
+    }
+}

@@ -1,0 +1,313 @@
+//! Dataset pipeline: corpus generation (graphs → MLIR text → ground-truth
+//! labels), CSV persistence, train/test split, target normalization, and
+//! encoded-batch construction for the PJRT-executed models.
+//!
+//! Mirrors the paper §3 "Training Dataset": a CSV of (full MLIR text,
+//! input/output tensor shapes, target variable), 20k+ training samples
+//! plus augmentation, ~2k+ test samples.
+
+pub mod csv;
+
+use crate::graphgen::{corpus_specs, generate, GraphSpec};
+use crate::lower::CodegenOpts;
+use crate::mlir::{parse_function, print_function};
+use crate::rng::Rng;
+use crate::sim::{ground_truth, Labels, Target, XpuConfig};
+use crate::tokenizer::{encode, tokenize, Scheme, Vocab};
+use anyhow::{ensure, Context, Result};
+use std::path::Path;
+
+/// One corpus row.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub name: String,
+    pub family: String,
+    pub mlir_text: String,
+    pub labels: Labels,
+}
+
+/// A full dataset (one split).
+#[derive(Debug, Clone, Default)]
+pub struct Dataset {
+    pub samples: Vec<Sample>,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    /// Generate `count` base graphs (+`augment` shape re-rolls each) and
+    /// label them through the compiler+simulator.
+    pub fn generate(seed: u64, count: usize, augment: usize) -> Result<Dataset> {
+        let opts = CodegenOpts::default();
+        let cfg = XpuConfig::default();
+        let mut samples = Vec::new();
+        for spec in corpus_specs(seed, count, augment) {
+            samples.push(make_sample(&spec, &opts, &cfg)?);
+        }
+        Ok(Dataset { samples })
+    }
+
+    /// Persist as CSV (`name,family,regpressure,xpuutil,cycles,spills,dyn_instrs,mlir`).
+    pub fn save_csv(&self, path: &Path) -> Result<()> {
+        let mut out = String::new();
+        csv::write_row(
+            &mut out,
+            &["name", "family", "regpressure", "xpuutil", "cycles", "spills", "dyn_instrs", "mlir"],
+        );
+        for s in &self.samples {
+            csv::write_row(
+                &mut out,
+                &[
+                    &s.name,
+                    &s.family,
+                    &format!("{}", s.labels.regpressure),
+                    &format!("{:.6}", s.labels.xpu_util),
+                    &format!("{}", s.labels.cycles),
+                    &format!("{}", s.labels.spills),
+                    &format!("{}", s.labels.dyn_instrs),
+                    &s.mlir_text,
+                ],
+            );
+        }
+        std::fs::write(path, out).with_context(|| format!("writing {path:?}"))?;
+        Ok(())
+    }
+
+    /// Load a CSV produced by [`Dataset::save_csv`].
+    pub fn load_csv(path: &Path) -> Result<Dataset> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path:?}"))?;
+        let rows = csv::parse(&text)?;
+        ensure!(!rows.is_empty(), "empty dataset file {path:?}");
+        let mut samples = Vec::with_capacity(rows.len() - 1);
+        for (i, row) in rows.iter().enumerate().skip(1) {
+            ensure!(row.len() == 8, "row {i}: expected 8 fields, got {}", row.len());
+            samples.push(Sample {
+                name: row[0].clone(),
+                family: row[1].clone(),
+                labels: Labels {
+                    regpressure: row[2].parse().with_context(|| format!("row {i} regpressure"))?,
+                    xpu_util: row[3].parse().with_context(|| format!("row {i} xpuutil"))?,
+                    cycles: row[4].parse().with_context(|| format!("row {i} cycles"))?,
+                    spills: row[5].parse().with_context(|| format!("row {i} spills"))?,
+                    dyn_instrs: row[6].parse().with_context(|| format!("row {i} dyn_instrs"))?,
+                },
+                mlir_text: row[7].clone(),
+            });
+        }
+        Ok(Dataset { samples })
+    }
+
+    /// Deterministic shuffled split: `test_frac` of samples to the test set.
+    pub fn split(mut self, seed: u64, test_frac: f64) -> (Dataset, Dataset) {
+        let mut rng = Rng::new(seed);
+        rng.shuffle(&mut self.samples);
+        let n_test = ((self.samples.len() as f64) * test_frac).round() as usize;
+        let test = self.samples.split_off(self.samples.len() - n_test);
+        (Dataset { samples: self.samples }, Dataset { samples: test })
+    }
+
+    /// Tokenize every sample under `scheme` (re-parsing the stored text —
+    /// the text is the source of truth, as in the paper).
+    pub fn token_streams(&self, scheme: Scheme) -> Result<Vec<Vec<String>>> {
+        self.samples
+            .iter()
+            .map(|s| {
+                let f = parse_function(&s.mlir_text)
+                    .with_context(|| format!("re-parsing sample {}", s.name))?;
+                Ok(tokenize(&f, scheme))
+            })
+            .collect()
+    }
+}
+
+fn make_sample(spec: &GraphSpec, opts: &CodegenOpts, cfg: &XpuConfig) -> Result<Sample> {
+    let f = generate(spec).with_context(|| format!("generating {spec:?}"))?;
+    let labels = ground_truth(&f, opts, cfg).with_context(|| format!("labeling {spec:?}"))?;
+    Ok(Sample {
+        name: spec.func_name(),
+        family: spec.family.name().to_string(),
+        mlir_text: print_function(&f),
+        labels,
+    })
+}
+
+/// Normalization statistics for one target variable, computed on train.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TargetStats {
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl TargetStats {
+    pub fn compute(values: &[f64]) -> TargetStats {
+        let n = values.len().max(1) as f64;
+        let mean = values.iter().sum::<f64>() / n;
+        let var = values.iter().map(|v| (v - mean).powi(2)).sum::<f64>() / n;
+        let min = values.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = values.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        TargetStats { mean, std: var.sqrt().max(1e-9), min, max }
+    }
+
+    pub fn for_dataset(ds: &Dataset, target: Target) -> TargetStats {
+        let vals: Vec<f64> = ds.samples.iter().map(|s| target.of(&s.labels)).collect();
+        TargetStats::compute(&vals)
+    }
+
+    pub fn normalize(&self, v: f64) -> f64 {
+        (v - self.mean) / self.std
+    }
+
+    pub fn denormalize(&self, v: f64) -> f64 {
+        v * self.std + self.mean
+    }
+
+    /// Target range — the paper reports RMSE as a % of this.
+    pub fn range(&self) -> f64 {
+        (self.max - self.min).max(1e-9)
+    }
+
+    pub fn to_json(&self) -> crate::json::Json {
+        crate::json::Json::obj()
+            .with("mean", crate::json::Json::num(self.mean))
+            .with("std", crate::json::Json::num(self.std))
+            .with("min", crate::json::Json::num(self.min))
+            .with("max", crate::json::Json::num(self.max))
+    }
+
+    pub fn from_json(j: &crate::json::Json) -> Result<TargetStats> {
+        Ok(TargetStats {
+            mean: j.req_f64("mean")?,
+            std: j.req_f64("std")?,
+            min: j.req_f64("min")?,
+            max: j.req_f64("max")?,
+        })
+    }
+}
+
+/// An encoded batch ready for the PJRT runtime: row-major `[n, max_len]`
+/// token ids and `[n]` normalized targets.
+#[derive(Debug, Clone)]
+pub struct EncodedSet {
+    pub ids: Vec<i32>,
+    pub targets: Vec<f32>,
+    pub n: usize,
+    pub max_len: usize,
+}
+
+impl EncodedSet {
+    pub fn build(
+        ds: &Dataset,
+        streams: &[Vec<String>],
+        vocab: &Vocab,
+        max_len: usize,
+        target: Target,
+        stats: &TargetStats,
+    ) -> EncodedSet {
+        assert_eq!(ds.len(), streams.len());
+        let n = ds.len();
+        let mut ids = Vec::with_capacity(n * max_len);
+        let mut targets = Vec::with_capacity(n);
+        for (s, toks) in ds.samples.iter().zip(streams) {
+            ids.extend(encode(toks, vocab, max_len).into_iter().map(|x| x as i32));
+            targets.push(stats.normalize(target.of(&s.labels)) as f32);
+        }
+        EncodedSet { ids, targets, n, max_len }
+    }
+
+    /// Row-slice a minibatch (by precomputed indices).
+    pub fn gather(&self, idx: &[usize]) -> (Vec<i32>, Vec<f32>) {
+        let mut ids = Vec::with_capacity(idx.len() * self.max_len);
+        let mut tg = Vec::with_capacity(idx.len());
+        for &i in idx {
+            ids.extend_from_slice(&self.ids[i * self.max_len..(i + 1) * self.max_len]);
+            tg.push(self.targets[i]);
+        }
+        (ids, tg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generate_save_load_roundtrip() {
+        let ds = Dataset::generate(7, 12, 1).unwrap();
+        assert_eq!(ds.len(), 24);
+        let dir = std::env::temp_dir().join("mlir_cost_test_ds");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("corpus.csv");
+        ds.save_csv(&path).unwrap();
+        let ds2 = Dataset::load_csv(&path).unwrap();
+        assert_eq!(ds.len(), ds2.len());
+        for (a, b) in ds.samples.iter().zip(&ds2.samples) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.mlir_text, b.mlir_text);
+            assert_eq!(a.labels.regpressure, b.labels.regpressure);
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn split_is_deterministic_and_disjoint() {
+        let ds = Dataset::generate(9, 20, 0).unwrap();
+        let names: Vec<String> = ds.samples.iter().map(|s| s.name.clone()).collect();
+        let (tr1, te1) = ds.clone().split(42, 0.25);
+        let (tr2, te2) = ds.split(42, 0.25);
+        assert_eq!(te1.len(), 5);
+        assert_eq!(tr1.len(), 15);
+        assert_eq!(
+            te1.samples.iter().map(|s| &s.name).collect::<Vec<_>>(),
+            te2.samples.iter().map(|s| &s.name).collect::<Vec<_>>()
+        );
+        let _ = tr2;
+        let mut all: Vec<String> = tr1.samples.iter().chain(&te1.samples).map(|s| s.name.clone()).collect();
+        all.sort();
+        let mut orig = names;
+        orig.sort();
+        assert_eq!(all, orig);
+    }
+
+    #[test]
+    fn stats_and_normalization() {
+        let st = TargetStats::compute(&[10.0, 20.0, 30.0]);
+        assert!((st.mean - 20.0).abs() < 1e-9);
+        assert!((st.range() - 20.0).abs() < 1e-9);
+        let z = st.normalize(30.0);
+        assert!((st.denormalize(z) - 30.0).abs() < 1e-9);
+        let j = st.to_json().to_string();
+        let st2 = TargetStats::from_json(&crate::json::parse(&j).unwrap()).unwrap();
+        assert_eq!(st, st2);
+    }
+
+    #[test]
+    fn encoded_set_shapes() {
+        let ds = Dataset::generate(11, 8, 0).unwrap();
+        let streams = ds.token_streams(Scheme::OpsOnly).unwrap();
+        let vocab = Vocab::build(streams.iter(), 1);
+        let stats = TargetStats::for_dataset(&ds, Target::RegPressure);
+        let enc = EncodedSet::build(&ds, &streams, &vocab, 64, Target::RegPressure, &stats);
+        assert_eq!(enc.ids.len(), 8 * 64);
+        assert_eq!(enc.targets.len(), 8);
+        let (bi, bt) = enc.gather(&[0, 3, 5]);
+        assert_eq!(bi.len(), 3 * 64);
+        assert_eq!(bt.len(), 3);
+        assert_eq!(&bi[..64], &enc.ids[..64]);
+    }
+
+    #[test]
+    fn token_streams_reparse_stored_text() {
+        let ds = Dataset::generate(13, 6, 0).unwrap();
+        let streams = ds.token_streams(Scheme::OpsOperands).unwrap();
+        assert_eq!(streams.len(), 6);
+        assert!(streams.iter().all(|s| s.len() > 5));
+    }
+}

@@ -1,0 +1,111 @@
+//! BERT-style transformer-encoder subgraphs (paper corpus family #2).
+
+use super::common::{pick_dtype, NetBuilder};
+use crate::mlir::{Function, ValueId, XpuOp};
+use crate::rng::Rng;
+use anyhow::Result;
+
+/// Multi-head self-attention on `x: [B, S, D]`.
+fn attention(nb: &mut NetBuilder, x: ValueId, heads: i64) -> Result<ValueId> {
+    let shape = nb.shape(x);
+    let (b, s, d) = (shape[0], shape[1], shape[2]);
+    let dh = d / heads;
+    let q = nb.linear(x, d, true)?;
+    let k = nb.linear(x, d, true)?;
+    let v = nb.linear(x, d, true)?;
+    // [B,S,D] -> [B,H,S,dh]
+    let split = |nb: &mut NetBuilder, t: ValueId| -> Result<ValueId> {
+        let r = nb.reshape(t, vec![b, s, heads, dh])?;
+        nb.transpose(r, vec![0, 2, 1, 3])
+    };
+    let qh = split(nb, q)?;
+    let kh = split(nb, k)?;
+    let vh = split(nb, v)?;
+    // scores = q @ k^T / sqrt(dh)
+    let kt = nb.transpose(kh, vec![0, 1, 3, 2])?;
+    let scores = nb.binary(XpuOp::MatMul, qh, kt)?;
+    let scale = nb.weight(vec![1])?;
+    let scaled = nb.binary(XpuOp::Mult, scores, scale)?;
+    let probs = nb.softmax(scaled, 3)?;
+    let ctx = nb.binary(XpuOp::MatMul, probs, vh)?;
+    // [B,H,S,dh] -> [B,S,D]
+    let back = nb.transpose(ctx, vec![0, 2, 1, 3])?;
+    let merged = nb.reshape(back, vec![b, s, d])?;
+    nb.linear(merged, d, true)
+}
+
+/// Feed-forward block: linear → gelu → linear.
+fn ffn(nb: &mut NetBuilder, x: ValueId, expand: i64) -> Result<ValueId> {
+    let d = *nb.shape(x).last().unwrap();
+    let h = nb.linear(x, d * expand, true)?;
+    let g = nb.unary(XpuOp::Gelu, h)?;
+    nb.linear(g, d, true)
+}
+
+/// Build a BERT subgraph: optional embedding front-end, 1–2 encoder
+/// layers, optional pooler head.
+pub fn build(s: &mut Rng, h: &mut Rng, name: &str) -> Result<Function> {
+    let dtype = pick_dtype(h);
+    let batch = *h.pick(&[1i64, 2, 4]);
+    let seq = *h.pick(&[64i64, 128, 128, 256, 512]);
+    let (hidden, heads) = *h.pick(&[(256i64, 4i64), (512, 8), (768, 12), (1024, 16)]);
+
+    let with_embedding = s.chance(0.3);
+    let n_layers = s.range(1, 2) as usize;
+    let expand = if s.chance(0.8) { 4 } else { 2 };
+    let with_pooler = s.chance(0.25);
+
+    let mut nb = NetBuilder::new(name, dtype);
+    let mut x = if with_embedding {
+        let ids = nb.input_ids(vec![batch, seq]);
+        let table = nb.weight(vec![30522, hidden])?;
+        let tok = nb.b.xpu(XpuOp::Embedding, &[ids, table], crate::mlir::Attrs::new())?;
+        let pos = nb.weight(vec![seq, hidden])?;
+        let summed = nb.binary(XpuOp::Add, tok, pos)?;
+        nb.layernorm(summed)?
+    } else {
+        nb.input(vec![batch, seq, hidden])
+    };
+    for _ in 0..n_layers {
+        let att = attention(&mut nb, x, heads)?;
+        let res1 = nb.binary(XpuOp::Add, x, att)?;
+        let ln1 = nb.layernorm(res1)?;
+        let ff = ffn(&mut nb, ln1, expand)?;
+        let res2 = nb.binary(XpuOp::Add, ln1, ff)?;
+        x = nb.layernorm(res2)?;
+    }
+    if with_pooler {
+        let d = *nb.shape(x).last().unwrap();
+        let pooled = nb.linear(x, d, true)?;
+        let out = nb.unary(XpuOp::Tanh, pooled)?;
+        return nb.finish(&[out]);
+    }
+    nb.finish(&[x])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mlir::verify_function;
+
+    #[test]
+    fn generates_valid_functions() {
+        let mut root = Rng::new(200);
+        for i in 0..40 {
+            let mut sf = root.fork(i);
+            let mut hf = root.fork(5000 + i);
+            let f = build(&mut sf, &mut hf, &format!("bert_{i}")).unwrap();
+            verify_function(&f).unwrap();
+            let ops = f.xpu_ops();
+            assert!(ops.contains(&XpuOp::Softmax), "attention softmax missing");
+            assert!(ops.contains(&XpuOp::Gelu), "ffn gelu missing");
+        }
+    }
+
+    #[test]
+    fn augmentation_preserves_structure() {
+        let f1 = build(&mut Rng::new(7), &mut Rng::new(1), "a").unwrap();
+        let f2 = build(&mut Rng::new(7), &mut Rng::new(9), "b").unwrap();
+        assert_eq!(f1.xpu_ops(), f2.xpu_ops());
+    }
+}

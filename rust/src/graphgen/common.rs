@@ -1,0 +1,195 @@
+//! Shared building blocks for the synthetic dataflow-graph generators.
+//!
+//! `NetBuilder` wraps [`FuncBuilder`] with NN-layer-granularity helpers
+//! (conv+bn+relu, linear, attention pieces). Weights/constants are emitted
+//! as `xpu.const` ops so function arguments stay the true graph inputs —
+//! matching the paper's Fig 2 where the function embodies the (sub)graph.
+
+use crate::mlir::{Attr, Attrs, DType, FuncBuilder, Function, Type, ValueId, XpuOp};
+use crate::rng::Rng;
+use anyhow::Result;
+
+/// Builder with layer-granularity helpers; `dtype` applies to the whole
+/// graph (mixed-dtype graphs are not in the paper's corpus).
+pub struct NetBuilder {
+    pub b: FuncBuilder,
+    pub dtype: DType,
+}
+
+impl NetBuilder {
+    pub fn new(name: &str, dtype: DType) -> Self {
+        NetBuilder { b: FuncBuilder::new(name), dtype }
+    }
+
+    /// Declare a true graph input.
+    pub fn input(&mut self, shape: Vec<i64>) -> ValueId {
+        self.b.arg(Type::tensor(shape, self.dtype))
+    }
+
+    /// Integer-typed input (token ids for embedding lookups).
+    pub fn input_ids(&mut self, shape: Vec<i64>) -> ValueId {
+        self.b.arg(Type::tensor(shape, DType::I32))
+    }
+
+    /// Current shape of a tensor value (panics on non-tensor: generator bug).
+    pub fn shape(&self, x: ValueId) -> Vec<i64> {
+        self.b.value_type(x).as_tensor().expect("tensor value").shape.clone()
+    }
+
+    /// NCHW channel count.
+    pub fn channels(&self, x: ValueId) -> i64 {
+        self.shape(x)[1]
+    }
+
+    /// Materialize a weight/parameter tensor as `xpu.const`.
+    pub fn weight(&mut self, shape: Vec<i64>) -> Result<ValueId> {
+        self.b.xpu(
+            XpuOp::Const,
+            &[],
+            Attrs::new()
+                .with("shape", Attr::IntArray(shape))
+                .with("dtype", Attr::Str(self.dtype.mlir_name().into())),
+        )
+    }
+
+    /// 2-D convolution with fresh weights.
+    pub fn conv2d(
+        &mut self,
+        x: ValueId,
+        out_ch: i64,
+        k: i64,
+        stride: i64,
+        pad: i64,
+    ) -> Result<ValueId> {
+        let in_ch = self.channels(x);
+        let w = self.weight(vec![out_ch, in_ch, k, k])?;
+        self.b.xpu(
+            XpuOp::Conv2d,
+            &[x, w],
+            Attrs::new()
+                .with("strides", Attr::IntArray(vec![stride, stride]))
+                .with("padding", Attr::IntArray(vec![pad, pad])),
+        )
+    }
+
+    /// Depthwise 3x3 convolution.
+    pub fn depthwise(&mut self, x: ValueId, stride: i64) -> Result<ValueId> {
+        let c = self.channels(x);
+        let w = self.weight(vec![c, 1, 3, 3])?;
+        self.b.xpu(
+            XpuOp::DepthwiseConv2d,
+            &[x, w],
+            Attrs::new()
+                .with("strides", Attr::IntArray(vec![stride, stride]))
+                .with("padding", Attr::IntArray(vec![1, 1])),
+        )
+    }
+
+    /// Inference-mode batchnorm (scale/bias/mean/var consts).
+    pub fn batchnorm(&mut self, x: ValueId) -> Result<ValueId> {
+        let c = self.channels(x);
+        let scale = self.weight(vec![c])?;
+        let bias = self.weight(vec![c])?;
+        let mean = self.weight(vec![c])?;
+        let var = self.weight(vec![c])?;
+        self.b.xpu(XpuOp::BatchNorm, &[x, scale, bias, mean, var], Attrs::new())
+    }
+
+    /// Layernorm over the last dim.
+    pub fn layernorm(&mut self, x: ValueId) -> Result<ValueId> {
+        let d = *self.shape(x).last().expect("layernorm on rank>=1");
+        let scale = self.weight(vec![d])?;
+        let bias = self.weight(vec![d])?;
+        self.b.xpu(XpuOp::LayerNorm, &[x, scale, bias], Attrs::new())
+    }
+
+    /// Dense layer: `x @ W (+ b)`.
+    pub fn linear(&mut self, x: ValueId, out_dim: i64, bias: bool) -> Result<ValueId> {
+        let in_dim = *self.shape(x).last().expect("linear on rank>=1");
+        let w = self.weight(vec![in_dim, out_dim])?;
+        let y = self.b.xpu(XpuOp::MatMul, &[x, w], Attrs::new())?;
+        if bias {
+            let b = self.weight(vec![out_dim])?;
+            self.b.xpu(XpuOp::Add, &[y, b], Attrs::new())
+        } else {
+            Ok(y)
+        }
+    }
+
+    pub fn unary(&mut self, op: XpuOp, x: ValueId) -> Result<ValueId> {
+        self.b.xpu(op, &[x], Attrs::new())
+    }
+
+    pub fn binary(&mut self, op: XpuOp, a: ValueId, b: ValueId) -> Result<ValueId> {
+        self.b.xpu(op, &[a, b], Attrs::new())
+    }
+
+    pub fn relu(&mut self, x: ValueId) -> Result<ValueId> {
+        self.unary(XpuOp::Relu, x)
+    }
+
+    /// conv → bn → activation, the CNN workhorse.
+    pub fn conv_bn_act(
+        &mut self,
+        x: ValueId,
+        out_ch: i64,
+        k: i64,
+        stride: i64,
+        act: XpuOp,
+    ) -> Result<ValueId> {
+        let pad = (k - 1) / 2;
+        let c = self.conv2d(x, out_ch, k, stride, pad)?;
+        let n = self.batchnorm(c)?;
+        self.unary(act, n)
+    }
+
+    pub fn maxpool(&mut self, x: ValueId, k: i64, stride: i64, pad: i64) -> Result<ValueId> {
+        self.b.xpu(
+            XpuOp::MaxPool2d,
+            &[x],
+            Attrs::new()
+                .with("kernel", Attr::IntArray(vec![k, k]))
+                .with("strides", Attr::IntArray(vec![stride, stride]))
+                .with("padding", Attr::IntArray(vec![pad, pad])),
+        )
+    }
+
+    pub fn upsample(&mut self, x: ValueId, scale: i64) -> Result<ValueId> {
+        self.b.xpu(XpuOp::Upsample, &[x], Attrs::new().with("scale", Attr::Int(scale)))
+    }
+
+    pub fn concat(&mut self, xs: &[ValueId], axis: i64) -> Result<ValueId> {
+        self.b.xpu(XpuOp::Concat, xs, Attrs::new().with("axis", Attr::Int(axis)))
+    }
+
+    pub fn reshape(&mut self, x: ValueId, shape: Vec<i64>) -> Result<ValueId> {
+        self.b.xpu(XpuOp::Reshape, &[x], Attrs::new().with("shape", Attr::IntArray(shape)))
+    }
+
+    pub fn transpose(&mut self, x: ValueId, perm: Vec<i64>) -> Result<ValueId> {
+        self.b.xpu(XpuOp::Transpose, &[x], Attrs::new().with("perm", Attr::IntArray(perm)))
+    }
+
+    pub fn softmax(&mut self, x: ValueId, axis: i64) -> Result<ValueId> {
+        self.b.xpu(XpuOp::Softmax, &[x], Attrs::new().with("axis", Attr::Int(axis)))
+    }
+
+    /// Terminate the function.
+    pub fn finish(self, outputs: &[ValueId]) -> Result<Function> {
+        self.b.ret(outputs)
+    }
+}
+
+/// Pick a batch size (paper's corpora are inference graphs: small batches).
+pub fn pick_batch(h: &mut Rng) -> i64 {
+    *h.pick(&[1, 1, 2, 4, 8])
+}
+
+/// Pick a graph dtype (mostly f32, some bf16 as on AI accelerators).
+pub fn pick_dtype(h: &mut Rng) -> DType {
+    if h.chance(0.25) {
+        DType::BF16
+    } else {
+        DType::F32
+    }
+}

@@ -1,0 +1,74 @@
+//! Plain MLP / elementwise-chain subgraphs — the small fry that DL
+//! compilers see constantly (corpus filler family, also the smallest
+//! graphs in the length distribution).
+
+use super::common::{pick_dtype, NetBuilder};
+use crate::mlir::{Function, XpuOp};
+use crate::rng::Rng;
+use anyhow::Result;
+
+/// Build an MLP subgraph: 1–6 linear layers with mixed activations,
+/// optionally ending in softmax, optionally with an elementwise epilogue.
+pub fn build(s: &mut Rng, h: &mut Rng, name: &str) -> Result<Function> {
+    let dtype = pick_dtype(h);
+    let batch = *h.pick(&[1i64, 8, 32, 64, 128]);
+    let mut dim = *h.pick(&[64i64, 128, 256, 512, 784, 1024]);
+
+    let n_layers = s.range(1, 6) as usize;
+    let acts = [XpuOp::Relu, XpuOp::Gelu, XpuOp::Tanh, XpuOp::Sigmoid];
+    let layer_acts: Vec<XpuOp> = (0..n_layers).map(|_| *s.pick(&acts)).collect();
+    let with_softmax = s.chance(0.4);
+    let with_epilogue = s.chance(0.3);
+
+    let mut nb = NetBuilder::new(name, dtype);
+    let mut x = nb.input(vec![batch, dim]);
+    for &act in &layer_acts {
+        // Halve or keep width per layer (structure-driven).
+        dim = (dim / 2).max(16);
+        x = nb.linear(x, dim, true)?;
+        x = nb.unary(act, x)?;
+    }
+    if with_epilogue {
+        let scale = nb.weight(vec![dim])?;
+        x = nb.binary(XpuOp::Mult, x, scale)?;
+        let shift = nb.weight(vec![dim])?;
+        x = nb.binary(XpuOp::Add, x, shift)?;
+    }
+    if with_softmax {
+        x = nb.softmax(x, 1)?;
+    }
+    nb.finish(&[x])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mlir::verify_function;
+
+    #[test]
+    fn generates_valid_functions() {
+        let mut root = Rng::new(600);
+        for i in 0..40 {
+            let mut sf = root.fork(i);
+            let mut hf = root.fork(60 + i);
+            let f = build(&mut sf, &mut hf, &format!("mlp_{i}")).unwrap();
+            verify_function(&f).unwrap();
+            assert!(f.xpu_ops().contains(&XpuOp::MatMul));
+        }
+    }
+
+    #[test]
+    fn sizes_vary() {
+        let mut root = Rng::new(601);
+        let sizes: Vec<usize> = (0..20)
+            .map(|i| {
+                let mut sf = root.fork(i);
+                let mut hf = root.fork(i + 999);
+                build(&mut sf, &mut hf, "m").unwrap().num_ops()
+            })
+            .collect();
+        let min = sizes.iter().min().unwrap();
+        let max = sizes.iter().max().unwrap();
+        assert!(max > min, "no size diversity: {sizes:?}");
+    }
+}

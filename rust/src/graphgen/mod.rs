@@ -1,0 +1,193 @@
+//! Synthetic dataflow-graph corpus generators.
+//!
+//! The paper trains on "MLIR representations of dataflow graphs extracted
+//! from popular neural-net architectures like Resnet, BERT, Unet, SSD and
+//! Yolo" (20k+ files, plus augmentation). That corpus is proprietary, so
+//! this module regenerates its statistical shape: parameterized subgraph
+//! generators per family, each split into a *structure* seed (which ops,
+//! how many) and a *shape* seed (tensor dims). Augmentation re-rolls only
+//! the shape seed — same op sequence, new shapes — which is exactly the
+//! kind of augmentation the paper's shape-as-token scheme benefits from.
+
+pub mod bert;
+pub mod common;
+pub mod mlp;
+pub mod random;
+pub mod resnet;
+pub mod ssd;
+pub mod unet;
+pub mod yolo;
+
+use crate::mlir::Function;
+use crate::rng::Rng;
+use anyhow::Result;
+
+/// Corpus family (paper §3 lists the first five).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Family {
+    Resnet,
+    Bert,
+    Unet,
+    Ssd,
+    Yolo,
+    Mlp,
+    Random,
+}
+
+impl Family {
+    pub const ALL: [Family; 7] = [
+        Family::Resnet,
+        Family::Bert,
+        Family::Unet,
+        Family::Ssd,
+        Family::Yolo,
+        Family::Mlp,
+        Family::Random,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Family::Resnet => "resnet",
+            Family::Bert => "bert",
+            Family::Unet => "unet",
+            Family::Ssd => "ssd",
+            Family::Yolo => "yolo",
+            Family::Mlp => "mlp",
+            Family::Random => "random",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Family> {
+        Family::ALL.iter().copied().find(|f| f.name() == s)
+    }
+
+    /// Corpus mixture weight (CNN-ish families dominate real zoos).
+    fn weight(self) -> f64 {
+        match self {
+            Family::Resnet => 0.22,
+            Family::Bert => 0.18,
+            Family::Unet => 0.12,
+            Family::Ssd => 0.12,
+            Family::Yolo => 0.12,
+            Family::Mlp => 0.12,
+            Family::Random => 0.12,
+        }
+    }
+}
+
+/// Everything needed to regenerate one graph deterministically.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GraphSpec {
+    pub family: Family,
+    pub structure_seed: u64,
+    pub shape_seed: u64,
+}
+
+impl GraphSpec {
+    /// Deterministic function name encoding the spec.
+    pub fn func_name(&self) -> String {
+        format!("{}_s{}_h{}", self.family.name(), self.structure_seed, self.shape_seed)
+    }
+
+    /// The augmented sibling: same structure, shifted shape seed.
+    pub fn augmented(&self, k: u64) -> GraphSpec {
+        GraphSpec { shape_seed: self.shape_seed.wrapping_add(0x5851_F42D + k), ..*self }
+    }
+}
+
+/// Generate one graph from a spec.
+pub fn generate(spec: &GraphSpec) -> Result<Function> {
+    let mut s = Rng::new(spec.structure_seed);
+    let mut h = Rng::new(spec.shape_seed);
+    let name = spec.func_name();
+    match spec.family {
+        Family::Resnet => resnet::build(&mut s, &mut h, &name),
+        Family::Bert => bert::build(&mut s, &mut h, &name),
+        Family::Unet => unet::build(&mut s, &mut h, &name),
+        Family::Ssd => ssd::build(&mut s, &mut h, &name),
+        Family::Yolo => yolo::build(&mut s, &mut h, &name),
+        Family::Mlp => mlp::build(&mut s, &mut h, &name),
+        Family::Random => random::build(&mut s, &mut h, &name),
+    }
+}
+
+/// Draw `count` specs from the corpus mixture, then append `augment` shape
+/// re-rolls per spec (paper: "we use augmentation to create a larger
+/// training set").
+pub fn corpus_specs(seed: u64, count: usize, augment: usize) -> Vec<GraphSpec> {
+    let mut rng = Rng::new(seed);
+    let weights: Vec<f64> = Family::ALL.iter().map(|f| f.weight()).collect();
+    let mut specs = Vec::with_capacity(count * (1 + augment));
+    for i in 0..count {
+        let family = Family::ALL[rng.weighted(&weights)];
+        let spec = GraphSpec {
+            family,
+            structure_seed: rng.next_u64() ^ i as u64,
+            shape_seed: rng.next_u64(),
+        };
+        specs.push(spec);
+        for k in 0..augment {
+            specs.push(spec.augmented(k as u64));
+        }
+    }
+    specs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mlir::{parse_function, print_function, verify_function};
+
+    #[test]
+    fn all_families_generate_and_roundtrip() {
+        for (i, family) in Family::ALL.into_iter().enumerate() {
+            let spec = GraphSpec { family, structure_seed: 11 + i as u64, shape_seed: 77 };
+            let f = generate(&spec).unwrap();
+            verify_function(&f).unwrap();
+            let text = print_function(&f);
+            let f2 = parse_function(&text).unwrap();
+            verify_function(&f2).unwrap();
+            assert_eq!(print_function(&f2), text, "{family:?} round-trip");
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let spec = GraphSpec { family: Family::Bert, structure_seed: 5, shape_seed: 6 };
+        let a = print_function(&generate(&spec).unwrap());
+        let b = print_function(&generate(&spec).unwrap());
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn augmented_specs_share_op_sequence() {
+        let spec = GraphSpec { family: Family::Resnet, structure_seed: 9, shape_seed: 1 };
+        let base = generate(&spec).unwrap();
+        let aug = generate(&spec.augmented(0)).unwrap();
+        assert_eq!(base.xpu_ops(), aug.xpu_ops());
+    }
+
+    #[test]
+    fn corpus_mixture_covers_all_families() {
+        let specs = corpus_specs(42, 200, 1);
+        assert_eq!(specs.len(), 400);
+        for family in Family::ALL {
+            assert!(
+                specs.iter().any(|s| s.family == family),
+                "family {family:?} missing from corpus"
+            );
+        }
+        // All specs generate.
+        for spec in specs.iter().take(50) {
+            verify_function(&generate(spec).unwrap()).unwrap();
+        }
+    }
+
+    #[test]
+    fn family_name_roundtrip() {
+        for f in Family::ALL {
+            assert_eq!(Family::parse(f.name()), Some(f));
+        }
+        assert_eq!(Family::parse("alexnet"), None);
+    }
+}

@@ -1,0 +1,148 @@
+//! Random DAG generator: type-guided random composition over the whole
+//! `xpu` op set. This family stresses the tokenizer/vocab (rare shapes,
+//! OOV pressure) and the verifier, and pads the corpus length
+//! distribution's tail.
+
+use super::common::{pick_dtype, NetBuilder};
+use crate::mlir::{Attr, Attrs, Function, ValueId, XpuOp};
+use crate::rng::Rng;
+use anyhow::Result;
+
+/// Round `v` up/down to nearby "hardware-friendly" sizes sometimes, to
+/// mimic the paper's observation that a handful of tensor shapes dominate.
+fn friendly_dim(h: &mut Rng) -> i64 {
+    if h.chance(0.8) {
+        *h.pick(&[8i64, 16, 32, 64, 128, 256])
+    } else {
+        h.range(3, 200)
+    }
+}
+
+/// Build a random dataflow graph: a pool of live tensors is extended op
+/// by op, always type-correct by construction.
+pub fn build(s: &mut Rng, h: &mut Rng, name: &str) -> Result<Function> {
+    let dtype = pick_dtype(h);
+    let n_ops_target = s.range(4, 60) as usize;
+
+    let mut nb = NetBuilder::new(name, dtype);
+    // Seed pool: 1–3 inputs of rank 2–4.
+    let n_inputs = s.range(1, 3);
+    let mut pool: Vec<ValueId> = Vec::new();
+    for _ in 0..n_inputs {
+        let rank = s.range(2, 4);
+        let shape: Vec<i64> = match rank {
+            2 => vec![*h.pick(&[1i64, 4, 16, 64]), friendly_dim(h)],
+            3 => vec![*h.pick(&[1i64, 2, 4]), friendly_dim(h), friendly_dim(h)],
+            _ => vec![
+                *h.pick(&[1i64, 2]),
+                *h.pick(&[8i64, 16, 32, 64]),
+                *h.pick(&[8i64, 14, 28, 56]),
+                *h.pick(&[8i64, 14, 28, 56]),
+            ],
+        };
+        pool.push(nb.input(shape));
+    }
+
+    let unary_ops = [
+        XpuOp::Relu,
+        XpuOp::Gelu,
+        XpuOp::Sigmoid,
+        XpuOp::Tanh,
+        XpuOp::Erf,
+        XpuOp::Exp,
+        XpuOp::Sqrt,
+        XpuOp::Rsqrt,
+        XpuOp::Neg,
+    ];
+    let binary_ops = [XpuOp::Add, XpuOp::Sub, XpuOp::Mult, XpuOp::Div, XpuOp::Maximum, XpuOp::Minimum];
+
+    let mut emitted = 0usize;
+    let mut guard = 0usize;
+    while emitted < n_ops_target && guard < n_ops_target * 20 {
+        guard += 1;
+        let x = *s.pick(&pool);
+        let shape = nb.shape(x);
+        // Weighted menu of applicable ops for this operand.
+        let choice = s.below(10);
+        let result = match choice {
+            0..=2 => nb.unary(*s.pick(&unary_ops), x),
+            3..=4 => {
+                // Same-shape binary: pair with a const of equal shape so it
+                // is always well-typed.
+                let w = nb.weight(shape.clone())?;
+                emitted += 1; // the const counts as an op
+                nb.binary(*s.pick(&binary_ops), x, w)
+            }
+            5 => {
+                // Linear on the last dim.
+                nb.linear(x, friendly_dim(h), s.chance(0.5))
+            }
+            6 if shape.len() == 4 && shape[2] >= 4 && shape[3] >= 4 => {
+                nb.conv2d(x, friendly_dim(h).min(256), 3, 1, 1)
+            }
+            7 if shape.len() == 4 && shape[2] >= 4 && shape[3] >= 4 => {
+                nb.maxpool(x, 2, 2, 0)
+            }
+            8 if shape.len() >= 2 => {
+                let mut perm: Vec<i64> = (0..shape.len() as i64).collect();
+                let a = s.below(shape.len() as u64) as usize;
+                let b = s.below(shape.len() as u64) as usize;
+                perm.swap(a, b);
+                nb.transpose(x, perm)
+            }
+            _ => {
+                let axes = vec![(shape.len() as i64) - 1];
+                nb.b.xpu(
+                    XpuOp::ReduceSum,
+                    &[x],
+                    Attrs::new()
+                        .with("axes", Attr::IntArray(axes))
+                        .with("keepdims", Attr::Bool(true)),
+                )
+            }
+        };
+        if let Ok(v) = result {
+            pool.push(v);
+            emitted += 1;
+            // Keep the pool bounded and biased towards recent values.
+            if pool.len() > 12 {
+                pool.remove(0);
+            }
+        }
+    }
+    // Return the most recent value.
+    let out = *pool.last().expect("non-empty pool");
+    nb.finish(&[out])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mlir::verify_function;
+
+    #[test]
+    fn generates_valid_functions() {
+        let mut root = Rng::new(700);
+        for i in 0..60 {
+            let mut sf = root.fork(i);
+            let mut hf = root.fork(i * 31 + 7);
+            let f = build(&mut sf, &mut hf, &format!("rand_{i}")).unwrap();
+            verify_function(&f).unwrap();
+            assert!(f.num_ops() >= 2);
+        }
+    }
+
+    #[test]
+    fn covers_a_wide_op_set() {
+        use std::collections::HashSet;
+        let mut root = Rng::new(701);
+        let mut seen: HashSet<XpuOp> = HashSet::new();
+        for i in 0..100 {
+            let mut sf = root.fork(i);
+            let mut hf = root.fork(i + 13);
+            let f = build(&mut sf, &mut hf, "r").unwrap();
+            seen.extend(f.xpu_ops());
+        }
+        assert!(seen.len() >= 15, "only {} distinct ops: {seen:?}", seen.len());
+    }
+}

@@ -1,0 +1,99 @@
+//! ResNet-style residual subgraphs (paper corpus family #1).
+
+use super::common::{pick_batch, pick_dtype, NetBuilder};
+use crate::mlir::{Function, XpuOp};
+use crate::rng::Rng;
+use anyhow::Result;
+
+/// One residual basic/bottleneck block ending in `add` + `relu`.
+fn block(nb: &mut NetBuilder, x: crate::mlir::ValueId, bottleneck: bool, downsample: bool)
+    -> Result<crate::mlir::ValueId> {
+    let c = nb.channels(x);
+    let stride = if downsample { 2 } else { 1 };
+    let out_c = if downsample { c * 2 } else { c };
+    let main = if bottleneck {
+        let mid = (out_c / 4).max(8);
+        let a = nb.conv_bn_act(x, mid, 1, stride, XpuOp::Relu)?;
+        let b = nb.conv_bn_act(a, mid, 3, 1, XpuOp::Relu)?;
+        let v = nb.conv2d(b, out_c, 1, 1, 0)?;
+        nb.batchnorm(v)?
+    } else {
+        let a = nb.conv_bn_act(x, out_c, 3, stride, XpuOp::Relu)?;
+        let v = nb.conv2d(a, out_c, 3, 1, 1)?;
+        nb.batchnorm(v)?
+    };
+    let skip = if downsample {
+        let p = nb.conv2d(x, out_c, 1, stride, 0)?;
+        nb.batchnorm(p)?
+    } else {
+        x
+    };
+    let sum = nb.binary(XpuOp::Add, main, skip)?;
+    nb.relu(sum)
+}
+
+/// Build a ResNet subgraph: optional stem, 1–4 residual blocks, optional
+/// classifier head. `s` drives structure, `h` drives shapes (augmentation
+/// re-rolls `h` only).
+pub fn build(s: &mut Rng, h: &mut Rng, name: &str) -> Result<Function> {
+    let dtype = pick_dtype(h);
+    let batch = pick_batch(h);
+    let channels = *h.pick(&[32i64, 64, 64, 128, 256]);
+    let spatial = *h.pick(&[7i64, 14, 28, 56, 56, 112]);
+
+    // Structure decisions come only from `s` so that augmentation
+    // (re-rolling `h`) preserves the op sequence exactly.
+    let with_stem = s.chance(0.3);
+    let bottleneck = s.chance(0.4);
+    let n_blocks = s.range(1, 4) as usize;
+    let with_head = s.chance(0.3);
+    let down_flags: Vec<bool> = (0..n_blocks).map(|i| i > 0 && s.chance(0.35)).collect();
+
+    let mut nb = NetBuilder::new(name, dtype);
+    let mut x = if with_stem {
+        let img = nb.input(vec![batch, 3, spatial * 4, spatial * 4]);
+        let c = nb.conv_bn_act(img, channels, 7, 2, XpuOp::Relu)?;
+        nb.maxpool(c, 3, 2, 1)?
+    } else {
+        nb.input(vec![batch, channels, spatial, spatial])
+    };
+    for &down in &down_flags {
+        x = block(&mut nb, x, bottleneck, down)?;
+    }
+    if with_head {
+        let pooled = nb.unary(XpuOp::GlobalAvgPool, x)?;
+        let logits = nb.linear(pooled, *h.pick(&[10i64, 100, 1000]), true)?;
+        let probs = nb.softmax(logits, 1)?;
+        return nb.finish(&[probs]);
+    }
+    nb.finish(&[x])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mlir::verify_function;
+
+    #[test]
+    fn generates_valid_functions() {
+        let mut s = Rng::new(100);
+        for i in 0..40 {
+            let mut sf = s.fork(i);
+            let mut hf = s.fork(1000 + i);
+            let f = build(&mut sf, &mut hf, &format!("resnet_{i}")).unwrap();
+            verify_function(&f).unwrap();
+            assert!(f.num_ops() >= 5, "too small: {}", f.num_ops());
+            assert!(f.xpu_ops().contains(&XpuOp::Add), "residual add missing");
+        }
+    }
+
+    #[test]
+    fn structure_seed_fixes_op_sequence() {
+        // Same structure seed + different shape seed → same op sequence
+        // (this is what makes augmentation honest).
+        let f1 = build(&mut Rng::new(7), &mut Rng::new(1), "a").unwrap();
+        let f2 = build(&mut Rng::new(7), &mut Rng::new(2), "b").unwrap();
+        let shrink = |f: &Function| f.xpu_ops();
+        assert_eq!(shrink(&f1), shrink(&f2));
+    }
+}

@@ -1,0 +1,79 @@
+//! SSD-style multi-scale detection-head subgraphs (paper corpus family #4).
+
+use super::common::{pick_batch, pick_dtype, NetBuilder};
+use crate::mlir::{Function, ValueId, XpuOp};
+use crate::rng::Rng;
+use anyhow::Result;
+
+/// Per-scale prediction head: loc (4 coords) + conf (classes) convs,
+/// flattened to [B, boxes*k].
+fn scale_head(
+    nb: &mut NetBuilder,
+    feat: ValueId,
+    anchors: i64,
+    classes: i64,
+) -> Result<(ValueId, ValueId)> {
+    let shape = nb.shape(feat);
+    let (b, hgt, wid) = (shape[0], shape[2], shape[3]);
+    let loc = nb.conv2d(feat, anchors * 4, 3, 1, 1)?;
+    let conf = nb.conv2d(feat, anchors * classes, 3, 1, 1)?;
+    let loc_flat = nb.reshape(loc, vec![b, anchors * 4 * hgt * wid])?;
+    let conf_flat = nb.reshape(conf, vec![b, anchors * classes * hgt * wid])?;
+    Ok((loc_flat, conf_flat))
+}
+
+/// Build an SSD subgraph: a short conv backbone producing 2–4 feature
+/// scales, per-scale heads, cross-scale concat, softmax over scores.
+pub fn build(s: &mut Rng, h: &mut Rng, name: &str) -> Result<Function> {
+    let dtype = pick_dtype(h);
+    let batch = pick_batch(h);
+    let n_scales = s.range(2, 4) as usize;
+    let backbone_per_scale = s.range(1, 2) as usize;
+    let anchors = s.range(2, 6);
+    let classes = *h.pick(&[2i64, 4, 8, 21]);
+    let base_ch = *h.pick(&[32i64, 64, 128]);
+    let spatial = (*h.pick(&[38i64, 64, 75])).max(1 << (n_scales + 2));
+
+    let mut nb = NetBuilder::new(name, dtype);
+    let mut x = nb.input(vec![batch, base_ch, spatial, spatial]);
+
+    let mut locs = Vec::new();
+    let mut confs = Vec::new();
+    let mut ch = base_ch;
+    for scale in 0..n_scales {
+        for _ in 0..backbone_per_scale {
+            x = nb.conv_bn_act(x, ch, 3, 1, XpuOp::Relu)?;
+        }
+        let (l, c) = scale_head(&mut nb, x, anchors, classes)?;
+        locs.push(l);
+        confs.push(c);
+        if scale + 1 < n_scales {
+            // Stride-2 conv to the next scale.
+            ch *= 2;
+            x = nb.conv_bn_act(x, ch, 3, 2, XpuOp::Relu)?;
+        }
+    }
+    let all_loc = nb.concat(&locs, 1)?;
+    let all_conf = nb.concat(&confs, 1)?;
+    let scores = nb.softmax(all_conf, 1)?;
+    nb.finish(&[all_loc, scores])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mlir::verify_function;
+
+    #[test]
+    fn generates_valid_functions() {
+        let mut root = Rng::new(400);
+        for i in 0..30 {
+            let mut sf = root.fork(i);
+            let mut hf = root.fork(4000 + i);
+            let f = build(&mut sf, &mut hf, &format!("ssd_{i}")).unwrap();
+            verify_function(&f).unwrap();
+            assert_eq!(f.ret.len(), 2, "loc + scores outputs");
+            assert!(f.xpu_ops().contains(&XpuOp::Concat));
+        }
+    }
+}

@@ -1,0 +1,86 @@
+//! UNet-style encoder/decoder subgraphs with skip connections
+//! (paper corpus family #3).
+
+use super::common::{pick_batch, pick_dtype, NetBuilder};
+use crate::mlir::{Function, ValueId, XpuOp};
+use crate::rng::Rng;
+use anyhow::Result;
+
+/// Double conv block: (conv3x3 → bn → relu) × 2.
+fn double_conv(nb: &mut NetBuilder, x: ValueId, out_ch: i64) -> Result<ValueId> {
+    let a = nb.conv_bn_act(x, out_ch, 3, 1, XpuOp::Relu)?;
+    nb.conv_bn_act(a, out_ch, 3, 1, XpuOp::Relu)
+}
+
+/// Build a UNet subgraph: `depth` down levels, bottleneck, matching up
+/// levels with skip concats, and a 1x1 head.
+pub fn build(s: &mut Rng, h: &mut Rng, name: &str) -> Result<Function> {
+    let dtype = pick_dtype(h);
+    let batch = pick_batch(h);
+    let base = *h.pick(&[16i64, 32, 32, 64]);
+    // Spatial must survive `depth` halvings.
+    let depth = s.range(1, 3) as usize;
+    let spatial = (*h.pick(&[32i64, 64, 64, 128])).max((1 << depth) * 8);
+    let with_head = s.chance(0.6);
+
+    let mut nb = NetBuilder::new(name, dtype);
+    let mut x = nb.input(vec![batch, *h.pick(&[1i64, 3]), spatial, spatial]);
+
+    // Encoder: keep skip tensors.
+    let mut skips: Vec<ValueId> = Vec::new();
+    let mut ch = base;
+    for _ in 0..depth {
+        let f = double_conv(&mut nb, x, ch)?;
+        skips.push(f);
+        x = nb.maxpool(f, 2, 2, 0)?;
+        ch *= 2;
+    }
+    // Bottleneck.
+    x = double_conv(&mut nb, x, ch)?;
+    // Decoder.
+    for skip in skips.into_iter().rev() {
+        ch /= 2;
+        let up = nb.upsample(x, 2)?;
+        let reduced = nb.conv2d(up, ch, 1, 1, 0)?;
+        let cat = nb.concat(&[reduced, skip], 1)?;
+        x = double_conv(&mut nb, cat, ch)?;
+    }
+    if with_head {
+        let classes = *h.pick(&[1i64, 2, 4, 8]);
+        let logits = nb.conv2d(x, classes, 1, 1, 0)?;
+        let probs = nb.unary(XpuOp::Sigmoid, logits)?;
+        return nb.finish(&[probs]);
+    }
+    nb.finish(&[x])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mlir::verify_function;
+
+    #[test]
+    fn generates_valid_functions() {
+        let mut root = Rng::new(300);
+        for i in 0..30 {
+            let mut sf = root.fork(i);
+            let mut hf = root.fork(9000 + i);
+            let f = build(&mut sf, &mut hf, &format!("unet_{i}")).unwrap();
+            verify_function(&f).unwrap();
+            let ops = f.xpu_ops();
+            assert!(ops.contains(&XpuOp::Concat), "skip concat missing");
+            assert!(ops.contains(&XpuOp::Upsample), "decoder upsample missing");
+        }
+    }
+
+    #[test]
+    fn output_spatial_matches_input() {
+        // Encoder/decoder symmetry: without a head the output spatial dims
+        // equal the input's.
+        let f = build(&mut Rng::new(4), &mut Rng::new(4), "u").unwrap();
+        let in_shape = f.value_type(crate::mlir::ValueId(0)).as_tensor().unwrap().shape.clone();
+        let out = f.ret[0];
+        let out_shape = f.value_type(out).as_tensor().unwrap().shape.clone();
+        assert_eq!(in_shape[2..], out_shape[2..]);
+    }
+}

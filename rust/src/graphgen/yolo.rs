@@ -1,0 +1,100 @@
+//! YOLO/Darknet-style subgraphs: conv-bn-leaky stacks, residual shortcuts,
+//! FPN-style upsample+concat across scales (paper corpus family #5).
+
+use super::common::{pick_batch, pick_dtype, NetBuilder};
+use crate::mlir::{Attr, Attrs, Function, ValueId, XpuOp};
+use crate::rng::Rng;
+use anyhow::Result;
+
+/// "Leaky relu" spelled with the xpu primitive set: max(x, 0.1*x).
+fn leaky(nb: &mut NetBuilder, x: ValueId) -> Result<ValueId> {
+    let slope = nb.weight(vec![1])?;
+    let scaled = nb.binary(XpuOp::Mult, x, slope)?;
+    nb.binary(XpuOp::Maximum, x, scaled)
+}
+
+fn conv_bn_leaky(nb: &mut NetBuilder, x: ValueId, oc: i64, k: i64, stride: i64) -> Result<ValueId> {
+    let pad = (k - 1) / 2;
+    let c = nb.conv2d(x, oc, k, stride, pad)?;
+    let n = nb.batchnorm(c)?;
+    leaky(nb, n)
+}
+
+/// Darknet residual unit: 1x1 halve channels, 3x3 restore, shortcut add.
+fn dark_block(nb: &mut NetBuilder, x: ValueId) -> Result<ValueId> {
+    let c = nb.channels(x);
+    let a = conv_bn_leaky(nb, x, (c / 2).max(8), 1, 1)?;
+    let b = conv_bn_leaky(nb, a, c, 3, 1)?;
+    nb.binary(XpuOp::Add, x, b)
+}
+
+/// Detection head: 1x1 conv to anchors*(5+classes), reshape to
+/// [B, A, 5+classes, H*W], sigmoid objectness-style activation.
+fn detect_head(nb: &mut NetBuilder, x: ValueId, anchors: i64, classes: i64) -> Result<ValueId> {
+    let shape = nb.shape(x);
+    let (b, hgt, wid) = (shape[0], shape[2], shape[3]);
+    let per = 5 + classes;
+    let raw = nb.conv2d(x, anchors * per, 1, 1, 0)?;
+    let re = nb.reshape(raw, vec![b, anchors, per, hgt * wid])?;
+    nb.unary(XpuOp::Sigmoid, re)
+}
+
+/// Build a YOLO subgraph: residual backbone chunk, optional second scale
+/// with upsample + route-concat, detection heads.
+pub fn build(s: &mut Rng, h: &mut Rng, name: &str) -> Result<Function> {
+    let dtype = pick_dtype(h);
+    let batch = pick_batch(h);
+    let ch = *h.pick(&[64i64, 128, 256]);
+    let spatial = *h.pick(&[16i64, 26, 32, 52]);
+    let n_blocks = s.range(1, 3) as usize;
+    let two_scale = s.chance(0.5);
+    let anchors = 3;
+    let classes = *h.pick(&[4i64, 20, 80]);
+
+    let mut nb = NetBuilder::new(name, dtype);
+    let mut x = nb.input(vec![batch, ch, spatial, spatial]);
+    for _ in 0..n_blocks {
+        x = dark_block(&mut nb, x)?;
+    }
+    if two_scale {
+        // Downsample branch, head there, then FPN back up.
+        let deep = conv_bn_leaky(&mut nb, x, ch * 2, 3, 2)?;
+        let deep2 = dark_block(&mut nb, deep)?;
+        let head_deep = detect_head(&mut nb, deep2, anchors, classes)?;
+        let lat = conv_bn_leaky(&mut nb, deep2, ch / 2, 1, 1)?;
+        let up = nb.upsample(lat, 2)?;
+        let cat = nb.concat(&[up, x], 1)?;
+        let fused = conv_bn_leaky(&mut nb, cat, ch, 3, 1)?;
+        let head_shallow = detect_head(&mut nb, fused, anchors, classes)?;
+        nb.finish(&[head_deep, head_shallow])
+    } else {
+        let head = detect_head(&mut nb, x, anchors, classes)?;
+        nb.finish(&[head])
+    }
+}
+
+/// A tiny constant so the module exercises `Attrs` directly from here too
+/// (kept for doc parity with other families).
+#[allow(dead_code)]
+fn scale_attr(v: i64) -> Attrs {
+    Attrs::new().with("scale", Attr::Int(v))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mlir::verify_function;
+
+    #[test]
+    fn generates_valid_functions() {
+        let mut root = Rng::new(500);
+        for i in 0..30 {
+            let mut sf = root.fork(i);
+            let mut hf = root.fork(700 + i);
+            let f = build(&mut sf, &mut hf, &format!("yolo_{i}")).unwrap();
+            verify_function(&f).unwrap();
+            assert!(f.xpu_ops().contains(&XpuOp::Sigmoid), "head sigmoid missing");
+            assert!(f.xpu_ops().contains(&XpuOp::Maximum), "leaky relu missing");
+        }
+    }
+}

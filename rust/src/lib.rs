@@ -1,0 +1,32 @@
+//! # mlir-cost — ML-driven Hardware Cost Model for MLIR
+//!
+//! A full reproduction of Das & Mannarswamy, *"ML-driven Hardware Cost
+//! Model for MLIR"* (cs.LG 2023): predict hardware characteristics
+//! (register pressure, vector-ALU utilization, cycles) of high-level MLIR
+//! dataflow graphs by treating the IR as text and training NLP-style
+//! sequence regressors.
+//!
+//! The stack has three layers:
+//! - **L3 (this crate)** — MLIR substrate, corpus generators, the
+//!   DL-compiler lowering pipeline + xPU simulator that produce ground
+//!   truth, the tokenizer/dataset pipeline, the PJRT runtime that executes
+//!   AOT-compiled models, the training orchestrator, and the serving
+//!   coordinator a compiler queries. Python is never on the request path.
+//! - **L2 (JAX, build-time)** — the FC / LSTM / Conv1D regressors in
+//!   `python/compile/model.py`, AOT-lowered to HLO text.
+//! - **L1 (Pallas, build-time)** — the stacked Conv1D+MaxPool hot path in
+//!   `python/compile/kernels/`, verified against a pure-jnp oracle.
+
+pub mod bundle;
+pub mod coordinator;
+pub mod dataset;
+pub mod graphgen;
+pub mod json;
+pub mod lower;
+pub mod mlir;
+pub mod rng;
+pub mod runtime;
+pub mod sim;
+pub mod tokenizer;
+pub mod train;
+pub mod benchkit;

@@ -1,0 +1,817 @@
+//! Code generation: fusion groups → `xpu-isa` [`Program`]s.
+//!
+//! Each group lowers to one or more [`Segment`]s — the steady-state window
+//! of its innermost tiled loop plus trip counts. Contractions map to the
+//! MXU (im2col for convs), elementwise chains to the vector ALU with the
+//! fused tail applied in-register, transcendentals to the SFU, reductions
+//! to unrolled accumulation loops, and data movement to load/store streams.
+
+use super::fusion::{self, Group};
+use super::isa::{Instr, Mem, Program, RegAlloc, Segment, SfuOp, VArith, VReg};
+use crate::mlir::{DType, Function, OpKind, Operation, ValueId, XpuOp};
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+/// Codegen knobs. The compiler-integration examples drive these (they are
+/// exactly the decisions the paper wants a cost model to guide).
+#[derive(Debug, Clone)]
+pub struct CodegenOpts {
+    /// Enable producer-consumer fusion.
+    pub fuse: bool,
+    /// Force a fixed elementwise unroll factor (None = heuristic).
+    pub unroll: Option<u32>,
+    /// MXU systolic tile edge.
+    pub mxu_tile: i64,
+    /// Vector lanes for f32 (bf16 gets 2x).
+    pub lanes_f32: i64,
+    /// Scratchpad capacity; larger intermediates stream via HBM.
+    pub scratch_bytes: u64,
+}
+
+impl Default for CodegenOpts {
+    fn default() -> Self {
+        CodegenOpts {
+            fuse: true,
+            unroll: None,
+            mxu_tile: 32,
+            lanes_f32: 16,
+            scratch_bytes: 8 << 20,
+        }
+    }
+}
+
+fn div_ceil(a: i64, b: i64) -> i64 {
+    (a + b - 1) / b
+}
+
+/// Per-function lowering context.
+struct Ctx<'a> {
+    f: &'a Function,
+    opts: &'a CodegenOpts,
+    ra: RegAlloc,
+    prog: Program,
+}
+
+impl<'a> Ctx<'a> {
+    fn lanes(&self, dtype: DType) -> i64 {
+        match dtype.size_bytes() {
+            4 => self.opts.lanes_f32,
+            2 => self.opts.lanes_f32 * 2,
+            _ => self.opts.lanes_f32 * 4,
+        }
+    }
+
+    fn numel(&self, v: ValueId) -> i64 {
+        self.f.value_type(v).as_tensor().map(|t| t.num_elements()).unwrap_or(1)
+    }
+
+    fn dtype(&self, v: ValueId) -> DType {
+        self.f.value_type(v).dtype().unwrap_or(DType::F32)
+    }
+
+    fn bytes(&self, v: ValueId) -> u64 {
+        self.f.value_type(v).as_tensor().map(|t| t.size_bytes() as u64).unwrap_or(4)
+    }
+
+    fn op(&self, idx: usize) -> &'a Operation {
+        &self.f.body.ops[idx]
+    }
+
+    fn xpu_kind(&self, idx: usize) -> XpuOp {
+        match self.op(idx).kind {
+            OpKind::Xpu(x) => x,
+            _ => unreachable!("group contains non-xpu op"),
+        }
+    }
+
+    fn unroll_for(&self, iters: i64) -> u32 {
+        if let Some(u) = self.opts.unroll {
+            return u.max(1);
+        }
+        if iters >= 256 {
+            4
+        } else if iters >= 16 {
+            2
+        } else {
+            1
+        }
+    }
+}
+
+/// Which functional unit an elementwise xpu op maps to.
+fn ew_lowering(op: XpuOp) -> (Option<VArith>, Option<SfuOp>) {
+    match op {
+        XpuOp::Add => (Some(VArith::Add), None),
+        XpuOp::Sub => (Some(VArith::Sub), None),
+        XpuOp::Mult => (Some(VArith::Mul), None),
+        XpuOp::Maximum | XpuOp::Relu => (Some(VArith::Max), None),
+        XpuOp::Minimum => (Some(VArith::Min), None),
+        XpuOp::Neg => (Some(VArith::Sub), None),
+        XpuOp::Div => (None, Some(SfuOp::Div)),
+        XpuOp::Exp => (None, Some(SfuOp::Exp)),
+        XpuOp::Tanh => (None, Some(SfuOp::Tanh)),
+        XpuOp::Erf => (None, Some(SfuOp::Erf)),
+        XpuOp::Sqrt => (None, Some(SfuOp::Sqrt)),
+        XpuOp::Rsqrt => (None, Some(SfuOp::Rsqrt)),
+        XpuOp::Sigmoid => (None, Some(SfuOp::Sigmoid)),
+        XpuOp::Gelu => (None, Some(SfuOp::Gelu)),
+        other => unreachable!("{other:?} is not elementwise"),
+    }
+}
+
+/// Emit one elementwise instruction (VALU or SFU) into `seg`.
+fn emit_ew(seg: &mut Segment, ra: &mut RegAlloc, op: XpuOp, width: u8, a: VReg, b: Option<VReg>) -> VReg {
+    let dst = ra.fresh(width);
+    match ew_lowering(op) {
+        (Some(v), None) => seg.instrs.push(Instr::VOp { op: v, dst, a, b }),
+        (None, Some(s)) => seg.instrs.push(Instr::Sfu { op: s, dst, a, b }),
+        _ => unreachable!(),
+    }
+    dst
+}
+
+/// Append the group's fused elementwise tail to `seg`, starting from
+/// `chain` (the in-register group result). Small (broadcast) operands are
+/// hoisted into `hoisted` as loop-carried registers; full-size operands
+/// are loaded in the body.
+fn emit_fused_tail(
+    ctx: &mut Ctx,
+    seg: &mut Segment,
+    group: &Group,
+    mut chain: VReg,
+    produced: &mut HashMap<ValueId, VReg>,
+    hoisted: &mut Vec<VReg>,
+) -> VReg {
+    let width = chain.width;
+    let root_result = ctx.op(group.root).results[0];
+    let out_numel = ctx.numel(root_result);
+    for &fi in &group.fused {
+        let op = ctx.op(fi);
+        let kind = ctx.xpu_kind(fi);
+        let mut srcs: Vec<VReg> = Vec::new();
+        for &operand in &op.operands {
+            if let Some(&r) = produced.get(&operand) {
+                srcs.push(r);
+            } else if ctx.numel(operand) < out_numel {
+                // Broadcast operand: load once, keep live across trips.
+                let r = ctx.ra.fresh(1);
+                hoisted.push(r);
+                srcs.push(r);
+            } else {
+                let r = ctx.ra.fresh(width);
+                seg.instrs.push(Instr::VLoad { dst: r, mem: Mem::Scratch, strided: false });
+                srcs.push(r);
+            }
+        }
+        let (a, b) = match srcs.len() {
+            1 => (srcs[0], None),
+            2 => (srcs[0], Some(srcs[1])),
+            n => unreachable!("elementwise op with {n} operands"),
+        };
+        chain = emit_ew(seg, &mut ctx.ra, kind, width, a, b);
+        produced.insert(op.results[0], chain);
+    }
+    chain
+}
+
+/// Prologue segment holding hoisted broadcast loads (runs once).
+fn hoist_prologue(label: &str, hoisted: &[VReg]) -> Option<Segment> {
+    if hoisted.is_empty() {
+        return None;
+    }
+    let mut seg = Segment::new(format!("{label} hoist"), 1);
+    for &r in hoisted {
+        seg.instrs.push(Instr::VLoad { dst: r, mem: Mem::Scratch, strided: false });
+    }
+    Some(seg)
+}
+
+// ---------------------------------------------------------------------------
+// Group emitters
+// ---------------------------------------------------------------------------
+
+fn lower_elementwise(ctx: &mut Ctx, group: &Group) -> Result<()> {
+    let root = ctx.op(group.root);
+    let result = root.results[0];
+    let out_numel = ctx.numel(result);
+    let lanes = ctx.lanes(ctx.dtype(result));
+    let iters = div_ceil(out_numel, lanes);
+    let unroll = ctx.unroll_for(iters);
+    let kind = ctx.xpu_kind(group.root);
+
+    let mut seg = Segment::new(format!("ew {}", ctx.f.value_name(result)), div_ceil(iters, unroll as i64) as u64);
+    let mut hoisted: Vec<VReg> = Vec::new();
+    // Software-pipelined schedule: all loads first (hide LSU latency),
+    // then the compute chains, then the stores. This is what makes a
+    // bigger unroll factor cost registers — the paper's §1 "do we run out
+    // of registers when we unroll aggressively?" trade-off.
+    let mut per_iter_srcs: Vec<Vec<VReg>> = Vec::new();
+    for _ in 0..unroll {
+        let mut srcs = Vec::new();
+        for &operand in &root.operands {
+            if ctx.numel(operand) < out_numel {
+                let r = ctx.ra.fresh(1);
+                hoisted.push(r);
+                srcs.push(r);
+            } else {
+                let r = ctx.ra.fresh(1);
+                seg.instrs.push(Instr::VLoad { dst: r, mem: Mem::Scratch, strided: false });
+                srcs.push(r);
+            }
+        }
+        per_iter_srcs.push(srcs);
+    }
+    let mut fins: Vec<VReg> = Vec::new();
+    for srcs in per_iter_srcs {
+        let mut produced: HashMap<ValueId, VReg> = HashMap::new();
+        let (a, b) = match srcs.len() {
+            1 => (srcs[0], None),
+            _ => (srcs[0], Some(srcs[1])),
+        };
+        let chain = emit_ew(&mut seg, &mut ctx.ra, kind, 1, a, b);
+        produced.insert(result, chain);
+        fins.push(emit_fused_tail(ctx, &mut seg, group, chain, &mut produced, &mut hoisted));
+    }
+    for fin in fins {
+        seg.instrs.push(Instr::VStore { src: fin, mem: Mem::Scratch, strided: false });
+    }
+    seg.loop_carried = hoisted.clone();
+    if let Some(p) = hoist_prologue(&seg.label.clone(), &hoisted) {
+        ctx.prog.segments.push(p);
+    }
+    ctx.prog.segments.push(seg);
+    Ok(())
+}
+
+/// Contraction geometry after im2col-style flattening.
+struct Gemm {
+    m: i64,
+    n: i64,
+    k: i64,
+    strided_a: bool,
+}
+
+fn gemm_geometry(ctx: &Ctx, idx: usize) -> Result<Gemm> {
+    let op = ctx.op(idx);
+    let out = op.results[0];
+    match ctx.xpu_kind(idx) {
+        XpuOp::MatMul => {
+            let a = ctx.f.value_type(op.operands[0]).as_tensor().unwrap();
+            let b = ctx.f.value_type(op.operands[1]).as_tensor().unwrap();
+            let k = a.shape[a.rank() - 1];
+            let n = b.shape[b.rank() - 1];
+            let m = ctx.numel(out) / n;
+            Ok(Gemm { m, n, k, strided_a: false })
+        }
+        XpuOp::Conv2d => {
+            let x = ctx.f.value_type(op.operands[0]).as_tensor().unwrap();
+            let w = ctx.f.value_type(op.operands[1]).as_tensor().unwrap();
+            let out_t = ctx.f.value_type(out).as_tensor().unwrap();
+            let m = w.shape[0]; // OC
+            let n = out_t.shape[0] * out_t.shape[2] * out_t.shape[3]; // B*OH*OW
+            let k = x.shape[1] * w.shape[2] * w.shape[3]; // IC*KH*KW
+            Ok(Gemm { m, n, k, strided_a: true })
+        }
+        XpuOp::Conv1d => {
+            let x = ctx.f.value_type(op.operands[0]).as_tensor().unwrap();
+            let w = ctx.f.value_type(op.operands[1]).as_tensor().unwrap();
+            let out_t = ctx.f.value_type(out).as_tensor().unwrap();
+            let m = w.shape[0];
+            let n = out_t.shape[0] * out_t.shape[2];
+            let k = x.shape[1] * w.shape[2];
+            Ok(Gemm { m, n, k, strided_a: true })
+        }
+        other => bail!("not a gemm-able op: {other:?}"),
+    }
+}
+
+fn lower_contraction(ctx: &mut Ctx, group: &Group) -> Result<()> {
+    let g = gemm_geometry(ctx, group.root)?;
+    let t = ctx.opts.mxu_tile;
+    let (mt, nt, kt) = (div_ceil(g.m, t), div_ceil(g.n, t), div_ceil(g.k, t));
+    let name = ctx.f.value_name(ctx.op(group.root).results[0]).to_string();
+
+    // Double-buffer the K loop when it is long enough to hide load latency.
+    let db: i64 = if kt >= 4 { 2 } else { 1 };
+    let acc = ctx.ra.fresh(4);
+    let mut inner = Segment::new(format!("mxu {name} inner"), (mt * nt * div_ceil(kt, db)) as u64);
+    for _ in 0..db {
+        let a = ctx.ra.fresh(2);
+        let b = ctx.ra.fresh(2);
+        inner.instrs.push(Instr::VLoad { dst: a, mem: Mem::Scratch, strided: g.strided_a });
+        inner.instrs.push(Instr::VLoad { dst: b, mem: Mem::Scratch, strided: false });
+        inner.instrs.push(Instr::Macc { acc, a, b });
+    }
+    inner.loop_carried = vec![acc];
+    ctx.prog.segments.push(inner);
+
+    // Epilogue: fused tail on the accumulator tile, then store.
+    let mut epi = Segment::new(format!("mxu {name} epilogue"), (mt * nt) as u64);
+    let mut produced: HashMap<ValueId, VReg> = HashMap::new();
+    produced.insert(ctx.op(group.root).results[0], acc);
+    let mut hoisted = Vec::new();
+    let fin = emit_fused_tail(ctx, &mut epi, group, acc, &mut produced, &mut hoisted);
+    epi.instrs.push(Instr::VStore { src: fin, mem: Mem::Scratch, strided: false });
+    epi.loop_carried = hoisted.clone();
+    if let Some(p) = hoist_prologue(&epi.label.clone(), &hoisted) {
+        ctx.prog.segments.push(p);
+    }
+    ctx.prog.segments.push(epi);
+    Ok(())
+}
+
+/// Windowed accumulation (depthwise conv / pools): per output vector, load
+/// each tap (strided), combine, apply tail, store.
+fn lower_windowed(ctx: &mut Ctx, group: &Group) -> Result<()> {
+    let root = ctx.op(group.root);
+    let kind = ctx.xpu_kind(group.root);
+    let result = root.results[0];
+    let lanes = ctx.lanes(ctx.dtype(result));
+    let out_iters = div_ceil(ctx.numel(result), lanes);
+    let taps = match kind {
+        XpuOp::DepthwiseConv2d => {
+            let w = ctx.f.value_type(root.operands[1]).as_tensor().unwrap();
+            w.shape[2] * w.shape[3]
+        }
+        XpuOp::MaxPool2d | XpuOp::AvgPool2d => {
+            let k = root.attrs.get_int_array("kernel").unwrap_or(&[2, 2]);
+            k[0] * k[1]
+        }
+        other => bail!("not a windowed op: {other:?}"),
+    };
+    let name = ctx.f.value_name(result).to_string();
+    let mut seg = Segment::new(format!("win {name}"), out_iters as u64);
+    let mut hoisted = Vec::new();
+    let mut acc: Option<VReg> = None;
+    for tap in 0..taps {
+        let x = ctx.ra.fresh(1);
+        seg.instrs.push(Instr::VLoad { dst: x, mem: Mem::Scratch, strided: true });
+        let v = if kind == XpuOp::DepthwiseConv2d {
+            // Per-tap weight is loop-carried.
+            let w = ctx.ra.fresh(1);
+            hoisted.push(w);
+            let m = ctx.ra.fresh(1);
+            seg.instrs.push(Instr::VOp { op: VArith::Mul, dst: m, a: x, b: Some(w) });
+            m
+        } else {
+            x
+        };
+        acc = Some(match acc {
+            None => v,
+            Some(prev) => {
+                let dst = ctx.ra.fresh(1);
+                let op = if kind == XpuOp::MaxPool2d { VArith::Max } else { VArith::Add };
+                seg.instrs.push(Instr::VOp { op, dst, a: prev, b: Some(v) });
+                dst
+            }
+        });
+        let _ = tap;
+    }
+    let mut chain = acc.expect("taps >= 1");
+    if kind == XpuOp::AvgPool2d {
+        let inv = ctx.ra.fresh(1);
+        hoisted.push(inv);
+        chain = {
+            let dst = ctx.ra.fresh(1);
+            seg.instrs.push(Instr::VOp { op: VArith::Mul, dst, a: chain, b: Some(inv) });
+            dst
+        };
+    }
+    let mut produced = HashMap::new();
+    produced.insert(result, chain);
+    let fin = emit_fused_tail(ctx, &mut seg, group, chain, &mut produced, &mut hoisted);
+    seg.instrs.push(Instr::VStore { src: fin, mem: Mem::Scratch, strided: false });
+    seg.loop_carried = hoisted.clone();
+    if let Some(p) = hoist_prologue(&seg.label.clone(), &hoisted) {
+        ctx.prog.segments.push(p);
+    }
+    ctx.prog.segments.push(seg);
+    Ok(())
+}
+
+/// Long reduction (reduce_*, global_avgpool, layernorm stats): 8-way
+/// unrolled accumulate, then a short finalize segment with the tail.
+fn lower_reduction(ctx: &mut Ctx, group: &Group) -> Result<()> {
+    let root = ctx.op(group.root);
+    let kind = ctx.xpu_kind(group.root);
+    let result = root.results[0];
+    let input = root.operands[0];
+    let lanes = ctx.lanes(ctx.dtype(input));
+    let in_numel = ctx.numel(input);
+    let out_numel = ctx.numel(result);
+    let reduce_len = (in_numel / out_numel.max(1)).max(1);
+    let out_vecs = div_ceil(out_numel, lanes).max(1);
+    let name = ctx.f.value_name(result).to_string();
+
+    let is_max = kind == XpuOp::ReduceMax;
+    let needs_scale = matches!(kind, XpuOp::ReduceMean | XpuOp::GlobalAvgPool);
+
+    // Accumulation loop: 8 taps per window.
+    const UR: i64 = 8;
+    let acc = ctx.ra.fresh(1);
+    let mut seg = Segment::new(
+        format!("red {name}"),
+        (out_vecs * div_ceil(reduce_len, UR)) as u64,
+    );
+    for _ in 0..UR.min(reduce_len) {
+        let x = ctx.ra.fresh(1);
+        seg.instrs.push(Instr::VLoad { dst: x, mem: Mem::Scratch, strided: true });
+        seg.instrs.push(Instr::VOp {
+            op: if is_max { VArith::Max } else { VArith::Add },
+            dst: acc,
+            a: acc,
+            b: Some(x),
+        });
+    }
+    seg.loop_carried = vec![acc];
+    ctx.prog.segments.push(seg);
+
+    // Finalize: optional 1/len scale, fused tail, store.
+    let mut fin_seg = Segment::new(format!("red {name} fin"), out_vecs as u64);
+    let mut chain = acc;
+    let mut hoisted = Vec::new();
+    if needs_scale {
+        let inv = ctx.ra.fresh(1);
+        hoisted.push(inv);
+        let dst = ctx.ra.fresh(1);
+        fin_seg.instrs.push(Instr::VOp { op: VArith::Mul, dst, a: chain, b: Some(inv) });
+        chain = dst;
+    }
+    let mut produced = HashMap::new();
+    produced.insert(result, chain);
+    let fin = emit_fused_tail(ctx, &mut fin_seg, group, chain, &mut produced, &mut hoisted);
+    fin_seg.instrs.push(Instr::VStore { src: fin, mem: Mem::Scratch, strided: false });
+    fin_seg.loop_carried = hoisted.clone();
+    if let Some(p) = hoist_prologue(&fin_seg.label.clone(), &hoisted) {
+        ctx.prog.segments.push(p);
+    }
+    ctx.prog.segments.push(fin_seg);
+    Ok(())
+}
+
+/// Softmax: three passes over each row (max, exp+sum, normalize).
+fn lower_softmax(ctx: &mut Ctx, group: &Group) -> Result<()> {
+    let root = ctx.op(group.root);
+    let result = root.results[0];
+    let x = root.operands[0];
+    let t = ctx.f.value_type(x).as_tensor().unwrap();
+    let axis = root.attrs.get_int("axis").unwrap_or(t.rank() as i64 - 1) as usize;
+    let axis_len = t.shape[axis];
+    let rows = (t.num_elements() / axis_len.max(1)).max(1);
+    let lanes = ctx.lanes(t.dtype);
+    let row_vecs = div_ceil(axis_len, lanes).max(1);
+    let name = ctx.f.value_name(result).to_string();
+
+    // Pass 1: running max.
+    let mx = ctx.ra.fresh(1);
+    let mut p1 = Segment::new(format!("softmax {name} max"), (rows * row_vecs) as u64);
+    let v = ctx.ra.fresh(1);
+    p1.instrs.push(Instr::VLoad { dst: v, mem: Mem::Scratch, strided: false });
+    p1.instrs.push(Instr::VOp { op: VArith::Max, dst: mx, a: mx, b: Some(v) });
+    p1.loop_carried = vec![mx];
+    ctx.prog.segments.push(p1);
+
+    // Pass 2: exp(x - max), running sum, stash exp values.
+    let sum = ctx.ra.fresh(1);
+    let mut p2 = Segment::new(format!("softmax {name} expsum"), (rows * row_vecs) as u64);
+    let xv = ctx.ra.fresh(1);
+    p2.instrs.push(Instr::VLoad { dst: xv, mem: Mem::Scratch, strided: false });
+    let sh = ctx.ra.fresh(1);
+    p2.instrs.push(Instr::VOp { op: VArith::Sub, dst: sh, a: xv, b: Some(mx) });
+    let ex = ctx.ra.fresh(1);
+    p2.instrs.push(Instr::Sfu { op: SfuOp::Exp, dst: ex, a: sh, b: None });
+    p2.instrs.push(Instr::VOp { op: VArith::Add, dst: sum, a: sum, b: Some(ex) });
+    p2.instrs.push(Instr::VStore { src: ex, mem: Mem::Scratch, strided: false });
+    p2.loop_carried = vec![mx, sum];
+    ctx.prog.segments.push(p2);
+
+    // Pass 3: divide by sum, fused tail, store.
+    let mut p3 = Segment::new(format!("softmax {name} norm"), (rows * row_vecs) as u64);
+    let ev = ctx.ra.fresh(1);
+    p3.instrs.push(Instr::VLoad { dst: ev, mem: Mem::Scratch, strided: false });
+    let dv = ctx.ra.fresh(1);
+    p3.instrs.push(Instr::Sfu { op: SfuOp::Div, dst: dv, a: ev, b: Some(sum) });
+    let mut produced = HashMap::new();
+    produced.insert(result, dv);
+    let mut hoisted = vec![sum];
+    let fin = emit_fused_tail(ctx, &mut p3, group, dv, &mut produced, &mut hoisted);
+    p3.instrs.push(Instr::VStore { src: fin, mem: Mem::Scratch, strided: false });
+    p3.loop_carried = hoisted;
+    ctx.prog.segments.push(p3);
+    Ok(())
+}
+
+/// Batchnorm (inference): per-channel param prep + streaming normalize.
+fn lower_batchnorm(ctx: &mut Ctx, group: &Group) -> Result<()> {
+    let root = ctx.op(group.root);
+    let result = root.results[0];
+    let t = ctx.f.value_type(result).as_tensor().unwrap();
+    let c = t.shape[1];
+    let lanes = ctx.lanes(t.dtype);
+    let name = ctx.f.value_name(result).to_string();
+
+    // Param prep: scale' = scale / sqrt(var + eps); bias' = bias - mean*scale'.
+    let mut prep = Segment::new(format!("bn {name} prep"), div_ceil(c, lanes) as u64);
+    let regs: Vec<VReg> = (0..4).map(|_| ctx.ra.fresh(1)).collect();
+    for &r in &regs {
+        prep.instrs.push(Instr::VLoad { dst: r, mem: Mem::Scratch, strided: false });
+    }
+    let rs = ctx.ra.fresh(1);
+    prep.instrs.push(Instr::Sfu { op: SfuOp::Rsqrt, dst: rs, a: regs[3], b: None });
+    let sc = ctx.ra.fresh(1);
+    prep.instrs.push(Instr::VOp { op: VArith::Mul, dst: sc, a: regs[0], b: Some(rs) });
+    let mb = ctx.ra.fresh(1);
+    prep.instrs.push(Instr::VOp { op: VArith::Mul, dst: mb, a: regs[2], b: Some(sc) });
+    let bi = ctx.ra.fresh(1);
+    prep.instrs.push(Instr::VOp { op: VArith::Sub, dst: bi, a: regs[1], b: Some(mb) });
+    prep.instrs.push(Instr::VStore { src: sc, mem: Mem::Scratch, strided: false });
+    prep.instrs.push(Instr::VStore { src: bi, mem: Mem::Scratch, strided: false });
+    ctx.prog.segments.push(prep);
+
+    // Streaming loop: y = x*scale' + bias' (+ fused tail).
+    let iters = div_ceil(t.num_elements(), lanes);
+    let unroll = ctx.unroll_for(iters);
+    let mut main = Segment::new(format!("bn {name} main"), div_ceil(iters, unroll as i64) as u64);
+    let mut hoisted = Vec::new();
+    for _ in 0..unroll {
+        let xv = ctx.ra.fresh(1);
+        main.instrs.push(Instr::VLoad { dst: xv, mem: Mem::Scratch, strided: false });
+        let scv = ctx.ra.fresh(1);
+        main.instrs.push(Instr::VLoad { dst: scv, mem: Mem::Scratch, strided: true });
+        let biv = ctx.ra.fresh(1);
+        main.instrs.push(Instr::VLoad { dst: biv, mem: Mem::Scratch, strided: true });
+        let m = ctx.ra.fresh(1);
+        main.instrs.push(Instr::VOp { op: VArith::Mul, dst: m, a: xv, b: Some(scv) });
+        let y = ctx.ra.fresh(1);
+        main.instrs.push(Instr::VOp { op: VArith::Add, dst: y, a: m, b: Some(biv) });
+        let mut produced = HashMap::new();
+        produced.insert(result, y);
+        let fin = emit_fused_tail(ctx, &mut main, group, y, &mut produced, &mut hoisted);
+        main.instrs.push(Instr::VStore { src: fin, mem: Mem::Scratch, strided: false });
+    }
+    main.loop_carried = hoisted.clone();
+    if let Some(p) = hoist_prologue(&main.label.clone(), &hoisted) {
+        ctx.prog.segments.push(p);
+    }
+    ctx.prog.segments.push(main);
+    Ok(())
+}
+
+/// Layernorm: mean pass, variance pass, rsqrt per row, normalize pass.
+fn lower_layernorm(ctx: &mut Ctx, group: &Group) -> Result<()> {
+    let root = ctx.op(group.root);
+    let result = root.results[0];
+    let t = ctx.f.value_type(result).as_tensor().unwrap();
+    let d = *t.shape.last().unwrap();
+    let rows = (t.num_elements() / d.max(1)).max(1);
+    let lanes = ctx.lanes(t.dtype);
+    let dv = div_ceil(d, lanes).max(1);
+    let name = ctx.f.value_name(result).to_string();
+
+    // Mean accumulate.
+    let mean = ctx.ra.fresh(1);
+    let mut p1 = Segment::new(format!("ln {name} mean"), (rows * dv) as u64);
+    let xv = ctx.ra.fresh(1);
+    p1.instrs.push(Instr::VLoad { dst: xv, mem: Mem::Scratch, strided: false });
+    p1.instrs.push(Instr::VOp { op: VArith::Add, dst: mean, a: mean, b: Some(xv) });
+    p1.loop_carried = vec![mean];
+    ctx.prog.segments.push(p1);
+
+    // Variance accumulate.
+    let var = ctx.ra.fresh(1);
+    let mut p2 = Segment::new(format!("ln {name} var"), (rows * dv) as u64);
+    let x2 = ctx.ra.fresh(1);
+    p2.instrs.push(Instr::VLoad { dst: x2, mem: Mem::Scratch, strided: false });
+    let c = ctx.ra.fresh(1);
+    p2.instrs.push(Instr::VOp { op: VArith::Sub, dst: c, a: x2, b: Some(mean) });
+    let sq = ctx.ra.fresh(1);
+    p2.instrs.push(Instr::VOp { op: VArith::Mul, dst: sq, a: c, b: Some(c) });
+    p2.instrs.push(Instr::VOp { op: VArith::Add, dst: var, a: var, b: Some(sq) });
+    p2.loop_carried = vec![mean, var];
+    ctx.prog.segments.push(p2);
+
+    // Per-row inverse stddev.
+    let inv = ctx.ra.fresh(1);
+    let mut p3 = Segment::new(format!("ln {name} rsqrt"), rows as u64);
+    p3.instrs.push(Instr::Sfu { op: SfuOp::Rsqrt, dst: inv, a: var, b: None });
+    p3.loop_carried = vec![var, inv];
+    ctx.prog.segments.push(p3);
+
+    // Normalize: (x - mean) * inv * gamma + beta (+ fused tail).
+    let mut p4 = Segment::new(format!("ln {name} norm"), (rows * dv) as u64);
+    let x3 = ctx.ra.fresh(1);
+    p4.instrs.push(Instr::VLoad { dst: x3, mem: Mem::Scratch, strided: false });
+    let cc = ctx.ra.fresh(1);
+    p4.instrs.push(Instr::VOp { op: VArith::Sub, dst: cc, a: x3, b: Some(mean) });
+    let nn = ctx.ra.fresh(1);
+    p4.instrs.push(Instr::VOp { op: VArith::Mul, dst: nn, a: cc, b: Some(inv) });
+    let ga = ctx.ra.fresh(1);
+    p4.instrs.push(Instr::VLoad { dst: ga, mem: Mem::Scratch, strided: false });
+    let sg = ctx.ra.fresh(1);
+    p4.instrs.push(Instr::VOp { op: VArith::Mul, dst: sg, a: nn, b: Some(ga) });
+    let be = ctx.ra.fresh(1);
+    p4.instrs.push(Instr::VLoad { dst: be, mem: Mem::Scratch, strided: false });
+    let y = ctx.ra.fresh(1);
+    p4.instrs.push(Instr::VOp { op: VArith::Add, dst: y, a: sg, b: Some(be) });
+    let mut produced = HashMap::new();
+    produced.insert(result, y);
+    let mut hoisted = vec![mean, inv];
+    let fin = emit_fused_tail(ctx, &mut p4, group, y, &mut produced, &mut hoisted);
+    p4.instrs.push(Instr::VStore { src: fin, mem: Mem::Scratch, strided: false });
+    p4.loop_carried = hoisted;
+    ctx.prog.segments.push(p4);
+    Ok(())
+}
+
+/// Pure data movement: load/store streams (strided where layout changes).
+fn lower_datamove(ctx: &mut Ctx, group: &Group, strided: bool) -> Result<()> {
+    let root = ctx.op(group.root);
+    let result = root.results[0];
+    let lanes = ctx.lanes(ctx.dtype(result));
+    let iters = div_ceil(ctx.numel(result), lanes);
+    let unroll = ctx.unroll_for(iters);
+    let name = ctx.f.value_name(result).to_string();
+    let mut seg = Segment::new(format!("move {name}"), div_ceil(iters, unroll as i64) as u64);
+    let mut hoisted = Vec::new();
+    for _ in 0..unroll {
+        let r = ctx.ra.fresh(1);
+        seg.instrs.push(Instr::VLoad { dst: r, mem: Mem::Scratch, strided });
+        let mut produced = HashMap::new();
+        produced.insert(result, r);
+        let fin = emit_fused_tail(ctx, &mut seg, group, r, &mut produced, &mut hoisted);
+        seg.instrs.push(Instr::VStore { src: fin, mem: Mem::Scratch, strided: false });
+    }
+    seg.loop_carried = hoisted.clone();
+    if let Some(p) = hoist_prologue(&seg.label.clone(), &hoisted) {
+        ctx.prog.segments.push(p);
+    }
+    ctx.prog.segments.push(seg);
+    Ok(())
+}
+
+fn lower_group(ctx: &mut Ctx, group: &Group) -> Result<()> {
+    match ctx.xpu_kind(group.root) {
+        XpuOp::MatMul | XpuOp::Conv2d | XpuOp::Conv1d => lower_contraction(ctx, group),
+        XpuOp::DepthwiseConv2d | XpuOp::MaxPool2d | XpuOp::AvgPool2d => lower_windowed(ctx, group),
+        XpuOp::ReduceSum | XpuOp::ReduceMax | XpuOp::ReduceMean | XpuOp::GlobalAvgPool => {
+            lower_reduction(ctx, group)
+        }
+        XpuOp::Softmax => lower_softmax(ctx, group),
+        XpuOp::BatchNorm => lower_batchnorm(ctx, group),
+        XpuOp::LayerNorm => lower_layernorm(ctx, group),
+        XpuOp::Transpose | XpuOp::Embedding => lower_datamove(ctx, group, true),
+        XpuOp::Concat | XpuOp::Slice | XpuOp::Pad | XpuOp::Broadcast | XpuOp::Upsample => {
+            lower_datamove(ctx, group, false)
+        }
+        op if op.is_elementwise() => lower_elementwise(ctx, group),
+        other => bail!("no lowering for {other:?}"),
+    }
+}
+
+/// Lower a (pure-dataflow) function to an `xpu-isa` program.
+pub fn lower(f: &Function, opts: &CodegenOpts) -> Result<Program> {
+    let groups = if opts.fuse {
+        fusion::fuse(f)
+    } else {
+        f.body
+            .ops
+            .iter()
+            .enumerate()
+            .filter(|(_, op)| !fusion::is_noop(op))
+            .map(|(i, _)| Group { root: i, fused: Vec::new() })
+            .collect()
+    };
+    let mut ctx = Ctx { f, opts, ra: RegAlloc::default(), prog: Program::default() };
+
+    // DMA accounting: args + weight consts stream in, results stream out;
+    // intermediates larger than scratch spill through HBM too.
+    for id in f.arg_ids() {
+        ctx.prog.dma_in_bytes += ctx.bytes(id);
+    }
+    for op in &f.body.ops {
+        if matches!(op.kind, OpKind::Xpu(XpuOp::Const)) {
+            ctx.prog.dma_in_bytes += ctx.bytes(op.results[0]);
+        }
+    }
+    for &r in &f.ret {
+        ctx.prog.dma_out_bytes += ctx.bytes(r);
+    }
+    for group in &groups {
+        let result = ctx.op(group.ops().last().unwrap_or(group.root)).results.first().copied();
+        if let Some(r) = result {
+            let b = ctx.bytes(r);
+            if b > ctx.opts.scratch_bytes {
+                ctx.prog.dma_in_bytes += b;
+                ctx.prog.dma_out_bytes += b;
+            }
+        }
+        lower_group(&mut ctx, group)?;
+    }
+    Ok(ctx.prog)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mlir::{Attrs, FuncBuilder, Type};
+
+    fn t(shape: &[i64]) -> Type {
+        Type::tensor(shape.to_vec(), DType::F32)
+    }
+
+    fn simple_matmul_relu() -> Function {
+        let mut b = FuncBuilder::new("f");
+        let x = b.arg(t(&[64, 64]));
+        let w = b.arg(t(&[64, 64]));
+        let m = b.xpu(XpuOp::MatMul, &[x, w], Attrs::new()).unwrap();
+        let r = b.xpu(XpuOp::Relu, &[m], Attrs::new()).unwrap();
+        b.ret(&[r]).unwrap()
+    }
+
+    #[test]
+    fn matmul_lowering_has_macc_and_epilogue() {
+        let f = simple_matmul_relu();
+        let p = lower(&f, &CodegenOpts::default()).unwrap();
+        assert!(p.segments.iter().any(|s| s.label.contains("inner")));
+        assert!(p.segments.iter().any(|s| s.label.contains("epilogue")));
+        let has_macc = p
+            .segments
+            .iter()
+            .flat_map(|s| &s.instrs)
+            .any(|i| matches!(i, Instr::Macc { .. }));
+        assert!(has_macc);
+        // Fused relu: a VMax in the epilogue, not a separate pass.
+        let epi = p.segments.iter().find(|s| s.label.contains("epilogue")).unwrap();
+        assert!(epi.instrs.iter().any(|i| matches!(i, Instr::VOp { op: VArith::Max, .. })));
+    }
+
+    #[test]
+    fn trip_counts_scale_with_size() {
+        let small = {
+            let mut b = FuncBuilder::new("s");
+            let x = b.arg(t(&[64, 64]));
+            let w = b.arg(t(&[64, 64]));
+            let m = b.xpu(XpuOp::MatMul, &[x, w], Attrs::new()).unwrap();
+            b.ret(&[m]).unwrap()
+        };
+        let big = {
+            let mut b = FuncBuilder::new("b");
+            let x = b.arg(t(&[256, 256]));
+            let w = b.arg(t(&[256, 256]));
+            let m = b.xpu(XpuOp::MatMul, &[x, w], Attrs::new()).unwrap();
+            b.ret(&[m]).unwrap()
+        };
+        let ps = lower(&small, &CodegenOpts::default()).unwrap();
+        let pb = lower(&big, &CodegenOpts::default()).unwrap();
+        assert!(pb.dyn_instrs() > ps.dyn_instrs() * 8, "{} vs {}", pb.dyn_instrs(), ps.dyn_instrs());
+    }
+
+    #[test]
+    fn unfused_produces_more_segments() {
+        let f = simple_matmul_relu();
+        let fused = lower(&f, &CodegenOpts::default()).unwrap();
+        let unfused = lower(&f, &CodegenOpts { fuse: false, ..Default::default() }).unwrap();
+        assert!(unfused.segments.len() > fused.segments.len());
+        // Unfused streams the intermediate through memory: more dynamic instrs.
+        assert!(unfused.dyn_instrs() > fused.dyn_instrs());
+    }
+
+    #[test]
+    fn unroll_override_grows_window() {
+        let mut b = FuncBuilder::new("e");
+        let x = b.arg(t(&[1024, 1024]));
+        let y = b.xpu(XpuOp::Relu, &[x], Attrs::new()).unwrap();
+        let f = b.ret(&[y]).unwrap();
+        let u1 = lower(&f, &CodegenOpts { unroll: Some(1), ..Default::default() }).unwrap();
+        let u8 = lower(&f, &CodegenOpts { unroll: Some(8), ..Default::default() }).unwrap();
+        assert!(u8.static_instrs() > u1.static_instrs() * 4);
+        assert!(u8.segments.last().unwrap().trips < u1.segments.last().unwrap().trips);
+    }
+
+    #[test]
+    fn every_generator_graph_lowers() {
+        use crate::graphgen::{corpus_specs, generate};
+        for spec in corpus_specs(99, 40, 0) {
+            let f = generate(&spec).unwrap();
+            let p = lower(&f, &CodegenOpts::default())
+                .unwrap_or_else(|e| panic!("{:?} failed: {e}", spec));
+            assert!(p.dyn_instrs() > 0, "{spec:?} produced empty program");
+        }
+    }
+
+    #[test]
+    fn softmax_three_passes() {
+        let mut b = FuncBuilder::new("sm");
+        let x = b.arg(t(&[8, 128]));
+        let s = b
+            .xpu(XpuOp::Softmax, &[x], Attrs::new().with("axis", crate::mlir::Attr::Int(1)))
+            .unwrap();
+        let f = b.ret(&[s]).unwrap();
+        let p = lower(&f, &CodegenOpts::default()).unwrap();
+        assert_eq!(p.segments.len(), 3);
+        assert!(p.segments.iter().any(|s| s.instrs.iter().any(|i| matches!(
+            i,
+            Instr::Sfu { op: SfuOp::Exp, .. }
+        ))));
+    }
+}

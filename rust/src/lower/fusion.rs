@@ -1,0 +1,174 @@
+//! Operator fusion — the first graph-level pass of the DL-compiler
+//! (paper §1 motivates exactly this optimization as a cost-model client).
+//!
+//! Greedy producer-consumer fusion: an elementwise op is absorbed into the
+//! group that produced its first operand when that value has no other
+//! consumer. Contractions, softmax, norms, pools etc. start groups; fused
+//! elementwise tails become the epilogue of the group's generated loops.
+
+use crate::mlir::{Function, OpKind, Operation, ValueId, XpuOp};
+use std::collections::HashMap;
+
+/// A fusion group: the op that roots the loop nest plus an elementwise
+/// tail applied in-register.
+#[derive(Debug, Clone)]
+pub struct Group {
+    /// Index of the root op within the function body.
+    pub root: usize,
+    /// Indices of fused elementwise ops, in program order.
+    pub fused: Vec<usize>,
+}
+
+impl Group {
+    /// All op indices in this group, root first.
+    pub fn ops(&self) -> impl Iterator<Item = usize> + '_ {
+        std::iter::once(self.root).chain(self.fused.iter().copied())
+    }
+}
+
+/// Number of uses of each value across the (flat, xpu-level) body,
+/// including the return.
+pub fn use_counts(f: &Function) -> HashMap<ValueId, usize> {
+    let mut counts: HashMap<ValueId, usize> = HashMap::new();
+    for op in &f.body.ops {
+        for &o in &op.operands {
+            *counts.entry(o).or_default() += 1;
+        }
+    }
+    counts
+}
+
+fn is_fusable_tail(op: &Operation) -> bool {
+    match op.kind {
+        OpKind::Xpu(x) => x.is_elementwise(),
+        _ => false,
+    }
+}
+
+/// True for ops that generate no machine code (views, weight consts).
+pub fn is_noop(op: &Operation) -> bool {
+    matches!(op.kind, OpKind::Xpu(XpuOp::Const) | OpKind::Xpu(XpuOp::Reshape) | OpKind::Return)
+}
+
+/// Partition the function body into fusion groups.
+///
+/// Assumes a pure dataflow function (no regions) — the generators only
+/// produce those at the xpu level.
+pub fn fuse(f: &Function) -> Vec<Group> {
+    let uses = use_counts(f);
+    let mut groups: Vec<Group> = Vec::new();
+    // Map: value -> index into `groups` of the group producing it, if that
+    // group is still "open" (its result is the group tail).
+    let mut open: HashMap<ValueId, usize> = HashMap::new();
+
+    for (i, op) in f.body.ops.iter().enumerate() {
+        if is_noop(op) {
+            continue;
+        }
+        let result = op.results.first().copied();
+        if is_fusable_tail(op) {
+            // Try to fuse into the producer of the first tensor operand
+            // that comes from an open group and has a single use.
+            let target = op.operands.iter().find_map(|o| {
+                let gi = *open.get(o)?;
+                (uses.get(o).copied().unwrap_or(0) == 1).then_some((*o, gi))
+            });
+            if let Some((val, gi)) = target {
+                groups[gi].fused.push(i);
+                open.remove(&val);
+                if let Some(r) = result {
+                    open.insert(r, gi);
+                }
+                continue;
+            }
+        }
+        // Start a new group.
+        let gi = groups.len();
+        groups.push(Group { root: i, fused: Vec::new() });
+        if let Some(r) = result {
+            open.insert(r, gi);
+        }
+    }
+    groups
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mlir::{Attrs, DType, FuncBuilder, Type};
+
+    fn t(shape: &[i64]) -> Type {
+        Type::tensor(shape.to_vec(), DType::F32)
+    }
+
+    #[test]
+    fn elementwise_tail_fuses_into_matmul() {
+        let mut b = FuncBuilder::new("f");
+        let x = b.arg(t(&[8, 8]));
+        let w = b.arg(t(&[8, 8]));
+        let m = b.xpu(XpuOp::MatMul, &[x, w], Attrs::new()).unwrap();
+        let r = b.xpu(XpuOp::Relu, &[m], Attrs::new()).unwrap();
+        let e = b.xpu(XpuOp::Exp, &[r], Attrs::new()).unwrap();
+        let f = b.ret(&[e]).unwrap();
+        let groups = fuse(&f);
+        assert_eq!(groups.len(), 1);
+        assert_eq!(groups[0].fused.len(), 2);
+    }
+
+    #[test]
+    fn multi_use_value_blocks_fusion() {
+        let mut b = FuncBuilder::new("f");
+        let x = b.arg(t(&[8, 8]));
+        let w = b.arg(t(&[8, 8]));
+        let m = b.xpu(XpuOp::MatMul, &[x, w], Attrs::new()).unwrap();
+        // `m` used twice: relu cannot be folded into the matmul epilogue,
+        // but add still chains onto relu through `r` (single use).
+        let r = b.xpu(XpuOp::Relu, &[m], Attrs::new()).unwrap();
+        let s = b.xpu(XpuOp::Add, &[m, r], Attrs::new()).unwrap();
+        let f = b.ret(&[s]).unwrap();
+        let groups = fuse(&f);
+        assert_eq!(groups.len(), 2, "matmul separate, relu+add chained: {groups:?}");
+        assert!(groups[0].fused.is_empty(), "matmul must not absorb relu");
+        assert_eq!(groups[1].fused.len(), 1);
+    }
+
+    #[test]
+    fn chain_of_elementwise_forms_one_group() {
+        let mut b = FuncBuilder::new("f");
+        let x = b.arg(t(&[128]));
+        let a = b.xpu(XpuOp::Relu, &[x], Attrs::new()).unwrap();
+        let c = b.xpu(XpuOp::Exp, &[a], Attrs::new()).unwrap();
+        let d = b.xpu(XpuOp::Neg, &[c], Attrs::new()).unwrap();
+        let f = b.ret(&[d]).unwrap();
+        let groups = fuse(&f);
+        assert_eq!(groups.len(), 1);
+        assert_eq!(groups[0].fused.len(), 2);
+    }
+
+    #[test]
+    fn consts_and_reshapes_generate_no_groups() {
+        let mut b = FuncBuilder::new("f");
+        let x = b.arg(t(&[2, 3, 4]));
+        let r = b
+            .xpu(
+                XpuOp::Reshape,
+                &[x],
+                Attrs::new().with("shape", crate::mlir::Attr::IntArray(vec![6, 4])),
+            )
+            .unwrap();
+        let f = b.ret(&[r]).unwrap();
+        assert!(fuse(&f).is_empty());
+    }
+
+    #[test]
+    fn function_args_do_not_open_groups() {
+        let mut b = FuncBuilder::new("f");
+        let x = b.arg(t(&[64]));
+        let y = b.arg(t(&[64]));
+        let s = b.xpu(XpuOp::Add, &[x, y], Attrs::new()).unwrap();
+        let f = b.ret(&[s]).unwrap();
+        let groups = fuse(&f);
+        assert_eq!(groups.len(), 1);
+        assert!(groups[0].fused.is_empty());
+    }
+}

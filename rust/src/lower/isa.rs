@@ -1,0 +1,263 @@
+//! The `xpu-isa`: the low-level instruction set our DL-compiler emits and
+//! the accelerator simulator executes.
+//!
+//! The machine is modeled after contemporary AI accelerators (and the
+//! paper's unnamed Intel part): a 16-lane (f32) vector ALU, a 32×32
+//! systolic MXU, an SFU for transcendentals, an LSU moving vectors between
+//! scratchpad and vector registers, and DMA engines for HBM↔scratchpad.
+//!
+//! Code is organized as [`Segment`]s: the instruction window of one
+//! steady-state iteration of an innermost tiled loop, plus its trip count.
+//! This keeps ground-truth generation O(ops), not O(elements), while
+//! preserving the quantities the paper labels with (register pressure is a
+//! property of the window; cycles/utilization scale with trips).
+
+use std::fmt;
+
+/// Virtual vector register. `width` is how many physical vector registers
+/// it occupies (an MXU accumulator tile spans several).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct VReg {
+    pub id: u32,
+    pub width: u8,
+}
+
+impl fmt::Display for VReg {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if self.width > 1 {
+            write!(f, "v{}:{}", self.id, self.width)
+        } else {
+            write!(f, "v{}", self.id)
+        }
+    }
+}
+
+/// Memory space an access touches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mem {
+    /// On-chip SW-managed scratchpad (fast, DMA-filled).
+    Scratch,
+    /// Off-chip HBM (slow, high latency).
+    Hbm,
+}
+
+/// Vector-ALU opcodes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VArith {
+    Add,
+    Sub,
+    Mul,
+    Max,
+    Min,
+    /// Broadcast-immediate / move (register shuffle class).
+    Mov,
+}
+
+/// SFU opcodes (transcendentals + division live here, like real VPUs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SfuOp {
+    Div,
+    Exp,
+    Tanh,
+    Erf,
+    Sqrt,
+    Rsqrt,
+    Sigmoid,
+    Gelu,
+}
+
+/// One machine instruction.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Instr {
+    /// Load a vector register from memory.
+    VLoad { dst: VReg, mem: Mem, strided: bool },
+    /// Store a vector register to memory.
+    VStore { src: VReg, mem: Mem, strided: bool },
+    /// Vector-ALU op. `b == None` for unary moves etc.
+    VOp { op: VArith, dst: VReg, a: VReg, b: Option<VReg> },
+    /// SFU op (always unary except Div which takes two).
+    Sfu { op: SfuOp, dst: VReg, a: VReg, b: Option<VReg> },
+    /// MXU tile multiply-accumulate: `acc += a @ b`. Reads and writes acc.
+    Macc { acc: VReg, a: VReg, b: VReg },
+    /// Spill fill/sink inserted by the register allocator.
+    SpillLoad { dst: VReg },
+    SpillStore { src: VReg },
+}
+
+impl Instr {
+    /// Registers read by this instruction.
+    pub fn uses(&self) -> Vec<VReg> {
+        match self {
+            Instr::VLoad { .. } | Instr::SpillLoad { .. } => vec![],
+            Instr::VStore { src, .. } | Instr::SpillStore { src } => vec![*src],
+            Instr::VOp { a, b, .. } | Instr::Sfu { a, b, .. } => {
+                let mut v = vec![*a];
+                if let Some(b) = b {
+                    v.push(*b);
+                }
+                v
+            }
+            Instr::Macc { acc, a, b } => vec![*acc, *a, *b],
+        }
+    }
+
+    /// Register written by this instruction (if any).
+    pub fn def(&self) -> Option<VReg> {
+        match self {
+            Instr::VLoad { dst, .. } | Instr::SpillLoad { dst } => Some(*dst),
+            Instr::VOp { dst, .. } | Instr::Sfu { dst, .. } => Some(*dst),
+            Instr::Macc { acc, .. } => Some(*acc),
+            Instr::VStore { .. } | Instr::SpillStore { .. } => None,
+        }
+    }
+
+    /// Assembly-ish rendering for debug dumps and the affine-level corpus.
+    pub fn render(&self) -> String {
+        match self {
+            Instr::VLoad { dst, mem, strided } => {
+                format!("vload{} {dst}, [{}]", if *strided { ".s" } else { "" }, mem_name(*mem))
+            }
+            Instr::VStore { src, mem, strided } => {
+                format!("vstore{} {src}, [{}]", if *strided { ".s" } else { "" }, mem_name(*mem))
+            }
+            Instr::VOp { op, dst, a, b } => match b {
+                Some(b) => format!("v{op:?} {dst}, {a}, {b}").to_lowercase(),
+                None => format!("v{op:?} {dst}, {a}").to_lowercase(),
+            },
+            Instr::Sfu { op, dst, a, b } => match b {
+                Some(b) => format!("sfu.{op:?} {dst}, {a}, {b}").to_lowercase(),
+                None => format!("sfu.{op:?} {dst}, {a}").to_lowercase(),
+            },
+            Instr::Macc { acc, a, b } => format!("mxu.macc {acc}, {a}, {b}"),
+            Instr::SpillLoad { dst } => format!("spill.ld {dst}"),
+            Instr::SpillStore { src } => format!("spill.st {src}"),
+        }
+    }
+}
+
+fn mem_name(m: Mem) -> &'static str {
+    match m {
+        Mem::Scratch => "spad",
+        Mem::Hbm => "hbm",
+    }
+}
+
+/// One steady-state loop body and how many times it runs.
+#[derive(Debug, Clone)]
+pub struct Segment {
+    /// Human label for dumps ("matmul %3 inner", "ew-chain %7").
+    pub label: String,
+    pub instrs: Vec<Instr>,
+    pub trips: u64,
+    /// Registers that stay live across all trips of this segment
+    /// (accumulators, double-buffer residents).
+    pub loop_carried: Vec<VReg>,
+}
+
+impl Segment {
+    pub fn new(label: impl Into<String>, trips: u64) -> Self {
+        Segment { label: label.into(), instrs: Vec::new(), trips: trips.max(1), loop_carried: Vec::new() }
+    }
+}
+
+/// A compiled kernel: the segment list plus static counters the lowering
+/// pipeline gathers on the way.
+#[derive(Debug, Clone, Default)]
+pub struct Program {
+    pub segments: Vec<Segment>,
+    /// Bytes DMA'd HBM→scratchpad for inputs/weights (per full run).
+    pub dma_in_bytes: u64,
+    /// Bytes DMA'd scratchpad→HBM for outputs.
+    pub dma_out_bytes: u64,
+}
+
+impl Program {
+    /// Total dynamic instruction count (windows × trips).
+    pub fn dyn_instrs(&self) -> u64 {
+        self.segments.iter().map(|s| s.instrs.len() as u64 * s.trips).sum()
+    }
+
+    /// Total static (window) instruction count.
+    pub fn static_instrs(&self) -> usize {
+        self.segments.iter().map(|s| s.instrs.len()).sum()
+    }
+
+    /// Render the whole program for debugging / the ISA-level corpus.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for seg in &self.segments {
+            out.push_str(&format!("; {} (x{})\n", seg.label, seg.trips));
+            for i in &seg.instrs {
+                out.push_str("  ");
+                out.push_str(&i.render());
+                out.push('\n');
+            }
+        }
+        out
+    }
+}
+
+/// Fresh-register source shared across the codegen of one function.
+#[derive(Debug, Default)]
+pub struct RegAlloc {
+    next: u32,
+}
+
+impl RegAlloc {
+    pub fn fresh(&mut self, width: u8) -> VReg {
+        let r = VReg { id: self.next, width };
+        self.next += 1;
+        r
+    }
+
+    pub fn count(&self) -> u32 {
+        self.next
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uses_and_defs() {
+        let a = VReg { id: 0, width: 1 };
+        let b = VReg { id: 1, width: 1 };
+        let c = VReg { id: 2, width: 1 };
+        let i = Instr::VOp { op: VArith::Add, dst: c, a, b: Some(b) };
+        assert_eq!(i.uses(), vec![a, b]);
+        assert_eq!(i.def(), Some(c));
+
+        let st = Instr::VStore { src: c, mem: Mem::Scratch, strided: false };
+        assert_eq!(st.uses(), vec![c]);
+        assert_eq!(st.def(), None);
+
+        let acc = VReg { id: 3, width: 4 };
+        let m = Instr::Macc { acc, a, b };
+        assert!(m.uses().contains(&acc));
+        assert_eq!(m.def(), Some(acc));
+    }
+
+    #[test]
+    fn dyn_instr_scaling() {
+        let mut p = Program::default();
+        let mut seg = Segment::new("x", 10);
+        let mut ra = RegAlloc::default();
+        let r = ra.fresh(1);
+        seg.instrs.push(Instr::VLoad { dst: r, mem: Mem::Scratch, strided: false });
+        seg.instrs.push(Instr::VStore { src: r, mem: Mem::Scratch, strided: false });
+        p.segments.push(seg);
+        assert_eq!(p.dyn_instrs(), 20);
+        assert_eq!(p.static_instrs(), 2);
+    }
+
+    #[test]
+    fn render_smoke() {
+        let mut ra = RegAlloc::default();
+        let r = ra.fresh(1);
+        let s = ra.fresh(4);
+        let text = Instr::VLoad { dst: r, mem: Mem::Hbm, strided: true }.render();
+        assert_eq!(text, "vload.s v0, [hbm]");
+        assert_eq!(Instr::SpillStore { src: s }.render(), "spill.st v1:4");
+    }
+}

@@ -1,0 +1,18 @@
+//! The DL-compiler lowering pipeline: `xpu` dialect → fusion → tiled
+//! loops → `xpu-isa`, plus register allocation analysis and a lowering
+//! to the `affine` dialect for the paper's lower-level-IR experiments.
+//!
+//! This is the substrate that plays the role of Intel's in-house
+//! DL-compiler: it turns every corpus graph into machine-level code whose
+//! measured characteristics become the training labels.
+
+pub mod affine;
+pub mod codegen;
+pub mod fusion;
+pub mod isa;
+pub mod regalloc;
+
+pub use codegen::{lower, CodegenOpts};
+pub use fusion::{fuse, Group};
+pub use isa::{Instr, Mem, Program, Segment, SfuOp, VArith, VReg};
+pub use regalloc::{analyze, apply_spills, RegReport, VREG_CAPACITY};

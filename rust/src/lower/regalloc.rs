@@ -1,0 +1,223 @@
+//! Register allocation analysis: live intervals + linear-scan-style
+//! pressure measurement over the segment stream, and spill insertion when
+//! demand exceeds the physical vector register file.
+//!
+//! The paper's first target variable — *registerpressure*, "the number of
+//! registers that the snippet of code will consume" — is computed here as
+//! the peak sum of live virtual-register widths.
+
+use super::isa::{Instr, Program, VReg};
+use std::collections::HashMap;
+
+/// Result of the allocation analysis.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RegReport {
+    /// Peak live register demand (physical-register units).
+    pub max_live: u32,
+    /// Index of the segment where the peak occurs.
+    pub peak_segment: usize,
+    /// Registers spilled (demand beyond `capacity`), 0 if it fits.
+    pub spilled: u32,
+    /// Physical register file size used for the spill decision.
+    pub capacity: u32,
+}
+
+/// Physical vector register file size of the modeled xPU.
+pub const VREG_CAPACITY: u32 = 64;
+
+#[derive(Debug, Clone, Copy)]
+struct Interval {
+    start: usize,
+    end: usize,
+    width: u32,
+}
+
+/// Compute live intervals over the flattened instruction stream.
+/// Loop-carried registers are live across their whole segment.
+fn intervals(prog: &Program) -> HashMap<u32, Interval> {
+    let mut iv: HashMap<u32, Interval> = HashMap::new();
+    let mut pos = 0usize;
+    for seg in &prog.segments {
+        let seg_start = pos;
+        let seg_end = pos + seg.instrs.len().saturating_sub(1);
+        for instr in &seg.instrs {
+            let mut touch = |r: VReg| {
+                iv.entry(r.id)
+                    .and_modify(|i| {
+                        i.start = i.start.min(pos);
+                        i.end = i.end.max(pos);
+                    })
+                    .or_insert(Interval { start: pos, end: pos, width: r.width as u32 });
+            };
+            for u in instr.uses() {
+                touch(u);
+            }
+            if let Some(d) = instr.def() {
+                touch(d);
+            }
+            pos += 1;
+        }
+        for &r in &seg.loop_carried {
+            iv.entry(r.id)
+                .and_modify(|i| {
+                    i.start = i.start.min(seg_start);
+                    i.end = i.end.max(seg_end);
+                })
+                .or_insert(Interval { start: seg_start, end: seg_end, width: r.width as u32 });
+        }
+    }
+    iv
+}
+
+/// Measure peak register pressure (and where it occurs).
+pub fn analyze(prog: &Program) -> RegReport {
+    let iv = intervals(prog);
+    let total_len: usize = prog.segments.iter().map(|s| s.instrs.len()).sum();
+    if total_len == 0 || iv.is_empty() {
+        return RegReport { max_live: 0, peak_segment: 0, spilled: 0, capacity: VREG_CAPACITY };
+    }
+    // Sweep: delta array over positions.
+    let mut delta = vec![0i64; total_len + 1];
+    for i in iv.values() {
+        delta[i.start] += i.width as i64;
+        delta[i.end + 1] -= i.width as i64;
+    }
+    let mut live = 0i64;
+    let mut max_live = 0i64;
+    let mut peak_pos = 0usize;
+    for (p, d) in delta.iter().enumerate().take(total_len) {
+        live += d;
+        if live > max_live {
+            max_live = live;
+            peak_pos = p;
+        }
+    }
+    // Locate the peak's segment.
+    let mut peak_segment = 0;
+    let mut acc = 0usize;
+    for (si, seg) in prog.segments.iter().enumerate() {
+        if peak_pos < acc + seg.instrs.len() {
+            peak_segment = si;
+            break;
+        }
+        acc += seg.instrs.len();
+    }
+    let max_live = max_live as u32;
+    let spilled = max_live.saturating_sub(VREG_CAPACITY);
+    RegReport { max_live, peak_segment, spilled, capacity: VREG_CAPACITY }
+}
+
+/// Insert spill traffic into the peak segment when demand exceeds the
+/// register file: each spilled register unit costs a store + reload per
+/// trip of that segment.
+pub fn apply_spills(prog: &mut Program, report: &RegReport) {
+    if report.spilled == 0 || prog.segments.is_empty() {
+        return;
+    }
+    let idx = report.peak_segment.min(prog.segments.len() - 1);
+    let seg = &mut prog.segments[idx];
+    for k in 0..report.spilled {
+        // Spill slots reuse high vreg ids; width 1 each.
+        let r = VReg { id: u32::MAX - k, width: 1 };
+        seg.instrs.insert(0, Instr::SpillStore { src: r });
+        seg.instrs.push(Instr::SpillLoad { dst: r });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lower::isa::{Mem, RegAlloc, Segment, VArith};
+
+    fn load(ra: &mut RegAlloc) -> (VReg, Instr) {
+        let r = ra.fresh(1);
+        (r, Instr::VLoad { dst: r, mem: Mem::Scratch, strided: false })
+    }
+
+    #[test]
+    fn pressure_of_simple_chain() {
+        // load a; load b; c = a+b; store c  → peak 2 (a,b live at add; c
+        // overlaps a,b at the add position → 3).
+        let mut ra = RegAlloc::default();
+        let mut seg = Segment::new("t", 1);
+        let (a, la) = load(&mut ra);
+        let (b, lb) = load(&mut ra);
+        let c = ra.fresh(1);
+        seg.instrs.push(la);
+        seg.instrs.push(lb);
+        seg.instrs.push(Instr::VOp { op: VArith::Add, dst: c, a, b: Some(b) });
+        seg.instrs.push(Instr::VStore { src: c, mem: Mem::Scratch, strided: false });
+        let mut p = Program::default();
+        p.segments.push(seg);
+        let rep = analyze(&p);
+        assert_eq!(rep.max_live, 3);
+        assert_eq!(rep.spilled, 0);
+    }
+
+    #[test]
+    fn wide_registers_count_by_width() {
+        let mut ra = RegAlloc::default();
+        let mut seg = Segment::new("t", 4);
+        let acc = ra.fresh(4);
+        let a = ra.fresh(2);
+        let b = ra.fresh(2);
+        seg.instrs.push(Instr::VLoad { dst: a, mem: Mem::Scratch, strided: false });
+        seg.instrs.push(Instr::VLoad { dst: b, mem: Mem::Scratch, strided: false });
+        seg.instrs.push(Instr::Macc { acc, a, b });
+        seg.loop_carried = vec![acc];
+        let mut p = Program::default();
+        p.segments.push(seg);
+        let rep = analyze(&p);
+        assert_eq!(rep.max_live, 8); // 4 + 2 + 2
+    }
+
+    #[test]
+    fn loop_carried_extends_liveness() {
+        let mut ra = RegAlloc::default();
+        let acc = ra.fresh(1);
+        let mut s1 = Segment::new("s1", 8);
+        let (x, lx) = load(&mut ra);
+        s1.instrs.push(lx);
+        s1.instrs.push(Instr::VOp { op: VArith::Add, dst: acc, a: acc, b: Some(x) });
+        s1.loop_carried = vec![acc];
+        // A second segment that uses acc keeps it live there too.
+        let mut s2 = Segment::new("s2", 1);
+        let y = ra.fresh(1);
+        s2.instrs.push(Instr::VOp { op: VArith::Mul, dst: y, a: acc, b: Some(acc) });
+        s2.instrs.push(Instr::VStore { src: y, mem: Mem::Scratch, strided: false });
+        let mut p = Program::default();
+        p.segments.push(s1);
+        p.segments.push(s2);
+        let rep = analyze(&p);
+        assert!(rep.max_live >= 2);
+    }
+
+    #[test]
+    fn spills_inserted_when_over_capacity() {
+        let mut ra = RegAlloc::default();
+        let mut seg = Segment::new("big", 2);
+        // 70 simultaneously-live regs.
+        let regs: Vec<VReg> = (0..70).map(|_| ra.fresh(1)).collect();
+        for &r in &regs {
+            seg.instrs.push(Instr::VLoad { dst: r, mem: Mem::Scratch, strided: false });
+        }
+        // One op using the first and last keeps everything live in between.
+        let d = ra.fresh(1);
+        seg.instrs.push(Instr::VOp { op: VArith::Add, dst: d, a: regs[0], b: Some(regs[69]) });
+        seg.loop_carried = regs.clone();
+        let mut p = Program::default();
+        p.segments.push(seg);
+        let rep = analyze(&p);
+        assert!(rep.max_live >= 70);
+        assert_eq!(rep.spilled, rep.max_live - VREG_CAPACITY);
+        let before = p.static_instrs();
+        apply_spills(&mut p, &rep);
+        assert_eq!(p.static_instrs(), before + 2 * rep.spilled as usize);
+    }
+
+    #[test]
+    fn empty_program() {
+        let rep = analyze(&Program::default());
+        assert_eq!(rep.max_live, 0);
+    }
+}

@@ -1,0 +1,343 @@
+//! `mlir-cost` — leader binary: dataset generation, training, evaluation,
+//! serving, and one-off prediction for the ML-driven MLIR hardware cost
+//! model.
+//!
+//! Subcommands (run with no args for usage):
+//!   gen-dataset  — build the labeled corpus (graphs → MLIR → ground truth)
+//!   train        — train a model variant via the AOT train_step (PJRT)
+//!   eval         — evaluate a trained bundle; writes metrics JSON
+//!   serve        — start the cost-model TCP service from bundles
+//!   predict      — one-shot prediction for an MLIR file
+//!   ground-truth — compile+simulate an MLIR file (the label path)
+//!   info         — artifact manifest summary
+
+use anyhow::{anyhow, bail, Context, Result};
+use mlir_cost::bundle::Bundle;
+use mlir_cost::coordinator::batcher::BatchPolicy;
+use mlir_cost::coordinator::{server, Service};
+use mlir_cost::dataset::{Dataset, EncodedSet, TargetStats};
+use mlir_cost::json::Json;
+use mlir_cost::runtime::{Manifest, Runtime};
+use mlir_cost::sim::{ground_truth_default, Target};
+use mlir_cost::tokenizer::{Scheme, Vocab};
+use mlir_cost::train::{metrics, TrainConfig, Trainer};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+/// Parse `--key value` style flags into a map; returns (cmd, flags).
+fn parse_flags(args: &[String]) -> Result<(String, HashMap<String, String>)> {
+    let cmd = args.first().cloned().unwrap_or_default();
+    let mut flags = HashMap::new();
+    let mut i = 1;
+    while i < args.len() {
+        let key = args[i]
+            .strip_prefix("--")
+            .ok_or_else(|| anyhow!("expected --flag, got '{}'", args[i]))?;
+        let value = args.get(i + 1).cloned().ok_or_else(|| anyhow!("--{key} needs a value"))?;
+        flags.insert(key.to_string(), value);
+        i += 2;
+    }
+    Ok((cmd, flags))
+}
+
+fn flag<'a>(flags: &'a HashMap<String, String>, key: &str, default: &'a str) -> &'a str {
+    flags.get(key).map(String::as_str).unwrap_or(default)
+}
+
+fn artifacts_dir(flags: &HashMap<String, String>) -> PathBuf {
+    PathBuf::from(flag(flags, "artifacts", "artifacts"))
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let (cmd, flags) = parse_flags(args)?;
+    match cmd.as_str() {
+        "gen-dataset" => gen_dataset(&flags),
+        "train" => train(&flags),
+        "eval" => eval(&flags),
+        "serve" => serve(&flags),
+        "predict" => predict(&flags),
+        "ground-truth" => ground_truth_cmd(&flags),
+        "info" => info(&flags),
+        _ => {
+            eprintln!(
+                "usage: mlir-cost <cmd> [--flag value]...\n\
+                 cmds:\n  \
+                 gen-dataset --count N --augment K --seed S --out-train f --out-test f [--test-frac 0.1]\n  \
+                 train --model conv_ops --target regpressure --scheme ops_only --train f --test f \
+                 --steps N --out bundle_dir [--artifacts dir] [--out-metrics m.json]\n  \
+                 eval --bundle dir --test f [--out metrics.json]\n  \
+                 serve --bundles d1,d2,... --addr 127.0.0.1:7071 [--pallas true]\n  \
+                 predict --bundle dir --file graph.mlir\n  \
+                 ground-truth --file graph.mlir\n  \
+                 info [--artifacts dir]"
+            );
+            bail!("unknown command '{cmd}'");
+        }
+    }
+}
+
+fn gen_dataset(flags: &HashMap<String, String>) -> Result<()> {
+    let count: usize = flag(flags, "count", "2000").parse()?;
+    let augment: usize = flag(flags, "augment", "1").parse()?;
+    let seed: u64 = flag(flags, "seed", "42").parse()?;
+    let test_frac: f64 = flag(flags, "test-frac", "0.1").parse()?;
+    let out_train = PathBuf::from(flag(flags, "out-train", "runs/train.csv"));
+    let out_test = PathBuf::from(flag(flags, "out-test", "runs/test.csv"));
+    if let Some(p) = out_train.parent() {
+        std::fs::create_dir_all(p)?;
+    }
+    let t0 = std::time::Instant::now();
+    let ds = Dataset::generate(seed, count, augment)?;
+    let n = ds.len();
+    let (train, test) = ds.split(seed ^ 0xD5, test_frac);
+    train.save_csv(&out_train)?;
+    test.save_csv(&out_test)?;
+    eprintln!(
+        "generated {n} samples in {:.1}s -> {} train / {} test",
+        t0.elapsed().as_secs_f64(),
+        train.len(),
+        test.len()
+    );
+    Ok(())
+}
+
+struct Encoded {
+    train: EncodedSet,
+    test: EncodedSet,
+    vocab: Vocab,
+    stats: TargetStats,
+    test_truth: Vec<f64>,
+}
+
+fn encode_sets(
+    train_csv: &Path,
+    test_csv: &Path,
+    scheme: Scheme,
+    target: Target,
+    max_len: usize,
+) -> Result<Encoded> {
+    let train = Dataset::load_csv(train_csv)?;
+    let test = Dataset::load_csv(test_csv)?;
+    let streams_tr = train.token_streams(scheme)?;
+    let streams_te = test.token_streams(scheme)?;
+    let vocab = Vocab::build(streams_tr.iter(), 2);
+    let stats = TargetStats::for_dataset(&train, target);
+    let enc_tr = EncodedSet::build(&train, &streams_tr, &vocab, max_len, target, &stats);
+    let enc_te = EncodedSet::build(&test, &streams_te, &vocab, max_len, target, &stats);
+    let test_truth: Vec<f64> = test.samples.iter().map(|s| target.of(&s.labels)).collect();
+    Ok(Encoded { train: enc_tr, test: enc_te, vocab, stats, test_truth })
+}
+
+fn train(flags: &HashMap<String, String>) -> Result<()> {
+    let model = flag(flags, "model", "conv_ops").to_string();
+    let target = Target::parse(flag(flags, "target", "regpressure"))
+        .ok_or_else(|| anyhow!("bad --target"))?;
+    let scheme =
+        Scheme::parse(flag(flags, "scheme", "ops_only")).ok_or_else(|| anyhow!("bad --scheme"))?;
+    let steps: usize = flag(flags, "steps", "300").parse()?;
+    let out = PathBuf::from(flag(flags, "out", "runs/bundle"));
+    let adir = artifacts_dir(flags);
+
+    let rt = Runtime::cpu()?;
+    let manifest = Manifest::load(&adir)?;
+    let mm = manifest.model(&model)?;
+    let max_len = mm.max_len;
+    let enc = encode_sets(
+        Path::new(flag(flags, "train", "runs/train.csv")),
+        Path::new(flag(flags, "test", "runs/test.csv")),
+        scheme,
+        target,
+        max_len,
+    )?;
+    eprintln!(
+        "training {model} on {} ({}; vocab {} tokens, {} train / {} test)",
+        target.name(),
+        scheme.name(),
+        enc.vocab.len(),
+        enc.train.n,
+        enc.test.n
+    );
+    let mut trainer = Trainer::new(&rt, &manifest, &model)?;
+    let cfg = TrainConfig {
+        model: model.clone(),
+        steps,
+        seed: flag(flags, "seed", "0").parse()?,
+        eval_every: flag(flags, "eval-every", "200").parse()?,
+        log_every: flag(flags, "log-every", "50").parse()?,
+    };
+    let report = trainer.run(&cfg, &enc.train, &enc.test)?;
+    eprintln!("trained at {:.2} steps/s", report.steps_per_sec);
+
+    let bundle = Bundle {
+        model: model.clone(),
+        target,
+        scheme,
+        max_len,
+        vocab: enc.vocab,
+        stats: enc.stats,
+        params: trainer.params().to_vec(),
+    };
+    bundle.save(&out, &manifest)?;
+    eprintln!("bundle saved to {out:?}");
+
+    // Final metrics.
+    let preds_norm = trainer.predict_set(&enc.test)?;
+    let out_metrics = flags.get("out-metrics").map(PathBuf::from);
+    print_metrics(
+        &model,
+        target,
+        &bundle.stats,
+        &preds_norm,
+        &enc.test_truth,
+        report.steps_per_sec,
+        out_metrics.as_deref(),
+    )?;
+    Ok(())
+}
+
+#[allow(clippy::too_many_arguments)]
+fn print_metrics(
+    model: &str,
+    target: Target,
+    stats: &TargetStats,
+    preds_norm: &[f64],
+    truth: &[f64],
+    steps_per_sec: f64,
+    out: Option<&Path>,
+) -> Result<()> {
+    let preds: Vec<f64> = preds_norm.iter().map(|&p| stats.denormalize(p)).collect();
+    let rmse = metrics::rmse(&preds, truth);
+    let rmse_pct = metrics::rmse_pct(&preds, truth, stats.range());
+    let mae = metrics::mae(&preds, truth);
+    let exact = metrics::pct_exact_rounded(&preds, truth);
+    let hist = metrics::abs_error_histogram(&preds, truth, 8);
+    println!(
+        "model={model} target={} rmse={rmse:.3} rmse_pct={rmse_pct:.2}% mae={mae:.3} exact={exact:.1}%",
+        target.name()
+    );
+    let doc = Json::obj()
+        .with("model", Json::str(model))
+        .with("target", Json::str(target.name()))
+        .with("rmse", Json::num(rmse))
+        .with("rmse_pct_of_range", Json::num(rmse_pct))
+        .with("mae", Json::num(mae))
+        .with("pct_exact", Json::num(exact))
+        .with("steps_per_sec", Json::num(steps_per_sec))
+        .with("n_test", Json::num(truth.len() as f64))
+        .with(
+            "abs_error_histogram",
+            Json::Arr(hist.iter().map(|&h| Json::num(h as f64)).collect()),
+        )
+        .with("target_range", Json::num(stats.range()));
+    if let Some(path) = out {
+        if let Some(p) = path.parent() {
+            std::fs::create_dir_all(p)?;
+        }
+        std::fs::write(path, doc.to_string())?;
+        eprintln!("metrics written to {path:?}");
+    }
+    Ok(())
+}
+
+fn eval(flags: &HashMap<String, String>) -> Result<()> {
+    let adir = artifacts_dir(flags);
+    let bundle_dir = PathBuf::from(flag(flags, "bundle", "runs/bundle"));
+    let rt = Runtime::cpu()?;
+    let manifest = Manifest::load(&adir)?;
+    let bundle = Bundle::load(&bundle_dir, &manifest)?;
+    let test = Dataset::load_csv(Path::new(flag(flags, "test", "runs/test.csv")))?;
+    let streams = test.token_streams(bundle.scheme)?;
+    let enc = EncodedSet::build(
+        &test,
+        &streams,
+        &bundle.vocab,
+        bundle.max_len,
+        bundle.target,
+        &bundle.stats,
+    );
+    let truth: Vec<f64> = test.samples.iter().map(|s| bundle.target.of(&s.labels)).collect();
+
+    let mut trainer = Trainer::new(&rt, &manifest, &bundle.model)?;
+    trainer.set_params(bundle.params.clone())?;
+    let preds_norm = trainer.predict_set(&enc)?;
+    let out = flags.get("out").map(PathBuf::from);
+    print_metrics(&bundle.model, bundle.target, &bundle.stats, &preds_norm, &truth, 0.0, out.as_deref())
+}
+
+fn serve(flags: &HashMap<String, String>) -> Result<()> {
+    let adir = artifacts_dir(flags);
+    let manifest = Arc::new(Manifest::load(&adir)?);
+    let bundle_dirs = flag(flags, "bundles", "runs/bundle");
+    let use_pallas = flag(flags, "pallas", "true") == "true";
+    let mut bundles = Vec::new();
+    for dir in bundle_dirs.split(',') {
+        bundles.push(Bundle::load(Path::new(dir), &manifest).with_context(|| dir.to_string())?);
+    }
+    let policy = BatchPolicy {
+        max_batch: flag(flags, "max-batch", "32").parse()?,
+        max_wait: std::time::Duration::from_micros(flag(flags, "max-wait-us", "2000").parse()?),
+    };
+    let service = Arc::new(Service::start(manifest, bundles, policy, use_pallas)?);
+    let addr = flag(flags, "addr", "127.0.0.1:7071");
+    let stop = Arc::new(AtomicBool::new(false));
+    server::serve(service, addr, stop)
+}
+
+fn predict(flags: &HashMap<String, String>) -> Result<()> {
+    let adir = artifacts_dir(flags);
+    let manifest = Arc::new(Manifest::load(&adir)?);
+    let bundle = Bundle::load(Path::new(flag(flags, "bundle", "runs/bundle")), &manifest)?;
+    let target = bundle.target;
+    let service = Arc::new(Service::start(
+        manifest,
+        vec![bundle],
+        BatchPolicy { max_batch: 1, max_wait: std::time::Duration::from_micros(100) },
+        true,
+    )?);
+    let text = std::fs::read_to_string(flag(flags, "file", "graph.mlir"))?;
+    let value = service.predict(target, &text)?;
+    println!("{} = {value:.3}", target.name());
+    Ok(())
+}
+
+fn ground_truth_cmd(flags: &HashMap<String, String>) -> Result<()> {
+    let text = std::fs::read_to_string(flag(flags, "file", "graph.mlir"))?;
+    let func = mlir_cost::mlir::parse_function(&text)?;
+    mlir_cost::mlir::verify_function(&func)?;
+    let labels = ground_truth_default(&func)?;
+    println!(
+        "regpressure={} xpuutil={:.2}% cycles={} spills={} dyn_instrs={}",
+        labels.regpressure, labels.xpu_util, labels.cycles, labels.spills, labels.dyn_instrs
+    );
+    Ok(())
+}
+
+fn info(flags: &HashMap<String, String>) -> Result<()> {
+    let adir = artifacts_dir(flags);
+    let manifest = Manifest::load(&adir)?;
+    println!("artifacts: {:?} (vocab capacity {})", manifest.dir, manifest.vocab_size);
+    for (name, m) in &manifest.models {
+        println!(
+            "  {name:<12} max_len {:>4}  {:>9} params in {} tensors  files: {}",
+            m.max_len,
+            m.total_params(),
+            m.n_params(),
+            m.files.len()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,180 @@
+//! Operation attributes (the `{...}` dictionary on an MLIR op).
+
+use std::fmt;
+
+/// Attribute value. Covers everything the `xpu`/`affine` subset needs.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Attr {
+    Int(i64),
+    Float(f64),
+    Str(String),
+    IntArray(Vec<i64>),
+    Bool(bool),
+}
+
+impl Attr {
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Attr::Int(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_int_array(&self) -> Option<&[i64]> {
+        match self {
+            Attr::IntArray(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Attr::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Attr::Float(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Attr::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Attr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Attr::Int(v) => write!(f, "{v}"),
+            // Always keep a decimal point so the parser can distinguish
+            // floats from ints on the way back in.
+            Attr::Float(v) => {
+                if v.fract() == 0.0 && v.is_finite() {
+                    write!(f, "{v:.1}")
+                } else {
+                    write!(f, "{v}")
+                }
+            }
+            Attr::Str(s) => write!(f, "\"{s}\""),
+            Attr::IntArray(v) => {
+                write!(f, "[")?;
+                for (i, x) in v.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{x}")?;
+                }
+                write!(f, "]")
+            }
+            Attr::Bool(b) => write!(f, "{b}"),
+        }
+    }
+}
+
+/// Ordered attribute dictionary. Order is preserved so printing is
+/// deterministic (important: the tokenizer consumes printed text).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Attrs(pub Vec<(String, Attr)>);
+
+impl Attrs {
+    pub fn new() -> Self {
+        Attrs(Vec::new())
+    }
+
+    pub fn with(mut self, key: &str, value: Attr) -> Self {
+        self.set(key, value);
+        self
+    }
+
+    /// Insert or replace.
+    pub fn set(&mut self, key: &str, value: Attr) {
+        if let Some(slot) = self.0.iter_mut().find(|(k, _)| k == key) {
+            slot.1 = value;
+        } else {
+            self.0.push((key.to_string(), value));
+        }
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Attr> {
+        self.0.iter().find(|(k, _)| k == key).map(|(_, v)| v)
+    }
+
+    pub fn get_int(&self, key: &str) -> Option<i64> {
+        self.get(key).and_then(Attr::as_int)
+    }
+
+    pub fn get_int_array(&self, key: &str) -> Option<&[i64]> {
+        self.get(key).and_then(Attr::as_int_array)
+    }
+
+    pub fn get_str(&self, key: &str) -> Option<&str> {
+        self.get(key).and_then(Attr::as_str)
+    }
+
+    pub fn get_float(&self, key: &str) -> Option<f64> {
+        self.get(key).and_then(Attr::as_float)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.0.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.0.len()
+    }
+}
+
+impl fmt::Display for Attrs {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{{")?;
+        for (i, (k, v)) in self.0.iter().enumerate() {
+            if i > 0 {
+                write!(f, ", ")?;
+            }
+            write!(f, "{k} = {v}")?;
+        }
+        write!(f, "}}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn attrs_set_get() {
+        let mut a = Attrs::new();
+        a.set("strides", Attr::IntArray(vec![2, 2]));
+        a.set("axis", Attr::Int(1));
+        a.set("axis", Attr::Int(3)); // replace
+        assert_eq!(a.get_int("axis"), Some(3));
+        assert_eq!(a.get_int_array("strides"), Some(&[2i64, 2][..]));
+        assert_eq!(a.len(), 2);
+    }
+
+    #[test]
+    fn attrs_display() {
+        let a = Attrs::new()
+            .with("pad", Attr::IntArray(vec![1, 1]))
+            .with("name", Attr::Str("conv1".into()))
+            .with("eps", Attr::Float(1e-5))
+            .with("keep", Attr::Bool(true));
+        assert_eq!(
+            a.to_string(),
+            "{pad = [1, 1], name = \"conv1\", eps = 0.00001, keep = true}"
+        );
+    }
+
+    #[test]
+    fn float_display_keeps_point() {
+        assert_eq!(Attr::Float(2.0).to_string(), "2.0");
+        assert_eq!(Attr::Float(0.5).to_string(), "0.5");
+    }
+}

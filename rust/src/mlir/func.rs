@@ -1,0 +1,477 @@
+//! Core IR structures: values, operations, blocks, functions, modules —
+//! plus a type-inferring builder used by the graph generators and the
+//! lowering pipeline.
+//!
+//! Values are in SSA form (paper §2: "the defs are in SSA form"): each
+//! `ValueId` is defined exactly once, either as a function/block argument
+//! or as an op result.
+
+use super::attr::Attrs;
+use super::ops::{AffineOp, ArithOp, MemRefOp, OpKind, XpuOp};
+use super::types::{DType, TensorType, Type};
+use anyhow::{anyhow, bail, ensure, Result};
+
+/// Index into a function's value table.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ValueId(pub u32);
+
+/// One operation. `region` is `Some` only for `affine.for`.
+#[derive(Debug, Clone)]
+pub struct Operation {
+    pub kind: OpKind,
+    pub operands: Vec<ValueId>,
+    pub results: Vec<ValueId>,
+    pub attrs: Attrs,
+    pub region: Option<Block>,
+}
+
+/// A straight-line list of operations. `args` holds block arguments (the
+/// induction variable for an `affine.for` body).
+#[derive(Debug, Clone, Default)]
+pub struct Block {
+    pub args: Vec<ValueId>,
+    pub ops: Vec<Operation>,
+}
+
+impl Block {
+    /// Recursive op count (regions included).
+    pub fn num_ops(&self) -> usize {
+        self.ops
+            .iter()
+            .map(|op| 1 + op.region.as_ref().map_or(0, Block::num_ops))
+            .sum()
+    }
+}
+
+/// A function: the unit the paper's cost model scores (one dataflow
+/// (sub)graph per function).
+#[derive(Debug, Clone)]
+pub struct Function {
+    pub name: String,
+    /// Types of all values, indexed by `ValueId`.
+    values: Vec<Type>,
+    /// Printable names for all values (`arg0`, `0`, `1`, ...).
+    names: Vec<String>,
+    /// Number of leading values that are function arguments.
+    num_args: usize,
+    pub ret: Vec<ValueId>,
+    pub body: Block,
+}
+
+impl Function {
+    pub fn num_args(&self) -> usize {
+        self.num_args
+    }
+
+    pub fn arg_ids(&self) -> impl Iterator<Item = ValueId> {
+        (0..self.num_args as u32).map(ValueId)
+    }
+
+    pub fn value_type(&self, id: ValueId) -> &Type {
+        &self.values[id.0 as usize]
+    }
+
+    pub fn value_name(&self, id: ValueId) -> &str {
+        &self.names[id.0 as usize]
+    }
+
+    pub fn num_values(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn arg_types(&self) -> Vec<&Type> {
+        (0..self.num_args).map(|i| &self.values[i]).collect()
+    }
+
+    pub fn ret_types(&self) -> Vec<&Type> {
+        self.ret.iter().map(|&id| self.value_type(id)).collect()
+    }
+
+    /// Recursive op count, excluding the terminating `func.return`.
+    pub fn num_ops(&self) -> usize {
+        self.body.num_ops().saturating_sub(1)
+    }
+
+    /// Depth-first walk over all operations (outer before region body).
+    pub fn walk<F: FnMut(&Operation, usize)>(&self, f: &mut F) {
+        fn go<F: FnMut(&Operation, usize)>(block: &Block, depth: usize, f: &mut F) {
+            for op in &block.ops {
+                f(op, depth);
+                if let Some(region) = &op.region {
+                    go(region, depth + 1, f);
+                }
+            }
+        }
+        go(&self.body, 0, f);
+    }
+
+    /// The flat sequence of `xpu` ops (paper's "ops-only" view source).
+    pub fn xpu_ops(&self) -> Vec<XpuOp> {
+        let mut out = Vec::new();
+        self.walk(&mut |op, _| {
+            if let OpKind::Xpu(x) = op.kind {
+                out.push(x);
+            }
+        });
+        out
+    }
+
+    /// Maximum loop-nest depth (0 for a pure dataflow function).
+    pub fn max_loop_depth(&self) -> usize {
+        let mut max = 0usize;
+        self.walk(&mut |op, depth| {
+            if matches!(op.kind, OpKind::Affine(AffineOp::For)) {
+                max = max.max(depth + 1);
+            }
+        });
+        max
+    }
+}
+
+/// A module: a named set of functions (one corpus file).
+#[derive(Debug, Clone, Default)]
+pub struct Module {
+    pub name: String,
+    pub functions: Vec<Function>,
+}
+
+impl Module {
+    pub fn new(name: &str) -> Self {
+        Module { name: name.to_string(), functions: Vec::new() }
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Function> {
+        self.functions.iter().find(|f| f.name == name)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Builder
+// ---------------------------------------------------------------------------
+
+/// Type-inferring SSA function builder.
+///
+/// ```
+/// use mlir_cost::mlir::*;
+/// let mut b = FuncBuilder::new("f");
+/// let x = b.arg(Type::tensor(vec![4, 8], DType::F32));
+/// let w = b.arg(Type::tensor(vec![8, 16], DType::F32));
+/// let y = b.xpu(XpuOp::MatMul, &[x, w], Attrs::new()).unwrap();
+/// let r = b.xpu(XpuOp::Relu, &[y], Attrs::new()).unwrap();
+/// let f = b.ret(&[r]).unwrap();
+/// assert_eq!(f.num_ops(), 2);
+/// ```
+pub struct FuncBuilder {
+    name: String,
+    values: Vec<Type>,
+    names: Vec<String>,
+    num_args: usize,
+    /// Stack of open blocks; `stack[0]` is the function body. Entries above
+    /// it are open `affine.for` bodies, paired with the loop's attrs.
+    stack: Vec<(Block, Option<Attrs>)>,
+    next_num: u32,
+    saw_op: bool,
+}
+
+impl FuncBuilder {
+    pub fn new(name: &str) -> Self {
+        FuncBuilder {
+            name: name.to_string(),
+            values: Vec::new(),
+            names: Vec::new(),
+            num_args: 0,
+            stack: vec![(Block::default(), None)],
+            next_num: 0,
+            saw_op: false,
+        }
+    }
+
+    /// Type of an already-created value (for generators that need to
+    /// propagate shapes while building).
+    pub fn value_type(&self, id: ValueId) -> &Type {
+        &self.values[id.0 as usize]
+    }
+
+    /// Declare a function argument. Must precede all ops.
+    pub fn arg(&mut self, ty: Type) -> ValueId {
+        assert!(!self.saw_op, "arguments must be declared before ops");
+        let id = ValueId(self.values.len() as u32);
+        self.names.push(format!("arg{}", self.num_args));
+        self.values.push(ty);
+        self.num_args += 1;
+        id
+    }
+
+    fn fresh(&mut self, ty: Type) -> ValueId {
+        let id = ValueId(self.values.len() as u32);
+        self.names.push(self.next_num.to_string());
+        self.next_num += 1;
+        self.values.push(ty);
+        id
+    }
+
+    fn check_operands(&self, operands: &[ValueId]) -> Result<()> {
+        for &v in operands {
+            ensure!(
+                (v.0 as usize) < self.values.len(),
+                "operand %{} is not defined",
+                v.0
+            );
+        }
+        Ok(())
+    }
+
+    fn push(&mut self, op: Operation) {
+        self.saw_op = true;
+        self.stack.last_mut().expect("builder has an open block").0.ops.push(op);
+    }
+
+    /// Append an `xpu` op; result type is inferred and verified.
+    pub fn xpu(&mut self, op: XpuOp, operands: &[ValueId], attrs: Attrs) -> Result<ValueId> {
+        self.check_operands(operands)?;
+        let operand_types: Vec<Type> =
+            operands.iter().map(|&v| self.values[v.0 as usize].clone()).collect();
+        let result_ty = op.infer_result(&operand_types, &attrs)?;
+        let result = self.fresh(result_ty);
+        self.push(Operation {
+            kind: OpKind::Xpu(op),
+            operands: operands.to_vec(),
+            results: vec![result],
+            attrs,
+            region: None,
+        });
+        Ok(result)
+    }
+
+    /// Append an `arith` op over scalars.
+    pub fn arith(&mut self, op: ArithOp, operands: &[ValueId], attrs: Attrs) -> Result<ValueId> {
+        self.check_operands(operands)?;
+        let ty = if op == ArithOp::Constant {
+            ensure!(operands.is_empty(), "arith.constant takes no operands");
+            let dtype = attrs
+                .get_str("dtype")
+                .and_then(DType::parse)
+                .unwrap_or(DType::F32);
+            Type::Scalar(dtype)
+        } else {
+            let first = operands
+                .first()
+                .ok_or_else(|| anyhow!("arith.{} needs operands", op.mnemonic()))?;
+            let ty = self.values[first.0 as usize].clone();
+            ensure!(
+                matches!(ty, Type::Scalar(_)),
+                "arith.{} operands must be scalar, got {ty}",
+                op.mnemonic()
+            );
+            ty
+        };
+        let result = self.fresh(ty);
+        self.push(Operation {
+            kind: OpKind::Arith(op),
+            operands: operands.to_vec(),
+            results: vec![result],
+            attrs,
+            region: None,
+        });
+        Ok(result)
+    }
+
+    /// Allocate a scratchpad buffer (`memref.alloc`).
+    pub fn alloc(&mut self, shape: Vec<i64>, dtype: DType) -> ValueId {
+        let ty = Type::MemRef(TensorType::new(shape, dtype));
+        let result = self.fresh(ty);
+        self.push(Operation {
+            kind: OpKind::MemRef(MemRefOp::Alloc),
+            operands: vec![],
+            results: vec![result],
+            attrs: Attrs::new(),
+            region: None,
+        });
+        result
+    }
+
+    /// `affine.load %m[%i...]` → scalar.
+    pub fn load(&mut self, memref: ValueId, indices: &[ValueId]) -> Result<ValueId> {
+        self.check_operands(&[memref])?;
+        self.check_operands(indices)?;
+        let dtype = self.values[memref.0 as usize]
+            .as_memref()
+            .ok_or_else(|| anyhow!("affine.load: operand must be a memref"))?
+            .dtype;
+        let result = self.fresh(Type::Scalar(dtype));
+        let mut operands = vec![memref];
+        operands.extend_from_slice(indices);
+        self.push(Operation {
+            kind: OpKind::Affine(AffineOp::Load),
+            operands,
+            results: vec![result],
+            attrs: Attrs::new(),
+            region: None,
+        });
+        Ok(result)
+    }
+
+    /// `affine.store %v, %m[%i...]`.
+    pub fn store(&mut self, value: ValueId, memref: ValueId, indices: &[ValueId]) -> Result<()> {
+        self.check_operands(&[value, memref])?;
+        self.check_operands(indices)?;
+        ensure!(
+            self.values[memref.0 as usize].as_memref().is_some(),
+            "affine.store: target must be a memref"
+        );
+        let mut operands = vec![value, memref];
+        operands.extend_from_slice(indices);
+        self.push(Operation {
+            kind: OpKind::Affine(AffineOp::Store),
+            operands,
+            results: vec![],
+            attrs: Attrs::new(),
+            region: None,
+        });
+        Ok(())
+    }
+
+    /// Open an `affine.for lb..ub step s` body; returns the induction var.
+    /// Must be matched by [`FuncBuilder::end_for`].
+    pub fn begin_for(&mut self, lb: i64, ub: i64, step: i64) -> ValueId {
+        assert!(step > 0, "affine.for step must be positive");
+        self.saw_op = true;
+        let iv = self.fresh(Type::Index);
+        let attrs = Attrs::new()
+            .with("lb", super::attr::Attr::Int(lb))
+            .with("ub", super::attr::Attr::Int(ub))
+            .with("step", super::attr::Attr::Int(step));
+        self.stack.push((Block { args: vec![iv], ops: Vec::new() }, Some(attrs)));
+        iv
+    }
+
+    /// Close the innermost `affine.for`.
+    pub fn end_for(&mut self) -> Result<()> {
+        ensure!(self.stack.len() > 1, "end_for without begin_for");
+        let (mut block, attrs) = self.stack.pop().expect("stack non-empty");
+        // Implicit terminator.
+        if !matches!(block.ops.last().map(|o| o.kind), Some(OpKind::Affine(AffineOp::Yield))) {
+            block.ops.push(Operation {
+                kind: OpKind::Affine(AffineOp::Yield),
+                operands: vec![],
+                results: vec![],
+                attrs: Attrs::new(),
+                region: None,
+            });
+        }
+        self.push(Operation {
+            kind: OpKind::Affine(AffineOp::For),
+            operands: vec![],
+            results: vec![],
+            attrs: attrs.expect("for-block carries attrs"),
+            region: Some(block),
+        });
+        Ok(())
+    }
+
+    /// Terminate with `func.return` and produce the finished function.
+    pub fn ret(mut self, results: &[ValueId]) -> Result<Function> {
+        self.check_operands(results)?;
+        ensure!(self.stack.len() == 1, "unclosed affine.for at function end");
+        self.push(Operation {
+            kind: OpKind::Return,
+            operands: results.to_vec(),
+            results: vec![],
+            attrs: Attrs::new(),
+            region: None,
+        });
+        let (body, _) = self.stack.pop().expect("body block");
+        Ok(Function {
+            name: self.name,
+            values: self.values,
+            names: self.names,
+            num_args: self.num_args,
+            ret: results.to_vec(),
+            body,
+        })
+    }
+}
+
+/// Construct a `Function` from raw parsed pieces (used by the parser,
+/// which has already resolved names to ids).
+pub(crate) fn function_from_parts(
+    name: String,
+    values: Vec<Type>,
+    names: Vec<String>,
+    num_args: usize,
+    ret: Vec<ValueId>,
+    body: Block,
+) -> Result<Function> {
+    if !matches!(body.ops.last().map(|o| o.kind), Some(OpKind::Return)) {
+        bail!("function @{name} does not end in func.return");
+    }
+    Ok(Function { name, values, names, num_args, ret, body })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mlir::attr::Attr;
+
+    #[test]
+    fn build_simple_graph() {
+        let mut b = FuncBuilder::new("mini");
+        let x = b.arg(Type::tensor(vec![4, 8], DType::F32));
+        let w = b.arg(Type::tensor(vec![8, 16], DType::F32));
+        let y = b.xpu(XpuOp::MatMul, &[x, w], Attrs::new()).unwrap();
+        let z = b.xpu(XpuOp::Relu, &[y], Attrs::new()).unwrap();
+        let f = b.ret(&[z]).unwrap();
+        assert_eq!(f.num_args(), 2);
+        assert_eq!(f.num_ops(), 2);
+        assert_eq!(f.value_type(z), &Type::tensor(vec![4, 16], DType::F32));
+        assert_eq!(f.value_name(x), "arg0");
+        assert_eq!(f.value_name(z), "1");
+        assert_eq!(f.xpu_ops(), vec![XpuOp::MatMul, XpuOp::Relu]);
+    }
+
+    #[test]
+    fn builder_rejects_bad_shapes() {
+        let mut b = FuncBuilder::new("bad");
+        let x = b.arg(Type::tensor(vec![4, 8], DType::F32));
+        let w = b.arg(Type::tensor(vec![9, 16], DType::F32));
+        assert!(b.xpu(XpuOp::MatMul, &[x, w], Attrs::new()).is_err());
+    }
+
+    #[test]
+    fn build_loop_nest() {
+        let mut b = FuncBuilder::new("loops");
+        let buf = b.alloc(vec![64, 64], DType::F32);
+        let i = b.begin_for(0, 64, 1);
+        let j = b.begin_for(0, 64, 1);
+        let v = b.load(buf, &[i, j]).unwrap();
+        let c = b
+            .arith(ArithOp::Constant, &[], Attrs::new().with("value", Attr::Float(2.0)))
+            .unwrap();
+        let m = b.arith(ArithOp::MulF, &[v, c], Attrs::new()).unwrap();
+        b.store(m, buf, &[i, j]).unwrap();
+        b.end_for().unwrap();
+        b.end_for().unwrap();
+        let f = b.ret(&[]).unwrap();
+        assert_eq!(f.max_loop_depth(), 2);
+        // alloc + 2 fors + load + const + mul + store + 2 yields = 9 ops
+        assert_eq!(f.num_ops(), 9);
+    }
+
+    #[test]
+    fn unclosed_for_is_error() {
+        let mut b = FuncBuilder::new("oops");
+        b.begin_for(0, 4, 1);
+        assert!(b.ret(&[]).is_err());
+    }
+
+    #[test]
+    fn module_lookup() {
+        let mut b = FuncBuilder::new("f1");
+        let x = b.arg(Type::tensor(vec![2], DType::F32));
+        let f = b.ret(&[x]).unwrap();
+        let mut m = Module::new("test");
+        m.functions.push(f);
+        assert!(m.get("f1").is_some());
+        assert!(m.get("f2").is_none());
+    }
+}

@@ -1,0 +1,26 @@
+//! From-scratch MLIR core for the `xpu` (high-level NN operator) and
+//! `affine`/`arith`/`memref` (loop-level) dialect subset the paper's cost
+//! model consumes.
+//!
+//! - [`types`] — dtypes, tensor/memref/scalar/index types
+//! - [`attr`] — op attribute dictionaries
+//! - [`ops`] — opcode registry + shape inference
+//! - [`func`] — SSA values, operations, blocks, functions, builder
+//! - [`printer`] / [`parser`] — deterministic text round-trip
+//! - [`verifier`] — re-checks parsed IR against the inference rules
+
+pub mod attr;
+pub mod func;
+pub mod ops;
+pub mod parser;
+pub mod printer;
+pub mod types;
+pub mod verifier;
+
+pub use attr::{Attr, Attrs};
+pub use func::{Block, FuncBuilder, Function, Module, Operation, ValueId};
+pub use ops::{AffineOp, ArithOp, MemRefOp, OpKind, XpuOp};
+pub use parser::{parse_function, parse_module};
+pub use printer::{print_function, print_module};
+pub use types::{DType, TensorType, Type};
+pub use verifier::{verify_function, verify_module};

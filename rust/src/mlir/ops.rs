@@ -1,0 +1,816 @@
+//! Opcode registry for the `xpu`, `affine`, `arith` and `memref` dialect
+//! subset, with per-op shape/type inference.
+//!
+//! The `xpu` dialect is the paper's high-level dialect: each op is a whole
+//! neural-net operator on tensors (`xpu.mult`, `xpu.conv2d`, ...). The
+//! `affine`/`arith`/`memref` subset is what our DL-compiler lowers to on
+//! the way to the accelerator ISA, and also serves the paper's "lower-level
+//! dialects like affine" token-sequence experiments.
+
+use super::attr::Attrs;
+use super::types::{DType, TensorType, Type};
+use anyhow::{anyhow, bail, ensure, Result};
+
+/// High-level `xpu` dialect operators.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum XpuOp {
+    // -- dense linear algebra -------------------------------------------
+    MatMul,
+    Conv2d,
+    DepthwiseConv2d,
+    Conv1d,
+    // -- elementwise binary ---------------------------------------------
+    Add,
+    Sub,
+    Mult,
+    Div,
+    Maximum,
+    Minimum,
+    // -- elementwise unary ----------------------------------------------
+    Relu,
+    Gelu,
+    Sigmoid,
+    Tanh,
+    Erf,
+    Exp,
+    Sqrt,
+    Rsqrt,
+    Neg,
+    // -- normalization / reduction --------------------------------------
+    Softmax,
+    BatchNorm,
+    LayerNorm,
+    ReduceSum,
+    ReduceMax,
+    ReduceMean,
+    // -- pooling ----------------------------------------------------------
+    MaxPool2d,
+    AvgPool2d,
+    GlobalAvgPool,
+    // -- data movement / shape -------------------------------------------
+    Concat,
+    Reshape,
+    Transpose,
+    Broadcast,
+    Slice,
+    Pad,
+    Upsample,
+    Embedding,
+    Const,
+}
+
+impl XpuOp {
+    /// All ops, for vocabulary construction and property tests.
+    pub const ALL: [XpuOp; 37] = [
+        XpuOp::MatMul,
+        XpuOp::Conv2d,
+        XpuOp::DepthwiseConv2d,
+        XpuOp::Conv1d,
+        XpuOp::Add,
+        XpuOp::Sub,
+        XpuOp::Mult,
+        XpuOp::Div,
+        XpuOp::Maximum,
+        XpuOp::Minimum,
+        XpuOp::Relu,
+        XpuOp::Gelu,
+        XpuOp::Sigmoid,
+        XpuOp::Tanh,
+        XpuOp::Erf,
+        XpuOp::Exp,
+        XpuOp::Sqrt,
+        XpuOp::Rsqrt,
+        XpuOp::Neg,
+        XpuOp::Softmax,
+        XpuOp::BatchNorm,
+        XpuOp::LayerNorm,
+        XpuOp::ReduceSum,
+        XpuOp::ReduceMax,
+        XpuOp::ReduceMean,
+        XpuOp::MaxPool2d,
+        XpuOp::AvgPool2d,
+        XpuOp::GlobalAvgPool,
+        XpuOp::Concat,
+        XpuOp::Reshape,
+        XpuOp::Transpose,
+        XpuOp::Broadcast,
+        XpuOp::Slice,
+        XpuOp::Pad,
+        XpuOp::Upsample,
+        XpuOp::Embedding,
+        XpuOp::Const,
+    ];
+
+    /// Mnemonic without the dialect prefix (`mult`, not `xpu.mult`).
+    pub fn mnemonic(self) -> &'static str {
+        match self {
+            XpuOp::MatMul => "matmul",
+            XpuOp::Conv2d => "conv2d",
+            XpuOp::DepthwiseConv2d => "depthwise_conv2d",
+            XpuOp::Conv1d => "conv1d",
+            XpuOp::Add => "add",
+            XpuOp::Sub => "sub",
+            XpuOp::Mult => "mult",
+            XpuOp::Div => "div",
+            XpuOp::Maximum => "maximum",
+            XpuOp::Minimum => "minimum",
+            XpuOp::Relu => "relu",
+            XpuOp::Gelu => "gelu",
+            XpuOp::Sigmoid => "sigmoid",
+            XpuOp::Tanh => "tanh",
+            XpuOp::Erf => "erf",
+            XpuOp::Exp => "exp",
+            XpuOp::Sqrt => "sqrt",
+            XpuOp::Rsqrt => "rsqrt",
+            XpuOp::Neg => "neg",
+            XpuOp::Softmax => "softmax",
+            XpuOp::BatchNorm => "batchnorm",
+            XpuOp::LayerNorm => "layernorm",
+            XpuOp::ReduceSum => "reduce_sum",
+            XpuOp::ReduceMax => "reduce_max",
+            XpuOp::ReduceMean => "reduce_mean",
+            XpuOp::MaxPool2d => "maxpool2d",
+            XpuOp::AvgPool2d => "avgpool2d",
+            XpuOp::GlobalAvgPool => "global_avgpool",
+            XpuOp::Concat => "concat",
+            XpuOp::Reshape => "reshape",
+            XpuOp::Transpose => "transpose",
+            XpuOp::Broadcast => "broadcast",
+            XpuOp::Slice => "slice",
+            XpuOp::Pad => "pad",
+            XpuOp::Upsample => "upsample",
+            XpuOp::Embedding => "embedding",
+            XpuOp::Const => "const",
+        }
+    }
+
+    pub fn parse(mnemonic: &str) -> Option<XpuOp> {
+        XpuOp::ALL.iter().copied().find(|op| op.mnemonic() == mnemonic)
+    }
+
+    /// Is this op elementwise (same-shape in/out, fusable)?
+    pub fn is_elementwise(self) -> bool {
+        matches!(
+            self,
+            XpuOp::Add
+                | XpuOp::Sub
+                | XpuOp::Mult
+                | XpuOp::Div
+                | XpuOp::Maximum
+                | XpuOp::Minimum
+                | XpuOp::Relu
+                | XpuOp::Gelu
+                | XpuOp::Sigmoid
+                | XpuOp::Tanh
+                | XpuOp::Erf
+                | XpuOp::Exp
+                | XpuOp::Sqrt
+                | XpuOp::Rsqrt
+                | XpuOp::Neg
+        )
+    }
+
+    /// Ops whose inner loops contract a dimension on the MXU.
+    pub fn is_contraction(self) -> bool {
+        matches!(
+            self,
+            XpuOp::MatMul | XpuOp::Conv2d | XpuOp::DepthwiseConv2d | XpuOp::Conv1d
+        )
+    }
+}
+
+/// `affine` dialect subset (plus the induction-variable-free `yield`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AffineOp {
+    /// `affine.for %i = lb to ub step s { ... }` — carries one region.
+    For,
+    /// Terminator of an `affine.for` body.
+    Yield,
+    /// `affine.load %memref[%i, %j]` — scalar load.
+    Load,
+    /// `affine.store %v, %memref[%i, %j]`.
+    Store,
+    /// `affine.vector_load` with a `width` attr — one vector-register load.
+    VectorLoad,
+    /// `affine.vector_store` with a `width` attr.
+    VectorStore,
+}
+
+impl AffineOp {
+    pub fn mnemonic(self) -> &'static str {
+        match self {
+            AffineOp::For => "for",
+            AffineOp::Yield => "yield",
+            AffineOp::Load => "load",
+            AffineOp::Store => "store",
+            AffineOp::VectorLoad => "vector_load",
+            AffineOp::VectorStore => "vector_store",
+        }
+    }
+
+    pub fn parse(m: &str) -> Option<AffineOp> {
+        Some(match m {
+            "for" => AffineOp::For,
+            "yield" => AffineOp::Yield,
+            "load" => AffineOp::Load,
+            "store" => AffineOp::Store,
+            "vector_load" => AffineOp::VectorLoad,
+            "vector_store" => AffineOp::VectorStore,
+            _ => return None,
+        })
+    }
+}
+
+/// `arith` dialect subset — scalar/vector arithmetic inside loop nests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ArithOp {
+    Constant,
+    AddF,
+    SubF,
+    MulF,
+    DivF,
+    MaxF,
+    MinF,
+    /// Fused multiply-add; produced by the codegen peephole.
+    Fma,
+    ExpF,
+    TanhF,
+    ErfF,
+    SqrtF,
+    RsqrtF,
+    NegF,
+}
+
+impl ArithOp {
+    pub fn mnemonic(self) -> &'static str {
+        match self {
+            ArithOp::Constant => "constant",
+            ArithOp::AddF => "addf",
+            ArithOp::SubF => "subf",
+            ArithOp::MulF => "mulf",
+            ArithOp::DivF => "divf",
+            ArithOp::MaxF => "maxf",
+            ArithOp::MinF => "minf",
+            ArithOp::Fma => "fma",
+            ArithOp::ExpF => "expf",
+            ArithOp::TanhF => "tanhf",
+            ArithOp::ErfF => "erff",
+            ArithOp::SqrtF => "sqrtf",
+            ArithOp::RsqrtF => "rsqrtf",
+            ArithOp::NegF => "negf",
+        }
+    }
+
+    pub fn parse(m: &str) -> Option<ArithOp> {
+        use ArithOp::*;
+        Some(match m {
+            "constant" => Constant,
+            "addf" => AddF,
+            "subf" => SubF,
+            "mulf" => MulF,
+            "divf" => DivF,
+            "maxf" => MaxF,
+            "minf" => MinF,
+            "fma" => Fma,
+            "expf" => ExpF,
+            "tanhf" => TanhF,
+            "erff" => ErfF,
+            "sqrtf" => SqrtF,
+            "rsqrtf" => RsqrtF,
+            "negf" => NegF,
+            _ => return None,
+        })
+    }
+}
+
+/// `memref` dialect subset.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MemRefOp {
+    /// Allocate a buffer in accelerator scratchpad.
+    Alloc,
+}
+
+/// Every operation kind the IR can hold.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OpKind {
+    Xpu(XpuOp),
+    Affine(AffineOp),
+    Arith(ArithOp),
+    MemRef(MemRefOp),
+    /// `func.return`.
+    Return,
+}
+
+impl OpKind {
+    /// Fully-qualified MLIR name, e.g. `xpu.mult`, `affine.for`.
+    pub fn full_name(&self) -> String {
+        match self {
+            OpKind::Xpu(op) => format!("xpu.{}", op.mnemonic()),
+            OpKind::Affine(op) => format!("affine.{}", op.mnemonic()),
+            OpKind::Arith(op) => format!("arith.{}", op.mnemonic()),
+            OpKind::MemRef(MemRefOp::Alloc) => "memref.alloc".to_string(),
+            OpKind::Return => "func.return".to_string(),
+        }
+    }
+
+    /// Parse a fully-qualified op name.
+    pub fn parse_name(name: &str) -> Option<OpKind> {
+        if name == "func.return" || name == "return" {
+            return Some(OpKind::Return);
+        }
+        if name == "memref.alloc" {
+            return Some(OpKind::MemRef(MemRefOp::Alloc));
+        }
+        let (dialect, mnemonic) = name.split_once('.')?;
+        match dialect {
+            "xpu" => XpuOp::parse(mnemonic).map(OpKind::Xpu),
+            "affine" => AffineOp::parse(mnemonic).map(OpKind::Affine),
+            "arith" => ArithOp::parse(mnemonic).map(OpKind::Arith),
+            _ => None,
+        }
+    }
+
+    /// Does this op carry a region (a nested block)?
+    pub fn has_region(&self) -> bool {
+        matches!(self, OpKind::Affine(AffineOp::For))
+    }
+
+    /// Number of SSA results.
+    pub fn num_results(&self) -> usize {
+        match self {
+            OpKind::Return
+            | OpKind::Affine(AffineOp::Yield)
+            | OpKind::Affine(AffineOp::Store)
+            | OpKind::Affine(AffineOp::VectorStore)
+            | OpKind::Affine(AffineOp::For) => 0,
+            _ => 1,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shape inference
+// ---------------------------------------------------------------------------
+
+fn tensor_operand<'a>(types: &'a [Type], i: usize, op: &str) -> Result<&'a TensorType> {
+    types
+        .get(i)
+        .and_then(Type::as_tensor)
+        .ok_or_else(|| anyhow!("{op}: operand {i} must be a tensor, got {:?}", types.get(i)))
+}
+
+/// Numpy-style broadcast of two shapes (dims equal, or one side is 1, or
+/// ranks differ with leading-dim padding).
+pub fn broadcast_shapes(a: &[i64], b: &[i64], op: &str) -> Result<Vec<i64>> {
+    let rank = a.len().max(b.len());
+    let mut out = vec![0i64; rank];
+    for i in 0..rank {
+        let da = if i < rank - a.len() { 1 } else { a[i - (rank - a.len())] };
+        let db = if i < rank - b.len() { 1 } else { b[i - (rank - b.len())] };
+        out[i] = if da == db {
+            da
+        } else if da == 1 {
+            db
+        } else if db == 1 {
+            da
+        } else {
+            bail!("{op}: shapes {a:?} and {b:?} are not broadcastable (dim {i}: {da} vs {db})");
+        };
+    }
+    Ok(out)
+}
+
+fn conv_out(in_sz: i64, k: i64, stride: i64, pad: i64, op: &str) -> Result<i64> {
+    let out = (in_sz + 2 * pad - k) / stride + 1;
+    ensure!(out > 0, "{op}: non-positive output extent ({in_sz}+2*{pad}-{k})/{stride}+1");
+    Ok(out)
+}
+
+impl XpuOp {
+    /// Infer the single result type from operand types + attrs.
+    ///
+    /// This is both the builder's forward shape propagation and the
+    /// verifier's ground truth, so every generator-produced module is
+    /// checked against the same rules that created it.
+    pub fn infer_result(self, operands: &[Type], attrs: &Attrs) -> Result<Type> {
+        let name = format!("xpu.{}", self.mnemonic());
+        let n = operands.len();
+        match self {
+            XpuOp::MatMul => {
+                ensure!(n == 2, "{name}: expects 2 operands, got {n}");
+                let a = tensor_operand(operands, 0, &name)?;
+                let b = tensor_operand(operands, 1, &name)?;
+                ensure!(a.rank() >= 2 && b.rank() >= 2, "{name}: operands must be rank>=2");
+                let (m, k1) = (a.shape[a.rank() - 2], a.shape[a.rank() - 1]);
+                let (k2, nn) = (b.shape[b.rank() - 2], b.shape[b.rank() - 1]);
+                ensure!(k1 == k2, "{name}: contraction mismatch {k1} vs {k2}");
+                // Batch dims come from the higher-rank side; the other side
+                // must either match or be rank-2.
+                let (hi, lo) = if a.rank() >= b.rank() { (a, b) } else { (b, a) };
+                if lo.rank() > 2 {
+                    ensure!(
+                        hi.shape[..hi.rank() - 2] == lo.shape[..lo.rank() - 2],
+                        "{name}: batch dims mismatch {:?} vs {:?}",
+                        hi.shape,
+                        lo.shape
+                    );
+                }
+                let mut shape = hi.shape[..hi.rank() - 2].to_vec();
+                shape.push(m);
+                shape.push(nn);
+                Ok(Type::tensor(shape, a.dtype))
+            }
+            XpuOp::Conv2d | XpuOp::DepthwiseConv2d => {
+                ensure!(n == 2, "{name}: expects 2 operands (input, weight), got {n}");
+                let x = tensor_operand(operands, 0, &name)?;
+                let w = tensor_operand(operands, 1, &name)?;
+                ensure!(x.rank() == 4, "{name}: input must be NCHW rank-4, got {:?}", x.shape);
+                ensure!(w.rank() == 4, "{name}: weight must be rank-4, got {:?}", w.shape);
+                let strides = attrs.get_int_array("strides").unwrap_or(&[1, 1]);
+                let pad = attrs.get_int_array("padding").unwrap_or(&[0, 0]);
+                ensure!(strides.len() == 2 && pad.len() == 2, "{name}: strides/padding must be length-2");
+                let (nb, c, h, wd) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+                let (oc, ic, kh, kw) = (w.shape[0], w.shape[1], w.shape[2], w.shape[3]);
+                if self == XpuOp::Conv2d {
+                    ensure!(ic == c, "{name}: in-channels {ic} != input channels {c}");
+                } else {
+                    ensure!(oc == c && ic == 1, "{name}: depthwise weight must be [C,1,kh,kw]");
+                }
+                let oh = conv_out(h, kh, strides[0], pad[0], &name)?;
+                let ow = conv_out(wd, kw, strides[1], pad[1], &name)?;
+                Ok(Type::tensor(vec![nb, oc, oh, ow], x.dtype))
+            }
+            XpuOp::Conv1d => {
+                ensure!(n == 2, "{name}: expects 2 operands, got {n}");
+                let x = tensor_operand(operands, 0, &name)?;
+                let w = tensor_operand(operands, 1, &name)?;
+                ensure!(x.rank() == 3 && w.rank() == 3, "{name}: (N,C,L) x (OC,IC,K)");
+                let stride = attrs.get_int("stride").unwrap_or(1);
+                let pad = attrs.get_int("padding").unwrap_or(0);
+                ensure!(w.shape[1] == x.shape[1], "{name}: channel mismatch");
+                let ol = conv_out(x.shape[2], w.shape[2], stride, pad, &name)?;
+                Ok(Type::tensor(vec![x.shape[0], w.shape[0], ol], x.dtype))
+            }
+            XpuOp::Add | XpuOp::Sub | XpuOp::Mult | XpuOp::Div | XpuOp::Maximum | XpuOp::Minimum => {
+                ensure!(n == 2, "{name}: expects 2 operands, got {n}");
+                let a = tensor_operand(operands, 0, &name)?;
+                let b = tensor_operand(operands, 1, &name)?;
+                ensure!(a.dtype == b.dtype, "{name}: dtype mismatch {} vs {}", a.dtype, b.dtype);
+                let shape = broadcast_shapes(&a.shape, &b.shape, &name)?;
+                Ok(Type::tensor(shape, a.dtype))
+            }
+            XpuOp::Relu
+            | XpuOp::Gelu
+            | XpuOp::Sigmoid
+            | XpuOp::Tanh
+            | XpuOp::Erf
+            | XpuOp::Exp
+            | XpuOp::Sqrt
+            | XpuOp::Rsqrt
+            | XpuOp::Neg => {
+                ensure!(n == 1, "{name}: expects 1 operand, got {n}");
+                let x = tensor_operand(operands, 0, &name)?;
+                Ok(Type::Tensor(x.clone()))
+            }
+            XpuOp::Softmax => {
+                ensure!(n == 1, "{name}: expects 1 operand, got {n}");
+                let x = tensor_operand(operands, 0, &name)?;
+                let axis = attrs.get_int("axis").unwrap_or(x.rank() as i64 - 1);
+                ensure!(
+                    (0..x.rank() as i64).contains(&axis),
+                    "{name}: axis {axis} out of range for rank {}",
+                    x.rank()
+                );
+                Ok(Type::Tensor(x.clone()))
+            }
+            XpuOp::BatchNorm => {
+                ensure!(n == 5, "{name}: expects x, scale, bias, mean, var — got {n}");
+                let x = tensor_operand(operands, 0, &name)?;
+                ensure!(x.rank() >= 2, "{name}: input rank must be >=2");
+                let c = x.shape[1];
+                for i in 1..5 {
+                    let p = tensor_operand(operands, i, &name)?;
+                    ensure!(p.shape == vec![c], "{name}: param {i} must be [{c}], got {:?}", p.shape);
+                }
+                Ok(Type::Tensor(x.clone()))
+            }
+            XpuOp::LayerNorm => {
+                ensure!(n == 3, "{name}: expects x, scale, bias — got {n}");
+                let x = tensor_operand(operands, 0, &name)?;
+                let d = *x.shape.last().ok_or_else(|| anyhow!("{name}: rank-0 input"))?;
+                for i in 1..3 {
+                    let p = tensor_operand(operands, i, &name)?;
+                    ensure!(p.shape == vec![d], "{name}: param {i} must be [{d}], got {:?}", p.shape);
+                }
+                Ok(Type::Tensor(x.clone()))
+            }
+            XpuOp::ReduceSum | XpuOp::ReduceMax | XpuOp::ReduceMean => {
+                ensure!(n == 1, "{name}: expects 1 operand, got {n}");
+                let x = tensor_operand(operands, 0, &name)?;
+                let axes: Vec<i64> = attrs
+                    .get_int_array("axes")
+                    .map(|a| a.to_vec())
+                    .unwrap_or_else(|| (0..x.rank() as i64).collect());
+                let keep = attrs.get("keepdims").and_then(|a| a.as_bool()).unwrap_or(false);
+                let mut shape = Vec::new();
+                for (i, &d) in x.shape.iter().enumerate() {
+                    if axes.contains(&(i as i64)) {
+                        if keep {
+                            shape.push(1);
+                        }
+                    } else {
+                        shape.push(d);
+                    }
+                }
+                Ok(Type::tensor(shape, x.dtype))
+            }
+            XpuOp::MaxPool2d | XpuOp::AvgPool2d => {
+                ensure!(n == 1, "{name}: expects 1 operand, got {n}");
+                let x = tensor_operand(operands, 0, &name)?;
+                ensure!(x.rank() == 4, "{name}: input must be NCHW");
+                let k = attrs
+                    .get_int_array("kernel")
+                    .ok_or_else(|| anyhow!("{name}: missing kernel attr"))?;
+                let strides = attrs.get_int_array("strides").unwrap_or(k);
+                let pad = attrs.get_int_array("padding").unwrap_or(&[0, 0]);
+                let oh = conv_out(x.shape[2], k[0], strides[0], pad[0], &name)?;
+                let ow = conv_out(x.shape[3], k[1], strides[1], pad[1], &name)?;
+                Ok(Type::tensor(vec![x.shape[0], x.shape[1], oh, ow], x.dtype))
+            }
+            XpuOp::GlobalAvgPool => {
+                ensure!(n == 1, "{name}: expects 1 operand, got {n}");
+                let x = tensor_operand(operands, 0, &name)?;
+                ensure!(x.rank() == 4, "{name}: input must be NCHW");
+                Ok(Type::tensor(vec![x.shape[0], x.shape[1]], x.dtype))
+            }
+            XpuOp::Concat => {
+                ensure!(n >= 2, "{name}: expects >=2 operands, got {n}");
+                let axis = attrs.get_int("axis").ok_or_else(|| anyhow!("{name}: missing axis"))?;
+                let first = tensor_operand(operands, 0, &name)?;
+                let ax = axis as usize;
+                ensure!(ax < first.rank(), "{name}: axis {axis} out of range");
+                let mut shape = first.shape.clone();
+                for i in 1..n {
+                    let t = tensor_operand(operands, i, &name)?;
+                    ensure!(t.rank() == first.rank(), "{name}: rank mismatch");
+                    for (d, (&a, &b)) in first.shape.iter().zip(&t.shape).enumerate() {
+                        if d != ax {
+                            ensure!(a == b, "{name}: non-axis dim {d} mismatch {a} vs {b}");
+                        }
+                    }
+                    shape[ax] += t.shape[ax];
+                }
+                Ok(Type::tensor(shape, first.dtype))
+            }
+            XpuOp::Reshape => {
+                ensure!(n == 1, "{name}: expects 1 operand, got {n}");
+                let x = tensor_operand(operands, 0, &name)?;
+                let shape = attrs
+                    .get_int_array("shape")
+                    .ok_or_else(|| anyhow!("{name}: missing shape attr"))?
+                    .to_vec();
+                let new_n: i64 = shape.iter().product();
+                ensure!(
+                    new_n == x.num_elements(),
+                    "{name}: element count mismatch {} -> {new_n}",
+                    x.num_elements()
+                );
+                Ok(Type::tensor(shape, x.dtype))
+            }
+            XpuOp::Transpose => {
+                ensure!(n == 1, "{name}: expects 1 operand, got {n}");
+                let x = tensor_operand(operands, 0, &name)?;
+                let perm = attrs
+                    .get_int_array("perm")
+                    .ok_or_else(|| anyhow!("{name}: missing perm attr"))?;
+                ensure!(perm.len() == x.rank(), "{name}: perm len != rank");
+                let mut seen = vec![false; x.rank()];
+                let mut shape = vec![0i64; x.rank()];
+                for (i, &p) in perm.iter().enumerate() {
+                    let p = p as usize;
+                    ensure!(p < x.rank() && !seen[p], "{name}: invalid perm {perm:?}");
+                    seen[p] = true;
+                    shape[i] = x.shape[p];
+                }
+                Ok(Type::tensor(shape, x.dtype))
+            }
+            XpuOp::Broadcast => {
+                ensure!(n == 1, "{name}: expects 1 operand, got {n}");
+                let x = tensor_operand(operands, 0, &name)?;
+                let shape = attrs
+                    .get_int_array("shape")
+                    .ok_or_else(|| anyhow!("{name}: missing shape attr"))?
+                    .to_vec();
+                broadcast_shapes(&x.shape, &shape, &name)?;
+                Ok(Type::tensor(shape, x.dtype))
+            }
+            XpuOp::Slice => {
+                ensure!(n == 1, "{name}: expects 1 operand, got {n}");
+                let x = tensor_operand(operands, 0, &name)?;
+                let starts = attrs
+                    .get_int_array("starts")
+                    .ok_or_else(|| anyhow!("{name}: missing starts"))?;
+                let sizes = attrs
+                    .get_int_array("sizes")
+                    .ok_or_else(|| anyhow!("{name}: missing sizes"))?;
+                ensure!(
+                    starts.len() == x.rank() && sizes.len() == x.rank(),
+                    "{name}: starts/sizes must match rank"
+                );
+                for i in 0..x.rank() {
+                    ensure!(
+                        starts[i] >= 0 && sizes[i] > 0 && starts[i] + sizes[i] <= x.shape[i],
+                        "{name}: slice [{}, +{}) out of bounds for dim {} of size {}",
+                        starts[i],
+                        sizes[i],
+                        i,
+                        x.shape[i]
+                    );
+                }
+                Ok(Type::tensor(sizes.to_vec(), x.dtype))
+            }
+            XpuOp::Pad => {
+                ensure!(n == 1, "{name}: expects 1 operand, got {n}");
+                let x = tensor_operand(operands, 0, &name)?;
+                let low = attrs.get_int_array("low").ok_or_else(|| anyhow!("{name}: missing low"))?;
+                let high = attrs.get_int_array("high").ok_or_else(|| anyhow!("{name}: missing high"))?;
+                ensure!(low.len() == x.rank() && high.len() == x.rank(), "{name}: pad rank mismatch");
+                let shape = x
+                    .shape
+                    .iter()
+                    .zip(low.iter().zip(high))
+                    .map(|(&d, (&l, &h))| d + l + h)
+                    .collect();
+                Ok(Type::tensor(shape, x.dtype))
+            }
+            XpuOp::Upsample => {
+                ensure!(n == 1, "{name}: expects 1 operand, got {n}");
+                let x = tensor_operand(operands, 0, &name)?;
+                ensure!(x.rank() == 4, "{name}: input must be NCHW");
+                let scale = attrs.get_int("scale").unwrap_or(2);
+                Ok(Type::tensor(
+                    vec![x.shape[0], x.shape[1], x.shape[2] * scale, x.shape[3] * scale],
+                    x.dtype,
+                ))
+            }
+            XpuOp::Embedding => {
+                ensure!(n == 2, "{name}: expects ids, table — got {n}");
+                let ids = tensor_operand(operands, 0, &name)?;
+                let table = tensor_operand(operands, 1, &name)?;
+                ensure!(ids.dtype == DType::I32, "{name}: ids must be i32");
+                ensure!(table.rank() == 2, "{name}: table must be rank-2 [V, D]");
+                let mut shape = ids.shape.clone();
+                shape.push(table.shape[1]);
+                Ok(Type::tensor(shape, table.dtype))
+            }
+            XpuOp::Const => {
+                ensure!(n == 0, "{name}: expects 0 operands, got {n}");
+                let shape = attrs
+                    .get_int_array("shape")
+                    .ok_or_else(|| anyhow!("{name}: missing shape attr"))?
+                    .to_vec();
+                let dtype = attrs
+                    .get_str("dtype")
+                    .and_then(DType::parse)
+                    .ok_or_else(|| anyhow!("{name}: missing/invalid dtype attr"))?;
+                Ok(Type::tensor(shape, dtype))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mlir::attr::Attr;
+
+    fn t(shape: &[i64]) -> Type {
+        Type::tensor(shape.to_vec(), DType::F32)
+    }
+
+    #[test]
+    fn opkind_name_roundtrip() {
+        for op in XpuOp::ALL {
+            let k = OpKind::Xpu(op);
+            assert_eq!(OpKind::parse_name(&k.full_name()), Some(k));
+        }
+        for op in [AffineOp::For, AffineOp::Yield, AffineOp::Load, AffineOp::Store] {
+            let k = OpKind::Affine(op);
+            assert_eq!(OpKind::parse_name(&k.full_name()), Some(k));
+        }
+        assert_eq!(OpKind::parse_name("func.return"), Some(OpKind::Return));
+        assert_eq!(OpKind::parse_name("bogus.op"), None);
+    }
+
+    #[test]
+    fn matmul_infer() {
+        let r = XpuOp::MatMul.infer_result(&[t(&[4, 8]), t(&[8, 16])], &Attrs::new()).unwrap();
+        assert_eq!(r, t(&[4, 16]));
+        // batched lhs, rank-2 rhs
+        let r = XpuOp::MatMul
+            .infer_result(&[t(&[2, 12, 64, 64]), t(&[64, 32])], &Attrs::new())
+            .unwrap();
+        assert_eq!(r, t(&[2, 12, 64, 32]));
+        assert!(XpuOp::MatMul.infer_result(&[t(&[4, 8]), t(&[9, 16])], &Attrs::new()).is_err());
+    }
+
+    #[test]
+    fn conv2d_infer() {
+        let attrs = Attrs::new()
+            .with("strides", Attr::IntArray(vec![2, 2]))
+            .with("padding", Attr::IntArray(vec![3, 3]));
+        let r = XpuOp::Conv2d
+            .infer_result(&[t(&[1, 3, 224, 224]), t(&[64, 3, 7, 7])], &attrs)
+            .unwrap();
+        assert_eq!(r, t(&[1, 64, 112, 112]));
+    }
+
+    #[test]
+    fn depthwise_infer() {
+        let attrs = Attrs::new().with("padding", Attr::IntArray(vec![1, 1]));
+        let r = XpuOp::DepthwiseConv2d
+            .infer_result(&[t(&[1, 32, 56, 56]), t(&[32, 1, 3, 3])], &attrs)
+            .unwrap();
+        assert_eq!(r, t(&[1, 32, 56, 56]));
+        // wrong weight layout
+        assert!(XpuOp::DepthwiseConv2d
+            .infer_result(&[t(&[1, 32, 56, 56]), t(&[32, 32, 3, 3])], &attrs)
+            .is_err());
+    }
+
+    #[test]
+    fn broadcast_binary() {
+        let r = XpuOp::Add.infer_result(&[t(&[2, 16, 128]), t(&[128])], &Attrs::new()).unwrap();
+        assert_eq!(r, t(&[2, 16, 128]));
+        assert!(XpuOp::Add.infer_result(&[t(&[3, 4]), t(&[5, 4])], &Attrs::new()).is_err());
+    }
+
+    #[test]
+    fn reduce_infer() {
+        let attrs = Attrs::new().with("axes", Attr::IntArray(vec![1]));
+        let r = XpuOp::ReduceSum.infer_result(&[t(&[4, 8, 16])], &attrs).unwrap();
+        assert_eq!(r, t(&[4, 16]));
+        let attrs = attrs.with("keepdims", Attr::Bool(true));
+        let r = XpuOp::ReduceMax.infer_result(&[t(&[4, 8, 16])], &attrs).unwrap();
+        assert_eq!(r, t(&[4, 1, 16]));
+    }
+
+    #[test]
+    fn pool_infer() {
+        let attrs = Attrs::new()
+            .with("kernel", Attr::IntArray(vec![3, 3]))
+            .with("strides", Attr::IntArray(vec![2, 2]))
+            .with("padding", Attr::IntArray(vec![1, 1]));
+        let r = XpuOp::MaxPool2d.infer_result(&[t(&[1, 64, 112, 112])], &attrs).unwrap();
+        assert_eq!(r, t(&[1, 64, 56, 56]));
+    }
+
+    #[test]
+    fn concat_transpose_reshape() {
+        let attrs = Attrs::new().with("axis", Attr::Int(1));
+        let r = XpuOp::Concat.infer_result(&[t(&[1, 64, 8, 8]), t(&[1, 32, 8, 8])], &attrs).unwrap();
+        assert_eq!(r, t(&[1, 96, 8, 8]));
+
+        let attrs = Attrs::new().with("perm", Attr::IntArray(vec![0, 2, 1]));
+        let r = XpuOp::Transpose.infer_result(&[t(&[2, 3, 4])], &attrs).unwrap();
+        assert_eq!(r, t(&[2, 4, 3]));
+
+        let attrs = Attrs::new().with("shape", Attr::IntArray(vec![6, 4]));
+        let r = XpuOp::Reshape.infer_result(&[t(&[2, 3, 4])], &attrs).unwrap();
+        assert_eq!(r, t(&[6, 4]));
+        let bad = Attrs::new().with("shape", Attr::IntArray(vec![7, 4]));
+        assert!(XpuOp::Reshape.infer_result(&[t(&[2, 3, 4])], &bad).is_err());
+    }
+
+    #[test]
+    fn embedding_infer() {
+        let ids = Type::tensor(vec![2, 128], DType::I32);
+        let table = t(&[30522, 768]);
+        let r = XpuOp::Embedding.infer_result(&[ids, table], &Attrs::new()).unwrap();
+        assert_eq!(r, t(&[2, 128, 768]));
+    }
+
+    #[test]
+    fn const_infer() {
+        let attrs = Attrs::new()
+            .with("shape", Attr::IntArray(vec![64]))
+            .with("dtype", Attr::Str("bf16".into()));
+        let r = XpuOp::Const.infer_result(&[], &attrs).unwrap();
+        assert_eq!(r, Type::tensor(vec![64], DType::BF16));
+    }
+
+    #[test]
+    fn slice_pad_infer() {
+        let attrs = Attrs::new()
+            .with("starts", Attr::IntArray(vec![0, 2]))
+            .with("sizes", Attr::IntArray(vec![2, 2]));
+        let r = XpuOp::Slice.infer_result(&[t(&[2, 8])], &attrs).unwrap();
+        assert_eq!(r, t(&[2, 2]));
+
+        let attrs = Attrs::new()
+            .with("low", Attr::IntArray(vec![0, 1]))
+            .with("high", Attr::IntArray(vec![0, 1]));
+        let r = XpuOp::Pad.infer_result(&[t(&[2, 8])], &attrs).unwrap();
+        assert_eq!(r, t(&[2, 10]));
+    }
+}

@@ -1,0 +1,717 @@
+//! Text parser for the MLIR subset produced by [`crate::mlir::printer`].
+//!
+//! The corpus CSVs store MLIR *text* (the paper feeds the model "Full MLIR
+//! Text sequence"), so everything downstream — tokenizer, lowering, ground
+//! truth — re-enters through this parser. It is a hand-rolled lexer plus
+//! recursive descent over the generic-op grammar.
+
+use super::attr::{Attr, Attrs};
+use super::func::{function_from_parts, Block, Function, Module, Operation, ValueId};
+use super::ops::{AffineOp, MemRefOp, OpKind};
+use super::types::{DType, TensorType, Type};
+use anyhow::{anyhow, bail, ensure, Context, Result};
+use std::collections::HashMap;
+
+// ---------------------------------------------------------------------------
+// Lexer
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, PartialEq)]
+enum Tok {
+    /// Bare identifier, possibly dotted: `func.func`, `affine.for`, `index`.
+    Ident(String),
+    /// `%name` (name without the `%`).
+    Value(String),
+    /// `@name` (name without the `@`).
+    Symbol(String),
+    /// Integer or float literal (sign included).
+    Number(String),
+    /// `"quoted"` string (content without quotes).
+    Str(String),
+    /// `tensor<...>` / `memref<...>` captured whole.
+    TypeLit(String),
+    LBrace,
+    RBrace,
+    LParen,
+    RParen,
+    LBracket,
+    RBracket,
+    Comma,
+    Colon,
+    Eq,
+    Arrow,
+}
+
+fn lex(src: &str) -> Result<Vec<Tok>> {
+    let bytes = src.as_bytes();
+    let mut toks = Vec::new();
+    let mut i = 0usize;
+    let n = bytes.len();
+    let ident_start = |c: u8| c.is_ascii_alphabetic() || c == b'_';
+    let ident_cont = |c: u8| c.is_ascii_alphanumeric() || c == b'_' || c == b'.';
+    while i < n {
+        let c = bytes[i];
+        match c {
+            b' ' | b'\t' | b'\r' | b'\n' => i += 1,
+            b'/' if i + 1 < n && bytes[i + 1] == b'/' => {
+                while i < n && bytes[i] != b'\n' {
+                    i += 1;
+                }
+            }
+            b'{' => {
+                toks.push(Tok::LBrace);
+                i += 1;
+            }
+            b'}' => {
+                toks.push(Tok::RBrace);
+                i += 1;
+            }
+            b'(' => {
+                toks.push(Tok::LParen);
+                i += 1;
+            }
+            b')' => {
+                toks.push(Tok::RParen);
+                i += 1;
+            }
+            b'[' => {
+                toks.push(Tok::LBracket);
+                i += 1;
+            }
+            b']' => {
+                toks.push(Tok::RBracket);
+                i += 1;
+            }
+            b',' => {
+                toks.push(Tok::Comma);
+                i += 1;
+            }
+            b':' => {
+                toks.push(Tok::Colon);
+                i += 1;
+            }
+            b'=' => {
+                toks.push(Tok::Eq);
+                i += 1;
+            }
+            b'-' if i + 1 < n && bytes[i + 1] == b'>' => {
+                toks.push(Tok::Arrow);
+                i += 2;
+            }
+            b'%' | b'@' => {
+                let tag = c;
+                i += 1;
+                let start = i;
+                while i < n && (bytes[i].is_ascii_alphanumeric() || bytes[i] == b'_') {
+                    i += 1;
+                }
+                ensure!(i > start, "empty {} name at byte {}", tag as char, start);
+                let name = src[start..i].to_string();
+                toks.push(if tag == b'%' { Tok::Value(name) } else { Tok::Symbol(name) });
+            }
+            b'"' => {
+                i += 1;
+                let start = i;
+                while i < n && bytes[i] != b'"' {
+                    i += 1;
+                }
+                ensure!(i < n, "unterminated string starting at byte {start}");
+                toks.push(Tok::Str(src[start..i].to_string()));
+                i += 1;
+            }
+            b'-' | b'0'..=b'9' => {
+                let start = i;
+                i += 1;
+                while i < n
+                    && (bytes[i].is_ascii_digit()
+                        || bytes[i] == b'.'
+                        || bytes[i] == b'e'
+                        || bytes[i] == b'E'
+                        || (bytes[i] == b'-' && matches!(bytes[i - 1], b'e' | b'E')))
+                {
+                    i += 1;
+                }
+                toks.push(Tok::Number(src[start..i].to_string()));
+            }
+            c if ident_start(c) => {
+                let start = i;
+                while i < n && ident_cont(bytes[i]) {
+                    i += 1;
+                }
+                let word = &src[start..i];
+                // `tensor<...>` / `memref<...>` lex as one token: the dims
+                // payload (`1x128xf32`) is not otherwise lexable.
+                if (word == "tensor" || word == "memref") && i < n && bytes[i] == b'<' {
+                    let close = src[i..]
+                        .find('>')
+                        .ok_or_else(|| anyhow!("unclosed {} type at byte {start}", word))?;
+                    let lit = src[start..i + close + 1].to_string();
+                    i += close + 1;
+                    toks.push(Tok::TypeLit(lit));
+                } else {
+                    toks.push(Tok::Ident(word.to_string()));
+                }
+            }
+            other => bail!("unexpected character '{}' at byte {i}", other as char),
+        }
+    }
+    Ok(toks)
+}
+
+/// Parse `tensor<1x2xf32>` / `memref<4xbf16>` / `scalar` payloads.
+fn parse_type_lit(lit: &str) -> Result<Type> {
+    let (kind, payload) = lit
+        .split_once('<')
+        .ok_or_else(|| anyhow!("bad type literal {lit}"))?;
+    let payload = payload.strip_suffix('>').ok_or_else(|| anyhow!("bad type literal {lit}"))?;
+    let parts: Vec<&str> = payload.split('x').collect();
+    let dtype = DType::parse(parts.last().copied().unwrap_or(""))
+        .ok_or_else(|| anyhow!("bad dtype in {lit}"))?;
+    let mut shape = Vec::with_capacity(parts.len().saturating_sub(1));
+    for p in &parts[..parts.len() - 1] {
+        shape.push(p.parse::<i64>().with_context(|| format!("bad dim '{p}' in {lit}"))?);
+    }
+    let tt = TensorType::new(shape, dtype);
+    Ok(match kind {
+        "tensor" => Type::Tensor(tt),
+        "memref" => Type::MemRef(tt),
+        _ => bail!("unknown shaped type {kind}"),
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Parser
+// ---------------------------------------------------------------------------
+
+struct Parser {
+    toks: Vec<Tok>,
+    pos: usize,
+}
+
+/// Per-function symbol state while parsing.
+struct FuncState {
+    values: Vec<Type>,
+    names: Vec<String>,
+    by_name: HashMap<String, ValueId>,
+    num_args: usize,
+}
+
+impl FuncState {
+    fn define(&mut self, name: &str, ty: Type) -> Result<ValueId> {
+        ensure!(!self.by_name.contains_key(name), "redefinition of %{name}");
+        let id = ValueId(self.values.len() as u32);
+        self.values.push(ty);
+        self.names.push(name.to_string());
+        self.by_name.insert(name.to_string(), id);
+        Ok(id)
+    }
+
+    fn lookup(&self, name: &str) -> Result<ValueId> {
+        self.by_name
+            .get(name)
+            .copied()
+            .ok_or_else(|| anyhow!("use of undefined value %{name}"))
+    }
+}
+
+impl Parser {
+    fn peek(&self) -> Option<&Tok> {
+        self.toks.get(self.pos)
+    }
+
+    fn next(&mut self) -> Result<Tok> {
+        let t = self.toks.get(self.pos).cloned().ok_or_else(|| anyhow!("unexpected end of input"))?;
+        self.pos += 1;
+        Ok(t)
+    }
+
+    fn expect(&mut self, t: Tok) -> Result<()> {
+        let got = self.next()?;
+        ensure!(got == t, "expected {t:?}, got {got:?} at token {}", self.pos - 1);
+        Ok(())
+    }
+
+    fn eat(&mut self, t: &Tok) -> bool {
+        if self.peek() == Some(t) {
+            self.pos += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn expect_ident(&mut self, kw: &str) -> Result<()> {
+        match self.next()? {
+            Tok::Ident(s) if s == kw => Ok(()),
+            got => bail!("expected '{kw}', got {got:?}"),
+        }
+    }
+
+    fn value_name(&mut self) -> Result<String> {
+        match self.next()? {
+            Tok::Value(s) => Ok(s),
+            got => bail!("expected %value, got {got:?}"),
+        }
+    }
+
+    fn int(&mut self) -> Result<i64> {
+        match self.next()? {
+            Tok::Number(s) => s.parse::<i64>().with_context(|| format!("bad integer '{s}'")),
+            got => bail!("expected integer, got {got:?}"),
+        }
+    }
+
+    fn parse_type(&mut self) -> Result<Type> {
+        match self.next()? {
+            Tok::TypeLit(lit) => parse_type_lit(&lit),
+            Tok::Ident(s) if s == "index" => Ok(Type::Index),
+            Tok::Ident(s) => DType::parse(&s)
+                .map(Type::Scalar)
+                .ok_or_else(|| anyhow!("unknown type '{s}'")),
+            got => bail!("expected a type, got {got:?}"),
+        }
+    }
+
+    fn parse_attr_value(&mut self) -> Result<Attr> {
+        match self.next()? {
+            Tok::Number(s) => {
+                if s.contains('.') || s.contains('e') || s.contains('E') {
+                    Ok(Attr::Float(s.parse::<f64>().with_context(|| format!("bad float '{s}'"))?))
+                } else {
+                    Ok(Attr::Int(s.parse::<i64>().with_context(|| format!("bad int '{s}'"))?))
+                }
+            }
+            Tok::Str(s) => Ok(Attr::Str(s)),
+            Tok::Ident(s) if s == "true" => Ok(Attr::Bool(true)),
+            Tok::Ident(s) if s == "false" => Ok(Attr::Bool(false)),
+            Tok::LBracket => {
+                let mut v = Vec::new();
+                if !self.eat(&Tok::RBracket) {
+                    loop {
+                        v.push(self.int()?);
+                        if !self.eat(&Tok::Comma) {
+                            break;
+                        }
+                    }
+                    self.expect(Tok::RBracket)?;
+                }
+                Ok(Attr::IntArray(v))
+            }
+            got => bail!("expected attribute value, got {got:?}"),
+        }
+    }
+
+    /// Parse an optional `{k = v, ...}` dictionary.
+    fn parse_attrs(&mut self) -> Result<Attrs> {
+        let mut attrs = Attrs::new();
+        if !self.eat(&Tok::LBrace) {
+            return Ok(attrs);
+        }
+        if self.eat(&Tok::RBrace) {
+            return Ok(attrs);
+        }
+        loop {
+            let key = match self.next()? {
+                Tok::Ident(s) => s,
+                got => bail!("expected attribute key, got {got:?}"),
+            };
+            self.expect(Tok::Eq)?;
+            attrs.set(&key, self.parse_attr_value()?);
+            if !self.eat(&Tok::Comma) {
+                break;
+            }
+        }
+        self.expect(Tok::RBrace)?;
+        Ok(attrs)
+    }
+
+    fn parse_index_list(&mut self, st: &FuncState) -> Result<Vec<ValueId>> {
+        self.expect(Tok::LBracket)?;
+        let mut idx = Vec::new();
+        if !self.eat(&Tok::RBracket) {
+            loop {
+                idx.push(st.lookup(&self.value_name()?)?);
+                if !self.eat(&Tok::Comma) {
+                    break;
+                }
+            }
+            self.expect(Tok::RBracket)?;
+        }
+        Ok(idx)
+    }
+
+    /// Parse the ops of one block until the closing `}` (consumed).
+    fn parse_block_body(&mut self, st: &mut FuncState, block: &mut Block) -> Result<()> {
+        loop {
+            if self.eat(&Tok::RBrace) {
+                return Ok(());
+            }
+            match self.peek().cloned() {
+                Some(Tok::Ident(kw)) if kw == "return" => {
+                    self.next()?;
+                    let mut operands = Vec::new();
+                    if matches!(self.peek(), Some(Tok::Value(_))) {
+                        loop {
+                            operands.push(st.lookup(&self.value_name()?)?);
+                            if !self.eat(&Tok::Comma) {
+                                break;
+                            }
+                        }
+                        self.expect(Tok::Colon)?;
+                        for i in 0..operands.len() {
+                            if i > 0 {
+                                self.expect(Tok::Comma)?;
+                            }
+                            self.parse_type()?;
+                        }
+                    }
+                    block.ops.push(Operation {
+                        kind: OpKind::Return,
+                        operands,
+                        results: vec![],
+                        attrs: Attrs::new(),
+                        region: None,
+                    });
+                }
+                Some(Tok::Ident(kw)) if kw == "affine.for" => {
+                    self.next()?;
+                    let iv_name = self.value_name()?;
+                    self.expect(Tok::Eq)?;
+                    let lb = self.int()?;
+                    self.expect_ident("to")?;
+                    let ub = self.int()?;
+                    let step = if matches!(self.peek(), Some(Tok::Ident(s)) if s == "step") {
+                        self.next()?;
+                        self.int()?
+                    } else {
+                        1
+                    };
+                    self.expect(Tok::LBrace)?;
+                    let iv = st.define(&iv_name, Type::Index)?;
+                    let mut body = Block { args: vec![iv], ops: Vec::new() };
+                    self.parse_block_body(st, &mut body)?;
+                    let attrs = Attrs::new()
+                        .with("lb", Attr::Int(lb))
+                        .with("ub", Attr::Int(ub))
+                        .with("step", Attr::Int(step));
+                    block.ops.push(Operation {
+                        kind: OpKind::Affine(AffineOp::For),
+                        operands: vec![],
+                        results: vec![],
+                        attrs,
+                        region: Some(body),
+                    });
+                }
+                Some(Tok::Ident(kw)) if kw == "affine.yield" => {
+                    self.next()?;
+                    block.ops.push(Operation {
+                        kind: OpKind::Affine(AffineOp::Yield),
+                        operands: vec![],
+                        results: vec![],
+                        attrs: Attrs::new(),
+                        region: None,
+                    });
+                }
+                Some(Tok::Ident(kw)) if kw == "affine.store" || kw == "affine.vector_store" => {
+                    self.next()?;
+                    let value = st.lookup(&self.value_name()?)?;
+                    self.expect(Tok::Comma)?;
+                    let memref = st.lookup(&self.value_name()?)?;
+                    let indices = self.parse_index_list(st)?;
+                    let attrs = self.parse_attrs()?;
+                    self.expect(Tok::Colon)?;
+                    self.parse_type()?;
+                    let mut operands = vec![value, memref];
+                    operands.extend(indices);
+                    let op = if kw == "affine.store" {
+                        AffineOp::Store
+                    } else {
+                        AffineOp::VectorStore
+                    };
+                    block.ops.push(Operation {
+                        kind: OpKind::Affine(op),
+                        operands,
+                        results: vec![],
+                        attrs,
+                        region: None,
+                    });
+                }
+                Some(Tok::Value(_)) => {
+                    // %r = <something>
+                    let result_name = self.value_name()?;
+                    self.expect(Tok::Eq)?;
+                    match self.next()? {
+                        Tok::Ident(kw) if kw == "affine.load" || kw == "affine.vector_load" => {
+                            let memref = st.lookup(&self.value_name()?)?;
+                            let indices = self.parse_index_list(st)?;
+                            let attrs = self.parse_attrs()?;
+                            self.expect(Tok::Colon)?;
+                            self.parse_type()?;
+                            let dtype = st.values[memref.0 as usize]
+                                .as_memref()
+                                .ok_or_else(|| anyhow!("{kw}: %{result_name} base not a memref"))?
+                                .dtype;
+                            let result = st.define(&result_name, Type::Scalar(dtype))?;
+                            let mut operands = vec![memref];
+                            operands.extend(indices);
+                            let op = if kw == "affine.load" {
+                                AffineOp::Load
+                            } else {
+                                AffineOp::VectorLoad
+                            };
+                            block.ops.push(Operation {
+                                kind: OpKind::Affine(op),
+                                operands,
+                                results: vec![result],
+                                attrs,
+                                region: None,
+                            });
+                        }
+                        Tok::Ident(kw) if kw == "memref.alloc" => {
+                            self.expect(Tok::LParen)?;
+                            self.expect(Tok::RParen)?;
+                            self.expect(Tok::Colon)?;
+                            let ty = self.parse_type()?;
+                            ensure!(ty.as_memref().is_some(), "memref.alloc must yield a memref");
+                            let result = st.define(&result_name, ty)?;
+                            block.ops.push(Operation {
+                                kind: OpKind::MemRef(MemRefOp::Alloc),
+                                operands: vec![],
+                                results: vec![result],
+                                attrs: Attrs::new(),
+                                region: None,
+                            });
+                        }
+                        Tok::Str(opname) => {
+                            // generic: "xpu.conv2d"(%a, %b) {attrs} : (..) -> t
+                            let kind = OpKind::parse_name(&opname)
+                                .ok_or_else(|| anyhow!("unknown op \"{opname}\""))?;
+                            self.expect(Tok::LParen)?;
+                            let mut operands = Vec::new();
+                            if !self.eat(&Tok::RParen) {
+                                loop {
+                                    operands.push(st.lookup(&self.value_name()?)?);
+                                    if !self.eat(&Tok::Comma) {
+                                        break;
+                                    }
+                                }
+                                self.expect(Tok::RParen)?;
+                            }
+                            let attrs = self.parse_attrs()?;
+                            self.expect(Tok::Colon)?;
+                            self.expect(Tok::LParen)?;
+                            for i in 0..operands.len() {
+                                if i > 0 {
+                                    self.expect(Tok::Comma)?;
+                                }
+                                self.parse_type()?;
+                            }
+                            self.expect(Tok::RParen)?;
+                            self.expect(Tok::Arrow)?;
+                            let result_ty = self.parse_type()?;
+                            let result = st.define(&result_name, result_ty)?;
+                            block.ops.push(Operation {
+                                kind,
+                                operands,
+                                results: vec![result],
+                                attrs,
+                                region: None,
+                            });
+                        }
+                        got => bail!("unexpected token after '%{result_name} =': {got:?}"),
+                    }
+                }
+                got => bail!("unexpected token in block: {got:?}"),
+            }
+        }
+    }
+
+    fn parse_function(&mut self) -> Result<Function> {
+        self.expect_ident("func.func")?;
+        let name = match self.next()? {
+            Tok::Symbol(s) => s,
+            got => bail!("expected @name, got {got:?}"),
+        };
+        let mut st = FuncState {
+            values: Vec::new(),
+            names: Vec::new(),
+            by_name: HashMap::new(),
+            num_args: 0,
+        };
+        self.expect(Tok::LParen)?;
+        if !self.eat(&Tok::RParen) {
+            loop {
+                let arg_name = self.value_name()?;
+                self.expect(Tok::Colon)?;
+                let ty = self.parse_type()?;
+                st.define(&arg_name, ty)?;
+                st.num_args += 1;
+                if !self.eat(&Tok::Comma) {
+                    break;
+                }
+            }
+            self.expect(Tok::RParen)?;
+        }
+        if self.eat(&Tok::Arrow) {
+            if self.eat(&Tok::LParen) {
+                loop {
+                    self.parse_type()?;
+                    if !self.eat(&Tok::Comma) {
+                        break;
+                    }
+                }
+                self.expect(Tok::RParen)?;
+            } else {
+                self.parse_type()?;
+            }
+        }
+        self.expect(Tok::LBrace)?;
+        let mut body = Block::default();
+        self.parse_block_body(&mut st, &mut body)?;
+        let ret = match body.ops.last() {
+            Some(op) if op.kind == OpKind::Return => op.operands.clone(),
+            _ => bail!("function @{name} does not end in return"),
+        };
+        function_from_parts(name, st.values, st.names, st.num_args, ret, body)
+    }
+}
+
+/// Parse a single standalone function.
+pub fn parse_function(src: &str) -> Result<Function> {
+    let toks = lex(src)?;
+    let mut p = Parser { toks, pos: 0 };
+    let f = p.parse_function()?;
+    ensure!(p.peek().is_none(), "trailing input after function");
+    Ok(f)
+}
+
+/// Parse a `module @name { ... }` wrapper (or a bare function).
+pub fn parse_module(src: &str) -> Result<Module> {
+    let toks = lex(src)?;
+    let mut p = Parser { toks, pos: 0 };
+    if matches!(p.peek(), Some(Tok::Ident(s)) if s == "module") {
+        p.next()?;
+        let name = match p.next()? {
+            Tok::Symbol(s) => s,
+            got => bail!("expected @name after 'module', got {got:?}"),
+        };
+        p.expect(Tok::LBrace)?;
+        let mut m = Module::new(&name);
+        while !p.eat(&Tok::RBrace) {
+            m.functions.push(p.parse_function()?);
+        }
+        ensure!(p.peek().is_none(), "trailing input after module");
+        Ok(m)
+    } else {
+        let f = p.parse_function()?;
+        ensure!(p.peek().is_none(), "trailing input after function");
+        let mut m = Module::new("anon");
+        m.functions.push(f);
+        Ok(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mlir::attr::{Attr, Attrs};
+    use crate::mlir::func::FuncBuilder;
+    use crate::mlir::ops::{ArithOp, XpuOp};
+    use crate::mlir::printer::{print_function, print_module};
+
+    #[test]
+    fn roundtrip_simple() {
+        let src = "\
+func.func @f(%arg0: tensor<4x8xf32>, %arg1: tensor<8x16xf32>) -> tensor<4x16xf32> {
+  %0 = \"xpu.matmul\"(%arg0, %arg1) : (tensor<4x8xf32>, tensor<8x16xf32>) -> tensor<4x16xf32>
+  %1 = \"xpu.relu\"(%0) : (tensor<4x16xf32>) -> tensor<4x16xf32>
+  return %1 : tensor<4x16xf32>
+}
+";
+        let f = parse_function(src).unwrap();
+        assert_eq!(f.name, "f");
+        assert_eq!(f.num_ops(), 2);
+        assert_eq!(print_function(&f), src);
+    }
+
+    #[test]
+    fn roundtrip_built_function() {
+        let mut b = FuncBuilder::new("rt");
+        let x = b.arg(Type::tensor(vec![1, 3, 32, 32], DType::F32));
+        let w = b.arg(Type::tensor(vec![16, 3, 3, 3], DType::F32));
+        let c = b
+            .xpu(
+                XpuOp::Conv2d,
+                &[x, w],
+                Attrs::new()
+                    .with("strides", Attr::IntArray(vec![1, 1]))
+                    .with("padding", Attr::IntArray(vec![1, 1])),
+            )
+            .unwrap();
+        let s = b.xpu(XpuOp::Sigmoid, &[c], Attrs::new()).unwrap();
+        let f = b.ret(&[s]).unwrap();
+        let text = print_function(&f);
+        let f2 = parse_function(&text).unwrap();
+        assert_eq!(print_function(&f2), text);
+    }
+
+    #[test]
+    fn roundtrip_loops_and_arith() {
+        let mut b = FuncBuilder::new("loops");
+        let m = b.alloc(vec![16, 16], DType::F32);
+        let i = b.begin_for(0, 16, 1);
+        let j = b.begin_for(0, 16, 4);
+        let v = b.load(m, &[i, j]).unwrap();
+        let c = b
+            .arith(ArithOp::Constant, &[], Attrs::new().with("value", Attr::Float(1.5)))
+            .unwrap();
+        let a = b.arith(ArithOp::AddF, &[v, c], Attrs::new()).unwrap();
+        b.store(a, m, &[i, j]).unwrap();
+        b.end_for().unwrap();
+        b.end_for().unwrap();
+        let f = b.ret(&[]).unwrap();
+        let text = print_function(&f);
+        let f2 = parse_function(&text).unwrap();
+        assert_eq!(print_function(&f2), text);
+        assert_eq!(f2.max_loop_depth(), 2);
+    }
+
+    #[test]
+    fn module_roundtrip() {
+        let mut b = FuncBuilder::new("g");
+        let x = b.arg(Type::tensor(vec![4], DType::BF16));
+        let y = b.xpu(XpuOp::Exp, &[x], Attrs::new()).unwrap();
+        let f = b.ret(&[y]).unwrap();
+        let mut m = Module::new("corpus_file");
+        m.functions.push(f);
+        let text = print_module(&m);
+        let m2 = parse_module(&text).unwrap();
+        assert_eq!(m2.name, "corpus_file");
+        assert_eq!(print_module(&m2), text);
+    }
+
+    #[test]
+    fn parse_errors() {
+        assert!(parse_function("func.func @f() {").is_err()); // truncated
+        assert!(parse_function(
+            "func.func @f() {\n  %0 = \"xpu.bogus\"() : () -> tensor<1xf32>\n  return\n}"
+        )
+        .is_err()); // unknown op
+        assert!(parse_function(
+            "func.func @f() {\n  return %9 : tensor<1xf32>\n}"
+        )
+        .is_err()); // undefined value
+    }
+
+    #[test]
+    fn parse_multiline_attrs_and_bools() {
+        let src = "\
+func.func @f(%arg0: tensor<4x8xf32>) -> tensor<4xf32> {
+  %0 = \"xpu.reduce_mean\"(%arg0) {axes = [1], keepdims = false} : (tensor<4x8xf32>) -> tensor<4xf32>
+  return %0 : tensor<4xf32>
+}
+";
+        let f = parse_function(src).unwrap();
+        assert_eq!(print_function(&f), src);
+    }
+}

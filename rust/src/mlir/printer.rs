@@ -1,0 +1,238 @@
+//! Textual form emission. The printed text is what the corpus CSVs store
+//! (the paper's "Full MLIR Text sequence" column), so printing must be
+//! deterministic and must round-trip through [`crate::mlir::parser`].
+
+use super::func::{Block, Function, Module, Operation, ValueId};
+use super::ops::{AffineOp, OpKind};
+use std::fmt::Write as _;
+
+/// Print a module in MLIR generic-ish syntax.
+pub fn print_module(module: &Module) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "module @{} {{", module.name);
+    for f in &module.functions {
+        print_function_into(f, 1, &mut out);
+    }
+    out.push_str("}\n");
+    out
+}
+
+/// Print a single function (top-level, no module wrapper).
+pub fn print_function(f: &Function) -> String {
+    let mut out = String::new();
+    print_function_into(f, 0, &mut out);
+    out
+}
+
+fn indent(out: &mut String, depth: usize) {
+    for _ in 0..depth {
+        out.push_str("  ");
+    }
+}
+
+fn print_function_into(f: &Function, depth: usize, out: &mut String) {
+    indent(out, depth);
+    let _ = write!(out, "func.func @{}(", f.name);
+    for (i, id) in f.arg_ids().enumerate() {
+        if i > 0 {
+            out.push_str(", ");
+        }
+        let _ = write!(out, "%{}: {}", f.value_name(id), f.value_type(id));
+    }
+    out.push(')');
+    let rets = f.ret_types();
+    if !rets.is_empty() {
+        out.push_str(" -> ");
+        if rets.len() > 1 {
+            out.push('(');
+        }
+        for (i, t) in rets.iter().enumerate() {
+            if i > 0 {
+                out.push_str(", ");
+            }
+            let _ = write!(out, "{t}");
+        }
+        if rets.len() > 1 {
+            out.push(')');
+        }
+    }
+    out.push_str(" {\n");
+    print_block(f, &f.body, depth + 1, out);
+    indent(out, depth);
+    out.push_str("}\n");
+}
+
+fn val(f: &Function, id: ValueId) -> String {
+    format!("%{}", f.value_name(id))
+}
+
+fn print_block(f: &Function, block: &Block, depth: usize, out: &mut String) {
+    for op in &block.ops {
+        print_op(f, op, depth, out);
+    }
+}
+
+fn print_op(f: &Function, op: &Operation, depth: usize, out: &mut String) {
+    indent(out, depth);
+    match op.kind {
+        OpKind::Return => {
+            out.push_str("return");
+            if !op.operands.is_empty() {
+                out.push(' ');
+                for (i, &o) in op.operands.iter().enumerate() {
+                    if i > 0 {
+                        out.push_str(", ");
+                    }
+                    out.push_str(&val(f, o));
+                }
+                out.push_str(" : ");
+                for (i, &o) in op.operands.iter().enumerate() {
+                    if i > 0 {
+                        out.push_str(", ");
+                    }
+                    let _ = write!(out, "{}", f.value_type(o));
+                }
+            }
+            out.push('\n');
+        }
+        OpKind::Affine(AffineOp::For) => {
+            let region = op.region.as_ref().expect("affine.for has a region");
+            let iv = region.args[0];
+            let lb = op.attrs.get_int("lb").unwrap_or(0);
+            let ub = op.attrs.get_int("ub").unwrap_or(0);
+            let step = op.attrs.get_int("step").unwrap_or(1);
+            let _ = write!(out, "affine.for {} = {lb} to {ub}", val(f, iv));
+            if step != 1 {
+                let _ = write!(out, " step {step}");
+            }
+            out.push_str(" {\n");
+            print_block(f, region, depth + 1, out);
+            indent(out, depth);
+            out.push_str("}\n");
+        }
+        OpKind::Affine(AffineOp::Yield) => {
+            out.push_str("affine.yield\n");
+        }
+        OpKind::Affine(AffineOp::Load) | OpKind::Affine(AffineOp::VectorLoad) => {
+            let mnemonic = if op.kind == OpKind::Affine(AffineOp::Load) {
+                "load"
+            } else {
+                "vector_load"
+            };
+            let memref = op.operands[0];
+            let _ = write!(out, "{} = affine.{mnemonic} {}[", val(f, op.results[0]), val(f, memref));
+            for (i, &ix) in op.operands[1..].iter().enumerate() {
+                if i > 0 {
+                    out.push_str(", ");
+                }
+                out.push_str(&val(f, ix));
+            }
+            out.push(']');
+            if !op.attrs.is_empty() {
+                let _ = write!(out, " {}", op.attrs);
+            }
+            let _ = writeln!(out, " : {}", f.value_type(memref));
+        }
+        OpKind::Affine(AffineOp::Store) | OpKind::Affine(AffineOp::VectorStore) => {
+            let mnemonic = if op.kind == OpKind::Affine(AffineOp::Store) {
+                "store"
+            } else {
+                "vector_store"
+            };
+            let value = op.operands[0];
+            let memref = op.operands[1];
+            let _ = write!(out, "affine.{mnemonic} {}, {}[", val(f, value), val(f, memref));
+            for (i, &ix) in op.operands[2..].iter().enumerate() {
+                if i > 0 {
+                    out.push_str(", ");
+                }
+                out.push_str(&val(f, ix));
+            }
+            out.push(']');
+            if !op.attrs.is_empty() {
+                let _ = write!(out, " {}", op.attrs);
+            }
+            let _ = writeln!(out, " : {}", f.value_type(memref));
+        }
+        OpKind::MemRef(_) => {
+            let _ = writeln!(
+                out,
+                "{} = memref.alloc() : {}",
+                val(f, op.results[0]),
+                f.value_type(op.results[0])
+            );
+        }
+        OpKind::Xpu(_) | OpKind::Arith(_) => {
+            // Generic form: %r = "dialect.op"(%a, %b) {attrs} : (t, t) -> t
+            let _ = write!(out, "{} = \"{}\"(", val(f, op.results[0]), op.kind.full_name());
+            for (i, &o) in op.operands.iter().enumerate() {
+                if i > 0 {
+                    out.push_str(", ");
+                }
+                out.push_str(&val(f, o));
+            }
+            out.push(')');
+            if !op.attrs.is_empty() {
+                let _ = write!(out, " {}", op.attrs);
+            }
+            out.push_str(" : (");
+            for (i, &o) in op.operands.iter().enumerate() {
+                if i > 0 {
+                    out.push_str(", ");
+                }
+                let _ = write!(out, "{}", f.value_type(o));
+            }
+            let _ = writeln!(out, ") -> {}", f.value_type(op.results[0]));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mlir::attr::{Attr, Attrs};
+    use crate::mlir::func::FuncBuilder;
+    use crate::mlir::ops::XpuOp;
+    use crate::mlir::types::{DType, Type};
+
+    #[test]
+    fn print_matches_paper_style() {
+        let mut b = FuncBuilder::new("subgraph");
+        let x = b.arg(Type::tensor(vec![1, 64, 56, 56], DType::F32));
+        let w = b.arg(Type::tensor(vec![64, 64, 3, 3], DType::F32));
+        let c = b
+            .xpu(
+                XpuOp::Conv2d,
+                &[x, w],
+                Attrs::new()
+                    .with("strides", Attr::IntArray(vec![1, 1]))
+                    .with("padding", Attr::IntArray(vec![1, 1])),
+            )
+            .unwrap();
+        let r = b.xpu(XpuOp::Relu, &[c], Attrs::new()).unwrap();
+        let f = b.ret(&[r]).unwrap();
+        let text = print_function(&f);
+        assert!(text.contains("func.func @subgraph(%arg0: tensor<1x64x56x56xf32>"));
+        assert!(text.contains(
+            "%0 = \"xpu.conv2d\"(%arg0, %arg1) {strides = [1, 1], padding = [1, 1]} : \
+             (tensor<1x64x56x56xf32>, tensor<64x64x3x3xf32>) -> tensor<1x64x56x56xf32>"
+        ));
+        assert!(text.contains("return %1 : tensor<1x64x56x56xf32>"));
+    }
+
+    #[test]
+    fn print_loop_nest() {
+        let mut b = FuncBuilder::new("loops");
+        let m = b.alloc(vec![8, 8], DType::F32);
+        let i = b.begin_for(0, 8, 2);
+        let v = b.load(m, &[i, i]).unwrap();
+        b.store(v, m, &[i, i]).unwrap();
+        b.end_for().unwrap();
+        let f = b.ret(&[]).unwrap();
+        let text = print_function(&f);
+        assert!(text.contains("affine.for %1 = 0 to 8 step 2 {"));
+        assert!(text.contains("%2 = affine.load %0[%1, %1] : memref<8x8xf32>"));
+        assert!(text.contains("affine.store %2, %0[%1, %1] : memref<8x8xf32>"));
+        assert!(text.contains("affine.yield"));
+    }
+}

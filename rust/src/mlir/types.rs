@@ -1,0 +1,224 @@
+//! Type system for the `xpu` / `affine` MLIR subset.
+//!
+//! Only ranked tensors with static shapes appear in the corpora this
+//! library generates — the paper's tokenizer treats a tensor shape as a
+//! single token (e.g. `tensor<1x128x768xf32>`), which requires shapes to
+//! be fully static.
+
+use std::fmt;
+
+/// Element datatype of a tensor. Mirrors the dtypes the paper's `xpu`
+/// dialect operates on (AI-accelerator-centric).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum DType {
+    F32,
+    BF16,
+    F16,
+    I32,
+    I8,
+    I1,
+}
+
+impl DType {
+    /// Size of one element in bytes (i1 is stored as one byte).
+    pub fn size_bytes(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::BF16 | DType::F16 => 2,
+            DType::I8 | DType::I1 => 1,
+        }
+    }
+
+    /// MLIR spelling, e.g. `f32`.
+    pub fn mlir_name(self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::BF16 => "bf16",
+            DType::F16 => "f16",
+            DType::I32 => "i32",
+            DType::I8 => "i8",
+            DType::I1 => "i1",
+        }
+    }
+
+    /// Parse an MLIR dtype spelling.
+    pub fn parse(s: &str) -> Option<DType> {
+        Some(match s {
+            "f32" => DType::F32,
+            "bf16" => DType::BF16,
+            "f16" => DType::F16,
+            "i32" => DType::I32,
+            "i8" => DType::I8,
+            "i1" => DType::I1,
+            _ => return None,
+        })
+    }
+
+    /// True for floating-point types.
+    pub fn is_float(self) -> bool {
+        matches!(self, DType::F32 | DType::BF16 | DType::F16)
+    }
+}
+
+impl fmt::Display for DType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.mlir_name())
+    }
+}
+
+/// A ranked, statically-shaped tensor type: `tensor<2x3x4xf32>`.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct TensorType {
+    pub shape: Vec<i64>,
+    pub dtype: DType,
+}
+
+impl TensorType {
+    pub fn new(shape: Vec<i64>, dtype: DType) -> Self {
+        debug_assert!(shape.iter().all(|&d| d >= 0), "negative dim in {shape:?}");
+        TensorType { shape, dtype }
+    }
+
+    /// Rank (number of dimensions). A scalar tensor has rank 0.
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Total number of elements.
+    pub fn num_elements(&self) -> i64 {
+        self.shape.iter().product()
+    }
+
+    /// Total byte footprint.
+    pub fn size_bytes(&self) -> usize {
+        self.num_elements() as usize * self.dtype.size_bytes()
+    }
+
+    /// The paper tokenizes a whole shape as a single token; this is that
+    /// token's spelling, e.g. `1x128x768xf32` (rank-0 → `xf32` degenerate
+    /// form avoided by spelling `scalar_f32`).
+    pub fn shape_token(&self) -> String {
+        if self.shape.is_empty() {
+            return format!("scalar_{}", self.dtype);
+        }
+        let dims: Vec<String> = self.shape.iter().map(|d| d.to_string()).collect();
+        format!("{}x{}", dims.join("x"), self.dtype)
+    }
+}
+
+impl fmt::Display for TensorType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "tensor<")?;
+        for d in &self.shape {
+            write!(f, "{d}x")?;
+        }
+        write!(f, "{}>", self.dtype)
+    }
+}
+
+/// An SSA value's type.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum Type {
+    /// Ranked tensor (the common case for `xpu` ops).
+    Tensor(TensorType),
+    /// Loop induction variables and memref indices (`affine` dialect).
+    Index,
+    /// Scalar element value produced by `affine.load` etc.
+    Scalar(DType),
+    /// A buffer in accelerator memory: `memref<2x3xf32>`. Used after
+    /// bufferization in the lowering pipeline.
+    MemRef(TensorType),
+}
+
+impl Type {
+    pub fn tensor(shape: Vec<i64>, dtype: DType) -> Type {
+        Type::Tensor(TensorType::new(shape, dtype))
+    }
+
+    pub fn as_tensor(&self) -> Option<&TensorType> {
+        match self {
+            Type::Tensor(t) => Some(t),
+            _ => None,
+        }
+    }
+
+    pub fn as_memref(&self) -> Option<&TensorType> {
+        match self {
+            Type::MemRef(t) => Some(t),
+            _ => None,
+        }
+    }
+
+    /// dtype if the type carries one.
+    pub fn dtype(&self) -> Option<DType> {
+        match self {
+            Type::Tensor(t) | Type::MemRef(t) => Some(t.dtype),
+            Type::Scalar(d) => Some(*d),
+            Type::Index => None,
+        }
+    }
+}
+
+impl fmt::Display for Type {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Type::Tensor(t) => write!(f, "{t}"),
+            Type::Index => write!(f, "index"),
+            Type::Scalar(d) => write!(f, "{d}"),
+            Type::MemRef(t) => {
+                write!(f, "memref<")?;
+                for d in &t.shape {
+                    write!(f, "{d}x")?;
+                }
+                write!(f, "{}>", t.dtype)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_roundtrip() {
+        for d in [DType::F32, DType::BF16, DType::F16, DType::I32, DType::I8, DType::I1] {
+            assert_eq!(DType::parse(d.mlir_name()), Some(d));
+        }
+        assert_eq!(DType::parse("f64"), None);
+    }
+
+    #[test]
+    fn dtype_sizes() {
+        assert_eq!(DType::F32.size_bytes(), 4);
+        assert_eq!(DType::BF16.size_bytes(), 2);
+        assert_eq!(DType::I8.size_bytes(), 1);
+    }
+
+    #[test]
+    fn tensor_type_display() {
+        let t = TensorType::new(vec![1, 128, 768], DType::F32);
+        assert_eq!(t.to_string(), "tensor<1x128x768xf32>");
+        assert_eq!(t.shape_token(), "1x128x768xf32");
+        assert_eq!(t.rank(), 3);
+        assert_eq!(t.num_elements(), 98304);
+        assert_eq!(t.size_bytes(), 98304 * 4);
+    }
+
+    #[test]
+    fn scalar_tensor_token() {
+        let t = TensorType::new(vec![], DType::BF16);
+        assert_eq!(t.shape_token(), "scalar_bf16");
+        assert_eq!(t.num_elements(), 1);
+    }
+
+    #[test]
+    fn type_display() {
+        assert_eq!(Type::Index.to_string(), "index");
+        assert_eq!(Type::Scalar(DType::F32).to_string(), "f32");
+        assert_eq!(
+            Type::MemRef(TensorType::new(vec![4, 4], DType::I8)).to_string(),
+            "memref<4x4xi8>"
+        );
+    }
+}

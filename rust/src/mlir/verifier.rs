@@ -1,0 +1,277 @@
+//! IR verifier: re-derives every op's result type from its operands via
+//! the shared inference rules and checks SSA dominance, so a parsed module
+//! is guaranteed to be as well-formed as a builder-produced one.
+
+use super::func::{Block, Function, Module, ValueId};
+use super::ops::{AffineOp, ArithOp, OpKind};
+use super::types::Type;
+use anyhow::{bail, ensure, Result};
+
+/// Verify a whole module.
+pub fn verify_module(module: &Module) -> Result<()> {
+    for f in &module.functions {
+        verify_function(f)
+            .map_err(|e| e.context(format!("in function @{}", f.name)))?;
+    }
+    Ok(())
+}
+
+/// Verify one function: dominance, operand/result sanity, type inference
+/// agreement, and terminator placement.
+pub fn verify_function(f: &Function) -> Result<()> {
+    let mut defined = vec![false; f.num_values()];
+    for id in f.arg_ids() {
+        defined[id.0 as usize] = true;
+    }
+    verify_block(f, &f.body, &mut defined, 0)?;
+    // Return values must be defined at top level.
+    for &r in &f.ret {
+        ensure!(
+            defined[r.0 as usize],
+            "return value %{} is never defined",
+            f.value_name(r)
+        );
+    }
+    Ok(())
+}
+
+fn verify_block(f: &Function, block: &Block, defined: &mut [bool], depth: usize) -> Result<()> {
+    for &arg in &block.args {
+        ensure!(
+            !defined[arg.0 as usize],
+            "block arg %{} already defined",
+            f.value_name(arg)
+        );
+        defined[arg.0 as usize] = true;
+    }
+    let n = block.ops.len();
+    for (i, op) in block.ops.iter().enumerate() {
+        // Dominance: every operand must be defined before use.
+        for &o in &op.operands {
+            ensure!(
+                defined[o.0 as usize],
+                "{}: operand %{} used before definition",
+                op.kind.full_name(),
+                f.value_name(o)
+            );
+        }
+        // Results defined exactly once.
+        ensure!(
+            op.results.len() == op.kind.num_results(),
+            "{}: expected {} results, has {}",
+            op.kind.full_name(),
+            op.kind.num_results(),
+            op.results.len()
+        );
+        for &r in &op.results {
+            ensure!(
+                !defined[r.0 as usize],
+                "%{} defined more than once",
+                f.value_name(r)
+            );
+            defined[r.0 as usize] = true;
+        }
+        // Region discipline.
+        ensure!(
+            op.region.is_some() == op.kind.has_region(),
+            "{}: region mismatch",
+            op.kind.full_name()
+        );
+        // Terminators.
+        match op.kind {
+            OpKind::Return => {
+                ensure!(depth == 0, "func.return inside a region");
+                ensure!(i == n - 1, "func.return must be the last op of the body");
+            }
+            OpKind::Affine(AffineOp::Yield) => {
+                ensure!(depth > 0, "affine.yield outside a loop body");
+                ensure!(i == n - 1, "affine.yield must terminate its block");
+            }
+            _ => {}
+        }
+        verify_op_types(f, op)?;
+        if let Some(region) = &op.region {
+            ensure!(region.args.len() == 1, "affine.for region must have one iv arg");
+            ensure!(
+                f.value_type(region.args[0]) == &Type::Index,
+                "affine.for iv must be index-typed"
+            );
+            ensure!(
+                matches!(
+                    region.ops.last().map(|o| o.kind),
+                    Some(OpKind::Affine(AffineOp::Yield))
+                ),
+                "affine.for body must end in affine.yield"
+            );
+            let lb = op.attrs.get_int("lb").unwrap_or(0);
+            let ub = op.attrs.get_int("ub").unwrap_or(0);
+            let step = op.attrs.get_int("step").unwrap_or(1);
+            ensure!(step > 0, "affine.for step must be positive, got {step}");
+            ensure!(ub >= lb, "affine.for bounds inverted: {lb}..{ub}");
+            verify_block(f, region, defined, depth + 1)?;
+        }
+    }
+    // Top-level body must end with return.
+    if depth == 0 {
+        ensure!(
+            matches!(block.ops.last().map(|o| o.kind), Some(OpKind::Return)),
+            "function body must end in func.return"
+        );
+    }
+    Ok(())
+}
+
+fn verify_op_types(f: &Function, op: &super::func::Operation) -> Result<()> {
+    let operand_types: Vec<Type> =
+        op.operands.iter().map(|&o| f.value_type(o).clone()).collect();
+    match op.kind {
+        OpKind::Xpu(x) => {
+            let inferred = x.infer_result(&operand_types, &op.attrs)?;
+            let declared = f.value_type(op.results[0]);
+            ensure!(
+                &inferred == declared,
+                "xpu.{}: declared result type {declared} != inferred {inferred}",
+                x.mnemonic()
+            );
+        }
+        OpKind::Arith(a) => {
+            if a == ArithOp::Constant {
+                ensure!(op.operands.is_empty(), "arith.constant takes no operands");
+            } else {
+                ensure!(!op.operands.is_empty(), "arith.{} needs operands", a.mnemonic());
+                for t in &operand_types {
+                    ensure!(
+                        matches!(t, Type::Scalar(_)),
+                        "arith.{}: non-scalar operand {t}",
+                        a.mnemonic()
+                    );
+                }
+            }
+            ensure!(
+                matches!(f.value_type(op.results[0]), Type::Scalar(_)),
+                "arith.{}: result must be scalar",
+                a.mnemonic()
+            );
+        }
+        OpKind::Affine(AffineOp::Load) | OpKind::Affine(AffineOp::VectorLoad) => {
+            let base = operand_types
+                .first()
+                .and_then(Type::as_memref)
+                .map(|t| t.rank());
+            let Some(rank) = base else { bail!("affine.load base must be a memref") };
+            ensure!(
+                op.operands.len() == 1 + rank,
+                "affine.load: expected {rank} indices"
+            );
+            for t in &operand_types[1..] {
+                ensure!(t == &Type::Index, "affine.load index must be index-typed");
+            }
+        }
+        OpKind::Affine(AffineOp::Store) | OpKind::Affine(AffineOp::VectorStore) => {
+            ensure!(op.operands.len() >= 2, "affine.store needs value + memref");
+            let Some(mr) = operand_types[1].as_memref() else {
+                bail!("affine.store target must be a memref")
+            };
+            ensure!(
+                op.operands.len() == 2 + mr.rank(),
+                "affine.store: expected {} indices",
+                mr.rank()
+            );
+        }
+        OpKind::MemRef(_) => {
+            ensure!(
+                f.value_type(op.results[0]).as_memref().is_some(),
+                "memref.alloc result must be a memref"
+            );
+        }
+        _ => {}
+    }
+    Ok(())
+}
+
+/// Convenience: ids of all values live in `f` (for tests).
+pub fn all_value_ids(f: &Function) -> Vec<ValueId> {
+    (0..f.num_values() as u32).map(ValueId).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mlir::attr::{Attr, Attrs};
+    use crate::mlir::func::FuncBuilder;
+    use crate::mlir::ops::XpuOp;
+    use crate::mlir::parser::parse_function;
+    use crate::mlir::types::DType;
+
+    #[test]
+    fn builder_output_verifies() {
+        let mut b = FuncBuilder::new("ok");
+        let x = b.arg(Type::tensor(vec![2, 4], DType::F32));
+        let y = b.xpu(XpuOp::Relu, &[x], Attrs::new()).unwrap();
+        let f = b.ret(&[y]).unwrap();
+        verify_function(&f).unwrap();
+    }
+
+    #[test]
+    fn catches_declared_type_lie() {
+        // Parsed text declares a wrong result shape for matmul.
+        let src = "\
+func.func @bad(%arg0: tensor<4x8xf32>, %arg1: tensor<8x16xf32>) -> tensor<4x99xf32> {
+  %0 = \"xpu.matmul\"(%arg0, %arg1) : (tensor<4x8xf32>, tensor<8x16xf32>) -> tensor<4x99xf32>
+  return %0 : tensor<4x99xf32>
+}
+";
+        let f = parse_function(src).unwrap();
+        let err = verify_function(&f).unwrap_err();
+        assert!(err.to_string().contains("inferred"));
+    }
+
+    #[test]
+    fn loop_function_verifies() {
+        let mut b = FuncBuilder::new("loop");
+        let m = b.alloc(vec![4, 4], DType::F32);
+        let i = b.begin_for(0, 4, 1);
+        let v = b.load(m, &[i, i]).unwrap();
+        b.store(v, m, &[i, i]).unwrap();
+        b.end_for().unwrap();
+        let f = b.ret(&[]).unwrap();
+        verify_function(&f).unwrap();
+    }
+
+    #[test]
+    fn catches_bad_attr_in_parsed_op() {
+        let src = "\
+func.func @bad(%arg0: tensor<2x3x4xf32>) -> tensor<6x4xf32> {
+  %0 = \"xpu.reshape\"(%arg0) {shape = [5, 4]} : (tensor<2x3x4xf32>) -> tensor<6x4xf32>
+  return %0 : tensor<6x4xf32>
+}
+";
+        let f = parse_function(src).unwrap();
+        assert!(verify_function(&f).is_err());
+    }
+
+    #[test]
+    fn value_id_enumeration() {
+        let mut b = FuncBuilder::new("ids");
+        let x = b.arg(Type::tensor(vec![2], DType::F32));
+        let y = b.xpu(XpuOp::Neg, &[x], Attrs::new()).unwrap();
+        let f = b.ret(&[y]).unwrap();
+        assert_eq!(all_value_ids(&f).len(), 2);
+    }
+
+    #[test]
+    fn const_op_verifies() {
+        let mut b = FuncBuilder::new("c");
+        let c = b
+            .xpu(
+                XpuOp::Const,
+                &[],
+                Attrs::new()
+                    .with("shape", Attr::IntArray(vec![8]))
+                    .with("dtype", Attr::Str("f32".into())),
+            )
+            .unwrap();
+        let f = b.ret(&[c]).unwrap();
+        verify_function(&f).unwrap();
+    }
+}

@@ -1,0 +1,202 @@
+//! AOT artifact manifest: the contract between `python/compile/aot.py`
+//! (build time) and the Rust runtime (request time).
+
+use crate::json::parse;
+use anyhow::{anyhow, ensure, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use super::tensor::Tensor;
+
+/// One exported model variant.
+#[derive(Debug, Clone)]
+pub struct ModelManifest {
+    pub name: String,
+    /// Canonical (sorted) parameter names — flattening order at the AOT
+    /// boundary.
+    pub param_order: Vec<String>,
+    pub param_shapes: BTreeMap<String, Vec<i64>>,
+    pub max_len: usize,
+    pub vocab_size: usize,
+    pub predict_batches: Vec<usize>,
+    pub train_batch: usize,
+    /// Logical file key → relative path (e.g. "predict_b32" → "....hlo.txt").
+    pub files: BTreeMap<String, String>,
+}
+
+impl ModelManifest {
+    /// Number of parameter tensors.
+    pub fn n_params(&self) -> usize {
+        self.param_order.len()
+    }
+
+    /// Total scalar parameter count.
+    pub fn total_params(&self) -> usize {
+        self.param_order
+            .iter()
+            .map(|k| self.param_shapes[k].iter().product::<i64>() as usize)
+            .sum()
+    }
+
+    pub fn file(&self, key: &str) -> Result<&str> {
+        self.files
+            .get(key)
+            .map(|s| s.as_str())
+            .ok_or_else(|| anyhow!("model {}: no artifact file '{key}'", self.name))
+    }
+
+    /// Pick the predict artifact for a batch size (smallest batch >= n, or
+    /// the largest available). Returns (file key, batch).
+    pub fn predict_key_for(&self, n: usize, pallas: bool) -> (String, usize) {
+        let mut batches = self.predict_batches.clone();
+        batches.sort_unstable();
+        let b = batches
+            .iter()
+            .copied()
+            .find(|&b| b >= n)
+            .unwrap_or_else(|| batches.last().copied().unwrap_or(1));
+        let suffix = if pallas { "_pallas" } else { "" };
+        (format!("predict_b{b}{suffix}"), b)
+    }
+}
+
+/// The whole artifact directory.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub vocab_size: usize,
+    pub models: BTreeMap<String, ModelManifest>,
+}
+
+impl Manifest {
+    /// Load `artifacts/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| format!("reading {path:?}"))?;
+        let j = parse(&text)?;
+        let vocab_size = j.req_f64("vocab_size")? as usize;
+        let mut models = BTreeMap::new();
+        for (name, m) in j.req("models")?.as_obj().ok_or_else(|| anyhow!("models not an object"))? {
+            let param_order: Vec<String> = m
+                .req_arr("param_order")?
+                .iter()
+                .map(|t| t.as_str().map(str::to_string).ok_or_else(|| anyhow!("bad param name")))
+                .collect::<Result<_>>()?;
+            let mut param_shapes = BTreeMap::new();
+            let shapes =
+                m.req("param_shapes")?.as_obj().ok_or_else(|| anyhow!("param_shapes"))?;
+            for (k, v) in shapes {
+                let dims: Vec<i64> = v
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("shape of {k}"))?
+                    .iter()
+                    .map(|d| d.as_f64().map(|f| f as i64).ok_or_else(|| anyhow!("dim")))
+                    .collect::<Result<_>>()?;
+                param_shapes.insert(k.clone(), dims);
+            }
+            let mut files = BTreeMap::new();
+            for (k, v) in m.req("files")?.as_obj().ok_or_else(|| anyhow!("files"))? {
+                files.insert(k.clone(), v.as_str().unwrap_or_default().to_string());
+            }
+            let predict_batches = m
+                .req_arr("predict_batches")?
+                .iter()
+                .filter_map(|b| b.as_u64().map(|x| x as usize))
+                .collect();
+            models.insert(
+                name.clone(),
+                ModelManifest {
+                    name: name.clone(),
+                    param_order,
+                    param_shapes,
+                    max_len: m.req_f64("max_len")? as usize,
+                    vocab_size,
+                    predict_batches,
+                    train_batch: m.req_f64("train_batch")? as usize,
+                    files,
+                },
+            );
+        }
+        ensure!(!models.is_empty(), "manifest has no models");
+        Ok(Manifest { dir: dir.to_path_buf(), vocab_size, models })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelManifest> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown model '{name}' (have: {:?})", self.models.keys()))
+    }
+
+    /// Absolute path of an artifact file.
+    pub fn path_of(&self, rel: &str) -> PathBuf {
+        self.dir.join(rel)
+    }
+
+    /// Load the initial parameters of a model (ordered per param_order).
+    pub fn load_init_params(&self, model: &str) -> Result<Vec<Tensor>> {
+        let m = self.model(model)?;
+        let init_dir = self.dir.join(m.file("init_dir")?);
+        m.param_order
+            .iter()
+            .map(|k| {
+                Tensor::from_f32_file(&init_dir.join(format!("{k}.f32")), m.param_shapes[k].clone())
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        // CARGO_MANIFEST_DIR = rust/; artifacts sit next to it.
+        Path::new(env!("CARGO_MANIFEST_DIR")).parent().unwrap().join("artifacts")
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.models.contains_key("conv_ops"), "{:?}", m.models.keys());
+        let conv = m.model("conv_ops").unwrap();
+        assert_eq!(conv.max_len, 128);
+        assert!(conv.n_params() > 10);
+        assert!(conv.total_params() > 100_000);
+        assert!(conv.file("train_step").unwrap().ends_with(".hlo.txt"));
+        // Param loading.
+        let params = m.load_init_params("conv_ops").unwrap();
+        assert_eq!(params.len(), conv.n_params());
+        assert_eq!(params[0].shape(), &conv.param_shapes[&conv.param_order[0]][..]);
+    }
+
+    #[test]
+    fn predict_key_selection() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        let conv = m.model("conv_ops").unwrap();
+        let (k1, b1) = conv.predict_key_for(1, false);
+        assert_eq!((k1.as_str(), b1), ("predict_b1", 1));
+        let (k2, b2) = conv.predict_key_for(7, true);
+        assert_eq!((k2.as_str(), b2), ("predict_b32_pallas", 32));
+        let (k3, b3) = conv.predict_key_for(999, false);
+        assert_eq!((k3.as_str(), b3), ("predict_b32", 32));
+    }
+
+    #[test]
+    fn missing_model_is_error() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.model("nope").is_err());
+    }
+}

@@ -1,0 +1,195 @@
+//! PJRT runtime: load HLO text, compile once, execute from the hot path.
+//!
+//! Wraps the `xla` crate (xla_extension 0.5.1, CPU PJRT). One
+//! [`Runtime`] per process; executables are compiled once and cached by
+//! artifact path.
+
+use super::tensor::Tensor;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Process-wide PJRT client + executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
+}
+
+/// A compiled executable plus a little bookkeeping.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub path: String,
+    pub compile_ms: f64,
+    calls: Mutex<u64>,
+}
+
+impl Runtime {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text file (cached by path).
+    pub fn load(&self, path: &Path) -> Result<std::sync::Arc<Executable>> {
+        let key = path.to_string_lossy().to_string();
+        if let Some(e) = self.cache.lock().unwrap().get(&key) {
+            return Ok(e.clone());
+        }
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&key)
+            .with_context(|| format!("parsing HLO text {key}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compiling {key}"))?;
+        let compiled = std::sync::Arc::new(Executable {
+            exe,
+            path: key.clone(),
+            compile_ms: t0.elapsed().as_secs_f64() * 1e3,
+            calls: Mutex::new(0),
+        });
+        self.cache.lock().unwrap().insert(key, compiled.clone());
+        Ok(compiled)
+    }
+
+    /// Number of cached executables.
+    pub fn cached(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}
+
+impl Executable {
+    /// Execute with host tensors; unpacks the 1-tuple-of-N convention
+    /// produced by `return_tuple=True` lowering.
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(Tensor::to_literal).collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        *self.calls.lock().unwrap() += 1;
+        let parts = result.to_tuple()?;
+        parts.iter().map(Tensor::from_literal).collect()
+    }
+
+    /// How many times this executable has run.
+    pub fn call_count(&self) -> u64 {
+        *self.calls.lock().unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifacts::Manifest;
+    use std::path::PathBuf;
+
+    fn artifacts_dir() -> PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).parent().unwrap().join("artifacts")
+    }
+
+    #[test]
+    fn load_and_run_predict() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let rt = Runtime::cpu().unwrap();
+        let manifest = Manifest::load(&dir).unwrap();
+        let m = manifest.model("fc_ops").unwrap();
+        let exe = rt.load(&manifest.path_of(m.file("predict_b1").unwrap())).unwrap();
+        let mut inputs = manifest.load_init_params("fc_ops").unwrap();
+        let ids = Tensor::i32(vec![1, m.max_len as i64], vec![2i32; m.max_len]).unwrap();
+        inputs.push(ids);
+        let out = exe.run(&inputs).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].shape(), &[1]);
+        assert!(out[0].first_f32().unwrap().is_finite());
+        assert_eq!(exe.call_count(), 1);
+        // Cache hit.
+        let exe2 = rt.load(&manifest.path_of(m.file("predict_b1").unwrap())).unwrap();
+        assert_eq!(rt.cached(), 1);
+        assert_eq!(exe2.call_count(), 1);
+    }
+
+    #[test]
+    fn pallas_and_ref_predicts_agree() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let rt = Runtime::cpu().unwrap();
+        let manifest = Manifest::load(&dir).unwrap();
+        let m = manifest.model("conv_ops").unwrap();
+        let mut inputs = manifest.load_init_params("conv_ops").unwrap();
+        let ids: Vec<i32> = (0..m.max_len as i32).map(|i| 2 + (i * 7) % 50).collect();
+        inputs.push(Tensor::i32(vec![1, m.max_len as i64], ids).unwrap());
+        let a = rt
+            .load(&manifest.path_of(m.file("predict_b1").unwrap()))
+            .unwrap()
+            .run(&inputs)
+            .unwrap();
+        let b = rt
+            .load(&manifest.path_of(m.file("predict_b1_pallas").unwrap()))
+            .unwrap()
+            .run(&inputs)
+            .unwrap();
+        let (x, y) = (a[0].first_f32().unwrap(), b[0].first_f32().unwrap());
+        assert!(
+            (x - y).abs() < 1e-4 * (1.0 + x.abs()),
+            "ref {x} vs pallas {y}"
+        );
+    }
+
+    #[test]
+    fn train_step_decreases_loss() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let rt = Runtime::cpu().unwrap();
+        let manifest = Manifest::load(&dir).unwrap();
+        let m = manifest.model("fc_ops").unwrap();
+        let exe = rt.load(&manifest.path_of(m.file("train_step").unwrap())).unwrap();
+        let params = manifest.load_init_params("fc_ops").unwrap();
+        let n = params.len();
+        let zeros: Vec<Tensor> = params
+            .iter()
+            .map(|p| Tensor::zeros_f32(p.shape().to_vec()))
+            .collect();
+        let b = m.train_batch as i64;
+        let ids = Tensor::i32(
+            vec![b, m.max_len as i64],
+            (0..b * m.max_len as i64).map(|i| 2 + (i % 40) as i32).collect(),
+        )
+        .unwrap();
+        let targets = Tensor::f32(vec![b], (0..b).map(|i| (i as f32) / b as f32).collect()).unwrap();
+
+        let mut state: Vec<Tensor> = params.into_iter().chain(zeros.clone()).chain(zeros).collect();
+        state.push(Tensor::scalar_f32(0.0));
+        state.push(ids.clone());
+        state.push(targets.clone());
+        let mut first = f32::NAN;
+        let mut last = f32::NAN;
+        for step in 0..10 {
+            let out = exe.run(&state).unwrap();
+            assert_eq!(out.len(), 3 * n + 2);
+            let loss = out[3 * n + 1].first_f32().unwrap();
+            if step == 0 {
+                first = loss;
+            }
+            last = loss;
+            // Thread updated state back in.
+            for (i, t) in out.into_iter().take(3 * n + 1).enumerate() {
+                state[i] = t;
+            }
+        }
+        assert!(last < first, "loss did not decrease: {first} -> {last}");
+    }
+}

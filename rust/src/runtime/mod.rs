@@ -1,0 +1,16 @@
+//! PJRT runtime layer: the only place the `xla` crate is touched.
+//!
+//! - [`tensor`] — host tensors ↔ literals
+//! - [`artifacts`] — manifest of the AOT-compiled HLO files
+//! - [`client`] — PJRT client, compile-once executable cache, execution
+//!
+//! Python authors the computations (L2/L1); after `make artifacts` this
+//! module makes the Rust binary self-contained.
+
+pub mod artifacts;
+pub mod client;
+pub mod tensor;
+
+pub use artifacts::{Manifest, ModelManifest};
+pub use client::{Executable, Runtime};
+pub use tensor::Tensor;

@@ -1,0 +1,166 @@
+//! Host tensors and conversion to/from PJRT literals.
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+/// A host-side tensor (only the dtypes the models use).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tensor {
+    F32 { shape: Vec<i64>, data: Vec<f32> },
+    I32 { shape: Vec<i64>, data: Vec<i32> },
+}
+
+impl Tensor {
+    pub fn f32(shape: Vec<i64>, data: Vec<f32>) -> Result<Tensor> {
+        ensure!(
+            shape.iter().product::<i64>() as usize == data.len(),
+            "shape {shape:?} does not match {} elements",
+            data.len()
+        );
+        Ok(Tensor::F32 { shape, data })
+    }
+
+    pub fn i32(shape: Vec<i64>, data: Vec<i32>) -> Result<Tensor> {
+        ensure!(
+            shape.iter().product::<i64>() as usize == data.len(),
+            "shape {shape:?} does not match {} elements",
+            data.len()
+        );
+        Ok(Tensor::I32 { shape, data })
+    }
+
+    pub fn scalar_f32(v: f32) -> Tensor {
+        Tensor::F32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn zeros_f32(shape: Vec<i64>) -> Tensor {
+        let n = shape.iter().product::<i64>() as usize;
+        Tensor::F32 { shape, data: vec![0.0; n] }
+    }
+
+    pub fn shape(&self) -> &[i64] {
+        match self {
+            Tensor::F32 { shape, .. } | Tensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn num_elements(&self) -> usize {
+        match self {
+            Tensor::F32 { data, .. } => data.len(),
+            Tensor::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    /// First element of an f32 tensor (loss scalars etc).
+    pub fn first_f32(&self) -> Result<f32> {
+        Ok(*self.as_f32()?.first().ok_or_else(|| anyhow!("empty tensor"))?)
+    }
+
+    /// Convert to a PJRT literal.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        Ok(match self {
+            Tensor::F32 { shape, data } => {
+                let lit = xla::Literal::vec1(data);
+                if shape.is_empty() {
+                    // vec1 of len-1 → reshape to scalar shape []
+                    lit.reshape(&[])?
+                } else {
+                    lit.reshape(shape)?
+                }
+            }
+            Tensor::I32 { shape, data } => {
+                let lit = xla::Literal::vec1(data);
+                if shape.is_empty() {
+                    lit.reshape(&[])?
+                } else {
+                    lit.reshape(shape)?
+                }
+            }
+        })
+    }
+
+    /// Convert back from a PJRT literal.
+    pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<i64> = shape.dims().to_vec();
+        match shape.element_type() {
+            xla::ElementType::F32 => Ok(Tensor::F32 { shape: dims, data: lit.to_vec::<f32>()? }),
+            xla::ElementType::S32 => Ok(Tensor::I32 { shape: dims, data: lit.to_vec::<i32>()? }),
+            other => bail!("unsupported literal element type {other:?}"),
+        }
+    }
+
+    /// Load a raw little-endian f32 blob (the `init_*/{name}.f32` files).
+    pub fn from_f32_file(path: &std::path::Path, shape: Vec<i64>) -> Result<Tensor> {
+        let bytes = std::fs::read(path)?;
+        ensure!(bytes.len() % 4 == 0, "file {path:?} is not a multiple of 4 bytes");
+        let n = bytes.len() / 4;
+        ensure!(
+            shape.iter().product::<i64>() as usize == n,
+            "file {path:?} has {n} f32s, expected shape {shape:?}"
+        );
+        let mut data = Vec::with_capacity(n);
+        for c in bytes.chunks_exact(4) {
+            data.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+        }
+        Ok(Tensor::F32 { shape, data })
+    }
+
+    /// Write as a raw little-endian f32 blob (checkpoints).
+    pub fn to_f32_file(&self, path: &std::path::Path) -> Result<()> {
+        let data = self.as_f32()?;
+        let mut bytes = Vec::with_capacity(data.len() * 4);
+        for v in data {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        std::fs::write(path, bytes)?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_checks_shape() {
+        assert!(Tensor::f32(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::f32(vec![2, 3], vec![0.0; 5]).is_err());
+        assert!(Tensor::i32(vec![4], vec![1, 2, 3, 4]).is_ok());
+    }
+
+    #[test]
+    fn accessors() {
+        let t = Tensor::f32(vec![2], vec![1.5, 2.5]).unwrap();
+        assert_eq!(t.as_f32().unwrap(), &[1.5, 2.5]);
+        assert!(t.as_i32().is_err());
+        assert_eq!(t.first_f32().unwrap(), 1.5);
+        assert_eq!(t.num_elements(), 2);
+    }
+
+    #[test]
+    fn f32_file_roundtrip() {
+        let dir = std::env::temp_dir().join("mlir_cost_tensor_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.f32");
+        let t = Tensor::f32(vec![2, 2], vec![1.0, -2.0, 3.5, 0.25]).unwrap();
+        t.to_f32_file(&path).unwrap();
+        let t2 = Tensor::from_f32_file(&path, vec![2, 2]).unwrap();
+        assert_eq!(t, t2);
+        assert!(Tensor::from_f32_file(&path, vec![5]).is_err());
+        std::fs::remove_file(path).ok();
+    }
+}

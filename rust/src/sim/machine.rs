@@ -1,0 +1,103 @@
+//! The modeled xPU: functional units, latencies, issue model.
+//!
+//! Numbers are representative of contemporary AI-accelerator vector cores
+//! (VPU-class SIMD + systolic MXU + SFU + scratchpad LSU). The absolute
+//! values matter less than their *relationships* — the cost model learns
+//! whatever machine this defines, exactly as the paper's model learns
+//! Intel's unnamed accelerator.
+
+use crate::lower::isa::{Instr, Mem};
+
+/// Functional units of the xPU core.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Unit {
+    /// Vector ALU — the unit whose utilization the paper predicts.
+    Valu,
+    /// Special-function unit (transcendentals, division).
+    Sfu,
+    /// Systolic matrix unit.
+    Mxu,
+    /// Load/store between scratchpad and the vector register file.
+    Lsu,
+}
+
+pub const UNITS: [Unit; 4] = [Unit::Valu, Unit::Sfu, Unit::Mxu, Unit::Lsu];
+
+/// Machine description.
+#[derive(Debug, Clone)]
+pub struct XpuConfig {
+    /// In-order issue slots per cycle.
+    pub issue_width: u64,
+    /// (latency, initiation interval) per unit.
+    pub valu: (u64, u64),
+    pub sfu: (u64, u64),
+    pub mxu: (u64, u64),
+    pub lsu_scratch: (u64, u64),
+    pub lsu_hbm: (u64, u64),
+    /// Extra (latency, ii) added to strided accesses.
+    pub strided_penalty: (u64, u64),
+    /// HBM↔scratchpad DMA bandwidth.
+    pub dma_bytes_per_cycle: u64,
+    /// Fixed kernel-launch overhead.
+    pub startup_cycles: u64,
+}
+
+impl Default for XpuConfig {
+    fn default() -> Self {
+        XpuConfig {
+            issue_width: 2,
+            valu: (2, 1),
+            sfu: (6, 2),
+            mxu: (8, 2),
+            lsu_scratch: (4, 1),
+            lsu_hbm: (24, 4),
+            strided_penalty: (8, 2),
+            dma_bytes_per_cycle: 64,
+            startup_cycles: 500,
+        }
+    }
+}
+
+impl XpuConfig {
+    /// Which unit executes `instr`, with (latency, initiation interval).
+    pub fn cost(&self, instr: &Instr) -> (Unit, u64, u64) {
+        match instr {
+            Instr::VLoad { mem, strided, .. } | Instr::VStore { mem, strided, .. } => {
+                let (mut lat, mut ii) = match mem {
+                    Mem::Scratch => self.lsu_scratch,
+                    Mem::Hbm => self.lsu_hbm,
+                };
+                if *strided {
+                    lat += self.strided_penalty.0;
+                    ii += self.strided_penalty.1;
+                }
+                (Unit::Lsu, lat, ii)
+            }
+            Instr::SpillLoad { .. } | Instr::SpillStore { .. } => {
+                (Unit::Lsu, self.lsu_scratch.0, self.lsu_scratch.1)
+            }
+            Instr::VOp { .. } => (Unit::Valu, self.valu.0, self.valu.1),
+            Instr::Sfu { .. } => (Unit::Sfu, self.sfu.0, self.sfu.1),
+            Instr::Macc { .. } => (Unit::Mxu, self.mxu.0, self.mxu.1),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lower::isa::{VArith, VReg};
+
+    #[test]
+    fn cost_mapping() {
+        let cfg = XpuConfig::default();
+        let r = VReg { id: 0, width: 1 };
+        let (u, lat, _) = cfg.cost(&Instr::VLoad { dst: r, mem: Mem::Hbm, strided: true });
+        assert_eq!(u, Unit::Lsu);
+        assert_eq!(lat, 24 + 8);
+        let (u, ..) = cfg.cost(&Instr::VOp { op: VArith::Add, dst: r, a: r, b: None });
+        assert_eq!(u, Unit::Valu);
+        let (u, ..) = cfg.cost(&Instr::Macc { acc: r, a: r, b: r });
+        assert_eq!(u, Unit::Mxu);
+    }
+}

@@ -1,0 +1,174 @@
+//! xPU accelerator simulator — the ground-truth generator.
+//!
+//! The paper compiles each MLIR function with Intel's in-house DL-compiler,
+//! runs it on their AI accelerator, and records register pressure and
+//! vector-ALU ("xpu") utilization as labels. Here the role of compiler +
+//! silicon is played by [`crate::lower`] + this module: same causal chain
+//! (high-level IR → fused tiled loops → ISA → machine behavior), fully
+//! deterministic and inspectable.
+
+pub mod exec;
+pub mod machine;
+
+pub use exec::{simulate, SimReport};
+pub use machine::{Unit, XpuConfig};
+
+use crate::lower::{analyze, apply_spills, lower, CodegenOpts};
+use crate::mlir::Function;
+use anyhow::Result;
+
+/// Ground-truth labels for one MLIR function — the dataset targets.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Labels {
+    /// Peak vector-register demand (paper target #1, *registerpressure*).
+    pub regpressure: f64,
+    /// Vector-ALU utilization % (paper target #2, *xpuutilization*).
+    pub xpu_util: f64,
+    /// Total cycles (paper's future-work latency target).
+    pub cycles: f64,
+    /// Registers spilled at the peak.
+    pub spills: u32,
+    /// Dynamic instruction count.
+    pub dyn_instrs: u64,
+}
+
+/// Target variable selector used across dataset/training/serving.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Target {
+    RegPressure,
+    XpuUtil,
+    Cycles,
+}
+
+impl Target {
+    pub const ALL: [Target; 3] = [Target::RegPressure, Target::XpuUtil, Target::Cycles];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Target::RegPressure => "regpressure",
+            Target::XpuUtil => "xpuutil",
+            Target::Cycles => "cycles",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Target> {
+        Target::ALL.iter().copied().find(|t| t.name() == s)
+    }
+
+    pub fn of(self, labels: &Labels) -> f64 {
+        match self {
+            Target::RegPressure => labels.regpressure,
+            Target::XpuUtil => labels.xpu_util,
+            Target::Cycles => labels.cycles,
+        }
+    }
+}
+
+/// Compile + allocate + simulate one function: the full ground-truth path.
+pub fn ground_truth(f: &Function, opts: &CodegenOpts, cfg: &XpuConfig) -> Result<Labels> {
+    let mut prog = lower(f, opts)?;
+    let reg = analyze(&prog);
+    apply_spills(&mut prog, &reg);
+    let sim = simulate(&prog, cfg);
+    Ok(Labels {
+        regpressure: reg.max_live as f64,
+        xpu_util: sim.valu_util_pct,
+        cycles: sim.cycles as f64,
+        spills: reg.spilled,
+        dyn_instrs: sim.dyn_instrs,
+    })
+}
+
+/// Ground truth with default compiler/machine settings.
+pub fn ground_truth_default(f: &Function) -> Result<Labels> {
+    ground_truth(f, &CodegenOpts::default(), &XpuConfig::default())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graphgen::{corpus_specs, generate, Family, GraphSpec};
+
+    #[test]
+    fn labels_for_all_families() {
+        for (i, family) in Family::ALL.into_iter().enumerate() {
+            let spec = GraphSpec { family, structure_seed: 31 + i as u64, shape_seed: 17 };
+            let f = generate(&spec).unwrap();
+            let l = ground_truth_default(&f).unwrap();
+            assert!(l.regpressure > 0.0, "{family:?}: zero pressure");
+            assert!(l.cycles > 0.0);
+            assert!((0.0..=100.0).contains(&l.xpu_util), "{family:?}: util {}", l.xpu_util);
+        }
+    }
+
+    #[test]
+    fn labels_vary_across_corpus() {
+        let specs = corpus_specs(1234, 30, 0);
+        let labels: Vec<Labels> = specs
+            .iter()
+            .map(|s| ground_truth_default(&generate(s).unwrap()).unwrap())
+            .collect();
+        let rp: Vec<f64> = labels.iter().map(|l| l.regpressure).collect();
+        let util: Vec<f64> = labels.iter().map(|l| l.xpu_util).collect();
+        let spread = |v: &[f64]| {
+            let mn = v.iter().cloned().fold(f64::INFINITY, f64::min);
+            let mx = v.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            mx - mn
+        };
+        assert!(spread(&rp) > 4.0, "regpressure too flat: {rp:?}");
+        assert!(spread(&util) > 5.0, "util too flat: {util:?}");
+    }
+
+    #[test]
+    fn fusion_reduces_cycles() {
+        use crate::lower::CodegenOpts;
+        let spec = GraphSpec { family: Family::Mlp, structure_seed: 2, shape_seed: 3 };
+        let f = generate(&spec).unwrap();
+        let cfg = XpuConfig::default();
+        let fused = ground_truth(&f, &CodegenOpts::default(), &cfg).unwrap();
+        let unfused =
+            ground_truth(&f, &CodegenOpts { fuse: false, ..Default::default() }, &cfg).unwrap();
+        assert!(
+            fused.cycles <= unfused.cycles,
+            "fusion should not slow down: {} vs {}",
+            fused.cycles,
+            unfused.cycles
+        );
+    }
+
+    #[test]
+    fn unroll_increases_pressure() {
+        use crate::lower::CodegenOpts;
+        use crate::mlir::{Attrs, DType, FuncBuilder, Type, XpuOp};
+        // Standalone elementwise chain (in an MLP the elementwise tail is
+        // fused into the matmul epilogue, which unroll does not touch).
+        let mut b = FuncBuilder::new("ew");
+        let x = b.arg(Type::tensor(vec![4096], DType::F32));
+        let y = b.arg(Type::tensor(vec![4096], DType::F32));
+        let s = b.xpu(XpuOp::Add, &[x, y], Attrs::new()).unwrap();
+        let t = b.xpu(XpuOp::Tanh, &[s], Attrs::new()).unwrap();
+        let f = b.ret(&[t]).unwrap();
+        let cfg = XpuConfig::default();
+        let u1 = ground_truth(&f, &CodegenOpts { unroll: Some(1), ..Default::default() }, &cfg)
+            .unwrap();
+        let u8 = ground_truth(&f, &CodegenOpts { unroll: Some(8), ..Default::default() }, &cfg)
+            .unwrap();
+        assert!(
+            u8.regpressure > u1.regpressure,
+            "unroll 8 vs 1: {} vs {}",
+            u8.regpressure,
+            u1.regpressure
+        );
+    }
+
+    #[test]
+    fn target_selector() {
+        let l = Labels { regpressure: 10.0, xpu_util: 55.0, cycles: 999.0, spills: 0, dyn_instrs: 1 };
+        assert_eq!(Target::RegPressure.of(&l), 10.0);
+        assert_eq!(Target::XpuUtil.of(&l), 55.0);
+        assert_eq!(Target::Cycles.of(&l), 999.0);
+        for t in Target::ALL {
+            assert_eq!(Target::parse(t.name()), Some(t));
+        }
+    }
+}

@@ -1,0 +1,169 @@
+//! Vocabulary: token string ↔ id, built on the training split only.
+//!
+//! Id 0 is PAD, id 1 is OOV. The paper leans on the observation that "in
+//! DL subgraphs many of the tensor sizes appear frequently across multiple
+//! models, [so] the probability of OOV tokens remains low" — `min_count`
+//! trims the long tail to keep that honest, and builtin op tokens are
+//! always present.
+
+use crate::json::{parse, Json};
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+
+pub const PAD_ID: u32 = 0;
+pub const OOV_ID: u32 = 1;
+
+/// Token vocabulary.
+#[derive(Debug, Clone)]
+pub struct Vocab {
+    to_id: HashMap<String, u32>,
+    to_token: Vec<String>,
+}
+
+impl Vocab {
+    /// Build from an iterator of token streams. Tokens seen fewer than
+    /// `min_count` times are dropped (they will encode as OOV). Builtin
+    /// op/keyword tokens are always included.
+    pub fn build<'a, I>(streams: I, min_count: usize) -> Vocab
+    where
+        I: Iterator<Item = &'a Vec<String>>,
+    {
+        let mut counts: HashMap<&str, usize> = HashMap::new();
+        let mut order: Vec<&str> = Vec::new();
+        for stream in streams {
+            for tok in stream {
+                let c = counts.entry(tok.as_str()).or_insert(0);
+                if *c == 0 {
+                    order.push(tok.as_str());
+                }
+                *c += 1;
+            }
+        }
+        let mut to_token: Vec<String> = vec!["<pad>".to_string(), "<oov>".to_string()];
+        let mut to_id: HashMap<String, u32> = HashMap::new();
+        to_id.insert("<pad>".into(), PAD_ID);
+        to_id.insert("<oov>".into(), OOV_ID);
+        let mut add = |tok: &str| {
+            if !to_id.contains_key(tok) {
+                let id = to_token.len() as u32;
+                to_token.push(tok.to_string());
+                to_id.insert(tok.to_string(), id);
+            }
+        };
+        for tok in super::builtin_tokens() {
+            add(&tok);
+        }
+        for tok in order {
+            if counts[tok] >= min_count {
+                add(tok);
+            }
+        }
+        Vocab { to_id, to_token }
+    }
+
+    pub fn id_of(&self, token: &str) -> u32 {
+        self.to_id.get(token).copied().unwrap_or(OOV_ID)
+    }
+
+    pub fn token_of(&self, id: u32) -> Option<&str> {
+        self.to_token.get(id as usize).map(|s| s.as_str())
+    }
+
+    pub fn len(&self) -> usize {
+        self.to_token.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false // pad + oov always present
+    }
+
+    /// Serialize to JSON (`{"tokens": [...]}`, index = id).
+    pub fn to_json(&self) -> Json {
+        Json::obj().with(
+            "tokens",
+            Json::Arr(self.to_token.iter().map(|t| Json::str(t.clone())).collect()),
+        )
+    }
+
+    /// Load from the JSON produced by [`Vocab::to_json`].
+    pub fn from_json(src: &str) -> Result<Vocab> {
+        let v = parse(src)?;
+        let toks = v.req_arr("tokens")?;
+        let mut to_token = Vec::with_capacity(toks.len());
+        let mut to_id = HashMap::with_capacity(toks.len());
+        for (i, t) in toks.iter().enumerate() {
+            let s = t.as_str().ok_or_else(|| anyhow!("non-string token at {i}"))?;
+            to_token.push(s.to_string());
+            to_id.insert(s.to_string(), i as u32);
+        }
+        anyhow::ensure!(to_token.len() >= 2, "vocab must include pad+oov");
+        Ok(Vocab { to_id, to_token })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Vocab> {
+        Vocab::from_json(&std::fs::read_to_string(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn streams(data: &[&[&str]]) -> Vec<Vec<String>> {
+        data.iter().map(|s| s.iter().map(|t| t.to_string()).collect()).collect()
+    }
+
+    #[test]
+    fn build_and_lookup() {
+        let s = streams(&[&["a", "b", "a"], &["a", "c"]]);
+        let v = Vocab::build(s.iter(), 1);
+        assert_ne!(v.id_of("a"), OOV_ID);
+        assert_ne!(v.id_of("b"), OOV_ID);
+        assert_eq!(v.id_of("zzz"), OOV_ID);
+        assert_eq!(v.token_of(PAD_ID), Some("<pad>"));
+        assert_eq!(v.token_of(OOV_ID), Some("<oov>"));
+    }
+
+    #[test]
+    fn min_count_trims_tail() {
+        let s = streams(&[&["common", "common", "rare"]]);
+        let v = Vocab::build(s.iter(), 2);
+        assert_ne!(v.id_of("common"), OOV_ID);
+        assert_eq!(v.id_of("rare"), OOV_ID);
+    }
+
+    #[test]
+    fn builtins_always_present() {
+        let s = streams(&[&["x"]]);
+        let v = Vocab::build(s.iter(), 1);
+        assert_ne!(v.id_of("xpu.matmul"), OOV_ID);
+        assert_ne!(v.id_of("affine.for"), OOV_ID);
+        assert_ne!(v.id_of("arith.fma"), OOV_ID);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let s = streams(&[&["1x128xf32", "%arg0", "xpu.mult"]]);
+        let v = Vocab::build(s.iter(), 1);
+        let text = v.to_json().to_string();
+        let v2 = Vocab::from_json(&text).unwrap();
+        assert_eq!(v.len(), v2.len());
+        assert_eq!(v.id_of("1x128xf32"), v2.id_of("1x128xf32"));
+        assert_eq!(v2.id_of("<pad>"), PAD_ID);
+    }
+
+    #[test]
+    fn ids_are_stable_and_dense() {
+        let s = streams(&[&["t1", "t2", "t3"]]);
+        let v = Vocab::build(s.iter(), 1);
+        for id in 0..v.len() as u32 {
+            let tok = v.token_of(id).unwrap();
+            assert_eq!(v.id_of(tok), id);
+        }
+    }
+}

@@ -1,0 +1,83 @@
+//! Checkpoints: trained parameters as raw f32 blobs + JSON metadata, so a
+//! `mlir-cost serve` process (or a bench) can pick up where training ended.
+
+use crate::json::{parse, Json};
+use crate::runtime::{Manifest, Tensor};
+use anyhow::{ensure, Context, Result};
+use std::path::Path;
+
+/// Save parameter tensors for `model` under `dir`.
+pub fn save(
+    dir: &Path,
+    manifest: &Manifest,
+    model: &str,
+    params: &[Tensor],
+    meta: Json,
+) -> Result<()> {
+    let mm = manifest.model(model)?;
+    ensure!(params.len() == mm.n_params(), "param count mismatch");
+    std::fs::create_dir_all(dir).with_context(|| format!("creating {dir:?}"))?;
+    for (k, t) in mm.param_order.iter().zip(params) {
+        t.to_f32_file(&dir.join(format!("{k}.f32")))?;
+    }
+    let doc = Json::obj()
+        .with("model", Json::str(model))
+        .with("n_params", Json::num(params.len() as f64))
+        .with("meta", meta);
+    std::fs::write(dir.join("checkpoint.json"), doc.to_string())?;
+    Ok(())
+}
+
+/// Load a checkpoint's parameters (ordered per the manifest).
+pub fn load(dir: &Path, manifest: &Manifest, model: &str) -> Result<Vec<Tensor>> {
+    let mm = manifest.model(model)?;
+    let meta_text = std::fs::read_to_string(dir.join("checkpoint.json"))
+        .with_context(|| format!("no checkpoint.json in {dir:?}"))?;
+    let meta = parse(&meta_text)?;
+    ensure!(
+        meta.req_str("model")? == model,
+        "checkpoint is for model '{}', wanted '{model}'",
+        meta.req_str("model")?
+    );
+    mm.param_order
+        .iter()
+        .map(|k| Tensor::from_f32_file(&dir.join(format!("{k}.f32")), mm.param_shapes[k].clone()))
+        .collect()
+}
+
+/// Read checkpoint metadata (if present).
+pub fn load_meta(dir: &Path) -> Result<Json> {
+    let text = std::fs::read_to_string(dir.join("checkpoint.json"))?;
+    parse(&text)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn artifacts_dir() -> PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).parent().unwrap().join("artifacts")
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let adir = artifacts_dir();
+        if !adir.join("manifest.json").exists() {
+            return;
+        }
+        let manifest = Manifest::load(&adir).unwrap();
+        let params = manifest.load_init_params("fc_ops").unwrap();
+        let dir = std::env::temp_dir().join("mlir_cost_ckpt_test");
+        let meta = Json::obj().with("steps", Json::num(42.0));
+        save(&dir, &manifest, "fc_ops", &params, meta).unwrap();
+        let loaded = load(&dir, &manifest, "fc_ops").unwrap();
+        assert_eq!(params.len(), loaded.len());
+        assert_eq!(params[0], loaded[0]);
+        let m = load_meta(&dir).unwrap();
+        assert_eq!(m.req("meta").unwrap().req_f64("steps").unwrap(), 42.0);
+        // Wrong model rejected.
+        assert!(load(&dir, &manifest, "conv_ops").is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

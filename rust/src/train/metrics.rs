@@ -1,0 +1,91 @@
+//! Evaluation metrics matching the paper's reporting.
+
+/// Root mean squared error.
+pub fn rmse(pred: &[f64], truth: &[f64]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    let mse = pred
+        .iter()
+        .zip(truth)
+        .map(|(p, t)| (p - t) * (p - t))
+        .sum::<f64>()
+        / pred.len() as f64;
+    mse.sqrt()
+}
+
+/// Mean absolute error.
+pub fn mae(pred: &[f64], truth: &[f64]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    pred.iter().zip(truth).map(|(p, t)| (p - t).abs()).sum::<f64>() / pred.len() as f64
+}
+
+/// RMSE as a percentage of the target range — the paper's "RMSE in the
+/// range of 5-7%" metric.
+pub fn rmse_pct(pred: &[f64], truth: &[f64], range: f64) -> f64 {
+    100.0 * rmse(pred, truth) / range.max(1e-9)
+}
+
+/// Fraction (%) of predictions that are exact after rounding to integers —
+/// Fig 6's "in almost 75% of cases we can predict register pressure
+/// without any error".
+pub fn pct_exact_rounded(pred: &[f64], truth: &[f64]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    let hits = pred
+        .iter()
+        .zip(truth)
+        .filter(|(p, t)| p.round() == t.round())
+        .count();
+    100.0 * hits as f64 / pred.len() as f64
+}
+
+/// Histogram of |rounded error| in unit buckets, capped at `max_bucket`
+/// (for regenerating Fig 6's error distribution).
+pub fn abs_error_histogram(pred: &[f64], truth: &[f64], max_bucket: usize) -> Vec<usize> {
+    let mut hist = vec![0usize; max_bucket + 1];
+    for (p, t) in pred.iter().zip(truth) {
+        let e = ((p.round() - t.round()).abs() as usize).min(max_bucket);
+        hist[e] += 1;
+    }
+    hist
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rmse_known_values() {
+        assert_eq!(rmse(&[1.0, 2.0], &[1.0, 2.0]), 0.0);
+        let r = rmse(&[0.0, 0.0], &[3.0, 4.0]);
+        assert!((r - (12.5f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rmse_pct_scales_by_range() {
+        let p = [10.0, 20.0];
+        let t = [12.0, 18.0];
+        assert!((rmse_pct(&p, &t, 100.0) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn exact_and_histogram() {
+        let p = [10.2, 19.7, 30.0, 44.0];
+        let t = [10.0, 20.0, 31.0, 40.0];
+        assert_eq!(pct_exact_rounded(&p, &t), 50.0);
+        let h = abs_error_histogram(&p, &t, 3);
+        assert_eq!(h, vec![2, 1, 0, 1]); // errors 0,0,1,4→cap3
+    }
+
+    #[test]
+    fn mae_basic() {
+        assert!((mae(&[1.0, 3.0], &[2.0, 1.0]) - 1.5).abs() < 1e-12);
+    }
+}

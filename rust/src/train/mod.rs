@@ -1,0 +1,232 @@
+//! Training orchestrator: Rust drives the AOT-compiled `train_step`
+//! executable over minibatches — the paper's supervised training (§3),
+//! with Python long gone from the process.
+
+pub mod checkpoint;
+pub mod metrics;
+
+use crate::dataset::EncodedSet;
+use crate::rng::Rng;
+use crate::runtime::{Executable, Manifest, Runtime, Tensor};
+use anyhow::{ensure, Context, Result};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Configuration for one training run.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub model: String,
+    pub steps: usize,
+    pub seed: u64,
+    pub eval_every: usize,
+    /// Log loss every N steps (0 = silent).
+    pub log_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig { model: "conv_ops".into(), steps: 300, seed: 0, eval_every: 100, log_every: 50 }
+    }
+}
+
+/// Progress + outcome of a run.
+#[derive(Debug, Clone, Default)]
+pub struct TrainReport {
+    /// (step, train-batch loss) samples.
+    pub losses: Vec<(usize, f64)>,
+    /// (step, test RMSE in normalized units).
+    pub evals: Vec<(usize, f64)>,
+    pub steps_per_sec: f64,
+    pub total_steps: usize,
+}
+
+/// Holds model state (params ⊕ adam moments ⊕ step) across steps.
+pub struct Trainer<'rt> {
+    rt: &'rt Runtime,
+    manifest: &'rt Manifest,
+    pub model: String,
+    n_params: usize,
+    max_len: usize,
+    train_batch: usize,
+    /// params ++ m ++ v (3n tensors), then step scalar.
+    state: Vec<Tensor>,
+    step: Tensor,
+    train_exe: Arc<Executable>,
+}
+
+impl<'rt> Trainer<'rt> {
+    /// Initialize from the exported init params.
+    pub fn new(rt: &'rt Runtime, manifest: &'rt Manifest, model: &str) -> Result<Trainer<'rt>> {
+        let mm = manifest.model(model)?;
+        let params = manifest.load_init_params(model)?;
+        let n = params.len();
+        let zeros: Vec<Tensor> =
+            params.iter().map(|p| Tensor::zeros_f32(p.shape().to_vec())).collect();
+        let state: Vec<Tensor> =
+            params.into_iter().chain(zeros.clone()).chain(zeros).collect();
+        let train_exe = rt
+            .load(&manifest.path_of(mm.file("train_step")?))
+            .context("loading train_step executable")?;
+        Ok(Trainer {
+            rt,
+            manifest,
+            model: model.to_string(),
+            n_params: n,
+            max_len: mm.max_len,
+            train_batch: mm.train_batch,
+            state,
+            step: Tensor::scalar_f32(0.0),
+            train_exe,
+        })
+    }
+
+    /// Current parameter tensors (first n of state).
+    pub fn params(&self) -> &[Tensor] {
+        &self.state[..self.n_params]
+    }
+
+    /// Replace parameters (e.g. from a checkpoint); moments reset.
+    pub fn set_params(&mut self, params: Vec<Tensor>) -> Result<()> {
+        ensure!(params.len() == self.n_params, "expected {} tensors", self.n_params);
+        let zeros: Vec<Tensor> =
+            params.iter().map(|p| Tensor::zeros_f32(p.shape().to_vec())).collect();
+        self.state = params.into_iter().chain(zeros.clone()).chain(zeros).collect();
+        self.step = Tensor::scalar_f32(0.0);
+        Ok(())
+    }
+
+    /// One optimizer step on a [B, L] ids + [B] targets batch.
+    pub fn step_batch(&mut self, ids: Vec<i32>, targets: Vec<f32>) -> Result<f64> {
+        let b = self.train_batch as i64;
+        ensure!(ids.len() == (b as usize) * self.max_len, "bad ids length");
+        ensure!(targets.len() == b as usize, "bad target length");
+        let mut inputs: Vec<Tensor> = Vec::with_capacity(3 * self.n_params + 3);
+        inputs.extend(self.state.iter().cloned());
+        inputs.push(self.step.clone());
+        inputs.push(Tensor::i32(vec![b, self.max_len as i64], ids)?);
+        inputs.push(Tensor::f32(vec![b], targets)?);
+        let mut out = self.train_exe.run(&inputs)?;
+        let loss = out[3 * self.n_params + 1].first_f32()? as f64;
+        self.step = out[3 * self.n_params].clone();
+        out.truncate(3 * self.n_params);
+        self.state = out;
+        Ok(loss)
+    }
+
+    /// Train for `cfg.steps` minibatches drawn (with reshuffling epochs)
+    /// from `train`, evaluating on `test` periodically.
+    pub fn run(
+        &mut self,
+        cfg: &TrainConfig,
+        train: &EncodedSet,
+        test: &EncodedSet,
+    ) -> Result<TrainReport> {
+        ensure!(train.max_len == self.max_len, "train set encoded for wrong max_len");
+        let mut rng = Rng::new(cfg.seed);
+        let mut order: Vec<usize> = (0..train.n).collect();
+        rng.shuffle(&mut order);
+        let mut cursor = 0usize;
+        let bsz = self.train_batch;
+        let mut report = TrainReport::default();
+        let t0 = Instant::now();
+        for step in 1..=cfg.steps {
+            if cursor + bsz > order.len() {
+                rng.shuffle(&mut order);
+                cursor = 0;
+            }
+            let idx: Vec<usize> = order[cursor..cursor + bsz].to_vec();
+            cursor += bsz;
+            let (ids, targets) = train.gather(&idx);
+            let loss = self.step_batch(ids, targets)?;
+            if cfg.log_every > 0 && step % cfg.log_every == 0 {
+                report.losses.push((step, loss));
+                eprintln!("[train {}] step {step}/{} loss {loss:.5}", self.model, cfg.steps);
+            }
+            if cfg.eval_every > 0 && (step % cfg.eval_every == 0 || step == cfg.steps) {
+                let preds = self.predict_set(test)?;
+                let truth: Vec<f64> = test.targets.iter().map(|&t| t as f64).collect();
+                let rmse = metrics::rmse(&preds, &truth);
+                report.evals.push((step, rmse));
+                eprintln!("[eval  {}] step {step} test-rmse(norm) {rmse:.4}", self.model);
+            }
+        }
+        report.total_steps = cfg.steps;
+        report.steps_per_sec = cfg.steps as f64 / t0.elapsed().as_secs_f64();
+        Ok(report)
+    }
+
+    /// Predict (normalized) targets for a whole encoded set using the
+    /// largest-batch predict executable, padding the tail batch.
+    pub fn predict_set(&self, set: &EncodedSet) -> Result<Vec<f64>> {
+        let mm = self.manifest.model(&self.model)?;
+        let (key, b) = mm.predict_key_for(usize::MAX, false);
+        let exe = self.rt.load(&self.manifest.path_of(mm.file(&key)?))?;
+        let params = self.params().to_vec();
+        let mut preds = Vec::with_capacity(set.n);
+        let mut i = 0usize;
+        while i < set.n {
+            let take = (set.n - i).min(b);
+            let idx: Vec<usize> = (i..i + take).collect();
+            let (mut ids, _) = set.gather(&idx);
+            ids.resize(b * set.max_len, 0); // pad rows
+            let mut inputs = params.clone();
+            inputs.push(Tensor::i32(vec![b as i64, set.max_len as i64], ids)?);
+            let out = exe.run(&inputs)?;
+            let vals = out[0].as_f32()?;
+            preds.extend(vals[..take].iter().map(|&v| v as f64));
+            i += take;
+        }
+        Ok(preds)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::{Dataset, EncodedSet, TargetStats};
+    use crate::sim::Target;
+    use crate::tokenizer::{Scheme, Vocab};
+    use std::path::Path;
+
+    fn artifacts_dir() -> std::path::PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).parent().unwrap().join("artifacts")
+    }
+
+    #[test]
+    fn short_training_run_improves_rmse() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let rt = Runtime::cpu().unwrap();
+        let manifest = Manifest::load(&dir).unwrap();
+        let ds = Dataset::generate(3, 60, 0).unwrap();
+        let (train, test) = ds.split(1, 0.2);
+        let streams_tr = train.token_streams(Scheme::OpsOnly).unwrap();
+        let streams_te = test.token_streams(Scheme::OpsOnly).unwrap();
+        let vocab = Vocab::build(streams_tr.iter(), 1);
+        let stats = TargetStats::for_dataset(&train, Target::RegPressure);
+        let enc_tr = EncodedSet::build(&train, &streams_tr, &vocab, 128, Target::RegPressure, &stats);
+        let enc_te = EncodedSet::build(&test, &streams_te, &vocab, 128, Target::RegPressure, &stats);
+
+        let mut trainer = Trainer::new(&rt, &manifest, "fc_ops").unwrap();
+        let before = {
+            let preds = trainer.predict_set(&enc_te).unwrap();
+            let truth: Vec<f64> = enc_te.targets.iter().map(|&t| t as f64).collect();
+            metrics::rmse(&preds, &truth)
+        };
+        let cfg = TrainConfig { steps: 30, eval_every: 0, log_every: 0, ..Default::default() };
+        let report = trainer.run(&cfg, &enc_tr, &enc_te).unwrap();
+        assert_eq!(report.total_steps, 30);
+        let after = {
+            let preds = trainer.predict_set(&enc_te).unwrap();
+            let truth: Vec<f64> = enc_te.targets.iter().map(|&t| t as f64).collect();
+            metrics::rmse(&preds, &truth)
+        };
+        assert!(
+            after < before,
+            "30 fc steps should improve test rmse: {before:.4} -> {after:.4}"
+        );
+    }
+}

@@ -1,0 +1,131 @@
+//! Cross-module integration tests over the public API: the exact
+//! pipelines a downstream user composes.
+
+use mlir_cost::dataset::{Dataset, EncodedSet, TargetStats};
+use mlir_cost::graphgen::{corpus_specs, generate, Family, GraphSpec};
+use mlir_cost::lower::{analyze, lower, CodegenOpts};
+use mlir_cost::mlir::{parse_function, print_function, verify_function};
+use mlir_cost::sim::{ground_truth_default, simulate, Target, XpuConfig};
+use mlir_cost::tokenizer::{encode, tokenize, Scheme, Vocab, PAD_ID};
+
+/// Generator → printer → parser → verifier → lowering → regalloc →
+/// simulator: the full ground-truth path over every family.
+#[test]
+fn full_label_pipeline_over_all_families() {
+    for (i, family) in Family::ALL.into_iter().enumerate() {
+        let spec = GraphSpec { family, structure_seed: 90 + i as u64, shape_seed: 17 };
+        let f = generate(&spec).unwrap();
+        let text = print_function(&f);
+        let f2 = parse_function(&text).unwrap();
+        verify_function(&f2).unwrap();
+        // Labels computed from the re-parsed text must equal labels from
+        // the in-memory graph (text is the source of truth).
+        let a = ground_truth_default(&f).unwrap();
+        let b = ground_truth_default(&f2).unwrap();
+        assert_eq!(a, b, "{family:?}: text round-trip changed labels");
+        assert!(a.regpressure > 0.0 && a.cycles > 0.0);
+    }
+}
+
+/// Dataset → tokenize → vocab → encode: shapes, padding and determinism.
+#[test]
+fn dataset_to_encoded_batches() {
+    let ds = Dataset::generate(1234, 24, 1).unwrap();
+    assert_eq!(ds.len(), 48);
+    let (train, test) = ds.split(9, 0.25);
+    let streams = train.token_streams(Scheme::OpsOnly).unwrap();
+    let vocab = Vocab::build(streams.iter(), 1);
+    let stats = TargetStats::for_dataset(&train, Target::XpuUtil);
+    let enc = EncodedSet::build(&train, &streams, &vocab, 128, Target::XpuUtil, &stats);
+    assert_eq!(enc.ids.len(), train.len() * 128);
+    // Every row ends in padding or is full; no id exceeds the AOT cap.
+    assert!(enc.ids.iter().all(|&i| (i as u32) < mlir_cost::tokenizer::EMBED_VOCAB_CAP));
+    // Test-set streams tokenize under the train vocab without panicking.
+    let test_streams = test.token_streams(Scheme::OpsOnly).unwrap();
+    for s in &test_streams {
+        let ids = encode(s, &vocab, 128);
+        assert_eq!(ids.len(), 128);
+    }
+}
+
+/// Compiler-knob coherence: fusion and unroll move cycles/pressure in the
+/// directions the §1 use-cases rely on, across a corpus (not one graph).
+#[test]
+fn compiler_knobs_move_labels_coherently() {
+    let cfg = XpuConfig::default();
+    let mut fusion_wins = 0;
+    let mut pressure_grows = 0;
+    let specs = corpus_specs(555, 20, 0);
+    for spec in &specs {
+        let f = generate(spec).unwrap();
+        let fused = ground_truth_default(&f).unwrap();
+        let unfused = mlir_cost::sim::ground_truth(
+            &f,
+            &CodegenOpts { fuse: false, ..Default::default() },
+            &cfg,
+        )
+        .unwrap();
+        if fused.cycles <= unfused.cycles {
+            fusion_wins += 1;
+        }
+        let p1 = analyze(&lower(&f, &CodegenOpts { unroll: Some(1), ..Default::default() }).unwrap());
+        let p8 = analyze(&lower(&f, &CodegenOpts { unroll: Some(8), ..Default::default() }).unwrap());
+        if p8.max_live >= p1.max_live {
+            pressure_grows += 1;
+        }
+    }
+    assert!(fusion_wins >= 19, "fusion should ~never hurt: {fusion_wins}/20");
+    assert!(pressure_grows >= 18, "unroll should ~never shrink pressure: {pressure_grows}/20");
+}
+
+/// Tokenization schemes line up with the labels the CSV stores.
+#[test]
+fn csv_roundtrip_preserves_everything() {
+    let ds = Dataset::generate(77, 10, 0).unwrap();
+    let dir = std::env::temp_dir().join("mlir_cost_integration");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("ds.csv");
+    ds.save_csv(&path).unwrap();
+    let ds2 = Dataset::load_csv(&path).unwrap();
+    for (a, b) in ds.samples.iter().zip(&ds2.samples) {
+        // Integer-valued labels survive exactly; xpu_util is stored with
+        // 6 decimals in the CSV.
+        assert_eq!(a.labels.regpressure, b.labels.regpressure);
+        assert_eq!(a.labels.cycles, b.labels.cycles);
+        assert_eq!(a.labels.spills, b.labels.spills);
+        assert_eq!(a.labels.dyn_instrs, b.labels.dyn_instrs);
+        assert!((a.labels.xpu_util - b.labels.xpu_util).abs() < 1e-5);
+        let fa = parse_function(&a.mlir_text).unwrap();
+        let fb = parse_function(&b.mlir_text).unwrap();
+        assert_eq!(tokenize(&fa, Scheme::OpsOperands), tokenize(&fb, Scheme::OpsOperands));
+    }
+    std::fs::remove_file(path).ok();
+}
+
+/// Simulated machine sanity: identical programs → identical reports;
+/// beefier machine → fewer cycles.
+#[test]
+fn machine_model_monotonicity() {
+    let spec = GraphSpec { family: Family::Bert, structure_seed: 3, shape_seed: 4 };
+    let f = generate(&spec).unwrap();
+    let prog = lower(&f, &CodegenOpts::default()).unwrap();
+    let base = simulate(&prog, &XpuConfig::default());
+    let again = simulate(&prog, &XpuConfig::default());
+    assert_eq!(base, again, "simulator must be deterministic");
+    let fast = XpuConfig {
+        issue_width: 4,
+        dma_bytes_per_cycle: 256,
+        ..XpuConfig::default()
+    };
+    let faster = simulate(&prog, &fast);
+    assert!(faster.cycles <= base.cycles, "{} vs {}", faster.cycles, base.cycles);
+}
+
+/// Padding ids are PAD everywhere the encoder promises.
+#[test]
+fn encode_padding_contract() {
+    let toks: Vec<String> = vec!["func".into(), "xpu.relu".into()];
+    let vocab = Vocab::build([toks.clone()].iter(), 1);
+    let ids = encode(&toks, &vocab, 8);
+    assert_eq!(&ids[2..], &[PAD_ID; 6][..]);
+}
