@@ -32,7 +32,7 @@ fn main() -> Result<()> {
     let t0 = std::time::Instant::now();
     let ds = Dataset::generate(42, count, 1)?;
     println!(
-        "[1/5] corpus: {} labeled samples in {:.1}s",
+        "[1/6] corpus: {} labeled samples in {:.1}s",
         ds.len(),
         t0.elapsed().as_secs_f64()
     );
@@ -45,7 +45,7 @@ fn main() -> Result<()> {
     let oov: usize = streams_te.iter().map(|s| count_oov(s, &vocab)).sum();
     let total: usize = streams_te.iter().map(Vec::len).sum();
     println!(
-        "[2/5] vocab {} tokens; test OOV rate {:.2}% ({} / {})",
+        "[2/6] vocab {} tokens; test OOV rate {:.2}% ({} / {})",
         vocab.len(),
         100.0 * oov as f64 / total as f64,
         oov,
@@ -69,7 +69,7 @@ fn main() -> Result<()> {
     };
     let report = trainer.run(&cfg, &enc_tr, &enc_te)?;
     println!(
-        "[3/5] trained {steps} steps at {:.2} steps/s; loss curve: {:?}",
+        "[3/6] trained {steps} steps at {:.2} steps/s; loss curve: {:?}",
         report.steps_per_sec,
         report
             .losses
@@ -87,7 +87,7 @@ fn main() -> Result<()> {
     let truth: Vec<f64> = test.samples.iter().map(|s| target.of(&s.labels)).collect();
     let rmse_pct = metrics::rmse_pct(&preds, &truth, stats.range());
     println!(
-        "[4/5] test: RMSE {:.3} ({:.2}% of range {:.0}), MAE {:.3}, exact {:.1}%",
+        "[4/6] test: RMSE {:.3} ({:.2}% of range {:.0}), MAE {:.3}, exact {:.1}%",
         metrics::rmse(&preds, &truth),
         rmse_pct,
         stats.range(),
@@ -116,8 +116,23 @@ fn main() -> Result<()> {
     )?);
     let served = service.predict(target, &sample.mlir_text)?;
     println!(
-        "[5/5] bundle {out:?}; served prediction for '{}': {:.2} (truth {})",
+        "[5/6] bundle {out:?}; served prediction for '{}': {:.2} (truth {})",
         sample.name, served, sample.labels.regpressure
+    );
+
+    // 6. Batch API: a compiler pass hands the coordinator a whole probe
+    //    set at once — cache hits resolve inline, all misses enter the
+    //    batch queue in one shot, duplicates coalesce via single-flight.
+    let probe: Vec<&str> =
+        test.samples.iter().take(8).map(|s| s.mlir_text.as_str()).collect();
+    let many = service.predict_many(target, &probe);
+    let ok = many.iter().filter(|r| r.is_ok()).count();
+    println!(
+        "[6/6] predict_many: {ok}/{} predictions in one call (batch fill {:.2}, {} coalesced, {} cache hits)",
+        probe.len(),
+        service.stats.batch_fill_ratio(),
+        service.cache.coalesced(),
+        service.cache.stats().0,
     );
     Ok(())
 }

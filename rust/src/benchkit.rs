@@ -64,6 +64,33 @@ pub fn summarize(name: &str, samples: &[f64]) -> Summary {
     }
 }
 
+/// Drive a closure from `threads` OS threads (`per_thread` invocations
+/// each, all threads released together through a barrier — concurrency
+/// benches need simultaneous arrival to exercise batching/coalescing) and
+/// return `(ops_per_sec, elapsed_secs)`. The closure receives
+/// `(thread_idx, iter_idx)`.
+pub fn concurrent_throughput<F>(threads: usize, per_thread: usize, f: F) -> (f64, f64)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    let barrier = std::sync::Barrier::new(threads);
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let barrier = &barrier;
+            let f = &f;
+            s.spawn(move || {
+                barrier.wait();
+                for i in 0..per_thread {
+                    f(t, i);
+                }
+            });
+        }
+    });
+    let dt = t0.elapsed().as_secs_f64();
+    ((threads * per_thread) as f64 / dt.max(1e-9), dt)
+}
+
 /// Print a section header in bench output.
 pub fn section(title: &str) {
     println!("\n=== {title} ===");
@@ -86,6 +113,20 @@ mod tests {
         assert_eq!(s.iters, 50);
         assert!(s.mean_us < 1000.0);
         assert!(s.p50_us <= s.p95_us);
+    }
+
+    #[test]
+    fn concurrent_throughput_runs_everything() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let count = AtomicUsize::new(0);
+        let seen_threads = AtomicUsize::new(0);
+        let (qps, dt) = concurrent_throughput(4, 25, |t, _i| {
+            count.fetch_add(1, Ordering::Relaxed);
+            seen_threads.fetch_max(t + 1, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 100);
+        assert_eq!(seen_threads.load(Ordering::Relaxed), 4);
+        assert!(qps > 0.0 && dt >= 0.0);
     }
 
     #[test]

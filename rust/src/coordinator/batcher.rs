@@ -2,6 +2,12 @@
 //! compiler threads; the batcher coalesces them into fixed-size predict
 //! batches (size OR deadline triggered, vLLM-router style) so the model
 //! executable amortizes per-call overhead.
+//!
+//! The queue and the closed flag live under ONE mutex: `close()` takes a
+//! single lock and wakes waiters through the condvar immediately — there
+//! is no second lock to check out-of-order and no fallback polling
+//! interval. An idle worker sleeps on the condvar until a submit or a
+//! close arrives.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
@@ -28,81 +34,109 @@ impl Default for BatchPolicy {
     }
 }
 
+/// Everything the queue guards, under a single lock.
+struct State {
+    queue: Vec<Pending>,
+    closed: bool,
+}
+
 /// Thread-safe queue with deadline-aware draining.
 pub struct BatchQueue {
-    inner: Mutex<Vec<Pending>>,
+    state: Mutex<State>,
     cv: Condvar,
     policy: BatchPolicy,
-    closed: Mutex<bool>,
 }
 
 impl BatchQueue {
     pub fn new(policy: BatchPolicy) -> Arc<Self> {
         Arc::new(BatchQueue {
-            inner: Mutex::new(Vec::new()),
+            state: Mutex::new(State { queue: Vec::new(), closed: false }),
             cv: Condvar::new(),
             policy,
-            closed: Mutex::new(false),
         })
     }
 
-    /// Enqueue a query; returns the receiver for its prediction.
+    /// Enqueue a query; returns the receiver for its prediction. After
+    /// `close()`, the sender is dropped immediately so the receiver sees a
+    /// disconnect instead of blocking forever.
     pub fn submit(&self, ids: Vec<u32>) -> Receiver<f64> {
         let (tx, rx) = channel();
         {
-            let mut q = self.inner.lock().unwrap();
-            q.push(Pending { ids, respond: tx });
+            let mut st = self.state.lock().unwrap();
+            if !st.closed {
+                st.queue.push(Pending { ids, respond: tx });
+            }
         }
         self.cv.notify_one();
         rx
     }
 
-    /// Mark closed (drains return None once empty).
+    /// Enqueue many queries under one lock acquisition and one wakeup —
+    /// the batch API's fast path. Receivers are returned in input order.
+    pub fn submit_many(&self, batches: Vec<Vec<u32>>) -> Vec<Receiver<f64>> {
+        let mut rxs = Vec::with_capacity(batches.len());
+        {
+            let mut st = self.state.lock().unwrap();
+            for ids in batches {
+                let (tx, rx) = channel();
+                if !st.closed {
+                    st.queue.push(Pending { ids, respond: tx });
+                }
+                rxs.push(rx);
+            }
+        }
+        self.cv.notify_all();
+        rxs
+    }
+
+    /// Mark closed: one lock, and waiters wake immediately. A draining
+    /// worker still sees already-queued requests (`next_batch` returns
+    /// them) and then gets `None`.
     pub fn close(&self) {
-        *self.closed.lock().unwrap() = true;
+        self.state.lock().unwrap().closed = true;
         self.cv.notify_all();
     }
 
-    /// Block until a batch is ready per policy; None when closed + empty.
+    pub fn is_closed(&self) -> bool {
+        self.state.lock().unwrap().closed
+    }
+
+    /// Block until a batch is ready per policy; `None` when closed + empty.
     pub fn next_batch(&self) -> Option<Vec<Pending>> {
-        let mut q = self.inner.lock().unwrap();
+        let mut st = self.state.lock().unwrap();
         loop {
-            if q.is_empty() {
-                if *self.closed.lock().unwrap() {
+            if st.queue.is_empty() {
+                if st.closed {
                     return None;
                 }
-                // Wait for the first element.
-                let (guard, _) = self
-                    .cv
-                    .wait_timeout(q, Duration::from_millis(50))
-                    .expect("queue lock poisoned");
-                q = guard;
+                // Sleep until a submit or close notifies — no polling.
+                st = self.cv.wait(st).expect("queue lock poisoned");
                 continue;
             }
-            // Non-empty: wait for fill-up or deadline.
+            // Non-empty: wait for fill-up, deadline, or close.
             let deadline = Instant::now() + self.policy.max_wait;
-            while q.len() < self.policy.max_batch {
+            while st.queue.len() < self.policy.max_batch && !st.closed {
                 let now = Instant::now();
-                if now >= deadline || *self.closed.lock().unwrap() {
+                if now >= deadline {
                     break;
                 }
                 let (guard, timeout) = self
                     .cv
-                    .wait_timeout(q, deadline - now)
+                    .wait_timeout(st, deadline - now)
                     .expect("queue lock poisoned");
-                q = guard;
+                st = guard;
                 if timeout.timed_out() {
                     break;
                 }
             }
-            let take = q.len().min(self.policy.max_batch);
-            let batch: Vec<Pending> = q.drain(..take).collect();
+            let take = st.queue.len().min(self.policy.max_batch);
+            let batch: Vec<Pending> = st.queue.drain(..take).collect();
             return Some(batch);
         }
     }
 
     pub fn queued(&self) -> usize {
-        self.inner.lock().unwrap().len()
+        self.state.lock().unwrap().queue.len()
     }
 }
 
@@ -144,8 +178,51 @@ mod tests {
         let q2 = q.clone();
         let h = thread::spawn(move || q2.next_batch().is_none());
         thread::sleep(Duration::from_millis(20));
+        let t0 = Instant::now();
         q.close();
         assert!(h.join().unwrap());
+        // The old two-lock design fell back to a 50 ms poll; the condvar
+        // wakeup must be immediate.
+        assert!(t0.elapsed() < Duration::from_millis(45), "close() did not wake the worker");
+    }
+
+    #[test]
+    fn close_drains_queued_then_none() {
+        let q = BatchQueue::new(BatchPolicy { max_batch: 4, max_wait: Duration::from_secs(10) });
+        let _rxs: Vec<_> = (0..6u32).map(|i| q.submit(vec![i])).collect();
+        q.close();
+        // Already-queued work is still handed out (shutdown drains)...
+        assert_eq!(q.next_batch().unwrap().len(), 4);
+        assert_eq!(q.next_batch().unwrap().len(), 2);
+        // ...then the queue reports exhaustion.
+        assert!(q.next_batch().is_none());
+    }
+
+    #[test]
+    fn submit_after_close_disconnects() {
+        let q = BatchQueue::new(BatchPolicy::default());
+        q.close();
+        let rx = q.submit(vec![1]);
+        assert!(rx.recv().is_err(), "post-close submit must disconnect, not hang");
+        assert_eq!(q.queued(), 0);
+    }
+
+    #[test]
+    fn submit_many_enqueues_in_order() {
+        let q = BatchQueue::new(BatchPolicy { max_batch: 8, max_wait: Duration::from_secs(10) });
+        let rxs = q.submit_many((0..8u32).map(|i| vec![i]).collect());
+        assert_eq!(rxs.len(), 8);
+        let batch = q.next_batch().unwrap();
+        assert_eq!(batch.len(), 8);
+        for (i, p) in batch.iter().enumerate() {
+            assert_eq!(p.ids, vec![i as u32]);
+        }
+        for (i, p) in batch.into_iter().enumerate() {
+            p.respond.send(i as f64 * 2.0).unwrap();
+        }
+        for (i, rx) in rxs.into_iter().enumerate() {
+            assert_eq!(rx.recv().unwrap(), i as f64 * 2.0);
+        }
     }
 
     #[test]

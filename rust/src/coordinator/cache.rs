@@ -1,24 +1,30 @@
 //! Prediction cache: compilers re-query the same subgraphs constantly
-//! (every pass, every heuristic probe), so a small exact-match cache keyed
-//! by the encoded token sequence removes most model invocations.
+//! (every pass, every heuristic probe), so an exact-match cache keyed by
+//! the encoded token sequence removes most model invocations.
+//!
+//! Two properties matter at serving scale and both live here:
+//!
+//! - **N-way sharding.** Entries are spread over `N` shards selected by
+//!   the key's high bits, each behind its own `Mutex`, so concurrent
+//!   compiler threads rarely collide on a lock. Each shard is an LRU: a
+//!   hit re-stamps the entry and pushes a fresh `(key, stamp)` pair onto
+//!   the recency queue (stale pairs are skipped lazily at eviction time),
+//!   so promotion stays O(1).
+//! - **Single-flight misses.** Autotuning probes fire thousands of
+//!   near-simultaneous identical queries. The first miss for a key becomes
+//!   the *leader* (it pays the model invocation); concurrent misses for
+//!   the same key become *followers* that park on a per-key waiter list
+//!   and receive the leader's answer — they never occupy a batch slot.
+//!
+//! Contention (`lock would have blocked`) and coalesced-follower counts
+//! are exported through the service `stats` command.
 
 use std::collections::hash_map::DefaultHasher;
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::hash::{Hash, Hasher};
-use std::sync::Mutex;
-
-/// Bounded FIFO-evicting exact-match cache.
-pub struct PredictionCache {
-    map: Mutex<Inner>,
-    capacity: usize,
-}
-
-struct Inner {
-    entries: HashMap<u64, f64>,
-    order: std::collections::VecDeque<u64>,
-    hits: u64,
-    misses: u64,
-}
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Mutex, MutexGuard, TryLockError};
 
 /// Key = hash of (model name, encoded ids).
 pub fn cache_key(model: &str, ids: &[u32]) -> u64 {
@@ -28,53 +34,263 @@ pub fn cache_key(model: &str, ids: &[u32]) -> u64 {
     h.finish()
 }
 
+/// Default shard count for the serving path (power of two).
+pub const DEFAULT_SHARDS: usize = 16;
+
+struct Entry {
+    value: f64,
+    /// Stamp of this entry's newest pair in `order`; older pairs for the
+    /// same key are stale and skipped during eviction.
+    stamp: u64,
+}
+
+struct Shard {
+    entries: HashMap<u64, Entry>,
+    /// Lazy LRU recency queue of `(key, stamp)`; front is oldest.
+    order: VecDeque<(u64, u64)>,
+    stamp: u64,
+    /// Keys with a model invocation in flight → waiters to notify.
+    inflight: HashMap<u64, Vec<Sender<Option<f64>>>>,
+}
+
+impl Shard {
+    fn new() -> Shard {
+        Shard {
+            entries: HashMap::new(),
+            order: VecDeque::new(),
+            stamp: 0,
+            inflight: HashMap::new(),
+        }
+    }
+
+    /// Re-stamp `key` as most recently used; returns its value if present.
+    /// One hash probe serves both the hit test and the promotion.
+    fn promote(&mut self, key: u64) -> Option<f64> {
+        let e = self.entries.get_mut(&key)?;
+        self.stamp += 1;
+        e.stamp = self.stamp;
+        let value = e.value;
+        self.push_order(key);
+        Some(value)
+    }
+
+    /// Record `(key, current stamp)` in the lazy recency queue. The queue
+    /// holds one pair per (re)use; compact when stale pairs dominate so
+    /// memory stays proportional to live entries — on every path that
+    /// pushes, or reuse-heavy workloads (get-promotes *and* put-refreshes)
+    /// would grow it without bound.
+    fn push_order(&mut self, key: u64) {
+        self.order.push_back((key, self.stamp));
+        if self.order.len() > self.entries.len() * 4 + 16 {
+            self.compact();
+        }
+    }
+
+    fn compact(&mut self) {
+        let entries = &self.entries;
+        self.order.retain(|(k, s)| entries.get(k).map(|e| e.stamp) == Some(*s));
+    }
+
+    /// Insert (or refresh) an entry, evicting the least-recently-used
+    /// genuine entries down to `cap`.
+    fn insert(&mut self, key: u64, value: f64, cap: usize) {
+        self.stamp += 1;
+        let stamp = self.stamp;
+        if self.entries.insert(key, Entry { value, stamp }).is_none() {
+            while self.entries.len() > cap {
+                match self.order.pop_front() {
+                    Some((k, s)) => {
+                        if self.entries.get(&k).map(|e| e.stamp) == Some(s) {
+                            self.entries.remove(&k);
+                        }
+                        // Stale pair (entry was promoted since): skip.
+                    }
+                    None => break,
+                }
+            }
+        }
+        self.push_order(key);
+    }
+}
+
+/// Result of a cache lookup on the serving path.
+pub enum Lookup<'a> {
+    /// Cached value, promoted to most-recently-used.
+    Hit(f64),
+    /// Another thread is already computing this key; park on the receiver
+    /// for its denormalized value (`None` = the leader failed).
+    Wait(Receiver<Option<f64>>),
+    /// This thread is the leader: it must run the model and then
+    /// [`FlightGuard::complete`]. Dropping the guard without completing
+    /// signals failure to any followers.
+    Miss(FlightGuard<'a>),
+}
+
+/// Leader token for a single-flight miss. Exactly one exists per key at a
+/// time; completing it publishes the value to the cache and to every
+/// coalesced follower.
+pub struct FlightGuard<'a> {
+    cache: &'a PredictionCache,
+    key: u64,
+    done: bool,
+}
+
+impl FlightGuard<'_> {
+    pub fn key(&self) -> u64 {
+        self.key
+    }
+
+    /// Publish the computed value: insert into the cache and wake all
+    /// followers with `Some(value)`.
+    pub fn complete(mut self, value: f64) {
+        self.done = true;
+        self.cache.fulfill(self.key, Some(value));
+    }
+}
+
+impl Drop for FlightGuard<'_> {
+    fn drop(&mut self) {
+        if !self.done {
+            // Leader failed: wake followers with None so they error out
+            // instead of waiting forever.
+            self.cache.fulfill(self.key, None);
+        }
+    }
+}
+
+/// Bounded, sharded, LRU-evicting exact-match cache with single-flight
+/// miss coalescing.
+pub struct PredictionCache {
+    shards: Vec<Mutex<Shard>>,
+    shard_bits: u32,
+    per_shard_cap: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    coalesced: AtomicU64,
+    contended: AtomicU64,
+}
+
 impl PredictionCache {
+    /// `DEFAULT_SHARDS`-way cache holding ~`capacity` entries total.
     pub fn new(capacity: usize) -> Self {
+        Self::with_shards(capacity, DEFAULT_SHARDS)
+    }
+
+    /// Explicit shard count (rounded up to a power of two; tests use 1 for
+    /// deterministic eviction order). The shard count is clamped so a
+    /// small capacity is not silently multiplied: each shard holds at
+    /// least one entry, so the worst-case total is
+    /// `max(capacity, shard_count)` rounded up to the shard granularity.
+    pub fn with_shards(capacity: usize, shards: usize) -> Self {
+        let n = shards
+            .max(1)
+            .next_power_of_two()
+            .min(capacity.max(1).next_power_of_two());
         PredictionCache {
-            map: Mutex::new(Inner {
-                entries: HashMap::new(),
-                order: std::collections::VecDeque::new(),
-                hits: 0,
-                misses: 0,
-            }),
-            capacity: capacity.max(1),
+            shards: (0..n).map(|_| Mutex::new(Shard::new())).collect(),
+            shard_bits: n.trailing_zeros(),
+            per_shard_cap: (capacity / n).max(1),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            coalesced: AtomicU64::new(0),
+            contended: AtomicU64::new(0),
         }
     }
 
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    fn shard_index(&self, key: u64) -> usize {
+        if self.shard_bits == 0 {
+            0
+        } else {
+            // High bits: DefaultHasher mixes well and the low bits stay
+            // available for the in-shard HashMap.
+            (key >> (64 - self.shard_bits)) as usize
+        }
+    }
+
+    fn lock_shard(&self, key: u64) -> MutexGuard<'_, Shard> {
+        let m = &self.shards[self.shard_index(key)];
+        match m.try_lock() {
+            Ok(g) => g,
+            Err(TryLockError::WouldBlock) => {
+                self.contended.fetch_add(1, Ordering::Relaxed);
+                m.lock().unwrap()
+            }
+            Err(TryLockError::Poisoned(p)) => p.into_inner(),
+        }
+    }
+
+    /// Serving-path lookup with single-flight semantics.
+    pub fn lookup(&self, key: u64) -> Lookup<'_> {
+        let mut shard = self.lock_shard(key);
+        if let Some(v) = shard.promote(key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Lookup::Hit(v);
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        if let Some(waiters) = shard.inflight.get_mut(&key) {
+            let (tx, rx) = channel();
+            waiters.push(tx);
+            self.coalesced.fetch_add(1, Ordering::Relaxed);
+            return Lookup::Wait(rx);
+        }
+        shard.inflight.insert(key, Vec::new());
+        Lookup::Miss(FlightGuard { cache: self, key, done: false })
+    }
+
+    /// Resolve an in-flight key: cache the value (if any) and notify all
+    /// waiters outside the lock.
+    fn fulfill(&self, key: u64, value: Option<f64>) {
+        let waiters = {
+            let mut shard = self.lock_shard(key);
+            let waiters = shard.inflight.remove(&key).unwrap_or_default();
+            if let Some(v) = value {
+                shard.insert(key, v, self.per_shard_cap);
+            }
+            waiters
+        };
+        for w in waiters {
+            let _ = w.send(value);
+        }
+    }
+
+    /// Plain get (promotes on hit); bypasses single-flight bookkeeping.
     pub fn get(&self, key: u64) -> Option<f64> {
-        let mut inner = self.map.lock().unwrap();
-        match inner.entries.get(&key).copied() {
-            Some(v) => {
-                inner.hits += 1;
-                Some(v)
-            }
-            None => {
-                inner.misses += 1;
-                None
-            }
-        }
+        let v = self.lock_shard(key).promote(key);
+        match v {
+            Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
+            None => self.misses.fetch_add(1, Ordering::Relaxed),
+        };
+        v
     }
 
+    /// Plain insert; bypasses single-flight bookkeeping.
     pub fn put(&self, key: u64, value: f64) {
-        let mut inner = self.map.lock().unwrap();
-        if inner.entries.len() >= self.capacity && !inner.entries.contains_key(&key) {
-            if let Some(old) = inner.order.pop_front() {
-                inner.entries.remove(&old);
-            }
-        }
-        if inner.entries.insert(key, value).is_none() {
-            inner.order.push_back(key);
-        }
+        let mut shard = self.lock_shard(key);
+        let cap = self.per_shard_cap;
+        shard.insert(key, value, cap);
     }
 
     /// (hits, misses) so far.
     pub fn stats(&self) -> (u64, u64) {
-        let inner = self.map.lock().unwrap();
-        (inner.hits, inner.misses)
+        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+    }
+
+    /// Queries that coalesced onto another thread's in-flight invocation.
+    pub fn coalesced(&self) -> u64 {
+        self.coalesced.load(Ordering::Relaxed)
+    }
+
+    /// Lock acquisitions that found their shard already held.
+    pub fn contended(&self) -> u64 {
+        self.contended.load(Ordering::Relaxed)
     }
 
     pub fn len(&self) -> usize {
-        self.map.lock().unwrap().entries.len()
+        self.shards.iter().map(|s| s.lock().unwrap().entries.len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -85,6 +301,9 @@ impl PredictionCache {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::atomic::AtomicUsize;
+    use std::sync::{Arc, Barrier};
+    use std::time::Duration;
 
     #[test]
     fn hit_miss_accounting() {
@@ -104,7 +323,8 @@ mod tests {
 
     #[test]
     fn eviction_respects_capacity() {
-        let c = PredictionCache::new(3);
+        // Single shard: deterministic global eviction order.
+        let c = PredictionCache::with_shards(3, 1);
         for i in 0..10u32 {
             c.put(cache_key("m", &[i]), i as f64);
         }
@@ -115,12 +335,165 @@ mod tests {
     }
 
     #[test]
+    fn sharded_capacity_is_bounded() {
+        let c = PredictionCache::new(64);
+        assert_eq!(c.shard_count(), DEFAULT_SHARDS);
+        for i in 0..1000u32 {
+            c.put(cache_key("m", &[i]), i as f64);
+        }
+        assert!(c.len() <= 64, "len {} exceeds capacity", c.len());
+        assert!(c.len() >= DEFAULT_SHARDS, "len {} suspiciously small", c.len());
+    }
+
+    #[test]
     fn put_same_key_updates_without_growth() {
-        let c = PredictionCache::new(2);
+        let c = PredictionCache::with_shards(2, 1);
         let k = cache_key("m", &[5]);
         c.put(k, 1.0);
         c.put(k, 2.0);
         assert_eq!(c.len(), 1);
         assert_eq!(c.get(k), Some(2.0));
+    }
+
+    #[test]
+    fn lru_promotion_on_hit() {
+        let c = PredictionCache::with_shards(3, 1);
+        let (ka, kb, kc, kd) = (
+            cache_key("m", &[1]),
+            cache_key("m", &[2]),
+            cache_key("m", &[3]),
+            cache_key("m", &[4]),
+        );
+        c.put(ka, 1.0);
+        c.put(kb, 2.0);
+        c.put(kc, 3.0);
+        // Touch the oldest entry: it must now outlive kb under pressure.
+        assert_eq!(c.get(ka), Some(1.0));
+        c.put(kd, 4.0);
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.get(ka), Some(1.0), "promoted entry was evicted");
+        assert_eq!(c.get(kb), None, "LRU entry survived eviction");
+        assert_eq!(c.get(kc), Some(3.0));
+        assert_eq!(c.get(kd), Some(4.0));
+    }
+
+    #[test]
+    fn heavy_reuse_does_not_leak_order_queue() {
+        let c = PredictionCache::with_shards(4, 1);
+        let k = cache_key("m", &[1]);
+        c.put(k, 1.0);
+        for _ in 0..10_000 {
+            assert_eq!(c.get(k), Some(1.0));
+        }
+        let shard = c.shards[0].lock().unwrap();
+        assert!(
+            shard.order.len() <= shard.entries.len() * 4 + 16,
+            "lazy LRU queue grew unboundedly: {}",
+            shard.order.len()
+        );
+    }
+
+    #[test]
+    fn put_refresh_does_not_leak_order_queue() {
+        let c = PredictionCache::with_shards(4, 1);
+        let k = cache_key("m", &[1]);
+        for i in 0..10_000 {
+            c.put(k, i as f64);
+        }
+        let shard = c.shards[0].lock().unwrap();
+        assert!(
+            shard.order.len() <= shard.entries.len() * 4 + 16,
+            "refresh-heavy puts grew the lazy LRU queue unboundedly: {}",
+            shard.order.len()
+        );
+    }
+
+    #[test]
+    fn tiny_capacity_clamps_shard_count() {
+        let c = PredictionCache::new(4);
+        assert!(c.shard_count() <= 4, "shards {} exceed capacity 4", c.shard_count());
+        for i in 0..100u32 {
+            c.put(cache_key("m", &[i]), i as f64);
+        }
+        assert!(c.len() <= 4, "len {} exceeds tiny capacity", c.len());
+    }
+
+    #[test]
+    fn single_flight_one_leader_32_threads() {
+        let c = Arc::new(PredictionCache::with_shards(64, 8));
+        let key = cache_key("m", &[42]);
+        let leaders = Arc::new(AtomicUsize::new(0));
+        let barrier = Arc::new(Barrier::new(32));
+        let mut handles = Vec::new();
+        for _ in 0..32 {
+            let c = c.clone();
+            let leaders = leaders.clone();
+            let barrier = barrier.clone();
+            handles.push(std::thread::spawn(move || {
+                barrier.wait();
+                match c.lookup(key) {
+                    Lookup::Hit(v) => v,
+                    Lookup::Wait(rx) => rx.recv().unwrap().expect("leader failed"),
+                    Lookup::Miss(guard) => {
+                        leaders.fetch_add(1, Ordering::SeqCst);
+                        // Simulate the model invocation all followers
+                        // coalesce onto.
+                        std::thread::sleep(Duration::from_millis(30));
+                        guard.complete(7.25);
+                        7.25
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            assert_eq!(h.join().unwrap(), 7.25);
+        }
+        assert_eq!(leaders.load(Ordering::SeqCst), 1, "exactly one model invocation");
+        // Everyone else either coalesced onto the flight or hit the cache
+        // after the leader published.
+        let (hits, _) = c.stats();
+        assert_eq!(c.coalesced() + hits + 1, 32);
+        assert_eq!(c.get(key), Some(7.25));
+    }
+
+    #[test]
+    fn failed_leader_wakes_followers_with_none() {
+        let c = Arc::new(PredictionCache::with_shards(8, 1));
+        let key = cache_key("m", &[9]);
+        let Lookup::Miss(guard) = c.lookup(key) else {
+            panic!("first lookup must be the leader")
+        };
+        let Lookup::Wait(rx) = c.lookup(key) else {
+            panic!("second lookup must coalesce")
+        };
+        drop(guard); // leader "fails"
+        assert_eq!(rx.recv().unwrap(), None);
+        // The key is no longer in flight: a retry becomes a fresh leader.
+        assert!(matches!(c.lookup(key), Lookup::Miss(_)));
+    }
+
+    #[test]
+    fn contention_counter_moves_under_load() {
+        let c = Arc::new(PredictionCache::with_shards(1024, 1)); // 1 shard: force collisions
+        let barrier = Arc::new(Barrier::new(8));
+        let mut handles = Vec::new();
+        for t in 0..8u32 {
+            let c = c.clone();
+            let barrier = barrier.clone();
+            handles.push(std::thread::spawn(move || {
+                barrier.wait();
+                for i in 0..2000u32 {
+                    c.put(cache_key("m", &[t, i]), i as f64);
+                    c.get(cache_key("m", &[t, i]));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        // Not asserting a count (timing-dependent) — just that the counter
+        // is wired and non-panicking; under 8 threads on one shard it is
+        // overwhelmingly likely to be nonzero.
+        let _ = c.contended();
     }
 }

@@ -1,7 +1,18 @@
 //! The serving coordinator: the "deploy the model which the DL-compiler
 //! can invoke while compiling" half of the paper, built like a production
-//! inference router — per-target heads, dynamic batching, prediction
-//! cache, metrics, and a line-protocol TCP front end.
+//! inference router — per-target heads, dynamic batching, a sharded
+//! single-flight prediction cache, metrics, and a line-protocol TCP front
+//! end.
+//!
+//! The request path is built for the paper's traffic shape (thousands of
+//! concurrent, heavily duplicated queries from autotuning probes):
+//!
+//! - [`Service::predict`] — one query: parse → tokenize → encode →
+//!   sharded cache lookup → single-flight (duplicate concurrent misses
+//!   coalesce onto one model invocation) → batch queue → PJRT.
+//! - [`Service::predict_many`] — the batch API: encodes all inputs,
+//!   partitions into cache hits / coalesced followers / misses, and
+//!   submits all misses to the [`batcher::BatchQueue`] in one shot.
 //!
 //! Python is never here: predictions run through the AOT-compiled HLO
 //! executables via PJRT.
@@ -18,7 +29,7 @@ use crate::sim::Target;
 use crate::tokenizer::{encode, tokenize};
 use anyhow::{anyhow, Result};
 use batcher::{BatchPolicy, BatchQueue, Pending};
-use cache::{cache_key, PredictionCache};
+use cache::{cache_key, FlightGuard, Lookup, PredictionCache};
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::atomic::Ordering;
@@ -87,31 +98,150 @@ impl Service {
         self.heads.keys().copied().collect()
     }
 
-    /// Predict a hardware characteristic for a raw MLIR function text.
-    /// This is the full request path: parse → tokenize → encode → cache →
-    /// batch → PJRT → denormalize.
-    pub fn predict(&self, target: Target, mlir_text: &str) -> Result<f64> {
-        let t0 = Instant::now();
-        self.stats.requests.fetch_add(1, Ordering::Relaxed);
-        let head = self
-            .heads
-            .get(&target)
-            .ok_or_else(|| anyhow!("no model serving target '{}'", target.name()))?;
+    /// Parse + tokenize + encode one query for a head; returns the padded
+    /// id row and its cache key.
+    fn encode_query(&self, head: &Head, mlir_text: &str) -> Result<(Vec<u32>, u64)> {
         let func = parse_function(mlir_text)?;
         let toks = tokenize(&func, head.bundle.scheme);
         let ids = encode(&toks, &head.bundle.vocab, head.bundle.max_len);
         let key = cache_key(&head.bundle.model, &ids);
-        if let Some(v) = self.cache.get(key) {
-            self.stats.cache_hits.fetch_add(1, Ordering::Relaxed);
-            self.stats.record_latency_us(t0.elapsed().as_micros() as u64);
-            return Ok(v);
-        }
-        let rx = head.queue.submit(ids);
-        let norm = rx.recv().map_err(|_| anyhow!("prediction worker gone"))?;
-        let value = head.bundle.stats.denormalize(norm);
-        self.cache.put(key, value);
+        Ok((ids, key))
+    }
+
+    fn head(&self, target: Target) -> Result<&Head> {
+        self.heads
+            .get(&target)
+            .ok_or_else(|| anyhow!("no model serving target '{}'", target.name()))
+    }
+
+    /// Predict a hardware characteristic for a raw MLIR function text.
+    /// This is the full request path: parse → tokenize → encode → sharded
+    /// cache (single-flight) → batch → PJRT → denormalize.
+    pub fn predict(&self, target: Target, mlir_text: &str) -> Result<f64> {
+        let t0 = Instant::now();
+        self.stats.requests.fetch_add(1, Ordering::Relaxed);
+        let head = self.head(target)?;
+        let (ids, key) = self.encode_query(head, mlir_text)?;
+        let value = match self.cache.lookup(key) {
+            Lookup::Hit(v) => {
+                self.stats.cache_hits.fetch_add(1, Ordering::Relaxed);
+                v
+            }
+            Lookup::Wait(rx) => wait_for_leader(rx)?,
+            Lookup::Miss(guard) => {
+                let rx = head.queue.submit(ids);
+                let norm = rx.recv().map_err(|_| anyhow!("prediction worker gone"))?;
+                let value = head.bundle.stats.denormalize(norm);
+                guard.complete(value);
+                value
+            }
+        };
         self.stats.record_latency_us(t0.elapsed().as_micros() as u64);
         Ok(value)
+    }
+
+    /// Batch API: predict for many MLIR texts in one call.
+    ///
+    /// All inputs are parsed/tokenized/encoded up front, partitioned into
+    /// cache hits, single-flight followers (an identical query is already
+    /// in flight — here or on another thread), and genuine misses; all
+    /// misses enter the [`BatchQueue`] via one `submit_many` (one lock,
+    /// one worker wakeup). Results come back in input order; per-input
+    /// failures (malformed MLIR) don't fail the rest of the batch.
+    pub fn predict_many(&self, target: Target, mlir_texts: &[&str]) -> Vec<Result<f64>> {
+        let t0 = Instant::now();
+        self.stats.requests.fetch_add(mlir_texts.len() as u64, Ordering::Relaxed);
+        self.stats.batch_requests.fetch_add(1, Ordering::Relaxed);
+        let head = match self.head(target) {
+            Ok(h) => h,
+            Err(_) => {
+                return mlir_texts
+                    .iter()
+                    .map(|_| Err(anyhow!("no model serving target '{}'", target.name())))
+                    .collect()
+            }
+        };
+
+        enum Slot<'a> {
+            Done(Result<f64>),
+            Leader { guard: FlightGuard<'a>, miss_idx: usize },
+            Follower(std::sync::mpsc::Receiver<Option<f64>>),
+        }
+
+        // Phase 1: encode + partition (hits resolve immediately).
+        let mut slots: Vec<Slot> = Vec::with_capacity(mlir_texts.len());
+        let mut miss_ids: Vec<Vec<u32>> = Vec::new();
+        for text in mlir_texts {
+            match self.encode_query(head, text) {
+                Err(e) => slots.push(Slot::Done(Err(e))),
+                Ok((ids, key)) => match self.cache.lookup(key) {
+                    Lookup::Hit(v) => {
+                        self.stats.cache_hits.fetch_add(1, Ordering::Relaxed);
+                        slots.push(Slot::Done(Ok(v)));
+                    }
+                    Lookup::Wait(rx) => slots.push(Slot::Follower(rx)),
+                    Lookup::Miss(guard) => {
+                        slots.push(Slot::Leader { guard, miss_idx: miss_ids.len() });
+                        miss_ids.push(ids);
+                    }
+                },
+            }
+        }
+
+        // Phase 2: all misses hit the queue in one shot.
+        let rxs = head.queue.submit_many(miss_ids);
+
+        // Phase 3: resolve leaders first — completing them unparks any
+        // followers of the same key later in this very batch.
+        for slot in slots.iter_mut() {
+            if matches!(slot, Slot::Leader { .. }) {
+                let placeholder = Slot::Done(Err(anyhow!("slot already taken")));
+                let Slot::Leader { guard, miss_idx } = std::mem::replace(slot, placeholder)
+                else {
+                    unreachable!()
+                };
+                let res = rxs[miss_idx]
+                    .recv()
+                    .map(|norm| head.bundle.stats.denormalize(norm))
+                    .map_err(|_| anyhow!("prediction worker gone"));
+                *slot = match res {
+                    Ok(v) => {
+                        guard.complete(v);
+                        Slot::Done(Ok(v))
+                    }
+                    // `guard` drops here → followers are failed too.
+                    Err(e) => Slot::Done(Err(e)),
+                };
+            }
+        }
+
+        // Phase 4: followers (their leaders have published by now, or will
+        // from whichever other thread owns the flight).
+        let out = slots
+            .into_iter()
+            .map(|slot| match slot {
+                Slot::Done(r) => r,
+                Slot::Follower(rx) => wait_for_leader(rx),
+                Slot::Leader { .. } => unreachable!("leaders resolved in phase 3"),
+            })
+            .collect();
+        self.stats.record_latency_us(t0.elapsed().as_micros() as u64);
+        out
+    }
+
+    /// Full metrics for the wire protocol: service counters merged with
+    /// the sharded cache's single-flight/contention view.
+    pub fn stats_json(&self) -> crate::json::Json {
+        use crate::json::Json;
+        let (chits, cmisses) = self.cache.stats();
+        self.stats
+            .to_json()
+            .with("cache_entries", Json::num(self.cache.len() as f64))
+            .with("cache_lookup_hits", Json::num(chits as f64))
+            .with("cache_lookup_misses", Json::num(cmisses as f64))
+            .with("coalesced_queries", Json::num(self.cache.coalesced() as f64))
+            .with("cache_shard_contention", Json::num(self.cache.contended() as f64))
+            .with("cache_shards", Json::num(self.cache.shard_count() as f64))
     }
 
     /// Shut down workers (drains in-flight batches).
@@ -131,6 +261,15 @@ impl Drop for Service {
     }
 }
 
+/// Park on a single-flight leader's answer.
+fn wait_for_leader(rx: std::sync::mpsc::Receiver<Option<f64>>) -> Result<f64> {
+    match rx.recv() {
+        Ok(Some(v)) => Ok(v),
+        Ok(None) => Err(anyhow!("coalesced prediction failed (leader errored)")),
+        Err(_) => Err(anyhow!("coalesced prediction failed (leader vanished)")),
+    }
+}
+
 fn spawn_worker(
     path: PathBuf,
     params: Vec<Tensor>,
@@ -140,18 +279,28 @@ fn spawn_worker(
     stats: Arc<stats::ServiceStats>,
 ) -> JoinHandle<()> {
     std::thread::spawn(move || {
+        // A worker that can't start must not strand submitters: close the
+        // queue (new submits disconnect immediately) and drain anything
+        // already queued so its receivers see the disconnect too.
+        let fail_queue = |msg: String| {
+            eprintln!("{msg}");
+            queue.close();
+            while let Some(batch) = queue.next_batch() {
+                drop(batch);
+            }
+        };
         // Per-thread PJRT client + compile (see Service::start docs).
         let rt = match Runtime::cpu() {
             Ok(rt) => rt,
             Err(e) => {
-                eprintln!("[coordinator] worker failed to create PJRT client: {e:#}");
+                fail_queue(format!("[coordinator] worker failed to create PJRT client: {e:#}"));
                 return;
             }
         };
         let exe = match rt.load(&path) {
             Ok(exe) => exe,
             Err(e) => {
-                eprintln!("[coordinator] worker failed to compile {path:?}: {e:#}");
+                fail_queue(format!("[coordinator] worker failed to compile {path:?}: {e:#}"));
                 return;
             }
         };
@@ -165,10 +314,15 @@ fn spawn_worker(
             }
             match run_batch(&exe, &params, max_len, batch, &pending) {
                 Ok(values) => {
+                    let slots = (pending.len().div_ceil(batch) * batch) as u64;
                     stats.batches.fetch_add(1, Ordering::Relaxed);
                     stats
                         .batched_queries
                         .fetch_add(pending.len() as u64, Ordering::Relaxed);
+                    stats.batch_slots.fetch_add(slots, Ordering::Relaxed);
+                    stats
+                        .padded_slots
+                        .fetch_add(slots - pending.len() as u64, Ordering::Relaxed);
                     for (p, v) in pending.iter().zip(values) {
                         let _ = p.respond.send(v);
                     }
@@ -183,6 +337,21 @@ fn spawn_worker(
     })
 }
 
+/// Pack one chunk of requests into a dense row-major `[batch, max_len]`
+/// i32 buffer. Every row is padded (or truncated) to `max_len`
+/// *individually* — a short id row must never shift the rows after it, or
+/// the whole batch silently predicts on misaligned tokens. Unused trailing
+/// slots stay zeroed (0 = PAD).
+fn pack_batch(chunk: &[Pending], max_len: usize, batch: usize) -> Vec<i32> {
+    let mut ids = vec![0i32; batch * max_len];
+    for (row, p) in chunk.iter().enumerate() {
+        for (col, &x) in p.ids.iter().take(max_len).enumerate() {
+            ids[row * max_len + col] = x as i32;
+        }
+    }
+    ids
+}
+
 fn run_batch(
     exe: &Executable,
     params: &[Tensor],
@@ -192,11 +361,7 @@ fn run_batch(
 ) -> Result<Vec<f64>> {
     let mut out = Vec::with_capacity(pending.len());
     for chunk in pending.chunks(batch) {
-        let mut ids: Vec<i32> = Vec::with_capacity(batch * max_len);
-        for p in chunk {
-            ids.extend(p.ids.iter().map(|&x| x as i32));
-        }
-        ids.resize(batch * max_len, 0);
+        let ids = pack_batch(chunk, max_len, batch);
         let mut inputs = params.to_vec();
         inputs.push(Tensor::i32(vec![batch as i64, max_len as i64], ids)?);
         let res = exe.run(&inputs)?;
@@ -214,6 +379,8 @@ mod tests {
     use crate::mlir::print_function;
     use crate::tokenizer::{Scheme, Vocab};
     use std::path::{Path, PathBuf};
+    use std::sync::mpsc::channel;
+    use std::sync::Barrier;
 
     fn artifacts_dir() -> PathBuf {
         Path::new(env!("CARGO_MANIFEST_DIR")).parent().unwrap().join("artifacts")
@@ -243,11 +410,15 @@ mod tests {
         )
     }
 
+    fn graph_text(structure_seed: u64, shape_seed: u64) -> String {
+        let spec = GraphSpec { family: Family::Mlp, structure_seed, shape_seed };
+        print_function(&generate(&spec).unwrap())
+    }
+
     #[test]
     fn end_to_end_predict() {
         let Some(svc) = test_service() else { return };
-        let spec = GraphSpec { family: Family::Mlp, structure_seed: 1, shape_seed: 2 };
-        let text = print_function(&generate(&spec).unwrap());
+        let text = graph_text(1, 2);
         let v = svc.predict(Target::RegPressure, &text).unwrap();
         assert!(v.is_finite());
         // Same query → cache hit, identical answer.
@@ -260,8 +431,7 @@ mod tests {
     #[test]
     fn unknown_target_is_error() {
         let Some(svc) = test_service() else { return };
-        let spec = GraphSpec { family: Family::Mlp, structure_seed: 1, shape_seed: 2 };
-        let text = print_function(&generate(&spec).unwrap());
+        let text = graph_text(1, 2);
         assert!(svc.predict(Target::Cycles, &text).is_err());
     }
 
@@ -290,11 +460,114 @@ mod tests {
             assert!(h.join().unwrap().is_finite());
         }
         assert!(svc.stats.mean_batch_size() > 1.0, "no batching happened");
+        // The batching-health counters move with the batches.
+        assert!(svc.stats.batch_slots.load(Ordering::Relaxed) >= 24);
+        assert!(svc.stats.batch_fill_ratio() > 0.0);
+    }
+
+    #[test]
+    fn single_flight_coalesces_32_identical_queries() {
+        let Some(svc) = test_service() else { return };
+        let svc = Arc::new(svc);
+        let text = Arc::new(graph_text(77, 78));
+        let barrier = Arc::new(Barrier::new(32));
+        let mut handles = Vec::new();
+        for _ in 0..32 {
+            let svc = svc.clone();
+            let text = text.clone();
+            let barrier = barrier.clone();
+            handles.push(std::thread::spawn(move || {
+                barrier.wait();
+                svc.predict(Target::RegPressure, &text).unwrap()
+            }));
+        }
+        let values: Vec<f64> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert!(values.windows(2).all(|w| w[0] == w[1]), "divergent answers");
+        // The heart of single-flight: 32 identical concurrent queries pay
+        // for exactly ONE model invocation.
+        assert_eq!(
+            svc.stats.batched_queries.load(Ordering::Relaxed),
+            1,
+            "duplicate queries reached the model"
+        );
+        let (hits, _) = svc.cache.stats();
+        assert_eq!(svc.cache.coalesced() + hits + 1, 32);
+    }
+
+    #[test]
+    fn predict_many_mixed_hit_miss_malformed() {
+        let Some(svc) = test_service() else { return };
+        let a = graph_text(11, 12);
+        let b = graph_text(13, 14);
+        // a appears twice: the second occurrence coalesces onto the first
+        // within the same batch call.
+        let texts = [a.as_str(), "not mlir at all", a.as_str(), b.as_str()];
+        let out = svc.predict_many(Target::RegPressure, &texts);
+        assert_eq!(out.len(), 4);
+        let va = out[0].as_ref().expect("valid input failed");
+        assert!(va.is_finite());
+        assert!(out[1].is_err(), "malformed input must fail alone");
+        assert_eq!(out[2].as_ref().unwrap(), va, "duplicate diverged");
+        assert!(out[3].as_ref().unwrap().is_finite());
+        // Second call: everything valid is now a cache hit.
+        let out2 = svc.predict_many(Target::RegPressure, &[a.as_str(), b.as_str()]);
+        assert!(out2.iter().all(|r| r.is_ok()));
+        let (hits, _) = svc.cache.stats();
+        assert!(hits >= 2, "warm batch should hit the cache: {hits}");
+        assert_eq!(svc.stats.batch_requests.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn predict_many_unknown_target_fails_all() {
+        let Some(svc) = test_service() else { return };
+        let a = graph_text(1, 2);
+        let out = svc.predict_many(Target::Cycles, &[a.as_str(), a.as_str()]);
+        assert_eq!(out.len(), 2);
+        assert!(out.iter().all(|r| r.is_err()));
     }
 
     #[test]
     fn malformed_mlir_is_rejected() {
         let Some(svc) = test_service() else { return };
         assert!(svc.predict(Target::RegPressure, "not mlir at all").is_err());
+    }
+
+    // ---- pack_batch: pure, artifact-free regression tests ----
+
+    fn mk_pending(ids: Vec<u32>) -> Pending {
+        // pack_batch never touches the response channel.
+        let (tx, _rx) = channel();
+        Pending { ids, respond: tx }
+    }
+
+    /// Regression for the misaligned-batch bug: the old packer
+    /// concatenated rows and zero-padded once at the end, so one short row
+    /// shifted every row after it and the batch silently predicted on the
+    /// wrong tokens.
+    #[test]
+    fn pack_batch_pads_each_row_independently() {
+        let chunk = vec![
+            mk_pending(vec![5, 6]),             // short: padded in place
+            mk_pending(vec![7, 8, 9, 10]),      // exact
+            mk_pending(vec![]),                 // empty
+            mk_pending(vec![1, 2, 3, 4, 5, 6]), // over-long: truncated
+        ];
+        let ids = pack_batch(&chunk, 4, 6);
+        assert_eq!(ids.len(), 24);
+        assert_eq!(&ids[0..4], &[5, 6, 0, 0], "short row not padded in place");
+        // With the old concat-then-resize packer, this row began at offset
+        // 2 instead of max_len — the regression under test.
+        assert_eq!(&ids[4..8], &[7, 8, 9, 10], "row 1 misaligned");
+        assert_eq!(&ids[8..12], &[0, 0, 0, 0], "empty row must be all PAD");
+        assert_eq!(&ids[12..16], &[1, 2, 3, 4], "over-long row not truncated");
+        assert_eq!(&ids[16..24], &[0i32; 8], "unused slots must stay PAD");
+    }
+
+    #[test]
+    fn pack_batch_full_chunk_unchanged() {
+        let chunk: Vec<Pending> =
+            (0..3).map(|r| mk_pending(vec![r * 10, r * 10 + 1])).collect();
+        let ids = pack_batch(&chunk, 2, 3);
+        assert_eq!(ids, vec![0, 1, 10, 11, 20, 21]);
     }
 }

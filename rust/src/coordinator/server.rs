@@ -1,11 +1,22 @@
 //! TCP front end: newline-delimited JSON, one request per line.
 //!
 //! Request:  {"id": 7, "target": "regpressure", "mlir": "func.func @f..."}
+//!           {"id": 10, "target": "regpressure", "mlir_batch": ["func.func @a...", "func.func @b..."]}
 //!           {"id": 8, "cmd": "stats"}
 //!           {"id": 9, "cmd": "ping"}
 //! Response: {"id": 7, "ok": true, "prediction": 27.4, "us": 812}
+//!           {"id": 10, "ok": true, "predictions": [{"ok": true, "prediction": 27.4},
+//!                                                  {"ok": false, "error": "..."}], "us": 930}
 //!           {"id": 8, "ok": true, "stats": {...}}
 //!           {"id": 7, "ok": false, "error": "..."}
+//!
+//! `mlir_batch` is the batch API: the whole array travels the
+//! parse→cache→batcher pipeline in one `Service::predict_many` call (all
+//! cache misses enter the batch queue together), and per-entry failures
+//! come back in-position without failing the rest. The `stats` command
+//! returns the merged service + cache view, including `coalesced_queries`
+//! (single-flight), `cache_shard_contention`, `batch_fill_ratio`, and
+//! `padded_slots`.
 //!
 //! A DL-compiler links a 30-line client (see `examples/`) and calls this
 //! from its pass pipeline. Threads, not tokio: no async runtime is
@@ -15,7 +26,7 @@
 use super::Service;
 use crate::json::{parse, Json};
 use crate::sim::Target;
-use anyhow::{Context, Result};
+use anyhow::{anyhow, Context, Result};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -32,8 +43,19 @@ pub fn serve(service: Arc<Service>, addr: &str, stop: Arc<AtomicBool>) -> Result
 pub fn serve_on(service: Arc<Service>, listener: TcpListener, stop: Arc<AtomicBool>) -> Result<()> {
     listener.set_nonblocking(true)?;
     eprintln!("[server] cost-model service listening on {}", listener.local_addr()?);
-    let mut handles = Vec::new();
+    let mut handles: Vec<std::thread::JoinHandle<()>> = Vec::new();
     while !stop.load(Ordering::Relaxed) {
+        // Reap finished connection threads every iteration — a long-lived
+        // server must not accumulate one JoinHandle per connection ever
+        // accepted until shutdown.
+        let mut i = 0;
+        while i < handles.len() {
+            if handles[i].is_finished() {
+                let _ = handles.swap_remove(i).join();
+            } else {
+                i += 1;
+            }
+        }
         match listener.accept() {
             Ok((stream, peer)) => {
                 eprintln!("[server] compiler connected from {peer}");
@@ -118,7 +140,7 @@ pub fn handle_line(service: &Service, line: &str) -> Json {
             "stats" => Json::obj()
                 .with("id", id.clone())
                 .with("ok", Json::Bool(true))
-                .with("stats", service.stats.to_json()),
+                .with("stats", service.stats_json()),
             "targets" => Json::obj().with("id", id.clone()).with("ok", Json::Bool(true)).with(
                 "targets",
                 Json::Arr(
@@ -132,6 +154,36 @@ pub fn handle_line(service: &Service, line: &str) -> Json {
         Some(t) => t,
         None => return fail("missing/invalid 'target'".into()),
     };
+    // Batch request: an array of MLIR texts through predict_many.
+    if let Some(batch) = req.get("mlir_batch") {
+        let Some(items) = batch.as_arr() else {
+            return fail("'mlir_batch' must be an array of strings".into());
+        };
+        let mut texts: Vec<&str> = Vec::with_capacity(items.len());
+        for item in items {
+            match item.as_str() {
+                Some(s) => texts.push(s),
+                None => return fail("'mlir_batch' entries must be strings".into()),
+            }
+        }
+        let results = service.predict_many(target, &texts);
+        let predictions: Vec<Json> = results
+            .into_iter()
+            .map(|r| match r {
+                Ok(v) => Json::obj()
+                    .with("ok", Json::Bool(true))
+                    .with("prediction", Json::num(v)),
+                Err(e) => Json::obj()
+                    .with("ok", Json::Bool(false))
+                    .with("error", Json::str(format!("{e:#}"))),
+            })
+            .collect();
+        return Json::obj()
+            .with("id", id)
+            .with("ok", Json::Bool(true))
+            .with("predictions", Json::Arr(predictions))
+            .with("us", Json::num(t0.elapsed().as_micros() as f64));
+    }
     let mlir = match req.req_str("mlir") {
         Ok(m) => m,
         Err(e) => return fail(e.to_string()),
@@ -160,6 +212,12 @@ impl Client {
         Ok(Client { reader: BufReader::new(stream.try_clone()?), writer: stream, next_id: 1 })
     }
 
+    fn next_id(&mut self) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        id
+    }
+
     fn roundtrip(&mut self, req: Json) -> Result<Json> {
         self.writer.write_all(req.to_string().as_bytes())?;
         self.writer.write_all(b"\n")?;
@@ -178,8 +236,7 @@ impl Client {
 
     /// Query a prediction.
     pub fn predict(&mut self, target: Target, mlir: &str) -> Result<f64> {
-        let id = self.next_id;
-        self.next_id += 1;
+        let id = self.next_id();
         let req = Json::obj()
             .with("id", Json::num(id as f64))
             .with("target", Json::str(target.name()))
@@ -188,10 +245,37 @@ impl Client {
         resp.req_f64("prediction")
     }
 
+    /// Query many predictions in one protocol round trip (`mlir_batch`).
+    /// Per-entry results mirror `Service::predict_many`.
+    pub fn predict_many(&mut self, target: Target, mlirs: &[&str]) -> Result<Vec<Result<f64>>> {
+        let id = self.next_id();
+        let req = Json::obj()
+            .with("id", Json::num(id as f64))
+            .with("target", Json::str(target.name()))
+            .with(
+                "mlir_batch",
+                Json::Arr(mlirs.iter().map(|m| Json::str(*m)).collect()),
+            );
+        let resp = self.roundtrip(req)?;
+        let arr = resp.req_arr("predictions")?;
+        Ok(arr
+            .iter()
+            .map(|p| {
+                if p.get("ok").and_then(Json::as_bool) == Some(true) {
+                    p.req_f64("prediction")
+                } else {
+                    Err(anyhow!(
+                        "{}",
+                        p.get("error").and_then(Json::as_str).unwrap_or("unknown error")
+                    ))
+                }
+            })
+            .collect())
+    }
+
     /// Fetch server stats.
     pub fn stats(&mut self) -> Result<Json> {
-        let id = self.next_id;
-        self.next_id += 1;
+        let id = self.next_id();
         let req = Json::obj()
             .with("id", Json::num(id as f64))
             .with("cmd", Json::str("stats"));
@@ -227,6 +311,11 @@ mod tests {
         ))
     }
 
+    fn graph(structure_seed: u64, shape_seed: u64) -> String {
+        let spec = GraphSpec { family: Family::Mlp, structure_seed, shape_seed };
+        print_function(&generate(&spec).unwrap())
+    }
+
     #[test]
     fn line_protocol_handles_commands() {
         let Some(svc) = service() else { return };
@@ -234,12 +323,53 @@ mod tests {
         assert_eq!(pong.get("pong").and_then(Json::as_bool), Some(true));
         let stats = handle_line(&svc, r#"{"id": 2, "cmd": "stats"}"#);
         assert!(stats.get("stats").is_some());
+        // The merged stats view carries the new pipeline counters.
+        let inner = stats.get("stats").unwrap();
+        assert!(inner.get("coalesced_queries").is_some());
+        assert!(inner.get("cache_shard_contention").is_some());
+        assert!(inner.get("batch_fill_ratio").is_some());
+        assert!(inner.get("padded_slots").is_some());
         let targets = handle_line(&svc, r#"{"id": 3, "cmd": "targets"}"#);
         assert_eq!(targets.req_arr("targets").unwrap().len(), 1);
         let bad = handle_line(&svc, "{nope");
         assert_eq!(bad.get("ok").and_then(Json::as_bool), Some(false));
         let missing = handle_line(&svc, r#"{"id": 4}"#);
         assert_eq!(missing.get("ok").and_then(Json::as_bool), Some(false));
+    }
+
+    #[test]
+    fn batch_request_over_handle_line() {
+        let Some(svc) = service() else { return };
+        let text = graph(21, 22);
+        let req = Json::obj()
+            .with("id", Json::num(5.0))
+            .with("target", Json::str("regpressure"))
+            .with(
+                "mlir_batch",
+                Json::Arr(vec![
+                    Json::str(text.as_str()),
+                    Json::str("not mlir"),
+                    Json::str(text.as_str()),
+                ]),
+            );
+        let resp = handle_line(&svc, &req.to_string());
+        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true));
+        let preds = resp.req_arr("predictions").unwrap();
+        assert_eq!(preds.len(), 3);
+        assert_eq!(preds[0].get("ok").and_then(Json::as_bool), Some(true));
+        assert_eq!(preds[1].get("ok").and_then(Json::as_bool), Some(false));
+        assert_eq!(preds[2].get("ok").and_then(Json::as_bool), Some(true));
+        assert_eq!(
+            preds[0].req_f64("prediction").unwrap(),
+            preds[2].req_f64("prediction").unwrap()
+        );
+        // Malformed shapes of the batch field fail whole-request.
+        let bad =
+            handle_line(&svc, r#"{"id": 6, "target": "regpressure", "mlir_batch": "nope"}"#);
+        assert_eq!(bad.get("ok").and_then(Json::as_bool), Some(false));
+        let bad2 =
+            handle_line(&svc, r#"{"id": 7, "target": "regpressure", "mlir_batch": [1, 2]}"#);
+        assert_eq!(bad2.get("ok").and_then(Json::as_bool), Some(false));
     }
 
     #[test]
@@ -256,12 +386,21 @@ mod tests {
         };
         std::thread::sleep(std::time::Duration::from_millis(100));
         let mut client = Client::connect(&addr).unwrap();
-        let spec = GraphSpec { family: Family::Mlp, structure_seed: 3, shape_seed: 4 };
-        let text = print_function(&generate(&spec).unwrap());
+        let text = graph(3, 4);
         let v = client.predict(Target::RegPressure, &text).unwrap();
         assert!(v.is_finite());
+        // Batch request over the wire: mixed valid/invalid entries.
+        let text2 = graph(5, 6);
+        let many = client
+            .predict_many(Target::RegPressure, &[text.as_str(), "not mlir", text2.as_str()])
+            .unwrap();
+        assert_eq!(many.len(), 3);
+        assert_eq!(many[0].as_ref().unwrap(), &v, "cached value must match");
+        assert!(many[1].is_err());
+        assert!(many[2].as_ref().unwrap().is_finite());
         let stats = client.stats().unwrap();
-        assert!(stats.req_f64("requests").unwrap() >= 1.0);
+        assert!(stats.req_f64("requests").unwrap() >= 4.0);
+        assert!(stats.req_f64("batch_requests").unwrap() >= 1.0);
         stop.store(true, Ordering::Relaxed);
         let _ = server.join();
     }

@@ -1,5 +1,13 @@
 //! Serving metrics: counters + latency reservoir, exported over the wire
 //! protocol's `stats` command.
+//!
+//! Batching-health counters added for the batched/sharded serving path:
+//! `batch_slots` (executable slots paid for), `padded_slots` (slots that
+//! carried padding, i.e. wasted model FLOPs), and `batch_requests`
+//! (`predict_many` calls). `batch_fill_ratio()` = useful queries / slots.
+//! Cache-side counters (shard contention, coalesced single-flight
+//! queries) live on `PredictionCache`; `Service::stats_json` merges both
+//! views for the wire protocol.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -11,6 +19,13 @@ pub struct ServiceStats {
     pub cache_hits: AtomicU64,
     pub batches: AtomicU64,
     pub batched_queries: AtomicU64,
+    /// `predict_many` invocations (each may carry many queries).
+    pub batch_requests: AtomicU64,
+    /// Total executable slots across all executed batches (chunks ×
+    /// compiled batch size).
+    pub batch_slots: AtomicU64,
+    /// Slots that carried padding instead of a real query.
+    pub padded_slots: AtomicU64,
     pub errors: AtomicU64,
     latencies_us: Mutex<Reservoir>,
 }
@@ -57,18 +72,39 @@ impl ServiceStats {
         }
     }
 
+    /// Fraction of paid executable slots that carried a real query
+    /// (1.0 = perfectly packed batches, 0.0 = nothing executed yet).
+    pub fn batch_fill_ratio(&self) -> f64 {
+        let slots = self.batch_slots.load(Ordering::Relaxed);
+        if slots == 0 {
+            0.0
+        } else {
+            self.batched_queries.load(Ordering::Relaxed) as f64 / slots as f64
+        }
+    }
+
     pub fn to_json(&self) -> crate::json::Json {
+        use crate::json::Json;
         let (p50, p95, p99, mean) = self.latency_summary_us();
-        crate::json::Json::obj()
-            .with("requests", crate::json::Json::num(self.requests.load(Ordering::Relaxed) as f64))
-            .with("cache_hits", crate::json::Json::num(self.cache_hits.load(Ordering::Relaxed) as f64))
-            .with("batches", crate::json::Json::num(self.batches.load(Ordering::Relaxed) as f64))
-            .with("mean_batch_size", crate::json::Json::num(self.mean_batch_size()))
-            .with("errors", crate::json::Json::num(self.errors.load(Ordering::Relaxed) as f64))
-            .with("latency_p50_us", crate::json::Json::num(p50 as f64))
-            .with("latency_p95_us", crate::json::Json::num(p95 as f64))
-            .with("latency_p99_us", crate::json::Json::num(p99 as f64))
-            .with("latency_mean_us", crate::json::Json::num(mean))
+        Json::obj()
+            .with("requests", Json::num(self.requests.load(Ordering::Relaxed) as f64))
+            .with("cache_hits", Json::num(self.cache_hits.load(Ordering::Relaxed) as f64))
+            .with("batches", Json::num(self.batches.load(Ordering::Relaxed) as f64))
+            .with("mean_batch_size", Json::num(self.mean_batch_size()))
+            .with(
+                "batch_requests",
+                Json::num(self.batch_requests.load(Ordering::Relaxed) as f64),
+            )
+            .with("batch_fill_ratio", Json::num(self.batch_fill_ratio()))
+            .with(
+                "padded_slots",
+                Json::num(self.padded_slots.load(Ordering::Relaxed) as f64),
+            )
+            .with("errors", Json::num(self.errors.load(Ordering::Relaxed) as f64))
+            .with("latency_p50_us", Json::num(p50 as f64))
+            .with("latency_p95_us", Json::num(p95 as f64))
+            .with("latency_p99_us", Json::num(p99 as f64))
+            .with("latency_mean_us", Json::num(mean))
     }
 }
 
@@ -99,10 +135,24 @@ mod tests {
     }
 
     #[test]
+    fn fill_ratio_tracks_padding_waste() {
+        let s = ServiceStats::default();
+        assert_eq!(s.batch_fill_ratio(), 0.0);
+        // Two executed chunks of a batch-8 executable carrying 10 queries:
+        // 16 slots paid, 6 padded.
+        s.batched_queries.fetch_add(10, Ordering::Relaxed);
+        s.batch_slots.fetch_add(16, Ordering::Relaxed);
+        s.padded_slots.fetch_add(6, Ordering::Relaxed);
+        assert!((s.batch_fill_ratio() - 0.625).abs() < 1e-12);
+    }
+
+    #[test]
     fn json_export() {
         let s = ServiceStats::default();
         s.requests.fetch_add(3, Ordering::Relaxed);
         let j = s.to_json();
         assert_eq!(j.req_f64("requests").unwrap(), 3.0);
+        assert_eq!(j.req_f64("batch_fill_ratio").unwrap(), 0.0);
+        assert_eq!(j.req_f64("padded_slots").unwrap(), 0.0);
     }
 }

@@ -11,7 +11,16 @@
 //!   DL-compiler lowering pipeline + xPU simulator that produce ground
 //!   truth, the tokenizer/dataset pipeline, the PJRT runtime that executes
 //!   AOT-compiled models, the training orchestrator, and the serving
-//!   coordinator a compiler queries. Python is never on the request path.
+//!   coordinator a compiler queries. The coordinator is built for the
+//!   paper's traffic shape — concurrent, heavily duplicated probe streams
+//!   from autotuning passes: an N-way-sharded single-flight LRU
+//!   prediction cache (duplicate concurrent misses coalesce onto one
+//!   model invocation), a dynamic batcher, a batch API
+//!   (`Service::predict_many` / the `mlir_batch` wire request) that moves
+//!   whole probe sets through the pipeline in one call, and
+//!   batching-health metrics (fill ratio, padded slots, coalesced
+//!   queries, shard contention) over the `stats` command. Python is never
+//!   on the request path.
 //! - **L2 (JAX, build-time)** — the FC / LSTM / Conv1D regressors in
 //!   `python/compile/model.py`, AOT-lowered to HLO text.
 //! - **L1 (Pallas, build-time)** — the stacked Conv1D+MaxPool hot path in

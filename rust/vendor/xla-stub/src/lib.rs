@@ -1,0 +1,260 @@
+//! Offline stub for the `xla` crate (xla-rs over xla_extension 0.5.1).
+//!
+//! The real PJRT runtime links the native `xla_extension` C++ toolkit,
+//! which is not present on this image. This crate mirrors the API surface
+//! `mlir_cost::runtime` consumes so the workspace always compiles; host
+//! [`Literal`] plumbing is functional, while every device entry point
+//! (client creation, compile, execute) returns a clear "runtime
+//! unavailable" error. The serving/training tests detect the absence of
+//! compiled artifacts and skip cleanly, so `cargo test` passes end to end
+//! on a stub-only image.
+//!
+//! To serve real predictions, swap the `xla` path dependency in
+//! `rust/Cargo.toml` for the real `xla` crate — the consumed signatures
+//! match.
+
+use std::fmt;
+
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable(what: &str) -> Error {
+    Error(format!(
+        "xla stub: {what} requires the native xla_extension runtime \
+         (swap rust/vendor/xla-stub for the real `xla` crate)"
+    ))
+}
+
+/// Element dtypes mirroring the real crate's enum (only F32/S32 are
+/// produced by this codebase; the rest keep downstream matches honest).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S8,
+    S16,
+    S32,
+    S64,
+    U8,
+    U16,
+    U32,
+    U64,
+    F16,
+    Bf16,
+    F32,
+    F64,
+}
+
+/// Shape of a dense array literal.
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn element_type(&self) -> ElementType {
+        self.ty
+    }
+}
+
+/// Internal storage for [`Literal`]; public only because [`NativeType`]
+/// mentions it.
+#[doc(hidden)]
+#[derive(Debug, Clone)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// Host-side literal. Construction and reshape are functional; only
+/// device transfer requires the real runtime.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    dims: Vec<i64>,
+    data: Data,
+}
+
+/// Dtypes the stub can hold in a [`Literal`].
+pub trait NativeType: Copy + Sized {
+    const TY: ElementType;
+    fn wrap(data: Vec<Self>) -> Data;
+    fn unwrap(data: &Data) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+
+    fn wrap(data: Vec<f32>) -> Data {
+        Data::F32(data)
+    }
+
+    fn unwrap(data: &Data) -> Option<Vec<f32>> {
+        match data {
+            Data::F32(v) => Some(v.clone()),
+            Data::I32(_) => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+
+    fn wrap(data: Vec<i32>) -> Data {
+        Data::I32(data)
+    }
+
+    fn unwrap(data: &Data) -> Option<Vec<i32>> {
+        match data {
+            Data::I32(v) => Some(v.clone()),
+            Data::F32(_) => None,
+        }
+    }
+}
+
+impl Literal {
+    /// Build a rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal { dims: vec![data.len() as i64], data: T::wrap(data.to_vec()) }
+    }
+
+    fn len(&self) -> usize {
+        match &self.data {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+        }
+    }
+
+    fn ty(&self) -> ElementType {
+        match &self.data {
+            Data::F32(_) => ElementType::F32,
+            Data::I32(_) => ElementType::S32,
+        }
+    }
+
+    /// Reinterpret with new dims (element count must match; `&[]` is a
+    /// scalar holding one element).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.len() {
+            return Err(Error(format!(
+                "xla stub: cannot reshape {} elements to {dims:?}",
+                self.len()
+            )));
+        }
+        Ok(Literal { dims: dims.to_vec(), data: self.data.clone() })
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        Ok(ArrayShape { dims: self.dims.clone(), ty: self.ty() })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.data).ok_or_else(|| {
+            Error(format!("xla stub: literal holds {:?}, not {:?}", self.ty(), T::TY))
+        })
+    }
+
+    /// Tuple results only come back from `execute`, which the stub cannot
+    /// perform.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(unavailable("Literal::to_tuple on an executed result"))
+    }
+}
+
+/// Parsed HLO module (stub: never constructible from text).
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        Err(Error(format!(
+            "xla stub: cannot parse HLO text {path}; the native xla_extension \
+             runtime is required"
+        )))
+    }
+}
+
+/// An XLA computation wrapping a module proto.
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// PJRT client handle (stub: creation always fails).
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu()"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile()"))
+    }
+}
+
+/// Compiled executable handle.
+pub struct PjRtLoadedExecutable(());
+
+/// Device buffer handle returned by `execute`.
+pub struct PjRtBuffer(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute()"))
+    }
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync()"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let lit = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let shaped = lit.reshape(&[2, 2]).unwrap();
+        let shape = shaped.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[2, 2]);
+        assert_eq!(shape.element_type(), ElementType::F32);
+        assert_eq!(shaped.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(shaped.to_vec::<i32>().is_err());
+        assert!(lit.reshape(&[3]).is_err());
+        // Scalar reshape of a single element.
+        let s = Literal::vec1(&[7i32]).reshape(&[]).unwrap();
+        assert_eq!(s.array_shape().unwrap().dims(), &[] as &[i64]);
+    }
+
+    #[test]
+    fn device_paths_error_cleanly() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("nope.hlo").is_err());
+        let msg = PjRtClient::cpu().unwrap_err().to_string();
+        assert!(msg.contains("xla stub"));
+    }
+}
