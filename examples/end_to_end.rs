@@ -13,7 +13,7 @@ use mlir_cost::bundle::Bundle;
 use mlir_cost::dataset::{Dataset, EncodedSet, TargetStats};
 use mlir_cost::runtime::{Manifest, Runtime};
 use mlir_cost::sim::Target;
-use mlir_cost::tokenizer::{count_oov, Scheme, Vocab};
+use mlir_cost::tokenizer::{OpIdTable, Scheme, Vocab};
 use mlir_cost::train::{metrics, TrainConfig, Trainer};
 use std::path::Path;
 
@@ -38,24 +38,24 @@ fn main() -> Result<()> {
     );
     let (train, test) = ds.split(7, 0.1);
 
-    // 2. Tokenize + encode (vocab on train only; report OOV rate on test).
+    // 2. Tokenize + encode (vocab on train only; the fused encode pass
+    // counts test OOV as a side effect — no second vocabulary sweep).
     let streams_tr = train.token_streams(scheme)?;
     let streams_te = test.token_streams(scheme)?;
     let vocab = Vocab::build(streams_tr.iter(), 2);
-    let oov: usize = streams_te.iter().map(|s| count_oov(s, &vocab)).sum();
-    let total: usize = streams_te.iter().map(Vec::len).sum();
-    println!(
-        "[2/6] vocab {} tokens; test OOV rate {:.2}% ({} / {})",
-        vocab.len(),
-        100.0 * oov as f64 / total as f64,
-        oov,
-        total
-    );
     let stats = TargetStats::for_dataset(&train, target);
     let manifest = Manifest::load(Path::new("artifacts"))?;
     let mm = manifest.model(&model)?;
     let enc_tr = EncodedSet::build(&train, &streams_tr, &vocab, mm.max_len, target, &stats);
     let enc_te = EncodedSet::build(&test, &streams_te, &vocab, mm.max_len, target, &stats);
+    let total: usize = streams_te.iter().map(Vec::len).sum();
+    println!(
+        "[2/6] vocab {} tokens; test OOV rate {:.2}% ({} / {})",
+        vocab.len(),
+        100.0 * enc_te.oov as f64 / total as f64,
+        enc_te.oov,
+        total
+    );
 
     // 3. Train via the AOT train_step executable.
     let rt = Runtime::cpu()?;
@@ -96,6 +96,7 @@ fn main() -> Result<()> {
     );
 
     // 5. Persist the serving bundle + show one served prediction.
+    let op_ids = OpIdTable::build(&vocab);
     let bundle = Bundle {
         model: model.clone(),
         target,
@@ -104,6 +105,7 @@ fn main() -> Result<()> {
         vocab,
         stats,
         params: trainer.params().to_vec(),
+        op_ids,
     };
     let out = Path::new("runs/e2e_bundle");
     bundle.save(out, &manifest)?;

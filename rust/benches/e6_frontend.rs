@@ -1,0 +1,158 @@
+//! E6 — front-end throughput: the text→ids pipeline the serving
+//! coordinator runs on *every* query (PR 2's zero-allocation rebuild).
+//!
+//! Three pipelines over the same corpus, so one run produces the
+//! baseline-vs-after comparison directly:
+//!
+//!   string  — the pre-PR shape: parse → tokenize to `Vec<String>` →
+//!             encode (second vocabulary pass) → cache_key
+//!   fused   — zero-copy parse → id-direct sink (no `Vec<String>`,
+//!             fused OOV) → cache_key
+//!   memo    — duplicate-heavy traffic against the text-level memo:
+//!             a warm repeat costs one FxHash of the text + one shard
+//!             lookup
+//!
+//! Results (tokens/s, queries/s, speedups) print as a table and are
+//! recorded to `BENCH_frontend.json` at the repo root. No model
+//! artifacts are needed — this measures the front end only.
+
+use mlir_cost::benchkit;
+use mlir_cost::coordinator::cache::cache_key;
+use mlir_cost::coordinator::frontend::{CachedEncode, FrontendMemo};
+use mlir_cost::graphgen::{generate, Family, GraphSpec};
+use mlir_cost::json::Json;
+use mlir_cost::lower::affine::lower_to_affine;
+use mlir_cost::mlir::{parse_function, print_function};
+use mlir_cost::tokenizer::{encode, encode_function, tokenize, OpIdTable, Scheme, Vocab};
+use std::sync::Arc;
+
+fn repo_root() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).parent().unwrap().to_path_buf()
+}
+
+const TARGET: &str = "regpressure";
+const MODEL: &str = "conv_ops";
+const MAX_LEN: usize = 512;
+
+fn main() {
+    benchkit::section("E6 / front end: parse + tokenize + encode");
+
+    // Corpus: all families, xpu + affine-lowered forms (the affine texts
+    // are the "thousands of tokens" worst case the paper calls out).
+    let mut texts: Vec<String> = Vec::new();
+    for i in 0..14usize {
+        let spec = GraphSpec {
+            family: Family::ALL[i % 7],
+            structure_seed: 900 + i as u64,
+            shape_seed: 1900 + i as u64,
+        };
+        let f = generate(&spec).expect("graphgen");
+        texts.push(print_function(&f));
+        if i % 2 == 0 {
+            texts.push(print_function(&lower_to_affine(&f).expect("affine lowering")));
+        }
+    }
+    let scheme = Scheme::OpsOperands;
+    let streams: Vec<Vec<String>> = texts
+        .iter()
+        .map(|t| tokenize(&parse_function(t).expect("parse"), scheme))
+        .collect();
+    let vocab = Vocab::build(streams.iter(), 1);
+    let table = OpIdTable::build(&vocab);
+    let total_tokens: usize = streams.iter().map(Vec::len).sum();
+    let total_bytes: usize = texts.iter().map(String::len).sum();
+    benchkit::kv(
+        "corpus",
+        format!("{} texts, {total_tokens} tokens, {total_bytes} bytes", texts.len()),
+    );
+
+    // --- baseline: the pre-PR string pipeline -------------------------
+    let s_string = benchkit::bench("string pipeline (tokenize->Vec<String>->encode)", 3, 30, || {
+        for t in &texts {
+            let f = parse_function(t).expect("parse");
+            let toks = tokenize(&f, scheme);
+            let ids = encode(&toks, &vocab, MAX_LEN);
+            std::hint::black_box(cache_key(MODEL, &ids));
+        }
+    });
+    println!("{}", s_string.row());
+
+    // --- fused id-direct sink (cold path of the new front end) --------
+    let s_fused = benchkit::bench("fused id-direct sink (no string stream)", 3, 30, || {
+        for t in &texts {
+            let f = parse_function(t).expect("parse");
+            let (ids, _oov) = encode_function(&f, scheme, &vocab, &table, MAX_LEN);
+            std::hint::black_box(cache_key(MODEL, &ids));
+        }
+    });
+    println!("{}", s_fused.row());
+
+    // --- memo hits (duplicate-heavy autotuning traffic) ---------------
+    let memo = FrontendMemo::new(4096);
+    for t in &texts {
+        let f = parse_function(t).expect("parse");
+        let (ids, _) = encode_function(&f, scheme, &vocab, &table, MAX_LEN);
+        let key = cache_key(MODEL, &ids);
+        let tk = FrontendMemo::text_key(TARGET, MODEL, t);
+        memo.insert(tk, CachedEncode { ids: Arc::new(ids), key });
+    }
+    let s_memo = benchkit::bench("memo hit (hash + shard lookup)", 3, 30, || {
+        for t in &texts {
+            let tk = FrontendMemo::text_key(TARGET, MODEL, t);
+            let enc = memo.get(tk).expect("warm memo");
+            std::hint::black_box(enc.key);
+        }
+    });
+    println!("{}", s_memo.row());
+
+    let queries_per_iter = texts.len() as f64;
+    let qps = |mean_us: f64| queries_per_iter / (mean_us * 1e-6);
+    let tps = |mean_us: f64| total_tokens as f64 / (mean_us * 1e-6);
+    let fused_speedup = s_string.mean_us / s_fused.mean_us;
+    let memo_speedup = s_string.mean_us / s_memo.mean_us;
+
+    benchkit::section("E6 summary");
+    benchkit::kv(
+        "string pipeline",
+        format!("{:.0} q/s, {:.0} tok/s", qps(s_string.mean_us), tps(s_string.mean_us)),
+    );
+    benchkit::kv(
+        "fused id-direct",
+        format!(
+            "{:.0} q/s, {:.0} tok/s ({fused_speedup:.2}x)",
+            qps(s_fused.mean_us),
+            tps(s_fused.mean_us)
+        ),
+    );
+    benchkit::kv("memo hit", format!("{:.0} q/s ({memo_speedup:.1}x)", qps(s_memo.mean_us)));
+    benchkit::kv(
+        "duplicate-heavy >=5x target (acceptance)",
+        if memo_speedup >= 5.0 { "OK" } else { "VIOLATED" },
+    );
+
+    // Record baseline-vs-after for BENCH_frontend.json.
+    let entry = |s: &mlir_cost::benchkit::Summary| {
+        Json::obj()
+            .with("mean_us_per_sweep", Json::num(s.mean_us))
+            .with("p50_us", Json::num(s.p50_us))
+            .with("p95_us", Json::num(s.p95_us))
+            .with("queries_per_sec", Json::num(qps(s.mean_us)))
+            .with("tokens_per_sec", Json::num(tps(s.mean_us)))
+    };
+    let doc = Json::obj()
+        .with("bench", Json::str("e6_frontend"))
+        .with("scheme", Json::str(scheme.name()))
+        .with("max_len", Json::num(MAX_LEN as f64))
+        .with("corpus_texts", Json::num(texts.len() as f64))
+        .with("corpus_tokens", Json::num(total_tokens as f64))
+        .with("baseline_string_pipeline", entry(&s_string))
+        .with("after_fused_id_direct", entry(&s_fused))
+        .with("after_memo_hit", entry(&s_memo))
+        .with("fused_speedup_vs_baseline", Json::num(fused_speedup))
+        .with("memo_hit_speedup_vs_baseline", Json::num(memo_speedup));
+    let out = repo_root().join("BENCH_frontend.json");
+    match std::fs::write(&out, doc.to_string()) {
+        Ok(()) => println!("\nrecorded {out:?}"),
+        Err(e) => eprintln!("\ncould not write {out:?}: {e}"),
+    }
+}

@@ -9,9 +9,10 @@
 
 use crate::dataset::TargetStats;
 use crate::json::{parse, Json};
+use crate::mlir::Function;
 use crate::runtime::{Manifest, Tensor};
 use crate::sim::Target;
-use crate::tokenizer::{Scheme, Vocab};
+use crate::tokenizer::{encode_function, OpIdTable, Scheme, Vocab};
 use anyhow::{anyhow, Context, Result};
 use std::path::Path;
 
@@ -24,6 +25,9 @@ pub struct Bundle {
     pub vocab: Vocab,
     pub stats: TargetStats,
     pub params: Vec<Tensor>,
+    /// Per-`OpKind` vocabulary ids, precomputed at load so the id-direct
+    /// encoder resolves op tokens by array index on every query.
+    pub op_ids: OpIdTable,
 }
 
 impl Bundle {
@@ -67,7 +71,8 @@ impl Bundle {
                 Tensor::from_f32_file(&dir.join(format!("{k}.f32")), mm.param_shapes[k].clone())
             })
             .collect::<Result<_>>()?;
-        Ok(Bundle { model, target, scheme, max_len, vocab, stats, params })
+        let op_ids = OpIdTable::build(&vocab);
+        Ok(Bundle { model, target, scheme, max_len, vocab, stats, params, op_ids })
     }
 
     /// An untrained bundle straight from the AOT init params (useful for
@@ -81,6 +86,7 @@ impl Bundle {
         stats: TargetStats,
     ) -> Result<Bundle> {
         let mm = manifest.model(model)?;
+        let op_ids = OpIdTable::build(&vocab);
         Ok(Bundle {
             model: model.to_string(),
             target,
@@ -89,7 +95,15 @@ impl Bundle {
             vocab,
             stats,
             params: manifest.load_init_params(model)?,
+            op_ids,
         })
+    }
+
+    /// Fused tokenize+encode for one parsed function (the serving hot
+    /// path): ids byte-identical to the string pipeline, plus the
+    /// whole-stream OOV count, in a single pass with no `Vec<String>`.
+    pub fn encode_ids(&self, f: &Function) -> (Vec<u32>, usize) {
+        encode_function(f, self.scheme, &self.vocab, &self.op_ids, self.max_len)
     }
 }
 

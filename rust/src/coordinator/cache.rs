@@ -19,16 +19,19 @@
 //! Contention (`lock would have blocked`) and coalesced-follower counts
 //! are exported through the service `stats` command.
 
-use std::collections::hash_map::DefaultHasher;
-use std::collections::{HashMap, VecDeque};
+use fxhash::{FxHashMap, FxHasher};
+use std::collections::VecDeque;
 use std::hash::{Hash, Hasher};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Mutex, MutexGuard, TryLockError};
 
-/// Key = hash of (model name, encoded ids).
+/// Key = FxHash of (model name, encoded ids). This runs once per query —
+/// over a `max_len`-sized id row — so the hasher choice is measurable;
+/// FxHash is ~an order of magnitude cheaper than SipHash here and the
+/// keys are compiler-internal (no DoS surface).
 pub fn cache_key(model: &str, ids: &[u32]) -> u64 {
-    let mut h = DefaultHasher::new();
+    let mut h = FxHasher::default();
     model.hash(&mut h);
     ids.hash(&mut h);
     h.finish()
@@ -36,6 +39,18 @@ pub fn cache_key(model: &str, ids: &[u32]) -> u64 {
 
 /// Default shard count for the serving path (power of two).
 pub const DEFAULT_SHARDS: usize = 16;
+
+/// Shard selection shared by the prediction cache and the front-end
+/// memo: the key's high bits pick the shard (FxHash's final multiply
+/// diffuses into the high bits), leaving the low bits for the in-shard
+/// map's buckets.
+pub(super) fn shard_index(key: u64, shard_bits: u32) -> usize {
+    if shard_bits == 0 {
+        0
+    } else {
+        (key >> (64 - shard_bits)) as usize
+    }
+}
 
 struct Entry {
     value: f64,
@@ -45,21 +60,21 @@ struct Entry {
 }
 
 struct Shard {
-    entries: HashMap<u64, Entry>,
+    entries: FxHashMap<u64, Entry>,
     /// Lazy LRU recency queue of `(key, stamp)`; front is oldest.
     order: VecDeque<(u64, u64)>,
     stamp: u64,
     /// Keys with a model invocation in flight → waiters to notify.
-    inflight: HashMap<u64, Vec<Sender<Option<f64>>>>,
+    inflight: FxHashMap<u64, Vec<Sender<Option<f64>>>>,
 }
 
 impl Shard {
     fn new() -> Shard {
         Shard {
-            entries: HashMap::new(),
+            entries: FxHashMap::default(),
             order: VecDeque::new(),
             stamp: 0,
-            inflight: HashMap::new(),
+            inflight: FxHashMap::default(),
         }
     }
 
@@ -201,18 +216,8 @@ impl PredictionCache {
         self.shards.len()
     }
 
-    fn shard_index(&self, key: u64) -> usize {
-        if self.shard_bits == 0 {
-            0
-        } else {
-            // High bits: DefaultHasher mixes well and the low bits stay
-            // available for the in-shard HashMap.
-            (key >> (64 - self.shard_bits)) as usize
-        }
-    }
-
     fn lock_shard(&self, key: u64) -> MutexGuard<'_, Shard> {
-        let m = &self.shards[self.shard_index(key)];
+        let m = &self.shards[shard_index(key, self.shard_bits)];
         match m.try_lock() {
             Ok(g) => g,
             Err(TryLockError::WouldBlock) => {

@@ -1,0 +1,181 @@
+//! Text-level encode memo: the front half of the serving path.
+//!
+//! Autotuning probes re-send the *same MLIR text* thousands of times
+//! (every pass, every schedule candidate). Before this memo, each of
+//! those duplicates paid a full lex→parse→tokenize→encode pass just to
+//! discover it was a prediction-cache hit. The memo keys on
+//! `FxHash(target, model, mlir_text)` — target included because two
+//! heads may share a model architecture while carrying different
+//! vocab/scheme/stats, and their encodings must never cross-serve — and
+//! stores the finished `(ids, cache_key)` pair, so a duplicate query's
+//! entire front end collapses to one hash of the input text plus one
+//! sharded map probe.
+//!
+//! Same trust model as the prediction cache: keys are 64-bit hashes with
+//! no stored-text verification — a collision would serve the wrong row,
+//! but at the memo's working-set size the probability is ~2⁻⁴⁰ per pair
+//! and the inputs are compiler-internal, not adversarial.
+//!
+//! Eviction is wholesale per shard (clear-on-full) rather than LRU: the
+//! memo is a cheap accelerator in front of the real LRU
+//! [`super::cache::PredictionCache`], duplicate-heavy traffic re-warms a
+//! cleared shard in one miss per distinct query, and clearing keeps the
+//! insert path to a single hash probe.
+
+use fxhash::{FxHashMap, FxHasher};
+use std::hash::{Hash, Hasher};
+use std::sync::{Arc, Mutex};
+
+/// Shard count (power of two), mirroring the prediction cache's layout.
+pub const DEFAULT_MEMO_SHARDS: usize = 16;
+
+/// A memoized front-end result: the padded id row and its
+/// prediction-cache key. `ids` is shared (`Arc`) so a memo hit hands the
+/// row out without copying `max_len` u32s; the rare prediction-cache miss
+/// clones it once when entering the batch queue.
+#[derive(Debug, Clone)]
+pub struct CachedEncode {
+    pub ids: Arc<Vec<u32>>,
+    pub key: u64,
+}
+
+/// Sharded `hash(target, model, text)` → [`CachedEncode`] memo. Hit/miss
+/// accounting lives on `ServiceStats` (`frontend_memo_hits`), not here —
+/// the probe itself stays free of atomic traffic.
+pub struct FrontendMemo {
+    shards: Vec<Mutex<FxHashMap<u64, CachedEncode>>>,
+    shard_bits: u32,
+    per_shard_cap: usize,
+}
+
+impl FrontendMemo {
+    /// Memo holding ~`capacity` entries across [`DEFAULT_MEMO_SHARDS`]
+    /// shards.
+    pub fn new(capacity: usize) -> FrontendMemo {
+        FrontendMemo::with_shards(capacity, DEFAULT_MEMO_SHARDS)
+    }
+
+    /// Explicit shard count (rounded to a power of two, clamped so tiny
+    /// capacities are not multiplied — same rule as the prediction cache).
+    pub fn with_shards(capacity: usize, shards: usize) -> FrontendMemo {
+        let n = shards
+            .max(1)
+            .next_power_of_two()
+            .min(capacity.max(1).next_power_of_two());
+        FrontendMemo {
+            shards: (0..n).map(|_| Mutex::new(FxHashMap::default())).collect(),
+            shard_bits: n.trailing_zeros(),
+            per_shard_cap: (capacity / n).max(1),
+        }
+    }
+
+    /// The memo key for a query: one FxHash pass over
+    /// `(target, model, text)` — this is the entire per-duplicate
+    /// front-end cost after warmup. `target` is part of the key because
+    /// each serving head (one per target) owns its own vocab/scheme/
+    /// max_len even when the model architecture name is shared.
+    pub fn text_key(target: &str, model: &str, mlir_text: &str) -> u64 {
+        let mut h = FxHasher::default();
+        target.hash(&mut h);
+        model.hash(&mut h);
+        mlir_text.hash(&mut h);
+        h.finish()
+    }
+
+    fn shard(&self, key: u64) -> &Mutex<FxHashMap<u64, CachedEncode>> {
+        &self.shards[super::cache::shard_index(key, self.shard_bits)]
+    }
+
+    pub fn get(&self, text_key: u64) -> Option<CachedEncode> {
+        self.shard(text_key).lock().unwrap().get(&text_key).cloned()
+    }
+
+    pub fn insert(&self, text_key: u64, enc: CachedEncode) {
+        let mut shard = self.shard(text_key).lock().unwrap();
+        if shard.len() >= self.per_shard_cap && !shard.contains_key(&text_key) {
+            shard.clear();
+        }
+        shard.insert(text_key, enc);
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn enc(ids: Vec<u32>, key: u64) -> CachedEncode {
+        CachedEncode { ids: Arc::new(ids), key }
+    }
+
+    #[test]
+    fn same_text_same_key_then_hit() {
+        let text = "func.func @f() {\n  return\n}\n";
+        let k1 = FrontendMemo::text_key("regpressure", "fc_ops", text);
+        let k2 = FrontendMemo::text_key("regpressure", "fc_ops", text);
+        assert_eq!(k1, k2, "identical (target, model, text) must share a memo key");
+        let memo = FrontendMemo::new(64);
+        assert!(memo.get(k1).is_none());
+        memo.insert(k1, enc(vec![1, 2, 3], 99));
+        let got = memo.get(k2).expect("second lookup must hit");
+        assert_eq!(*got.ids, vec![1, 2, 3]);
+        assert_eq!(got.key, 99);
+    }
+
+    #[test]
+    fn keys_separate_targets_models_and_texts() {
+        let t = "func.func @f() {\n  return\n}\n";
+        // Two heads may share a model architecture name while owning
+        // different vocabs — the target must split their memo entries.
+        assert_ne!(
+            FrontendMemo::text_key("regpressure", "fc_ops", t),
+            FrontendMemo::text_key("cycles", "fc_ops", t)
+        );
+        assert_ne!(
+            FrontendMemo::text_key("regpressure", "fc_ops", t),
+            FrontendMemo::text_key("regpressure", "conv_ops", t)
+        );
+        assert_ne!(
+            FrontendMemo::text_key("regpressure", "fc_ops", t),
+            FrontendMemo::text_key("regpressure", "fc_ops", "other text")
+        );
+    }
+
+    #[test]
+    fn capacity_is_bounded() {
+        let memo = FrontendMemo::with_shards(8, 1);
+        for i in 0..100u64 {
+            let k = FrontendMemo::text_key("t", "m", &format!("t{i}"));
+            memo.insert(k, enc(vec![], i));
+        }
+        assert!(memo.len() <= 8, "memo grew past capacity: {}", memo.len());
+        assert!(!memo.is_empty());
+    }
+
+    #[test]
+    fn reinsert_same_key_does_not_clear() {
+        let memo = FrontendMemo::with_shards(1, 1);
+        let k = FrontendMemo::text_key("t", "m", "text");
+        memo.insert(k, enc(vec![1], 1));
+        memo.insert(k, enc(vec![2], 2)); // refresh at cap: no wipe
+        assert_eq!(memo.get(k).unwrap().key, 2);
+        assert_eq!(memo.len(), 1);
+    }
+
+    #[test]
+    fn shared_ids_are_not_copied() {
+        let memo = FrontendMemo::new(16);
+        let k = FrontendMemo::text_key("t", "m", "text");
+        let row = Arc::new(vec![7u32; 512]);
+        memo.insert(k, CachedEncode { ids: row.clone(), key: 1 });
+        let got = memo.get(k).unwrap();
+        assert!(Arc::ptr_eq(&row, &got.ids), "memo hit must share, not copy");
+    }
+}

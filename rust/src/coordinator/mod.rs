@@ -7,9 +7,11 @@
 //! The request path is built for the paper's traffic shape (thousands of
 //! concurrent, heavily duplicated queries from autotuning probes):
 //!
-//! - [`Service::predict`] — one query: parse → tokenize → encode →
-//!   sharded cache lookup → single-flight (duplicate concurrent misses
-//!   coalesce onto one model invocation) → batch queue → PJRT.
+//! - [`Service::predict`] — one query: text-level memo probe (a duplicate
+//!   query skips the front end entirely) → zero-copy parse → fused
+//!   id-direct encode → sharded cache lookup → single-flight (duplicate
+//!   concurrent misses coalesce onto one model invocation) → batch queue
+//!   → PJRT.
 //! - [`Service::predict_many`] — the batch API: encodes all inputs,
 //!   partitions into cache hits / coalesced followers / misses, and
 //!   submits all misses to the [`batcher::BatchQueue`] in one shot.
@@ -19,6 +21,7 @@
 
 pub mod batcher;
 pub mod cache;
+pub mod frontend;
 pub mod server;
 pub mod stats;
 
@@ -26,10 +29,10 @@ use crate::bundle::Bundle;
 use crate::mlir::parse_function;
 use crate::runtime::{Executable, Manifest, Runtime, Tensor};
 use crate::sim::Target;
-use crate::tokenizer::{encode, tokenize};
 use anyhow::{anyhow, Result};
 use batcher::{BatchPolicy, BatchQueue, Pending};
 use cache::{cache_key, FlightGuard, Lookup, PredictionCache};
+use frontend::{CachedEncode, FrontendMemo};
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::atomic::Ordering;
@@ -44,11 +47,18 @@ struct Head {
     worker: Option<JoinHandle<()>>,
 }
 
+/// Entries the text-level encode memo holds (~2 KB per entry at
+/// max_len 512; ids are shared, not duplicated, on hit).
+const FRONTEND_MEMO_CAPACITY: usize = 8192;
+
 /// The cost-model service a DL-compiler connects to.
 pub struct Service {
     heads: HashMap<Target, Head>,
     pub cache: Arc<PredictionCache>,
     pub stats: Arc<stats::ServiceStats>,
+    /// `hash(target, model, mlir_text)` → `(ids, cache_key)`: duplicate
+    /// probes skip parse/tokenize/encode entirely.
+    memo: FrontendMemo,
 }
 
 impl Service {
@@ -91,21 +101,35 @@ impl Service {
                 Head { bundle, queue, worker: Some(worker) },
             );
         }
-        Ok(Service { heads, cache, stats })
+        Ok(Service { heads, cache, stats, memo: FrontendMemo::new(FRONTEND_MEMO_CAPACITY) })
     }
 
     pub fn targets(&self) -> Vec<Target> {
         self.heads.keys().copied().collect()
     }
 
-    /// Parse + tokenize + encode one query for a head; returns the padded
-    /// id row and its cache key.
-    fn encode_query(&self, head: &Head, mlir_text: &str) -> Result<(Vec<u32>, u64)> {
+    /// The text→ids front end for one query: memo probe first (a
+    /// duplicate query costs one text hash + one shard lookup), then the
+    /// zero-copy parse + fused id-direct encode on miss. Parse failures
+    /// are not memoized — the error path is not the hot path.
+    fn encode_query(&self, head: &Head, mlir_text: &str) -> Result<CachedEncode> {
+        let t0 = Instant::now();
+        // Keyed per head (target): two heads may share a model
+        // architecture name while owning different vocabs.
+        let text_key =
+            FrontendMemo::text_key(head.bundle.target.name(), &head.bundle.model, mlir_text);
+        if let Some(enc) = self.memo.get(text_key) {
+            self.stats.frontend_memo_hits.fetch_add(1, Ordering::Relaxed);
+            self.stats.encode_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            return Ok(enc);
+        }
         let func = parse_function(mlir_text)?;
-        let toks = tokenize(&func, head.bundle.scheme);
-        let ids = encode(&toks, &head.bundle.vocab, head.bundle.max_len);
+        let (ids, _oov) = head.bundle.encode_ids(&func);
         let key = cache_key(&head.bundle.model, &ids);
-        Ok((ids, key))
+        let enc = CachedEncode { ids: Arc::new(ids), key };
+        self.memo.insert(text_key, enc.clone());
+        self.stats.encode_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        Ok(enc)
     }
 
     fn head(&self, target: Target) -> Result<&Head> {
@@ -115,21 +139,24 @@ impl Service {
     }
 
     /// Predict a hardware characteristic for a raw MLIR function text.
-    /// This is the full request path: parse → tokenize → encode → sharded
-    /// cache (single-flight) → batch → PJRT → denormalize.
+    /// This is the full request path: memoized front end (zero-copy parse
+    /// + fused id-direct encode on first sight, one hash + one lookup on
+    /// duplicates) → sharded cache (single-flight) → batch → PJRT →
+    /// denormalize. A warm repeat of the same text allocates no `String`
+    /// anywhere on this path.
     pub fn predict(&self, target: Target, mlir_text: &str) -> Result<f64> {
         let t0 = Instant::now();
         self.stats.requests.fetch_add(1, Ordering::Relaxed);
         let head = self.head(target)?;
-        let (ids, key) = self.encode_query(head, mlir_text)?;
-        let value = match self.cache.lookup(key) {
+        let enc = self.encode_query(head, mlir_text)?;
+        let value = match self.cache.lookup(enc.key) {
             Lookup::Hit(v) => {
                 self.stats.cache_hits.fetch_add(1, Ordering::Relaxed);
                 v
             }
             Lookup::Wait(rx) => wait_for_leader(rx)?,
             Lookup::Miss(guard) => {
-                let rx = head.queue.submit(ids);
+                let rx = head.queue.submit(enc.ids.as_ref().clone());
                 let norm = rx.recv().map_err(|_| anyhow!("prediction worker gone"))?;
                 let value = head.bundle.stats.denormalize(norm);
                 guard.complete(value);
@@ -174,7 +201,7 @@ impl Service {
         for text in mlir_texts {
             match self.encode_query(head, text) {
                 Err(e) => slots.push(Slot::Done(Err(e))),
-                Ok((ids, key)) => match self.cache.lookup(key) {
+                Ok(enc) => match self.cache.lookup(enc.key) {
                     Lookup::Hit(v) => {
                         self.stats.cache_hits.fetch_add(1, Ordering::Relaxed);
                         slots.push(Slot::Done(Ok(v)));
@@ -182,7 +209,7 @@ impl Service {
                     Lookup::Wait(rx) => slots.push(Slot::Follower(rx)),
                     Lookup::Miss(guard) => {
                         slots.push(Slot::Leader { guard, miss_idx: miss_ids.len() });
-                        miss_ids.push(ids);
+                        miss_ids.push(enc.ids.as_ref().clone());
                     }
                 },
             }
@@ -242,6 +269,7 @@ impl Service {
             .with("coalesced_queries", Json::num(self.cache.coalesced() as f64))
             .with("cache_shard_contention", Json::num(self.cache.contended() as f64))
             .with("cache_shards", Json::num(self.cache.shard_count() as f64))
+            .with("frontend_memo_entries", Json::num(self.memo.len() as f64))
     }
 
     /// Shut down workers (drains in-flight batches).
@@ -426,6 +454,23 @@ mod tests {
         assert_eq!(v, v2);
         let (hits, _) = svc.cache.stats();
         assert_eq!(hits, 1);
+    }
+
+    #[test]
+    fn frontend_memo_skips_reencode_on_duplicates() {
+        let Some(svc) = test_service() else { return };
+        let text = graph_text(31, 32);
+        let v1 = svc.predict(Target::RegPressure, &text).unwrap();
+        assert_eq!(svc.stats.frontend_memo_hits.load(Ordering::Relaxed), 0);
+        // Same text again: front end must come from the memo.
+        let v2 = svc.predict(Target::RegPressure, &text).unwrap();
+        assert_eq!(v1, v2);
+        assert_eq!(svc.stats.frontend_memo_hits.load(Ordering::Relaxed), 1);
+        // And the counters surface in the merged stats view.
+        let j = svc.stats_json();
+        assert_eq!(j.req_f64("frontend_memo_hits").unwrap(), 1.0);
+        assert!(j.req_f64("encode_ns").unwrap() > 0.0);
+        assert!(j.req_f64("frontend_memo_entries").unwrap() >= 1.0);
     }
 
     #[test]

@@ -15,8 +15,9 @@
 //! cache misses enter the batch queue together), and per-entry failures
 //! come back in-position without failing the rest. The `stats` command
 //! returns the merged service + cache view, including `coalesced_queries`
-//! (single-flight), `cache_shard_contention`, `batch_fill_ratio`, and
-//! `padded_slots`.
+//! (single-flight), `cache_shard_contention`, `batch_fill_ratio`,
+//! `padded_slots`, and the front-end counters `frontend_memo_hits` /
+//! `encode_ns` / `frontend_memo_entries`.
 //!
 //! A DL-compiler links a 30-line client (see `examples/`) and calls this
 //! from its pass pipeline. Threads, not tokio: no async runtime is
@@ -27,7 +28,7 @@ use super::Service;
 use crate::json::{parse, Json};
 use crate::sim::Target;
 use anyhow::{anyhow, Context, Result};
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, BufWriter, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -82,7 +83,10 @@ pub fn serve_on(service: Arc<Service>, listener: TcpListener, stop: Arc<AtomicBo
 fn handle_conn(service: Arc<Service>, stream: TcpStream, stop: Arc<AtomicBool>) -> Result<()> {
     // Read with a timeout so shutdown can interrupt an idle connection.
     stream.set_read_timeout(Some(std::time::Duration::from_millis(200)))?;
-    let mut writer = stream.try_clone()?;
+    // Responses stream into a per-connection BufWriter (one syscall per
+    // reply on flush, no per-reply String); the request line buffer is
+    // reused across the connection's lifetime.
+    let mut writer = BufWriter::new(stream.try_clone()?);
     let mut reader = BufReader::new(stream);
     let mut line = String::new();
     loop {
@@ -94,7 +98,7 @@ fn handle_conn(service: Arc<Service>, stream: TcpStream, stop: Arc<AtomicBool>) 
                     continue;
                 }
                 let response = handle_line(&service, &line);
-                writer.write_all(response.to_string().as_bytes())?;
+                response.write_to(&mut writer)?;
                 writer.write_all(b"\n")?;
                 writer.flush()?;
             }
@@ -202,14 +206,18 @@ pub fn handle_line(service: &Service, line: &str) -> Json {
 /// the serving bench).
 pub struct Client {
     reader: BufReader<TcpStream>,
-    writer: TcpStream,
+    writer: BufWriter<TcpStream>,
     next_id: u64,
 }
 
 impl Client {
     pub fn connect(addr: &str) -> Result<Client> {
         let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
-        Ok(Client { reader: BufReader::new(stream.try_clone()?), writer: stream, next_id: 1 })
+        Ok(Client {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: BufWriter::new(stream),
+            next_id: 1,
+        })
     }
 
     fn next_id(&mut self) -> u64 {
@@ -219,7 +227,7 @@ impl Client {
     }
 
     fn roundtrip(&mut self, req: Json) -> Result<Json> {
-        self.writer.write_all(req.to_string().as_bytes())?;
+        req.write_to(&mut self.writer)?;
         self.writer.write_all(b"\n")?;
         self.writer.flush()?;
         let mut line = String::new();
@@ -329,6 +337,9 @@ mod tests {
         assert!(inner.get("cache_shard_contention").is_some());
         assert!(inner.get("batch_fill_ratio").is_some());
         assert!(inner.get("padded_slots").is_some());
+        assert!(inner.get("frontend_memo_hits").is_some());
+        assert!(inner.get("encode_ns").is_some());
+        assert!(inner.get("frontend_memo_entries").is_some());
         let targets = handle_line(&svc, r#"{"id": 3, "cmd": "targets"}"#);
         assert_eq!(targets.req_arr("targets").unwrap().len(), 1);
         let bad = handle_line(&svc, "{nope");

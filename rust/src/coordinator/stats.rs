@@ -5,9 +5,13 @@
 //! `batch_slots` (executable slots paid for), `padded_slots` (slots that
 //! carried padding, i.e. wasted model FLOPs), and `batch_requests`
 //! (`predict_many` calls). `batch_fill_ratio()` = useful queries / slots.
-//! Cache-side counters (shard contention, coalesced single-flight
-//! queries) live on `PredictionCache`; `Service::stats_json` merges both
-//! views for the wire protocol.
+//! Front-end counters added with the zero-allocation encode pipeline:
+//! `frontend_memo_hits` (queries whose parse/tokenize/encode was skipped
+//! by the text-level memo) and `encode_ns` (total nanoseconds spent in
+//! the text→ids front end, memo hits included). Cache-side counters
+//! (shard contention, coalesced single-flight queries) live on
+//! `PredictionCache`; `Service::stats_json` merges both views for the
+//! wire protocol.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -26,6 +30,12 @@ pub struct ServiceStats {
     pub batch_slots: AtomicU64,
     /// Slots that carried padding instead of a real query.
     pub padded_slots: AtomicU64,
+    /// Queries served ids straight from the text-level encode memo
+    /// (no parse/tokenize/encode performed).
+    pub frontend_memo_hits: AtomicU64,
+    /// Total time in the text→ids front end across all queries, in
+    /// nanoseconds (memo hits contribute their hash+lookup time).
+    pub encode_ns: AtomicU64,
     pub errors: AtomicU64,
     latencies_us: Mutex<Reservoir>,
 }
@@ -100,6 +110,11 @@ impl ServiceStats {
                 "padded_slots",
                 Json::num(self.padded_slots.load(Ordering::Relaxed) as f64),
             )
+            .with(
+                "frontend_memo_hits",
+                Json::num(self.frontend_memo_hits.load(Ordering::Relaxed) as f64),
+            )
+            .with("encode_ns", Json::num(self.encode_ns.load(Ordering::Relaxed) as f64))
             .with("errors", Json::num(self.errors.load(Ordering::Relaxed) as f64))
             .with("latency_p50_us", Json::num(p50 as f64))
             .with("latency_p95_us", Json::num(p95 as f64))
@@ -150,9 +165,13 @@ mod tests {
     fn json_export() {
         let s = ServiceStats::default();
         s.requests.fetch_add(3, Ordering::Relaxed);
+        s.frontend_memo_hits.fetch_add(2, Ordering::Relaxed);
+        s.encode_ns.fetch_add(1500, Ordering::Relaxed);
         let j = s.to_json();
         assert_eq!(j.req_f64("requests").unwrap(), 3.0);
         assert_eq!(j.req_f64("batch_fill_ratio").unwrap(), 0.0);
         assert_eq!(j.req_f64("padded_slots").unwrap(), 0.0);
+        assert_eq!(j.req_f64("frontend_memo_hits").unwrap(), 2.0);
+        assert_eq!(j.req_f64("encode_ns").unwrap(), 1500.0);
     }
 }

@@ -13,7 +13,7 @@ use crate::lower::CodegenOpts;
 use crate::mlir::{parse_function, print_function};
 use crate::rng::Rng;
 use crate::sim::{ground_truth, Labels, Target, XpuConfig};
-use crate::tokenizer::{encode, tokenize, Scheme, Vocab};
+use crate::tokenizer::{encode_with_oov, tokenize, Scheme, Vocab};
 use anyhow::{ensure, Context, Result};
 use std::path::Path;
 
@@ -200,6 +200,9 @@ pub struct EncodedSet {
     pub targets: Vec<f32>,
     pub n: usize,
     pub max_len: usize,
+    /// Whole-stream OOV tokens across all samples, counted during the
+    /// same pass that encodes (no second vocabulary-lookup sweep).
+    pub oov: usize,
 }
 
 impl EncodedSet {
@@ -215,11 +218,14 @@ impl EncodedSet {
         let n = ds.len();
         let mut ids = Vec::with_capacity(n * max_len);
         let mut targets = Vec::with_capacity(n);
+        let mut oov = 0usize;
         for (s, toks) in ds.samples.iter().zip(streams) {
-            ids.extend(encode(toks, vocab, max_len).into_iter().map(|x| x as i32));
+            let (row, row_oov) = encode_with_oov(toks, vocab, max_len);
+            ids.extend(row.into_iter().map(|x| x as i32));
+            oov += row_oov;
             targets.push(stats.normalize(target.of(&s.labels)) as f32);
         }
-        EncodedSet { ids, targets, n, max_len }
+        EncodedSet { ids, targets, n, max_len, oov }
     }
 
     /// Row-slice a minibatch (by precomputed indices).
@@ -297,6 +303,14 @@ mod tests {
         let enc = EncodedSet::build(&ds, &streams, &vocab, 64, Target::RegPressure, &stats);
         assert_eq!(enc.ids.len(), 8 * 64);
         assert_eq!(enc.targets.len(), 8);
+        // Vocab was built from these very streams with min_count 1 → the
+        // fused pass must see zero OOV; a foreign vocab must see plenty.
+        assert_eq!(enc.oov, 0);
+        let tiny = Vocab::build([vec!["func".to_string()]].iter(), 1);
+        let enc2 = EncodedSet::build(&ds, &streams, &tiny, 64, Target::RegPressure, &stats);
+        let expect: usize =
+            streams.iter().map(|s| crate::tokenizer::count_oov(s, &tiny)).sum();
+        assert_eq!(enc2.oov, expect);
         let (bi, bt) = enc.gather(&[0, 3, 5]);
         assert_eq!(bi.len(), 3 * 64);
         assert_eq!(bt.len(), 3);

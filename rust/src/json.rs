@@ -7,7 +7,7 @@
 
 use anyhow::{anyhow, bail, ensure, Result};
 use std::collections::BTreeMap;
-use std::fmt::Write as _;
+use std::io::Write;
 
 /// A JSON value. Objects use `BTreeMap` so serialization is deterministic.
 #[derive(Debug, Clone, PartialEq)]
@@ -115,67 +115,105 @@ impl Json {
         Json::Arr(v.iter().map(|&x| Json::Num(x as f64)).collect())
     }
 
-    /// Serialize (compact).
-    pub fn to_string(&self) -> String {
-        let mut s = String::new();
-        self.write(&mut s);
-        s
-    }
-
-    fn write(&self, out: &mut String) {
+    /// Stream the compact serialization straight into `w` — the wire
+    /// protocol writes responses into a connection's `BufWriter` without
+    /// materializing an intermediate `String` per reply.
+    pub fn write_to<W: Write>(&self, w: &mut W) -> std::io::Result<()> {
         match self {
-            Json::Null => out.push_str("null"),
-            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Null => w.write_all(b"null"),
+            Json::Bool(b) => w.write_all(if *b { b"true" } else { b"false" }),
             Json::Num(n) => {
                 if n.fract() == 0.0 && n.abs() < 9e15 {
-                    let _ = write!(out, "{}", *n as i64);
+                    write!(w, "{}", *n as i64)
                 } else {
-                    let _ = write!(out, "{n}");
+                    write!(w, "{n}")
                 }
             }
-            Json::Str(s) => write_escaped(s, out),
+            Json::Str(s) => write_escaped(s, w),
             Json::Arr(v) => {
-                out.push('[');
+                w.write_all(b"[")?;
                 for (i, x) in v.iter().enumerate() {
                     if i > 0 {
-                        out.push(',');
+                        w.write_all(b",")?;
                     }
-                    x.write(out);
+                    x.write_to(w)?;
                 }
-                out.push(']');
+                w.write_all(b"]")
             }
             Json::Obj(m) => {
-                out.push('{');
+                w.write_all(b"{")?;
                 for (i, (k, v)) in m.iter().enumerate() {
                     if i > 0 {
-                        out.push(',');
+                        w.write_all(b",")?;
                     }
-                    write_escaped(k, out);
-                    out.push(':');
-                    v.write(out);
+                    write_escaped(k, w)?;
+                    w.write_all(b":")?;
+                    v.write_to(w)?;
                 }
-                out.push('}');
+                w.write_all(b"}")
             }
         }
     }
 }
 
-fn write_escaped(s: &str, out: &mut String) {
-    out.push('"');
-    for c in s.chars() {
-        match c {
-            '"' => out.push_str("\\\""),
-            '\\' => out.push_str("\\\\"),
-            '\n' => out.push_str("\\n"),
-            '\r' => out.push_str("\\r"),
-            '\t' => out.push_str("\\t"),
-            c if (c as u32) < 0x20 => {
-                let _ = write!(out, "\\u{:04x}", c as u32);
-            }
-            c => out.push(c),
-        }
+/// Adapts a `fmt::Formatter` to `io::Write` so `Display` can reuse
+/// [`Json::write_to`] without an intermediate buffer. Sound because
+/// `write_to` only ever emits whole UTF-8 chunks: `&str` slices cut at
+/// char boundaries, ASCII punctuation, and `write!` output.
+struct FmtWriter<'a, 'b>(&'a mut std::fmt::Formatter<'b>);
+
+impl Write for FmtWriter<'_, '_> {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        let s = std::str::from_utf8(buf)
+            .map_err(|_| std::io::Error::from(std::io::ErrorKind::InvalidData))?;
+        self.0
+            .write_str(s)
+            .map_err(|_| std::io::Error::from(std::io::ErrorKind::Other))?;
+        Ok(buf.len())
     }
-    out.push('"');
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+/// Compact serialization; `to_string()` comes via the `ToString` blanket.
+/// [`Json::write_to`] is the streaming core — `Display` streams through
+/// it directly (no temporary buffer), and the wire path calls it with a
+/// connection's `BufWriter`.
+impl std::fmt::Display for Json {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        self.write_to(&mut FmtWriter(f)).map_err(|_| std::fmt::Error)
+    }
+}
+
+/// Write `s` quoted + escaped. Maximal runs of chars needing no escape go
+/// out as one `write_all` (the common case is the whole string).
+fn write_escaped<W: Write>(s: &str, w: &mut W) -> std::io::Result<()> {
+    w.write_all(b"\"")?;
+    let mut start = 0;
+    for (i, c) in s.char_indices() {
+        let escape_needed = matches!(c, '"' | '\\') || (c as u32) < 0x20;
+        if !escape_needed {
+            continue;
+        }
+        if start < i {
+            w.write_all(s[start..i].as_bytes())?;
+        }
+        match c {
+            '"' => w.write_all(b"\\\"")?,
+            '\\' => w.write_all(b"\\\\")?,
+            '\n' => w.write_all(b"\\n")?,
+            '\r' => w.write_all(b"\\r")?,
+            '\t' => w.write_all(b"\\t")?,
+            c => write!(w, "\\u{:04x}", c as u32)?,
+        }
+        start = i + c.len_utf8();
+    }
+    if start < s.len() {
+        w.write_all(s[start..].as_bytes())?;
+    }
+    w.write_all(b"\"")
 }
 
 /// Parse a JSON document.
@@ -397,6 +435,18 @@ mod tests {
         assert!(parse("[1,]").is_err());
         assert!(parse("tru").is_err());
         assert!(parse("{\"a\":1} x").is_err());
+    }
+
+    #[test]
+    fn write_to_matches_to_string() {
+        let j = Json::obj()
+            .with("s", Json::str("a\"b\\c\nd\u{1}é→"))
+            .with("arr", Json::Arr(vec![Json::num(1.0), Json::Bool(false), Json::Null]))
+            .with("n", Json::num(-2.5));
+        let mut buf = Vec::new();
+        j.write_to(&mut buf).unwrap();
+        assert_eq!(String::from_utf8(buf).unwrap(), j.to_string());
+        assert_eq!(parse(&j.to_string()).unwrap(), j);
     }
 
     #[test]

@@ -19,8 +19,15 @@
 //!   (`Service::predict_many` / the `mlir_batch` wire request) that moves
 //!   whole probe sets through the pipeline in one call, and
 //!   batching-health metrics (fill ratio, padded slots, coalesced
-//!   queries, shard contention) over the `stats` command. Python is never
-//!   on the request path.
+//!   queries, shard contention) over the `stats` command. The text→ids
+//!   front end is zero-allocation: a borrowed-slice lexer, a sink-based
+//!   tokenizer whose id-direct sink maps tokens straight to vocabulary
+//!   ids (per-`OpKind` id tables, one reusable scratch buffer), a
+//!   text-level encode memo so duplicate autotuning probes skip
+//!   parse/tokenize/encode entirely (one FxHash + one shard lookup), and
+//!   FxHash on every vocab/cache/memo probe — instrumented via the
+//!   `frontend_memo_hits` / `encode_ns` counters. Python is never on the
+//!   request path.
 //! - **L2 (JAX, build-time)** — the FC / LSTM / Conv1D regressors in
 //!   `python/compile/model.py`, AOT-lowered to HLO text.
 //! - **L1 (Pallas, build-time)** — the stacked Conv1D+MaxPool hot path in

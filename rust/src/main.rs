@@ -19,7 +19,7 @@ use mlir_cost::dataset::{Dataset, EncodedSet, TargetStats};
 use mlir_cost::json::Json;
 use mlir_cost::runtime::{Manifest, Runtime};
 use mlir_cost::sim::{ground_truth_default, Target};
-use mlir_cost::tokenizer::{Scheme, Vocab};
+use mlir_cost::tokenizer::{OpIdTable, Scheme, Vocab};
 use mlir_cost::train::{metrics, TrainConfig, Trainer};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -164,12 +164,14 @@ fn train(flags: &HashMap<String, String>) -> Result<()> {
         max_len,
     )?;
     eprintln!(
-        "training {model} on {} ({}; vocab {} tokens, {} train / {} test)",
+        "training {model} on {} ({}; vocab {} tokens, {} train / {} test, {} / {} OOV)",
         target.name(),
         scheme.name(),
         enc.vocab.len(),
         enc.train.n,
-        enc.test.n
+        enc.test.n,
+        enc.train.oov,
+        enc.test.oov
     );
     let mut trainer = Trainer::new(&rt, &manifest, &model)?;
     let cfg = TrainConfig {
@@ -182,6 +184,7 @@ fn train(flags: &HashMap<String, String>) -> Result<()> {
     let report = trainer.run(&cfg, &enc.train, &enc.test)?;
     eprintln!("trained at {:.2} steps/s", report.steps_per_sec);
 
+    let op_ids = OpIdTable::build(&enc.vocab);
     let bundle = Bundle {
         model: model.clone(),
         target,
@@ -190,6 +193,7 @@ fn train(flags: &HashMap<String, String>) -> Result<()> {
         vocab: enc.vocab,
         stats: enc.stats,
         params: trainer.params().to_vec(),
+        op_ids,
     };
     bundle.save(&out, &manifest)?;
     eprintln!("bundle saved to {out:?}");

@@ -197,6 +197,16 @@ pub enum AffineOp {
 }
 
 impl AffineOp {
+    /// All ops, for vocabulary construction and table-driven id lookup.
+    pub const ALL: [AffineOp; 6] = [
+        AffineOp::For,
+        AffineOp::Yield,
+        AffineOp::Load,
+        AffineOp::Store,
+        AffineOp::VectorLoad,
+        AffineOp::VectorStore,
+    ];
+
     pub fn mnemonic(self) -> &'static str {
         match self {
             AffineOp::For => "for",
@@ -242,6 +252,24 @@ pub enum ArithOp {
 }
 
 impl ArithOp {
+    /// All ops, for vocabulary construction and table-driven id lookup.
+    pub const ALL: [ArithOp; 14] = [
+        ArithOp::Constant,
+        ArithOp::AddF,
+        ArithOp::SubF,
+        ArithOp::MulF,
+        ArithOp::DivF,
+        ArithOp::MaxF,
+        ArithOp::MinF,
+        ArithOp::Fma,
+        ArithOp::ExpF,
+        ArithOp::TanhF,
+        ArithOp::ErfF,
+        ArithOp::SqrtF,
+        ArithOp::RsqrtF,
+        ArithOp::NegF,
+    ];
+
     pub fn mnemonic(self) -> &'static str {
         match self {
             ArithOp::Constant => "constant",
@@ -311,6 +339,35 @@ impl OpKind {
             OpKind::MemRef(MemRefOp::Alloc) => "memref.alloc".to_string(),
             OpKind::Return => "func.return".to_string(),
         }
+    }
+
+    /// Number of distinct op kinds (size of a dense `table_index` table).
+    pub const TABLE_LEN: usize =
+        XpuOp::ALL.len() + AffineOp::ALL.len() + ArithOp::ALL.len() + 2;
+
+    /// Dense index in `0..TABLE_LEN`, for table-driven lookups on the
+    /// serving hot path (see `tokenizer::OpIdTable`). Relies on the
+    /// sub-enums being unit-only and declared in `ALL` order, so the
+    /// `as usize` discriminant doubles as the position.
+    #[inline]
+    pub fn table_index(&self) -> usize {
+        match self {
+            OpKind::Xpu(op) => *op as usize,
+            OpKind::Affine(op) => XpuOp::ALL.len() + *op as usize,
+            OpKind::Arith(op) => XpuOp::ALL.len() + AffineOp::ALL.len() + *op as usize,
+            OpKind::MemRef(MemRefOp::Alloc) => OpKind::TABLE_LEN - 2,
+            OpKind::Return => OpKind::TABLE_LEN - 1,
+        }
+    }
+
+    /// Every op kind, in `table_index` order.
+    pub fn all() -> impl Iterator<Item = OpKind> {
+        XpuOp::ALL
+            .iter()
+            .map(|&op| OpKind::Xpu(op))
+            .chain(AffineOp::ALL.iter().map(|&op| OpKind::Affine(op)))
+            .chain(ArithOp::ALL.iter().map(|&op| OpKind::Arith(op)))
+            .chain([OpKind::MemRef(MemRefOp::Alloc), OpKind::Return])
     }
 
     /// Parse a fully-qualified op name.
@@ -812,5 +869,26 @@ mod tests {
             .with("high", Attr::IntArray(vec![0, 1]));
         let r = XpuOp::Pad.infer_result(&[t(&[2, 8])], &attrs).unwrap();
         assert_eq!(r, t(&[2, 10]));
+    }
+
+    #[test]
+    fn table_index_is_dense_and_matches_all_order() {
+        // The id-direct encoder indexes a flat table by `table_index`;
+        // the whole scheme rests on these invariants.
+        let kinds: Vec<OpKind> = OpKind::all().collect();
+        assert_eq!(kinds.len(), OpKind::TABLE_LEN);
+        for (i, kind) in kinds.iter().enumerate() {
+            assert_eq!(kind.table_index(), i, "{kind:?} out of order");
+        }
+        // `as usize` must agree with each sub-enum's ALL ordering.
+        for (i, op) in XpuOp::ALL.iter().enumerate() {
+            assert_eq!(*op as usize, i, "{op:?} declared out of ALL order");
+        }
+        for (i, op) in AffineOp::ALL.iter().enumerate() {
+            assert_eq!(*op as usize, i, "{op:?} declared out of ALL order");
+        }
+        for (i, op) in ArithOp::ALL.iter().enumerate() {
+            assert_eq!(*op as usize, i, "{op:?} declared out of ALL order");
+        }
     }
 }

@@ -10,26 +10,31 @@ use super::func::{function_from_parts, Block, Function, Module, Operation, Value
 use super::ops::{AffineOp, MemRefOp, OpKind};
 use super::types::{DType, TensorType, Type};
 use anyhow::{anyhow, bail, ensure, Context, Result};
-use std::collections::HashMap;
+use fxhash::FxHashMap;
 
 // ---------------------------------------------------------------------------
 // Lexer
 // ---------------------------------------------------------------------------
 
-#[derive(Debug, Clone, PartialEq)]
-enum Tok {
+/// One lexed token. Every payload is a *borrowed slice of the source
+/// text* — the lexer performs zero heap allocation per token, which
+/// matters because the serving hot path re-lexes every incoming query
+/// (thousands of tokens per MLIR function, millions of queries per
+/// compilation). `Copy` keeps the parser's `next()`/`peek()` clone-free.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Tok<'a> {
     /// Bare identifier, possibly dotted: `func.func`, `affine.for`, `index`.
-    Ident(String),
+    Ident(&'a str),
     /// `%name` (name without the `%`).
-    Value(String),
+    Value(&'a str),
     /// `@name` (name without the `@`).
-    Symbol(String),
+    Symbol(&'a str),
     /// Integer or float literal (sign included).
-    Number(String),
+    Number(&'a str),
     /// `"quoted"` string (content without quotes).
-    Str(String),
+    Str(&'a str),
     /// `tensor<...>` / `memref<...>` captured whole.
-    TypeLit(String),
+    TypeLit(&'a str),
     LBrace,
     RBrace,
     LParen,
@@ -42,7 +47,7 @@ enum Tok {
     Arrow,
 }
 
-fn lex(src: &str) -> Result<Vec<Tok>> {
+fn lex(src: &str) -> Result<Vec<Tok<'_>>> {
     let bytes = src.as_bytes();
     let mut toks = Vec::new();
     let mut i = 0usize;
@@ -106,7 +111,7 @@ fn lex(src: &str) -> Result<Vec<Tok>> {
                     i += 1;
                 }
                 ensure!(i > start, "empty {} name at byte {}", tag as char, start);
-                let name = src[start..i].to_string();
+                let name = &src[start..i];
                 toks.push(if tag == b'%' { Tok::Value(name) } else { Tok::Symbol(name) });
             }
             b'"' => {
@@ -116,7 +121,7 @@ fn lex(src: &str) -> Result<Vec<Tok>> {
                     i += 1;
                 }
                 ensure!(i < n, "unterminated string starting at byte {start}");
-                toks.push(Tok::Str(src[start..i].to_string()));
+                toks.push(Tok::Str(&src[start..i]));
                 i += 1;
             }
             b'-' | b'0'..=b'9' => {
@@ -131,7 +136,7 @@ fn lex(src: &str) -> Result<Vec<Tok>> {
                 {
                     i += 1;
                 }
-                toks.push(Tok::Number(src[start..i].to_string()));
+                toks.push(Tok::Number(&src[start..i]));
             }
             c if ident_start(c) => {
                 let start = i;
@@ -145,11 +150,11 @@ fn lex(src: &str) -> Result<Vec<Tok>> {
                     let close = src[i..]
                         .find('>')
                         .ok_or_else(|| anyhow!("unclosed {} type at byte {start}", word))?;
-                    let lit = src[start..i + close + 1].to_string();
+                    let lit = &src[start..i + close + 1];
                     i += close + 1;
                     toks.push(Tok::TypeLit(lit));
                 } else {
-                    toks.push(Tok::Ident(word.to_string()));
+                    toks.push(Tok::Ident(word));
                 }
             }
             other => bail!("unexpected character '{}' at byte {i}", other as char),
@@ -183,26 +188,31 @@ fn parse_type_lit(lit: &str) -> Result<Type> {
 // Parser
 // ---------------------------------------------------------------------------
 
-struct Parser {
-    toks: Vec<Tok>,
+/// Recursive-descent parser over the borrowed token stream. `'a` is the
+/// lifetime of the source text; all intermediate names stay `&'a str`
+/// until a value/function actually needs an owned copy in the IR.
+struct Parser<'a> {
+    toks: Vec<Tok<'a>>,
     pos: usize,
 }
 
-/// Per-function symbol state while parsing.
-struct FuncState {
+/// Per-function symbol state while parsing. `by_name` keys borrow the
+/// source text (no second `String` per value; FxHash keeps the per-lookup
+/// cost down on the serving path).
+struct FuncState<'a> {
     values: Vec<Type>,
     names: Vec<String>,
-    by_name: HashMap<String, ValueId>,
+    by_name: FxHashMap<&'a str, ValueId>,
     num_args: usize,
 }
 
-impl FuncState {
-    fn define(&mut self, name: &str, ty: Type) -> Result<ValueId> {
+impl<'a> FuncState<'a> {
+    fn define(&mut self, name: &'a str, ty: Type) -> Result<ValueId> {
         ensure!(!self.by_name.contains_key(name), "redefinition of %{name}");
         let id = ValueId(self.values.len() as u32);
         self.values.push(ty);
         self.names.push(name.to_string());
-        self.by_name.insert(name.to_string(), id);
+        self.by_name.insert(name, id);
         Ok(id)
     }
 
@@ -214,25 +224,25 @@ impl FuncState {
     }
 }
 
-impl Parser {
-    fn peek(&self) -> Option<&Tok> {
+impl<'a> Parser<'a> {
+    fn peek(&self) -> Option<&Tok<'a>> {
         self.toks.get(self.pos)
     }
 
-    fn next(&mut self) -> Result<Tok> {
-        let t = self.toks.get(self.pos).cloned().ok_or_else(|| anyhow!("unexpected end of input"))?;
+    fn next(&mut self) -> Result<Tok<'a>> {
+        let t = self.toks.get(self.pos).copied().ok_or_else(|| anyhow!("unexpected end of input"))?;
         self.pos += 1;
         Ok(t)
     }
 
-    fn expect(&mut self, t: Tok) -> Result<()> {
+    fn expect(&mut self, t: Tok<'a>) -> Result<()> {
         let got = self.next()?;
         ensure!(got == t, "expected {t:?}, got {got:?} at token {}", self.pos - 1);
         Ok(())
     }
 
-    fn eat(&mut self, t: &Tok) -> bool {
-        if self.peek() == Some(t) {
+    fn eat(&mut self, t: Tok<'a>) -> bool {
+        if self.peek() == Some(&t) {
             self.pos += 1;
             true
         } else {
@@ -247,7 +257,7 @@ impl Parser {
         }
     }
 
-    fn value_name(&mut self) -> Result<String> {
+    fn value_name(&mut self) -> Result<&'a str> {
         match self.next()? {
             Tok::Value(s) => Ok(s),
             got => bail!("expected %value, got {got:?}"),
@@ -263,9 +273,9 @@ impl Parser {
 
     fn parse_type(&mut self) -> Result<Type> {
         match self.next()? {
-            Tok::TypeLit(lit) => parse_type_lit(&lit),
-            Tok::Ident(s) if s == "index" => Ok(Type::Index),
-            Tok::Ident(s) => DType::parse(&s)
+            Tok::TypeLit(lit) => parse_type_lit(lit),
+            Tok::Ident("index") => Ok(Type::Index),
+            Tok::Ident(s) => DType::parse(s)
                 .map(Type::Scalar)
                 .ok_or_else(|| anyhow!("unknown type '{s}'")),
             got => bail!("expected a type, got {got:?}"),
@@ -281,15 +291,15 @@ impl Parser {
                     Ok(Attr::Int(s.parse::<i64>().with_context(|| format!("bad int '{s}'"))?))
                 }
             }
-            Tok::Str(s) => Ok(Attr::Str(s)),
-            Tok::Ident(s) if s == "true" => Ok(Attr::Bool(true)),
-            Tok::Ident(s) if s == "false" => Ok(Attr::Bool(false)),
+            Tok::Str(s) => Ok(Attr::Str(s.to_string())),
+            Tok::Ident("true") => Ok(Attr::Bool(true)),
+            Tok::Ident("false") => Ok(Attr::Bool(false)),
             Tok::LBracket => {
                 let mut v = Vec::new();
-                if !self.eat(&Tok::RBracket) {
+                if !self.eat(Tok::RBracket) {
                     loop {
                         v.push(self.int()?);
-                        if !self.eat(&Tok::Comma) {
+                        if !self.eat(Tok::Comma) {
                             break;
                         }
                     }
@@ -304,10 +314,10 @@ impl Parser {
     /// Parse an optional `{k = v, ...}` dictionary.
     fn parse_attrs(&mut self) -> Result<Attrs> {
         let mut attrs = Attrs::new();
-        if !self.eat(&Tok::LBrace) {
+        if !self.eat(Tok::LBrace) {
             return Ok(attrs);
         }
-        if self.eat(&Tok::RBrace) {
+        if self.eat(Tok::RBrace) {
             return Ok(attrs);
         }
         loop {
@@ -316,8 +326,9 @@ impl Parser {
                 got => bail!("expected attribute key, got {got:?}"),
             };
             self.expect(Tok::Eq)?;
-            attrs.set(&key, self.parse_attr_value()?);
-            if !self.eat(&Tok::Comma) {
+            let value = self.parse_attr_value()?;
+            attrs.set(key, value);
+            if !self.eat(Tok::Comma) {
                 break;
             }
         }
@@ -325,13 +336,13 @@ impl Parser {
         Ok(attrs)
     }
 
-    fn parse_index_list(&mut self, st: &FuncState) -> Result<Vec<ValueId>> {
+    fn parse_index_list(&mut self, st: &FuncState<'a>) -> Result<Vec<ValueId>> {
         self.expect(Tok::LBracket)?;
         let mut idx = Vec::new();
-        if !self.eat(&Tok::RBracket) {
+        if !self.eat(Tok::RBracket) {
             loop {
-                idx.push(st.lookup(&self.value_name()?)?);
-                if !self.eat(&Tok::Comma) {
+                idx.push(st.lookup(self.value_name()?)?);
+                if !self.eat(Tok::Comma) {
                     break;
                 }
             }
@@ -341,19 +352,19 @@ impl Parser {
     }
 
     /// Parse the ops of one block until the closing `}` (consumed).
-    fn parse_block_body(&mut self, st: &mut FuncState, block: &mut Block) -> Result<()> {
+    fn parse_block_body(&mut self, st: &mut FuncState<'a>, block: &mut Block) -> Result<()> {
         loop {
-            if self.eat(&Tok::RBrace) {
+            if self.eat(Tok::RBrace) {
                 return Ok(());
             }
-            match self.peek().cloned() {
-                Some(Tok::Ident(kw)) if kw == "return" => {
+            match self.peek().copied() {
+                Some(Tok::Ident("return")) => {
                     self.next()?;
                     let mut operands = Vec::new();
                     if matches!(self.peek(), Some(Tok::Value(_))) {
                         loop {
-                            operands.push(st.lookup(&self.value_name()?)?);
-                            if !self.eat(&Tok::Comma) {
+                            operands.push(st.lookup(self.value_name()?)?);
+                            if !self.eat(Tok::Comma) {
                                 break;
                             }
                         }
@@ -373,21 +384,21 @@ impl Parser {
                         region: None,
                     });
                 }
-                Some(Tok::Ident(kw)) if kw == "affine.for" => {
+                Some(Tok::Ident("affine.for")) => {
                     self.next()?;
                     let iv_name = self.value_name()?;
                     self.expect(Tok::Eq)?;
                     let lb = self.int()?;
                     self.expect_ident("to")?;
                     let ub = self.int()?;
-                    let step = if matches!(self.peek(), Some(Tok::Ident(s)) if s == "step") {
+                    let step = if matches!(self.peek(), Some(Tok::Ident(s)) if *s == "step") {
                         self.next()?;
                         self.int()?
                     } else {
                         1
                     };
                     self.expect(Tok::LBrace)?;
-                    let iv = st.define(&iv_name, Type::Index)?;
+                    let iv = st.define(iv_name, Type::Index)?;
                     let mut body = Block { args: vec![iv], ops: Vec::new() };
                     self.parse_block_body(st, &mut body)?;
                     let attrs = Attrs::new()
@@ -402,7 +413,7 @@ impl Parser {
                         region: Some(body),
                     });
                 }
-                Some(Tok::Ident(kw)) if kw == "affine.yield" => {
+                Some(Tok::Ident("affine.yield")) => {
                     self.next()?;
                     block.ops.push(Operation {
                         kind: OpKind::Affine(AffineOp::Yield),
@@ -412,11 +423,11 @@ impl Parser {
                         region: None,
                     });
                 }
-                Some(Tok::Ident(kw)) if kw == "affine.store" || kw == "affine.vector_store" => {
+                Some(Tok::Ident(kw @ ("affine.store" | "affine.vector_store"))) => {
                     self.next()?;
-                    let value = st.lookup(&self.value_name()?)?;
+                    let value = st.lookup(self.value_name()?)?;
                     self.expect(Tok::Comma)?;
-                    let memref = st.lookup(&self.value_name()?)?;
+                    let memref = st.lookup(self.value_name()?)?;
                     let indices = self.parse_index_list(st)?;
                     let attrs = self.parse_attrs()?;
                     self.expect(Tok::Colon)?;
@@ -441,8 +452,8 @@ impl Parser {
                     let result_name = self.value_name()?;
                     self.expect(Tok::Eq)?;
                     match self.next()? {
-                        Tok::Ident(kw) if kw == "affine.load" || kw == "affine.vector_load" => {
-                            let memref = st.lookup(&self.value_name()?)?;
+                        Tok::Ident(kw @ ("affine.load" | "affine.vector_load")) => {
+                            let memref = st.lookup(self.value_name()?)?;
                             let indices = self.parse_index_list(st)?;
                             let attrs = self.parse_attrs()?;
                             self.expect(Tok::Colon)?;
@@ -451,7 +462,7 @@ impl Parser {
                                 .as_memref()
                                 .ok_or_else(|| anyhow!("{kw}: %{result_name} base not a memref"))?
                                 .dtype;
-                            let result = st.define(&result_name, Type::Scalar(dtype))?;
+                            let result = st.define(result_name, Type::Scalar(dtype))?;
                             let mut operands = vec![memref];
                             operands.extend(indices);
                             let op = if kw == "affine.load" {
@@ -467,13 +478,13 @@ impl Parser {
                                 region: None,
                             });
                         }
-                        Tok::Ident(kw) if kw == "memref.alloc" => {
+                        Tok::Ident("memref.alloc") => {
                             self.expect(Tok::LParen)?;
                             self.expect(Tok::RParen)?;
                             self.expect(Tok::Colon)?;
                             let ty = self.parse_type()?;
                             ensure!(ty.as_memref().is_some(), "memref.alloc must yield a memref");
-                            let result = st.define(&result_name, ty)?;
+                            let result = st.define(result_name, ty)?;
                             block.ops.push(Operation {
                                 kind: OpKind::MemRef(MemRefOp::Alloc),
                                 operands: vec![],
@@ -484,14 +495,14 @@ impl Parser {
                         }
                         Tok::Str(opname) => {
                             // generic: "xpu.conv2d"(%a, %b) {attrs} : (..) -> t
-                            let kind = OpKind::parse_name(&opname)
+                            let kind = OpKind::parse_name(opname)
                                 .ok_or_else(|| anyhow!("unknown op \"{opname}\""))?;
                             self.expect(Tok::LParen)?;
                             let mut operands = Vec::new();
-                            if !self.eat(&Tok::RParen) {
+                            if !self.eat(Tok::RParen) {
                                 loop {
-                                    operands.push(st.lookup(&self.value_name()?)?);
-                                    if !self.eat(&Tok::Comma) {
+                                    operands.push(st.lookup(self.value_name()?)?);
+                                    if !self.eat(Tok::Comma) {
                                         break;
                                     }
                                 }
@@ -509,7 +520,7 @@ impl Parser {
                             self.expect(Tok::RParen)?;
                             self.expect(Tok::Arrow)?;
                             let result_ty = self.parse_type()?;
-                            let result = st.define(&result_name, result_ty)?;
+                            let result = st.define(result_name, result_ty)?;
                             block.ops.push(Operation {
                                 kind,
                                 operands,
@@ -535,28 +546,28 @@ impl Parser {
         let mut st = FuncState {
             values: Vec::new(),
             names: Vec::new(),
-            by_name: HashMap::new(),
+            by_name: FxHashMap::default(),
             num_args: 0,
         };
         self.expect(Tok::LParen)?;
-        if !self.eat(&Tok::RParen) {
+        if !self.eat(Tok::RParen) {
             loop {
                 let arg_name = self.value_name()?;
                 self.expect(Tok::Colon)?;
                 let ty = self.parse_type()?;
-                st.define(&arg_name, ty)?;
+                st.define(arg_name, ty)?;
                 st.num_args += 1;
-                if !self.eat(&Tok::Comma) {
+                if !self.eat(Tok::Comma) {
                     break;
                 }
             }
             self.expect(Tok::RParen)?;
         }
-        if self.eat(&Tok::Arrow) {
-            if self.eat(&Tok::LParen) {
+        if self.eat(Tok::Arrow) {
+            if self.eat(Tok::LParen) {
                 loop {
                     self.parse_type()?;
-                    if !self.eat(&Tok::Comma) {
+                    if !self.eat(Tok::Comma) {
                         break;
                     }
                 }
@@ -572,7 +583,7 @@ impl Parser {
             Some(op) if op.kind == OpKind::Return => op.operands.clone(),
             _ => bail!("function @{name} does not end in return"),
         };
-        function_from_parts(name, st.values, st.names, st.num_args, ret, body)
+        function_from_parts(name.to_string(), st.values, st.names, st.num_args, ret, body)
     }
 }
 
@@ -589,15 +600,15 @@ pub fn parse_function(src: &str) -> Result<Function> {
 pub fn parse_module(src: &str) -> Result<Module> {
     let toks = lex(src)?;
     let mut p = Parser { toks, pos: 0 };
-    if matches!(p.peek(), Some(Tok::Ident(s)) if s == "module") {
+    if matches!(p.peek(), Some(Tok::Ident(s)) if *s == "module") {
         p.next()?;
         let name = match p.next()? {
             Tok::Symbol(s) => s,
             got => bail!("expected @name after 'module', got {got:?}"),
         };
         p.expect(Tok::LBrace)?;
-        let mut m = Module::new(&name);
-        while !p.eat(&Tok::RBrace) {
+        let mut m = Module::new(name);
+        while !p.eat(Tok::RBrace) {
             m.functions.push(p.parse_function()?);
         }
         ensure!(p.peek().is_none(), "trailing input after module");

@@ -98,11 +98,23 @@ impl TensorType {
     /// token's spelling, e.g. `1x128x768xf32` (rank-0 → `xf32` degenerate
     /// form avoided by spelling `scalar_f32`).
     pub fn shape_token(&self) -> String {
+        let mut s = String::new();
+        self.write_shape_token(&mut s);
+        s
+    }
+
+    /// Append the shape token to `out` without intermediate allocation
+    /// (the serving tokenizer reuses one scratch `String` per query).
+    pub fn write_shape_token(&self, out: &mut String) {
+        use std::fmt::Write as _;
         if self.shape.is_empty() {
-            return format!("scalar_{}", self.dtype);
+            let _ = write!(out, "scalar_{}", self.dtype);
+            return;
         }
-        let dims: Vec<String> = self.shape.iter().map(|d| d.to_string()).collect();
-        format!("{}x{}", dims.join("x"), self.dtype)
+        for d in &self.shape {
+            let _ = write!(out, "{d}x");
+        }
+        out.push_str(self.dtype.mlir_name());
     }
 }
 

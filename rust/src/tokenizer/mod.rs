@@ -10,11 +10,19 @@
 //!    exactly the paper's Fig 6 OOV hazard) plus result shape tokens.
 //!    Sequences run ~4× longer (paper Fig 6).
 
+//! The tokenizer is sink-based: [`tokenize_into`] walks the function once
+//! and emits each token as a borrowed `&str` (formatted tokens go through
+//! a single reusable scratch buffer). Sinks choose the materialization:
+//! `Vec<String>` keeps the string stream (vocab building, OOV analysis),
+//! while [`IdSink`] maps tokens straight to vocabulary ids — the serving
+//! hot path never builds a `Vec<String>` at all.
+
 pub mod vocab;
 
 pub use vocab::{Vocab, OOV_ID, PAD_ID};
 
 use crate::mlir::{Function, OpKind, XpuOp};
+use std::fmt::Write as _;
 
 /// Tokenization scheme (paper §3 describes both).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -48,52 +56,107 @@ impl Scheme {
     }
 }
 
-/// Tokenize a function per Fig 4: (1) func header, (2) input/output
-/// shapes as single-entity tokens, (3) the op sequence, (4) return.
-pub fn tokenize(f: &Function, scheme: Scheme) -> Vec<String> {
-    let mut toks: Vec<String> = Vec::new();
+/// Receives the token stream emitted by [`tokenize_into`]. Tokens arrive
+/// as `&str` borrows (of a static literal, the function's name table, or
+/// the walker's scratch buffer — never valid beyond the call), so a sink
+/// decides per token whether to copy, map to an id, or count.
+pub trait TokenSink {
+    /// One token. The slice is only valid for the duration of this call.
+    fn token(&mut self, tok: &str);
+
+    /// An operation-name token (`xpu.matmul`, `affine.for`, ...). The
+    /// default formats the full name; id-direct sinks override this with
+    /// a precomputed per-[`OpKind`] table lookup so the hot path never
+    /// formats op names at all.
+    fn op(&mut self, kind: &OpKind) {
+        self.token(&kind.full_name());
+    }
+}
+
+/// The string-stream sink: preserves the historical `Vec<String>` view
+/// used for vocab building and OOV analysis.
+impl TokenSink for Vec<String> {
+    fn token(&mut self, tok: &str) {
+        self.push(tok.to_string());
+    }
+
+    fn op(&mut self, kind: &OpKind) {
+        self.push(kind.full_name());
+    }
+}
+
+/// Tokenize a function per Fig 4 into `sink`: (1) func header, (2)
+/// input/output shapes as single-entity tokens, (3) the op sequence, (4)
+/// return. One reusable scratch buffer backs every formatted token —
+/// after its first few growths this walk performs zero heap allocation.
+pub fn tokenize_into<S: TokenSink>(f: &Function, scheme: Scheme, sink: &mut S) {
+    let mut scratch = String::new();
     // (1) header
-    toks.push("func".to_string());
+    sink.token("func");
     // (2) input and output tensor shapes, each one token
     for id in f.arg_ids() {
-        toks.push(shape_token(f, id));
+        sink.token(shape_token_into(f, id, &mut scratch));
     }
-    toks.push("->".to_string());
+    sink.token("->");
     for &r in &f.ret {
-        toks.push(shape_token(f, r));
+        sink.token(shape_token_into(f, r, &mut scratch));
     }
     // (3) the op sequence
     f.walk(&mut |op, _| {
         if matches!(op.kind, OpKind::Return) {
             return;
         }
-        toks.push(op.kind.full_name());
+        sink.op(&op.kind);
         if scheme == Scheme::OpsOperands {
             for &o in &op.operands {
-                toks.push(format!("%{}", f.value_name(o)));
+                scratch.clear();
+                scratch.push('%');
+                scratch.push_str(f.value_name(o));
+                sink.token(&scratch);
             }
             for &r in &op.results {
-                toks.push(format!("%{}", f.value_name(r)));
-                toks.push(shape_token(f, r));
+                scratch.clear();
+                scratch.push('%');
+                scratch.push_str(f.value_name(r));
+                sink.token(&scratch);
+                sink.token(shape_token_into(f, r, &mut scratch));
             }
             // Structure-bearing attrs become tokens too (loop bounds,
             // strides): they carry the cost signal at the affine level.
             for (k, v) in &op.attrs.0 {
-                toks.push(format!("{k}={v}"));
+                scratch.clear();
+                let _ = write!(scratch, "{k}={v}");
+                sink.token(&scratch);
             }
         }
     });
     // (4) terminator
-    toks.push("return".to_string());
+    sink.token("return");
+}
+
+/// Tokenize to an owned string stream (vocab building, analysis paths).
+pub fn tokenize(f: &Function, scheme: Scheme) -> Vec<String> {
+    let mut toks: Vec<String> = Vec::new();
+    tokenize_into(f, scheme, &mut toks);
     toks
 }
 
-fn shape_token(f: &Function, id: crate::mlir::ValueId) -> String {
+fn shape_token_into<'a>(
+    f: &Function,
+    id: crate::mlir::ValueId,
+    scratch: &'a mut String,
+) -> &'a str {
+    scratch.clear();
     match f.value_type(id) {
-        crate::mlir::Type::Tensor(t) | crate::mlir::Type::MemRef(t) => t.shape_token(),
-        crate::mlir::Type::Index => "index".to_string(),
-        crate::mlir::Type::Scalar(d) => format!("scalar_{d}"),
+        crate::mlir::Type::Tensor(t) | crate::mlir::Type::MemRef(t) => {
+            t.write_shape_token(scratch)
+        }
+        crate::mlir::Type::Index => scratch.push_str("index"),
+        crate::mlir::Type::Scalar(d) => {
+            let _ = write!(scratch, "scalar_{d}");
+        }
     }
+    scratch
 }
 
 /// Embedding-table rows baked into the AOT models (`aot.py VOCAB_SIZE`).
@@ -113,9 +176,117 @@ pub fn encode(tokens: &[String], vocab: &Vocab, max_len: usize) -> Vec<u32> {
     ids
 }
 
-/// Count how many tokens would map to OOV under `vocab`.
+/// Encode + count OOV in ONE pass: the id row is truncated/padded to
+/// `max_len` exactly like [`encode`], while the OOV count covers the
+/// *whole* stream (matching [`count_oov`]'s contract) — one vocabulary
+/// hash lookup per token instead of two.
+pub fn encode_with_oov(tokens: &[String], vocab: &Vocab, max_len: usize) -> (Vec<u32>, usize) {
+    let mut ids: Vec<u32> = Vec::with_capacity(max_len);
+    let mut oov = 0usize;
+    for t in tokens {
+        let id = vocab.id_of(t);
+        if id == OOV_ID {
+            oov += 1;
+        }
+        if ids.len() < max_len {
+            ids.push(id.min(EMBED_VOCAB_CAP - 1));
+        }
+    }
+    ids.resize(max_len, PAD_ID);
+    (ids, oov)
+}
+
+/// Count how many tokens would map to OOV under `vocab` (thin wrapper
+/// over the fused [`encode_with_oov`] pass).
 pub fn count_oov(tokens: &[String], vocab: &Vocab) -> usize {
-    tokens.iter().filter(|t| vocab.id_of(t) == OOV_ID).count()
+    encode_with_oov(tokens, vocab, 0).1
+}
+
+/// Precomputed `OpKind` → vocabulary-id table, built once per vocab (the
+/// serving coordinator caches it on `Bundle` load). Op-name tokens are the
+/// single most frequent token class, and with this table the hot path
+/// resolves them by array index — no `format!("xpu.{...}")`, no hash.
+#[derive(Debug, Clone)]
+pub struct OpIdTable {
+    ids: Vec<u32>,
+}
+
+impl OpIdTable {
+    pub fn build(vocab: &Vocab) -> OpIdTable {
+        let mut ids = vec![OOV_ID; OpKind::TABLE_LEN];
+        for kind in OpKind::all() {
+            ids[kind.table_index()] = vocab.id_of(&kind.full_name());
+        }
+        OpIdTable { ids }
+    }
+
+    #[inline]
+    pub fn id(&self, kind: &OpKind) -> u32 {
+        self.ids[kind.table_index()]
+    }
+}
+
+/// Id-direct sink: maps each emitted token straight to its vocabulary id
+/// (with the [`EMBED_VOCAB_CAP`] clamp) and counts whole-stream OOV on
+/// the side. Produces ids byte-identical to
+/// `encode(&tokenize(f, scheme), vocab, max_len)` without ever
+/// materializing the string stream.
+pub struct IdSink<'v> {
+    vocab: &'v Vocab,
+    ops: &'v OpIdTable,
+    max_len: usize,
+    ids: Vec<u32>,
+    oov: usize,
+}
+
+impl<'v> IdSink<'v> {
+    pub fn new(vocab: &'v Vocab, ops: &'v OpIdTable, max_len: usize) -> IdSink<'v> {
+        IdSink { vocab, ops, max_len, ids: Vec::with_capacity(max_len), oov: 0 }
+    }
+
+    #[inline]
+    fn push(&mut self, id: u32) {
+        if id == OOV_ID {
+            self.oov += 1;
+        }
+        if self.ids.len() < self.max_len {
+            self.ids.push(id.min(EMBED_VOCAB_CAP - 1));
+        }
+    }
+
+    /// The padded `[max_len]` id row plus the whole-stream OOV count.
+    pub fn finish(mut self) -> (Vec<u32>, usize) {
+        self.ids.resize(self.max_len, PAD_ID);
+        (self.ids, self.oov)
+    }
+}
+
+impl TokenSink for IdSink<'_> {
+    fn token(&mut self, tok: &str) {
+        let id = self.vocab.id_of(tok);
+        self.push(id);
+    }
+
+    fn op(&mut self, kind: &OpKind) {
+        let id = self.ops.id(kind);
+        self.push(id);
+    }
+}
+
+/// Fused tokenize+encode for one function — the serving hot path. Returns
+/// `(padded ids, whole-stream OOV count)`; the ids are guaranteed
+/// identical to the two-phase `encode(&tokenize(f, scheme), ...)` string
+/// pipeline (property-tested in `tests/integration.rs`).
+pub fn encode_function(
+    f: &Function,
+    scheme: Scheme,
+    vocab: &Vocab,
+    ops: &OpIdTable,
+    max_len: usize,
+) -> (Vec<u32>, usize) {
+    let mut sink = IdSink::new(vocab, ops, max_len);
+    tokenize_into(f, scheme, &mut sink);
+    sink.finish()
 }
 
 /// All a-priori-known tokens (op names, keywords): seeded into every
@@ -227,6 +398,45 @@ mod tests {
         // Everything except "func" and builtins is OOV.
         let oov = count_oov(&toks, &vocab);
         assert!(oov >= 3, "expected shape tokens OOV, got {oov}");
+    }
+
+    #[test]
+    fn encode_with_oov_fuses_both_passes() {
+        let f = mini();
+        let toks = tokenize(&f, Scheme::OpsOnly);
+        let vocab = Vocab::build([vec!["func".to_string()]].iter(), 1);
+        // Truncating max_len must not change the whole-stream OOV count.
+        let (ids, oov) = encode_with_oov(&toks, &vocab, 3);
+        assert_eq!(ids, encode(&toks, &vocab, 3));
+        assert_eq!(oov, count_oov(&toks, &vocab));
+        let (ids_full, oov_full) = encode_with_oov(&toks, &vocab, 64);
+        assert_eq!(ids_full, encode(&toks, &vocab, 64));
+        assert_eq!(oov_full, oov);
+    }
+
+    #[test]
+    fn id_sink_matches_string_pipeline_on_mini() {
+        let f = mini();
+        for scheme in [Scheme::OpsOnly, Scheme::OpsOperands] {
+            let toks = tokenize(&f, scheme);
+            let vocab = Vocab::build([toks.clone()].iter(), 1);
+            let table = OpIdTable::build(&vocab);
+            for max_len in [4, 16, 64] {
+                let (ids, oov) = encode_function(&f, scheme, &vocab, &table, max_len);
+                assert_eq!(ids, encode(&toks, &vocab, max_len), "{scheme:?}/{max_len}");
+                assert_eq!(oov, count_oov(&toks, &vocab));
+            }
+        }
+    }
+
+    #[test]
+    fn op_id_table_matches_vocab_lookup() {
+        let streams = vec![vec!["xpu.matmul".to_string()]];
+        let vocab = Vocab::build(streams.iter(), 1);
+        let table = OpIdTable::build(&vocab);
+        for kind in OpKind::all() {
+            assert_eq!(table.id(&kind), vocab.id_of(&kind.full_name()), "{kind:?}");
+        }
     }
 
     #[test]

@@ -8,15 +8,18 @@
 
 use crate::json::{parse, Json};
 use anyhow::{anyhow, Result};
+use fxhash::{FxBuildHasher, FxHashMap};
 use std::collections::HashMap;
 
 pub const PAD_ID: u32 = 0;
 pub const OOV_ID: u32 = 1;
 
-/// Token vocabulary.
+/// Token vocabulary. `to_id` is FxHash-keyed: `id_of` runs once per token
+/// on the serving hot path, and these short internal keys don't need
+/// SipHash's DoS resistance.
 #[derive(Debug, Clone)]
 pub struct Vocab {
-    to_id: HashMap<String, u32>,
+    to_id: FxHashMap<String, u32>,
     to_token: Vec<String>,
 }
 
@@ -28,7 +31,7 @@ impl Vocab {
     where
         I: Iterator<Item = &'a Vec<String>>,
     {
-        let mut counts: HashMap<&str, usize> = HashMap::new();
+        let mut counts: FxHashMap<&str, usize> = FxHashMap::default();
         let mut order: Vec<&str> = Vec::new();
         for stream in streams {
             for tok in stream {
@@ -40,7 +43,7 @@ impl Vocab {
             }
         }
         let mut to_token: Vec<String> = vec!["<pad>".to_string(), "<oov>".to_string()];
-        let mut to_id: HashMap<String, u32> = HashMap::new();
+        let mut to_id: FxHashMap<String, u32> = FxHashMap::default();
         to_id.insert("<pad>".into(), PAD_ID);
         to_id.insert("<oov>".into(), OOV_ID);
         let mut add = |tok: &str| {
@@ -73,8 +76,10 @@ impl Vocab {
         self.to_token.len()
     }
 
+    /// True when the vocabulary carries no real tokens — only the
+    /// always-present `<pad>` + `<oov>` sentinels.
     pub fn is_empty(&self) -> bool {
-        false // pad + oov always present
+        self.to_token.len() <= 2
     }
 
     /// Serialize to JSON (`{"tokens": [...]}`, index = id).
@@ -90,7 +95,7 @@ impl Vocab {
         let v = parse(src)?;
         let toks = v.req_arr("tokens")?;
         let mut to_token = Vec::with_capacity(toks.len());
-        let mut to_id = HashMap::with_capacity(toks.len());
+        let mut to_id = HashMap::with_capacity_and_hasher(toks.len(), FxBuildHasher::default());
         for (i, t) in toks.iter().enumerate() {
             let s = t.as_str().ok_or_else(|| anyhow!("non-string token at {i}"))?;
             to_token.push(s.to_string());
@@ -155,6 +160,19 @@ mod tests {
         assert_eq!(v.len(), v2.len());
         assert_eq!(v.id_of("1x128xf32"), v2.id_of("1x128xf32"));
         assert_eq!(v2.id_of("<pad>"), PAD_ID);
+    }
+
+    #[test]
+    fn is_empty_reflects_real_tokens() {
+        // Regression: this used to be hardcoded `false`. A vocab holding
+        // only the pad+oov sentinels IS empty.
+        let v = Vocab::from_json(r#"{"tokens": ["<pad>", "<oov>"]}"#).unwrap();
+        assert!(v.is_empty());
+        assert_eq!(v.len(), 2);
+        // Any built vocab carries the builtin op tokens → non-empty.
+        let s = streams(&[&["x"]]);
+        let v2 = Vocab::build(s.iter(), 1);
+        assert!(!v2.is_empty());
     }
 
     #[test]

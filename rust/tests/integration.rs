@@ -4,9 +4,11 @@
 use mlir_cost::dataset::{Dataset, EncodedSet, TargetStats};
 use mlir_cost::graphgen::{corpus_specs, generate, Family, GraphSpec};
 use mlir_cost::lower::{analyze, lower, CodegenOpts};
-use mlir_cost::mlir::{parse_function, print_function, verify_function};
+use mlir_cost::mlir::{parse_function, print_function, verify_function, Function};
 use mlir_cost::sim::{ground_truth_default, simulate, Target, XpuConfig};
-use mlir_cost::tokenizer::{encode, tokenize, Scheme, Vocab, PAD_ID};
+use mlir_cost::tokenizer::{
+    count_oov, encode, encode_function, tokenize, OpIdTable, Scheme, Vocab, PAD_ID,
+};
 
 /// Generator → printer → parser → verifier → lowering → regalloc →
 /// simulator: the full ground-truth path over every family.
@@ -128,4 +130,56 @@ fn encode_padding_contract() {
     let vocab = Vocab::build([toks.clone()].iter(), 1);
     let ids = encode(&toks, &vocab, 8);
     assert_eq!(&ids[2..], &[PAD_ID; 6][..]);
+}
+
+/// Equivalence property for the serving fast path: the fused id-direct
+/// sink must produce byte-identical ids (and the same whole-stream OOV
+/// count) as the two-phase `encode(&tokenize(...))` string pipeline —
+/// across all 7 graphgen families × both schemes × the affine-lowered
+/// form, under a vocab that leaves real OOV tokens, at truncating and
+/// padding max_lens.
+#[test]
+fn id_direct_sink_matches_string_pipeline_everywhere() {
+    // Corpus: every family, xpu form + affine-lowered form.
+    let mut funcs: Vec<Function> = Vec::new();
+    for (i, family) in Family::ALL.into_iter().enumerate() {
+        let spec = GraphSpec { family, structure_seed: 40 + i as u64, shape_seed: 7 + i as u64 };
+        let f = generate(&spec).unwrap();
+        let affine = mlir_cost::lower::affine::lower_to_affine(&f).unwrap();
+        funcs.push(f);
+        funcs.push(affine);
+    }
+    // Train-like vocab from a *subset* of the streams with min_count 2,
+    // so unseen shapes/%values genuinely encode as OOV.
+    let mut vocab_streams: Vec<Vec<String>> = Vec::new();
+    for f in funcs.iter().step_by(3) {
+        vocab_streams.push(tokenize(f, Scheme::OpsOnly));
+        vocab_streams.push(tokenize(f, Scheme::OpsOperands));
+    }
+    let vocab = Vocab::build(vocab_streams.iter(), 2);
+    let table = OpIdTable::build(&vocab);
+
+    let mut checked = 0usize;
+    let mut saw_oov = false;
+    for scheme in [Scheme::OpsOnly, Scheme::OpsOperands] {
+        for f in &funcs {
+            let toks = tokenize(f, scheme);
+            let want_oov = count_oov(&toks, &vocab);
+            saw_oov |= want_oov > 0;
+            // One truncating, one exact-ish, one padding max_len.
+            for max_len in [8, toks.len(), toks.len() + 33] {
+                let want = encode(&toks, &vocab, max_len);
+                let (got, got_oov) = encode_function(f, scheme, &vocab, &table, max_len);
+                assert_eq!(
+                    got, want,
+                    "id mismatch: {} {scheme:?} max_len={max_len}",
+                    f.name
+                );
+                assert_eq!(got_oov, want_oov, "oov mismatch: {} {scheme:?}", f.name);
+                checked += 1;
+            }
+        }
+    }
+    assert_eq!(checked, 2 * funcs.len() * 3);
+    assert!(saw_oov, "test vocab too permissive — OOV path never exercised");
 }

@@ -1,0 +1,168 @@
+//! Vendored FxHash — the rotate-xor-multiply hasher rustc uses internally.
+//!
+//! The serving hot path hashes on every per-token vocabulary lookup and on
+//! every per-query cache/memo probe; `std`'s default SipHash is a
+//! DoS-resistant streaming hash and pays for that robustness with ~4-10x
+//! the latency on the short keys (op mnemonics, shape tokens, id rows)
+//! this codebase feeds it. All of these tables are process-internal —
+//! nothing attacker-controlled picks the keys — so the non-keyed FxHash is
+//! the right trade. Vendored because this image has no crates.io registry
+//! (same pattern as `vendor/anyhow`).
+//!
+//! The output is deterministic across runs and platforms (byte chunks are
+//! read little-endian regardless of host endianness), which the cache-key
+//! tests rely on.
+
+use std::collections::{HashMap, HashSet};
+use std::hash::{BuildHasherDefault, Hash, Hasher};
+
+/// Large odd constant with high bit entropy (from rustc's FxHasher);
+/// multiplication by it diffuses each mixed word across all 64 bits, so
+/// the *high* bits — which the sharded cache uses for shard selection —
+/// are as well mixed as the low bits the `HashMap` buckets use.
+const SEED: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+
+/// A fast, non-cryptographic, deterministic hasher.
+#[derive(Debug, Clone, Default)]
+pub struct FxHasher {
+    hash: u64,
+}
+
+impl FxHasher {
+    #[inline]
+    fn add_to_hash(&mut self, word: u64) {
+        self.hash = (self.hash.rotate_left(5) ^ word).wrapping_mul(SEED);
+    }
+}
+
+impl Hasher for FxHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.hash
+    }
+
+    #[inline]
+    fn write(&mut self, mut bytes: &[u8]) {
+        while bytes.len() >= 8 {
+            let chunk = u64::from_le_bytes(bytes[..8].try_into().expect("8-byte chunk"));
+            self.add_to_hash(chunk);
+            bytes = &bytes[8..];
+        }
+        if bytes.len() >= 4 {
+            let chunk = u32::from_le_bytes(bytes[..4].try_into().expect("4-byte chunk"));
+            self.add_to_hash(chunk as u64);
+            bytes = &bytes[4..];
+        }
+        if bytes.len() >= 2 {
+            let chunk = u16::from_le_bytes(bytes[..2].try_into().expect("2-byte chunk"));
+            self.add_to_hash(chunk as u64);
+            bytes = &bytes[2..];
+        }
+        if let Some(&b) = bytes.first() {
+            self.add_to_hash(b as u64);
+        }
+    }
+
+    #[inline]
+    fn write_u8(&mut self, i: u8) {
+        self.add_to_hash(i as u64);
+    }
+
+    #[inline]
+    fn write_u16(&mut self, i: u16) {
+        self.add_to_hash(i as u64);
+    }
+
+    #[inline]
+    fn write_u32(&mut self, i: u32) {
+        self.add_to_hash(i as u64);
+    }
+
+    #[inline]
+    fn write_u64(&mut self, i: u64) {
+        self.add_to_hash(i);
+    }
+
+    #[inline]
+    fn write_u128(&mut self, i: u128) {
+        self.add_to_hash(i as u64);
+        self.add_to_hash((i >> 64) as u64);
+    }
+
+    #[inline]
+    fn write_usize(&mut self, i: usize) {
+        self.add_to_hash(i as u64);
+    }
+}
+
+/// `BuildHasher` for [`FxHasher`] (zero-sized, `Default`-constructed).
+pub type FxBuildHasher = BuildHasherDefault<FxHasher>;
+
+/// `HashMap` keyed by FxHash. Construct with `FxHashMap::default()` or
+/// `HashMap::with_capacity_and_hasher(n, FxBuildHasher::default())`.
+pub type FxHashMap<K, V> = HashMap<K, V, FxBuildHasher>;
+
+/// `HashSet` keyed by FxHash.
+pub type FxHashSet<T> = HashSet<T, FxBuildHasher>;
+
+/// One-shot convenience: hash any `Hash` value to a `u64`.
+pub fn hash64<T: Hash + ?Sized>(value: &T) -> u64 {
+    let mut h = FxHasher::default();
+    value.hash(&mut h);
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_hashers() {
+        assert_eq!(hash64("xpu.matmul"), hash64("xpu.matmul"));
+        assert_eq!(hash64(&[1u32, 2, 3][..]), hash64(&[1u32, 2, 3][..]));
+    }
+
+    #[test]
+    fn distinct_inputs_distinct_hashes() {
+        assert_ne!(hash64("xpu.matmul"), hash64("xpu.conv2d"));
+        assert_ne!(hash64(&[1u32, 2][..]), hash64(&[2u32, 1][..]));
+        assert_ne!(hash64(""), hash64("a"));
+    }
+
+    #[test]
+    fn unaligned_tails_differ() {
+        // 8/4/2/1-byte chunking must still see every byte.
+        for len in 0..=17usize {
+            let a: Vec<u8> = (0..len as u8).collect();
+            let mut b = a.clone();
+            if let Some(last) = b.last_mut() {
+                *last ^= 0xff;
+                let mut ha = FxHasher::default();
+                ha.write(&a);
+                let mut hb = FxHasher::default();
+                hb.write(&b);
+                assert_ne!(ha.finish(), hb.finish(), "len {len}");
+            }
+        }
+    }
+
+    #[test]
+    fn map_and_set_work() {
+        let mut m: FxHashMap<String, u32> = FxHashMap::default();
+        m.insert("a".into(), 1);
+        m.insert("b".into(), 2);
+        assert_eq!(m.get("a"), Some(&1));
+        let mut s: FxHashSet<u64> = FxHashSet::default();
+        s.insert(42);
+        assert!(s.contains(&42));
+    }
+
+    #[test]
+    fn high_bits_spread() {
+        // The sharded cache selects shards by the high bits; sequential
+        // keys must not all land in one shard.
+        use std::collections::HashSet;
+        let shards: HashSet<u64> = (0..64u32).map(|i| hash64(&i) >> 60).collect();
+        assert!(shards.len() >= 8, "only {} of 16 shards used", shards.len());
+    }
+}
