@@ -1,17 +1,22 @@
 //! E3 — serving-path benchmark (DESIGN.md E5): latency/throughput of the
 //! coordinator a DL-compiler queries, comparing batching policies, the
-//! prediction cache, the single-flight duplicate-heavy path, and the
-//! `predict_many` batch API.
+//! prediction cache, the single-flight duplicate-heavy path, the
+//! `predict_many` batch API, and (E3d) the thread-per-connection
+//! baseline vs the epoll event loop across connection counts — the
+//! sweep's numbers are recorded to `BENCH_serving.json` at the repo
+//! root.
 
 use mlir_cost::benchkit;
 use mlir_cost::bundle::Bundle;
-use mlir_cost::coordinator::{batcher::BatchPolicy, Service};
+use mlir_cost::coordinator::{batcher::BatchPolicy, server, Service};
 use mlir_cost::dataset::TargetStats;
 use mlir_cost::graphgen::{generate, Family, GraphSpec};
+use mlir_cost::json::Json;
 use mlir_cost::mlir::print_function;
 use mlir_cost::runtime::Manifest;
 use mlir_cost::sim::Target;
 use mlir_cost::tokenizer::{Scheme, Vocab};
+use std::net::TcpListener;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -205,4 +210,120 @@ fn main() {
         "paper-shape: batching + dedup help concurrent compiler queries",
         "see throughput rows above",
     );
+
+    // Connection-count sweep: the same duplicate-heavy probe mix pushed
+    // through the legacy thread-per-connection front end and the epoll
+    // event loop, at 4 / 64 / 256 concurrent clients. At the high end
+    // the baseline pays one OS thread + a 200 ms-timeout wakeup cycle
+    // per connection; the event loop holds all of them in one thread.
+    benchkit::section("E3d: connection sweep (thread-per-conn vs event loop)");
+    let sweep_texts = corpus_at(16, 90_000);
+    let svc = make_service(32, 2000);
+    // Warm the prediction cache so the sweep measures the serving plane
+    // itself, not first-touch model latency.
+    for t in &sweep_texts {
+        svc.predict(Target::RegPressure, t).unwrap();
+    }
+    let mut scenarios: Vec<Json> = Vec::new();
+    for conns in [4usize, 64, 256] {
+        for frontend in ["thread_per_conn", "event_loop"] {
+            let (qps, p50, p99, total) = sweep_frontend(&svc, frontend, conns, &sweep_texts);
+            benchkit::kv(
+                &format!("{frontend} @ {conns} conns"),
+                format!("{qps:.0} pred/s (p50 {p50} us, p99 {p99} us, {total} queries)"),
+            );
+            scenarios.push(
+                Json::obj()
+                    .with("frontend", Json::str(frontend))
+                    .with("connections", Json::num(conns as f64))
+                    .with("queries", Json::num(total as f64))
+                    .with("queries_per_sec", Json::num(qps))
+                    .with("p50_us", Json::num(p50 as f64))
+                    .with("p99_us", Json::num(p99 as f64)),
+            );
+        }
+    }
+    let doc = Json::obj()
+        .with("bench", Json::str("e3_serving"))
+        .with(
+            "note",
+            Json::str(
+                "Connection-count sweep: duplicate-heavy probe mix (16 distinct graphs, warm \
+                 cache) through the legacy thread-per-connection front end vs the epoll event \
+                 loop (--io-threads 1). Run `cargo bench --bench e3_serving` from rust/ to \
+                 overwrite with measured numbers.",
+            ),
+        )
+        .with("duplicate_corpus_texts", Json::num(sweep_texts.len() as f64))
+        .with("io_threads", Json::num(1.0))
+        .with("scenarios", Json::Arr(scenarios))
+        .with(
+            "acceptance",
+            Json::str("event_loop queries_per_sec >= thread_per_conn at 256 connections"),
+        );
+    let out = repo_root().join("BENCH_serving.json");
+    match std::fs::write(&out, doc.to_string()) {
+        Ok(()) => benchkit::kv("sweep recorded", out.display()),
+        Err(e) => eprintln!("\ncould not write {out:?}: {e}"),
+    }
+    std::mem::forget(svc);
+}
+
+/// Run one sweep cell: `conns` concurrent clients, each issuing its
+/// share of a fixed total query budget over the duplicate-heavy corpus.
+/// Returns (queries/sec, p50 us, p99 us, total queries).
+fn sweep_frontend(
+    svc: &Arc<Service>,
+    frontend: &str,
+    conns: usize,
+    texts: &[String],
+) -> (f64, u64, u64, usize) {
+    let stop = server::Stop::new();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let server_thread = {
+        let svc = svc.clone();
+        let stop = stop.clone();
+        let event_loop = frontend == "event_loop";
+        std::thread::spawn(move || {
+            let res = if event_loop {
+                server::serve_on(svc, listener, stop)
+            } else {
+                server::serve_on_threaded(svc, listener, stop)
+            };
+            if let Err(e) = res {
+                eprintln!("[bench] server exited with error: {e:#}");
+            }
+        })
+    };
+    // Fixed total work so cells are comparable across connection counts.
+    let per_conn = (2048 / conns).max(4);
+    let mut latencies: Vec<u64> = Vec::with_capacity(conns * per_conn);
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        let addr = &addr;
+        let mut handles = Vec::with_capacity(conns);
+        for c in 0..conns {
+            handles.push(s.spawn(move || {
+                let mut client = server::Client::connect(addr).unwrap();
+                let mut lats = Vec::with_capacity(per_conn);
+                for i in 0..per_conn {
+                    let text = &texts[(c + i) % texts.len()];
+                    let q0 = Instant::now();
+                    client.predict(Target::RegPressure, text).unwrap();
+                    lats.push(q0.elapsed().as_micros() as u64);
+                }
+                lats
+            }));
+        }
+        for h in handles {
+            latencies.extend(h.join().unwrap());
+        }
+    });
+    let dt = t0.elapsed().as_secs_f64();
+    stop.trigger();
+    let _ = server_thread.join();
+    latencies.sort_unstable();
+    let pct = |p: f64| latencies[((latencies.len() as f64 * p) as usize).min(latencies.len() - 1)];
+    (latencies.len() as f64 / dt.max(1e-9), pct(0.50), pct(0.99), latencies.len())
 }

@@ -8,6 +8,12 @@
 //! is no second lock to check out-of-order and no fallback polling
 //! interval. An idle worker sleeps on the condvar until a submit or a
 //! close arrives.
+//!
+//! The queue is multi-consumer: a worker *pool* (`--workers-per-head`)
+//! parks several threads on the same condvar, each `next_batch` call
+//! drains up to `max_batch` requests under the lock, and whichever
+//! worker wakes first takes the flush — so one slow model invocation
+//! never head-of-line-blocks the next flush when a sibling is idle.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
@@ -223,6 +229,60 @@ mod tests {
         for (i, rx) in rxs.into_iter().enumerate() {
             assert_eq!(rx.recv().unwrap(), i as f64 * 2.0);
         }
+    }
+
+    /// Worker-pool shape: two consumers drain ONE queue concurrently;
+    /// every submitted query is answered exactly once, and no batch is
+    /// handed to both consumers.
+    #[test]
+    fn multi_consumer_drain_partitions_the_queue() {
+        let q = BatchQueue::new(BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(2) });
+        let total = 64u32;
+        let mut workers = Vec::new();
+        for _ in 0..2 {
+            let q = q.clone();
+            workers.push(thread::spawn(move || {
+                let mut served: Vec<u32> = Vec::new();
+                while let Some(batch) = q.next_batch() {
+                    for p in batch {
+                        let id = p.ids[0];
+                        p.respond.send(id as f64).unwrap();
+                        served.push(id);
+                    }
+                }
+                served
+            }));
+        }
+        let rxs: Vec<_> = (0..total).map(|i| q.submit(vec![i])).collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            assert_eq!(rx.recv().unwrap(), i as f64, "query {i} misrouted");
+        }
+        q.close();
+        let mut all: Vec<u32> = Vec::new();
+        for w in workers {
+            all.extend(w.join().unwrap());
+        }
+        all.sort_unstable();
+        // Exactly-once: the union of both consumers' drains is the input.
+        assert_eq!(all, (0..total).collect::<Vec<_>>());
+    }
+
+    /// A consumer blocked mid-wait must not starve a sibling: while one
+    /// worker sits on a drained batch (slow model call), the other picks
+    /// up the next flush.
+    #[test]
+    fn idle_sibling_takes_next_flush() {
+        let q = BatchQueue::new(BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(1) });
+        let _first = q.submit(vec![1]);
+        let _second = q.submit(vec![2]);
+        // Consumer A drains the first flush and "stalls" holding it.
+        let a = q.next_batch().unwrap();
+        assert!(!a.is_empty());
+        // New work arrives while A is stalled.
+        let _third = q.submit(vec![3]);
+        // Consumer B (this thread) gets it without waiting on A.
+        let b = q.next_batch().unwrap();
+        assert_eq!(b[0].ids, vec![3]);
     }
 
     #[test]

@@ -8,11 +8,17 @@
 //! Front-end counters added with the zero-allocation encode pipeline:
 //! `frontend_memo_hits` (queries whose parse/tokenize/encode was skipped
 //! by the text-level memo) and `encode_ns` (total nanoseconds spent in
-//! the text→ids front end, memo hits included). Cache-side counters
-//! (shard contention, coalesced single-flight queries) live on
-//! `PredictionCache`; `Service::stats_json` merges both views for the
-//! wire protocol.
+//! the text→ids front end, memo hits included). Serving-plane counters
+//! added with the event-driven front end: `active_connections` (gauge of
+//! currently-open sockets), `connections_accepted`, `epoll_wakeups`
+//! (event-loop `epoll_wait` returns — idle time costs zero of these),
+//! and `exec_by_batch` (flush count per compiled batch size, showing the
+//! batch-size-aware ladder picking small executables for small flushes).
+//! Cache-side counters (shard contention, coalesced single-flight
+//! queries) live on `PredictionCache`; `Service::stats_json` merges both
+//! views for the wire protocol.
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
@@ -36,7 +42,19 @@ pub struct ServiceStats {
     /// Total time in the text→ids front end across all queries, in
     /// nanoseconds (memo hits contribute their hash+lookup time).
     pub encode_ns: AtomicU64,
+    /// Gauge: sockets currently owned by the front end (event loop or
+    /// threaded baseline).
+    pub active_connections: AtomicU64,
+    /// Connections accepted over the server's lifetime.
+    pub connections_accepted: AtomicU64,
+    /// `epoll_wait` returns across all IO threads. An idle server adds
+    /// zero — the whole point of the readiness-driven front end.
+    pub epoll_wakeups: AtomicU64,
     pub errors: AtomicU64,
+    /// Executed flushes per compiled batch size: `exec_by_batch[b]` is
+    /// how many chunks ran on the `predict_b{b}` executable. One lock
+    /// per model invocation — nowhere near the hot path.
+    exec_by_batch: Mutex<BTreeMap<usize, u64>>,
     latencies_us: Mutex<Reservoir>,
 }
 
@@ -48,6 +66,16 @@ struct Reservoir {
 const RESERVOIR_CAP: usize = 4096;
 
 impl ServiceStats {
+    /// Record one executed chunk on the `batch`-sized executable.
+    pub fn record_exec(&self, batch: usize) {
+        *self.exec_by_batch.lock().unwrap().entry(batch).or_insert(0) += 1;
+    }
+
+    /// Snapshot of flush counts per compiled batch size.
+    pub fn exec_by_batch(&self) -> BTreeMap<usize, u64> {
+        self.exec_by_batch.lock().unwrap().clone()
+    }
+
     pub fn record_latency_us(&self, us: u64) {
         let mut r = self.latencies_us.lock().unwrap();
         if r.samples.len() < RESERVOIR_CAP {
@@ -115,6 +143,25 @@ impl ServiceStats {
                 Json::num(self.frontend_memo_hits.load(Ordering::Relaxed) as f64),
             )
             .with("encode_ns", Json::num(self.encode_ns.load(Ordering::Relaxed) as f64))
+            .with(
+                "active_connections",
+                Json::num(self.active_connections.load(Ordering::Relaxed) as f64),
+            )
+            .with(
+                "connections_accepted",
+                Json::num(self.connections_accepted.load(Ordering::Relaxed) as f64),
+            )
+            .with(
+                "epoll_wakeups",
+                Json::num(self.epoll_wakeups.load(Ordering::Relaxed) as f64),
+            )
+            .with("exec_by_batch", {
+                let mut by_batch = Json::obj();
+                for (b, count) in self.exec_by_batch() {
+                    by_batch = by_batch.with(&b.to_string(), Json::num(count as f64));
+                }
+                by_batch
+            })
             .with("errors", Json::num(self.errors.load(Ordering::Relaxed) as f64))
             .with("latency_p50_us", Json::num(p50 as f64))
             .with("latency_p95_us", Json::num(p95 as f64))
@@ -167,11 +214,33 @@ mod tests {
         s.requests.fetch_add(3, Ordering::Relaxed);
         s.frontend_memo_hits.fetch_add(2, Ordering::Relaxed);
         s.encode_ns.fetch_add(1500, Ordering::Relaxed);
+        s.active_connections.fetch_add(4, Ordering::Relaxed);
+        s.connections_accepted.fetch_add(9, Ordering::Relaxed);
+        s.epoll_wakeups.fetch_add(17, Ordering::Relaxed);
         let j = s.to_json();
         assert_eq!(j.req_f64("requests").unwrap(), 3.0);
         assert_eq!(j.req_f64("batch_fill_ratio").unwrap(), 0.0);
         assert_eq!(j.req_f64("padded_slots").unwrap(), 0.0);
         assert_eq!(j.req_f64("frontend_memo_hits").unwrap(), 2.0);
         assert_eq!(j.req_f64("encode_ns").unwrap(), 1500.0);
+        assert_eq!(j.req_f64("active_connections").unwrap(), 4.0);
+        assert_eq!(j.req_f64("connections_accepted").unwrap(), 9.0);
+        assert_eq!(j.req_f64("epoll_wakeups").unwrap(), 17.0);
+        assert!(j.get("exec_by_batch").is_some());
+    }
+
+    #[test]
+    fn exec_by_batch_tracks_ladder_selection() {
+        let s = ServiceStats::default();
+        s.record_exec(8);
+        s.record_exec(8);
+        s.record_exec(32);
+        let by_batch = s.exec_by_batch();
+        assert_eq!(by_batch.get(&8), Some(&2));
+        assert_eq!(by_batch.get(&32), Some(&1));
+        let j = s.to_json();
+        let obj = j.get("exec_by_batch").unwrap();
+        assert_eq!(obj.req_f64("8").unwrap(), 2.0);
+        assert_eq!(obj.req_f64("32").unwrap(), 1.0);
     }
 }

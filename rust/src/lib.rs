@@ -19,7 +19,18 @@
 //!   (`Service::predict_many` / the `mlir_batch` wire request) that moves
 //!   whole probe sets through the pipeline in one call, and
 //!   batching-health metrics (fill ratio, padded slots, coalesced
-//!   queries, shard contention) over the `stats` command. The text→ids
+//!   queries, shard contention) over the `stats` command. The serving
+//!   plane is event-driven: an epoll front end over the vendored
+//!   `minipoll` bindings (no mio/tokio) where one — or `--io-threads N` —
+//!   event-loop thread(s) own every connection as a nonblocking socket
+//!   with buffered partial-line reassembly, `EPOLLOUT` write
+//!   backpressure, and an eventfd shutdown doorbell, so hundreds of idle
+//!   probe connections cost zero CPU; on the compute side each head runs
+//!   a `--workers-per-head` pool draining one shared batch queue, every
+//!   worker compiles the manifest's full predict batch-size ladder, and
+//!   each drained chunk executes on the smallest rung that covers it
+//!   (`exec_by_batch` / `padded_slots` make the saved padding
+//!   observable). The text→ids
 //!   front end is zero-allocation: a borrowed-slice lexer, a sink-based
 //!   tokenizer whose id-direct sink maps tokens straight to vocabulary
 //!   ids (per-`OpKind` id tables, one reusable scratch buffer), a

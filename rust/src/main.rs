@@ -14,7 +14,7 @@
 use anyhow::{anyhow, bail, Context, Result};
 use mlir_cost::bundle::Bundle;
 use mlir_cost::coordinator::batcher::BatchPolicy;
-use mlir_cost::coordinator::{server, Service};
+use mlir_cost::coordinator::{server, ServeOptions, Service};
 use mlir_cost::dataset::{Dataset, EncodedSet, TargetStats};
 use mlir_cost::json::Json;
 use mlir_cost::runtime::{Manifest, Runtime};
@@ -23,7 +23,6 @@ use mlir_cost::tokenizer::{OpIdTable, Scheme, Vocab};
 use mlir_cost::train::{metrics, TrainConfig, Trainer};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::sync::atomic::AtomicBool;
 use std::sync::Arc;
 
 fn main() {
@@ -80,7 +79,8 @@ fn run(args: &[String]) -> Result<()> {
                  train --model conv_ops --target regpressure --scheme ops_only --train f --test f \
                  --steps N --out bundle_dir [--artifacts dir] [--out-metrics m.json]\n  \
                  eval --bundle dir --test f [--out metrics.json]\n  \
-                 serve --bundles d1,d2,... --addr 127.0.0.1:7071 [--pallas true]\n  \
+                 serve --bundles d1,d2,... --addr 127.0.0.1:7071 [--pallas true] [--io-threads 1]\n    \
+                 [--workers-per-head 1] [--max-batch 32] [--max-wait-us 2000]\n  \
                  predict --bundle dir --file graph.mlir\n  \
                  ground-truth --file graph.mlir\n  \
                  info [--artifacts dir]"
@@ -295,10 +295,16 @@ fn serve(flags: &HashMap<String, String>) -> Result<()> {
         max_batch: flag(flags, "max-batch", "32").parse()?,
         max_wait: std::time::Duration::from_micros(flag(flags, "max-wait-us", "2000").parse()?),
     };
-    let service = Arc::new(Service::start(manifest, bundles, policy, use_pallas)?);
+    let opts = ServeOptions {
+        use_pallas,
+        workers_per_head: flag(flags, "workers-per-head", "1").parse()?,
+    };
+    let config = server::ServerConfig { io_threads: flag(flags, "io-threads", "1").parse()? };
+    let service = Arc::new(Service::start_with(manifest, bundles, policy, opts)?);
     let addr = flag(flags, "addr", "127.0.0.1:7071");
-    let stop = Arc::new(AtomicBool::new(false));
-    server::serve(service, addr, stop)
+    // `Stop::trigger()` is the shutdown path; the CLI serves until killed.
+    let stop = server::Stop::new();
+    server::serve(service, addr, stop, config)
 }
 
 fn predict(flags: &HashMap<String, String>) -> Result<()> {
@@ -309,7 +315,10 @@ fn predict(flags: &HashMap<String, String>) -> Result<()> {
     let service = Arc::new(Service::start(
         manifest,
         vec![bundle],
-        BatchPolicy { max_batch: 1, max_wait: std::time::Duration::from_micros(100) },
+        BatchPolicy {
+            max_batch: 1,
+            max_wait: std::time::Duration::from_micros(flag(flags, "max-wait-us", "100").parse()?),
+        },
         true,
     )?);
     let text = std::fs::read_to_string(flag(flags, "file", "graph.mlir"))?;

@@ -58,6 +58,36 @@ impl ModelManifest {
         let suffix = if pallas { "_pallas" } else { "" };
         (format!("predict_b{b}{suffix}"), b)
     }
+
+    /// Every compiled predict variant useful for flushes up to
+    /// `max_batch`: the sorted ladder of batch sizes up to and including
+    /// the one `predict_key_for(max_batch)` would pick. A
+    /// batch-size-aware worker compiles all of them and runs each
+    /// drained chunk on the smallest rung that covers it, so a 3-query
+    /// flush pays for a b=8 executable instead of padding a b=32 one.
+    /// Returns ascending `(file key, batch)` pairs; never empty.
+    pub fn predict_ladder(&self, max_batch: usize, pallas: bool) -> Vec<(String, usize)> {
+        let mut batches = self.predict_batches.clone();
+        batches.sort_unstable();
+        batches.dedup();
+        let cover = batches
+            .iter()
+            .copied()
+            .find(|&b| b >= max_batch)
+            .unwrap_or_else(|| batches.last().copied().unwrap_or(1));
+        let suffix = if pallas { "_pallas" } else { "" };
+        let ladder: Vec<(String, usize)> = batches
+            .into_iter()
+            .filter(|&b| b <= cover)
+            .map(|b| (format!("predict_b{b}{suffix}"), b))
+            .collect();
+        if ladder.is_empty() {
+            // Manifest listed no predict batches: mirror predict_key_for's
+            // b=1 fallback so callers always have one rung.
+            return vec![(format!("predict_b1{suffix}"), 1)];
+        }
+        ladder
+    }
 }
 
 /// The whole artifact directory.
@@ -188,6 +218,33 @@ mod tests {
         assert_eq!((k2.as_str(), b2), ("predict_b32_pallas", 32));
         let (k3, b3) = conv.predict_key_for(999, false);
         assert_eq!((k3.as_str(), b3), ("predict_b32", 32));
+    }
+
+    #[test]
+    fn predict_ladder_enumerates_all_covering_rungs() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        let conv = m.model("conv_ops").unwrap();
+        // Full ladder: every compiled size up to the covering one,
+        // ascending, topped by what predict_key_for would have chosen.
+        let ladder = conv.predict_ladder(32, false);
+        let sizes: Vec<usize> = ladder.iter().map(|(_, b)| *b).collect();
+        assert!(sizes.windows(2).all(|w| w[0] < w[1]), "ladder not ascending: {sizes:?}");
+        assert_eq!(*sizes.last().unwrap(), conv.predict_key_for(32, false).1);
+        assert!(sizes.contains(&1), "b=1 rung missing from {sizes:?}");
+        for (key, b) in &ladder {
+            assert_eq!(key, &format!("predict_b{b}"));
+        }
+        // A small max_batch trims the ladder to the covering rung.
+        let small = conv.predict_ladder(1, false);
+        assert_eq!(small.iter().map(|(_, b)| *b).collect::<Vec<_>>(), vec![1]);
+        // Pallas variants keep the suffix on every rung.
+        let pallas = conv.predict_ladder(32, true);
+        assert!(pallas.iter().all(|(k, _)| k.ends_with("_pallas")));
+        assert_eq!(pallas.len(), ladder.len());
     }
 
     #[test]

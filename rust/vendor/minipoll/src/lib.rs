@@ -1,0 +1,374 @@
+//! Vendored minimal epoll — the readiness engine under the serving front
+//! end.
+//!
+//! The coordinator's TCP front end needs exactly four kernel facilities:
+//! `epoll_create1` (a readiness set), `epoll_ctl` (arm/re-arm/remove fds),
+//! `epoll_wait` (block until something is ready), and `eventfd` (a
+//! user-space doorbell so shutdown and cross-thread handoff can wake a
+//! blocked `epoll_wait` without sleeps or timeouts). mio and tokio ship
+//! those same four calls wrapped in an executor this workload doesn't
+//! need; this image has no crates.io registry anyway, so the bindings are
+//! vendored raw (same pattern as `vendor/fxhash`): `extern "C"`
+//! declarations against the libc that `std` already links, plus safe RAII
+//! wrappers.
+//!
+//! Level-triggered only (no `EPOLLET`): the server drains sockets to
+//! `WouldBlock` on every wakeup, and level-triggered re-notification is
+//! the forgiving mode if a drain ever stops early.
+
+use std::io;
+use std::os::raw::{c_int, c_uint, c_void};
+use std::os::unix::io::{AsRawFd, RawFd};
+
+// ---- readiness bits (bit-identical to <sys/epoll.h>) ----
+
+/// Fd is readable (or a peer connected, for listeners).
+pub const EPOLLIN: u32 = 0x001;
+/// Fd is writable without blocking.
+pub const EPOLLOUT: u32 = 0x004;
+/// Error condition (always reported; no need to request it).
+pub const EPOLLERR: u32 = 0x008;
+/// Hangup (always reported; no need to request it).
+pub const EPOLLHUP: u32 = 0x010;
+/// Peer closed its writing half (stream sockets).
+pub const EPOLLRDHUP: u32 = 0x2000;
+
+const EPOLL_CTL_ADD: c_int = 1;
+const EPOLL_CTL_DEL: c_int = 2;
+const EPOLL_CTL_MOD: c_int = 3;
+
+const EPOLL_CLOEXEC: c_int = 0o2000000;
+const EFD_CLOEXEC: c_int = 0o2000000;
+const EFD_NONBLOCK: c_int = 0o4000;
+
+/// Kernel event record. glibc packs this struct on x86-64 (12 bytes, no
+/// padding between `events` and `data`) and leaves it naturally aligned
+/// elsewhere — the cfg_attr mirrors `__EPOLL_PACKED`. Fields of the
+/// packed form may be unaligned: read them by value, never by reference.
+#[cfg_attr(target_arch = "x86_64", repr(C, packed))]
+#[cfg_attr(not(target_arch = "x86_64"), repr(C))]
+#[derive(Clone, Copy)]
+struct RawEvent {
+    events: u32,
+    data: u64,
+}
+
+extern "C" {
+    fn epoll_create1(flags: c_int) -> c_int;
+    fn epoll_ctl(epfd: c_int, op: c_int, fd: c_int, event: *mut RawEvent) -> c_int;
+    fn epoll_wait(epfd: c_int, events: *mut RawEvent, maxevents: c_int, timeout: c_int) -> c_int;
+    fn eventfd(initval: c_uint, flags: c_int) -> c_int;
+    fn close(fd: c_int) -> c_int;
+    fn read(fd: c_int, buf: *mut c_void, count: usize) -> isize;
+    fn write(fd: c_int, buf: *const c_void, count: usize) -> isize;
+}
+
+/// One delivered readiness event: the interest bits that fired plus the
+/// caller's 64-bit token (connection slot, doorbell id, ...).
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    pub events: u32,
+    pub token: u64,
+}
+
+impl Event {
+    pub fn readable(&self) -> bool {
+        self.events & (EPOLLIN | EPOLLHUP | EPOLLERR) != 0
+    }
+
+    pub fn writable(&self) -> bool {
+        self.events & EPOLLOUT != 0
+    }
+
+    /// Peer gone or fd broken: the owner should tear the fd down after
+    /// draining whatever is still readable.
+    pub fn closed(&self) -> bool {
+        self.events & (EPOLLHUP | EPOLLERR | EPOLLRDHUP) != 0
+    }
+}
+
+/// Reusable event buffer for [`Epoll::wait`] (one allocation per loop,
+/// not per wakeup).
+pub struct Events {
+    buf: Vec<RawEvent>,
+    len: usize,
+}
+
+impl Events {
+    pub fn with_capacity(cap: usize) -> Events {
+        Events { buf: vec![RawEvent { events: 0, data: 0 }; cap.max(1)], len: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = Event> + '_ {
+        // Copy out of the (possibly packed) raw record; no references
+        // into it ever escape.
+        self.buf[..self.len].iter().map(|raw| {
+            let r = *raw;
+            Event { events: r.events, token: r.data }
+        })
+    }
+}
+
+/// RAII epoll instance.
+pub struct Epoll {
+    fd: RawFd,
+}
+
+impl Epoll {
+    pub fn new() -> io::Result<Epoll> {
+        let fd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+        if fd < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(Epoll { fd })
+    }
+
+    fn ctl(&self, op: c_int, fd: RawFd, interest: u32, token: u64) -> io::Result<()> {
+        let mut ev = RawEvent { events: interest, data: token };
+        let arg = if op == EPOLL_CTL_DEL { std::ptr::null_mut() } else { &mut ev as *mut RawEvent };
+        if unsafe { epoll_ctl(self.fd, op, fd, arg) } < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(())
+    }
+
+    /// Start watching `fd` for `interest`; delivered events carry `token`.
+    pub fn add(&self, fd: RawFd, interest: u32, token: u64) -> io::Result<()> {
+        self.ctl(EPOLL_CTL_ADD, fd, interest, token)
+    }
+
+    /// Re-arm an already-watched fd with a new interest set (e.g. add
+    /// `EPOLLOUT` while a write is backed up, drop it once drained).
+    pub fn modify(&self, fd: RawFd, interest: u32, token: u64) -> io::Result<()> {
+        self.ctl(EPOLL_CTL_MOD, fd, interest, token)
+    }
+
+    /// Stop watching `fd`.
+    pub fn delete(&self, fd: RawFd) -> io::Result<()> {
+        self.ctl(EPOLL_CTL_DEL, fd, 0, 0)
+    }
+
+    /// Block until at least one fd is ready (`timeout_ms < 0` = forever,
+    /// `0` = poll). Returns the number of events filled into `events`.
+    /// A signal-interrupted wait (`EINTR`) is retried internally.
+    pub fn wait(&self, events: &mut Events, timeout_ms: i32) -> io::Result<usize> {
+        loop {
+            let n = unsafe {
+                epoll_wait(self.fd, events.buf.as_mut_ptr(), events.buf.len() as c_int, timeout_ms)
+            };
+            if n >= 0 {
+                events.len = n as usize;
+                return Ok(n as usize);
+            }
+            let err = io::Error::last_os_error();
+            if err.kind() != io::ErrorKind::Interrupted {
+                events.len = 0;
+                return Err(err);
+            }
+        }
+    }
+}
+
+impl AsRawFd for Epoll {
+    fn as_raw_fd(&self) -> RawFd {
+        self.fd
+    }
+}
+
+impl Drop for Epoll {
+    fn drop(&mut self) {
+        unsafe { close(self.fd) };
+    }
+}
+
+// Safety: the epoll fd is just an integer handle; the kernel serializes
+// epoll_ctl/epoll_wait on it. Sharing &Epoll across threads is the
+// intended use (an IO thread waits while another registers a doorbell).
+unsafe impl Send for Epoll {}
+unsafe impl Sync for Epoll {}
+
+/// Nonblocking eventfd doorbell: `signal()` from any thread wakes an
+/// `epoll_wait` that watches it; the woken side `drain()`s it back to
+/// silence. Used for shutdown and cross-thread connection handoff.
+pub struct EventFd {
+    fd: RawFd,
+}
+
+impl EventFd {
+    pub fn new() -> io::Result<EventFd> {
+        let fd = unsafe { eventfd(0, EFD_CLOEXEC | EFD_NONBLOCK) };
+        if fd < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(EventFd { fd })
+    }
+
+    /// Ring the doorbell. A full counter (`EAGAIN`) is success — the fd
+    /// is already readable, which is all a doorbell needs.
+    pub fn signal(&self) {
+        let one: u64 = 1;
+        let p = &one as *const u64 as *const c_void;
+        unsafe { write(self.fd, p, 8) };
+    }
+
+    /// Reset to silent; returns the number of accumulated signals.
+    pub fn drain(&self) -> u64 {
+        let mut count: u64 = 0;
+        let p = &mut count as *mut u64 as *mut c_void;
+        if unsafe { read(self.fd, p, 8) } == 8 {
+            count
+        } else {
+            0
+        }
+    }
+}
+
+impl AsRawFd for EventFd {
+    fn as_raw_fd(&self) -> RawFd {
+        self.fd
+    }
+}
+
+impl Drop for EventFd {
+    fn drop(&mut self) {
+        unsafe { close(self.fd) };
+    }
+}
+
+unsafe impl Send for EventFd {}
+unsafe impl Sync for EventFd {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+    use std::net::{TcpListener, TcpStream};
+
+    #[test]
+    fn raw_event_layout_matches_kernel() {
+        // x86-64 packs to 12 bytes; other arches pad to 16.
+        if cfg!(target_arch = "x86_64") {
+            assert_eq!(std::mem::size_of::<RawEvent>(), 12);
+        }
+        assert!(std::mem::size_of::<RawEvent>() >= 12);
+    }
+
+    #[test]
+    fn eventfd_doorbell_roundtrip() {
+        let ep = Epoll::new().unwrap();
+        let efd = EventFd::new().unwrap();
+        ep.add(efd.as_raw_fd(), EPOLLIN, 42).unwrap();
+        let mut events = Events::with_capacity(8);
+
+        // Silent doorbell: a zero-timeout poll sees nothing.
+        assert_eq!(ep.wait(&mut events, 0).unwrap(), 0);
+        assert!(events.is_empty());
+
+        efd.signal();
+        efd.signal(); // coalesces into the same readable counter
+        assert_eq!(ep.wait(&mut events, 1000).unwrap(), 1);
+        let ev = events.iter().next().unwrap();
+        assert_eq!(ev.token, 42);
+        assert!(ev.readable());
+        assert!(!ev.closed());
+
+        // Drain resets it; both signals were coalesced.
+        assert_eq!(efd.drain(), 2);
+        assert_eq!(ep.wait(&mut events, 0).unwrap(), 0);
+    }
+
+    #[test]
+    fn signal_from_another_thread_wakes_a_blocking_wait() {
+        let ep = Epoll::new().unwrap();
+        let efd = std::sync::Arc::new(EventFd::new().unwrap());
+        ep.add(efd.as_raw_fd(), EPOLLIN, 7).unwrap();
+        let remote = efd.clone();
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(30));
+            remote.signal();
+        });
+        let mut events = Events::with_capacity(4);
+        // Blocks until the other thread rings — the shutdown-wakeup shape.
+        let n = ep.wait(&mut events, 5000).unwrap();
+        assert_eq!(n, 1);
+        assert_eq!(events.iter().next().unwrap().token, 7);
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn tcp_readability_and_writability() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut client = TcpStream::connect(addr).unwrap();
+        let (server, _) = listener.accept().unwrap();
+        server.set_nonblocking(true).unwrap();
+
+        let ep = Epoll::new().unwrap();
+        ep.add(server.as_raw_fd(), EPOLLIN | EPOLLRDHUP, 1).unwrap();
+        let mut events = Events::with_capacity(8);
+
+        // Nothing sent yet: not readable.
+        assert_eq!(ep.wait(&mut events, 0).unwrap(), 0);
+
+        client.write_all(b"hello").unwrap();
+        assert_eq!(ep.wait(&mut events, 1000).unwrap(), 1);
+        assert!(events.iter().next().unwrap().readable());
+        let mut buf = [0u8; 16];
+        let n = (&server).read(&mut buf).unwrap();
+        assert_eq!(&buf[..n], b"hello");
+
+        // An idle healthy socket is writable the moment we ask for it.
+        ep.modify(server.as_raw_fd(), EPOLLOUT, 2).unwrap();
+        assert_eq!(ep.wait(&mut events, 1000).unwrap(), 1);
+        let ev = events.iter().next().unwrap();
+        assert_eq!(ev.token, 2);
+        assert!(ev.writable());
+
+        // Peer close surfaces as a closed() event under EPOLLRDHUP.
+        ep.modify(server.as_raw_fd(), EPOLLIN | EPOLLRDHUP, 3).unwrap();
+        drop(client);
+        assert_eq!(ep.wait(&mut events, 1000).unwrap(), 1);
+        assert!(events.iter().next().unwrap().closed());
+    }
+
+    #[test]
+    fn delete_stops_event_delivery() {
+        let ep = Epoll::new().unwrap();
+        let efd = EventFd::new().unwrap();
+        ep.add(efd.as_raw_fd(), EPOLLIN, 9).unwrap();
+        efd.signal();
+        let mut events = Events::with_capacity(4);
+        assert_eq!(ep.wait(&mut events, 1000).unwrap(), 1);
+        ep.delete(efd.as_raw_fd()).unwrap();
+        // Still signaled, but no longer watched.
+        assert_eq!(ep.wait(&mut events, 0).unwrap(), 0);
+        // Double-delete reports the kernel's ENOENT instead of panicking.
+        assert!(ep.delete(efd.as_raw_fd()).is_err());
+    }
+
+    #[test]
+    fn many_fds_one_wait() {
+        let ep = Epoll::new().unwrap();
+        let efds: Vec<EventFd> = (0..32).map(|_| EventFd::new().unwrap()).collect();
+        for (i, e) in efds.iter().enumerate() {
+            ep.add(e.as_raw_fd(), EPOLLIN, i as u64).unwrap();
+        }
+        for e in &efds {
+            e.signal();
+        }
+        let mut events = Events::with_capacity(64);
+        let n = ep.wait(&mut events, 1000).unwrap();
+        assert_eq!(n, 32);
+        let mut tokens: Vec<u64> = events.iter().map(|e| e.token).collect();
+        tokens.sort_unstable();
+        assert_eq!(tokens, (0..32).collect::<Vec<u64>>());
+    }
+}
