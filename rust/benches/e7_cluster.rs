@@ -1,0 +1,212 @@
+//! E7 — cluster-tier benchmark: duplicate-heavy autotuning traffic
+//! against 1 node, a 3-node consistent-hash cluster, and a 3-node
+//! cluster with one node killed mid-flight. Numbers are recorded to
+//! `BENCH_cluster.json` at the repo root.
+//!
+//! The workload is the paper's probe shape (many clients re-evaluating
+//! the same small candidate set), spread across nodes — exactly the
+//! setup where independent per-node caches each pay for every distinct
+//! probe, while the cluster tier computes each probe once *anywhere* and
+//! serves the rest as local or remote cache hits. The killed-node
+//! scenario measures the degradation floor: traffic must keep flowing
+//! (local compute fallback), not error.
+
+use mlir_cost::benchkit;
+use mlir_cost::bundle::Bundle;
+use mlir_cost::cluster::{Cluster, ClusterConfig};
+use mlir_cost::coordinator::{batcher::BatchPolicy, server, Service};
+use mlir_cost::dataset::TargetStats;
+use mlir_cost::graphgen::{generate, Family, GraphSpec};
+use mlir_cost::json::Json;
+use mlir_cost::mlir::print_function;
+use mlir_cost::runtime::Manifest;
+use mlir_cost::sim::Target;
+use mlir_cost::tokenizer::{Scheme, Vocab};
+use std::net::TcpListener;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Instant;
+
+const CLIENT_THREADS: usize = 8;
+const QUERIES_PER_CLIENT: usize = 48;
+
+fn repo_root() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).parent().unwrap().to_path_buf()
+}
+
+fn corpus_at(n: usize, base: u64) -> Vec<String> {
+    (0..n)
+        .map(|i| {
+            let spec = GraphSpec {
+                family: Family::ALL[i % 7],
+                structure_seed: base + i as u64,
+                shape_seed: base + 1000 + i as u64,
+            };
+            print_function(&generate(&spec).unwrap())
+        })
+        .collect()
+}
+
+struct BenchNode {
+    svc: Arc<Service>,
+    addr: String,
+    stop: Arc<server::Stop>,
+    join: std::thread::JoinHandle<()>,
+}
+
+/// Spin up `n` serving nodes on ephemeral ports; `n > 1` wires them into
+/// one consistent-hash cluster.
+fn spawn_nodes(manifest: &Arc<Manifest>, n: usize) -> Vec<BenchNode> {
+    let listeners: Vec<TcpListener> =
+        (0..n).map(|_| TcpListener::bind("127.0.0.1:0").unwrap()).collect();
+    let addrs: Vec<String> =
+        listeners.iter().map(|l| l.local_addr().unwrap().to_string()).collect();
+    let members = addrs.join(",");
+    let mut nodes = Vec::new();
+    for (i, listener) in listeners.into_iter().enumerate() {
+        let vocab = Vocab::build(vec![vec!["x".to_string()]].iter(), 1);
+        let stats = TargetStats { mean: 20.0, std: 8.0, min: 2.0, max: 70.0 };
+        let bundle = Bundle::untrained(
+            manifest,
+            "conv_ops",
+            Target::RegPressure,
+            Scheme::OpsOnly,
+            vocab,
+            stats,
+        )
+        .unwrap();
+        let mut svc = Service::start(
+            manifest.clone(),
+            vec![bundle],
+            BatchPolicy::default(),
+            true,
+        )
+        .unwrap();
+        if n > 1 {
+            let cfg = ClusterConfig::new(&members, &addrs[i]).unwrap();
+            svc.set_cluster(Arc::new(Cluster::new(&cfg).unwrap()));
+        }
+        let svc = Arc::new(svc);
+        let stop = server::Stop::new();
+        let join = {
+            let svc = svc.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                if let Err(e) = server::serve_on(svc, listener, stop) {
+                    eprintln!("[bench] node exited with error: {e:#}");
+                }
+            })
+        };
+        nodes.push(BenchNode { svc, addr: addrs[i].clone(), stop, join });
+    }
+    nodes
+}
+
+/// Push the duplicate-heavy corpus through the live nodes from
+/// CLIENT_THREADS TCP clients (round-robin over nodes). Returns
+/// (queries/s, seconds, total queries).
+fn drive(live: &[&BenchNode], texts: &[String]) -> (f64, f64, usize) {
+    let total = CLIENT_THREADS * QUERIES_PER_CLIENT;
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for t in 0..CLIENT_THREADS {
+            let addr = live[t % live.len()].addr.clone();
+            s.spawn(move || {
+                let mut client = server::Client::connect(&addr).unwrap();
+                for i in 0..QUERIES_PER_CLIENT {
+                    let text = &texts[(t + i) % texts.len()];
+                    client.predict(Target::RegPressure, text).unwrap();
+                }
+            });
+        }
+    });
+    let dt = t0.elapsed().as_secs_f64();
+    (total as f64 / dt.max(1e-9), dt, total)
+}
+
+/// One scenario cell: `n` nodes, optionally killing the last before the
+/// measured traffic. Returns the JSON row for BENCH_cluster.json.
+fn scenario(manifest: &Arc<Manifest>, label: &str, n: usize, kill_one: bool, base: u64) -> Json {
+    let mut nodes = spawn_nodes(manifest, n);
+    if kill_one {
+        let victim = nodes.pop().unwrap();
+        victim.stop.trigger();
+        let _ = victim.join.join();
+        // Leak the victim's service: PJRT teardown while siblings run
+        // can wedge xla_extension 0.5.1 on single-core images (same
+        // note as e3_serving).
+        std::mem::forget(victim.svc);
+    }
+    let texts = corpus_at(16, base);
+    let live: Vec<&BenchNode> = nodes.iter().collect();
+    let (qps, dt, total) = drive(&live, &texts);
+    let sum = |f: &dyn Fn(&BenchNode) -> u64| nodes.iter().map(|x| f(x)).sum::<u64>();
+    let remote_hits = sum(&|x| x.svc.stats.remote_hits.load(Ordering::Relaxed));
+    let degraded = sum(&|x| x.svc.stats.degraded_fallbacks.load(Ordering::Relaxed));
+    let forwarded_gets = sum(&|x| x.svc.stats.forwarded_gets.load(Ordering::Relaxed));
+    let forwarded_puts = sum(&|x| x.svc.stats.forwarded_puts.load(Ordering::Relaxed));
+    let computed = sum(&|x| x.svc.stats.batched_queries.load(Ordering::Relaxed));
+    benchkit::kv(
+        &format!("{label} ({} live node(s))", live.len()),
+        format!(
+            "{qps:.0} pred/s ({dt:.2}s, {total} queries; {computed} computed, \
+             {remote_hits} remote hits, {degraded} degraded fallbacks)"
+        ),
+    );
+    for node in nodes {
+        node.stop.trigger();
+        let _ = node.join.join();
+        std::mem::forget(node.svc);
+    }
+    Json::obj()
+        .with("scenario", Json::str(label))
+        .with("nodes", Json::num(n as f64))
+        .with("live_nodes", Json::num((if kill_one { n - 1 } else { n }) as f64))
+        .with("queries", Json::num(total as f64))
+        .with("queries_per_sec", Json::num(qps))
+        .with("model_invocations", Json::num(computed as f64))
+        .with("remote_hits", Json::num(remote_hits as f64))
+        .with("forwarded_gets", Json::num(forwarded_gets as f64))
+        .with("forwarded_puts", Json::num(forwarded_puts as f64))
+        .with("degraded_fallbacks", Json::num(degraded as f64))
+}
+
+fn main() {
+    benchkit::section("E7: cluster tier (consistent-hash remote cache shards)");
+    let manifest =
+        Arc::new(Manifest::load(&repo_root().join("artifacts")).expect("artifacts built"));
+    let scenarios = vec![
+        scenario(&manifest, "1_node", 1, false, 100_000),
+        scenario(&manifest, "3_node", 3, false, 200_000),
+        scenario(&manifest, "3_node_one_killed", 3, true, 300_000),
+    ];
+    let doc = Json::obj()
+        .with("bench", Json::str("e7_cluster"))
+        .with(
+            "note",
+            Json::str(
+                "Duplicate-heavy probe mix (16 distinct graphs, 8 clients x 48 queries, \
+                 clients round-robin over live nodes) against one node, a 3-node \
+                 consistent-hash cluster, and the same cluster with one node killed before \
+                 traffic. Run `cargo bench --bench e7_cluster` from rust/ to overwrite with \
+                 measured numbers.",
+            ),
+        )
+        .with("duplicate_corpus_texts", Json::num(16.0))
+        .with("client_threads", Json::num(CLIENT_THREADS as f64))
+        .with("queries_per_client", Json::num(QUERIES_PER_CLIENT as f64))
+        .with("scenarios", Json::Arr(scenarios))
+        .with(
+            "acceptance",
+            Json::str(
+                "3_node remote_hits > 0 (cluster-wide dedup observable; concurrent cross-node \
+                 probes racing a write-back may still double-compute a key) and \
+                 3_node_one_killed completes with degraded_fallbacks > 0 and zero request errors",
+            ),
+        );
+    let out = repo_root().join("BENCH_cluster.json");
+    match std::fs::write(&out, doc.to_string()) {
+        Ok(()) => benchkit::kv("cluster sweep recorded", out.display()),
+        Err(e) => eprintln!("\ncould not write {out:?}: {e}"),
+    }
+}

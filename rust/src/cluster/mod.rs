@@ -1,0 +1,241 @@
+//! Cluster tier: one logical prediction cache across a fleet of
+//! coordinator nodes.
+//!
+//! Autotuning fleets duplicate probes not just across threads but across
+//! *processes*: two coordinator nodes behind a load balancer each pay
+//! for the same prediction. This module extends PR 1's shard-by-high-
+//! bits `PredictionCache` scheme across the network: a consistent-hash
+//! [`Ring`] (static membership, identical on every node) assigns each
+//! `cache_key` an owner node, and the serving path consults the owner
+//! before computing:
+//!
+//! - a **locally-owned** key runs through the single-node path untouched;
+//! - a **remote-owned** key that misses the local cache is first looked
+//!   up at its owner (`cache_get` over the line protocol, executed by
+//!   the [`Peer`] pool's worker threads — never by an IO thread), and a
+//!   value computed locally is written back to the owner asynchronously
+//!   (`cache_put`), so the same probe is computed once *anywhere* in the
+//!   cluster;
+//! - a **Down** owner degrades the key to local-compute-plus-local-cache
+//!   — a dead peer costs duplicated work, never an error.
+//!
+//! Membership is static: `--peers host:port,...` names every node in the
+//! cluster (the serving addresses double as ring node ids) and
+//! `--node-id` names this node's own entry. Gossip membership and
+//! replication factor > 1 are ROADMAP follow-ons.
+
+pub mod peer;
+pub mod ring;
+
+pub use peer::{Peer, PeerHealth, PeerReply};
+pub use ring::Ring;
+
+use crate::json::Json;
+use anyhow::{anyhow, Result};
+use std::sync::Arc;
+
+/// Static cluster membership for one node.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    /// Every node in the cluster, as `host:port` serving addresses
+    /// (including this node). All nodes must be configured with the same
+    /// set — the ring is derived from it deterministically.
+    pub members: Vec<String>,
+    /// This node's own entry in `members`.
+    pub self_id: String,
+    /// Virtual ring points per node.
+    pub vnodes: usize,
+}
+
+impl ClusterConfig {
+    /// Parse the `--peers a,b,c` / `--node-id a` flag pair. `node_id` is
+    /// appended to the member set if the peers list omitted it, so
+    /// `--peers` may list either the full cluster or just the *other*
+    /// nodes.
+    pub fn new(peers: &str, node_id: &str) -> Result<ClusterConfig> {
+        let node_id = node_id.trim();
+        if node_id.is_empty() {
+            return Err(anyhow!("--node-id must be this node's host:port"));
+        }
+        let mut members: Vec<String> = peers
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(str::to_string)
+            .collect();
+        if !members.iter().any(|m| m == node_id) {
+            members.push(node_id.to_string());
+        }
+        Ok(ClusterConfig {
+            members,
+            self_id: node_id.to_string(),
+            vnodes: ring::DEFAULT_VNODES,
+        })
+    }
+}
+
+/// One node's view of the cluster: the shared ring plus a lazy peer
+/// connection pool for every *other* member.
+pub struct Cluster {
+    ring: Ring,
+    self_index: usize,
+    /// Indexed like `ring.nodes()`; `None` at `self_index`.
+    peers: Vec<Option<Arc<Peer>>>,
+}
+
+impl Cluster {
+    pub fn new(cfg: &ClusterConfig) -> Result<Cluster> {
+        if cfg.members.is_empty() {
+            return Err(anyhow!("cluster membership is empty"));
+        }
+        let ring = Ring::new(&cfg.members, cfg.vnodes);
+        let self_index = ring
+            .index_of(&cfg.self_id)
+            .ok_or_else(|| anyhow!("--node-id '{}' is not in the member list", cfg.self_id))?;
+        let peers = ring
+            .nodes()
+            .iter()
+            .enumerate()
+            .map(|(i, node)| {
+                if i == self_index {
+                    None
+                } else {
+                    Some(Peer::start(node.clone()))
+                }
+            })
+            .collect();
+        Ok(Cluster { ring, self_index, peers })
+    }
+
+    pub fn ring(&self) -> &Ring {
+        &self.ring
+    }
+
+    pub fn self_id(&self) -> &str {
+        self.ring.node(self.self_index)
+    }
+
+    /// Does this node own `key`?
+    pub fn owns(&self, key: u64) -> bool {
+        self.ring.owner_index(key) == self.self_index
+    }
+
+    /// The peer owning `key`, or `None` when this node is the owner.
+    pub fn owner_peer(&self, key: u64) -> Option<&Arc<Peer>> {
+        let idx = self.ring.owner_index(key);
+        if idx == self.self_index {
+            None
+        } else {
+            self.peers[idx].as_ref()
+        }
+    }
+
+    /// Every remote peer (for stats and tests).
+    pub fn peers(&self) -> impl Iterator<Item = &Arc<Peer>> {
+        self.peers.iter().flatten()
+    }
+
+    /// Per-peer view for the `stats` command.
+    pub fn stats_json(&self) -> Json {
+        let peers: Vec<Json> = self
+            .peers()
+            .map(|p| {
+                Json::obj()
+                    .with("addr", Json::str(p.addr()))
+                    .with("state", Json::str(p.health().name()))
+                    .with("in_flight", Json::num(p.in_flight() as f64))
+                    .with("failures", Json::num(p.failures() as f64))
+            })
+            .collect();
+        Json::obj()
+            .with("node_id", Json::str(self.self_id()))
+            .with("nodes", Json::num(self.ring.len() as f64))
+            .with("peers", Json::Arr(peers))
+    }
+
+    /// Shut down every peer's worker pool (bounded; peer IO is
+    /// timeout-guarded).
+    pub fn shutdown(&self) {
+        for p in self.peers() {
+            p.shutdown();
+        }
+    }
+}
+
+impl Drop for Cluster {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_appends_self_and_trims() {
+        let cfg = ClusterConfig::new(" a:1 , b:2 ,", "c:3").unwrap();
+        assert_eq!(cfg.members, vec!["a:1", "b:2", "c:3"]);
+        assert_eq!(cfg.self_id, "c:3");
+        let cfg2 = ClusterConfig::new("a:1,b:2,c:3", "b:2").unwrap();
+        assert_eq!(cfg2.members.len(), 3, "self already listed must not duplicate");
+        assert!(ClusterConfig::new("a:1", "").is_err());
+    }
+
+    #[test]
+    fn single_node_cluster_owns_every_key() {
+        let cfg = ClusterConfig::new("", "a:1").unwrap();
+        let c = Cluster::new(&cfg).unwrap();
+        for key in [0u64, 1, u64::MAX, 0xdead_beef] {
+            assert!(c.owns(key));
+            assert!(c.owner_peer(key).is_none());
+        }
+        assert_eq!(c.peers().count(), 0);
+    }
+
+    #[test]
+    fn routing_matches_the_ring() {
+        let cfg = ClusterConfig::new("a:1,b:2,c:3", "b:2").unwrap();
+        let c = Cluster::new(&cfg).unwrap();
+        assert_eq!(c.self_id(), "b:2");
+        assert_eq!(c.peers().count(), 2);
+        let mut local = 0;
+        let mut remote = 0;
+        for i in 0..1000u64 {
+            let key = i.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+            let owner = c.ring().owner(key).to_string();
+            match c.owner_peer(key) {
+                None => {
+                    assert_eq!(owner, "b:2");
+                    assert!(c.owns(key));
+                    local += 1;
+                }
+                Some(p) => {
+                    assert_eq!(p.addr(), owner);
+                    assert!(!c.owns(key));
+                    remote += 1;
+                }
+            }
+        }
+        assert!(local > 0 && remote > 0, "both routes must occur: {local}/{remote}");
+        c.shutdown();
+    }
+
+    #[test]
+    fn stats_json_shape() {
+        let cfg = ClusterConfig::new("a:1,b:2,c:3", "a:1").unwrap();
+        let c = Cluster::new(&cfg).unwrap();
+        let j = c.stats_json();
+        assert_eq!(j.req_str("node_id").unwrap(), "a:1");
+        assert_eq!(j.req_f64("nodes").unwrap(), 3.0);
+        let peers = j.req_arr("peers").unwrap();
+        assert_eq!(peers.len(), 2);
+        for p in peers {
+            assert!(p.get("addr").is_some());
+            assert_eq!(p.req_str("state").unwrap(), "up");
+            assert_eq!(p.req_f64("in_flight").unwrap(), 0.0);
+            assert_eq!(p.req_f64("failures").unwrap(), 0.0);
+        }
+        c.shutdown();
+    }
+}

@@ -1,0 +1,558 @@
+//! Peer connection pool: one [`Peer`] per remote cluster node, built on
+//! the line-protocol [`Client`].
+//!
+//! The pool exists so the serving path can consult a remote node's cache
+//! without ever touching a peer socket from an IO thread: callers enqueue
+//! a request ([`Peer::begin_get`] / [`Peer::put`]) with a nonblocking
+//! `try_send` and (for gets) park on a plain channel; a small pool of
+//! worker threads per peer owns the actual TCP connections and does the
+//! blocking `cache_get`/`cache_put` roundtrips. The [`Client`] they ride
+//! carries its own hardening — connect timeout, reconnect-once on a
+//! broken pipe — so a peer restart costs one reconnect, not an error.
+//!
+//! Health is a three-state machine driven by consecutive attempt
+//! failures:
+//!
+//! - **Up** — no recent failures; requests flow.
+//! - **Degraded** — 1..[`DOWN_AFTER`] consecutive failures; requests
+//!   still flow (the next success resets to Up).
+//! - **Down** — ≥ [`DOWN_AFTER`] consecutive failures; requests fail
+//!   *fast* (no socket attempt, no queueing) until an exponential
+//!   backoff expires, then exactly one half-open probe is let through.
+//!   A probe success resets to Up; a failure re-arms the backoff.
+//!
+//! A Down peer is therefore worth approximately zero latency to callers:
+//! the serving path sees an immediate `None` and degrades to
+//! local-compute-plus-local-cache (counted as `degraded_fallbacks` in
+//! the service stats). Requests that were submitted are tracked in a
+//! per-peer in-flight table (request id → cache key) until their worker
+//! resolves them, which the `stats` command surfaces per peer.
+
+use crate::coordinator::server::Client;
+use fxhash::FxHashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Consecutive attempt failures after which a peer is Down (fail-fast).
+pub const DOWN_AFTER: u32 = 3;
+
+/// Connect timeout for peer sockets. Short: a peer that cannot accept
+/// within this is better served by the degraded local path.
+pub const PEER_CONNECT_TIMEOUT: Duration = Duration::from_millis(400);
+
+/// Read/write timeout on established peer connections, so a hung or
+/// slow (not dead) peer bounds every worker roundtrip. Deliberately
+/// aligned with the serving path's caller-side probe deadline
+/// (`REMOTE_GET_TIMEOUT`): a peer that repeatedly answers slower than
+/// the serving path will wait accumulates *worker-side* failures, flips
+/// Down, and then fails fast — slowness degrades exactly like death.
+pub const PEER_IO_TIMEOUT: Duration = Duration::from_millis(500);
+
+/// First Down backoff; doubles per further failure up to [`BACKOFF_MAX`].
+const BACKOFF_BASE: Duration = Duration::from_millis(250);
+const BACKOFF_MAX: Duration = Duration::from_secs(4);
+
+/// Queued-request bound per peer. `try_send` beyond this drops the
+/// request (gets degrade locally, write-backs are best-effort) instead
+/// of growing a backlog behind a slow peer.
+const QUEUE_DEPTH: usize = 1024;
+
+/// Worker threads (= pooled connections) per peer.
+const WORKERS_PER_PEER: usize = 2;
+
+/// Coarse health of one peer, derived from consecutive failures.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PeerHealth {
+    Up,
+    Degraded,
+    Down,
+}
+
+impl PeerHealth {
+    pub fn name(self) -> &'static str {
+        match self {
+            PeerHealth::Up => "up",
+            PeerHealth::Degraded => "degraded",
+            PeerHealth::Down => "down",
+        }
+    }
+}
+
+/// Outcome of a remote cache probe that was actually attempted.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PeerReply {
+    /// The owner had the value.
+    Found(f64),
+    /// The owner answered but had no entry (compute locally, write back).
+    NotFound,
+    /// The attempt failed (connect/roundtrip error or timeout); peer
+    /// health has been updated. Degrade to local compute.
+    Failed,
+}
+
+enum PeerReq {
+    Get { id: u64, key: u64, respond: Sender<PeerReply> },
+    Put { id: u64, key: u64, value: f64 },
+}
+
+struct HealthInner {
+    consecutive_failures: u32,
+    /// While Down: when the next half-open probe may go out.
+    retry_at: Option<Instant>,
+}
+
+/// One remote node: a bounded request queue, a worker pool owning the
+/// sockets, a health state machine, and an in-flight request table.
+pub struct Peer {
+    addr: String,
+    tx: Mutex<Option<SyncSender<PeerReq>>>,
+    health: Mutex<HealthInner>,
+    /// In-flight request table: internal request id → cache key, from
+    /// submit until the owning worker resolves the request. Today only
+    /// its size is exported (`in_flight()` / the stats `cluster` view) —
+    /// the key mapping is kept for debuggability and as the anchor for
+    /// the cluster-wide single-flight follow-on; the two uncontended
+    /// lock touches per request are noise next to the TCP roundtrip
+    /// every entry represents.
+    inflight: Mutex<FxHashMap<u64, u64>>,
+    seq: AtomicU64,
+    /// Failed attempts over the peer's lifetime (not consecutive).
+    failures_total: AtomicU64,
+    workers: Mutex<Vec<JoinHandle<()>>>,
+}
+
+fn backoff(consecutive: u32) -> Duration {
+    let exp = consecutive.saturating_sub(DOWN_AFTER).min(4);
+    (BACKOFF_BASE * (1u32 << exp)).min(BACKOFF_MAX)
+}
+
+impl Peer {
+    /// Spawn the worker pool for one remote node. Connections are opened
+    /// lazily on first use — the peer process may not be up yet.
+    pub fn start(addr: String) -> Arc<Peer> {
+        let (tx, rx) = sync_channel::<PeerReq>(QUEUE_DEPTH);
+        let peer = Arc::new(Peer {
+            addr,
+            tx: Mutex::new(Some(tx)),
+            health: Mutex::new(HealthInner { consecutive_failures: 0, retry_at: None }),
+            inflight: Mutex::new(FxHashMap::default()),
+            seq: AtomicU64::new(1),
+            failures_total: AtomicU64::new(0),
+            workers: Mutex::new(Vec::new()),
+        });
+        let rx = Arc::new(Mutex::new(rx));
+        let mut workers = peer.workers.lock().unwrap();
+        for _ in 0..WORKERS_PER_PEER {
+            let peer2 = peer.clone();
+            let rx2 = rx.clone();
+            workers.push(std::thread::spawn(move || worker_loop(peer2, rx2)));
+        }
+        drop(workers);
+        peer
+    }
+
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    pub fn health(&self) -> PeerHealth {
+        let h = self.health.lock().unwrap();
+        match h.consecutive_failures {
+            0 => PeerHealth::Up,
+            n if n < DOWN_AFTER => PeerHealth::Degraded,
+            _ => PeerHealth::Down,
+        }
+    }
+
+    /// Requests submitted but not yet resolved by a worker.
+    pub fn in_flight(&self) -> usize {
+        self.inflight.lock().unwrap().len()
+    }
+
+    /// Failed attempts over the peer's lifetime.
+    pub fn failures(&self) -> u64 {
+        self.failures_total.load(Ordering::Relaxed)
+    }
+
+    /// Would a request submitted now be attempted? Down peers inside
+    /// their backoff window answer `false` (callers fail fast). Does not
+    /// consume the half-open probe — that happens worker-side.
+    fn accepting(&self) -> bool {
+        let h = self.health.lock().unwrap();
+        if h.consecutive_failures < DOWN_AFTER {
+            return true;
+        }
+        match h.retry_at {
+            Some(t) => Instant::now() >= t,
+            None => true,
+        }
+    }
+
+    /// Worker-side gate: like [`Peer::accepting`], but claims the
+    /// half-open probe slot (pushes `retry_at` out) so a Down peer gets
+    /// exactly one attempt per backoff window, not one per queued
+    /// request.
+    fn attempt_allowed(&self) -> bool {
+        let mut h = self.health.lock().unwrap();
+        if h.consecutive_failures < DOWN_AFTER {
+            return true;
+        }
+        match h.retry_at {
+            Some(t) if Instant::now() < t => false,
+            _ => {
+                let n = h.consecutive_failures;
+                h.retry_at = Some(Instant::now() + backoff(n));
+                true
+            }
+        }
+    }
+
+    fn record_failure(&self) {
+        self.failures_total.fetch_add(1, Ordering::Relaxed);
+        let mut h = self.health.lock().unwrap();
+        h.consecutive_failures = h.consecutive_failures.saturating_add(1);
+        if h.consecutive_failures >= DOWN_AFTER {
+            h.retry_at = Some(Instant::now() + backoff(h.consecutive_failures));
+        }
+    }
+
+    fn record_success(&self) {
+        let mut h = self.health.lock().unwrap();
+        h.consecutive_failures = 0;
+        h.retry_at = None;
+    }
+
+    /// Nonblocking remote-get submit. `None` means no attempt will be
+    /// made (peer Down in backoff, queue full, or pool shut down) — the
+    /// caller should fall back to local compute immediately. `Some(rx)`
+    /// resolves to the attempt's [`PeerReply`].
+    pub fn begin_get(&self, key: u64) -> Option<Receiver<PeerReply>> {
+        if !self.accepting() {
+            return None;
+        }
+        let guard = self.tx.lock().unwrap();
+        let tx = guard.as_ref()?;
+        let id = self.seq.fetch_add(1, Ordering::Relaxed);
+        let (rtx, rrx) = channel();
+        self.inflight.lock().unwrap().insert(id, key);
+        match tx.try_send(PeerReq::Get { id, key, respond: rtx }) {
+            Ok(()) => Some(rrx),
+            Err(_) => {
+                self.inflight.lock().unwrap().remove(&id);
+                None
+            }
+        }
+    }
+
+    /// Blocking remote get with a caller-side deadline. `None` = no
+    /// attempt was made (fail-fast); `Some(Failed)` covers both attempt
+    /// errors and the deadline expiring first.
+    pub fn get(&self, key: u64, timeout: Duration) -> Option<PeerReply> {
+        let rx = self.begin_get(key)?;
+        Some(rx.recv_timeout(timeout).unwrap_or(PeerReply::Failed))
+    }
+
+    /// Fire-and-forget write-back. Returns whether the put was enqueued
+    /// (a Down peer or a full queue drops it — the value is still in the
+    /// local cache, so losing a write-back costs one recompute at worst).
+    pub fn put(&self, key: u64, value: f64) -> bool {
+        if !self.accepting() {
+            return false;
+        }
+        let guard = self.tx.lock().unwrap();
+        let Some(tx) = guard.as_ref() else { return false };
+        let id = self.seq.fetch_add(1, Ordering::Relaxed);
+        self.inflight.lock().unwrap().insert(id, key);
+        match tx.try_send(PeerReq::Put { id, key, value }) {
+            Ok(()) => true,
+            Err(_) => {
+                self.inflight.lock().unwrap().remove(&id);
+                false
+            }
+        }
+    }
+
+    /// Drop the request queue and join the workers. Bounded: workers'
+    /// socket calls all carry timeouts.
+    pub fn shutdown(&self) {
+        *self.tx.lock().unwrap() = None;
+        for j in self.workers.lock().unwrap().drain(..) {
+            let _ = j.join();
+        }
+    }
+
+    // ---- worker side ----
+
+    fn ensure_conn(&self, conn: &mut Option<Client>) -> bool {
+        if conn.is_some() {
+            return true;
+        }
+        match Client::connect_timeout(&self.addr, PEER_CONNECT_TIMEOUT) {
+            Ok(mut c) => {
+                // Bound every roundtrip: a hung peer must not pin a
+                // worker (or shutdown) indefinitely.
+                if c.set_io_timeout(Some(PEER_IO_TIMEOUT)).is_err() {
+                    self.record_failure();
+                    return false;
+                }
+                *conn = Some(c);
+                true
+            }
+            Err(_) => {
+                self.record_failure();
+                false
+            }
+        }
+    }
+
+    fn attempt_get(&self, conn: &mut Option<Client>, key: u64) -> PeerReply {
+        if !self.ensure_conn(conn) {
+            return PeerReply::Failed;
+        }
+        match conn.as_mut().unwrap().cache_get(key) {
+            Ok(Some(v)) => {
+                self.record_success();
+                PeerReply::Found(v)
+            }
+            Ok(None) => {
+                self.record_success();
+                PeerReply::NotFound
+            }
+            Err(_) => {
+                *conn = None;
+                self.record_failure();
+                PeerReply::Failed
+            }
+        }
+    }
+
+    fn attempt_put(&self, conn: &mut Option<Client>, key: u64, value: f64) {
+        if !self.ensure_conn(conn) {
+            return;
+        }
+        match conn.as_mut().unwrap().cache_put(key, value) {
+            Ok(()) => self.record_success(),
+            Err(_) => {
+                *conn = None;
+                self.record_failure();
+            }
+        }
+    }
+
+    fn process(&self, conn: &mut Option<Client>, req: PeerReq) {
+        // Fail queued requests fast while Down: one half-open probe per
+        // backoff window pays the connect timeout, the rest do not.
+        let allowed = self.attempt_allowed();
+        match req {
+            PeerReq::Get { id, key, respond } => {
+                let reply =
+                    if allowed { self.attempt_get(conn, key) } else { PeerReply::Failed };
+                self.inflight.lock().unwrap().remove(&id);
+                let _ = respond.send(reply);
+            }
+            PeerReq::Put { id, key, value } => {
+                if allowed {
+                    self.attempt_put(conn, key, value);
+                }
+                self.inflight.lock().unwrap().remove(&id);
+            }
+        }
+    }
+}
+
+/// Worker: take one request at a time off the shared queue (the mutex is
+/// only held while parked on `recv`, not while doing socket IO) and
+/// resolve it over this worker's own connection.
+fn worker_loop(peer: Arc<Peer>, rx: Arc<Mutex<Receiver<PeerReq>>>) {
+    let mut conn: Option<Client> = None;
+    loop {
+        let req = {
+            let guard = rx.lock().unwrap();
+            match guard.recv() {
+                Ok(r) => r,
+                Err(_) => break, // queue dropped: shutdown
+            }
+        };
+        peer.process(&mut conn, req);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json::{parse, Json};
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpListener;
+
+    /// Minimal in-test cluster node: accepts connections and serves
+    /// `cache_get`/`cache_put` against a shared map. One thread per
+    /// connection; threads end when the test's sockets close.
+    fn spawn_fake_node(
+        drop_first_conn: bool,
+    ) -> (String, Arc<Mutex<FxHashMap<u64, f64>>>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let store: Arc<Mutex<FxHashMap<u64, f64>>> = Arc::new(Mutex::new(FxHashMap::default()));
+        let store2 = store.clone();
+        std::thread::spawn(move || {
+            let mut first = true;
+            for conn in listener.incoming() {
+                let Ok(conn) = conn else { break };
+                if drop_first_conn && std::mem::take(&mut first) {
+                    drop(conn); // simulate a node that accepts then dies
+                    continue;
+                }
+                let store = store2.clone();
+                std::thread::spawn(move || {
+                    let mut writer = conn.try_clone().unwrap();
+                    let reader = BufReader::new(conn);
+                    for line in reader.lines() {
+                        let Ok(line) = line else { return };
+                        let req = parse(&line).unwrap();
+                        let id = req.get("id").cloned().unwrap_or(Json::Null);
+                        let key = req
+                            .get("key")
+                            .and_then(Json::as_str)
+                            .and_then(|s| u64::from_str_radix(s, 16).ok())
+                            .unwrap();
+                        let resp = match req.get("cmd").and_then(Json::as_str) {
+                            Some("cache_get") => match store.lock().unwrap().get(&key) {
+                                Some(&v) => Json::obj()
+                                    .with("id", id)
+                                    .with("ok", Json::Bool(true))
+                                    .with("found", Json::Bool(true))
+                                    .with("value", Json::num(v)),
+                                None => Json::obj()
+                                    .with("id", id)
+                                    .with("ok", Json::Bool(true))
+                                    .with("found", Json::Bool(false)),
+                            },
+                            Some("cache_put") => {
+                                let v = req.req_f64("value").unwrap();
+                                store.lock().unwrap().insert(key, v);
+                                Json::obj()
+                                    .with("id", id)
+                                    .with("ok", Json::Bool(true))
+                                    .with("stored", Json::Bool(true))
+                            }
+                            other => panic!("fake node got unexpected cmd {other:?}"),
+                        };
+                        writer.write_all(resp.to_string().as_bytes()).unwrap();
+                        writer.write_all(b"\n").unwrap();
+                    }
+                });
+            }
+        });
+        (addr, store)
+    }
+
+    /// An address with nothing listening (bind, read the port, drop).
+    fn dead_addr() -> String {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap().to_string();
+        drop(l);
+        addr
+    }
+
+    #[test]
+    fn get_and_put_roundtrip_against_fake_node() {
+        let (addr, store) = spawn_fake_node(false);
+        let peer = Peer::start(addr);
+        // Miss first.
+        assert_eq!(peer.get(7, Duration::from_secs(2)), Some(PeerReply::NotFound));
+        // Write-back lands (fire-and-forget → poll the store).
+        assert!(peer.put(7, 2.5));
+        let t0 = Instant::now();
+        while store.lock().unwrap().get(&7).is_none() {
+            assert!(t0.elapsed() < Duration::from_secs(2), "put never reached the node");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        // Now the get hits.
+        assert_eq!(peer.get(7, Duration::from_secs(2)), Some(PeerReply::Found(2.5)));
+        assert_eq!(peer.health(), PeerHealth::Up);
+        assert_eq!(peer.failures(), 0);
+        // The in-flight table drains once everything resolved.
+        let t0 = Instant::now();
+        while peer.in_flight() != 0 {
+            assert!(t0.elapsed() < Duration::from_secs(2), "in-flight table leaked");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        peer.shutdown();
+    }
+
+    /// The satellite's "accepts then closes" case: the first connection
+    /// dies under the pool; the Client's reconnect-once retry makes the
+    /// probe succeed anyway, and the peer never leaves Up.
+    #[test]
+    fn first_connection_dropped_is_absorbed_by_client_retry() {
+        let (addr, store) = spawn_fake_node(true);
+        store.lock().unwrap().insert(42, 6.25);
+        let peer = Peer::start(addr);
+        assert_eq!(peer.get(42, Duration::from_secs(2)), Some(PeerReply::Found(6.25)));
+        assert_eq!(peer.health(), PeerHealth::Up);
+        assert_eq!(peer.failures(), 0, "the dropped conn must be retried, not counted");
+        peer.shutdown();
+    }
+
+    #[test]
+    fn dead_peer_goes_down_and_fails_fast() {
+        let peer = Peer::start(dead_addr());
+        // Three sequential attempts (connect refused is immediate).
+        for _ in 0..DOWN_AFTER {
+            assert_eq!(peer.get(1, Duration::from_secs(2)), Some(PeerReply::Failed));
+        }
+        assert_eq!(peer.health(), PeerHealth::Down);
+        assert!(peer.failures() >= DOWN_AFTER as u64);
+        // Inside the backoff window: no attempt, no queueing, no waiting.
+        let t0 = Instant::now();
+        assert!(peer.begin_get(1).is_none(), "down peer must fail fast");
+        assert!(!peer.put(1, 1.0), "down peer must drop write-backs");
+        assert!(t0.elapsed() < Duration::from_millis(100));
+        peer.shutdown();
+    }
+
+    #[test]
+    fn health_machine_degrades_recovers_and_half_opens() {
+        let peer = Peer::start(dead_addr());
+        assert_eq!(peer.health(), PeerHealth::Up);
+        peer.record_failure();
+        assert_eq!(peer.health(), PeerHealth::Degraded);
+        // A success anywhere short of Down resets fully.
+        peer.record_success();
+        assert_eq!(peer.health(), PeerHealth::Up);
+        for _ in 0..DOWN_AFTER {
+            peer.record_failure();
+        }
+        assert_eq!(peer.health(), PeerHealth::Down);
+        assert!(!peer.accepting(), "fresh Down must be inside its backoff");
+        // Force the backoff window into the past: the half-open probe
+        // opens, and claiming it (worker-side gate) closes it again.
+        peer.health.lock().unwrap().retry_at =
+            Some(Instant::now() - Duration::from_millis(1));
+        assert!(peer.accepting(), "expired backoff must allow a probe");
+        assert!(peer.attempt_allowed(), "first claimant takes the probe");
+        assert!(!peer.attempt_allowed(), "probe slot must be single-use per window");
+        peer.record_success();
+        assert_eq!(peer.health(), PeerHealth::Up);
+        peer.shutdown();
+    }
+
+    #[test]
+    fn backoff_grows_and_caps() {
+        assert_eq!(backoff(DOWN_AFTER), BACKOFF_BASE);
+        assert_eq!(backoff(DOWN_AFTER + 1), BACKOFF_BASE * 2);
+        assert!(backoff(DOWN_AFTER + 20) <= BACKOFF_MAX);
+    }
+
+    #[test]
+    fn shutdown_joins_workers_and_rejects_new_requests() {
+        let (addr, _store) = spawn_fake_node(false);
+        let peer = Peer::start(addr);
+        peer.shutdown();
+        assert!(peer.begin_get(1).is_none());
+        assert!(!peer.put(1, 1.0));
+    }
+}

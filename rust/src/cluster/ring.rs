@@ -1,0 +1,217 @@
+//! Consistent-hash ring: the ownership map of the cluster tier.
+//!
+//! PR 1's `PredictionCache` spreads keys over in-process shards by their
+//! high bits; this ring extends the same idea *across processes*. Every
+//! node in the cluster builds the identical ring from the identical
+//! (static) membership list, so all nodes agree — with no coordination
+//! traffic — on which node owns any given `cache_key`. Ownership decides
+//! where a prediction is cached cluster-wide: the owner's cache is the
+//! one consulted before computing and the one written back to after.
+//!
+//! Construction hashes `(node_id, replica)` with FxHash for
+//! [`DEFAULT_VNODES`] virtual points per node; lookup is a binary search
+//! for the first point at or past the key (wrapping at the top of the
+//! u64 space, so a key's owner is effectively chosen by its high bits
+//! first). Virtual nodes keep the load split near-even, and membership
+//! changes move only the keys whose owning arc changed — both properties
+//! are pinned by the tests below.
+//!
+//! Membership is static (`--peers` + `--node-id` at startup): node death
+//! is handled by the peer pool's health state (degrade to local compute),
+//! not by ring surgery. Gossip membership is a ROADMAP follow-on.
+
+use fxhash::FxHasher;
+use std::hash::{Hash, Hasher};
+
+/// Virtual points per node. 64 keeps the max/min node share within a few
+/// tens of percent for small clusters while construction stays trivial.
+pub const DEFAULT_VNODES: usize = 64;
+
+/// An immutable consistent-hash ring over a set of node ids.
+///
+/// Node ids are the nodes' serving addresses (`host:port`); the id list
+/// is sorted and deduplicated at construction so every node derives the
+/// exact same ring regardless of the order its `--peers` flag listed
+/// them in.
+pub struct Ring {
+    /// `(point, node index)` sorted by point; ties (astronomically rare)
+    /// break by node index, which is itself deterministic.
+    points: Vec<(u64, u32)>,
+    nodes: Vec<String>,
+}
+
+fn point_hash(node: &str, replica: usize) -> u64 {
+    let mut h = FxHasher::default();
+    node.hash(&mut h);
+    (replica as u64).hash(&mut h);
+    h.finish()
+}
+
+impl Ring {
+    /// Build a ring over `members` with `vnodes` virtual points each.
+    /// Panics on an empty membership — a cluster has at least this node.
+    pub fn new(members: &[String], vnodes: usize) -> Ring {
+        let mut nodes: Vec<String> = members.to_vec();
+        nodes.sort();
+        nodes.dedup();
+        assert!(!nodes.is_empty(), "consistent-hash ring needs at least one node");
+        let vnodes = vnodes.max(1);
+        let mut points = Vec::with_capacity(nodes.len() * vnodes);
+        for (i, node) in nodes.iter().enumerate() {
+            for replica in 0..vnodes {
+                points.push((point_hash(node, replica), i as u32));
+            }
+        }
+        points.sort_unstable();
+        Ring { points, nodes }
+    }
+
+    /// Index (into [`Ring::nodes`]) of the node owning `key`: the first
+    /// ring point at or past the key, wrapping past the top of the ring.
+    pub fn owner_index(&self, key: u64) -> usize {
+        let i = self.points.partition_point(|&(p, _)| p < key);
+        let i = if i == self.points.len() { 0 } else { i };
+        self.points[i].1 as usize
+    }
+
+    /// Node id owning `key`.
+    pub fn owner(&self, key: u64) -> &str {
+        &self.nodes[self.owner_index(key)]
+    }
+
+    /// Sorted, deduplicated membership this ring was built from.
+    pub fn nodes(&self) -> &[String] {
+        &self.nodes
+    }
+
+    /// Node id at `index` (as returned by [`Ring::owner_index`]).
+    pub fn node(&self, index: usize) -> &str {
+        &self.nodes[index]
+    }
+
+    /// Ring index of a node id, if it is a member.
+    pub fn index_of(&self, id: &str) -> Option<usize> {
+        self.nodes.iter().position(|n| n == id)
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn members(ids: &[&str]) -> Vec<String> {
+        ids.iter().map(|s| s.to_string()).collect()
+    }
+
+    /// Spread sample keys the way real cache keys are spread: hashed.
+    fn sample_keys(n: usize) -> Vec<u64> {
+        (0..n as u64)
+            .map(|i| {
+                let mut h = FxHasher::default();
+                i.hash(&mut h);
+                h.finish()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn single_node_owns_everything() {
+        let ring = Ring::new(&members(&["a:1"]), DEFAULT_VNODES);
+        for key in sample_keys(100) {
+            assert_eq!(ring.owner(key), "a:1");
+        }
+    }
+
+    #[test]
+    fn ownership_is_deterministic_and_order_independent() {
+        let a = Ring::new(&members(&["n1:7071", "n2:7071", "n3:7071"]), DEFAULT_VNODES);
+        let b = Ring::new(&members(&["n3:7071", "n1:7071", "n2:7071"]), DEFAULT_VNODES);
+        // Duplicates in the list must not skew the ring either.
+        let c = Ring::new(
+            &members(&["n2:7071", "n2:7071", "n1:7071", "n3:7071"]),
+            DEFAULT_VNODES,
+        );
+        for key in sample_keys(1000) {
+            let owner = a.owner(key);
+            assert_eq!(owner, b.owner(key), "membership order changed ownership");
+            assert_eq!(owner, c.owner(key), "duplicate members changed ownership");
+        }
+        assert_eq!(a.nodes(), b.nodes());
+        assert_eq!(a.len(), 3);
+        assert_eq!(c.len(), 3);
+    }
+
+    #[test]
+    fn load_is_roughly_balanced() {
+        let ring = Ring::new(&members(&["a:1", "b:2", "c:3"]), DEFAULT_VNODES);
+        let keys = sample_keys(30_000);
+        let mut counts = [0usize; 3];
+        for &k in &keys {
+            counts[ring.owner_index(k)] += 1;
+        }
+        // 64 vnodes keeps every node within a loose band around the
+        // 1/3 mean; the bound is deliberately generous (the test pins
+        // "no node is starved or doubled", not a tight variance).
+        for (i, &c) in counts.iter().enumerate() {
+            let share = c as f64 / keys.len() as f64;
+            assert!(
+                (0.15..=0.55).contains(&share),
+                "node {i} owns {share:.3} of the keyspace: {counts:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn removing_a_node_only_moves_its_own_keys() {
+        let full = Ring::new(&members(&["a:1", "b:2", "c:3", "d:4"]), DEFAULT_VNODES);
+        let without_c = Ring::new(&members(&["a:1", "b:2", "d:4"]), DEFAULT_VNODES);
+        let keys = sample_keys(20_000);
+        let mut moved = 0usize;
+        for &k in &keys {
+            let before = full.owner(k);
+            let after = without_c.owner(k);
+            if before == "c:3" {
+                moved += 1;
+                assert_ne!(after, "c:3");
+            } else {
+                // Minimal churn: every key NOT owned by the removed node
+                // keeps its owner.
+                assert_eq!(before, after, "key not owned by c:3 moved on removal");
+            }
+        }
+        // Sanity: the removed node did own a nontrivial share.
+        assert!(moved > keys.len() / 10, "c:3 owned suspiciously few keys: {moved}");
+    }
+
+    #[test]
+    fn adding_a_node_only_steals_keys_for_itself() {
+        let small = Ring::new(&members(&["a:1", "b:2"]), DEFAULT_VNODES);
+        let grown = Ring::new(&members(&["a:1", "b:2", "c:3"]), DEFAULT_VNODES);
+        for &k in &sample_keys(20_000) {
+            let before = small.owner(k);
+            let after = grown.owner(k);
+            if before != after {
+                assert_eq!(after, "c:3", "growth moved a key to a pre-existing node");
+            }
+        }
+    }
+
+    #[test]
+    fn index_lookup_roundtrips() {
+        let ring = Ring::new(&members(&["b:2", "a:1"]), 4);
+        // Sorted membership: a:1 first.
+        assert_eq!(ring.node(0), "a:1");
+        assert_eq!(ring.index_of("b:2"), Some(1));
+        assert_eq!(ring.index_of("nope"), None);
+        let k = sample_keys(1)[0];
+        assert_eq!(ring.node(ring.owner_index(k)), ring.owner(k));
+    }
+}

@@ -40,11 +40,26 @@ pub fn cache_key(model: &str, ids: &[u32]) -> u64 {
 /// Default shard count for the serving path (power of two).
 pub const DEFAULT_SHARDS: usize = 16;
 
+/// Wire form of a cache key for the cluster tier's `cache_get` /
+/// `cache_put` commands: fixed-width hex. JSON numbers are f64 and lose
+/// u64 precision above 2^53, so keys cross node boundaries as strings.
+pub fn key_to_wire(key: u64) -> String {
+    format!("{key:016x}")
+}
+
+/// Parse a wire-form cache key (any hex u64; case-insensitive).
+pub fn key_from_wire(s: &str) -> Option<u64> {
+    u64::from_str_radix(s, 16).ok()
+}
+
 /// Shard selection shared by the prediction cache and the front-end
 /// memo: the key's high bits pick the shard (FxHash's final multiply
 /// diffuses into the high bits), leaving the low bits for the in-shard
-/// map's buckets.
-pub(super) fn shard_index(key: u64, shard_bits: u32) -> usize {
+/// map's buckets. The cluster tier's consistent-hash ring
+/// (`crate::cluster::ring`) is the cross-process extension of the same
+/// owner-partition idea — keys spread by their hash, ownership decided
+/// without coordination.
+pub fn shard_index(key: u64, shard_bits: u32) -> usize {
     if shard_bits == 0 {
         0
     } else {
@@ -324,6 +339,17 @@ mod tests {
     fn distinct_keys() {
         assert_ne!(cache_key("a", &[1, 2]), cache_key("b", &[1, 2]));
         assert_ne!(cache_key("a", &[1, 2]), cache_key("a", &[2, 1]));
+    }
+
+    #[test]
+    fn wire_key_roundtrips_losslessly() {
+        for key in [0u64, 1, (1 << 53) + 1, u64::MAX, cache_key("m", &[1, 2, 3])] {
+            let wire = key_to_wire(key);
+            assert_eq!(wire.len(), 16, "fixed-width hex: {wire}");
+            assert_eq!(key_from_wire(&wire), Some(key));
+        }
+        assert_eq!(key_from_wire("nope"), None);
+        assert_eq!(key_from_wire(""), None);
     }
 
     #[test]

@@ -24,6 +24,16 @@
 //! covers it so small flushes stop paying for `max_batch`-sized padding
 //! (watch `exec_by_batch` / `padded_slots` in the stats).
 //!
+//! With a [`crate::cluster::Cluster`] attached ([`Service::set_cluster`],
+//! `--peers`/`--node-id` on the CLI), the cache tier spans processes: a
+//! consistent-hash ring assigns every cache key an owner node, a local
+//! miss on a remote-owned key probes the owner's cache before computing,
+//! and computed values are written back to the owner asynchronously — so
+//! a duplicated probe is computed once per *cluster*, not once per node.
+//! Peer IO runs entirely on the peer pool's worker threads; a Down owner
+//! degrades the key to local compute + local cache (counted, never an
+//! error).
+//!
 //! Python is never here: predictions run through the AOT-compiled HLO
 //! executables via PJRT.
 
@@ -34,6 +44,7 @@ pub mod server;
 pub mod stats;
 
 use crate::bundle::Bundle;
+use crate::cluster::{Cluster, PeerReply};
 use crate::mlir::parse_function;
 use crate::runtime::{Executable, Manifest, Runtime, Tensor};
 use crate::sim::Target;
@@ -46,7 +57,21 @@ use std::path::PathBuf;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
+
+/// Caller-side deadline for remote owner probes (shared across a whole
+/// `predict_many` batch — the probes overlap on the peer pool). A peer
+/// slower than this is treated as failed for the query at hand (degrade
+/// to local compute). The peer workers' socket IO timeout
+/// ([`crate::cluster::peer::PEER_IO_TIMEOUT`]) is aligned with this
+/// value, so a chronically slow peer fails *worker-side* too, its health
+/// flips Down after a few strikes, and subsequent probes fail fast
+/// without waiting — the serving thread's worst sustained stall is a few
+/// strikes' worth, not one deadline per query forever. (Fully resuming
+/// the request off-thread instead of parking on the channel is the
+/// ROADMAP "in-loop response generation offload" follow-on, which covers
+/// cache-miss model invocations for the same reason.)
+const REMOTE_GET_TIMEOUT: Duration = Duration::from_millis(500);
 
 /// One target's serving head: bundle + batch queue + a pool of worker
 /// threads draining it. Each worker owns a full ladder of compiled
@@ -89,6 +114,9 @@ pub struct Service {
     /// `hash(target, model, mlir_text)` → `(ids, cache_key)`: duplicate
     /// probes skip parse/tokenize/encode entirely.
     memo: FrontendMemo,
+    /// The cluster tier, when this node is one of several sharing one
+    /// logical cache ([`Service::set_cluster`]). `None` = single node.
+    cluster: Option<Arc<Cluster>>,
 }
 
 impl Service {
@@ -153,7 +181,25 @@ impl Service {
                 .collect();
             heads.insert(bundle.target, Head { bundle, queue, workers });
         }
-        Ok(Service { heads, cache, stats, memo: FrontendMemo::new(FRONTEND_MEMO_CAPACITY) })
+        Ok(Service {
+            heads,
+            cache,
+            stats,
+            memo: FrontendMemo::new(FRONTEND_MEMO_CAPACITY),
+            cluster: None,
+        })
+    }
+
+    /// Attach the cluster tier (before the service starts taking
+    /// traffic): remote-owned cache keys are looked up at — and written
+    /// back to — their consistent-hash owner node from here on.
+    pub fn set_cluster(&mut self, cluster: Arc<Cluster>) {
+        self.cluster = Some(cluster);
+    }
+
+    /// The attached cluster, if any (tests and stats use this).
+    pub fn cluster(&self) -> Option<&Arc<Cluster>> {
+        self.cluster.as_ref()
     }
 
     pub fn targets(&self) -> Vec<Target> {
@@ -207,15 +253,63 @@ impl Service {
                 v
             }
             Lookup::Wait(rx) => wait_for_leader(rx)?,
-            Lookup::Miss(guard) => {
-                let rx = head.queue.submit(enc.ids.as_ref().clone());
-                let norm = rx.recv().map_err(|_| anyhow!("prediction worker gone"))?;
-                let value = head.bundle.stats.denormalize(norm);
-                guard.complete(value);
-                value
-            }
+            Lookup::Miss(guard) => self.complete_miss(head, &enc, guard)?,
         };
         self.stats.record_latency_us(t0.elapsed().as_micros() as u64);
+        Ok(value)
+    }
+
+    /// Resolve a genuine local-cache miss (this thread is the
+    /// single-flight leader). With a cluster attached and the key owned
+    /// by another node, the owner's cache is consulted first — the probe
+    /// runs on the peer pool's worker threads, this thread only parks on
+    /// a channel — and a locally computed value is written back to the
+    /// owner asynchronously. A Down or failing owner degrades the key to
+    /// local compute + local cache; peer state is never an error.
+    fn complete_miss(
+        &self,
+        head: &Head,
+        enc: &CachedEncode,
+        guard: FlightGuard<'_>,
+    ) -> Result<f64> {
+        let owner = self.cluster.as_ref().and_then(|c| c.owner_peer(enc.key));
+        let mut write_back = false;
+        if let Some(peer) = owner {
+            match peer.get(enc.key, REMOTE_GET_TIMEOUT) {
+                None => {
+                    // Down owner inside its backoff: fail fast, no probe.
+                    self.stats.degraded_fallbacks.fetch_add(1, Ordering::Relaxed);
+                }
+                Some(reply) => {
+                    self.stats.forwarded_gets.fetch_add(1, Ordering::Relaxed);
+                    match reply {
+                        PeerReply::Found(v) => {
+                            self.stats.remote_hits.fetch_add(1, Ordering::Relaxed);
+                            // Publish locally too: the local LRU absorbs
+                            // repeats without re-crossing the network.
+                            guard.complete(v);
+                            return Ok(v);
+                        }
+                        PeerReply::NotFound => write_back = true,
+                        PeerReply::Failed => {
+                            self.stats.peer_failures.fetch_add(1, Ordering::Relaxed);
+                            self.stats.degraded_fallbacks.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+            }
+        }
+        let rx = head.queue.submit(enc.ids.as_ref().clone());
+        let norm = rx.recv().map_err(|_| anyhow!("prediction worker gone"))?;
+        let value = head.bundle.stats.denormalize(norm);
+        guard.complete(value);
+        if write_back {
+            if let Some(peer) = owner {
+                if peer.put(enc.key, value) {
+                    self.stats.forwarded_puts.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
         Ok(value)
     }
 
@@ -243,11 +337,20 @@ impl Service {
 
         enum Slot<'a> {
             Done(Result<f64>),
-            Leader { guard: FlightGuard<'a>, miss_idx: usize },
+            /// Remote-owned miss with an owner probe in flight.
+            Probe {
+                guard: FlightGuard<'a>,
+                rx: std::sync::mpsc::Receiver<PeerReply>,
+                enc: CachedEncode,
+            },
+            Leader { guard: FlightGuard<'a>, miss_idx: usize, write_back_key: Option<u64> },
             Follower(std::sync::mpsc::Receiver<Option<f64>>),
         }
 
-        // Phase 1: encode + partition (hits resolve immediately).
+        // Phase 1: encode + partition (hits resolve immediately). For a
+        // miss whose key another node owns, the owner probe is *started*
+        // here — all of a batch's remote lookups overlap instead of
+        // paying one round trip each in sequence.
         let mut slots: Vec<Slot> = Vec::with_capacity(mlir_texts.len());
         let mut miss_ids: Vec<Vec<u32>> = Vec::new();
         for text in mlir_texts {
@@ -260,10 +363,78 @@ impl Service {
                     }
                     Lookup::Wait(rx) => slots.push(Slot::Follower(rx)),
                     Lookup::Miss(guard) => {
-                        slots.push(Slot::Leader { guard, miss_idx: miss_ids.len() });
-                        miss_ids.push(enc.ids.as_ref().clone());
+                        let owner = self.cluster.as_ref().and_then(|c| c.owner_peer(enc.key));
+                        match owner.and_then(|p| p.begin_get(enc.key)) {
+                            Some(rx) => {
+                                self.stats.forwarded_gets.fetch_add(1, Ordering::Relaxed);
+                                slots.push(Slot::Probe { guard, rx, enc });
+                            }
+                            None => {
+                                if owner.is_some() {
+                                    // Remote-owned but the owner is Down:
+                                    // degrade to plain local compute.
+                                    self.stats
+                                        .degraded_fallbacks
+                                        .fetch_add(1, Ordering::Relaxed);
+                                }
+                                slots.push(Slot::Leader {
+                                    guard,
+                                    miss_idx: miss_ids.len(),
+                                    write_back_key: None,
+                                });
+                                miss_ids.push(enc.ids.as_ref().clone());
+                            }
+                        }
                     }
                 },
+            }
+        }
+
+        // Phase 1.5: collect the overlapped owner probes. Remote hits
+        // complete their guards (waking same-batch followers of the same
+        // key); remote misses become leaders that will write back to the
+        // owner; failed probes degrade to plain local leaders. ONE
+        // deadline covers the whole collection phase — the probes run
+        // concurrently on the peer pool, so a slot resolved while an
+        // earlier one was being awaited costs nothing, and a slow peer
+        // bounds the entire batch at REMOTE_GET_TIMEOUT, not N× it.
+        let probe_deadline = Instant::now() + REMOTE_GET_TIMEOUT;
+        for slot in slots.iter_mut() {
+            if matches!(slot, Slot::Probe { .. }) {
+                let placeholder = Slot::Done(Err(anyhow!("slot already taken")));
+                let Slot::Probe { guard, rx, enc } = std::mem::replace(slot, placeholder)
+                else {
+                    unreachable!()
+                };
+                let remaining = probe_deadline.saturating_duration_since(Instant::now());
+                let reply = rx.recv_timeout(remaining).unwrap_or(PeerReply::Failed);
+                *slot = match reply {
+                    PeerReply::Found(v) => {
+                        self.stats.remote_hits.fetch_add(1, Ordering::Relaxed);
+                        guard.complete(v);
+                        Slot::Done(Ok(v))
+                    }
+                    PeerReply::NotFound => {
+                        let next = Slot::Leader {
+                            guard,
+                            miss_idx: miss_ids.len(),
+                            write_back_key: Some(enc.key),
+                        };
+                        miss_ids.push(enc.ids.as_ref().clone());
+                        next
+                    }
+                    PeerReply::Failed => {
+                        self.stats.peer_failures.fetch_add(1, Ordering::Relaxed);
+                        self.stats.degraded_fallbacks.fetch_add(1, Ordering::Relaxed);
+                        let next = Slot::Leader {
+                            guard,
+                            miss_idx: miss_ids.len(),
+                            write_back_key: None,
+                        };
+                        miss_ids.push(enc.ids.as_ref().clone());
+                        next
+                    }
+                };
             }
         }
 
@@ -271,11 +442,14 @@ impl Service {
         let rxs = head.queue.submit_many(miss_ids);
 
         // Phase 3: resolve leaders first — completing them unparks any
-        // followers of the same key later in this very batch.
+        // followers of the same key later in this very batch. Computed
+        // values for remote-owned keys are written back to their owner
+        // asynchronously (fire-and-forget into the peer pool).
         for slot in slots.iter_mut() {
             if matches!(slot, Slot::Leader { .. }) {
                 let placeholder = Slot::Done(Err(anyhow!("slot already taken")));
-                let Slot::Leader { guard, miss_idx } = std::mem::replace(slot, placeholder)
+                let Slot::Leader { guard, miss_idx, write_back_key } =
+                    std::mem::replace(slot, placeholder)
                 else {
                     unreachable!()
                 };
@@ -286,6 +460,15 @@ impl Service {
                 *slot = match res {
                     Ok(v) => {
                         guard.complete(v);
+                        if let Some(key) = write_back_key {
+                            if let Some(peer) =
+                                self.cluster.as_ref().and_then(|c| c.owner_peer(key))
+                            {
+                                if peer.put(key, v) {
+                                    self.stats.forwarded_puts.fetch_add(1, Ordering::Relaxed);
+                                }
+                            }
+                        }
                         Slot::Done(Ok(v))
                     }
                     // `guard` drops here → followers are failed too.
@@ -301,6 +484,7 @@ impl Service {
             .map(|slot| match slot {
                 Slot::Done(r) => r,
                 Slot::Follower(rx) => wait_for_leader(rx),
+                Slot::Probe { .. } => unreachable!("probes resolved in phase 1.5"),
                 Slot::Leader { .. } => unreachable!("leaders resolved in phase 3"),
             })
             .collect();
@@ -309,11 +493,13 @@ impl Service {
     }
 
     /// Full metrics for the wire protocol: service counters merged with
-    /// the sharded cache's single-flight/contention view.
+    /// the sharded cache's single-flight/contention view, plus the
+    /// per-peer cluster view when a cluster is attached.
     pub fn stats_json(&self) -> crate::json::Json {
         use crate::json::Json;
         let (chits, cmisses) = self.cache.stats();
-        self.stats
+        let mut j = self
+            .stats
             .to_json()
             .with("cache_entries", Json::num(self.cache.len() as f64))
             .with("cache_lookup_hits", Json::num(chits as f64))
@@ -321,16 +507,24 @@ impl Service {
             .with("coalesced_queries", Json::num(self.cache.coalesced() as f64))
             .with("cache_shard_contention", Json::num(self.cache.contended() as f64))
             .with("cache_shards", Json::num(self.cache.shard_count() as f64))
-            .with("frontend_memo_entries", Json::num(self.memo.len() as f64))
+            .with("frontend_memo_entries", Json::num(self.memo.len() as f64));
+        if let Some(cluster) = &self.cluster {
+            j = j.with("cluster", cluster.stats_json());
+        }
+        j
     }
 
-    /// Shut down worker pools (drains in-flight batches).
+    /// Shut down worker pools (drains in-flight batches) and, when
+    /// clustered, the peer pools.
     pub fn shutdown(&mut self) {
         for head in self.heads.values_mut() {
             head.queue.close();
             for w in head.workers.drain(..) {
                 let _ = w.join();
             }
+        }
+        if let Some(cluster) = &self.cluster {
+            cluster.shutdown();
         }
     }
 }

@@ -4,11 +4,25 @@
 //!           {"id": 10, "target": "regpressure", "mlir_batch": ["func.func @a...", "func.func @b..."]}
 //!           {"id": 8, "cmd": "stats"}
 //!           {"id": 9, "cmd": "ping"}
+//!           {"id": 11, "cmd": "cache_get", "key": "00f3a9..."}
+//!           {"id": 12, "cmd": "cache_put", "key": "00f3a9...", "value": 27.4}
 //! Response: {"id": 7, "ok": true, "prediction": 27.4, "us": 812}
 //!           {"id": 10, "ok": true, "predictions": [{"ok": true, "prediction": 27.4},
 //!                                                  {"ok": false, "error": "..."}], "us": 930}
 //!           {"id": 8, "ok": true, "stats": {...}}
+//!           {"id": 11, "ok": true, "found": true, "value": 27.4}   (or "found": false)
+//!           {"id": 12, "ok": true, "stored": true}
 //!           {"id": 7, "ok": false, "error": "..."}
+//!
+//! `cache_get` / `cache_put` are the cluster tier's peer-to-peer
+//! commands (`crate::cluster`): a node that does not own a cache key
+//! probes the owner with `cache_get` before computing, and writes a
+//! value it had to compute back to the owner with `cache_put`. Keys are
+//! 16-digit hex strings ([`cache::key_to_wire`]) because JSON numbers
+//! lose u64 precision. Both commands are pure local-cache operations —
+//! they never forward again and never invoke the model, so a `cache_get`
+//! storm from peers costs hash probes, not PJRT calls (and peer chains
+//! cannot recurse or deadlock).
 //!
 //! `mlir_batch` is the batch API: the whole array travels the
 //! parse→cache→batcher pipeline in one `Service::predict_many` call (all
@@ -32,6 +46,14 @@
 //! is an eventfd doorbell — no accept polling, no read timeouts, idle
 //! connections cost zero CPU. An autotuning fleet can hold hundreds of
 //! mostly-idle probe connections open for the price of their buffers.
+//!
+//! Within one wakeup, buffered request lines are answered by a
+//! round-robin scheduler with a per-connection line budget
+//! ([`FAIR_LINE_BUDGET`]): a client pipelining thousands of requests in
+//! one burst takes a budgeted turn like everyone else instead of
+//! monopolizing the IO thread until its backlog drains — interactive
+//! connections interleave at worst one budget's worth of lines behind
+//! the flood (`fairness_deferrals` in the stats counts requeued turns).
 //!
 //! Request *processing* (including a cache-miss model invocation) runs
 //! on the IO thread that owns the connection: cache hits and memo hits
@@ -235,6 +257,15 @@ const WBUF_PAUSE_BYTES: usize = 1 << 20;
 /// TCP backpressures the sender meanwhile).
 const RBUF_READ_BUDGET: usize = 256 << 10;
 
+/// Per-turn line budget for the round-robin answer phase: a connection
+/// with more buffered complete lines than this answers a budget's worth,
+/// goes to the back of the ready queue (counted in `fairness_deferrals`),
+/// and every other ready connection takes a turn before it continues. A
+/// flooding pipeliner still gets full throughput — its lines are all
+/// answered within the wakeup — but an interactive connection's request
+/// waits behind at most one budget per competitor, not a whole backlog.
+const FAIR_LINE_BUDGET: usize = 32;
+
 /// One nonblocking connection owned by an event loop.
 struct Conn {
     stream: TcpStream,
@@ -247,6 +278,14 @@ struct Conn {
     wpos: usize,
     /// Interest bits currently armed in epoll.
     interest: u32,
+    /// The peer sent EOF: answer what the kernel will still take, then
+    /// close at the end of the wakeup.
+    peer_closed: bool,
+    /// Set by [`respond_turn`]: complete lines remain in `rbuf` (the
+    /// turn stopped on its budget or on write backpressure, not because
+    /// the buffer ran dry). Lets `finish_conn` know whether a flush that
+    /// made room must resume answering — without rescanning `rbuf`.
+    deferred_lines: bool,
 }
 
 impl Conn {
@@ -297,12 +336,18 @@ fn io_loop(
     let mut slab: Vec<Option<Conn>> = Vec::new();
     let mut free: Vec<usize> = Vec::new();
     let mut events = Events::with_capacity(512);
+    let mut touched: Vec<usize> = Vec::new();
+    let mut ready: VecDeque<usize> = VecDeque::new();
 
     'outer: while !stop.is_triggered() {
         // Block until something is ready — no timeout, no sleep. Idle
         // connections park in the kernel for free.
         epoll.wait(&mut events, -1)?;
         service.stats.epoll_wakeups.fetch_add(1, Ordering::Relaxed);
+        // Phase 1 — IO: flush backpressured writes, drain readable
+        // sockets into per-connection buffers. No request is answered
+        // yet; connections that survived their IO are queued for the
+        // fairness scheduler.
         for ev in events.iter() {
             match ev.token {
                 TOK_DOORBELL => {
@@ -321,9 +366,34 @@ fn io_loop(
                 }
                 t => {
                     let idx = (t - TOK_CONN_BASE) as usize;
-                    conn_event(&service, &epoll, &mut slab, &mut free, idx, ev.events);
+                    if conn_io(&service, &epoll, &mut slab, &mut free, idx, ev.events) {
+                        touched.push(idx);
+                    }
                 }
             }
+        }
+        // Phase 2 — fairness: answer buffered lines round-robin, at most
+        // FAIR_LINE_BUDGET per connection per turn. A connection with
+        // more goes to the back of the queue so a flooding pipeliner
+        // cannot monopolize the thread.
+        ready.extend(touched.iter().copied());
+        while let Some(idx) = ready.pop_front() {
+            let Some(conn) = slab.get_mut(idx).and_then(Option::as_mut) else {
+                continue; // closed earlier this wakeup
+            };
+            match respond_turn(&service, conn, FAIR_LINE_BUDGET) {
+                Turn::Closed => close_conn(&service, &epoll, &mut slab, &mut free, idx),
+                Turn::MoreReady => {
+                    service.stats.fairness_deferrals.fetch_add(1, Ordering::Relaxed);
+                    ready.push_back(idx);
+                }
+                Turn::Drained => {}
+            }
+        }
+        // Phase 3 — flush what the kernel will take, close EOF'd
+        // connections, re-arm interest.
+        for idx in touched.drain(..) {
+            finish_conn(&service, &epoll, &mut slab, &mut free, idx);
         }
     }
 
@@ -385,7 +455,15 @@ fn register_conn(
         free.push(idx);
         return;
     }
-    slab[idx] = Some(Conn { stream, rbuf: Vec::new(), wbuf: Vec::new(), wpos: 0, interest });
+    slab[idx] = Some(Conn {
+        stream,
+        rbuf: Vec::new(),
+        wbuf: Vec::new(),
+        wpos: 0,
+        interest,
+        peer_closed: false,
+        deferred_lines: false,
+    });
     service.stats.active_connections.fetch_add(1, Ordering::Relaxed);
 }
 
@@ -403,24 +481,24 @@ fn close_conn(
     }
 }
 
-/// Service one connection's readiness event: flush backpressured
-/// writes, drain the socket, answer every completed line, re-arm.
-fn conn_event(
+/// Phase-1 IO for one connection's readiness event: flush backpressured
+/// writes, drain the socket into `rbuf`. Returns whether the connection
+/// is still registered (and should take fairness turns this wakeup).
+fn conn_io(
     service: &Arc<Service>,
     epoll: &Epoll,
     slab: &mut [Option<Conn>],
     free: &mut Vec<usize>,
     idx: usize,
     bits: u32,
-) {
+) -> bool {
     let Some(conn) = slab.get_mut(idx).and_then(Option::as_mut) else {
-        return; // stale event for a slot already closed this wakeup
+        return false; // stale event for a slot already closed this wakeup
     };
     let mut alive = true;
     if bits & EPOLLOUT != 0 {
         alive = conn.flush();
     }
-    let mut peer_done = false;
     if alive && bits & (EPOLLIN | EPOLLRDHUP | minipoll::EPOLLHUP | minipoll::EPOLLERR) != 0 {
         // Drain the socket up to the per-wakeup budget (level-triggered
         // epoll re-delivers whatever is left).
@@ -430,7 +508,9 @@ fn conn_event(
             let want = budget.min(chunk.len());
             match conn.stream.read(&mut chunk[..want]) {
                 Ok(0) => {
-                    peer_done = true;
+                    // A closing peer still gets its final responses if
+                    // the kernel will take them (phase 3 closes it).
+                    conn.peer_closed = true;
                     break;
                 }
                 Ok(n) => {
@@ -446,47 +526,40 @@ fn conn_event(
             }
         }
     }
-    // Answer buffered lines (also after a pure EPOLLOUT wakeup: a flush
-    // that made room resumes requests deferred by backpressure), then
-    // push what the kernel will take.
-    if alive {
-        alive = respond_to_complete_lines(service, conn);
-    }
-    if alive && conn.wants_write() {
-        alive = conn.flush();
-    }
-    // A closing peer gets its final responses if the kernel will take
-    // them; anything it won't take has nowhere to go.
-    if peer_done {
-        alive = false;
-    }
     if !alive {
         close_conn(service, epoll, slab, free, idx);
-        return;
+        return false;
     }
-    // Backpressure: past the pause threshold, stop reading (and thus
-    // stop generating responses) until the backlog drains.
-    let mut want = EPOLLRDHUP | if conn.wants_write() { EPOLLOUT } else { 0 };
-    if conn.wbuf.len() - conn.wpos <= WBUF_PAUSE_BYTES {
-        want |= EPOLLIN;
-    }
-    if want != conn.interest {
-        if epoll.modify(conn.stream.as_raw_fd(), want, TOK_CONN_BASE + idx as u64).is_ok() {
-            conn.interest = want;
-        } else {
-            close_conn(service, epoll, slab, free, idx);
-        }
-    }
+    true
 }
 
-/// Answer every `\n`-terminated request sitting in `rbuf`; leftover
-/// partial-line bytes stay buffered for the next segment. Stops early
-/// when the write buffer passes the backpressure threshold (the
-/// unanswered lines stay in `rbuf` and resume after a flush makes
-/// room). Returns false when the connection must close (oversized line).
-fn respond_to_complete_lines(service: &Service, conn: &mut Conn) -> bool {
+/// Result of one fairness turn over a connection's buffered lines.
+enum Turn {
+    /// No more answerable complete lines (none left, or write-paused —
+    /// EPOLLOUT will resume the latter).
+    Drained,
+    /// Budget exhausted with complete lines still buffered: requeue.
+    MoreReady,
+    /// Protocol violation (oversized line): close the connection.
+    Closed,
+}
+
+/// Answer up to `budget` `\n`-terminated requests sitting in `rbuf`;
+/// leftover partial-line bytes stay buffered for the next segment. Stops
+/// early when the write buffer passes the backpressure threshold (the
+/// unanswered lines stay in `rbuf` and resume after a flush makes room).
+fn respond_turn(service: &Service, conn: &mut Conn, budget: usize) -> Turn {
     let mut start = 0;
-    while conn.wbuf.len() - conn.wpos <= WBUF_PAUSE_BYTES {
+    let mut answered = 0;
+    // True when the loop stopped on budget/backpressure with bytes it
+    // never scanned; false when the newline search itself ran dry (so we
+    // KNOW no complete line remains without rescanning).
+    let mut stopped_early = false;
+    loop {
+        if answered >= budget || conn.wbuf.len() - conn.wpos > WBUF_PAUSE_BYTES {
+            stopped_early = true;
+            break;
+        }
         let Some(nl) = conn.rbuf[start..].iter().position(|&b| b == b'\n') else {
             break;
         };
@@ -502,14 +575,95 @@ fn respond_to_complete_lines(service: &Service, conn: &mut Conn) -> bool {
         // Vec<u8> writes are infallible.
         response.write_to(&mut conn.wbuf).expect("buffer write");
         conn.wbuf.push(b'\n');
+        answered += 1;
     }
     if start > 0 {
         conn.rbuf.drain(..start);
     }
-    // Only an oversized SINGLE line (no newline in sight) is a protocol
-    // violation; complete lines deferred by write backpressure are fine
-    // (their volume is bounded by the read budget + pause cycle).
-    conn.rbuf.len() <= MAX_LINE_BYTES || conn.rbuf.contains(&b'\n')
+    // Complete lines still buffered? Known false when the scan ran dry
+    // (a partial-line tail — e.g. a large request arriving over many
+    // wakeups — costs exactly one scan per wakeup, here); otherwise one
+    // scan of the unconsumed remainder, whose size the read budget +
+    // pause cycle bounds.
+    let more = stopped_early && conn.rbuf.contains(&b'\n');
+    conn.deferred_lines = more;
+    // Only an oversized SINGLE line (no complete line in sight) is a
+    // protocol violation; complete lines deferred by the budget or by
+    // write backpressure are fine.
+    if !more && conn.rbuf.len() > MAX_LINE_BYTES {
+        return Turn::Closed;
+    }
+    if more && conn.wbuf.len() - conn.wpos <= WBUF_PAUSE_BYTES {
+        Turn::MoreReady
+    } else {
+        Turn::Drained
+    }
+}
+
+/// Phase 3 for one touched connection: flush, answer anything a flush
+/// just un-paused, close EOF'd peers, re-arm epoll interest.
+fn finish_conn(
+    service: &Arc<Service>,
+    epoll: &Epoll,
+    slab: &mut [Option<Conn>],
+    free: &mut Vec<usize>,
+    idx: usize,
+) {
+    let mut close = false;
+    {
+        let Some(conn) = slab.get_mut(idx).and_then(Option::as_mut) else {
+            return; // closed during this wakeup
+        };
+        // Invariant on parking: a connection never sleeps holding
+        // answerable complete lines unless a wakeup is armed for it. If
+        // a flush drains the backlog below the pause threshold while
+        // complete lines remain (possible when the kernel's send buffer
+        // swallows everything), answer them now — otherwise EPOLLIN
+        // would stay silent until the client sent more bytes, stranding
+        // the buffered requests. `deferred_lines` (maintained by
+        // `respond_turn`, which phase 2 ran for every touched conn)
+        // makes the check free — no rbuf rescans here.
+        loop {
+            if conn.wants_write() && !conn.flush() {
+                close = true;
+                break;
+            }
+            let paused = conn.wbuf.len() - conn.wpos > WBUF_PAUSE_BYTES;
+            if paused || !conn.deferred_lines {
+                break; // paused ⇒ wants_write ⇒ EPOLLOUT re-arms below
+            }
+            if matches!(respond_turn(service, conn, FAIR_LINE_BUDGET), Turn::Closed) {
+                close = true;
+                break;
+            }
+        }
+        if !close {
+            if conn.peer_closed {
+                close = true;
+            } else {
+                // Backpressure: past the pause threshold, stop reading
+                // (and thus stop generating responses) until the
+                // backlog drains.
+                let mut want = EPOLLRDHUP | if conn.wants_write() { EPOLLOUT } else { 0 };
+                if conn.wbuf.len() - conn.wpos <= WBUF_PAUSE_BYTES {
+                    want |= EPOLLIN;
+                }
+                if want != conn.interest {
+                    if epoll
+                        .modify(conn.stream.as_raw_fd(), want, TOK_CONN_BASE + idx as u64)
+                        .is_ok()
+                    {
+                        conn.interest = want;
+                    } else {
+                        close = true;
+                    }
+                }
+            }
+        }
+    }
+    if close {
+        close_conn(service, epoll, slab, free, idx);
+    }
 }
 
 /// The legacy thread-per-connection front end, kept as the measured
@@ -627,6 +781,50 @@ pub fn handle_line(service: &Service, line: &str) -> Json {
                 .with("id", id.clone())
                 .with("ok", Json::Bool(true))
                 .with("stats", service.stats_json()),
+            // Cluster-tier peer commands: pure local-cache operations.
+            // They never forward to another node and never invoke the
+            // model, so peer chains cannot recurse and an IO thread
+            // answering them does only hash probes.
+            "cache_get" => {
+                let key = req
+                    .get("key")
+                    .and_then(Json::as_str)
+                    .and_then(super::cache::key_from_wire);
+                let Some(key) = key else {
+                    return fail("missing/invalid 'key' (16-digit hex u64)".into());
+                };
+                match service.cache.get(key) {
+                    Some(v) => Json::obj()
+                        .with("id", id.clone())
+                        .with("ok", Json::Bool(true))
+                        .with("found", Json::Bool(true))
+                        .with("value", Json::num(v)),
+                    None => Json::obj()
+                        .with("id", id.clone())
+                        .with("ok", Json::Bool(true))
+                        .with("found", Json::Bool(false)),
+                }
+            }
+            "cache_put" => {
+                let key = req
+                    .get("key")
+                    .and_then(Json::as_str)
+                    .and_then(super::cache::key_from_wire);
+                let Some(key) = key else {
+                    return fail("missing/invalid 'key' (16-digit hex u64)".into());
+                };
+                let Some(value) = req.get("value").and_then(Json::as_f64) else {
+                    return fail("missing/invalid 'value'".into());
+                };
+                if !value.is_finite() {
+                    return fail("'value' must be finite".into());
+                }
+                service.cache.put(key, value);
+                Json::obj()
+                    .with("id", id.clone())
+                    .with("ok", Json::Bool(true))
+                    .with("stored", Json::Bool(true))
+            }
             "targets" => Json::obj().with("id", id.clone()).with("ok", Json::Bool(true)).with(
                 "targets",
                 Json::Arr(
@@ -684,22 +882,85 @@ pub fn handle_line(service: &Service, line: &str) -> Json {
     }
 }
 
-/// Minimal blocking client for the line protocol (used by examples and
-/// the serving bench).
+/// Default connect timeout for [`Client::connect`]. Before this existed,
+/// a dead peer address could hang the caller on the OS connect default
+/// (minutes of SYN retries).
+const CLIENT_CONNECT_TIMEOUT: std::time::Duration = std::time::Duration::from_secs(5);
+
+/// io::ErrorKinds that mean "the connection died under us" — the cases
+/// [`Client::roundtrip`] absorbs with one reconnect-and-retry. Timeouts
+/// are deliberately NOT here: retrying a slow server could double-send.
+fn is_disconnect(kind: std::io::ErrorKind) -> bool {
+    use std::io::ErrorKind::*;
+    matches!(
+        kind,
+        BrokenPipe | ConnectionReset | ConnectionAborted | NotConnected | UnexpectedEof | WriteZero
+    )
+}
+
+/// Resolve `addr` and connect with a per-address timeout.
+fn connect_stream(addr: &str, timeout: std::time::Duration) -> Result<TcpStream> {
+    use std::net::ToSocketAddrs;
+    let mut last: Option<std::io::Error> = None;
+    for sa in addr.to_socket_addrs().with_context(|| format!("resolving {addr}"))? {
+        match TcpStream::connect_timeout(&sa, timeout) {
+            Ok(s) => return Ok(s),
+            Err(e) => last = Some(e),
+        }
+    }
+    match last {
+        Some(e) => Err(anyhow::Error::from(e).context(format!("connecting {addr}"))),
+        None => Err(anyhow!("no addresses resolved for {addr}")),
+    }
+}
+
+/// Minimal blocking client for the line protocol (used by examples, the
+/// serving bench, and the cluster tier's peer pool).
+///
+/// Hardened for pool use: connecting always carries a timeout, requests
+/// whose connection died underneath them (server restart, broken pipe)
+/// are retried ONCE over a fresh connection — every protocol request is
+/// an idempotent query, so a single retry is safe — and an optional IO
+/// timeout ([`Client::set_io_timeout`]) bounds how long any roundtrip
+/// may block on a hung server.
 pub struct Client {
+    addr: String,
     reader: BufReader<TcpStream>,
     writer: BufWriter<TcpStream>,
+    /// Bound used for the initial connect AND any retry reconnect.
+    connect_timeout: std::time::Duration,
+    io_timeout: Option<std::time::Duration>,
     next_id: u64,
 }
 
 impl Client {
     pub fn connect(addr: &str) -> Result<Client> {
-        let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+        Client::connect_timeout(addr, CLIENT_CONNECT_TIMEOUT)
+    }
+
+    /// Connect with an explicit bound (the peer pool uses a short one —
+    /// a cluster node that cannot accept promptly is better served by
+    /// the degraded local path).
+    pub fn connect_timeout(addr: &str, timeout: std::time::Duration) -> Result<Client> {
+        let stream = connect_stream(addr, timeout)?;
         Ok(Client {
+            addr: addr.to_string(),
             reader: BufReader::new(stream.try_clone()?),
             writer: BufWriter::new(stream),
+            connect_timeout: timeout,
+            io_timeout: None,
             next_id: 1,
         })
+    }
+
+    /// Bound every subsequent socket read/write (`None` = block forever,
+    /// the default). Survives reconnects.
+    pub fn set_io_timeout(&mut self, timeout: Option<std::time::Duration>) -> Result<()> {
+        let s = self.writer.get_ref();
+        s.set_read_timeout(timeout)?;
+        s.set_write_timeout(timeout)?;
+        self.io_timeout = timeout;
+        Ok(())
     }
 
     fn next_id(&mut self) -> u64 {
@@ -708,13 +969,46 @@ impl Client {
         id
     }
 
-    fn roundtrip(&mut self, req: Json) -> Result<Json> {
-        req.write_to(&mut self.writer)?;
+    fn reconnect(&mut self) -> Result<()> {
+        let stream = connect_stream(&self.addr, self.connect_timeout)?;
+        stream.set_read_timeout(self.io_timeout)?;
+        stream.set_write_timeout(self.io_timeout)?;
+        self.reader = BufReader::new(stream.try_clone()?);
+        self.writer = BufWriter::new(stream);
+        Ok(())
+    }
+
+    /// One request/response over the current connection, at the io
+    /// layer: the error kind is what decides retryability.
+    fn wire_roundtrip(&mut self, line: &str) -> std::io::Result<String> {
+        self.writer.write_all(line.as_bytes())?;
         self.writer.write_all(b"\n")?;
         self.writer.flush()?;
-        let mut line = String::new();
-        self.reader.read_line(&mut line)?;
-        let resp = parse(&line)?;
+        let mut resp = String::new();
+        if self.reader.read_line(&mut resp)? == 0 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "server closed the connection",
+            ));
+        }
+        Ok(resp)
+    }
+
+    fn roundtrip(&mut self, req: Json) -> Result<Json> {
+        let line = req.to_string();
+        let resp_line = match self.wire_roundtrip(&line) {
+            Ok(l) => l,
+            Err(e) if is_disconnect(e.kind()) => {
+                // The connection died mid-request (e.g. the server
+                // restarted between requests): reconnect and retry once.
+                self.reconnect()
+                    .with_context(|| format!("reconnecting {} after: {e}", self.addr))?;
+                self.wire_roundtrip(&line)
+                    .with_context(|| format!("retry after reconnecting {}", self.addr))?
+            }
+            Err(e) => return Err(e.into()),
+        };
+        let resp = parse(&resp_line)?;
         if resp.get("ok").and_then(Json::as_bool) != Some(true) {
             anyhow::bail!(
                 "server error: {}",
@@ -770,6 +1064,35 @@ impl Client {
             .with("id", Json::num(id as f64))
             .with("cmd", Json::str("stats"));
         Ok(self.roundtrip(req)?.req("stats")?.clone())
+    }
+
+    /// Probe the remote node's prediction cache (`cache_get`):
+    /// `Ok(Some(v))` when the remote cache holds the key.
+    pub fn cache_get(&mut self, key: u64) -> Result<Option<f64>> {
+        let id = self.next_id();
+        let req = Json::obj()
+            .with("id", Json::num(id as f64))
+            .with("cmd", Json::str("cache_get"))
+            .with("key", Json::str(super::cache::key_to_wire(key)));
+        let resp = self.roundtrip(req)?;
+        if resp.get("found").and_then(Json::as_bool) == Some(true) {
+            Ok(Some(resp.req_f64("value")?))
+        } else {
+            Ok(None)
+        }
+    }
+
+    /// Write a computed value into the remote node's prediction cache
+    /// (`cache_put`).
+    pub fn cache_put(&mut self, key: u64, value: f64) -> Result<()> {
+        let id = self.next_id();
+        let req = Json::obj()
+            .with("id", Json::num(id as f64))
+            .with("cmd", Json::str("cache_put"))
+            .with("key", Json::str(super::cache::key_to_wire(key)))
+            .with("value", Json::num(value));
+        self.roundtrip(req)?;
+        Ok(())
     }
 }
 
@@ -852,6 +1175,17 @@ mod tests {
         assert!(inner.get("connections_accepted").is_some());
         assert!(inner.get("epoll_wakeups").is_some());
         assert!(inner.get("exec_by_batch").is_some());
+        // ...and the cluster-tier + fairness counters, pinned so the
+        // JSON shape peers and dashboards rely on cannot silently drop
+        // them (they are present, zero, even when no cluster is
+        // configured).
+        assert!(inner.get("forwarded_gets").is_some());
+        assert!(inner.get("remote_hits").is_some());
+        assert!(inner.get("forwarded_puts").is_some());
+        assert!(inner.get("peer_failures").is_some());
+        assert!(inner.get("degraded_fallbacks").is_some());
+        assert!(inner.get("fairness_deferrals").is_some());
+        assert!(inner.get("cluster").is_none(), "unclustered service must omit the peer view");
         let targets = handle_line(&svc, r#"{"id": 3, "cmd": "targets"}"#);
         assert_eq!(targets.req_arr("targets").unwrap().len(), 1);
         let bad = handle_line(&svc, "{nope");
@@ -1058,5 +1392,156 @@ mod tests {
         let t0 = Instant::now();
         serve_on(svc, listener, stop).unwrap();
         assert!(t0.elapsed() < std::time::Duration::from_secs(2));
+    }
+
+    /// The cluster tier's peer commands: hex-keyed get/put straight
+    /// against the local prediction cache, plus the malformed shapes.
+    #[test]
+    fn cache_get_put_commands() {
+        let Some(svc) = service() else { return };
+        let key = crate::coordinator::cache::cache_key("fc_ops", &[1, 2, 3]);
+        let wire = crate::coordinator::cache::key_to_wire(key);
+        // Miss first.
+        let miss =
+            handle_line(&svc, &format!(r#"{{"id": 1, "cmd": "cache_get", "key": "{wire}"}}"#));
+        assert_eq!(miss.get("ok").and_then(Json::as_bool), Some(true));
+        assert_eq!(miss.get("found").and_then(Json::as_bool), Some(false));
+        // Put, then hit.
+        let put = handle_line(
+            &svc,
+            &format!(r#"{{"id": 2, "cmd": "cache_put", "key": "{wire}", "value": 12.5}}"#),
+        );
+        assert_eq!(put.get("stored").and_then(Json::as_bool), Some(true));
+        let hit =
+            handle_line(&svc, &format!(r#"{{"id": 3, "cmd": "cache_get", "key": "{wire}"}}"#));
+        assert_eq!(hit.get("found").and_then(Json::as_bool), Some(true));
+        assert_eq!(hit.req_f64("value").unwrap(), 12.5);
+        // Malformed keys and values fail cleanly.
+        for bad in [
+            r#"{"id": 4, "cmd": "cache_get"}"#,
+            r#"{"id": 5, "cmd": "cache_get", "key": "zzz"}"#,
+            r#"{"id": 6, "cmd": "cache_put", "key": "00ff"}"#,
+        ] {
+            let resp = handle_line(&svc, bad);
+            assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false), "accepted: {bad}");
+        }
+    }
+
+    /// Client cache helpers over the wire: a value put through one
+    /// client is visible to another — the exact path peer write-backs
+    /// and remote probes ride.
+    #[test]
+    fn client_cache_roundtrip_over_tcp() {
+        let Some(svc) = service() else { return };
+        let (addr, stop, server) = spawn_server(svc.clone(), 1);
+        let mut a = Client::connect(&addr).unwrap();
+        let mut b = Client::connect(&addr).unwrap();
+        let key = crate::coordinator::cache::cache_key("fc_ops", &[9, 9]);
+        assert_eq!(a.cache_get(key).unwrap(), None);
+        a.cache_put(key, 3.25).unwrap();
+        assert_eq!(b.cache_get(key).unwrap(), Some(3.25));
+        stop.trigger();
+        let _ = server.join();
+    }
+
+    /// Client hardening (the peer pool's safety net): a server that
+    /// accepts and immediately closes the first connection must cost one
+    /// transparent reconnect, not an error.
+    #[test]
+    fn client_retries_once_over_a_fresh_connection() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = std::thread::spawn(move || {
+            // First connection: accept, then slam the door.
+            let (first, _) = listener.accept().unwrap();
+            drop(first);
+            // Second connection (the retry): answer one ping properly.
+            let (second, _) = listener.accept().unwrap();
+            let mut writer = second.try_clone().unwrap();
+            let mut reader = BufReader::new(second);
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            let req = parse(&line).unwrap();
+            assert_eq!(req.get("cmd").and_then(Json::as_str), Some("ping"));
+            let resp = Json::obj()
+                .with("id", req.get("id").cloned().unwrap_or(Json::Null))
+                .with("ok", Json::Bool(true))
+                .with("pong", Json::Bool(true));
+            writer.write_all(resp.to_string().as_bytes()).unwrap();
+            writer.write_all(b"\n").unwrap();
+        });
+        let mut client = Client::connect(&addr).unwrap();
+        // Let the server-side drop (and any RST) land before writing.
+        std::thread::sleep(std::time::Duration::from_millis(100));
+        let id = client.next_id();
+        let resp = client
+            .roundtrip(
+                Json::obj()
+                    .with("id", Json::num(id as f64))
+                    .with("cmd", Json::str("ping")),
+            )
+            .expect("roundtrip must survive the dead first connection");
+        assert_eq!(resp.get("pong").and_then(Json::as_bool), Some(true));
+        server.join().unwrap();
+    }
+
+    /// Connecting to a dead address returns promptly (connect timeout /
+    /// refused) instead of hanging on the OS default.
+    #[test]
+    fn connect_timeout_does_not_hang() {
+        let dead = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            let addr = l.local_addr().unwrap().to_string();
+            drop(l);
+            addr
+        };
+        let t0 = Instant::now();
+        let res = Client::connect_timeout(&dead, std::time::Duration::from_millis(300));
+        assert!(res.is_err());
+        assert!(t0.elapsed() < std::time::Duration::from_secs(5), "connect hung");
+    }
+
+    /// Fairness regression: one connection pipelining thousands of
+    /// requests in a single burst must not monopolize the IO thread. An
+    /// interactive connection keeps getting answers while the flood is
+    /// being worked through, the flooder still receives every response
+    /// in order, and the budget scheduler visibly engaged
+    /// (`fairness_deferrals` > 0 — a 4096-line burst is two orders of
+    /// magnitude over FAIR_LINE_BUDGET, so at least one wakeup must
+    /// have requeued it).
+    #[test]
+    fn flooding_connection_does_not_starve_interactive_one() {
+        let Some(svc) = service() else { return };
+        let (addr, stop, server) = spawn_server(svc.clone(), 1);
+        let flood_n: usize = 4096;
+        let mut flood = TcpStream::connect(&addr).unwrap();
+        flood.set_nodelay(true).unwrap();
+        let mut interactive = Client::connect(&addr).unwrap();
+        // One giant pipelined burst...
+        let mut burst = String::with_capacity(flood_n * 32);
+        for i in 0..flood_n {
+            burst.push_str(&format!("{{\"id\": {i}, \"cmd\": \"ping\"}}\n"));
+        }
+        flood.write_all(burst.as_bytes()).unwrap();
+        flood.flush().unwrap();
+        // ...while the interactive connection keeps conversing.
+        for _ in 0..10 {
+            let stats = interactive.stats().unwrap();
+            assert!(stats.req_f64("requests").unwrap() >= 0.0);
+        }
+        // The flooder gets all its responses, in order.
+        let mut reader = BufReader::new(&flood);
+        for i in 0..flood_n {
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            let resp = parse(&line).unwrap();
+            assert_eq!(resp.req_f64("id").unwrap() as usize, i, "flood responses reordered");
+        }
+        assert!(
+            svc.stats.fairness_deferrals.load(Ordering::Relaxed) > 0,
+            "the line budget never engaged on a {flood_n}-line burst"
+        );
+        stop.trigger();
+        let _ = server.join();
     }
 }

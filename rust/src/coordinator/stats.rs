@@ -14,9 +14,21 @@
 //! (event-loop `epoll_wait` returns — idle time costs zero of these),
 //! and `exec_by_batch` (flush count per compiled batch size, showing the
 //! batch-size-aware ladder picking small executables for small flushes).
+//! Cluster-tier counters added with the consistent-hash remote cache
+//! shards: `forwarded_gets` (remote-owner probes attempted),
+//! `remote_hits` (probes the owner answered from its cache),
+//! `forwarded_puts` (async write-backs enqueued to owners),
+//! `peer_failures` (probes that errored or timed out), and
+//! `degraded_fallbacks` (remote-owned keys served by local compute
+//! because their owner was Down or failing — degraded, never an error).
+//! `fairness_deferrals` counts event-loop round-robin turns where a
+//! connection hit its per-wakeup line budget and was requeued — nonzero
+//! means the fairness scheduler is actively stopping a pipelining client
+//! from monopolizing an IO thread.
 //! Cache-side counters (shard contention, coalesced single-flight
 //! queries) live on `PredictionCache`; `Service::stats_json` merges both
-//! views for the wire protocol.
+//! views (plus the per-peer `cluster` object when clustered) for the
+//! wire protocol.
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -50,6 +62,20 @@ pub struct ServiceStats {
     /// `epoll_wait` returns across all IO threads. An idle server adds
     /// zero — the whole point of the readiness-driven front end.
     pub epoll_wakeups: AtomicU64,
+    /// Round-robin turns where a connection exhausted its per-wakeup
+    /// line budget and went to the back of the ready queue.
+    pub fairness_deferrals: AtomicU64,
+    /// Remote-owner cache probes attempted (cluster tier).
+    pub forwarded_gets: AtomicU64,
+    /// Remote probes the owner answered from its cache.
+    pub remote_hits: AtomicU64,
+    /// Asynchronous write-backs enqueued to owner nodes.
+    pub forwarded_puts: AtomicU64,
+    /// Remote probes that errored or timed out.
+    pub peer_failures: AtomicU64,
+    /// Remote-owned keys served by local compute because the owner was
+    /// Down or failing (the cluster's no-error degradation path).
+    pub degraded_fallbacks: AtomicU64,
     pub errors: AtomicU64,
     /// Executed flushes per compiled batch size: `exec_by_batch[b]` is
     /// how many chunks ran on the `predict_b{b}` executable. One lock
@@ -155,6 +181,27 @@ impl ServiceStats {
                 "epoll_wakeups",
                 Json::num(self.epoll_wakeups.load(Ordering::Relaxed) as f64),
             )
+            .with(
+                "fairness_deferrals",
+                Json::num(self.fairness_deferrals.load(Ordering::Relaxed) as f64),
+            )
+            .with(
+                "forwarded_gets",
+                Json::num(self.forwarded_gets.load(Ordering::Relaxed) as f64),
+            )
+            .with("remote_hits", Json::num(self.remote_hits.load(Ordering::Relaxed) as f64))
+            .with(
+                "forwarded_puts",
+                Json::num(self.forwarded_puts.load(Ordering::Relaxed) as f64),
+            )
+            .with(
+                "peer_failures",
+                Json::num(self.peer_failures.load(Ordering::Relaxed) as f64),
+            )
+            .with(
+                "degraded_fallbacks",
+                Json::num(self.degraded_fallbacks.load(Ordering::Relaxed) as f64),
+            )
             .with("exec_by_batch", {
                 let mut by_batch = Json::obj();
                 for (b, count) in self.exec_by_batch() {
@@ -217,6 +264,12 @@ mod tests {
         s.active_connections.fetch_add(4, Ordering::Relaxed);
         s.connections_accepted.fetch_add(9, Ordering::Relaxed);
         s.epoll_wakeups.fetch_add(17, Ordering::Relaxed);
+        s.forwarded_gets.fetch_add(6, Ordering::Relaxed);
+        s.remote_hits.fetch_add(5, Ordering::Relaxed);
+        s.forwarded_puts.fetch_add(1, Ordering::Relaxed);
+        s.peer_failures.fetch_add(2, Ordering::Relaxed);
+        s.degraded_fallbacks.fetch_add(2, Ordering::Relaxed);
+        s.fairness_deferrals.fetch_add(3, Ordering::Relaxed);
         let j = s.to_json();
         assert_eq!(j.req_f64("requests").unwrap(), 3.0);
         assert_eq!(j.req_f64("batch_fill_ratio").unwrap(), 0.0);
@@ -226,6 +279,12 @@ mod tests {
         assert_eq!(j.req_f64("active_connections").unwrap(), 4.0);
         assert_eq!(j.req_f64("connections_accepted").unwrap(), 9.0);
         assert_eq!(j.req_f64("epoll_wakeups").unwrap(), 17.0);
+        assert_eq!(j.req_f64("forwarded_gets").unwrap(), 6.0);
+        assert_eq!(j.req_f64("remote_hits").unwrap(), 5.0);
+        assert_eq!(j.req_f64("forwarded_puts").unwrap(), 1.0);
+        assert_eq!(j.req_f64("peer_failures").unwrap(), 2.0);
+        assert_eq!(j.req_f64("degraded_fallbacks").unwrap(), 2.0);
+        assert_eq!(j.req_f64("fairness_deferrals").unwrap(), 3.0);
         assert!(j.get("exec_by_batch").is_some());
     }
 

@@ -37,7 +37,21 @@
 //!   text-level encode memo so duplicate autotuning probes skip
 //!   parse/tokenize/encode entirely (one FxHash + one shard lookup), and
 //!   FxHash on every vocab/cache/memo probe — instrumented via the
-//!   `frontend_memo_hits` / `encode_ns` counters. Python is never on the
+//!   `frontend_memo_hits` / `encode_ns` counters. Above the single node
+//!   sits the cluster tier (`cluster/`): a consistent-hash ring (FxHash,
+//!   64 virtual nodes per peer, static `--peers` membership) assigns
+//!   every cache key an owner node so a fleet of coordinators shares one
+//!   logical prediction cache — remote-owned misses probe the owner's
+//!   cache over new `cache_get`/`cache_put` line-protocol commands
+//!   (executed by per-peer worker pools with health states, reconnect
+//!   and backoff — never by an IO thread) and write computed values back
+//!   to the owner asynchronously, so a duplicated autotuning probe is
+//!   computed once per cluster; a Down peer degrades its keys to
+//!   local-compute-plus-local-cache (`degraded_fallbacks`), never an
+//!   error. The event loop itself schedules buffered request lines
+//!   round-robin with a per-wakeup per-connection budget, so one
+//!   pipelining client cannot monopolize an IO thread
+//!   (`fairness_deferrals`). Python is never on the
 //!   request path.
 //! - **L2 (JAX, build-time)** — the FC / LSTM / Conv1D regressors in
 //!   `python/compile/model.py`, AOT-lowered to HLO text.
@@ -45,6 +59,7 @@
 //!   `python/compile/kernels/`, verified against a pure-jnp oracle.
 
 pub mod bundle;
+pub mod cluster;
 pub mod coordinator;
 pub mod dataset;
 pub mod graphgen;

@@ -80,7 +80,8 @@ fn run(args: &[String]) -> Result<()> {
                  --steps N --out bundle_dir [--artifacts dir] [--out-metrics m.json]\n  \
                  eval --bundle dir --test f [--out metrics.json]\n  \
                  serve --bundles d1,d2,... --addr 127.0.0.1:7071 [--pallas true] [--io-threads 1]\n    \
-                 [--workers-per-head 1] [--max-batch 32] [--max-wait-us 2000]\n  \
+                 [--workers-per-head 1] [--max-batch 32] [--max-wait-us 2000]\n    \
+                 [--peers host:port,... --node-id host:port [--vnodes 64]]\n  \
                  predict --bundle dir --file graph.mlir\n  \
                  ground-truth --file graph.mlir\n  \
                  info [--artifacts dir]"
@@ -300,8 +301,32 @@ fn serve(flags: &HashMap<String, String>) -> Result<()> {
         workers_per_head: flag(flags, "workers-per-head", "1").parse()?,
     };
     let config = server::ServerConfig { io_threads: flag(flags, "io-threads", "1").parse()? };
-    let service = Arc::new(Service::start_with(manifest, bundles, policy, opts)?);
     let addr = flag(flags, "addr", "127.0.0.1:7071");
+    let mut service = Service::start_with(manifest, bundles, policy, opts)?;
+    // Cluster tier: `--peers` lists every node's serving address (or
+    // just the other nodes'), `--node-id` this node's own. All nodes
+    // must agree on the membership set — the consistent-hash ring is
+    // derived from it deterministically on each node.
+    if let Some(peers) = flags.get("peers") {
+        let node_id = flags.get("node-id").ok_or_else(|| {
+            anyhow!("--peers requires --node-id (this node's address as peers see it)")
+        })?;
+        let mut cfg = mlir_cost::cluster::ClusterConfig::new(peers, node_id)?;
+        if let Some(v) = flags.get("vnodes") {
+            cfg.vnodes = v.parse()?;
+        }
+        let cluster = mlir_cost::cluster::Cluster::new(&cfg)?;
+        eprintln!(
+            "[serve] cluster tier: {} node(s), this node is {} ({} vnodes/node)",
+            cluster.ring().len(),
+            cfg.self_id,
+            cfg.vnodes
+        );
+        service.set_cluster(Arc::new(cluster));
+    } else if flags.contains_key("node-id") {
+        bail!("--node-id without --peers (single-node serving needs neither)");
+    }
+    let service = Arc::new(service);
     // `Stop::trigger()` is the shutdown path; the CLI serves until killed.
     let stop = server::Stop::new();
     server::serve(service, addr, stop, config)
