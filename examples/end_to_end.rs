@@ -109,7 +109,17 @@ fn main() -> Result<()> {
     };
     let out = Path::new("runs/e2e_bundle");
     bundle.save(out, &manifest)?;
-    let sample = &test.samples[0];
+    // The router serves only queries its variant's max_len covers (no
+    // silent truncation), so demo with a sample that fits.
+    let sample = test
+        .samples
+        .iter()
+        .find(|s| {
+            mlir_cost::mlir::parse_function(&s.mlir_text)
+                .map(|f| mlir_cost::tokenizer::token_count(&f, scheme) <= mm.max_len)
+                .unwrap_or(false)
+        })
+        .unwrap_or(&test.samples[0]);
     let service = std::sync::Arc::new(mlir_cost::coordinator::Service::start(
         std::sync::Arc::new(manifest),
         vec![Bundle::load(out, &Manifest::load(Path::new("artifacts"))?)?],

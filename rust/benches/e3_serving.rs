@@ -15,7 +15,7 @@ use mlir_cost::json::Json;
 use mlir_cost::mlir::print_function;
 use mlir_cost::runtime::Manifest;
 use mlir_cost::sim::Target;
-use mlir_cost::tokenizer::{Scheme, Vocab};
+use mlir_cost::tokenizer::{token_count, Scheme, Vocab};
 use std::net::TcpListener;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -48,19 +48,30 @@ fn make_service(max_batch: usize, max_wait_us: u64) -> Arc<Service> {
     )
 }
 
+/// The served bundle's ops-only `max_len` (conv_ops in the artifact
+/// manifest). The router rejects over-long queries cleanly instead of
+/// truncating them, so every corpus text must fit.
+const SERVE_MAX_LEN: usize = 128;
+
 /// `n` distinct graphs with seeds offset by `base` so scenarios never
-/// share cache keys.
+/// share cache keys; seeds whose graph exceeds [`SERVE_MAX_LEN`]
+/// ops-only tokens are skipped (the Random family can run long).
 fn corpus_at(n: usize, base: u64) -> Vec<String> {
-    (0..n)
-        .map(|i| {
-            let spec = GraphSpec {
-                family: Family::ALL[i % 7],
-                structure_seed: base + i as u64,
-                shape_seed: base + 1000 + i as u64,
-            };
-            print_function(&generate(&spec).unwrap())
-        })
-        .collect()
+    let mut texts = Vec::with_capacity(n);
+    let mut attempt = 0u64;
+    while texts.len() < n {
+        let spec = GraphSpec {
+            family: Family::ALL[(attempt % 7) as usize],
+            structure_seed: base + attempt,
+            shape_seed: base + 1000 + attempt,
+        };
+        attempt += 1;
+        let f = generate(&spec).unwrap();
+        if token_count(&f, Scheme::OpsOnly) <= SERVE_MAX_LEN {
+            texts.push(print_function(&f));
+        }
+    }
+    texts
 }
 
 fn throughput(svc: &Arc<Service>, texts: &[String], threads: usize) -> (f64, f64) {

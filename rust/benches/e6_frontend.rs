@@ -93,12 +93,14 @@ fn main() {
         let f = parse_function(t).expect("parse");
         let (ids, _) = encode_function(&f, scheme, &vocab, &table, MAX_LEN);
         let key = cache_key(MODEL, &ids);
-        let tk = FrontendMemo::text_key(TARGET, MODEL, t);
+        // Variant dimension = the model name here: a single-variant
+        // service registers each bundle under its model's name.
+        let tk = FrontendMemo::text_key(TARGET, MODEL, MODEL, t);
         memo.insert(tk, CachedEncode { ids: Arc::new(ids), key });
     }
     let s_memo = benchkit::bench("memo hit (hash + shard lookup)", 3, 30, || {
         for t in &texts {
-            let tk = FrontendMemo::text_key(TARGET, MODEL, t);
+            let tk = FrontendMemo::text_key(TARGET, MODEL, MODEL, t);
             let enc = memo.get(tk).expect("warm memo");
             std::hint::black_box(enc.key);
         }

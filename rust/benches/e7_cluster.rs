@@ -21,7 +21,7 @@ use mlir_cost::json::Json;
 use mlir_cost::mlir::print_function;
 use mlir_cost::runtime::Manifest;
 use mlir_cost::sim::Target;
-use mlir_cost::tokenizer::{Scheme, Vocab};
+use mlir_cost::tokenizer::{token_count, Scheme, Vocab};
 use std::net::TcpListener;
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
@@ -34,17 +34,25 @@ fn repo_root() -> std::path::PathBuf {
     std::path::Path::new(env!("CARGO_MANIFEST_DIR")).parent().unwrap().to_path_buf()
 }
 
+/// `n` distinct graphs; seeds whose graph exceeds the served bundle's
+/// ops-only `max_len` (conv_ops: 128) are skipped — the router rejects
+/// over-long queries cleanly instead of truncating them.
 fn corpus_at(n: usize, base: u64) -> Vec<String> {
-    (0..n)
-        .map(|i| {
-            let spec = GraphSpec {
-                family: Family::ALL[i % 7],
-                structure_seed: base + i as u64,
-                shape_seed: base + 1000 + i as u64,
-            };
-            print_function(&generate(&spec).unwrap())
-        })
-        .collect()
+    let mut texts = Vec::with_capacity(n);
+    let mut attempt = 0u64;
+    while texts.len() < n {
+        let spec = GraphSpec {
+            family: Family::ALL[(attempt % 7) as usize],
+            structure_seed: base + attempt,
+            shape_seed: base + 1000 + attempt,
+        };
+        attempt += 1;
+        let f = generate(&spec).unwrap();
+        if token_count(&f, Scheme::OpsOnly) <= 128 {
+            texts.push(print_function(&f));
+        }
+    }
+    texts
 }
 
 struct BenchNode {

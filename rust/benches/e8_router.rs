@@ -1,0 +1,155 @@
+//! E8 — routing tier: what multi-variant serving buys on mixed-length
+//! traffic, and what the router itself costs.
+//!
+//! Two services over the same corpus (short probes that fit a
+//! `max_len=128` model + long probes that need `max_len=512`):
+//!
+//!   single  — one conv_full (max_len 512) variant serves everything:
+//!             every short probe pays the big model
+//!   routed  — fc_ops + lstm_ops (128) and conv_full (512) behind the
+//!             router: short probes pay the small FC model, long probes
+//!             the conv stack, by token length
+//!
+//! Phases per service: cold sweep (every query is a model invocation),
+//! then a warm duplicate-heavy sweep (memo + cache hits — measures the
+//! router's per-query overhead: one length-memo probe + one choose()).
+//! Results (qps, per-variant routing shares) print as a table and are
+//! recorded to `BENCH_router.json` at the repo root. Artifact-gated:
+//! without `artifacts/` a placeholder is kept.
+
+use mlir_cost::benchkit;
+use mlir_cost::bundle::Bundle;
+use mlir_cost::coordinator::batcher::BatchPolicy;
+use mlir_cost::coordinator::router::VariantSpec;
+use mlir_cost::coordinator::{ServeOptions, Service};
+use mlir_cost::dataset::TargetStats;
+use mlir_cost::json::Json;
+use mlir_cost::mlir::{print_function, Attrs, DType, FuncBuilder, Type, XpuOp};
+use mlir_cost::runtime::Manifest;
+use mlir_cost::sim::Target;
+use mlir_cost::tokenizer::{Scheme, Vocab};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+fn repo_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).parent().unwrap().to_path_buf()
+}
+
+fn bundle(manifest: &Manifest, model: &str) -> Bundle {
+    let vocab = Vocab::build(vec![vec!["xpu.relu".to_string()]].iter(), 1);
+    let stats = TargetStats { mean: 20.0, std: 5.0, min: 4.0, max: 60.0 };
+    Bundle::untrained(manifest, model, Target::RegPressure, Scheme::OpsOnly, vocab, stats)
+        .expect("bundle")
+}
+
+/// Relu chain: `n_ops + 5` ops-only tokens; `tag` splits cache keys.
+fn chain_text(n_ops: usize, tag: i64) -> String {
+    let mut b = FuncBuilder::new("chain");
+    let mut v = b.arg(Type::tensor(vec![2 + tag, 8], DType::F32));
+    for _ in 0..n_ops {
+        v = b.xpu(XpuOp::Relu, &[v], Attrs::new()).unwrap();
+    }
+    print_function(&b.ret(&[v]).unwrap())
+}
+
+/// 3 short probes for every long one — the autotuning mix routing is
+/// built for. 32 distinct texts, repeated `dup` times each.
+fn corpus(dup: usize) -> Vec<String> {
+    let mut texts = Vec::new();
+    for i in 0..32i64 {
+        let n_ops = if i % 4 == 3 { 150 + i as usize } else { 10 + i as usize };
+        texts.push(chain_text(n_ops, i));
+    }
+    let distinct = texts.clone();
+    for _ in 1..dup {
+        texts.extend(distinct.iter().cloned());
+    }
+    texts
+}
+
+fn sweep(svc: &Arc<Service>, texts: &[String], label: &str) -> f64 {
+    let refs: Vec<&str> = texts.iter().map(String::as_str).collect();
+    let t0 = std::time::Instant::now();
+    let out = svc.predict_many(Target::RegPressure, &refs);
+    let dt = t0.elapsed().as_secs_f64();
+    let ok = out.iter().filter(|r| r.is_ok()).count();
+    assert_eq!(ok, texts.len(), "{label}: {ok}/{} queries failed", texts.len());
+    texts.len() as f64 / dt
+}
+
+fn main() {
+    benchkit::section("E8 / routing tier: single variant vs routed family");
+    let adir = repo_root().join("artifacts");
+    if !adir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built (placeholder BENCH_router.json kept)");
+        return;
+    }
+    let manifest = Arc::new(Manifest::load(&adir).expect("manifest"));
+    let policy = BatchPolicy::default();
+
+    let single = Arc::new(
+        Service::start_variants(
+            manifest.clone(),
+            vec![VariantSpec { name: "conv_full".into(), bundle: bundle(&manifest, "conv_full") }],
+            policy.clone(),
+            ServeOptions::default(),
+        )
+        .expect("single-variant service"),
+    );
+    let routed = Arc::new(
+        Service::start_variants(
+            manifest.clone(),
+            vec![
+                VariantSpec { name: "fc_ops".into(), bundle: bundle(&manifest, "fc_ops") },
+                VariantSpec { name: "lstm_ops".into(), bundle: bundle(&manifest, "lstm_ops") },
+                VariantSpec { name: "conv_full".into(), bundle: bundle(&manifest, "conv_full") },
+            ],
+            policy,
+            ServeOptions::default(),
+        )
+        .expect("routed service"),
+    );
+
+    let cold = corpus(1);
+    let warm = corpus(8);
+    benchkit::kv("corpus", format!("{} distinct texts, warm sweep {}", cold.len(), warm.len()));
+
+    let single_cold = sweep(&single, &cold, "single/cold");
+    let single_warm = sweep(&single, &warm, "single/warm");
+    let routed_cold = sweep(&routed, &cold, "routed/cold");
+    let routed_warm = sweep(&routed, &warm, "routed/warm");
+
+    benchkit::kv("single-variant cold", format!("{single_cold:.0} q/s"));
+    benchkit::kv("routed cold", format!("{routed_cold:.0} q/s ({:.2}x)", routed_cold / single_cold));
+    benchkit::kv("single-variant warm", format!("{single_warm:.0} q/s"));
+    benchkit::kv("routed warm", format!("{routed_warm:.0} q/s ({:.2}x)", routed_warm / single_warm));
+
+    let j = routed.stats_json();
+    let shares = j.get("routed_by_variant").expect("routed_by_variant").clone();
+    benchkit::kv("routed_by_variant", shares.to_string());
+
+    let doc = Json::obj()
+        .with("bench", Json::str("e8_router"))
+        .with("corpus_distinct", Json::num(cold.len() as f64))
+        .with("corpus_warm", Json::num(warm.len() as f64))
+        .with(
+            "single_variant",
+            Json::obj()
+                .with("cold_qps", Json::num(single_cold))
+                .with("warm_qps", Json::num(single_warm)),
+        )
+        .with(
+            "routed",
+            Json::obj()
+                .with("cold_qps", Json::num(routed_cold))
+                .with("warm_qps", Json::num(routed_warm))
+                .with("routed_by_variant", shares),
+        )
+        .with("cold_speedup_routed_vs_single", Json::num(routed_cold / single_cold))
+        .with("warm_speedup_routed_vs_single", Json::num(routed_warm / single_warm));
+    let out = repo_root().join("BENCH_router.json");
+    match std::fs::write(&out, doc.to_string()) {
+        Ok(()) => println!("\nrecorded {out:?}"),
+        Err(e) => eprintln!("\ncould not write {out:?}: {e}"),
+    }
+}

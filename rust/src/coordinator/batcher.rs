@@ -23,6 +23,11 @@ use std::time::{Duration, Instant};
 pub struct Pending {
     pub ids: Vec<u32>,
     pub respond: Sender<f64>,
+    /// When the query entered the queue — workers observe
+    /// `submitted.elapsed()` (queue wait + execute) into the serving
+    /// variant's latency EWMA at completion, so the estimate is
+    /// per-request accurate no matter how callers collect results.
+    pub submitted: Instant,
 }
 
 /// Batching policy.
@@ -70,7 +75,7 @@ impl BatchQueue {
         {
             let mut st = self.state.lock().unwrap();
             if !st.closed {
-                st.queue.push(Pending { ids, respond: tx });
+                st.queue.push(Pending { ids, respond: tx, submitted: Instant::now() });
             }
         }
         self.cv.notify_one();
@@ -83,10 +88,11 @@ impl BatchQueue {
         let mut rxs = Vec::with_capacity(batches.len());
         {
             let mut st = self.state.lock().unwrap();
+            let submitted = Instant::now();
             for ids in batches {
                 let (tx, rx) = channel();
                 if !st.closed {
-                    st.queue.push(Pending { ids, respond: tx });
+                    st.queue.push(Pending { ids, respond: tx, submitted });
                 }
                 rxs.push(rx);
             }

@@ -37,6 +37,18 @@ pub fn cache_key(model: &str, ids: &[u32]) -> u64 {
     h.finish()
 }
 
+/// The string every serving variant hashes into its cache keys:
+/// `target/variant/model`. Including the target and the variant name —
+/// not just the model architecture — means two variants (or two targets)
+/// that happen to share a model name can never cross-serve each other's
+/// cached predictions: their keys live in disjoint namespaces. The
+/// namespace is derived deterministically from configuration, so every
+/// node of a cluster serving the same variant set computes identical
+/// keys (the consistent-hash ring depends on that).
+pub fn cache_namespace(target: &str, variant: &str, model: &str) -> String {
+    format!("{target}/{variant}/{model}")
+}
+
 /// Default shard count for the serving path (power of two).
 pub const DEFAULT_SHARDS: usize = 16;
 
@@ -339,6 +351,23 @@ mod tests {
     fn distinct_keys() {
         assert_ne!(cache_key("a", &[1, 2]), cache_key("b", &[1, 2]));
         assert_ne!(cache_key("a", &[1, 2]), cache_key("a", &[2, 1]));
+    }
+
+    #[test]
+    fn namespaces_split_targets_and_variants() {
+        let ids = [1u32, 2, 3];
+        // Same model architecture behind two variants or two targets:
+        // the namespaces — and therefore the cache keys — must differ.
+        let a = cache_key(&cache_namespace("regpressure", "fc_small", "fc_ops"), &ids);
+        let b = cache_key(&cache_namespace("regpressure", "fc_wide", "fc_ops"), &ids);
+        let c = cache_key(&cache_namespace("cycles", "fc_small", "fc_ops"), &ids);
+        assert_ne!(a, b, "variants cross-serve");
+        assert_ne!(a, c, "targets cross-serve");
+        // Deterministic: every cluster node derives the same namespace.
+        assert_eq!(
+            cache_namespace("regpressure", "fc_small", "fc_ops"),
+            "regpressure/fc_small/fc_ops"
+        );
     }
 
     #[test]

@@ -4,12 +4,15 @@
 //! (every pass, every schedule candidate). Before this memo, each of
 //! those duplicates paid a full lex→parse→tokenize→encode pass just to
 //! discover it was a prediction-cache hit. The memo keys on
-//! `FxHash(target, model, mlir_text)` — target included because two
-//! heads may share a model architecture while carrying different
-//! vocab/scheme/stats, and their encodings must never cross-serve — and
-//! stores the finished `(ids, cache_key)` pair, so a duplicate query's
-//! entire front end collapses to one hash of the input text plus one
-//! sharded map probe.
+//! `FxHash(target, variant, model, mlir_text)` — target *and* variant
+//! included because two registered variants (of one target or of two)
+//! may share a model architecture while carrying different
+//! vocab/max_len/stats, and their encodings must never cross-serve —
+//! and stores the finished `(ids, cache_key)` pair, so a duplicate
+//! query's entire front end collapses to ONE hash pass over the input
+//! text ([`FrontendMemo::text_hash`], whose digest also derives the
+//! router's token-length memo key) plus two short sharded map probes
+//! (length, then encoding).
 //!
 //! Same trust model as the prediction cache: keys are 64-bit hashes with
 //! no stored-text verification — a collision would serve the wrong row,
@@ -39,9 +42,9 @@ pub struct CachedEncode {
     pub key: u64,
 }
 
-/// Sharded `hash(target, model, text)` → [`CachedEncode`] memo. Hit/miss
-/// accounting lives on `ServiceStats` (`frontend_memo_hits`), not here —
-/// the probe itself stays free of atomic traffic.
+/// Sharded `hash(target, variant, model, text)` → [`CachedEncode`] memo.
+/// Hit/miss accounting lives on `ServiceStats` (`frontend_memo_hits`),
+/// not here — the probe itself stays free of atomic traffic.
 pub struct FrontendMemo {
     shards: Vec<Mutex<FxHashMap<u64, CachedEncode>>>,
     shard_bits: u32,
@@ -69,16 +72,34 @@ impl FrontendMemo {
         }
     }
 
-    /// The memo key for a query: one FxHash pass over
-    /// `(target, model, text)` — this is the entire per-duplicate
-    /// front-end cost after warmup. `target` is part of the key because
-    /// each serving head (one per target) owns its own vocab/scheme/
-    /// max_len even when the model architecture name is shared.
-    pub fn text_key(target: &str, model: &str, mlir_text: &str) -> u64 {
+    /// One FxHash pass over the raw MLIR text — the only *full-text*
+    /// hash a query ever pays. Every memo key (this memo's and the
+    /// router's token-length memo's) is derived from this digest with
+    /// short salts, so routing + encode memoization together cost one
+    /// text traversal, not one per memo.
+    pub fn text_hash(mlir_text: &str) -> u64 {
+        let mut h = FxHasher::default();
+        mlir_text.hash(&mut h);
+        h.finish()
+    }
+
+    /// The memo key for a query over `(target, variant, model, text)`.
+    /// `target` and the registered variant name are both part of the
+    /// key because every serving variant owns its own vocab/scheme/
+    /// max_len even when the model architecture name is shared across
+    /// variants or targets.
+    pub fn text_key(target: &str, variant: &str, model: &str, mlir_text: &str) -> u64 {
+        FrontendMemo::key_from_hash(target, variant, model, FrontendMemo::text_hash(mlir_text))
+    }
+
+    /// [`FrontendMemo::text_key`] from a precomputed [`FrontendMemo::text_hash`]
+    /// digest — hashes only the short salt strings.
+    pub fn key_from_hash(target: &str, variant: &str, model: &str, text_hash: u64) -> u64 {
         let mut h = FxHasher::default();
         target.hash(&mut h);
+        variant.hash(&mut h);
         model.hash(&mut h);
-        mlir_text.hash(&mut h);
+        text_hash.hash(&mut h);
         h.finish()
     }
 
@@ -118,9 +139,9 @@ mod tests {
     #[test]
     fn same_text_same_key_then_hit() {
         let text = "func.func @f() {\n  return\n}\n";
-        let k1 = FrontendMemo::text_key("regpressure", "fc_ops", text);
-        let k2 = FrontendMemo::text_key("regpressure", "fc_ops", text);
-        assert_eq!(k1, k2, "identical (target, model, text) must share a memo key");
+        let k1 = FrontendMemo::text_key("regpressure", "small", "fc_ops", text);
+        let k2 = FrontendMemo::text_key("regpressure", "small", "fc_ops", text);
+        assert_eq!(k1, k2, "identical (target, variant, model, text) must share a memo key");
         let memo = FrontendMemo::new(64);
         assert!(memo.get(k1).is_none());
         memo.insert(k1, enc(vec![1, 2, 3], 99));
@@ -130,21 +151,25 @@ mod tests {
     }
 
     #[test]
-    fn keys_separate_targets_models_and_texts() {
+    fn keys_separate_targets_variants_models_and_texts() {
         let t = "func.func @f() {\n  return\n}\n";
-        // Two heads may share a model architecture name while owning
-        // different vocabs — the target must split their memo entries.
+        // Two variants may share a model architecture name while owning
+        // different vocabs — target AND variant must split the entries.
         assert_ne!(
-            FrontendMemo::text_key("regpressure", "fc_ops", t),
-            FrontendMemo::text_key("cycles", "fc_ops", t)
+            FrontendMemo::text_key("regpressure", "v", "fc_ops", t),
+            FrontendMemo::text_key("cycles", "v", "fc_ops", t)
         );
         assert_ne!(
-            FrontendMemo::text_key("regpressure", "fc_ops", t),
-            FrontendMemo::text_key("regpressure", "conv_ops", t)
+            FrontendMemo::text_key("regpressure", "small", "fc_ops", t),
+            FrontendMemo::text_key("regpressure", "wide", "fc_ops", t)
         );
         assert_ne!(
-            FrontendMemo::text_key("regpressure", "fc_ops", t),
-            FrontendMemo::text_key("regpressure", "fc_ops", "other text")
+            FrontendMemo::text_key("regpressure", "v", "fc_ops", t),
+            FrontendMemo::text_key("regpressure", "v", "conv_ops", t)
+        );
+        assert_ne!(
+            FrontendMemo::text_key("regpressure", "v", "fc_ops", t),
+            FrontendMemo::text_key("regpressure", "v", "fc_ops", "other text")
         );
     }
 
@@ -152,7 +177,7 @@ mod tests {
     fn capacity_is_bounded() {
         let memo = FrontendMemo::with_shards(8, 1);
         for i in 0..100u64 {
-            let k = FrontendMemo::text_key("t", "m", &format!("t{i}"));
+            let k = FrontendMemo::text_key("t", "v", "m", &format!("t{i}"));
             memo.insert(k, enc(vec![], i));
         }
         assert!(memo.len() <= 8, "memo grew past capacity: {}", memo.len());
@@ -162,7 +187,7 @@ mod tests {
     #[test]
     fn reinsert_same_key_does_not_clear() {
         let memo = FrontendMemo::with_shards(1, 1);
-        let k = FrontendMemo::text_key("t", "m", "text");
+        let k = FrontendMemo::text_key("t", "v", "m", "text");
         memo.insert(k, enc(vec![1], 1));
         memo.insert(k, enc(vec![2], 2)); // refresh at cap: no wipe
         assert_eq!(memo.get(k).unwrap().key, 2);
@@ -172,7 +197,7 @@ mod tests {
     #[test]
     fn shared_ids_are_not_copied() {
         let memo = FrontendMemo::new(16);
-        let k = FrontendMemo::text_key("t", "m", "text");
+        let k = FrontendMemo::text_key("t", "v", "m", "text");
         let row = Arc::new(vec![7u32; 512]);
         memo.insert(k, CachedEncode { ids: row.clone(), key: 1 });
         let got = memo.get(k).unwrap();

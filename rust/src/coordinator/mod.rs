@@ -1,28 +1,45 @@
 //! The serving coordinator: the "deploy the model which the DL-compiler
 //! can invoke while compiling" half of the paper, built like a production
-//! inference router — per-target heads, dynamic batching, a sharded
-//! single-flight prediction cache, metrics, and a line-protocol TCP front
-//! end.
+//! inference router — per-target variant *families* behind a routing
+//! tier, dynamic batching, a sharded single-flight prediction cache,
+//! metrics, and a line-protocol TCP front end.
 //!
 //! The request path is built for the paper's traffic shape (thousands of
 //! concurrent, heavily duplicated queries from autotuning probes):
 //!
-//! - [`Service::predict`] — one query: text-level memo probe (a duplicate
-//!   query skips the front end entirely) → zero-copy parse → fused
-//!   id-direct encode → sharded cache lookup → single-flight (duplicate
-//!   concurrent misses coalesce onto one model invocation) → batch queue
-//!   → PJRT.
-//! - [`Service::predict_many`] — the batch API: encodes all inputs,
-//!   partitions into cache hits / coalesced followers / misses, and
-//!   submits all misses to the [`batcher::BatchQueue`] in one shot.
+//! - [`Service::predict`] — one query: token-length memo probe → variant
+//!   routing → text-level encode memo probe (a duplicate query skips the
+//!   front end entirely) → zero-copy parse → fused id-direct encode →
+//!   sharded cache lookup → single-flight (duplicate concurrent misses
+//!   coalesce onto one model invocation) → batch queue → PJRT.
+//! - [`Service::predict_many`] — the batch API: routes and encodes all
+//!   inputs, partitions into cache hits / coalesced followers / misses,
+//!   and submits each variant's misses to that variant's
+//!   [`batcher::BatchQueue`] in one shot (the batch is partitioned per
+//!   chosen variant; rows still come back in input order).
 //!
-//! On the compute side each head runs a *pool* of workers
-//! (`--workers-per-head`) draining one shared queue — a slow PJRT call
-//! no longer head-of-line-blocks its target — and every worker compiles
-//! the full *ladder* of predict batch sizes from the manifest (e.g.
-//! b=1/8/32), running each drained chunk on the smallest rung that
-//! covers it so small flushes stop paying for `max_batch`-sized padding
-//! (watch `exec_by_batch` / `padded_slots` in the stats).
+//! A target is served not by one model but by every variant registered
+//! for it ([`Service::start_variants`], `--variants` on the CLI): e.g. a
+//! `max_len=128` FC model next to a `max_len=512` conv stack. The
+//! [`router`] picks, per query, the cheapest variant whose `max_len`
+//! covers the query's token count, and honors an optional per-request
+//! `budget_us` by rerouting to a faster variant — a larger covering
+//! sibling when one fits the budget, else a smaller/truncating one —
+//! when the preferred variant's observed latency EWMA would blow the
+//! budget (see the [`router`] module docs for the exact rule). A query longer than every
+//! variant is a clean error, not a silent truncation. Routing decisions
+//! are observable: `routed_by_variant`, `budget_downgrades`,
+//! `no_covering_variant`, and the per-variant `variants` object in the
+//! `stats` command.
+//!
+//! On the compute side each variant runs a *pool* of workers
+//! (`--workers-per-head`) draining that variant's shared queue — a slow
+//! PJRT call no longer head-of-line-blocks its variant — and every
+//! worker compiles the full *ladder* of predict batch sizes from the
+//! manifest (e.g. b=1/8/32), running each drained chunk on the smallest
+//! rung that covers it so small flushes stop paying for
+//! `max_batch`-sized padding (watch `exec_by_batch` / `padded_slots` in
+//! the stats).
 //!
 //! With a [`crate::cluster::Cluster`] attached ([`Service::set_cluster`],
 //! `--peers`/`--node-id` on the CLI), the cache tier spans processes: a
@@ -40,21 +57,23 @@
 pub mod batcher;
 pub mod cache;
 pub mod frontend;
+pub mod router;
 pub mod server;
 pub mod stats;
 
 use crate::bundle::Bundle;
 use crate::cluster::{Cluster, PeerReply};
-use crate::mlir::parse_function;
+use crate::mlir::{parse_function, Function};
 use crate::runtime::{Executable, Manifest, Runtime, Tensor};
 use crate::sim::Target;
-use anyhow::{anyhow, Result};
+use crate::tokenizer::token_count;
+use anyhow::{anyhow, bail, Result};
 use batcher::{BatchPolicy, BatchQueue, Pending};
-use cache::{cache_key, FlightGuard, Lookup, PredictionCache};
+use cache::{cache_key, cache_namespace, FlightGuard, Lookup, PredictionCache};
 use frontend::{CachedEncode, FrontendMemo};
-use std::collections::HashMap;
+use router::{LenMemo, Router, TargetRoutes, Variant, VariantSpec};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -73,26 +92,17 @@ use std::time::{Duration, Instant};
 /// cache-miss model invocations for the same reason.)
 const REMOTE_GET_TIMEOUT: Duration = Duration::from_millis(500);
 
-/// One target's serving head: bundle + batch queue + a pool of worker
-/// threads draining it. Each worker owns a full ladder of compiled
-/// predict executables (one per manifest batch size up to the policy's
-/// `max_batch`) and runs every drained chunk on the smallest rung that
-/// covers it.
-struct Head {
-    bundle: Bundle,
-    queue: Arc<BatchQueue>,
-    workers: Vec<JoinHandle<()>>,
-}
-
-/// Compute-side knobs for [`Service::start_with`] (the front end's knobs
-/// live on [`server::ServerConfig`]).
+/// Compute-side knobs for [`Service::start_with`] /
+/// [`Service::start_variants`] (the front end's knobs live on
+/// [`server::ServerConfig`]).
 #[derive(Debug, Clone)]
 pub struct ServeOptions {
     /// Select the Pallas-kernel predict executables for conv models.
     pub use_pallas: bool,
-    /// Workers draining each head's shared batch queue. More than one
-    /// means a slow PJRT call no longer head-of-line-blocks the target:
-    /// the next flush is picked up by an idle pool member.
+    /// Workers draining each variant's shared batch queue (the CLI flag
+    /// kept its historical `--workers-per-head` name). More than one
+    /// means a slow PJRT call no longer head-of-line-blocks the
+    /// variant: the next flush is picked up by an idle pool member.
     pub workers_per_head: usize,
 }
 
@@ -106,13 +116,23 @@ impl Default for ServeOptions {
 /// max_len 512; ids are shared, not duplicated, on hit).
 const FRONTEND_MEMO_CAPACITY: usize = 8192;
 
+/// One routed prediction: the value plus which registered variant
+/// served it (surfaced on the wire as the response's `variant` field).
+#[derive(Debug, Clone)]
+pub struct RoutedPrediction {
+    pub value: f64,
+    pub variant: Arc<str>,
+}
+
 /// The cost-model service a DL-compiler connects to.
 pub struct Service {
-    heads: HashMap<Target, Head>,
+    /// Per-target variant tables + token-length memo: every query goes
+    /// through here to pick its serving variant.
+    router: Router,
     pub cache: Arc<PredictionCache>,
     pub stats: Arc<stats::ServiceStats>,
-    /// `hash(target, model, mlir_text)` → `(ids, cache_key)`: duplicate
-    /// probes skip parse/tokenize/encode entirely.
+    /// `hash(target, variant, model, mlir_text)` → `(ids, cache_key)`:
+    /// duplicate probes skip parse/tokenize/encode entirely.
     memo: FrontendMemo,
     /// The cluster tier, when this node is one of several sharing one
     /// logical cache ([`Service::set_cluster`]). `None` = single node.
@@ -120,9 +140,11 @@ pub struct Service {
 }
 
 impl Service {
-    /// Spin up one single-worker head per bundle. `use_pallas` selects
-    /// the Pallas-kernel predict executables for conv models. See
-    /// [`Service::start_with`] for worker pools.
+    /// Spin up one single-worker variant per bundle (each named after
+    /// its model). `use_pallas` selects the Pallas-kernel predict
+    /// executables for conv models. See [`Service::start_with`] for
+    /// worker pools and [`Service::start_variants`] for multi-variant
+    /// targets.
     pub fn start(
         manifest: Arc<Manifest>,
         bundles: Vec<Bundle>,
@@ -133,24 +155,55 @@ impl Service {
         Service::start_with(manifest, bundles, policy, opts)
     }
 
-    /// Spin up `opts.workers_per_head` workers per bundle, all draining
-    /// one shared batch queue per head.
-    ///
-    /// Each worker owns its own PJRT client: the `xla` crate's handles are
-    /// deliberately `!Send` (non-atomic refcounts around the C API), so
-    /// the full executable ladder is compiled inside the worker thread it
-    /// serves from.
+    /// Spin up `opts.workers_per_head` workers per bundle, each bundle
+    /// becoming the sole variant of its target (named after its model).
     pub fn start_with(
         manifest: Arc<Manifest>,
         bundles: Vec<Bundle>,
         policy: BatchPolicy,
         opts: ServeOptions,
     ) -> Result<Service> {
+        let specs = bundles
+            .into_iter()
+            .map(|bundle| VariantSpec { name: bundle.model.clone(), bundle })
+            .collect();
+        Service::start_variants(manifest, specs, policy, opts)
+    }
+
+    /// Spin up every registered variant: a target may be served by
+    /// several (e.g. a `max_len=128` FC model next to a `max_len=512`
+    /// conv stack), and the [`router`] picks one per query by token
+    /// length and optional latency budget. Variant names must be unique
+    /// within a target, and a target's variants must share a
+    /// tokenization scheme (the routing length is measured once per
+    /// text).
+    ///
+    /// Each worker owns its own PJRT client: the `xla` crate's handles
+    /// are deliberately `!Send` (non-atomic refcounts around the C API),
+    /// so the full executable ladder is compiled inside the worker
+    /// thread it serves from.
+    pub fn start_variants(
+        manifest: Arc<Manifest>,
+        specs: Vec<VariantSpec>,
+        policy: BatchPolicy,
+        opts: ServeOptions,
+    ) -> Result<Service> {
+        // Reject an invalid variant set BEFORE spawning anything: a
+        // failed startup must not leave worker pools parked on orphaned
+        // queues.
+        router::validate_variant_set(
+            specs.iter().map(|s| (s.bundle.target, s.name.as_str(), s.bundle.scheme)),
+        )?;
         let cache = Arc::new(PredictionCache::new(65536));
         let stats = Arc::new(stats::ServiceStats::default());
         let pool = opts.workers_per_head.max(1);
-        let mut heads = HashMap::new();
-        for bundle in bundles {
+        // Pass 1 (fallible): resolve every variant's executable ladder.
+        // Nothing has been spawned yet, so a bad spec anywhere in the
+        // set is a clean error — no worker pools left parked on queues
+        // nobody will ever close.
+        let mut planned: Vec<(Bundle, String, Vec<(PathBuf, usize)>)> = Vec::new();
+        for spec in specs {
+            let bundle = spec.bundle;
             let mm = manifest.model(&bundle.model)?;
             // The full batch-size ladder, with the per-rung pallas
             // fallback (non-conv models have no pallas variants).
@@ -163,9 +216,17 @@ impl Service {
                 };
                 ladder.push((manifest.path_of(mm.file(&key)?), batch));
             }
+            planned.push((bundle, spec.name, ladder));
+        }
+        // Pass 2 (infallible): spawn the worker pools.
+        let mut variants: Vec<(Target, Variant)> = Vec::new();
+        for (bundle, name, ladder) in planned {
             let queue = BatchQueue::new(policy.clone());
+            // Shared with the pool: workers observe each completed
+            // request's queue-wait + execute span into it.
+            let ewma_us = Arc::new(stats::LatencyEwma::default());
             // Only the LAST pool member to fail startup may close the
-            // queue — while any worker lives, the head keeps serving.
+            // queue — while any worker lives, the variant keeps serving.
             let live = Arc::new(AtomicUsize::new(pool));
             let workers = (0..pool)
                 .map(|_| {
@@ -175,14 +236,30 @@ impl Service {
                         bundle.max_len,
                         queue.clone(),
                         stats.clone(),
+                        ewma_us.clone(),
                         live.clone(),
                     )
                 })
                 .collect();
-            heads.insert(bundle.target, Head { bundle, queue, workers });
+            let cache_ns = cache_namespace(bundle.target.name(), &name, &bundle.model);
+            variants.push((
+                bundle.target,
+                Variant {
+                    name: Arc::from(name.as_str()),
+                    bundle,
+                    cache_ns,
+                    queue,
+                    workers,
+                    routed: AtomicU64::new(0),
+                    budget_downgrades: AtomicU64::new(0),
+                    ewma_us,
+                },
+            ));
         }
+        // The set was validated before anything spawned, so this
+        // re-check cannot fail.
         Ok(Service {
-            heads,
+            router: Router::build(variants)?,
             cache,
             stats,
             memo: FrontendMemo::new(FRONTEND_MEMO_CAPACITY),
@@ -203,60 +280,138 @@ impl Service {
     }
 
     pub fn targets(&self) -> Vec<Target> {
-        self.heads.keys().copied().collect()
+        self.router.targets()
     }
 
-    /// The text→ids front end for one query: memo probe first (a
-    /// duplicate query costs one text hash + one shard lookup), then the
-    /// zero-copy parse + fused id-direct encode on miss. Parse failures
-    /// are not memoized — the error path is not the hot path.
-    fn encode_query(&self, head: &Head, mlir_text: &str) -> Result<CachedEncode> {
+    /// The registered variant names for a target, in routing order
+    /// (`max_len` ascending).
+    pub fn variant_names(&self, target: Target) -> Result<Vec<String>> {
+        Ok(self.router.routes(target)?.variants.iter().map(|v| v.name.to_string()).collect())
+    }
+
+    /// Warm-start (or pin, in tests) a variant's latency estimate — the
+    /// EWMA that `budget_us` routing decisions read. Useful at startup
+    /// when historical latencies are known: a cold EWMA reads 0.0 and
+    /// will never be budget-downgraded away from until real samples
+    /// arrive.
+    pub fn set_variant_ewma_us(&self, target: Target, variant: &str, us: f64) -> Result<()> {
+        let tr = self.router.routes(target)?;
+        let v = tr
+            .find(variant)
+            .ok_or_else(|| anyhow!("no variant '{variant}' for target '{}'", target.name()))?;
+        v.ewma_us.set(us);
+        Ok(())
+    }
+
+    /// Route one query: measure its token length (memoized per text),
+    /// pick a variant by length + optional budget, and produce that
+    /// variant's encoding (memoized per (variant, text)). Returns the
+    /// chosen variant's index into `tr.variants` plus the encoding.
+    /// Parse failures are not memoized — the error path is not the hot
+    /// path.
+    fn route_on(
+        &self,
+        tr: &TargetRoutes,
+        target: Target,
+        mlir_text: &str,
+        budget_us: Option<u64>,
+    ) -> Result<(usize, CachedEncode)> {
         let t0 = Instant::now();
-        // Keyed per head (target): two heads may share a model
-        // architecture name while owning different vocabs.
-        let text_key =
-            FrontendMemo::text_key(head.bundle.target.name(), &head.bundle.model, mlir_text);
+        // ONE full-text hash per query; both memo keys derive from it.
+        let text_hash = FrontendMemo::text_hash(mlir_text);
+        // Step 1: the query's unpadded token length — one memo probe on
+        // duplicates, one counting tokenizer pass on first sight. The
+        // parsed function is kept for step 3 so a brand-new text parses
+        // once, not twice.
+        let len_key = LenMemo::key_from_hash(target.name(), text_hash);
+        let mut parsed: Option<Function> = None;
+        let token_len = match self.router.len_memo.get(len_key) {
+            Some(n) => n,
+            None => {
+                let func = parse_function(mlir_text)?;
+                let n = token_count(&func, tr.scheme);
+                self.router.len_memo.insert(len_key, n);
+                parsed = Some(func);
+                n
+            }
+        };
+        // Step 2: the routing decision.
+        let Some((vidx, downgraded)) = tr.choose(token_len, budget_us) else {
+            self.stats.no_covering_variant.fetch_add(1, Ordering::Relaxed);
+            bail!(
+                "no variant of target '{}' covers token length {token_len} \
+                 (largest registered max_len is {})",
+                target.name(),
+                tr.largest_max_len(),
+            );
+        };
+        let variant = &tr.variants[vidx];
+        variant.routed.fetch_add(1, Ordering::Relaxed);
+        if downgraded {
+            variant.budget_downgrades.fetch_add(1, Ordering::Relaxed);
+            self.stats.budget_downgrades.fetch_add(1, Ordering::Relaxed);
+        }
+        // Step 3: the chosen variant's encoding, memoized per
+        // (target, variant, model, text) so variants never cross-serve
+        // each other's id rows.
+        let text_key = FrontendMemo::key_from_hash(
+            target.name(),
+            &variant.name,
+            &variant.bundle.model,
+            text_hash,
+        );
         if let Some(enc) = self.memo.get(text_key) {
             self.stats.frontend_memo_hits.fetch_add(1, Ordering::Relaxed);
             self.stats.encode_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
-            return Ok(enc);
+            return Ok((vidx, enc));
         }
-        let func = parse_function(mlir_text)?;
-        let (ids, _oov) = head.bundle.encode_ids(&func);
-        let key = cache_key(&head.bundle.model, &ids);
+        let func = match parsed.take() {
+            Some(f) => f,
+            None => parse_function(mlir_text)?,
+        };
+        let (ids, _oov) = variant.bundle.encode_ids(&func);
+        let key = cache_key(&variant.cache_ns, &ids);
         let enc = CachedEncode { ids: Arc::new(ids), key };
         self.memo.insert(text_key, enc.clone());
         self.stats.encode_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
-        Ok(enc)
-    }
-
-    fn head(&self, target: Target) -> Result<&Head> {
-        self.heads
-            .get(&target)
-            .ok_or_else(|| anyhow!("no model serving target '{}'", target.name()))
+        Ok((vidx, enc))
     }
 
     /// Predict a hardware characteristic for a raw MLIR function text.
-    /// This is the full request path: memoized front end (zero-copy parse
-    /// + fused id-direct encode on first sight, one hash + one lookup on
+    /// Routes to the cheapest covering variant (no budget); see
+    /// [`Service::predict_with`] for per-request latency budgets.
+    pub fn predict(&self, target: Target, mlir_text: &str) -> Result<f64> {
+        Ok(self.predict_with(target, mlir_text, None)?.value)
+    }
+
+    /// The full request path: token-length routing (+ optional
+    /// `budget_us` downgrade) → memoized front end (zero-copy parse +
+    /// fused id-direct encode on first sight, one hash + one lookup on
     /// duplicates) → sharded cache (single-flight) → batch → PJRT →
     /// denormalize. A warm repeat of the same text allocates no `String`
-    /// anywhere on this path.
-    pub fn predict(&self, target: Target, mlir_text: &str) -> Result<f64> {
+    /// anywhere on this path. The returned [`RoutedPrediction`] names
+    /// the variant that served the query.
+    pub fn predict_with(
+        &self,
+        target: Target,
+        mlir_text: &str,
+        budget_us: Option<u64>,
+    ) -> Result<RoutedPrediction> {
         let t0 = Instant::now();
         self.stats.requests.fetch_add(1, Ordering::Relaxed);
-        let head = self.head(target)?;
-        let enc = self.encode_query(head, mlir_text)?;
+        let tr = self.router.routes(target)?;
+        let (vidx, enc) = self.route_on(tr, target, mlir_text, budget_us)?;
+        let variant = &tr.variants[vidx];
         let value = match self.cache.lookup(enc.key) {
             Lookup::Hit(v) => {
                 self.stats.cache_hits.fetch_add(1, Ordering::Relaxed);
                 v
             }
             Lookup::Wait(rx) => wait_for_leader(rx)?,
-            Lookup::Miss(guard) => self.complete_miss(head, &enc, guard)?,
+            Lookup::Miss(guard) => self.complete_miss(variant, &enc, guard)?,
         };
         self.stats.record_latency_us(t0.elapsed().as_micros() as u64);
-        Ok(value)
+        Ok(RoutedPrediction { value, variant: variant.name.clone() })
     }
 
     /// Resolve a genuine local-cache miss (this thread is the
@@ -268,7 +423,7 @@ impl Service {
     /// local compute + local cache; peer state is never an error.
     fn complete_miss(
         &self,
-        head: &Head,
+        variant: &Variant,
         enc: &CachedEncode,
         guard: FlightGuard<'_>,
     ) -> Result<f64> {
@@ -299,9 +454,14 @@ impl Service {
                 }
             }
         }
-        let rx = head.queue.submit(enc.ids.as_ref().clone());
+        // The miss path proper. The variant's latency EWMA — the
+        // estimate `budget_us` routing reads — is fed worker-side at
+        // completion (per-request `submitted.elapsed()`), so it stays
+        // accurate no matter how callers collect results. Cache hits
+        // don't feed it: a hit costs the same on every variant.
+        let rx = variant.queue.submit(enc.ids.as_ref().clone());
         let norm = rx.recv().map_err(|_| anyhow!("prediction worker gone"))?;
-        let value = head.bundle.stats.denormalize(norm);
+        let value = variant.bundle.stats.denormalize(norm);
         guard.complete(value);
         if write_back {
             if let Some(peer) = owner {
@@ -313,20 +473,40 @@ impl Service {
         Ok(value)
     }
 
-    /// Batch API: predict for many MLIR texts in one call.
-    ///
-    /// All inputs are parsed/tokenized/encoded up front, partitioned into
-    /// cache hits, single-flight followers (an identical query is already
-    /// in flight — here or on another thread), and genuine misses; all
-    /// misses enter the [`BatchQueue`] via one `submit_many` (one lock,
-    /// one worker wakeup). Results come back in input order; per-input
-    /// failures (malformed MLIR) don't fail the rest of the batch.
+    /// Batch API: predict for many MLIR texts in one call, routing each
+    /// entry independently (no budget). See [`Service::predict_many_with`].
     pub fn predict_many(&self, target: Target, mlir_texts: &[&str]) -> Vec<Result<f64>> {
+        self.predict_many_with(target, mlir_texts, None)
+            .into_iter()
+            .map(|r| r.map(|p| p.value))
+            .collect()
+    }
+
+    /// Batch API with routing detail: predict for many MLIR texts in one
+    /// call, each entry routed independently by its own token length
+    /// (one `budget_us` applies to every entry).
+    ///
+    /// All inputs are routed/encoded up front, partitioned into cache
+    /// hits, single-flight followers (an identical query is already in
+    /// flight — here or on another thread), and genuine misses; then the
+    /// misses are partitioned *per chosen variant* and enter each
+    /// variant's [`BatchQueue`] via one `submit_many` (one lock, one
+    /// worker wakeup per variant — a batch spanning variants fans out to
+    /// every variant's worker pool concurrently). Results come back in
+    /// input order regardless of which variant served each row; per-input
+    /// failures (malformed MLIR, uncovered length) don't fail the rest of
+    /// the batch.
+    pub fn predict_many_with(
+        &self,
+        target: Target,
+        mlir_texts: &[&str],
+        budget_us: Option<u64>,
+    ) -> Vec<Result<RoutedPrediction>> {
         let t0 = Instant::now();
         self.stats.requests.fetch_add(mlir_texts.len() as u64, Ordering::Relaxed);
         self.stats.batch_requests.fetch_add(1, Ordering::Relaxed);
-        let head = match self.head(target) {
-            Ok(h) => h,
+        let tr = match self.router.routes(target) {
+            Ok(tr) => tr,
             Err(_) => {
                 return mlir_texts
                     .iter()
@@ -336,38 +516,53 @@ impl Service {
         };
 
         enum Slot<'a> {
-            Done(Result<f64>),
+            Done(Result<RoutedPrediction>),
             /// Remote-owned miss with an owner probe in flight.
             Probe {
                 guard: FlightGuard<'a>,
                 rx: std::sync::mpsc::Receiver<PeerReply>,
                 enc: CachedEncode,
+                vidx: usize,
             },
-            Leader { guard: FlightGuard<'a>, miss_idx: usize, write_back_key: Option<u64> },
-            Follower(std::sync::mpsc::Receiver<Option<f64>>),
+            /// `miss_idx` indexes into the chosen variant's miss list.
+            Leader {
+                guard: FlightGuard<'a>,
+                vidx: usize,
+                miss_idx: usize,
+                write_back_key: Option<u64>,
+            },
+            Follower {
+                rx: std::sync::mpsc::Receiver<Option<f64>>,
+                vidx: usize,
+            },
         }
 
-        // Phase 1: encode + partition (hits resolve immediately). For a
+        // Phase 1: route + encode + partition (hits resolve
+        // immediately). Misses are grouped per chosen variant. For a
         // miss whose key another node owns, the owner probe is *started*
         // here — all of a batch's remote lookups overlap instead of
         // paying one round trip each in sequence.
         let mut slots: Vec<Slot> = Vec::with_capacity(mlir_texts.len());
-        let mut miss_ids: Vec<Vec<u32>> = Vec::new();
+        let mut miss_ids: Vec<Vec<Vec<u32>>> =
+            (0..tr.variants.len()).map(|_| Vec::new()).collect();
         for text in mlir_texts {
-            match self.encode_query(head, text) {
+            match self.route_on(tr, target, text, budget_us) {
                 Err(e) => slots.push(Slot::Done(Err(e))),
-                Ok(enc) => match self.cache.lookup(enc.key) {
+                Ok((vidx, enc)) => match self.cache.lookup(enc.key) {
                     Lookup::Hit(v) => {
                         self.stats.cache_hits.fetch_add(1, Ordering::Relaxed);
-                        slots.push(Slot::Done(Ok(v)));
+                        slots.push(Slot::Done(Ok(RoutedPrediction {
+                            value: v,
+                            variant: tr.variants[vidx].name.clone(),
+                        })));
                     }
-                    Lookup::Wait(rx) => slots.push(Slot::Follower(rx)),
+                    Lookup::Wait(rx) => slots.push(Slot::Follower { rx, vidx }),
                     Lookup::Miss(guard) => {
                         let owner = self.cluster.as_ref().and_then(|c| c.owner_peer(enc.key));
                         match owner.and_then(|p| p.begin_get(enc.key)) {
                             Some(rx) => {
                                 self.stats.forwarded_gets.fetch_add(1, Ordering::Relaxed);
-                                slots.push(Slot::Probe { guard, rx, enc });
+                                slots.push(Slot::Probe { guard, rx, enc, vidx });
                             }
                             None => {
                                 if owner.is_some() {
@@ -379,10 +574,11 @@ impl Service {
                                 }
                                 slots.push(Slot::Leader {
                                     guard,
-                                    miss_idx: miss_ids.len(),
+                                    vidx,
+                                    miss_idx: miss_ids[vidx].len(),
                                     write_back_key: None,
                                 });
-                                miss_ids.push(enc.ids.as_ref().clone());
+                                miss_ids[vidx].push(enc.ids.as_ref().clone());
                             }
                         }
                     }
@@ -402,7 +598,7 @@ impl Service {
         for slot in slots.iter_mut() {
             if matches!(slot, Slot::Probe { .. }) {
                 let placeholder = Slot::Done(Err(anyhow!("slot already taken")));
-                let Slot::Probe { guard, rx, enc } = std::mem::replace(slot, placeholder)
+                let Slot::Probe { guard, rx, enc, vidx } = std::mem::replace(slot, placeholder)
                 else {
                     unreachable!()
                 };
@@ -412,15 +608,19 @@ impl Service {
                     PeerReply::Found(v) => {
                         self.stats.remote_hits.fetch_add(1, Ordering::Relaxed);
                         guard.complete(v);
-                        Slot::Done(Ok(v))
+                        Slot::Done(Ok(RoutedPrediction {
+                            value: v,
+                            variant: tr.variants[vidx].name.clone(),
+                        }))
                     }
                     PeerReply::NotFound => {
                         let next = Slot::Leader {
                             guard,
-                            miss_idx: miss_ids.len(),
+                            vidx,
+                            miss_idx: miss_ids[vidx].len(),
                             write_back_key: Some(enc.key),
                         };
-                        miss_ids.push(enc.ids.as_ref().clone());
+                        miss_ids[vidx].push(enc.ids.as_ref().clone());
                         next
                     }
                     PeerReply::Failed => {
@@ -428,18 +628,32 @@ impl Service {
                         self.stats.degraded_fallbacks.fetch_add(1, Ordering::Relaxed);
                         let next = Slot::Leader {
                             guard,
-                            miss_idx: miss_ids.len(),
+                            vidx,
+                            miss_idx: miss_ids[vidx].len(),
                             write_back_key: None,
                         };
-                        miss_ids.push(enc.ids.as_ref().clone());
+                        miss_ids[vidx].push(enc.ids.as_ref().clone());
                         next
                     }
                 };
             }
         }
 
-        // Phase 2: all misses hit the queue in one shot.
-        let rxs = head.queue.submit_many(miss_ids);
+        // Phase 2: each variant's misses hit that variant's queue in one
+        // shot — a batch spanning variants fans out to every worker pool
+        // at once. (Latency EWMAs are fed worker-side per request, so
+        // the sequential leader collection below cannot skew them.)
+        let rxs_by_variant: Vec<Vec<std::sync::mpsc::Receiver<f64>>> = miss_ids
+            .into_iter()
+            .enumerate()
+            .map(|(vidx, ids)| {
+                if ids.is_empty() {
+                    Vec::new()
+                } else {
+                    tr.variants[vidx].queue.submit_many(ids)
+                }
+            })
+            .collect();
 
         // Phase 3: resolve leaders first — completing them unparks any
         // followers of the same key later in this very batch. Computed
@@ -448,14 +662,15 @@ impl Service {
         for slot in slots.iter_mut() {
             if matches!(slot, Slot::Leader { .. }) {
                 let placeholder = Slot::Done(Err(anyhow!("slot already taken")));
-                let Slot::Leader { guard, miss_idx, write_back_key } =
+                let Slot::Leader { guard, vidx, miss_idx, write_back_key } =
                     std::mem::replace(slot, placeholder)
                 else {
                     unreachable!()
                 };
-                let res = rxs[miss_idx]
+                let variant = &tr.variants[vidx];
+                let res = rxs_by_variant[vidx][miss_idx]
                     .recv()
-                    .map(|norm| head.bundle.stats.denormalize(norm))
+                    .map(|norm| variant.bundle.stats.denormalize(norm))
                     .map_err(|_| anyhow!("prediction worker gone"));
                 *slot = match res {
                     Ok(v) => {
@@ -469,7 +684,7 @@ impl Service {
                                 }
                             }
                         }
-                        Slot::Done(Ok(v))
+                        Slot::Done(Ok(RoutedPrediction { value: v, variant: variant.name.clone() }))
                     }
                     // `guard` drops here → followers are failed too.
                     Err(e) => Slot::Done(Err(e)),
@@ -483,7 +698,9 @@ impl Service {
             .into_iter()
             .map(|slot| match slot {
                 Slot::Done(r) => r,
-                Slot::Follower(rx) => wait_for_leader(rx),
+                Slot::Follower { rx, vidx } => wait_for_leader(rx).map(|value| {
+                    RoutedPrediction { value, variant: tr.variants[vidx].name.clone() }
+                }),
                 Slot::Probe { .. } => unreachable!("probes resolved in phase 1.5"),
                 Slot::Leader { .. } => unreachable!("leaders resolved in phase 3"),
             })
@@ -493,11 +710,35 @@ impl Service {
     }
 
     /// Full metrics for the wire protocol: service counters merged with
-    /// the sharded cache's single-flight/contention view, plus the
-    /// per-peer cluster view when a cluster is attached.
+    /// the sharded cache's single-flight/contention view and the
+    /// router's per-variant view (`routed_by_variant` + `variants`,
+    /// keyed `target/variant`), plus the per-peer cluster view when a
+    /// cluster is attached.
     pub fn stats_json(&self) -> crate::json::Json {
         use crate::json::Json;
         let (chits, cmisses) = self.cache.stats();
+        let mut routed = Json::obj();
+        let mut variants = Json::obj();
+        for (target, tr) in self.router.iter() {
+            for v in &tr.variants {
+                let key = format!("{}/{}", target.name(), v.name);
+                let n = v.routed.load(Ordering::Relaxed);
+                routed = routed.with(&key, Json::num(n as f64));
+                variants = variants.with(
+                    &key,
+                    Json::obj()
+                        .with("model", Json::str(&v.bundle.model))
+                        .with("max_len", Json::num(v.bundle.max_len as f64))
+                        .with("routed", Json::num(n as f64))
+                        .with(
+                            "budget_downgrades",
+                            Json::num(v.budget_downgrades.load(Ordering::Relaxed) as f64),
+                        )
+                        .with("ewma_us", Json::num(v.ewma_us.get()))
+                        .with("queued", Json::num(v.queue.queued() as f64)),
+                );
+            }
+        }
         let mut j = self
             .stats
             .to_json()
@@ -507,20 +748,25 @@ impl Service {
             .with("coalesced_queries", Json::num(self.cache.coalesced() as f64))
             .with("cache_shard_contention", Json::num(self.cache.contended() as f64))
             .with("cache_shards", Json::num(self.cache.shard_count() as f64))
-            .with("frontend_memo_entries", Json::num(self.memo.len() as f64));
+            .with("frontend_memo_entries", Json::num(self.memo.len() as f64))
+            .with("len_memo_entries", Json::num(self.router.len_memo.len() as f64))
+            .with("routed_by_variant", routed)
+            .with("variants", variants);
         if let Some(cluster) = &self.cluster {
             j = j.with("cluster", cluster.stats_json());
         }
         j
     }
 
-    /// Shut down worker pools (drains in-flight batches) and, when
-    /// clustered, the peer pools.
+    /// Shut down every variant's worker pool (drains in-flight batches)
+    /// and, when clustered, the peer pools.
     pub fn shutdown(&mut self) {
-        for head in self.heads.values_mut() {
-            head.queue.close();
-            for w in head.workers.drain(..) {
-                let _ = w.join();
+        for (_, tr) in self.router.iter_mut() {
+            for variant in tr.variants.iter_mut() {
+                variant.queue.close();
+                for w in variant.workers.drain(..) {
+                    let _ = w.join();
+                }
             }
         }
         if let Some(cluster) = &self.cluster {
@@ -550,12 +796,13 @@ fn spawn_worker(
     max_len: usize,
     queue: Arc<BatchQueue>,
     stats: Arc<stats::ServiceStats>,
+    ewma_us: Arc<stats::LatencyEwma>,
     live: Arc<AtomicUsize>,
 ) -> JoinHandle<()> {
     std::thread::spawn(move || {
         // A worker that can't start must not strand submitters — but in a
         // pool, only the last live member may close the queue: while a
-        // sibling serves, the head stays up. The closer also drains
+        // sibling serves, the variant stays up. The closer also drains
         // anything already queued so its receivers see the disconnect.
         let fail_startup = |msg: String| {
             eprintln!("{msg}");
@@ -595,7 +842,7 @@ fn spawn_worker(
             if pending.is_empty() {
                 continue;
             }
-            serve_flush(&exes, &params, max_len, &pending, &stats);
+            serve_flush(&exes, &params, max_len, &pending, &stats, &ewma_us);
         }
     })
 }
@@ -625,12 +872,17 @@ fn plan_chunks(n: usize, sizes: &[usize]) -> Vec<(usize, usize)> {
 /// Run one drained flush through the executable ladder. Chunk failures
 /// are isolated: a failed PJRT call drops that chunk's senders (its
 /// receivers see a disconnect) and the remaining chunks still execute.
+/// Each completed request's `submitted.elapsed()` (queue wait +
+/// execute) is observed into the variant's latency EWMA *before* its
+/// response is sent, so a caller that reads the value and then the
+/// stats always sees the sample included.
 fn serve_flush(
     exes: &[(Executable, usize)],
     params: &[Tensor],
     max_len: usize,
     pending: &[Pending],
     stats: &stats::ServiceStats,
+    ewma_us: &stats::LatencyEwma,
 ) {
     let sizes: Vec<usize> = exes.iter().map(|&(_, b)| b).collect();
     let mut off = 0;
@@ -650,6 +902,7 @@ fn serve_flush(
                 stats.padded_slots.fetch_add((batch - take) as u64, Ordering::Relaxed);
                 stats.record_exec(batch);
                 for (p, v) in chunk.iter().zip(values) {
+                    ewma_us.observe(p.submitted.elapsed().as_micros() as f64);
                     let _ = p.respond.send(v);
                 }
             }
@@ -779,16 +1032,26 @@ mod tests {
     fn concurrent_queries_batch_together() {
         let Some(svc) = test_service() else { return };
         let svc = Arc::new(svc);
-        let texts: Vec<String> = (0..24)
-            .map(|i| {
+        // 24 texts across every family, skipping seeds whose graph
+        // exceeds fc_ops's max_len (128 ops-only tokens) — the router
+        // rejects over-long queries instead of truncating them.
+        let texts: Vec<String> = {
+            let mut texts = Vec::new();
+            let mut i = 0u64;
+            while texts.len() < 24 {
                 let spec = GraphSpec {
-                    family: Family::ALL[i % 7],
-                    structure_seed: i as u64,
-                    shape_seed: 1000 + i as u64,
+                    family: Family::ALL[(i % 7) as usize],
+                    structure_seed: i,
+                    shape_seed: 1000 + i,
                 };
-                print_function(&generate(&spec).unwrap())
-            })
-            .collect();
+                i += 1;
+                let f = generate(&spec).unwrap();
+                if token_count(&f, Scheme::OpsOnly) <= 128 {
+                    texts.push(print_function(&f));
+                }
+            }
+            texts
+        };
         let mut handles = Vec::new();
         for t in texts {
             let svc = svc.clone();
@@ -950,6 +1213,214 @@ mod tests {
         assert!((1..=24).contains(&bq), "queue under/over-drained: {bq}");
     }
 
+    // ---- routing tier: 3-variant services (artifact-gated) ----
+
+    fn reg_bundle(manifest: &Manifest, model: &str, scheme: Scheme) -> Bundle {
+        let vocab = Vocab::build(vec![vec!["xpu.relu".to_string()]].iter(), 1);
+        let stats = TargetStats { mean: 20.0, std: 5.0, min: 4.0, max: 60.0 };
+        Bundle::untrained(manifest, model, Target::RegPressure, scheme, vocab, stats).unwrap()
+    }
+
+    /// RegPressure served by three variants: fc_ops + lstm_ops
+    /// (max_len 128) and conv_full (max_len 512), all ops-only.
+    fn three_variant_service() -> Option<Service> {
+        let adir = artifacts_dir();
+        if !adir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        let manifest = Arc::new(Manifest::load(&adir).unwrap());
+        let specs = vec![
+            VariantSpec {
+                name: "fc_ops".into(),
+                bundle: reg_bundle(&manifest, "fc_ops", Scheme::OpsOnly),
+            },
+            VariantSpec {
+                name: "lstm_ops".into(),
+                bundle: reg_bundle(&manifest, "lstm_ops", Scheme::OpsOnly),
+            },
+            VariantSpec {
+                name: "conv_full".into(),
+                bundle: reg_bundle(&manifest, "conv_full", Scheme::OpsOnly),
+            },
+        ];
+        Some(
+            Service::start_variants(
+                manifest,
+                specs,
+                BatchPolicy::default(),
+                ServeOptions::default(),
+            )
+            .unwrap(),
+        )
+    }
+
+    /// A linear chain of `n_ops` relu ops: `n_ops + 5` ops-only tokens
+    /// (func, arg shape, ->, ret shape, return), so tests can dial a
+    /// query's token length precisely.
+    fn chain_text(n_ops: usize) -> String {
+        use crate::mlir::{Attrs, DType, FuncBuilder, Type, XpuOp};
+        let mut b = FuncBuilder::new("chain");
+        let mut v = b.arg(Type::tensor(vec![4, 8], DType::F32));
+        for _ in 0..n_ops {
+            v = b.xpu(XpuOp::Relu, &[v], Attrs::new()).unwrap();
+        }
+        print_function(&b.ret(&[v]).unwrap())
+    }
+
+    #[test]
+    fn router_picks_cheapest_covering_variant_by_token_length() {
+        let Some(svc) = three_variant_service() else { return };
+        // 15 tokens: fits every variant → the smallest (fc_ops, which
+        // sorts before lstm_ops at equal max_len) serves.
+        let short = chain_text(10);
+        let r = svc.predict_with(Target::RegPressure, &short, None).unwrap();
+        assert_eq!(&*r.variant, "fc_ops");
+        assert!(r.value.is_finite());
+        // 155 tokens: only conv_full (512) covers.
+        let long = chain_text(150);
+        let r = svc.predict_with(Target::RegPressure, &long, None).unwrap();
+        assert_eq!(&*r.variant, "conv_full");
+        // The per-variant stats view reflects both decisions.
+        let j = svc.stats_json();
+        let routed = j.get("routed_by_variant").unwrap();
+        assert_eq!(routed.req_f64("regpressure/fc_ops").unwrap(), 1.0);
+        assert_eq!(routed.req_f64("regpressure/lstm_ops").unwrap(), 0.0);
+        assert_eq!(routed.req_f64("regpressure/conv_full").unwrap(), 1.0);
+        let variants = j.get("variants").unwrap();
+        let conv = variants.get("regpressure/conv_full").unwrap();
+        assert_eq!(conv.req_f64("max_len").unwrap(), 512.0);
+        assert_eq!(conv.req_f64("routed").unwrap(), 1.0);
+        assert!(conv.req_f64("ewma_us").unwrap() > 0.0, "miss must feed the EWMA");
+    }
+
+    #[test]
+    fn uncovered_token_length_is_a_clean_error() {
+        let Some(svc) = three_variant_service() else { return };
+        // 605 tokens: longer than every variant's max_len.
+        let huge = chain_text(600);
+        let err = svc.predict(Target::RegPressure, &huge).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("covers token length"), "unexpected error: {msg}");
+        assert_eq!(svc.stats.no_covering_variant.load(Ordering::Relaxed), 1);
+        // The service keeps serving covered queries afterwards.
+        assert!(svc.predict(Target::RegPressure, &chain_text(5)).is_ok());
+        assert_eq!(svc.stats.no_covering_variant.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn budget_downgrades_to_faster_variant_and_is_counted() {
+        let Some(svc) = three_variant_service() else { return };
+        let seed = |svc: &Service| {
+            svc.set_variant_ewma_us(Target::RegPressure, "fc_ops", 300.0).unwrap();
+            svc.set_variant_ewma_us(Target::RegPressure, "lstm_ops", 900.0).unwrap();
+            svc.set_variant_ewma_us(Target::RegPressure, "conv_full", 5_000.0).unwrap();
+        };
+        seed(&svc);
+        // 155 tokens prefers conv_full (5000us) but the 1000us budget
+        // downgrades to the LARGEST fitting smaller variant: lstm_ops.
+        let r = svc
+            .predict_with(Target::RegPressure, &chain_text(150), Some(1_000))
+            .unwrap();
+        assert_eq!(&*r.variant, "lstm_ops");
+        assert_eq!(svc.stats.budget_downgrades.load(Ordering::Relaxed), 1);
+        // Re-seed (the downgraded invocation fed lstm_ops's EWMA) and
+        // send an unsatisfiable budget: nothing fits 10us, so the
+        // smallest COVERING variant serves and no downgrade is counted.
+        seed(&svc);
+        let r = svc
+            .predict_with(Target::RegPressure, &chain_text(151), Some(10))
+            .unwrap();
+        assert_eq!(&*r.variant, "conv_full");
+        assert_eq!(svc.stats.budget_downgrades.load(Ordering::Relaxed), 1);
+        // A short query under a generous budget is never downgraded.
+        let r = svc
+            .predict_with(Target::RegPressure, &chain_text(6), Some(1_000_000))
+            .unwrap();
+        assert_eq!(&*r.variant, "fc_ops");
+        assert_eq!(svc.stats.budget_downgrades.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn batch_spanning_variants_keeps_input_order() {
+        let Some(svc) = three_variant_service() else { return };
+        let short_a = chain_text(5);
+        let long = chain_text(200);
+        let short_b = chain_text(7);
+        // short / long / short / duplicate-long: rows must come back in
+        // input order with per-row variants, the duplicate coalescing
+        // onto the first long entry.
+        let texts =
+            [short_a.as_str(), long.as_str(), short_b.as_str(), long.as_str()];
+        let out = svc.predict_many_with(Target::RegPressure, &texts, None);
+        assert_eq!(out.len(), 4);
+        let rows: Vec<&RoutedPrediction> =
+            out.iter().map(|r| r.as_ref().expect("batch entry failed")).collect();
+        assert_eq!(&*rows[0].variant, "fc_ops");
+        assert_eq!(&*rows[1].variant, "conv_full");
+        assert_eq!(&*rows[2].variant, "fc_ops");
+        assert_eq!(&*rows[3].variant, "conv_full");
+        assert_eq!(rows[1].value, rows[3].value, "duplicate long query diverged");
+        // Each row matches what a single predict of the same text now
+        // serves from the cache — i.e. rows were not permuted.
+        for (text, row) in texts.iter().zip(&rows) {
+            assert_eq!(
+                svc.predict(Target::RegPressure, text).unwrap(),
+                row.value,
+                "row out of order"
+            );
+        }
+        // Both variants executed work for ONE batch request.
+        assert_eq!(svc.stats.batch_requests.load(Ordering::Relaxed), 1);
+        let j = svc.stats_json();
+        let routed = j.get("routed_by_variant").unwrap();
+        assert!(routed.req_f64("regpressure/fc_ops").unwrap() >= 2.0);
+        assert!(routed.req_f64("regpressure/conv_full").unwrap() >= 2.0);
+    }
+
+    #[test]
+    fn invalid_variant_sets_fail_before_spawning() {
+        let adir = artifacts_dir();
+        if !adir.join("manifest.json").exists() {
+            return;
+        }
+        let manifest = Arc::new(Manifest::load(&adir).unwrap());
+        // Duplicate name within a target.
+        let dup = Service::start_variants(
+            manifest.clone(),
+            vec![
+                VariantSpec {
+                    name: "v".into(),
+                    bundle: reg_bundle(&manifest, "fc_ops", Scheme::OpsOnly),
+                },
+                VariantSpec {
+                    name: "v".into(),
+                    bundle: reg_bundle(&manifest, "lstm_ops", Scheme::OpsOnly),
+                },
+            ],
+            BatchPolicy::default(),
+            ServeOptions::default(),
+        );
+        assert!(format!("{:#}", dup.unwrap_err()).contains("duplicate variant name"));
+        // Mixed schemes within a target.
+        let mixed = Service::start_variants(
+            manifest.clone(),
+            vec![
+                VariantSpec {
+                    name: "a".into(),
+                    bundle: reg_bundle(&manifest, "fc_ops", Scheme::OpsOnly),
+                },
+                VariantSpec {
+                    name: "b".into(),
+                    bundle: reg_bundle(&manifest, "conv_full", Scheme::OpsOperands),
+                },
+            ],
+            BatchPolicy::default(),
+            ServeOptions::default(),
+        );
+        assert!(format!("{:#}", mixed.unwrap_err()).contains("mix tokenization schemes"));
+    }
+
     // ---- plan_chunks: pure, artifact-free ladder-selection tests ----
 
     #[test]
@@ -987,9 +1458,9 @@ mod tests {
     // ---- pack_batch: pure, artifact-free regression tests ----
 
     fn mk_pending(ids: Vec<u32>) -> Pending {
-        // pack_batch never touches the response channel.
+        // pack_batch never touches the response channel or timestamp.
         let (tx, _rx) = channel();
-        Pending { ids, respond: tx }
+        Pending { ids, respond: tx, submitted: Instant::now() }
     }
 
     /// Regression for the misaligned-batch bug: the old packer

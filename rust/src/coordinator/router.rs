@@ -1,0 +1,432 @@
+//! The routing tier: one serving [`crate::sim::Target`] backed by
+//! *several* registered model variants, each with its own bundle
+//! (vocab/max_len/params), batch queue, and worker pool.
+//!
+//! The paper's cost model is explicitly multi-target, and real
+//! deployments serve a *family* of model variants behind one query
+//! interface — a short probe should pay for a `max_len=128` FC model,
+//! not a `max_len=512` conv stack (compare Tiramisu's learned cost model
+//! and the SambaNova placement model, which both pick a variant by input
+//! size and latency budget). This module is that router:
+//!
+//! - **Route by length.** Every query's unpadded token count (one
+//!   counting tokenizer pass, memoized per text in `LenMemo`) selects
+//!   the *cheapest* variant whose `max_len` covers it — variants are
+//!   kept sorted by `max_len` ascending, so "cheapest covering" is the
+//!   first cover in the list. A query longer than every variant's
+//!   `max_len` is rejected with a clean error (`no_covering_variant` in
+//!   the stats), never silently truncated and never a panic.
+//! - **Route by budget.** A request may carry `budget_us`. When the
+//!   length-preferred variant's observed latency
+//!   ([`LatencyEwma`], fed by that variant's model invocations) would
+//!   blow the budget, the router reroutes: first to the cheapest
+//!   *larger covering* variant whose estimate fits (no accuracy loss),
+//!   otherwise *down* to the largest smaller/faster variant whose
+//!   estimate fits — an explicit accuracy-for-latency trade (the
+//!   encoding is truncated to the smaller `max_len`). Either reroute
+//!   is counted in `budget_downgrades`. If nothing fits the budget,
+//!   the preferred covering variant serves anyway: an unsatisfiable
+//!   budget must not degrade accuracy for free.
+//! - **Isolate per variant.** Each variant owns its batch queue and
+//!   worker pool, and both the frontend memo and the prediction cache
+//!   key on the variant ([`super::cache::cache_namespace`]), so two
+//!   variants can never cross-serve encodings or cached values.
+//!
+//! Construction-time invariants (checked by `Router::build`): at
+//! least one variant per target, unique variant names within a target,
+//! and one tokenization scheme per target (the routing length is
+//! measured once per text under that scheme; mixed schemes would give
+//! each variant a different notion of "length").
+
+use super::batcher::BatchQueue;
+use super::cache::shard_index;
+use super::stats::LatencyEwma;
+use crate::bundle::Bundle;
+use crate::sim::Target;
+use crate::tokenizer::Scheme;
+use anyhow::{anyhow, bail, Result};
+use fxhash::{FxHashMap, FxHasher};
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::AtomicU64;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+/// What `mlir-cost serve --variants` (or a library caller) registers:
+/// a named serving variant. The target and scheme come from the bundle.
+pub struct VariantSpec {
+    /// Name the router, the stats, and wire responses use. Must be
+    /// unique within the bundle's target.
+    pub name: String,
+    pub bundle: Bundle,
+}
+
+/// One registered model variant: bundle + batch queue + worker pool +
+/// routing telemetry. Built by `Service::start_variants`.
+pub(crate) struct Variant {
+    pub(crate) name: Arc<str>,
+    pub(crate) bundle: Bundle,
+    /// `target/variant/model` — the prediction-cache key namespace
+    /// ([`super::cache::cache_namespace`]).
+    pub(crate) cache_ns: String,
+    pub(crate) queue: Arc<BatchQueue>,
+    pub(crate) workers: Vec<JoinHandle<()>>,
+    /// Queries routed to this variant (preferred or downgraded-into).
+    pub(crate) routed: AtomicU64,
+    /// Queries that arrived here via a `budget_us` downgrade.
+    pub(crate) budget_downgrades: AtomicU64,
+    /// Observed model-invocation latency (queue wait + PJRT execute),
+    /// the estimate `budget_us` decisions read. Shared with the
+    /// variant's worker pool, which observes each completed request's
+    /// `submitted.elapsed()` — per-request accurate regardless of how
+    /// callers collect results. Cache hits don't feed it — a hit costs
+    /// the same on every variant.
+    pub(crate) ewma_us: Arc<LatencyEwma>,
+}
+
+/// All variants serving one target, sorted by `(max_len, name)`
+/// ascending — so "the cheapest covering variant" is simply the first
+/// one in the list whose `max_len` covers the query.
+pub(crate) struct TargetRoutes {
+    pub(crate) scheme: Scheme,
+    pub(crate) variants: Vec<Variant>,
+}
+
+impl TargetRoutes {
+    /// Pick a variant for a query of `token_len` tokens. See
+    /// [`choose_variant`] for the decision rule. `None` = no variant
+    /// covers the length.
+    pub(crate) fn choose(
+        &self,
+        token_len: usize,
+        budget_us: Option<u64>,
+    ) -> Option<(usize, bool)> {
+        choose_variant(
+            self.variants.len(),
+            |i| (self.variants[i].bundle.max_len, self.variants[i].ewma_us.get()),
+            token_len,
+            budget_us,
+        )
+    }
+
+    /// The largest registered `max_len` (error messages).
+    pub(crate) fn largest_max_len(&self) -> usize {
+        self.variants.last().map(|v| v.bundle.max_len).unwrap_or(0)
+    }
+
+    pub(crate) fn find(&self, name: &str) -> Option<&Variant> {
+        self.variants.iter().find(|v| &*v.name == name)
+    }
+}
+
+/// The routing decision, shared by the stateful router and the pure
+/// unit tests. `meta(i)` returns `(max_len, ewma_us)` for variant `i`
+/// of a `(max_len, name)`-ascending list. Returns
+/// `(chosen index, rerouted-by-budget)`; `None` when no variant covers
+/// `token_len`.
+///
+/// Rule: the *preferred* variant is the first (cheapest) cover. With a
+/// budget, if the preferred estimate exceeds it:
+///
+/// 1. scan **upward** through the larger covering variants for the
+///    cheapest one whose estimate fits — they cover the query, so a
+///    faster-but-bigger sibling costs no accuracy at all (rare shape,
+///    but real: a small LSTM can be slower than a wide FC);
+/// 2. otherwise scan **downward** for the *largest* smaller variant
+///    whose estimate fits — largest, because a downgrade truncates the
+///    encoding to the smaller `max_len` and the router should shed as
+///    little of the query as the budget allows;
+/// 3. if nothing fits the budget, the preferred cover serves anyway
+///    (an unsatisfiable budget should cost latency honesty, not
+///    accuracy).
+///
+/// A cold variant's estimate reads 0.0 and therefore fits any budget.
+pub(crate) fn choose_variant<F>(
+    n: usize,
+    meta: F,
+    token_len: usize,
+    budget_us: Option<u64>,
+) -> Option<(usize, bool)>
+where
+    F: Fn(usize) -> (usize, f64),
+{
+    let preferred = (0..n).find(|&i| meta(i).0 >= token_len)?;
+    if let Some(budget) = budget_us {
+        let budget = budget as f64;
+        if meta(preferred).1 > budget {
+            for i in (preferred + 1)..n {
+                if meta(i).1 <= budget {
+                    return Some((i, true));
+                }
+            }
+            for i in (0..preferred).rev() {
+                if meta(i).1 <= budget {
+                    return Some((i, true));
+                }
+            }
+        }
+    }
+    Some((preferred, false))
+}
+
+/// Entries the token-length memo holds (12 bytes each — a routing
+/// probe on a duplicate text costs one text hash + one shard lookup,
+/// no tokenizer pass).
+const LEN_MEMO_CAPACITY: usize = 16384;
+
+/// Shard count for [`LenMemo`] (power of two, mirroring the prediction
+/// cache's layout).
+const LEN_MEMO_SHARDS: usize = 16;
+
+/// Sharded `FxHash(target, text)` → unpadded-token-count memo: the
+/// router's half of the duplicate-query fast path (the per-variant
+/// encode memo is the other half). Same trust model and clear-on-full
+/// eviction as [`super::frontend::FrontendMemo`].
+pub(crate) struct LenMemo {
+    shards: Vec<Mutex<FxHashMap<u64, u32>>>,
+    shard_bits: u32,
+    per_shard_cap: usize,
+}
+
+impl LenMemo {
+    fn new(capacity: usize) -> LenMemo {
+        let n = LEN_MEMO_SHARDS
+            .max(1)
+            .next_power_of_two()
+            .min(capacity.max(1).next_power_of_two());
+        LenMemo {
+            shards: (0..n).map(|_| Mutex::new(FxHashMap::default())).collect(),
+            shard_bits: n.trailing_zeros(),
+            per_shard_cap: (capacity / n).max(1),
+        }
+    }
+
+    /// Memo key over `(target, text)` — hashes the full text; the hot
+    /// path uses [`LenMemo::key_from_hash`] with the digest the front
+    /// end already computed.
+    pub(crate) fn key(target: &str, text: &str) -> u64 {
+        LenMemo::key_from_hash(target, super::frontend::FrontendMemo::text_hash(text))
+    }
+
+    /// Memo key from a precomputed text digest (hashes only the short
+    /// target salt).
+    pub(crate) fn key_from_hash(target: &str, text_hash: u64) -> u64 {
+        let mut h = FxHasher::default();
+        target.hash(&mut h);
+        text_hash.hash(&mut h);
+        h.finish()
+    }
+
+    fn shard(&self, key: u64) -> &Mutex<FxHashMap<u64, u32>> {
+        &self.shards[shard_index(key, self.shard_bits)]
+    }
+
+    pub(crate) fn get(&self, key: u64) -> Option<usize> {
+        self.shard(key).lock().unwrap().get(&key).map(|&n| n as usize)
+    }
+
+    pub(crate) fn insert(&self, key: u64, token_len: usize) {
+        let mut shard = self.shard(key).lock().unwrap();
+        if shard.len() >= self.per_shard_cap && !shard.contains_key(&key) {
+            shard.clear();
+        }
+        shard.insert(key, token_len.min(u32::MAX as usize) as u32);
+    }
+
+    pub(crate) fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+}
+
+/// The per-target variant tables plus the routing-length memo.
+pub(crate) struct Router {
+    routes: HashMap<Target, TargetRoutes>,
+    pub(crate) len_memo: LenMemo,
+}
+
+/// The construction invariants, checkable from bare `(target, name,
+/// scheme)` triples — `Service::start_variants` runs this BEFORE
+/// spawning any worker pool, so a rejected variant set cannot leak
+/// workers parked on orphaned queues.
+pub(crate) fn validate_variant_set<'a>(
+    items: impl Iterator<Item = (Target, &'a str, Scheme)>,
+) -> Result<()> {
+    let mut seen: Vec<(Target, &'a str, Scheme)> = Vec::new();
+    for (target, name, scheme) in items {
+        if seen.iter().any(|&(t, n, _)| t == target && n == name) {
+            bail!("duplicate variant name '{name}' for target '{}'", target.name());
+        }
+        if let Some(&(_, _, s)) = seen.iter().find(|&&(t, _, _)| t == target) {
+            if s != scheme {
+                bail!(
+                    "variants of target '{}' mix tokenization schemes ({} vs {}): \
+                     routing measures one length per query, so a target's variants \
+                     must share a scheme",
+                    target.name(),
+                    s.name(),
+                    scheme.name(),
+                );
+            }
+        }
+        seen.push((target, name, scheme));
+    }
+    Ok(())
+}
+
+impl Router {
+    /// Organize constructed variants into per-target routing tables,
+    /// re-checking the construction invariants (≥1 variant per
+    /// requested target comes free — targets only exist here because a
+    /// variant named them).
+    pub(crate) fn build(variants: Vec<(Target, Variant)>) -> Result<Router> {
+        validate_variant_set(
+            variants.iter().map(|(t, v)| (*t, &*v.name, v.bundle.scheme)),
+        )?;
+        let mut routes: HashMap<Target, TargetRoutes> = HashMap::new();
+        for (target, v) in variants {
+            routes
+                .entry(target)
+                .or_insert_with(|| TargetRoutes { scheme: v.bundle.scheme, variants: Vec::new() })
+                .variants
+                .push(v);
+        }
+        for tr in routes.values_mut() {
+            tr.variants.sort_by(|a, b| {
+                a.bundle.max_len.cmp(&b.bundle.max_len).then_with(|| a.name.cmp(&b.name))
+            });
+        }
+        Ok(Router { routes, len_memo: LenMemo::new(LEN_MEMO_CAPACITY) })
+    }
+
+    pub(crate) fn routes(&self, target: Target) -> Result<&TargetRoutes> {
+        self.routes
+            .get(&target)
+            .ok_or_else(|| anyhow!("no model serving target '{}'", target.name()))
+    }
+
+    pub(crate) fn targets(&self) -> Vec<Target> {
+        self.routes.keys().copied().collect()
+    }
+
+    pub(crate) fn iter(&self) -> impl Iterator<Item = (&Target, &TargetRoutes)> {
+        self.routes.iter()
+    }
+
+    pub(crate) fn iter_mut(&mut self) -> impl Iterator<Item = (&Target, &mut TargetRoutes)> {
+        self.routes.iter_mut()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Slice-backed wrapper for the pure decision rule: `meta[i]` is
+    /// `(max_len, ewma_us)`, max_len ascending.
+    fn pick(meta: &[(usize, f64)], len: usize, budget: Option<u64>) -> Option<(usize, bool)> {
+        choose_variant(meta.len(), |i| meta[i], len, budget)
+    }
+
+    const LADDER: &[(usize, f64)] = &[(128, 300.0), (128, 900.0), (512, 5_000.0)];
+
+    #[test]
+    fn cheapest_covering_variant_wins_without_budget() {
+        assert_eq!(pick(LADDER, 1, None), Some((0, false)));
+        assert_eq!(pick(LADDER, 128, None), Some((0, false)), "boundary is inclusive");
+        assert_eq!(pick(LADDER, 129, None), Some((2, false)));
+        assert_eq!(pick(LADDER, 512, None), Some((2, false)));
+    }
+
+    #[test]
+    fn query_longer_than_every_variant_has_no_route() {
+        assert_eq!(pick(LADDER, 513, None), None);
+        assert_eq!(pick(LADDER, 513, Some(1)), None, "budget cannot rescue an uncovered query");
+        assert_eq!(pick(&[], 1, None), None, "empty variant list routes nowhere");
+    }
+
+    #[test]
+    fn budget_met_by_preferred_variant_does_not_downgrade() {
+        // Long query prefers the 512 variant (ewma 5000); a generous
+        // budget keeps it there.
+        assert_eq!(pick(LADDER, 200, Some(10_000)), Some((2, false)));
+        // Exact fit is still a fit.
+        assert_eq!(pick(LADDER, 200, Some(5_000)), Some((2, false)));
+    }
+
+    #[test]
+    fn blown_budget_downgrades_to_largest_fitting_smaller_variant() {
+        // 512-variant (5000us) blows a 1000us budget; both 128 variants
+        // are smaller. The LARGEST fitting one wins — index 1 (900us),
+        // not index 0 — so the truncation sheds as little as possible.
+        assert_eq!(pick(LADDER, 200, Some(1_000)), Some((1, true)));
+        // A tighter budget (500us) only the small variant fits.
+        assert_eq!(pick(LADDER, 200, Some(500)), Some((0, true)));
+    }
+
+    #[test]
+    fn budget_below_every_ewma_keeps_smallest_covering_variant() {
+        // Nothing fits 10us: the preferred (smallest covering) variant
+        // serves, and it is NOT counted as a downgrade.
+        assert_eq!(pick(LADDER, 200, Some(10)), Some((2, false)));
+        assert_eq!(pick(LADDER, 1, Some(10)), Some((0, false)));
+    }
+
+    #[test]
+    fn cold_variant_fits_any_budget() {
+        // ewma 0.0 = no evidence of slowness: it qualifies as a
+        // downgrade landing spot...
+        let meta = [(128usize, 0.0), (512, 5_000.0)];
+        assert_eq!(pick(&meta, 200, Some(1_000)), Some((0, true)));
+        // ...and as a preferred variant it never triggers a downgrade.
+        let cold = [(128usize, 0.0), (512, 0.0)];
+        assert_eq!(pick(&cold, 200, Some(1)), Some((1, false)));
+    }
+
+    #[test]
+    fn blown_budget_prefers_larger_covering_variant_over_truncation() {
+        // The small variant is the slow one (e.g. LSTM) and the big one
+        // is fast (wide FC): a blown budget reroutes UP to the larger
+        // covering variant — zero accuracy loss — before considering
+        // any truncating downgrade.
+        let meta = [(128usize, 5_000.0), (512, 300.0)];
+        assert_eq!(pick(&meta, 50, Some(1_000)), Some((1, true)));
+        // Even when a smaller truncating variant also fits the budget,
+        // the covering sibling wins.
+        let meta3 = [(64usize, 100.0), (128, 5_000.0), (512, 300.0)];
+        assert_eq!(pick(&meta3, 100, Some(1_000)), Some((2, true)));
+    }
+
+    #[test]
+    fn preferred_at_index_zero_with_unsatisfiable_budget_stays_put() {
+        // Preferred blows the 1us budget and no sibling (larger or
+        // smaller) fits either: serve preferred, count no reroute.
+        assert_eq!(pick(LADDER, 50, Some(1)), Some((0, false)));
+    }
+
+    #[test]
+    fn len_memo_roundtrip_and_bound() {
+        let m = LenMemo::new(64);
+        let k = LenMemo::key("regpressure", "func.func @f() { return }");
+        assert_eq!(m.get(k), None);
+        m.insert(k, 7);
+        assert_eq!(m.get(k), Some(7));
+        // Distinct targets measure distinct keys for the same text.
+        assert_ne!(k, LenMemo::key("cycles", "func.func @f() { return }"));
+        for i in 0..1000u64 {
+            m.insert(LenMemo::key("t", &format!("text {i}")), i as usize);
+        }
+        assert!(m.len() <= 64, "len memo grew past capacity: {}", m.len());
+    }
+
+    #[test]
+    fn len_memo_reinsert_at_cap_does_not_clear() {
+        // Same clear-on-full subtlety FrontendMemo pins: refreshing an
+        // existing key at capacity must not wipe the shard.
+        let m = LenMemo::new(1);
+        let k = LenMemo::key("t", "x");
+        m.insert(k, 5);
+        m.insert(k, 6);
+        assert_eq!(m.get(k), Some(6));
+        assert_eq!(m.len(), 1);
+    }
+}

@@ -1,24 +1,38 @@
-//! TCP front end: newline-delimited JSON, one request per line.
+//! TCP front end: newline-delimited JSON, one request per line. The
+//! authoritative field-by-field reference (every command, every
+//! response shape, every error form) is `docs/protocol.md`, pinned by
+//! the doc-example test in `tests/protocol_docs.rs`.
 //!
 //! Request:  {"id": 7, "target": "regpressure", "mlir": "func.func @f..."}
+//!           {"id": 7, "target": "regpressure", "mlir": "...", "budget_us": 500}
 //!           {"id": 10, "target": "regpressure", "mlir_batch": ["func.func @a...", "func.func @b..."]}
 //!           {"id": 8, "cmd": "stats"}
 //!           {"id": 9, "cmd": "ping"}
 //!           {"id": 11, "cmd": "cache_get", "key": "00f3a9..."}
 //!           {"id": 12, "cmd": "cache_put", "key": "00f3a9...", "value": 27.4}
-//! Response: {"id": 7, "ok": true, "prediction": 27.4, "us": 812}
-//!           {"id": 10, "ok": true, "predictions": [{"ok": true, "prediction": 27.4},
+//! Response: {"id": 7, "ok": true, "prediction": 27.4, "variant": "fc_ops", "us": 812}
+//!           {"id": 10, "ok": true, "predictions": [{"ok": true, "prediction": 27.4, "variant": "fc_ops"},
 //!                                                  {"ok": false, "error": "..."}], "us": 930}
 //!           {"id": 8, "ok": true, "stats": {...}}
 //!           {"id": 11, "ok": true, "found": true, "value": 27.4}   (or "found": false)
 //!           {"id": 12, "ok": true, "stored": true}
 //!           {"id": 7, "ok": false, "error": "..."}
 //!
+//! `mlir` / `mlir_batch` requests route through the serving tier's
+//! variant router: each query's token length picks the cheapest
+//! registered model variant that covers it, the optional `budget_us`
+//! field downgrades to a smaller/faster variant when the preferred
+//! one's latency estimate would blow the budget (see
+//! `super::router`), and the response's `variant` field names the
+//! variant that served each prediction. A query longer than every
+//! registered variant fails with a per-entry error (and increments
+//! `no_covering_variant` in the stats).
+//!
 //! `cache_get` / `cache_put` are the cluster tier's peer-to-peer
 //! commands (`crate::cluster`): a node that does not own a cache key
 //! probes the owner with `cache_get` before computing, and writes a
 //! value it had to compute back to the owner with `cache_put`. Keys are
-//! 16-digit hex strings ([`cache::key_to_wire`]) because JSON numbers
+//! 16-digit hex strings ([`super::cache::key_to_wire`]) because JSON numbers
 //! lose u64 precision. Both commands are pure local-cache operations —
 //! they never forward again and never invoke the model, so a `cache_get`
 //! storm from peers costs hash probes, not PJRT calls (and peer chains
@@ -49,7 +63,7 @@
 //!
 //! Within one wakeup, buffered request lines are answered by a
 //! round-robin scheduler with a per-connection line budget
-//! ([`FAIR_LINE_BUDGET`]): a client pipelining thousands of requests in
+//! (`FAIR_LINE_BUDGET`): a client pipelining thousands of requests in
 //! one burst takes a budgeted turn like everyone else instead of
 //! monopolizing the IO thread until its backlog drains — interactive
 //! connections interleave at worst one budget's worth of lines behind
@@ -838,6 +852,16 @@ pub fn handle_line(service: &Service, line: &str) -> Json {
         Some(t) => t,
         None => return fail("missing/invalid 'target'".into()),
     };
+    // Optional per-request latency budget in microseconds: the router
+    // downgrades to a smaller/faster variant when the length-preferred
+    // one's latency estimate exceeds this.
+    let budget_us = match req.get("budget_us") {
+        None => None,
+        Some(j) => match j.as_f64() {
+            Some(b) if b.is_finite() && b >= 0.0 => Some(b as u64),
+            _ => return fail("'budget_us' must be a non-negative number".into()),
+        },
+    };
     // Batch request: an array of MLIR texts through predict_many.
     if let Some(batch) = req.get("mlir_batch") {
         let Some(items) = batch.as_arr() else {
@@ -850,13 +874,14 @@ pub fn handle_line(service: &Service, line: &str) -> Json {
                 None => return fail("'mlir_batch' entries must be strings".into()),
             }
         }
-        let results = service.predict_many(target, &texts);
+        let results = service.predict_many_with(target, &texts, budget_us);
         let predictions: Vec<Json> = results
             .into_iter()
             .map(|r| match r {
-                Ok(v) => Json::obj()
+                Ok(p) => Json::obj()
                     .with("ok", Json::Bool(true))
-                    .with("prediction", Json::num(v)),
+                    .with("prediction", Json::num(p.value))
+                    .with("variant", Json::str(&*p.variant)),
                 Err(e) => Json::obj()
                     .with("ok", Json::Bool(false))
                     .with("error", Json::str(format!("{e:#}"))),
@@ -872,11 +897,12 @@ pub fn handle_line(service: &Service, line: &str) -> Json {
         Ok(m) => m,
         Err(e) => return fail(e.to_string()),
     };
-    match service.predict(target, mlir) {
-        Ok(v) => Json::obj()
+    match service.predict_with(target, mlir, budget_us) {
+        Ok(p) => Json::obj()
             .with("id", id)
             .with("ok", Json::Bool(true))
-            .with("prediction", Json::num(v))
+            .with("prediction", Json::num(p.value))
+            .with("variant", Json::str(&*p.variant))
             .with("us", Json::num(t0.elapsed().as_micros() as f64)),
         Err(e) => fail(format!("{e:#}")),
     }
@@ -1009,6 +1035,20 @@ impl Client {
             Err(e) => return Err(e.into()),
         };
         let resp = parse(&resp_line)?;
+        // The response must answer THIS request. After an io timeout
+        // (which is not retried) the stream can desynchronize — the
+        // previous request's late response arrives first — and without
+        // this check the wrong answer would be returned silently.
+        if let Some(want) = req.get("id") {
+            if resp.get("id") != Some(want) {
+                anyhow::bail!(
+                    "response id mismatch from {} (sent {want:?}, got {:?}): \
+                     connection desynchronized — discard this client",
+                    self.addr,
+                    resp.get("id"),
+                );
+            }
+        }
         if resp.get("ok").and_then(Json::as_bool) != Some(true) {
             anyhow::bail!(
                 "server error: {}",
@@ -1027,6 +1067,27 @@ impl Client {
             .with("mlir", Json::str(mlir));
         let resp = self.roundtrip(req)?;
         resp.req_f64("prediction")
+    }
+
+    /// Query a prediction with an optional latency budget
+    /// (`budget_us`); returns `(prediction, serving variant name)` so
+    /// callers can observe routing decisions.
+    pub fn predict_routed(
+        &mut self,
+        target: Target,
+        mlir: &str,
+        budget_us: Option<u64>,
+    ) -> Result<(f64, String)> {
+        let id = self.next_id();
+        let mut req = Json::obj()
+            .with("id", Json::num(id as f64))
+            .with("target", Json::str(target.name()))
+            .with("mlir", Json::str(mlir));
+        if let Some(b) = budget_us {
+            req = req.with("budget_us", Json::num(b as f64));
+        }
+        let resp = self.roundtrip(req)?;
+        Ok((resp.req_f64("prediction")?, resp.req_str("variant")?.to_string()))
     }
 
     /// Query many predictions in one protocol round trip (`mlir_batch`).
@@ -1185,6 +1246,21 @@ mod tests {
         assert!(inner.get("peer_failures").is_some());
         assert!(inner.get("degraded_fallbacks").is_some());
         assert!(inner.get("fairness_deferrals").is_some());
+        // ...and the routing-tier counters: the per-variant objects plus
+        // the budget/coverage counters, present (zero) from startup so
+        // dashboards and peers can rely on the shape.
+        assert!(inner.get("budget_downgrades").is_some());
+        assert!(inner.get("no_covering_variant").is_some());
+        assert!(inner.get("len_memo_entries").is_some());
+        let routed = inner.get("routed_by_variant").expect("routed_by_variant missing");
+        assert_eq!(routed.req_f64("regpressure/fc_ops").unwrap(), 0.0);
+        let variants = inner.get("variants").expect("variants missing");
+        let v = variants.get("regpressure/fc_ops").expect("variant entry missing");
+        assert_eq!(v.req_str("model").unwrap(), "fc_ops");
+        assert!(v.req_f64("max_len").unwrap() > 0.0);
+        assert_eq!(v.req_f64("routed").unwrap(), 0.0);
+        assert_eq!(v.req_f64("budget_downgrades").unwrap(), 0.0);
+        assert_eq!(v.req_f64("ewma_us").unwrap(), 0.0);
         assert!(inner.get("cluster").is_none(), "unclustered service must omit the peer view");
         let targets = handle_line(&svc, r#"{"id": 3, "cmd": "targets"}"#);
         assert_eq!(targets.req_arr("targets").unwrap().len(), 1);
@@ -1227,6 +1303,39 @@ mod tests {
         let bad2 =
             handle_line(&svc, r#"{"id": 7, "target": "regpressure", "mlir_batch": [1, 2]}"#);
         assert_eq!(bad2.get("ok").and_then(Json::as_bool), Some(false));
+    }
+
+    /// Responses name the serving variant, and `budget_us` is
+    /// validated at the protocol edge.
+    #[test]
+    fn predict_response_names_variant_and_validates_budget() {
+        let Some(svc) = service() else { return };
+        let text = graph(91, 92);
+        let req = Json::obj()
+            .with("id", Json::num(1.0))
+            .with("target", Json::str("regpressure"))
+            .with("mlir", Json::str(text.as_str()))
+            .with("budget_us", Json::num(1_000_000_000.0));
+        let resp = handle_line(&svc, &req.to_string());
+        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true));
+        assert_eq!(resp.req_str("variant").unwrap(), "fc_ops");
+        // Batch rows carry the variant too.
+        let breq = Json::obj()
+            .with("id", Json::num(2.0))
+            .with("target", Json::str("regpressure"))
+            .with("mlir_batch", Json::Arr(vec![Json::str(text.as_str())]));
+        let bresp = handle_line(&svc, &breq.to_string());
+        let rows = bresp.req_arr("predictions").unwrap();
+        assert_eq!(rows[0].req_str("variant").unwrap(), "fc_ops");
+        // Malformed budgets fail whole-request, before any routing.
+        for bad in [
+            r#"{"id": 3, "target": "regpressure", "mlir": "x", "budget_us": -5}"#,
+            r#"{"id": 4, "target": "regpressure", "mlir": "x", "budget_us": "fast"}"#,
+        ] {
+            let resp = handle_line(&svc, bad);
+            assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false), "accepted: {bad}");
+            assert!(resp.req_str("error").unwrap().contains("budget_us"));
+        }
     }
 
     #[test]

@@ -25,6 +25,15 @@
 //! connection hit its per-wakeup line budget and was requeued — nonzero
 //! means the fairness scheduler is actively stopping a pipelining client
 //! from monopolizing an IO thread.
+//! Routing-tier counters added with the multi-variant router
+//! (`super::router`): `budget_downgrades` (queries rerouted off the
+//! length-preferred variant because a `budget_us` would have been
+//! blown) and `no_covering_variant`
+//! (queries longer than every registered variant's `max_len`, rejected
+//! with a clean error). Per-variant detail — routed counts and the
+//! [`LatencyEwma`] each variant's budget decisions read — lives on the
+//! router's variants; `Service::stats_json` merges it in as the
+//! `routed_by_variant` / `variants` objects.
 //! Cache-side counters (shard contention, coalesced single-flight
 //! queries) live on `PredictionCache`; `Service::stats_json` merges both
 //! views (plus the per-peer `cluster` object when clustered) for the
@@ -76,6 +85,17 @@ pub struct ServiceStats {
     /// Remote-owned keys served by local compute because the owner was
     /// Down or failing (the cluster's no-error degradation path).
     pub degraded_fallbacks: AtomicU64,
+    /// Queries the router rerouted off the length-preferred variant
+    /// because the request's `budget_us` would have been blown: onto a
+    /// larger covering variant when one fits the budget (no accuracy
+    /// loss), else onto a smaller/faster variant over a truncated
+    /// encoding — an explicit accuracy-for-latency trade the client
+    /// opted into.
+    pub budget_downgrades: AtomicU64,
+    /// Queries longer than every registered variant's `max_len` for
+    /// their target: rejected with a clean error, never truncated
+    /// silently and never a panic.
+    pub no_covering_variant: AtomicU64,
     pub errors: AtomicU64,
     /// Executed flushes per compiled batch size: `exec_by_batch[b]` is
     /// how many chunks ran on the `predict_b{b}` executable. One lock
@@ -90,6 +110,62 @@ struct Reservoir {
 }
 
 const RESERVOIR_CAP: usize = 4096;
+
+/// Smoothing factor for [`LatencyEwma`]: each new sample contributes
+/// 20%, so the estimate tracks a shifting latency distribution within
+/// ~10 samples while a single outlier moves it by at most a fifth.
+const EWMA_ALPHA: f64 = 0.2;
+
+/// Lock-free exponentially-weighted moving average of a latency, in
+/// microseconds — the router's per-variant p50 proxy that `budget_us`
+/// decisions read on every routed query.
+///
+/// The value lives in an `AtomicU64` as f64 bits. `observe` is a CAS
+/// loop (latency samples arrive once per *model invocation*, nowhere
+/// near per-query rates); `get` is a single relaxed load, cheap enough
+/// for the routing hot path. A fresh EWMA reads 0.0 — "no evidence this
+/// variant is slow" — so a cold variant is never budget-downgraded away
+/// from until it has real samples.
+#[derive(Default)]
+pub struct LatencyEwma {
+    bits: AtomicU64,
+}
+
+impl LatencyEwma {
+    /// Current estimate in microseconds (0.0 until the first sample).
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.bits.load(Ordering::Relaxed))
+    }
+
+    /// Fold one observed latency into the estimate. The first sample
+    /// seeds the EWMA directly instead of averaging against the 0.0
+    /// sentinel (which would under-report by `1 - alpha` forever).
+    pub fn observe(&self, us: f64) {
+        if !us.is_finite() || us < 0.0 {
+            return;
+        }
+        let mut cur = self.bits.load(Ordering::Relaxed);
+        loop {
+            let prev = f64::from_bits(cur);
+            let next = if prev == 0.0 { us } else { prev + EWMA_ALPHA * (us - prev) };
+            match self.bits.compare_exchange_weak(
+                cur,
+                next.to_bits(),
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return,
+                Err(actual) => cur = actual,
+            }
+        }
+    }
+
+    /// Overwrite the estimate (warm-starting a variant at startup, and
+    /// deterministic routing tests).
+    pub fn set(&self, us: f64) {
+        self.bits.store(us.max(0.0).to_bits(), Ordering::Relaxed);
+    }
+}
 
 impl ServiceStats {
     /// Record one executed chunk on the `batch`-sized executable.
@@ -202,6 +278,14 @@ impl ServiceStats {
                 "degraded_fallbacks",
                 Json::num(self.degraded_fallbacks.load(Ordering::Relaxed) as f64),
             )
+            .with(
+                "budget_downgrades",
+                Json::num(self.budget_downgrades.load(Ordering::Relaxed) as f64),
+            )
+            .with(
+                "no_covering_variant",
+                Json::num(self.no_covering_variant.load(Ordering::Relaxed) as f64),
+            )
             .with("exec_by_batch", {
                 let mut by_batch = Json::obj();
                 for (b, count) in self.exec_by_batch() {
@@ -285,7 +369,59 @@ mod tests {
         assert_eq!(j.req_f64("peer_failures").unwrap(), 2.0);
         assert_eq!(j.req_f64("degraded_fallbacks").unwrap(), 2.0);
         assert_eq!(j.req_f64("fairness_deferrals").unwrap(), 3.0);
+        // Routing-tier counters are present (zero) even before any
+        // multi-variant routing happens — dashboards can rely on them.
+        assert_eq!(j.req_f64("budget_downgrades").unwrap(), 0.0);
+        assert_eq!(j.req_f64("no_covering_variant").unwrap(), 0.0);
         assert!(j.get("exec_by_batch").is_some());
+    }
+
+    #[test]
+    fn ewma_seeds_on_first_sample_then_smooths() {
+        let e = LatencyEwma::default();
+        assert_eq!(e.get(), 0.0);
+        e.observe(1000.0);
+        assert_eq!(e.get(), 1000.0, "first sample must seed, not average vs 0");
+        e.observe(2000.0);
+        // 1000 + 0.2 * (2000 - 1000) = 1200.
+        assert!((e.get() - 1200.0).abs() < 1e-9, "got {}", e.get());
+        // Converges toward a sustained level.
+        for _ in 0..64 {
+            e.observe(500.0);
+        }
+        assert!((e.get() - 500.0).abs() < 1.0, "got {}", e.get());
+    }
+
+    #[test]
+    fn ewma_ignores_garbage_and_allows_seeding() {
+        let e = LatencyEwma::default();
+        e.observe(f64::NAN);
+        e.observe(f64::INFINITY);
+        e.observe(-5.0);
+        assert_eq!(e.get(), 0.0, "garbage samples must not move the estimate");
+        e.set(750.0);
+        assert_eq!(e.get(), 750.0);
+        e.set(-1.0);
+        assert_eq!(e.get(), 0.0, "set clamps below zero");
+    }
+
+    #[test]
+    fn ewma_concurrent_observes_stay_in_range() {
+        let e = std::sync::Arc::new(LatencyEwma::default());
+        let mut handles = Vec::new();
+        for t in 0..8u32 {
+            let e = e.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..1000u32 {
+                    e.observe(100.0 + ((t * 1000 + i) % 100) as f64);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let v = e.get();
+        assert!((100.0..=200.0).contains(&v), "EWMA left the sample range: {v}");
     }
 
     #[test]

@@ -25,12 +25,20 @@
 //!   event-loop thread(s) own every connection as a nonblocking socket
 //!   with buffered partial-line reassembly, `EPOLLOUT` write
 //!   backpressure, and an eventfd shutdown doorbell, so hundreds of idle
-//!   probe connections cost zero CPU; on the compute side each head runs
-//!   a `--workers-per-head` pool draining one shared batch queue, every
-//!   worker compiles the manifest's full predict batch-size ladder, and
-//!   each drained chunk executes on the smallest rung that covers it
-//!   (`exec_by_batch` / `padded_slots` make the saved padding
-//!   observable). The text→ids
+//!   probe connections cost zero CPU. Between the front end and the
+//!   compute sits the routing tier (`coordinator/router.rs`): every
+//!   target is served by a *family* of registered model variants (e.g.
+//!   a `max_len=128` FC model next to a `max_len=512` conv stack), and
+//!   each query's token length picks the cheapest variant that covers
+//!   it — with an optional per-request `budget_us` that reroutes to a
+//!   faster variant when the preferred one's latency EWMA would blow
+//!   the budget (`routed_by_variant` / `budget_downgrades` /
+//!   `no_covering_variant` in the stats). On the compute side each
+//!   variant runs a `--workers-per-head` pool draining its shared batch
+//!   queue, every worker compiles the manifest's full predict
+//!   batch-size ladder, and each drained chunk executes on the smallest
+//!   rung that covers it (`exec_by_batch` / `padded_slots` make the
+//!   saved padding observable). The text→ids
 //!   front end is zero-allocation: a borrowed-slice lexer, a sink-based
 //!   tokenizer whose id-direct sink maps tokens straight to vocabulary
 //!   ids (per-`OpKind` id tables, one reusable scratch buffer), a

@@ -14,6 +14,7 @@
 use anyhow::{anyhow, bail, Context, Result};
 use mlir_cost::bundle::Bundle;
 use mlir_cost::coordinator::batcher::BatchPolicy;
+use mlir_cost::coordinator::router::VariantSpec;
 use mlir_cost::coordinator::{server, ServeOptions, Service};
 use mlir_cost::dataset::{Dataset, EncodedSet, TargetStats};
 use mlir_cost::json::Json;
@@ -80,7 +81,7 @@ fn run(args: &[String]) -> Result<()> {
                  --steps N --out bundle_dir [--artifacts dir] [--out-metrics m.json]\n  \
                  eval --bundle dir --test f [--out metrics.json]\n  \
                  serve --bundles d1,d2,... --addr 127.0.0.1:7071 [--pallas true] [--io-threads 1]\n    \
-                 [--workers-per-head 1] [--max-batch 32] [--max-wait-us 2000]\n    \
+                 [--variants variants.json] [--workers-per-head 1] [--max-batch 32] [--max-wait-us 2000]\n    \
                  [--peers host:port,... --node-id host:port [--vnodes 64]]\n  \
                  predict --bundle dir --file graph.mlir\n  \
                  ground-truth --file graph.mlir\n  \
@@ -286,11 +287,53 @@ fn eval(flags: &HashMap<String, String>) -> Result<()> {
 fn serve(flags: &HashMap<String, String>) -> Result<()> {
     let adir = artifacts_dir(flags);
     let manifest = Arc::new(Manifest::load(&adir)?);
-    let bundle_dirs = flag(flags, "bundles", "runs/bundle");
     let use_pallas = flag(flags, "pallas", "true") == "true";
-    let mut bundles = Vec::new();
-    for dir in bundle_dirs.split(',') {
-        bundles.push(Bundle::load(Path::new(dir), &manifest).with_context(|| dir.to_string())?);
+    // Two ways to register serving variants, combinable:
+    //   --bundles d1,d2      each bundle is the sole variant of its
+    //                        target, named after its model (the
+    //                        pre-router behavior; default runs/bundle
+    //                        when --variants is absent)
+    //   --variants file.json a variants manifest registering several
+    //                        model variants per target; the router
+    //                        picks one per query by token length and
+    //                        optional per-request budget_us
+    let mut specs: Vec<VariantSpec> = Vec::new();
+    let variants_file = flags.get("variants");
+    let bundle_dirs = flags
+        .get("bundles")
+        .cloned()
+        .or_else(|| variants_file.is_none().then(|| "runs/bundle".to_string()));
+    if let Some(dirs) = &bundle_dirs {
+        for dir in dirs.split(',') {
+            let bundle =
+                Bundle::load(Path::new(dir), &manifest).with_context(|| dir.to_string())?;
+            specs.push(VariantSpec { name: bundle.model.clone(), bundle });
+        }
+    }
+    // Warm-start latencies from the manifest, applied after startup.
+    let mut warm_ewma: Vec<(Target, String, f64)> = Vec::new();
+    if let Some(path) = variants_file {
+        let doc = mlir_cost::json::parse(
+            &std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?,
+        )
+        .with_context(|| format!("parsing {path}"))?;
+        for entry in doc.req_arr("variants").with_context(|| format!("{path}: variants"))? {
+            let dir = entry.req_str("bundle").with_context(|| format!("{path}: bundle"))?;
+            let bundle =
+                Bundle::load(Path::new(dir), &manifest).with_context(|| dir.to_string())?;
+            let name = entry
+                .get("name")
+                .and_then(Json::as_str)
+                .unwrap_or(&bundle.model)
+                .to_string();
+            if let Some(us) = entry.get("ewma_us").and_then(Json::as_f64) {
+                warm_ewma.push((bundle.target, name.clone(), us));
+            }
+            specs.push(VariantSpec { name, bundle });
+        }
+    }
+    if specs.is_empty() {
+        bail!("serve needs --bundles and/or --variants");
     }
     let policy = BatchPolicy {
         max_batch: flag(flags, "max-batch", "32").parse()?,
@@ -302,7 +345,17 @@ fn serve(flags: &HashMap<String, String>) -> Result<()> {
     };
     let config = server::ServerConfig { io_threads: flag(flags, "io-threads", "1").parse()? };
     let addr = flag(flags, "addr", "127.0.0.1:7071");
-    let mut service = Service::start_with(manifest, bundles, policy, opts)?;
+    let mut service = Service::start_variants(manifest, specs, policy, opts)?;
+    for (target, name, us) in warm_ewma {
+        service.set_variant_ewma_us(target, &name, us)?;
+    }
+    for target in service.targets() {
+        eprintln!(
+            "[serve] target {}: variants {:?}",
+            target.name(),
+            service.variant_names(target)?
+        );
+    }
     // Cluster tier: `--peers` lists every node's serving address (or
     // just the other nodes'), `--node-id` this node's own. All nodes
     // must agree on the membership set — the consistent-hash ring is

@@ -273,6 +273,34 @@ impl TokenSink for IdSink<'_> {
     }
 }
 
+/// Counting sink: measures a function's token-stream length without
+/// materializing anything — one `usize` increment per token, no vocab,
+/// no allocation. The serving router uses this to pick the cheapest
+/// model variant whose `max_len` covers a query before committing to
+/// that variant's vocabulary.
+#[derive(Default)]
+pub struct CountSink(pub usize);
+
+impl TokenSink for CountSink {
+    #[inline]
+    fn token(&mut self, _tok: &str) {
+        self.0 += 1;
+    }
+
+    #[inline]
+    fn op(&mut self, _kind: &OpKind) {
+        self.0 += 1;
+    }
+}
+
+/// The unpadded, untruncated token count of `f` under `scheme` — i.e.
+/// how long [`encode`]'s id row would be before any `max_len` clamp.
+pub fn token_count(f: &Function, scheme: Scheme) -> usize {
+    let mut sink = CountSink::default();
+    tokenize_into(f, scheme, &mut sink);
+    sink.0
+}
+
 /// Fused tokenize+encode for one function — the serving hot path. Returns
 /// `(padded ids, whole-stream OOV count)`; the ids are guaranteed
 /// identical to the two-phase `encode(&tokenize(f, scheme), ...)` string
@@ -426,6 +454,20 @@ mod tests {
                 assert_eq!(ids, encode(&toks, &vocab, max_len), "{scheme:?}/{max_len}");
                 assert_eq!(oov, count_oov(&toks, &vocab));
             }
+        }
+    }
+
+    #[test]
+    fn token_count_matches_string_pipeline() {
+        let f = mini();
+        for scheme in [Scheme::OpsOnly, Scheme::OpsOperands] {
+            assert_eq!(token_count(&f, scheme), tokenize(&f, scheme).len(), "{scheme:?}");
+        }
+        // And on a real corpus graph (covers ops, shapes, attrs).
+        let spec = GraphSpec { family: Family::Resnet, structure_seed: 3, shape_seed: 4 };
+        let g = generate(&spec).unwrap();
+        for scheme in [Scheme::OpsOnly, Scheme::OpsOperands] {
+            assert_eq!(token_count(&g, scheme), tokenize(&g, scheme).len(), "{scheme:?}");
         }
     }
 

@@ -18,7 +18,7 @@
 use mlir_cost::bundle::Bundle;
 use mlir_cost::cluster::{Cluster, ClusterConfig, PeerHealth};
 use mlir_cost::coordinator::batcher::BatchPolicy;
-use mlir_cost::coordinator::cache::cache_key;
+use mlir_cost::coordinator::cache::{cache_key, cache_namespace};
 use mlir_cost::coordinator::{server, Service};
 use mlir_cost::dataset::TargetStats;
 use mlir_cost::graphgen::{generate, Family, GraphSpec};
@@ -107,11 +107,15 @@ fn graph_text(structure_seed: u64, shape_seed: u64) -> String {
     print_function(&generate(&spec).unwrap())
 }
 
-/// The cache key a clustered service will derive for `text`.
+/// The cache key a clustered service will derive for `text`. Keys are
+/// namespaced per `(target, variant, model)`; a bundle served via
+/// `Service::start` registers as the sole variant of its target, named
+/// after its model — every node derives the identical namespace.
 fn probe_key(bundle: &Bundle, text: &str) -> u64 {
     let func = parse_function(text).unwrap();
     let (ids, _oov) = bundle.encode_ids(&func);
-    cache_key(&bundle.model, &ids)
+    let ns = cache_namespace(bundle.target.name(), &bundle.model, &bundle.model);
+    cache_key(&ns, &ids)
 }
 
 /// Find `count` graph texts with pairwise-distinct cache keys all owned

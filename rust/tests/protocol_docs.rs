@@ -1,0 +1,221 @@
+//! The doc-example test pinning `docs/protocol.md`: every request
+//! marked `<!-- verify: ... -->` in the protocol reference is fed
+//! VERBATIM through `server::handle_line` against a live 3-variant
+//! service, and the documented response shape is asserted.
+//!
+//! Marker grammar (an HTML comment on the line before a ```json fence):
+//!
+//!   <!-- verify: ok keys=prediction,variant,us -->   response must be
+//!       ok:true and carry every listed key
+//!   <!-- verify: error contains=bad json -->         response must be
+//!       ok:false with an "error" containing the substring
+//!
+//! If the doc drifts from the server (a renamed field, a removed
+//! command, an example that no longer parses), this test fails — the
+//! CI `docs-check` step runs it explicitly.
+//!
+//! Artifact-gated like every Service test: without `artifacts/` it is
+//! skipped.
+
+use mlir_cost::bundle::Bundle;
+use mlir_cost::coordinator::batcher::BatchPolicy;
+use mlir_cost::coordinator::router::VariantSpec;
+use mlir_cost::coordinator::{server, ServeOptions, Service};
+use mlir_cost::dataset::TargetStats;
+use mlir_cost::json::Json;
+use mlir_cost::runtime::Manifest;
+use mlir_cost::sim::Target;
+use mlir_cost::tokenizer::{Scheme, Vocab};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+fn repo_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).parent().unwrap().to_path_buf()
+}
+
+fn bundle(manifest: &Manifest, model: &str) -> Bundle {
+    let vocab = Vocab::build(vec![vec!["xpu.matmul".to_string()]].iter(), 1);
+    let stats = TargetStats { mean: 20.0, std: 5.0, min: 4.0, max: 60.0 };
+    Bundle::untrained(manifest, model, Target::RegPressure, Scheme::OpsOnly, vocab, stats)
+        .unwrap()
+}
+
+/// The documented deployment shape: one target behind a 3-variant
+/// family, so `variant`-bearing examples exercise real routing.
+fn service() -> Option<Service> {
+    let adir = repo_root().join("artifacts");
+    if !adir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    let manifest = Arc::new(Manifest::load(&adir).unwrap());
+    let specs = vec![
+        VariantSpec { name: "fc_ops".into(), bundle: bundle(&manifest, "fc_ops") },
+        VariantSpec { name: "lstm_ops".into(), bundle: bundle(&manifest, "lstm_ops") },
+        VariantSpec { name: "conv_full".into(), bundle: bundle(&manifest, "conv_full") },
+    ];
+    Some(
+        Service::start_variants(manifest, specs, BatchPolicy::default(), ServeOptions::default())
+            .unwrap(),
+    )
+}
+
+struct Example {
+    line_no: usize,
+    mode: Mode,
+    request: String,
+}
+
+enum Mode {
+    Ok { keys: Vec<String> },
+    Error { contains: Option<String> },
+}
+
+/// Pull every `<!-- verify: ... -->` + following ```json fence out of
+/// the doc. Panics on malformed markers — a broken marker must fail
+/// loudly, not silently verify nothing.
+fn extract(doc: &str) -> Vec<Example> {
+    let lines: Vec<&str> = doc.lines().collect();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < lines.len() {
+        let line = lines[i].trim();
+        if let Some(body) = line.strip_prefix("<!-- verify:") {
+            let body = body
+                .strip_suffix("-->")
+                .unwrap_or_else(|| panic!("line {}: unterminated verify marker", i + 1))
+                .trim();
+            let (mode_word, rest) = body.split_once(char::is_whitespace).unwrap_or((body, ""));
+            let rest = rest.trim();
+            let mode = match mode_word {
+                "ok" => {
+                    let keys = rest
+                        .strip_prefix("keys=")
+                        .unwrap_or_else(|| panic!("line {}: ok marker needs keys=", i + 1))
+                        .split(',')
+                        .map(|k| k.trim().to_string())
+                        .collect();
+                    Mode::Ok { keys }
+                }
+                "error" => Mode::Error {
+                    contains: rest.strip_prefix("contains=").map(|s| s.trim().to_string()),
+                },
+                other => panic!("line {}: unknown verify mode '{other}'", i + 1),
+            };
+            // The next non-blank line must open a ```json fence.
+            let mut j = i + 1;
+            while j < lines.len() && lines[j].trim().is_empty() {
+                j += 1;
+            }
+            assert_eq!(
+                lines.get(j).map(|l| l.trim()),
+                Some("```json"),
+                "line {}: verify marker not followed by a ```json fence",
+                i + 1
+            );
+            let mut body_lines = Vec::new();
+            j += 1;
+            while j < lines.len() && lines[j].trim() != "```" {
+                body_lines.push(lines[j]);
+                j += 1;
+            }
+            assert!(j < lines.len(), "line {}: unterminated fence", i + 1);
+            let non_empty: Vec<&str> =
+                body_lines.iter().copied().filter(|l| !l.trim().is_empty()).collect();
+            assert_eq!(
+                non_empty.len(),
+                1,
+                "line {}: a verified request must be ONE line (the wire protocol \
+                 is line-delimited)",
+                i + 1
+            );
+            out.push(Example { line_no: i + 1, mode, request: non_empty[0].to_string() });
+            i = j + 1;
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+#[test]
+fn every_documented_request_round_trips() {
+    let doc_path = repo_root().join("docs/protocol.md");
+    let doc = std::fs::read_to_string(&doc_path)
+        .unwrap_or_else(|e| panic!("reading {doc_path:?}: {e}"));
+    let examples = extract(&doc);
+    assert!(
+        examples.len() >= 12,
+        "only {} verified examples found — did the marker format drift?",
+        examples.len()
+    );
+    let Some(svc) = service() else { return };
+    for ex in examples {
+        let resp = server::handle_line(&svc, &ex.request);
+        let ok = resp.get("ok").and_then(Json::as_bool);
+        match &ex.mode {
+            Mode::Ok { keys } => {
+                assert_eq!(
+                    ok,
+                    Some(true),
+                    "protocol.md:{}: documented request failed: {} -> {}",
+                    ex.line_no,
+                    ex.request,
+                    resp.to_string(),
+                );
+                for key in keys {
+                    assert!(
+                        resp.get(key).is_some(),
+                        "protocol.md:{}: response missing documented key '{key}': {}",
+                        ex.line_no,
+                        resp.to_string(),
+                    );
+                }
+            }
+            Mode::Error { contains } => {
+                assert_eq!(
+                    ok,
+                    Some(false),
+                    "protocol.md:{}: documented error example succeeded: {}",
+                    ex.line_no,
+                    ex.request,
+                );
+                let msg = resp
+                    .get("error")
+                    .and_then(Json::as_str)
+                    .unwrap_or_else(|| panic!("protocol.md:{}: no error string", ex.line_no));
+                if let Some(needle) = contains {
+                    assert!(
+                        msg.contains(needle.as_str()),
+                        "protocol.md:{}: error '{msg}' does not mention '{needle}'",
+                        ex.line_no,
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The extractor itself is artifact-free: the doc must always parse
+/// and contain the expected example count, even where the service
+/// cannot start.
+#[test]
+fn protocol_doc_markers_parse() {
+    let doc_path = repo_root().join("docs/protocol.md");
+    let doc = std::fs::read_to_string(&doc_path)
+        .unwrap_or_else(|e| panic!("reading {doc_path:?}: {e}"));
+    let examples = extract(&doc);
+    assert!(examples.len() >= 12, "found {}", examples.len());
+    // Every documented request that the doc claims is valid JSON-per-
+    // line is parseable — except the deliberate bad-json example.
+    for ex in &examples {
+        if let Mode::Error { contains: Some(c) } = &ex.mode {
+            if c == "bad json" {
+                continue;
+            }
+        }
+        mlir_cost::json::parse(&ex.request).unwrap_or_else(|e| {
+            panic!("protocol.md:{}: example does not parse: {e:#}", ex.line_no)
+        });
+    }
+}

@@ -1,0 +1,219 @@
+//! Routing-tier integration tests: a 3-variant `Service` (fc_ops +
+//! lstm_ops at max_len 128, conv_full at max_len 512, all serving
+//! RegPressure) exercised through the PUBLIC api and the wire protocol.
+//!
+//! Pinned behavior (the issue's acceptance bar):
+//! - queries route to the cheapest variant whose `max_len` covers their
+//!   token length, and the response's `variant` field names it;
+//! - `budget_us` downgrades to a smaller/faster variant when the
+//!   preferred one's latency EWMA would blow the budget — and an
+//!   unsatisfiable budget keeps the smallest COVERING variant;
+//! - a query longer than every variant fails cleanly
+//!   (`no_covering_variant`), whole-service state intact;
+//! - an `mlir_batch` spanning variants returns rows in input order;
+//! - `routed_by_variant` / `budget_downgrades` / `no_covering_variant`
+//!   are visible over the `stats` wire command.
+//!
+//! Artifact-gated like every Service test: without `artifacts/` the
+//! tests are skipped.
+
+use mlir_cost::bundle::Bundle;
+use mlir_cost::coordinator::batcher::BatchPolicy;
+use mlir_cost::coordinator::router::VariantSpec;
+use mlir_cost::coordinator::{server, ServeOptions, Service};
+use mlir_cost::dataset::TargetStats;
+use mlir_cost::json::Json;
+use mlir_cost::mlir::{print_function, Attrs, DType, FuncBuilder, Type, XpuOp};
+use mlir_cost::runtime::Manifest;
+use mlir_cost::sim::Target;
+use mlir_cost::tokenizer::{Scheme, Vocab};
+use std::net::TcpListener;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+fn artifacts_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).parent().unwrap().join("artifacts")
+}
+
+fn bundle(manifest: &Manifest, model: &str) -> Bundle {
+    let vocab = Vocab::build(vec![vec!["xpu.relu".to_string()]].iter(), 1);
+    let stats = TargetStats { mean: 20.0, std: 5.0, min: 4.0, max: 60.0 };
+    Bundle::untrained(manifest, model, Target::RegPressure, Scheme::OpsOnly, vocab, stats)
+        .unwrap()
+}
+
+/// fc_ops + lstm_ops (128) and conv_full (512) behind one target.
+fn service() -> Option<Arc<Service>> {
+    let adir = artifacts_dir();
+    if !adir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    let manifest = Arc::new(Manifest::load(&adir).unwrap());
+    let specs = vec![
+        VariantSpec { name: "fc_ops".into(), bundle: bundle(&manifest, "fc_ops") },
+        VariantSpec { name: "lstm_ops".into(), bundle: bundle(&manifest, "lstm_ops") },
+        VariantSpec { name: "conv_full".into(), bundle: bundle(&manifest, "conv_full") },
+    ];
+    Some(Arc::new(
+        Service::start_variants(
+            manifest,
+            specs,
+            BatchPolicy::default(),
+            ServeOptions::default(),
+        )
+        .unwrap(),
+    ))
+}
+
+/// A relu chain of `n_ops` ops = `n_ops + 5` ops-only tokens, so each
+/// test dials token lengths precisely. `tag` varies the arg shape so
+/// different tests never share cache keys.
+fn chain_text(n_ops: usize, tag: i64) -> String {
+    let mut b = FuncBuilder::new("chain");
+    let mut v = b.arg(Type::tensor(vec![2 + tag, 8], DType::F32));
+    for _ in 0..n_ops {
+        v = b.xpu(XpuOp::Relu, &[v], Attrs::new()).unwrap();
+    }
+    print_function(&b.ret(&[v]).unwrap())
+}
+
+fn seed_ewmas(svc: &Service) {
+    svc.set_variant_ewma_us(Target::RegPressure, "fc_ops", 300.0).unwrap();
+    svc.set_variant_ewma_us(Target::RegPressure, "lstm_ops", 900.0).unwrap();
+    svc.set_variant_ewma_us(Target::RegPressure, "conv_full", 5_000.0).unwrap();
+}
+
+/// The acceptance scenario end to end over TCP: route by length, honor
+/// `budget_us` downgrades, report per-variant counters over `stats`.
+#[test]
+fn three_variant_service_routes_and_honors_budgets_over_the_wire() {
+    let Some(svc) = service() else { return };
+    let stop = server::Stop::new();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let join = {
+        let svc = svc.clone();
+        let stop = stop.clone();
+        std::thread::spawn(move || server::serve_on(svc, listener, stop))
+    };
+    let mut client = server::Client::connect(&addr).unwrap();
+
+    // Short query → the cheapest covering variant (fc_ops, 128).
+    let (v, variant) =
+        client.predict_routed(Target::RegPressure, &chain_text(10, 1), None).unwrap();
+    assert!(v.is_finite());
+    assert_eq!(variant, "fc_ops");
+
+    // Long query (155 tokens) → only conv_full (512) covers.
+    let (_, variant) =
+        client.predict_routed(Target::RegPressure, &chain_text(150, 1), None).unwrap();
+    assert_eq!(variant, "conv_full");
+
+    // Budget downgrade: conv_full's 5000us estimate blows a 1000us
+    // budget, lstm_ops (900us) is the largest fitting smaller variant.
+    seed_ewmas(&svc);
+    let (_, variant) = client
+        .predict_routed(Target::RegPressure, &chain_text(152, 1), Some(1_000))
+        .unwrap();
+    assert_eq!(variant, "lstm_ops");
+
+    // Unsatisfiable budget: the smallest COVERING variant serves.
+    seed_ewmas(&svc);
+    let (_, variant) = client
+        .predict_routed(Target::RegPressure, &chain_text(153, 1), Some(10))
+        .unwrap();
+    assert_eq!(variant, "conv_full");
+
+    // The stats wire view carries the per-variant routing counters.
+    let stats = client.stats().unwrap();
+    let routed = stats.get("routed_by_variant").expect("routed_by_variant missing");
+    assert!(routed.req_f64("regpressure/fc_ops").unwrap() >= 1.0);
+    assert!(routed.req_f64("regpressure/lstm_ops").unwrap() >= 1.0);
+    assert!(routed.req_f64("regpressure/conv_full").unwrap() >= 2.0);
+    assert_eq!(stats.req_f64("budget_downgrades").unwrap(), 1.0);
+    assert_eq!(stats.req_f64("no_covering_variant").unwrap(), 0.0);
+    let variants = stats.get("variants").expect("variants missing");
+    assert_eq!(
+        variants.get("regpressure/lstm_ops").unwrap().req_f64("budget_downgrades").unwrap(),
+        1.0
+    );
+
+    stop.trigger();
+    let _ = join.join().unwrap();
+}
+
+/// Uncovered queries fail cleanly over the wire — per entry in a batch,
+/// whole-request for a single predict — and the counter moves.
+#[test]
+fn uncovered_query_is_a_clean_wire_error() {
+    let Some(svc) = service() else { return };
+    // 605 ops-only tokens: longer than conv_full's 512.
+    let huge = chain_text(600, 2);
+    let req = Json::obj()
+        .with("id", Json::num(1.0))
+        .with("target", Json::str("regpressure"))
+        .with("mlir", Json::str(huge.as_str()));
+    let resp = server::handle_line(&svc, &req.to_string());
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false));
+    assert!(resp.req_str("error").unwrap().contains("covers token length"));
+    assert_eq!(svc.stats.no_covering_variant.load(std::sync::atomic::Ordering::Relaxed), 1);
+    // In a batch the failure is per-entry: sibling rows still serve.
+    let breq = Json::obj()
+        .with("id", Json::num(2.0))
+        .with("target", Json::str("regpressure"))
+        .with(
+            "mlir_batch",
+            Json::Arr(vec![Json::str(chain_text(5, 2).as_str()), Json::str(huge.as_str())]),
+        );
+    let bresp = server::handle_line(&svc, &breq.to_string());
+    assert_eq!(bresp.get("ok").and_then(Json::as_bool), Some(true));
+    let rows = bresp.req_arr("predictions").unwrap();
+    assert_eq!(rows[0].get("ok").and_then(Json::as_bool), Some(true));
+    assert_eq!(rows[0].req_str("variant").unwrap(), "fc_ops");
+    assert_eq!(rows[1].get("ok").and_then(Json::as_bool), Some(false));
+    assert_eq!(svc.stats.no_covering_variant.load(std::sync::atomic::Ordering::Relaxed), 2);
+}
+
+/// An `mlir_batch` spanning variants comes back in input order, every
+/// row tagged with the variant that served it.
+#[test]
+fn batch_spanning_variants_preserves_input_order_on_the_wire() {
+    let Some(svc) = service() else { return };
+    let short_a = chain_text(5, 3);
+    let long = chain_text(200, 3);
+    let short_b = chain_text(7, 3);
+    let req = Json::obj()
+        .with("id", Json::num(1.0))
+        .with("target", Json::str("regpressure"))
+        .with(
+            "mlir_batch",
+            Json::Arr(vec![
+                Json::str(short_a.as_str()),
+                Json::str(long.as_str()),
+                Json::str(short_b.as_str()),
+                Json::str(long.as_str()),
+            ]),
+        );
+    let resp = server::handle_line(&svc, &req.to_string());
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true));
+    let rows = resp.req_arr("predictions").unwrap();
+    assert_eq!(rows.len(), 4);
+    for (i, expect) in ["fc_ops", "conv_full", "fc_ops", "conv_full"].iter().enumerate() {
+        assert_eq!(rows[i].get("ok").and_then(Json::as_bool), Some(true), "row {i} failed");
+        assert_eq!(rows[i].req_str("variant").unwrap(), *expect, "row {i} misrouted");
+    }
+    // Duplicate long entries coalesce to one value...
+    assert_eq!(
+        rows[1].req_f64("prediction").unwrap(),
+        rows[3].req_f64("prediction").unwrap()
+    );
+    // ...and each row matches a fresh single predict of the same text
+    // (now a cache hit), proving rows were not permuted.
+    for (text, row) in [&short_a, &long, &short_b, &long].iter().zip(rows) {
+        assert_eq!(
+            svc.predict(Target::RegPressure, text).unwrap(),
+            row.req_f64("prediction").unwrap()
+        );
+    }
+}

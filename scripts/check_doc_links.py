@@ -1,0 +1,67 @@
+#!/usr/bin/env python3
+"""Fail CI on broken intra-repo links in README.md and docs/*.md.
+
+Checks every markdown inline link `[text](target)` whose target is not
+an external URL or a pure in-page anchor: the referenced file (or
+directory) must exist relative to the linking file. Anchor fragments
+(`file.md#section`) are checked for file existence only — heading
+anchors are best-effort by design.
+
+Usage: python3 scripts/check_doc_links.py  (from the repo root)
+"""
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def doc_files(root: Path):
+    files = []
+    readme = root / "README.md"
+    if readme.exists():
+        files.append(readme)
+    files.extend(sorted((root / "docs").glob("*.md")))
+    return files
+
+
+def check(root: Path) -> int:
+    errors = 0
+    files = doc_files(root)
+    if not files:
+        print("error: no README.md or docs/*.md found — wrong cwd?", file=sys.stderr)
+        return 1
+    for md in files:
+        text = md.read_text(encoding="utf-8")
+        in_fence = False
+        for lineno, line in enumerate(text.splitlines(), start=1):
+            if line.strip().startswith("```"):
+                in_fence = not in_fence
+                continue
+            if in_fence:
+                continue
+            for target in LINK_RE.findall(line):
+                if target.startswith(EXTERNAL) or target.startswith("#"):
+                    continue
+                path_part = target.split("#", 1)[0]
+                if not path_part:
+                    continue
+                resolved = (md.parent / path_part).resolve()
+                if not resolved.exists():
+                    print(
+                        f"{md.relative_to(root)}:{lineno}: broken link -> {target}",
+                        file=sys.stderr,
+                    )
+                    errors += 1
+    checked = ", ".join(str(f.relative_to(root)) for f in files)
+    if errors:
+        print(f"{errors} broken link(s) across: {checked}", file=sys.stderr)
+    else:
+        print(f"links OK: {checked}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(check(Path.cwd()))
