@@ -82,7 +82,7 @@ fn main() -> Result<()> {
     let preds: Vec<f64> = trainer
         .predict_set(&enc_te)?
         .iter()
-        .map(|&p| stats.denormalize(p))
+        .map(|p| stats.denormalize(p.first()))
         .collect();
     let truth: Vec<f64> = test.samples.iter().map(|s| target.of(&s.labels)).collect();
     let rmse_pct = metrics::rmse_pct(&preds, &truth, stats.range());
@@ -99,11 +99,12 @@ fn main() -> Result<()> {
     let op_ids = OpIdTable::build(&vocab);
     let bundle = Bundle {
         model: model.clone(),
-        target,
+        targets: vec![target],
         scheme,
         max_len: mm.max_len,
         vocab,
-        stats,
+        stats: vec![stats],
+        hardware: None,
         params: trainer.params().to_vec(),
         op_ids,
     };

@@ -56,7 +56,7 @@ fn train_reduced(model: &str, target: Target) -> anyhow::Result<Cell> {
     let cfg = TrainConfig { model: model.into(), steps, seed: 0, eval_every: 0, log_every: 0 };
     trainer.run(&cfg, &enc_tr, &enc_te)?;
     let preds: Vec<f64> =
-        trainer.predict_set(&enc_te)?.iter().map(|&p| stats.denormalize(p)).collect();
+        trainer.predict_set(&enc_te)?.iter().map(|p| stats.denormalize(p.first())).collect();
     let truth: Vec<f64> = test.samples.iter().map(|s| target.of(&s.labels)).collect();
     let _ = Bundle::untrained; // bundle type exercised elsewhere
     Ok(Cell {

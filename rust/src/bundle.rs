@@ -1,36 +1,177 @@
 //! Serving bundle: everything needed to answer cost queries for one
-//! (model, target, tokenization-scheme) triple, produced by `mlir-cost
+//! (model, targets, tokenization-scheme) triple, produced by `mlir-cost
 //! train` and consumed by `mlir-cost serve`, the benches and the examples.
 //!
+//! A bundle declares an *ordered list* of targets — the characteristics
+//! one forward pass predicts — plus an optional `hardware` profile
+//! string naming the machine those outputs describe. Legacy bundles
+//! wrote a single `target` string; those load unchanged as a 1-element
+//! target list.
+//!
 //! Layout of a bundle directory:
-//!   bundle.json     — model name, target, scheme, max_len, stats
+//!   bundle.json     — model name, targets, scheme, max_len, stats list
 //!   vocab.json      — token vocabulary (train split only)
 //!   <param>.f32 ... — trained parameters (checkpoint format)
 
 use crate::dataset::TargetStats;
 use crate::json::{parse, Json};
 use crate::mlir::Function;
+use crate::pred::{PredVec, MAX_TARGETS};
 use crate::runtime::{Manifest, Tensor};
 use crate::sim::Target;
 use crate::tokenizer::{encode_function, OpIdTable, Scheme, Vocab};
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 use std::path::Path;
 
 /// In-memory serving bundle.
 pub struct Bundle {
     pub model: String,
-    pub target: Target,
+    /// Declared characteristics, in prediction order. Never empty; at
+    /// most [`MAX_TARGETS`]. `targets[0]` is the *primary* target — the
+    /// one the legacy scalar `"prediction"` field reports.
+    pub targets: Vec<Target>,
     pub scheme: Scheme,
     pub max_len: usize,
     pub vocab: Vocab,
-    pub stats: TargetStats,
+    /// Per-target normalization statistics, parallel to `targets`.
+    pub stats: Vec<TargetStats>,
+    /// Optional hardware profile the outputs describe (e.g. "xpu-v2").
+    pub hardware: Option<String>,
     pub params: Vec<Tensor>,
     /// Per-`OpKind` vocabulary ids, precomputed at load so the id-direct
     /// encoder resolves op tokens by array index on every query.
     pub op_ids: OpIdTable,
 }
 
+/// Everything `bundle.json` holds except the vocab/params side files —
+/// split out so the (version-tolerant) parse is testable without
+/// artifacts on disk.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BundleMeta {
+    pub model: String,
+    pub targets: Vec<Target>,
+    pub scheme: Scheme,
+    pub max_len: usize,
+    pub stats: Vec<TargetStats>,
+    pub hardware: Option<String>,
+}
+
+impl BundleMeta {
+    /// Parse a `bundle.json` document. Accepts the multi-output format
+    /// (`"targets": [...]` + `"stats": [...]`) and the legacy
+    /// single-target format (`"target": "..."` + `"stats": {...}`),
+    /// which becomes a 1-element vector of each.
+    pub fn from_json(doc: &Json) -> Result<BundleMeta> {
+        let model = doc.req_str("model")?.to_string();
+        let scheme = Scheme::parse(doc.req_str("scheme")?)
+            .ok_or_else(|| anyhow!("bad scheme in bundle"))?;
+        let max_len = doc.req_f64("max_len")? as usize;
+        let hardware = doc.get("hardware").and_then(Json::as_str).map(str::to_string);
+        let (targets, stats) = if let Some(list) = doc.get("targets").and_then(Json::as_arr) {
+            let targets: Vec<Target> = list
+                .iter()
+                .map(|j| {
+                    j.as_str()
+                        .and_then(Target::parse)
+                        .ok_or_else(|| anyhow!("bad target in bundle 'targets' list"))
+                })
+                .collect::<Result<_>>()?;
+            let stats: Vec<TargetStats> = doc
+                .req_arr("stats")?
+                .iter()
+                .map(TargetStats::from_json)
+                .collect::<Result<_>>()?;
+            (targets, stats)
+        } else {
+            let target = Target::parse(doc.req_str("target")?)
+                .ok_or_else(|| anyhow!("bad target in bundle"))?;
+            (vec![target], vec![TargetStats::from_json(doc.req("stats")?)?])
+        };
+        validate_targets(&targets, &stats)?;
+        Ok(BundleMeta { model, targets, scheme, max_len, stats, hardware })
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut doc = Json::obj()
+            .with("model", Json::str(&self.model))
+            // Legacy readers still find a scalar "target": the primary.
+            .with("target", Json::str(self.targets[0].name()))
+            .with(
+                "targets",
+                Json::Arr(self.targets.iter().map(|t| Json::str(t.name())).collect()),
+            )
+            .with("scheme", Json::str(self.scheme.name()))
+            .with("max_len", Json::num(self.max_len as f64))
+            .with("stats", Json::Arr(self.stats.iter().map(TargetStats::to_json).collect()));
+        if let Some(hw) = &self.hardware {
+            doc = doc.with("hardware", Json::str(hw));
+        }
+        doc
+    }
+}
+
+fn validate_targets(targets: &[Target], stats: &[TargetStats]) -> Result<()> {
+    if targets.is_empty() {
+        bail!("bundle must declare at least one target");
+    }
+    if targets.len() > MAX_TARGETS {
+        bail!("bundle declares {} targets; at most {MAX_TARGETS} supported", targets.len());
+    }
+    if stats.len() != targets.len() {
+        bail!("bundle has {} stats entries for {} targets", stats.len(), targets.len());
+    }
+    for (i, t) in targets.iter().enumerate() {
+        if targets[..i].contains(t) {
+            bail!("duplicate target '{}' in bundle", t.name());
+        }
+    }
+    Ok(())
+}
+
 impl Bundle {
+    /// The primary target — first declared; what scalar consumers see.
+    pub fn primary_target(&self) -> Target {
+        self.targets[0]
+    }
+
+    /// Normalization stats of the primary target.
+    pub fn primary_stats(&self) -> &TargetStats {
+        &self.stats[0]
+    }
+
+    pub fn n_targets(&self) -> usize {
+        self.targets.len()
+    }
+
+    /// Position of `t` in the declared order, if served.
+    pub fn target_index(&self, t: Target) -> Option<usize> {
+        self.targets.iter().position(|&x| x == t)
+    }
+
+    /// Does this bundle serve every requested characteristic?
+    pub fn serves_all(&self, wanted: &[Target]) -> bool {
+        wanted.iter().all(|t| self.targets.contains(t))
+    }
+
+    /// Denormalize a model-output vector into real units, element `i`
+    /// by `stats[i]`. A legacy single-output head (`norm.len() == 1`)
+    /// under a multi-target bundle broadcasts its one normalized value
+    /// through every target's own stats.
+    pub fn denormalize(&self, norm: PredVec) -> PredVec {
+        let mut out = PredVec::new();
+        if norm.len() == self.stats.len() {
+            for (v, st) in norm.iter().zip(&self.stats) {
+                out.push(st.denormalize(*v));
+            }
+        } else {
+            let v = norm.first();
+            for st in &self.stats {
+                out.push(st.denormalize(v));
+            }
+        }
+        out
+    }
+
     /// Write to `dir` (creating it).
     pub fn save(&self, dir: &Path, manifest: &Manifest) -> Result<()> {
         std::fs::create_dir_all(dir)?;
@@ -39,31 +180,27 @@ impl Bundle {
             t.to_f32_file(&dir.join(format!("{k}.f32")))?;
         }
         self.vocab.save(&dir.join("vocab.json"))?;
-        let doc = Json::obj()
-            .with("model", Json::str(&self.model))
-            .with("target", Json::str(self.target.name()))
-            .with("scheme", Json::str(self.scheme.name()))
-            .with("max_len", Json::num(self.max_len as f64))
-            .with("stats", self.stats.to_json());
-        std::fs::write(dir.join("bundle.json"), doc.to_string())?;
+        let meta = BundleMeta {
+            model: self.model.clone(),
+            targets: self.targets.clone(),
+            scheme: self.scheme,
+            max_len: self.max_len,
+            stats: self.stats.clone(),
+            hardware: self.hardware.clone(),
+        };
+        std::fs::write(dir.join("bundle.json"), meta.to_json().to_string())?;
         Ok(())
     }
 
-    /// Load from `dir`.
+    /// Load from `dir` (either bundle.json format).
     pub fn load(dir: &Path, manifest: &Manifest) -> Result<Bundle> {
         let doc = parse(
             &std::fs::read_to_string(dir.join("bundle.json"))
                 .with_context(|| format!("no bundle.json in {dir:?}"))?,
         )?;
-        let model = doc.req_str("model")?.to_string();
-        let target = Target::parse(doc.req_str("target")?)
-            .ok_or_else(|| anyhow!("bad target in bundle"))?;
-        let scheme = Scheme::parse(doc.req_str("scheme")?)
-            .ok_or_else(|| anyhow!("bad scheme in bundle"))?;
-        let max_len = doc.req_f64("max_len")? as usize;
-        let stats = TargetStats::from_json(doc.req("stats")?)?;
+        let meta = BundleMeta::from_json(&doc)?;
         let vocab = Vocab::load(&dir.join("vocab.json"))?;
-        let mm = manifest.model(&model)?;
+        let mm = manifest.model(&meta.model)?;
         let params: Vec<Tensor> = mm
             .param_order
             .iter()
@@ -72,11 +209,22 @@ impl Bundle {
             })
             .collect::<Result<_>>()?;
         let op_ids = OpIdTable::build(&vocab);
-        Ok(Bundle { model, target, scheme, max_len, vocab, stats, params, op_ids })
+        Ok(Bundle {
+            model: meta.model,
+            targets: meta.targets,
+            scheme: meta.scheme,
+            max_len: meta.max_len,
+            vocab,
+            stats: meta.stats,
+            hardware: meta.hardware,
+            params,
+            op_ids,
+        })
     }
 
-    /// An untrained bundle straight from the AOT init params (useful for
-    /// smoke tests and serving-path benches where accuracy is irrelevant).
+    /// An untrained single-target bundle straight from the AOT init
+    /// params (useful for smoke tests and serving-path benches where
+    /// accuracy is irrelevant).
     pub fn untrained(
         manifest: &Manifest,
         model: &str,
@@ -85,15 +233,30 @@ impl Bundle {
         vocab: Vocab,
         stats: TargetStats,
     ) -> Result<Bundle> {
+        Bundle::untrained_multi(manifest, model, &[target], scheme, vocab, vec![stats], None)
+    }
+
+    /// Untrained bundle declaring several characteristics at once.
+    pub fn untrained_multi(
+        manifest: &Manifest,
+        model: &str,
+        targets: &[Target],
+        scheme: Scheme,
+        vocab: Vocab,
+        stats: Vec<TargetStats>,
+        hardware: Option<String>,
+    ) -> Result<Bundle> {
+        validate_targets(targets, &stats)?;
         let mm = manifest.model(model)?;
         let op_ids = OpIdTable::build(&vocab);
         Ok(Bundle {
             model: model.to_string(),
-            target,
+            targets: targets.to_vec(),
             scheme,
             max_len: mm.max_len,
             vocab,
             stats,
+            hardware,
             params: manifest.load_init_params(model)?,
             op_ids,
         })
@@ -116,6 +279,93 @@ mod tests {
         Path::new(env!("CARGO_MANIFEST_DIR")).parent().unwrap().join("artifacts")
     }
 
+    fn st(mean: f64) -> TargetStats {
+        TargetStats { mean, std: 2.0, min: 0.0, max: 100.0 }
+    }
+
+    /// Golden back-compat: the exact bundle.json a pre-multi-output
+    /// release wrote must keep parsing, as a 1-element target vector.
+    #[test]
+    fn legacy_single_target_bundle_json_parses() {
+        let legacy = r#"{"max_len":128,"model":"fc_ops","scheme":"ops",
+            "stats":{"max":40,"mean":10,"min":4,"std":2},"target":"regpressure"}"#;
+        let meta = BundleMeta::from_json(&parse(legacy).unwrap()).unwrap();
+        assert_eq!(meta.targets, vec![Target::RegPressure]);
+        assert_eq!(meta.stats, vec![TargetStats { mean: 10.0, std: 2.0, min: 4.0, max: 40.0 }]);
+        assert_eq!(meta.model, "fc_ops");
+        assert_eq!(meta.max_len, 128);
+        assert_eq!(meta.hardware, None);
+    }
+
+    #[test]
+    fn meta_roundtrip_multi_target_with_hardware() {
+        let meta = BundleMeta {
+            model: "conv_ops".into(),
+            targets: vec![Target::Cycles, Target::XpuUtil],
+            scheme: Scheme::OpsOnly,
+            max_len: 256,
+            stats: vec![st(100.0), st(50.0)],
+            hardware: Some("xpu-v2".into()),
+        };
+        let j = meta.to_json();
+        // New writers still emit the legacy scalar field for old readers.
+        assert_eq!(j.req_str("target").unwrap(), "cycles");
+        let back = BundleMeta::from_json(&parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(back, meta);
+    }
+
+    #[test]
+    fn malformed_target_lists_are_rejected() {
+        let no_targets = Json::obj()
+            .with("model", Json::str("fc_ops"))
+            .with("scheme", Json::str("ops"))
+            .with("max_len", Json::num(64.0))
+            .with("targets", Json::Arr(vec![]))
+            .with("stats", Json::Arr(vec![]));
+        assert!(BundleMeta::from_json(&no_targets).is_err());
+        let dup = no_targets
+            .clone()
+            .with("targets", Json::Arr(vec![Json::str("cycles"), Json::str("cycles")]))
+            .with("stats", Json::Arr(vec![st(1.0).to_json(), st(1.0).to_json()]));
+        let err = BundleMeta::from_json(&dup).unwrap_err().to_string();
+        assert!(err.contains("duplicate target"), "{err}");
+        let mismatch = no_targets
+            .with("targets", Json::Arr(vec![Json::str("cycles")]))
+            .with("stats", Json::Arr(vec![]));
+        let err = BundleMeta::from_json(&mismatch).unwrap_err().to_string();
+        assert!(err.contains("stats entries"), "{err}");
+    }
+
+    #[test]
+    fn denormalize_elementwise_and_broadcast() {
+        let vocab = Vocab::build([vec!["func".to_string()]].iter(), 1);
+        let op_ids = OpIdTable::build(&vocab);
+        let b = Bundle {
+            model: "fc_ops".into(),
+            targets: vec![Target::Cycles, Target::XpuUtil],
+            scheme: Scheme::OpsOnly,
+            max_len: 64,
+            vocab,
+            stats: vec![
+                TargetStats { mean: 100.0, std: 10.0, min: 0.0, max: 500.0 },
+                TargetStats { mean: 50.0, std: 5.0, min: 0.0, max: 100.0 },
+            ],
+            hardware: None,
+            params: vec![],
+            op_ids,
+        };
+        // Element-wise: each slot by its own stats.
+        let out = b.denormalize(PredVec::from_slice(&[1.0, 2.0]));
+        assert_eq!(out.as_slice(), &[110.0, 60.0]);
+        // Legacy [B] head: one normalized value through every stats.
+        let out = b.denormalize(PredVec::scalar(1.0));
+        assert_eq!(out.as_slice(), &[110.0, 55.0]);
+        assert_eq!(b.target_index(Target::XpuUtil), Some(1));
+        assert_eq!(b.target_index(Target::RegPressure), None);
+        assert!(b.serves_all(&[Target::XpuUtil, Target::Cycles]));
+        assert!(!b.serves_all(&[Target::RegPressure]));
+    }
+
     #[test]
     fn bundle_roundtrip() {
         let adir = artifacts_dir();
@@ -131,7 +381,7 @@ mod tests {
             "fc_ops",
             Target::RegPressure,
             Scheme::OpsOnly,
-            vocab,
+            vocab.clone(),
             stats.clone(),
         )
         .unwrap();
@@ -139,11 +389,29 @@ mod tests {
         b.save(&dir, &manifest).unwrap();
         let b2 = Bundle::load(&dir, &manifest).unwrap();
         assert_eq!(b2.model, "fc_ops");
-        assert_eq!(b2.target, Target::RegPressure);
+        assert_eq!(b2.primary_target(), Target::RegPressure);
         assert_eq!(b2.scheme, Scheme::OpsOnly);
-        assert_eq!(b2.stats, stats);
+        assert_eq!(b2.stats, vec![stats]);
+        assert_eq!(b2.hardware, None);
         assert_eq!(b2.params.len(), b.params.len());
         assert_eq!(b2.params[0], b.params[0]);
+
+        // Multi-target round-trip through the same directory format.
+        let mb = Bundle::untrained_multi(
+            &manifest,
+            "fc_ops",
+            &[Target::Cycles, Target::RegPressure],
+            Scheme::OpsOnly,
+            vocab,
+            vec![st(100.0), st(10.0)],
+            Some("xpu-v2".into()),
+        )
+        .unwrap();
+        mb.save(&dir, &manifest).unwrap();
+        let mb2 = Bundle::load(&dir, &manifest).unwrap();
+        assert_eq!(mb2.targets, vec![Target::Cycles, Target::RegPressure]);
+        assert_eq!(mb2.hardware.as_deref(), Some("xpu-v2"));
+        assert_eq!(mb2.n_targets(), 2);
         std::fs::remove_dir_all(dir).ok();
     }
 }

@@ -29,6 +29,7 @@
 //! resolves them, which the `stats` command surfaces per peer.
 
 use crate::coordinator::server::Client;
+use crate::pred::PredVec;
 use fxhash::FxHashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
@@ -82,10 +83,13 @@ impl PeerHealth {
 }
 
 /// Outcome of a remote cache probe that was actually attempted.
+/// `Found` carries the full characteristic vector ([`PredVec`] is
+/// `Copy`, so this enum keeps its `Copy` derive and channel sends stay
+/// allocation-free).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum PeerReply {
     /// The owner had the value.
-    Found(f64),
+    Found(PredVec),
     /// The owner answered but had no entry (compute locally, write back).
     NotFound,
     /// The attempt failed (connect/roundtrip error or timeout); peer
@@ -95,7 +99,7 @@ pub enum PeerReply {
 
 enum PeerReq {
     Get { id: u64, key: u64, respond: Sender<PeerReply> },
-    Put { id: u64, key: u64, value: f64 },
+    Put { id: u64, key: u64, value: PredVec },
 }
 
 struct HealthInner {
@@ -258,7 +262,7 @@ impl Peer {
     /// Fire-and-forget write-back. Returns whether the put was enqueued
     /// (a Down peer or a full queue drops it — the value is still in the
     /// local cache, so losing a write-back costs one recompute at worst).
-    pub fn put(&self, key: u64, value: f64) -> bool {
+    pub fn put(&self, key: u64, value: PredVec) -> bool {
         if !self.accepting() {
             return false;
         }
@@ -329,7 +333,7 @@ impl Peer {
         }
     }
 
-    fn attempt_put(&self, conn: &mut Option<Client>, key: u64, value: f64) {
+    fn attempt_put(&self, conn: &mut Option<Client>, key: u64, value: PredVec) {
         if !self.ensure_conn(conn) {
             return;
         }
@@ -388,14 +392,16 @@ mod tests {
     use std::net::TcpListener;
 
     /// Minimal in-test cluster node: accepts connections and serves
-    /// `cache_get`/`cache_put` against a shared map. One thread per
-    /// connection; threads end when the test's sockets close.
+    /// `cache_get`/`cache_put` against a shared map (values are full
+    /// characteristic vectors, spoken as JSON arrays on the wire). One
+    /// thread per connection; threads end when the test's sockets close.
     fn spawn_fake_node(
         drop_first_conn: bool,
-    ) -> (String, Arc<Mutex<FxHashMap<u64, f64>>>) {
+    ) -> (String, Arc<Mutex<FxHashMap<u64, PredVec>>>) {
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap().to_string();
-        let store: Arc<Mutex<FxHashMap<u64, f64>>> = Arc::new(Mutex::new(FxHashMap::default()));
+        let store: Arc<Mutex<FxHashMap<u64, PredVec>>> =
+            Arc::new(Mutex::new(FxHashMap::default()));
         let store2 = store.clone();
         std::thread::spawn(move || {
             let mut first = true;
@@ -424,14 +430,15 @@ mod tests {
                                     .with("id", id)
                                     .with("ok", Json::Bool(true))
                                     .with("found", Json::Bool(true))
-                                    .with("value", Json::num(v)),
+                                    .with("value", v.to_json()),
                                 None => Json::obj()
                                     .with("id", id)
                                     .with("ok", Json::Bool(true))
                                     .with("found", Json::Bool(false)),
                             },
                             Some("cache_put") => {
-                                let v = req.req_f64("value").unwrap();
+                                let v =
+                                    PredVec::from_json(req.req("value").unwrap()).unwrap();
                                 store.lock().unwrap().insert(key, v);
                                 Json::obj()
                                     .with("id", id)
@@ -463,15 +470,19 @@ mod tests {
         let peer = Peer::start(addr);
         // Miss first.
         assert_eq!(peer.get(7, Duration::from_secs(2)), Some(PeerReply::NotFound));
-        // Write-back lands (fire-and-forget → poll the store).
-        assert!(peer.put(7, 2.5));
+        // Write-back lands (fire-and-forget → poll the store). The value
+        // is a 2-wide characteristic vector: it must survive the wire
+        // as an array, element for element.
+        let vec2 = PredVec::from_slice(&[2.5, 93.0]);
+        assert!(peer.put(7, vec2));
         let t0 = Instant::now();
         while store.lock().unwrap().get(&7).is_none() {
             assert!(t0.elapsed() < Duration::from_secs(2), "put never reached the node");
             std::thread::sleep(Duration::from_millis(5));
         }
-        // Now the get hits.
-        assert_eq!(peer.get(7, Duration::from_secs(2)), Some(PeerReply::Found(2.5)));
+        assert_eq!(store.lock().unwrap().get(&7), Some(&vec2));
+        // Now the get hits, returning the full vector.
+        assert_eq!(peer.get(7, Duration::from_secs(2)), Some(PeerReply::Found(vec2)));
         assert_eq!(peer.health(), PeerHealth::Up);
         assert_eq!(peer.failures(), 0);
         // The in-flight table drains once everything resolved.
@@ -489,9 +500,12 @@ mod tests {
     #[test]
     fn first_connection_dropped_is_absorbed_by_client_retry() {
         let (addr, store) = spawn_fake_node(true);
-        store.lock().unwrap().insert(42, 6.25);
+        store.lock().unwrap().insert(42, PredVec::scalar(6.25));
         let peer = Peer::start(addr);
-        assert_eq!(peer.get(42, Duration::from_secs(2)), Some(PeerReply::Found(6.25)));
+        assert_eq!(
+            peer.get(42, Duration::from_secs(2)),
+            Some(PeerReply::Found(PredVec::scalar(6.25)))
+        );
         assert_eq!(peer.health(), PeerHealth::Up);
         assert_eq!(peer.failures(), 0, "the dropped conn must be retried, not counted");
         peer.shutdown();
@@ -509,7 +523,7 @@ mod tests {
         // Inside the backoff window: no attempt, no queueing, no waiting.
         let t0 = Instant::now();
         assert!(peer.begin_get(1).is_none(), "down peer must fail fast");
-        assert!(!peer.put(1, 1.0), "down peer must drop write-backs");
+        assert!(!peer.put(1, PredVec::scalar(1.0)), "down peer must drop write-backs");
         assert!(t0.elapsed() < Duration::from_millis(100));
         peer.shutdown();
     }
@@ -553,6 +567,6 @@ mod tests {
         let peer = Peer::start(addr);
         peer.shutdown();
         assert!(peer.begin_get(1).is_none());
-        assert!(!peer.put(1, 1.0));
+        assert!(!peer.put(1, PredVec::scalar(1.0)));
     }
 }

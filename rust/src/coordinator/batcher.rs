@@ -15,14 +15,18 @@
 //! worker wakes first takes the flush — so one slow model invocation
 //! never head-of-line-blocks the next flush when a sibling is idle.
 
+use crate::pred::PredVec;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-/// One queued query: encoded ids + a one-shot response channel.
+/// One queued query: encoded ids + a one-shot response channel. The
+/// response is the full normalized characteristic vector from one
+/// forward pass — a batch slot is occupied once per query, never once
+/// per target.
 pub struct Pending {
     pub ids: Vec<u32>,
-    pub respond: Sender<f64>,
+    pub respond: Sender<PredVec>,
     /// When the query entered the queue — workers observe
     /// `submitted.elapsed()` (queue wait + execute) into the serving
     /// variant's latency EWMA at completion, so the estimate is
@@ -70,7 +74,7 @@ impl BatchQueue {
     /// Enqueue a query; returns the receiver for its prediction. After
     /// `close()`, the sender is dropped immediately so the receiver sees a
     /// disconnect instead of blocking forever.
-    pub fn submit(&self, ids: Vec<u32>) -> Receiver<f64> {
+    pub fn submit(&self, ids: Vec<u32>) -> Receiver<PredVec> {
         let (tx, rx) = channel();
         {
             let mut st = self.state.lock().unwrap();
@@ -84,7 +88,7 @@ impl BatchQueue {
 
     /// Enqueue many queries under one lock acquisition and one wakeup —
     /// the batch API's fast path. Receivers are returned in input order.
-    pub fn submit_many(&self, batches: Vec<Vec<u32>>) -> Vec<Receiver<f64>> {
+    pub fn submit_many(&self, batches: Vec<Vec<u32>>) -> Vec<Receiver<PredVec>> {
         let mut rxs = Vec::with_capacity(batches.len());
         {
             let mut st = self.state.lock().unwrap();
@@ -167,10 +171,10 @@ mod tests {
         let batch = q.next_batch().unwrap();
         assert_eq!(batch.len(), 4);
         for (i, p) in batch.into_iter().enumerate() {
-            p.respond.send(i as f64).unwrap();
+            p.respond.send(PredVec::scalar(i as f64)).unwrap();
         }
         for (i, rx) in rxs.into_iter().enumerate() {
-            assert_eq!(rx.recv().unwrap(), i as f64);
+            assert_eq!(rx.recv().unwrap(), PredVec::scalar(i as f64));
         }
     }
 
@@ -230,10 +234,10 @@ mod tests {
             assert_eq!(p.ids, vec![i as u32]);
         }
         for (i, p) in batch.into_iter().enumerate() {
-            p.respond.send(i as f64 * 2.0).unwrap();
+            p.respond.send(PredVec::scalar(i as f64 * 2.0)).unwrap();
         }
         for (i, rx) in rxs.into_iter().enumerate() {
-            assert_eq!(rx.recv().unwrap(), i as f64 * 2.0);
+            assert_eq!(rx.recv().unwrap(), PredVec::scalar(i as f64 * 2.0));
         }
     }
 
@@ -252,7 +256,7 @@ mod tests {
                 while let Some(batch) = q.next_batch() {
                     for p in batch {
                         let id = p.ids[0];
-                        p.respond.send(id as f64).unwrap();
+                        p.respond.send(PredVec::scalar(id as f64)).unwrap();
                         served.push(id);
                     }
                 }
@@ -261,7 +265,7 @@ mod tests {
         }
         let rxs: Vec<_> = (0..total).map(|i| q.submit(vec![i])).collect();
         for (i, rx) in rxs.into_iter().enumerate() {
-            assert_eq!(rx.recv().unwrap(), i as f64, "query {i} misrouted");
+            assert_eq!(rx.recv().unwrap(), PredVec::scalar(i as f64), "query {i} misrouted");
         }
         q.close();
         let mut all: Vec<u32> = Vec::new();
@@ -299,7 +303,7 @@ mod tests {
             let q = q.clone();
             handles.push(thread::spawn(move || {
                 let rx = q.submit(vec![i]);
-                rx.recv().unwrap()
+                rx.recv().unwrap().first()
             }));
         }
         // Drain in a worker: echo first id as the "prediction".
@@ -310,7 +314,7 @@ mod tests {
                 while served < 16 {
                     if let Some(batch) = q.next_batch() {
                         for p in batch {
-                            let v = p.ids[0] as f64;
+                            let v = PredVec::scalar(p.ids[0] as f64);
                             p.respond.send(v).unwrap();
                             served += 1;
                         }

@@ -19,6 +19,7 @@
 //! Contention (`lock would have blocked`) and coalesced-follower counts
 //! are exported through the service `stats` command.
 
+use crate::pred::PredVec;
 use fxhash::{FxHashMap, FxHasher};
 use std::collections::VecDeque;
 use std::hash::{Hash, Hasher};
@@ -80,7 +81,13 @@ pub fn shard_index(key: u64, shard_bits: u32) -> usize {
 }
 
 struct Entry {
-    value: f64,
+    /// The full prediction bundle for this key — every declared
+    /// characteristic from the one forward pass that computed it.
+    /// `PredVec` is `Copy` and inline, so entries stay uniform-size:
+    /// capacity accounting is still a plain entry count, with each
+    /// entry a fixed `size_of::<Entry>()` regardless of how many
+    /// characteristics the bundle declares.
+    value: PredVec,
     /// Stamp of this entry's newest pair in `order`; older pairs for the
     /// same key are stale and skipped during eviction.
     stamp: u64,
@@ -92,7 +99,7 @@ struct Shard {
     order: VecDeque<(u64, u64)>,
     stamp: u64,
     /// Keys with a model invocation in flight → waiters to notify.
-    inflight: FxHashMap<u64, Vec<Sender<Option<f64>>>>,
+    inflight: FxHashMap<u64, Vec<Sender<Option<PredVec>>>>,
 }
 
 impl Shard {
@@ -107,7 +114,7 @@ impl Shard {
 
     /// Re-stamp `key` as most recently used; returns its value if present.
     /// One hash probe serves both the hit test and the promotion.
-    fn promote(&mut self, key: u64) -> Option<f64> {
+    fn promote(&mut self, key: u64) -> Option<PredVec> {
         let e = self.entries.get_mut(&key)?;
         self.stamp += 1;
         e.stamp = self.stamp;
@@ -135,7 +142,7 @@ impl Shard {
 
     /// Insert (or refresh) an entry, evicting the least-recently-used
     /// genuine entries down to `cap`.
-    fn insert(&mut self, key: u64, value: f64, cap: usize) {
+    fn insert(&mut self, key: u64, value: PredVec, cap: usize) {
         self.stamp += 1;
         let stamp = self.stamp;
         if self.entries.insert(key, Entry { value, stamp }).is_none() {
@@ -158,10 +165,10 @@ impl Shard {
 /// Result of a cache lookup on the serving path.
 pub enum Lookup<'a> {
     /// Cached value, promoted to most-recently-used.
-    Hit(f64),
+    Hit(PredVec),
     /// Another thread is already computing this key; park on the receiver
     /// for its denormalized value (`None` = the leader failed).
-    Wait(Receiver<Option<f64>>),
+    Wait(Receiver<Option<PredVec>>),
     /// This thread is the leader: it must run the model and then
     /// [`FlightGuard::complete`]. Dropping the guard without completing
     /// signals failure to any followers.
@@ -184,7 +191,7 @@ impl FlightGuard<'_> {
 
     /// Publish the computed value: insert into the cache and wake all
     /// followers with `Some(value)`.
-    pub fn complete(mut self, value: f64) {
+    pub fn complete(mut self, value: PredVec) {
         self.done = true;
         self.cache.fulfill(self.key, Some(value));
     }
@@ -275,7 +282,7 @@ impl PredictionCache {
 
     /// Resolve an in-flight key: cache the value (if any) and notify all
     /// waiters outside the lock.
-    fn fulfill(&self, key: u64, value: Option<f64>) {
+    fn fulfill(&self, key: u64, value: Option<PredVec>) {
         let waiters = {
             let mut shard = self.lock_shard(key);
             let waiters = shard.inflight.remove(&key).unwrap_or_default();
@@ -290,7 +297,7 @@ impl PredictionCache {
     }
 
     /// Plain get (promotes on hit); bypasses single-flight bookkeeping.
-    pub fn get(&self, key: u64) -> Option<f64> {
+    pub fn get(&self, key: u64) -> Option<PredVec> {
         let v = self.lock_shard(key).promote(key);
         match v {
             Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
@@ -300,7 +307,7 @@ impl PredictionCache {
     }
 
     /// Plain insert; bypasses single-flight bookkeeping.
-    pub fn put(&self, key: u64, value: f64) {
+    pub fn put(&self, key: u64, value: PredVec) {
         let mut shard = self.lock_shard(key);
         let cap = self.per_shard_cap;
         shard.insert(key, value, cap);
@@ -342,8 +349,8 @@ mod tests {
         let c = PredictionCache::new(8);
         let k = cache_key("m", &[1, 2, 3]);
         assert_eq!(c.get(k), None);
-        c.put(k, 7.5);
-        assert_eq!(c.get(k), Some(7.5));
+        c.put(k, PredVec::scalar(7.5));
+        assert_eq!(c.get(k), Some(PredVec::scalar(7.5)));
         assert_eq!(c.stats(), (1, 1));
     }
 
@@ -386,11 +393,11 @@ mod tests {
         // Single shard: deterministic global eviction order.
         let c = PredictionCache::with_shards(3, 1);
         for i in 0..10u32 {
-            c.put(cache_key("m", &[i]), i as f64);
+            c.put(cache_key("m", &[i]), PredVec::scalar(i as f64));
         }
         assert_eq!(c.len(), 3);
         // The newest entries survive.
-        assert_eq!(c.get(cache_key("m", &[9])), Some(9.0));
+        assert_eq!(c.get(cache_key("m", &[9])), Some(PredVec::scalar(9.0)));
         assert_eq!(c.get(cache_key("m", &[0])), None);
     }
 
@@ -399,7 +406,7 @@ mod tests {
         let c = PredictionCache::new(64);
         assert_eq!(c.shard_count(), DEFAULT_SHARDS);
         for i in 0..1000u32 {
-            c.put(cache_key("m", &[i]), i as f64);
+            c.put(cache_key("m", &[i]), PredVec::scalar(i as f64));
         }
         assert!(c.len() <= 64, "len {} exceeds capacity", c.len());
         assert!(c.len() >= DEFAULT_SHARDS, "len {} suspiciously small", c.len());
@@ -409,10 +416,10 @@ mod tests {
     fn put_same_key_updates_without_growth() {
         let c = PredictionCache::with_shards(2, 1);
         let k = cache_key("m", &[5]);
-        c.put(k, 1.0);
-        c.put(k, 2.0);
+        c.put(k, PredVec::scalar(1.0));
+        c.put(k, PredVec::scalar(2.0));
         assert_eq!(c.len(), 1);
-        assert_eq!(c.get(k), Some(2.0));
+        assert_eq!(c.get(k), Some(PredVec::scalar(2.0)));
     }
 
     #[test]
@@ -424,26 +431,26 @@ mod tests {
             cache_key("m", &[3]),
             cache_key("m", &[4]),
         );
-        c.put(ka, 1.0);
-        c.put(kb, 2.0);
-        c.put(kc, 3.0);
+        c.put(ka, PredVec::scalar(1.0));
+        c.put(kb, PredVec::scalar(2.0));
+        c.put(kc, PredVec::scalar(3.0));
         // Touch the oldest entry: it must now outlive kb under pressure.
-        assert_eq!(c.get(ka), Some(1.0));
-        c.put(kd, 4.0);
+        assert_eq!(c.get(ka), Some(PredVec::scalar(1.0)));
+        c.put(kd, PredVec::scalar(4.0));
         assert_eq!(c.len(), 3);
-        assert_eq!(c.get(ka), Some(1.0), "promoted entry was evicted");
+        assert_eq!(c.get(ka), Some(PredVec::scalar(1.0)), "promoted entry was evicted");
         assert_eq!(c.get(kb), None, "LRU entry survived eviction");
-        assert_eq!(c.get(kc), Some(3.0));
-        assert_eq!(c.get(kd), Some(4.0));
+        assert_eq!(c.get(kc), Some(PredVec::scalar(3.0)));
+        assert_eq!(c.get(kd), Some(PredVec::scalar(4.0)));
     }
 
     #[test]
     fn heavy_reuse_does_not_leak_order_queue() {
         let c = PredictionCache::with_shards(4, 1);
         let k = cache_key("m", &[1]);
-        c.put(k, 1.0);
+        c.put(k, PredVec::scalar(1.0));
         for _ in 0..10_000 {
-            assert_eq!(c.get(k), Some(1.0));
+            assert_eq!(c.get(k), Some(PredVec::scalar(1.0)));
         }
         let shard = c.shards[0].lock().unwrap();
         assert!(
@@ -458,7 +465,7 @@ mod tests {
         let c = PredictionCache::with_shards(4, 1);
         let k = cache_key("m", &[1]);
         for i in 0..10_000 {
-            c.put(k, i as f64);
+            c.put(k, PredVec::scalar(i as f64));
         }
         let shard = c.shards[0].lock().unwrap();
         assert!(
@@ -473,7 +480,7 @@ mod tests {
         let c = PredictionCache::new(4);
         assert!(c.shard_count() <= 4, "shards {} exceed capacity 4", c.shard_count());
         for i in 0..100u32 {
-            c.put(cache_key("m", &[i]), i as f64);
+            c.put(cache_key("m", &[i]), PredVec::scalar(i as f64));
         }
         assert!(c.len() <= 4, "len {} exceeds tiny capacity", c.len());
     }
@@ -491,6 +498,9 @@ mod tests {
             let barrier = barrier.clone();
             handles.push(std::thread::spawn(move || {
                 barrier.wait();
+                // The flight carries the FULL characteristic vector; a
+                // follower receives every element, not just the primary.
+                let vec = PredVec::from_slice(&[7.25, 93.0]);
                 match c.lookup(key) {
                     Lookup::Hit(v) => v,
                     Lookup::Wait(rx) => rx.recv().unwrap().expect("leader failed"),
@@ -499,21 +509,21 @@ mod tests {
                         // Simulate the model invocation all followers
                         // coalesce onto.
                         std::thread::sleep(Duration::from_millis(30));
-                        guard.complete(7.25);
-                        7.25
+                        guard.complete(vec);
+                        vec
                     }
                 }
             }));
         }
         for h in handles {
-            assert_eq!(h.join().unwrap(), 7.25);
+            assert_eq!(h.join().unwrap(), PredVec::from_slice(&[7.25, 93.0]));
         }
         assert_eq!(leaders.load(Ordering::SeqCst), 1, "exactly one model invocation");
         // Everyone else either coalesced onto the flight or hit the cache
         // after the leader published.
         let (hits, _) = c.stats();
         assert_eq!(c.coalesced() + hits + 1, 32);
-        assert_eq!(c.get(key), Some(7.25));
+        assert_eq!(c.get(key), Some(PredVec::from_slice(&[7.25, 93.0])));
     }
 
     #[test]
@@ -543,7 +553,7 @@ mod tests {
             handles.push(std::thread::spawn(move || {
                 barrier.wait();
                 for i in 0..2000u32 {
-                    c.put(cache_key("m", &[t, i]), i as f64);
+                    c.put(cache_key("m", &[t, i]), PredVec::scalar(i as f64));
                     c.get(cache_key("m", &[t, i]));
                 }
             }));

@@ -42,36 +42,72 @@ pub struct CachedEncode {
     pub key: u64,
 }
 
-/// Sharded `hash(target, variant, model, text)` → [`CachedEncode`] memo.
-/// Hit/miss accounting lives on `ServiceStats` (`frontend_memo_hits`),
-/// not here — the probe itself stays free of atomic traffic.
-pub struct FrontendMemo {
-    shards: Vec<Mutex<FxHashMap<u64, CachedEncode>>>,
+/// Generic sharded clear-on-full memo: `u64` hash key → any cloneable
+/// value, `N` power-of-two shards each behind its own `Mutex`. Both
+/// serving-path memos are instances of this one type — the per-variant
+/// encode memo ([`FrontendMemo`] = `ShardedMemo<CachedEncode>`) and the
+/// router's token-length memo (`LenMemo` in `super::router`) — so the
+/// shard selection, capacity clamp, and the clear-on-full subtlety
+/// (refreshing an existing key at capacity must not wipe the shard)
+/// are written and tested once.
+pub struct ShardedMemo<V> {
+    shards: Vec<Mutex<FxHashMap<u64, V>>>,
     shard_bits: u32,
     per_shard_cap: usize,
 }
 
-impl FrontendMemo {
+impl<V: Clone> ShardedMemo<V> {
     /// Memo holding ~`capacity` entries across [`DEFAULT_MEMO_SHARDS`]
     /// shards.
-    pub fn new(capacity: usize) -> FrontendMemo {
-        FrontendMemo::with_shards(capacity, DEFAULT_MEMO_SHARDS)
+    pub fn new(capacity: usize) -> ShardedMemo<V> {
+        ShardedMemo::with_shards(capacity, DEFAULT_MEMO_SHARDS)
     }
 
     /// Explicit shard count (rounded to a power of two, clamped so tiny
     /// capacities are not multiplied — same rule as the prediction cache).
-    pub fn with_shards(capacity: usize, shards: usize) -> FrontendMemo {
+    pub fn with_shards(capacity: usize, shards: usize) -> ShardedMemo<V> {
         let n = shards
             .max(1)
             .next_power_of_two()
             .min(capacity.max(1).next_power_of_two());
-        FrontendMemo {
+        ShardedMemo {
             shards: (0..n).map(|_| Mutex::new(FxHashMap::default())).collect(),
             shard_bits: n.trailing_zeros(),
             per_shard_cap: (capacity / n).max(1),
         }
     }
 
+    fn shard(&self, key: u64) -> &Mutex<FxHashMap<u64, V>> {
+        &self.shards[super::cache::shard_index(key, self.shard_bits)]
+    }
+
+    pub fn get(&self, key: u64) -> Option<V> {
+        self.shard(key).lock().unwrap().get(&key).cloned()
+    }
+
+    pub fn insert(&self, key: u64, value: V) {
+        let mut shard = self.shard(key).lock().unwrap();
+        if shard.len() >= self.per_shard_cap && !shard.contains_key(&key) {
+            shard.clear();
+        }
+        shard.insert(key, value);
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Sharded `hash(target, variant, model, text)` → [`CachedEncode`] memo.
+/// Hit/miss accounting lives on `ServiceStats` (`frontend_memo_hits`),
+/// not here — the probe itself stays free of atomic traffic.
+pub type FrontendMemo = ShardedMemo<CachedEncode>;
+
+impl FrontendMemo {
     /// One FxHash pass over the raw MLIR text — the only *full-text*
     /// hash a query ever pays. Every memo key (this memo's and the
     /// router's token-length memo's) is derived from this digest with
@@ -101,30 +137,6 @@ impl FrontendMemo {
         model.hash(&mut h);
         text_hash.hash(&mut h);
         h.finish()
-    }
-
-    fn shard(&self, key: u64) -> &Mutex<FxHashMap<u64, CachedEncode>> {
-        &self.shards[super::cache::shard_index(key, self.shard_bits)]
-    }
-
-    pub fn get(&self, text_key: u64) -> Option<CachedEncode> {
-        self.shard(text_key).lock().unwrap().get(&text_key).cloned()
-    }
-
-    pub fn insert(&self, text_key: u64, enc: CachedEncode) {
-        let mut shard = self.shard(text_key).lock().unwrap();
-        if shard.len() >= self.per_shard_cap && !shard.contains_key(&text_key) {
-            shard.clear();
-        }
-        shard.insert(text_key, enc);
-    }
-
-    pub fn len(&self) -> usize {
-        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.len() == 0
     }
 }
 

@@ -64,6 +64,7 @@ pub mod stats;
 use crate::bundle::Bundle;
 use crate::cluster::{Cluster, PeerReply};
 use crate::mlir::{parse_function, Function};
+use crate::pred::PredVec;
 use crate::runtime::{Executable, Manifest, Runtime, Tensor};
 use crate::sim::Target;
 use crate::tokenizer::token_count;
@@ -116,12 +117,25 @@ impl Default for ServeOptions {
 /// max_len 512; ids are shared, not duplicated, on hit).
 const FRONTEND_MEMO_CAPACITY: usize = 8192;
 
-/// One routed prediction: the value plus which registered variant
-/// served it (surfaced on the wire as the response's `variant` field).
+/// One routed prediction: the full characteristic vector from ONE
+/// forward pass, plus which registered variant served it (surfaced on
+/// the wire as the response's `variant` field). `targets` names the
+/// vector's slots in declared order — `value.get(i)` is the prediction
+/// for `targets[i]`, and `value.first()` is the primary target's value
+/// (the scalar the legacy `prediction` wire field carries).
 #[derive(Debug, Clone)]
 pub struct RoutedPrediction {
-    pub value: f64,
+    pub value: PredVec,
+    pub targets: Vec<Target>,
     pub variant: Arc<str>,
+}
+
+impl RoutedPrediction {
+    /// The prediction for one named characteristic, if this variant
+    /// serves it.
+    pub fn value_for(&self, target: Target) -> Option<f64> {
+        self.targets.iter().position(|&t| t == target).and_then(|i| self.value.get(i))
+    }
 }
 
 /// The cost-model service a DL-compiler connects to.
@@ -192,7 +206,7 @@ impl Service {
         // failed startup must not leave worker pools parked on orphaned
         // queues.
         router::validate_variant_set(
-            specs.iter().map(|s| (s.bundle.target, s.name.as_str(), s.bundle.scheme)),
+            specs.iter().map(|s| (s.bundle.primary_target(), s.name.as_str(), s.bundle.scheme)),
         )?;
         let cache = Arc::new(PredictionCache::new(65536));
         let stats = Arc::new(stats::ServiceStats::default());
@@ -234,6 +248,7 @@ impl Service {
                         ladder.clone(),
                         bundle.params.clone(),
                         bundle.max_len,
+                        bundle.n_targets(),
                         queue.clone(),
                         stats.clone(),
                         ewma_us.clone(),
@@ -241,9 +256,10 @@ impl Service {
                     )
                 })
                 .collect();
-            let cache_ns = cache_namespace(bundle.target.name(), &name, &bundle.model);
+            let group = bundle.primary_target();
+            let cache_ns = cache_namespace(group.name(), &name, &bundle.model);
             variants.push((
-                bundle.target,
+                group,
                 Variant {
                     name: Arc::from(name.as_str()),
                     bundle,
@@ -304,17 +320,24 @@ impl Service {
     }
 
     /// Route one query: measure its token length (memoized per text),
-    /// pick a variant by length + optional budget, and produce that
-    /// variant's encoding (memoized per (variant, text)). Returns the
-    /// chosen variant's index into `tr.variants` plus the encoding.
-    /// Parse failures are not memoized — the error path is not the hot
-    /// path.
+    /// pick a variant by length + optional budget + required
+    /// characteristic coverage, and produce that variant's encoding
+    /// (memoized per (variant, text)). Returns the chosen variant's
+    /// index into `tr.variants` plus the encoding. Parse failures are
+    /// not memoized — the error path is not the hot path.
+    ///
+    /// `required` lists the characteristics the caller needs in the
+    /// answer: a variant whose bundle does not serve ALL of them is
+    /// invisible to routing, and when no variant covers the set the
+    /// query fails with a clean `targets_not_served` error — never a
+    /// silent partial answer.
     fn route_on(
         &self,
         tr: &TargetRoutes,
         target: Target,
         mlir_text: &str,
         budget_us: Option<u64>,
+        required: &[Target],
     ) -> Result<(usize, CachedEncode)> {
         let t0 = Instant::now();
         // ONE full-text hash per query; both memo keys derive from it.
@@ -336,13 +359,28 @@ impl Service {
             }
         };
         // Step 2: the routing decision.
-        let Some((vidx, downgraded)) = tr.choose(token_len, budget_us) else {
-            self.stats.no_covering_variant.fetch_add(1, Ordering::Relaxed);
+        let Some((vidx, downgraded)) = tr.choose(token_len, budget_us, required) else {
+            // Two distinct refusals: nothing covers the token length
+            // (the pre-multi-output error, message unchanged), or the
+            // length is covered but no eligible variant serves every
+            // requested characteristic.
+            if !tr.covers_len(token_len) {
+                self.stats.no_covering_variant.fetch_add(1, Ordering::Relaxed);
+                bail!(
+                    "no variant of target '{}' covers token length {token_len} \
+                     (largest registered max_len is {})",
+                    target.name(),
+                    tr.largest_max_len(),
+                );
+            }
+            self.stats.targets_not_served.fetch_add(1, Ordering::Relaxed);
+            let missing: Vec<&str> =
+                tr.unserved(required).into_iter().map(|t| t.name()).collect();
             bail!(
-                "no variant of target '{}' covers token length {token_len} \
-                 (largest registered max_len is {})",
+                "targets_not_served: no variant of target '{}' serves requested \
+                 characteristic(s) [{}]",
                 target.name(),
-                tr.largest_max_len(),
+                missing.join(", "),
             );
         };
         let variant = &tr.variants[vidx];
@@ -377,30 +415,46 @@ impl Service {
         Ok((vidx, enc))
     }
 
-    /// Predict a hardware characteristic for a raw MLIR function text.
-    /// Routes to the cheapest covering variant (no budget); see
-    /// [`Service::predict_with`] for per-request latency budgets.
+    /// Predict the primary hardware characteristic for a raw MLIR
+    /// function text (scalar back-compat surface). Routes to the
+    /// cheapest covering variant (no budget); see
+    /// [`Service::predict_with`] for per-request latency budgets and
+    /// [`Service::predict_full`] for the whole characteristic vector.
     pub fn predict(&self, target: Target, mlir_text: &str) -> Result<f64> {
-        Ok(self.predict_with(target, mlir_text, None)?.value)
+        Ok(self.predict_with(target, mlir_text, None)?.value.first())
     }
 
-    /// The full request path: token-length routing (+ optional
-    /// `budget_us` downgrade) → memoized front end (zero-copy parse +
-    /// fused id-direct encode on first sight, one hash + one lookup on
-    /// duplicates) → sharded cache (single-flight) → batch → PJRT →
-    /// denormalize. A warm repeat of the same text allocates no `String`
-    /// anywhere on this path. The returned [`RoutedPrediction`] names
-    /// the variant that served the query.
+    /// [`Service::predict_full`] with no required-characteristic list:
+    /// any variant of the target group may serve.
     pub fn predict_with(
         &self,
         target: Target,
         mlir_text: &str,
         budget_us: Option<u64>,
     ) -> Result<RoutedPrediction> {
+        self.predict_full(target, mlir_text, budget_us, &[])
+    }
+
+    /// The full request path: token-length routing (+ optional
+    /// `budget_us` downgrade + required-characteristic coverage) →
+    /// memoized front end (zero-copy parse + fused id-direct encode on
+    /// first sight, one hash + one lookup on duplicates) → sharded
+    /// cache (single-flight) → batch → PJRT → denormalize. A warm
+    /// repeat of the same text allocates no `String` anywhere on this
+    /// path. The returned [`RoutedPrediction`] carries every
+    /// characteristic the serving variant declares — all produced by
+    /// ONE forward pass — and names the variant that served the query.
+    pub fn predict_full(
+        &self,
+        target: Target,
+        mlir_text: &str,
+        budget_us: Option<u64>,
+        required: &[Target],
+    ) -> Result<RoutedPrediction> {
         let t0 = Instant::now();
         self.stats.requests.fetch_add(1, Ordering::Relaxed);
         let tr = self.router.routes(target)?;
-        let (vidx, enc) = self.route_on(tr, target, mlir_text, budget_us)?;
+        let (vidx, enc) = self.route_on(tr, target, mlir_text, budget_us, required)?;
         let variant = &tr.variants[vidx];
         let value = match self.cache.lookup(enc.key) {
             Lookup::Hit(v) => {
@@ -411,7 +465,11 @@ impl Service {
             Lookup::Miss(guard) => self.complete_miss(variant, &enc, guard)?,
         };
         self.stats.record_latency_us(t0.elapsed().as_micros() as u64);
-        Ok(RoutedPrediction { value, variant: variant.name.clone() })
+        Ok(RoutedPrediction {
+            value,
+            targets: variant.bundle.targets.clone(),
+            variant: variant.name.clone(),
+        })
     }
 
     /// Resolve a genuine local-cache miss (this thread is the
@@ -426,7 +484,7 @@ impl Service {
         variant: &Variant,
         enc: &CachedEncode,
         guard: FlightGuard<'_>,
-    ) -> Result<f64> {
+    ) -> Result<PredVec> {
         let owner = self.cluster.as_ref().and_then(|c| c.owner_peer(enc.key));
         let mut write_back = false;
         if let Some(peer) = owner {
@@ -461,7 +519,7 @@ impl Service {
         // don't feed it: a hit costs the same on every variant.
         let rx = variant.queue.submit(enc.ids.as_ref().clone());
         let norm = rx.recv().map_err(|_| anyhow!("prediction worker gone"))?;
-        let value = variant.bundle.stats.denormalize(norm);
+        let value = variant.bundle.denormalize(norm);
         guard.complete(value);
         if write_back {
             if let Some(peer) = owner {
@@ -473,12 +531,13 @@ impl Service {
         Ok(value)
     }
 
-    /// Batch API: predict for many MLIR texts in one call, routing each
-    /// entry independently (no budget). See [`Service::predict_many_with`].
+    /// Batch API: predict the primary characteristic for many MLIR
+    /// texts in one call, routing each entry independently (no budget).
+    /// See [`Service::predict_many_with`].
     pub fn predict_many(&self, target: Target, mlir_texts: &[&str]) -> Vec<Result<f64>> {
         self.predict_many_with(target, mlir_texts, None)
             .into_iter()
-            .map(|r| r.map(|p| p.value))
+            .map(|r| r.map(|p| p.value.first()))
             .collect()
     }
 
@@ -501,6 +560,20 @@ impl Service {
         target: Target,
         mlir_texts: &[&str],
         budget_us: Option<u64>,
+    ) -> Vec<Result<RoutedPrediction>> {
+        self.predict_many_full(target, mlir_texts, budget_us, &[])
+    }
+
+    /// [`Service::predict_many_with`] plus a required-characteristic
+    /// list applied to every entry: each row is served by a variant
+    /// covering ALL of `required`, or fails alone with a
+    /// `targets_not_served` error.
+    pub fn predict_many_full(
+        &self,
+        target: Target,
+        mlir_texts: &[&str],
+        budget_us: Option<u64>,
+        required: &[Target],
     ) -> Vec<Result<RoutedPrediction>> {
         let t0 = Instant::now();
         self.stats.requests.fetch_add(mlir_texts.len() as u64, Ordering::Relaxed);
@@ -532,10 +605,18 @@ impl Service {
                 write_back_key: Option<u64>,
             },
             Follower {
-                rx: std::sync::mpsc::Receiver<Option<f64>>,
+                rx: std::sync::mpsc::Receiver<Option<PredVec>>,
                 vidx: usize,
             },
         }
+
+        // One routed row: the variant's full characteristic vector plus
+        // its declared slot names.
+        let routed = |value: PredVec, vidx: usize| RoutedPrediction {
+            value,
+            targets: tr.variants[vidx].bundle.targets.clone(),
+            variant: tr.variants[vidx].name.clone(),
+        };
 
         // Phase 1: route + encode + partition (hits resolve
         // immediately). Misses are grouped per chosen variant. For a
@@ -546,15 +627,12 @@ impl Service {
         let mut miss_ids: Vec<Vec<Vec<u32>>> =
             (0..tr.variants.len()).map(|_| Vec::new()).collect();
         for text in mlir_texts {
-            match self.route_on(tr, target, text, budget_us) {
+            match self.route_on(tr, target, text, budget_us, required) {
                 Err(e) => slots.push(Slot::Done(Err(e))),
                 Ok((vidx, enc)) => match self.cache.lookup(enc.key) {
                     Lookup::Hit(v) => {
                         self.stats.cache_hits.fetch_add(1, Ordering::Relaxed);
-                        slots.push(Slot::Done(Ok(RoutedPrediction {
-                            value: v,
-                            variant: tr.variants[vidx].name.clone(),
-                        })));
+                        slots.push(Slot::Done(Ok(routed(v, vidx))));
                     }
                     Lookup::Wait(rx) => slots.push(Slot::Follower { rx, vidx }),
                     Lookup::Miss(guard) => {
@@ -608,10 +686,7 @@ impl Service {
                     PeerReply::Found(v) => {
                         self.stats.remote_hits.fetch_add(1, Ordering::Relaxed);
                         guard.complete(v);
-                        Slot::Done(Ok(RoutedPrediction {
-                            value: v,
-                            variant: tr.variants[vidx].name.clone(),
-                        }))
+                        Slot::Done(Ok(routed(v, vidx)))
                     }
                     PeerReply::NotFound => {
                         let next = Slot::Leader {
@@ -643,7 +718,7 @@ impl Service {
         // shot — a batch spanning variants fans out to every worker pool
         // at once. (Latency EWMAs are fed worker-side per request, so
         // the sequential leader collection below cannot skew them.)
-        let rxs_by_variant: Vec<Vec<std::sync::mpsc::Receiver<f64>>> = miss_ids
+        let rxs_by_variant: Vec<Vec<std::sync::mpsc::Receiver<PredVec>>> = miss_ids
             .into_iter()
             .enumerate()
             .map(|(vidx, ids)| {
@@ -670,7 +745,7 @@ impl Service {
                 let variant = &tr.variants[vidx];
                 let res = rxs_by_variant[vidx][miss_idx]
                     .recv()
-                    .map(|norm| variant.bundle.stats.denormalize(norm))
+                    .map(|norm| variant.bundle.denormalize(norm))
                     .map_err(|_| anyhow!("prediction worker gone"));
                 *slot = match res {
                     Ok(v) => {
@@ -684,7 +759,7 @@ impl Service {
                                 }
                             }
                         }
-                        Slot::Done(Ok(RoutedPrediction { value: v, variant: variant.name.clone() }))
+                        Slot::Done(Ok(routed(v, vidx)))
                     }
                     // `guard` drops here → followers are failed too.
                     Err(e) => Slot::Done(Err(e)),
@@ -698,9 +773,7 @@ impl Service {
             .into_iter()
             .map(|slot| match slot {
                 Slot::Done(r) => r,
-                Slot::Follower { rx, vidx } => wait_for_leader(rx).map(|value| {
-                    RoutedPrediction { value, variant: tr.variants[vidx].name.clone() }
-                }),
+                Slot::Follower { rx, vidx } => wait_for_leader(rx).map(|value| routed(value, vidx)),
                 Slot::Probe { .. } => unreachable!("probes resolved in phase 1.5"),
                 Slot::Leader { .. } => unreachable!("leaders resolved in phase 3"),
             })
@@ -724,11 +797,20 @@ impl Service {
                 let key = format!("{}/{}", target.name(), v.name);
                 let n = v.routed.load(Ordering::Relaxed);
                 routed = routed.with(&key, Json::num(n as f64));
+                let mut vj = Json::obj()
+                    .with("model", Json::str(&v.bundle.model))
+                    .with(
+                        "targets",
+                        Json::Arr(
+                            v.bundle.targets.iter().map(|t| Json::str(t.name())).collect(),
+                        ),
+                    );
+                if let Some(hw) = &v.bundle.hardware {
+                    vj = vj.with("hardware", Json::str(hw));
+                }
                 variants = variants.with(
                     &key,
-                    Json::obj()
-                        .with("model", Json::str(&v.bundle.model))
-                        .with("max_len", Json::num(v.bundle.max_len as f64))
+                    vj.with("max_len", Json::num(v.bundle.max_len as f64))
                         .with("routed", Json::num(n as f64))
                         .with(
                             "budget_downgrades",
@@ -782,7 +864,7 @@ impl Drop for Service {
 }
 
 /// Park on a single-flight leader's answer.
-fn wait_for_leader(rx: std::sync::mpsc::Receiver<Option<f64>>) -> Result<f64> {
+fn wait_for_leader(rx: std::sync::mpsc::Receiver<Option<PredVec>>) -> Result<PredVec> {
     match rx.recv() {
         Ok(Some(v)) => Ok(v),
         Ok(None) => Err(anyhow!("coalesced prediction failed (leader errored)")),
@@ -794,6 +876,7 @@ fn spawn_worker(
     ladder: Vec<(PathBuf, usize)>,
     params: Vec<Tensor>,
     max_len: usize,
+    n_targets: usize,
     queue: Arc<BatchQueue>,
     stats: Arc<stats::ServiceStats>,
     ewma_us: Arc<stats::LatencyEwma>,
@@ -842,7 +925,7 @@ fn spawn_worker(
             if pending.is_empty() {
                 continue;
             }
-            serve_flush(&exes, &params, max_len, &pending, &stats, &ewma_us);
+            serve_flush(&exes, &params, max_len, n_targets, &pending, &stats, &ewma_us);
         }
     })
 }
@@ -880,6 +963,7 @@ fn serve_flush(
     exes: &[(Executable, usize)],
     params: &[Tensor],
     max_len: usize,
+    n_targets: usize,
     pending: &[Pending],
     stats: &stats::ServiceStats,
     ewma_us: &stats::LatencyEwma,
@@ -894,7 +978,7 @@ fn serve_flush(
             .find(|&&(_, b)| b == batch)
             .map(|(e, _)| e)
             .expect("plan_chunks only picks compiled rungs");
-        match run_chunk(exe, params, max_len, batch, chunk) {
+        match run_chunk(exe, params, max_len, batch, n_targets, chunk) {
             Ok(values) => {
                 stats.batches.fetch_add(1, Ordering::Relaxed);
                 stats.batched_queries.fetch_add(take as u64, Ordering::Relaxed);
@@ -930,21 +1014,38 @@ fn pack_batch(chunk: &[Pending], max_len: usize, batch: usize) -> Vec<i32> {
     ids
 }
 
-/// Execute one chunk (already sized to fit `batch`) on one rung.
+/// Execute one chunk (already sized to fit `batch`) on one rung. ONE
+/// forward pass yields every declared characteristic per row: a
+/// `[B, K]` multi-output head gives each row its K normalized values,
+/// while a legacy `[B]` head broadcasts its single output across the
+/// bundle's declared width (mirroring `Trainer::predict_set` — each
+/// slot still denormalizes by its own per-target stats downstream).
 fn run_chunk(
     exe: &Executable,
     params: &[Tensor],
     max_len: usize,
     batch: usize,
+    n_targets: usize,
     chunk: &[Pending],
-) -> Result<Vec<f64>> {
+) -> Result<Vec<PredVec>> {
     debug_assert!(chunk.len() <= batch);
     let ids = pack_batch(chunk, max_len, batch);
     let mut inputs = params.to_vec();
     inputs.push(Tensor::i32(vec![batch as i64, max_len as i64], ids)?);
     let res = exe.run(&inputs)?;
     let vals = res[0].as_f32()?;
-    Ok(vals[..chunk.len()].iter().map(|&v| v as f64).collect())
+    let k = n_targets.max(1);
+    let wide = vals.len() >= batch * k; // [B, K] row-major head
+    let mut out = Vec::with_capacity(chunk.len());
+    for row in 0..chunk.len() {
+        let mut p = PredVec::new();
+        for j in 0..k {
+            let v = if wide { vals[row * k + j] } else { vals[row] };
+            p.push(v as f64);
+        }
+        out.push(p);
+    }
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -1026,6 +1127,84 @@ mod tests {
         let Some(svc) = test_service() else { return };
         let text = graph_text(1, 2);
         assert!(svc.predict(Target::Cycles, &text).is_err());
+    }
+
+    /// The tentpole end to end: a bundle declaring several
+    /// characteristics answers ALL of them from ONE forward pass — one
+    /// batched model invocation, a full-width vector back, every slot
+    /// denormalized by its own target's stats.
+    #[test]
+    fn multi_target_bundle_predicts_all_characteristics_in_one_pass() {
+        let adir = artifacts_dir();
+        if !adir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let manifest = Arc::new(Manifest::load(&adir).unwrap());
+        let streams = vec![vec!["xpu.matmul".to_string()]];
+        let vocab = Vocab::build(streams.iter(), 1);
+        let bundle = Bundle::untrained_multi(
+            &manifest,
+            "fc_ops",
+            &[Target::Cycles, Target::XpuUtil],
+            Scheme::OpsOnly,
+            vocab,
+            vec![
+                TargetStats { mean: 900.0, std: 200.0, min: 100.0, max: 4000.0 },
+                TargetStats { mean: 40.0, std: 10.0, min: 0.0, max: 100.0 },
+            ],
+            Some("xpu-v1".to_string()),
+        )
+        .unwrap();
+        let svc =
+            Service::start(manifest, vec![bundle], BatchPolicy::default(), false).unwrap();
+        let text = graph_text(3, 4);
+        let r = svc
+            .predict_full(Target::Cycles, &text, None, &[Target::Cycles, Target::XpuUtil])
+            .unwrap();
+        assert_eq!(r.targets, vec![Target::Cycles, Target::XpuUtil]);
+        assert_eq!(r.value.len(), 2);
+        assert!(r.value.iter().all(|v| v.is_finite()));
+        assert_eq!(r.value_for(Target::Cycles), Some(r.value.first()));
+        assert!(r.value_for(Target::RegPressure).is_none());
+        // ONE model invocation produced the whole vector.
+        assert_eq!(svc.stats.batched_queries.load(Ordering::Relaxed), 1);
+        // The scalar surface still serves the primary target.
+        assert_eq!(svc.predict(Target::Cycles, &text).unwrap(), r.value.first());
+        // The per-variant stats view names the declared targets.
+        let j = svc.stats_json();
+        let v = j.get("variants").unwrap().get("cycles/fc_ops").unwrap();
+        let names: Vec<&str> =
+            v.req_arr("targets").unwrap().iter().filter_map(|t| t.as_str()).collect();
+        assert_eq!(names, vec!["cycles", "xpuutil"]);
+    }
+
+    /// A request requiring characteristics no variant serves fails with
+    /// a clean `targets_not_served` error naming the gap — never a
+    /// silent partial answer — and the counter moves.
+    #[test]
+    fn unserved_characteristics_are_a_clean_error() {
+        let Some(svc) = test_service() else { return };
+        let text = graph_text(1, 2);
+        let err = svc
+            .predict_full(
+                Target::RegPressure,
+                &text,
+                None,
+                &[Target::RegPressure, Target::Cycles],
+            )
+            .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("targets_not_served"), "unexpected error: {msg}");
+        assert!(msg.contains("cycles"), "missing characteristic not named: {msg}");
+        assert_eq!(svc.stats.targets_not_served.load(Ordering::Relaxed), 1);
+        // Length-uncovered queries keep their own error and counter.
+        assert_eq!(svc.stats.no_covering_variant.load(Ordering::Relaxed), 0);
+        // The service keeps serving satisfiable queries afterwards.
+        assert!(svc
+            .predict_full(Target::RegPressure, &text, None, &[Target::RegPressure])
+            .is_ok());
+        assert_eq!(svc.stats.targets_not_served.load(Ordering::Relaxed), 1);
     }
 
     #[test]
@@ -1366,7 +1545,7 @@ mod tests {
         for (text, row) in texts.iter().zip(&rows) {
             assert_eq!(
                 svc.predict(Target::RegPressure, text).unwrap(),
-                row.value,
+                row.value.first(),
                 "row out of order"
             );
         }

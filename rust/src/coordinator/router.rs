@@ -39,17 +39,17 @@
 //! each variant a different notion of "length").
 
 use super::batcher::BatchQueue;
-use super::cache::shard_index;
+use super::frontend::ShardedMemo;
 use super::stats::LatencyEwma;
 use crate::bundle::Bundle;
 use crate::sim::Target;
 use crate::tokenizer::Scheme;
 use anyhow::{anyhow, bail, Result};
-use fxhash::{FxHashMap, FxHasher};
+use fxhash::FxHasher;
 use std::collections::HashMap;
 use std::hash::{Hash, Hasher};
 use std::sync::atomic::AtomicU64;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 
 /// What `mlir-cost serve --variants` (or a library caller) registers:
@@ -93,20 +93,42 @@ pub(crate) struct TargetRoutes {
 }
 
 impl TargetRoutes {
-    /// Pick a variant for a query of `token_len` tokens. See
-    /// [`choose_variant`] for the decision rule. `None` = no variant
-    /// covers the length.
+    /// Pick a variant for a query of `token_len` tokens that serves
+    /// every characteristic in `required` (empty = any variant of this
+    /// target qualifies). See [`choose_variant`] for the decision rule.
+    /// `None` = no eligible variant covers the length.
     pub(crate) fn choose(
         &self,
         token_len: usize,
         budget_us: Option<u64>,
+        required: &[Target],
     ) -> Option<(usize, bool)> {
         choose_variant(
             self.variants.len(),
-            |i| (self.variants[i].bundle.max_len, self.variants[i].ewma_us.get()),
+            |i| {
+                let v = &self.variants[i];
+                (v.bundle.max_len, v.ewma_us.get(), v.bundle.serves_all(required))
+            },
             token_len,
             budget_us,
         )
+    }
+
+    /// Does ANY variant (eligible or not) cover this token length? Used
+    /// to tell a length failure (`no_covering_variant`) apart from a
+    /// characteristic-coverage failure (`targets_not_served`).
+    pub(crate) fn covers_len(&self, token_len: usize) -> bool {
+        self.variants.iter().any(|v| v.bundle.max_len >= token_len)
+    }
+
+    /// The requested characteristics no variant of this target serves
+    /// at all (for the `targets_not_served` error message).
+    pub(crate) fn unserved(&self, required: &[Target]) -> Vec<Target> {
+        required
+            .iter()
+            .copied()
+            .filter(|&t| !self.variants.iter().any(|v| v.bundle.targets.contains(&t)))
+            .collect()
     }
 
     /// The largest registered `max_len` (error messages).
@@ -120,10 +142,14 @@ impl TargetRoutes {
 }
 
 /// The routing decision, shared by the stateful router and the pure
-/// unit tests. `meta(i)` returns `(max_len, ewma_us)` for variant `i`
-/// of a `(max_len, name)`-ascending list. Returns
-/// `(chosen index, rerouted-by-budget)`; `None` when no variant covers
-/// `token_len`.
+/// unit tests. `meta(i)` returns `(max_len, ewma_us, eligible)` for
+/// variant `i` of a `(max_len, name)`-ascending list — `eligible` is
+/// false when the variant does not serve every requested
+/// characteristic, and such variants are invisible to every step of
+/// the rule (preferred pick and both budget scans): a query must never
+/// receive a silent partial answer. Returns
+/// `(chosen index, rerouted-by-budget)`; `None` when no eligible
+/// variant covers `token_len`.
 ///
 /// Rule: the *preferred* variant is the first (cheapest) cover. With a
 /// budget, if the preferred estimate exceeds it:
@@ -148,19 +174,24 @@ pub(crate) fn choose_variant<F>(
     budget_us: Option<u64>,
 ) -> Option<(usize, bool)>
 where
-    F: Fn(usize) -> (usize, f64),
+    F: Fn(usize) -> (usize, f64, bool),
 {
-    let preferred = (0..n).find(|&i| meta(i).0 >= token_len)?;
+    let preferred = (0..n).find(|&i| {
+        let (max_len, _, eligible) = meta(i);
+        eligible && max_len >= token_len
+    })?;
     if let Some(budget) = budget_us {
         let budget = budget as f64;
         if meta(preferred).1 > budget {
             for i in (preferred + 1)..n {
-                if meta(i).1 <= budget {
+                let (_, ewma, eligible) = meta(i);
+                if eligible && ewma <= budget {
                     return Some((i, true));
                 }
             }
             for i in (0..preferred).rev() {
-                if meta(i).1 <= budget {
+                let (_, ewma, eligible) = meta(i);
+                if eligible && ewma <= budget {
                     return Some((i, true));
                 }
             }
@@ -180,25 +211,17 @@ const LEN_MEMO_SHARDS: usize = 16;
 
 /// Sharded `FxHash(target, text)` → unpadded-token-count memo: the
 /// router's half of the duplicate-query fast path (the per-variant
-/// encode memo is the other half). Same trust model and clear-on-full
-/// eviction as [`super::frontend::FrontendMemo`].
+/// encode memo is the other half). An instance of the same generic
+/// [`ShardedMemo`] the encode memo uses — this thin wrapper only owns
+/// the key derivation and the `u32` clamp that keeps entries at 12
+/// bytes.
 pub(crate) struct LenMemo {
-    shards: Vec<Mutex<FxHashMap<u64, u32>>>,
-    shard_bits: u32,
-    per_shard_cap: usize,
+    memo: ShardedMemo<u32>,
 }
 
 impl LenMemo {
     fn new(capacity: usize) -> LenMemo {
-        let n = LEN_MEMO_SHARDS
-            .max(1)
-            .next_power_of_two()
-            .min(capacity.max(1).next_power_of_two());
-        LenMemo {
-            shards: (0..n).map(|_| Mutex::new(FxHashMap::default())).collect(),
-            shard_bits: n.trailing_zeros(),
-            per_shard_cap: (capacity / n).max(1),
-        }
+        LenMemo { memo: ShardedMemo::with_shards(capacity, LEN_MEMO_SHARDS) }
     }
 
     /// Memo key over `(target, text)` — hashes the full text; the hot
@@ -217,24 +240,16 @@ impl LenMemo {
         h.finish()
     }
 
-    fn shard(&self, key: u64) -> &Mutex<FxHashMap<u64, u32>> {
-        &self.shards[shard_index(key, self.shard_bits)]
-    }
-
     pub(crate) fn get(&self, key: u64) -> Option<usize> {
-        self.shard(key).lock().unwrap().get(&key).map(|&n| n as usize)
+        self.memo.get(key).map(|n| n as usize)
     }
 
     pub(crate) fn insert(&self, key: u64, token_len: usize) {
-        let mut shard = self.shard(key).lock().unwrap();
-        if shard.len() >= self.per_shard_cap && !shard.contains_key(&key) {
-            shard.clear();
-        }
-        shard.insert(key, token_len.min(u32::MAX as usize) as u32);
+        self.memo.insert(key, token_len.min(u32::MAX as usize) as u32);
     }
 
     pub(crate) fn len(&self) -> usize {
-        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+        self.memo.len()
     }
 }
 
@@ -322,12 +337,17 @@ mod tests {
     use super::*;
 
     /// Slice-backed wrapper for the pure decision rule: `meta[i]` is
-    /// `(max_len, ewma_us)`, max_len ascending.
-    fn pick(meta: &[(usize, f64)], len: usize, budget: Option<u64>) -> Option<(usize, bool)> {
+    /// `(max_len, ewma_us, eligible)`, max_len ascending.
+    fn pick(
+        meta: &[(usize, f64, bool)],
+        len: usize,
+        budget: Option<u64>,
+    ) -> Option<(usize, bool)> {
         choose_variant(meta.len(), |i| meta[i], len, budget)
     }
 
-    const LADDER: &[(usize, f64)] = &[(128, 300.0), (128, 900.0), (512, 5_000.0)];
+    const LADDER: &[(usize, f64, bool)] =
+        &[(128, 300.0, true), (128, 900.0, true), (512, 5_000.0, true)];
 
     #[test]
     fn cheapest_covering_variant_wins_without_budget() {
@@ -375,10 +395,10 @@ mod tests {
     fn cold_variant_fits_any_budget() {
         // ewma 0.0 = no evidence of slowness: it qualifies as a
         // downgrade landing spot...
-        let meta = [(128usize, 0.0), (512, 5_000.0)];
+        let meta = [(128usize, 0.0, true), (512, 5_000.0, true)];
         assert_eq!(pick(&meta, 200, Some(1_000)), Some((0, true)));
         // ...and as a preferred variant it never triggers a downgrade.
-        let cold = [(128usize, 0.0), (512, 0.0)];
+        let cold = [(128usize, 0.0, true), (512, 0.0, true)];
         assert_eq!(pick(&cold, 200, Some(1)), Some((1, false)));
     }
 
@@ -388,11 +408,11 @@ mod tests {
         // is fast (wide FC): a blown budget reroutes UP to the larger
         // covering variant — zero accuracy loss — before considering
         // any truncating downgrade.
-        let meta = [(128usize, 5_000.0), (512, 300.0)];
+        let meta = [(128usize, 5_000.0, true), (512, 300.0, true)];
         assert_eq!(pick(&meta, 50, Some(1_000)), Some((1, true)));
         // Even when a smaller truncating variant also fits the budget,
         // the covering sibling wins.
-        let meta3 = [(64usize, 100.0), (128, 5_000.0), (512, 300.0)];
+        let meta3 = [(64usize, 100.0, true), (128, 5_000.0, true), (512, 300.0, true)];
         assert_eq!(pick(&meta3, 100, Some(1_000)), Some((2, true)));
     }
 
@@ -401,6 +421,27 @@ mod tests {
         // Preferred blows the 1us budget and no sibling (larger or
         // smaller) fits either: serve preferred, count no reroute.
         assert_eq!(pick(LADDER, 50, Some(1)), Some((0, false)));
+    }
+
+    #[test]
+    fn ineligible_variants_are_invisible_to_every_step() {
+        // Preferred pick skips an ineligible cheaper cover: the query
+        // requires characteristics only the bigger variant serves.
+        let meta = [(128usize, 300.0, false), (512, 5_000.0, true)];
+        assert_eq!(pick(&meta, 50, None), Some((1, false)));
+        // All covers ineligible → no route, even with slack budget.
+        let none = [(128usize, 300.0, false), (512, 5_000.0, false)];
+        assert_eq!(pick(&none, 50, None), None);
+        assert_eq!(pick(&none, 50, Some(100_000)), None);
+        // A blown budget must not downgrade INTO an ineligible variant:
+        // the only budget-fitting smaller sibling is ineligible, so the
+        // preferred eligible cover serves anyway (honest latency, never
+        // a partial answer).
+        let trap = [(128usize, 100.0, false), (256, 200.0, true), (512, 5_000.0, true)];
+        assert_eq!(pick(&trap, 300, Some(1_000)), Some((2, false)));
+        // Upward budget rescue also respects eligibility.
+        let up = [(128usize, 5_000.0, true), (256, 100.0, false), (512, 300.0, true)];
+        assert_eq!(pick(&up, 50, Some(1_000)), Some((2, true)));
     }
 
     #[test]

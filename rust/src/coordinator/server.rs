@@ -5,16 +5,20 @@
 //!
 //! Request:  {"id": 7, "target": "regpressure", "mlir": "func.func @f..."}
 //!           {"id": 7, "target": "regpressure", "mlir": "...", "budget_us": 500}
+//!           {"id": 7, "target": "cycles", "mlir": "...", "targets": ["cycles", "xpuutil"]}
 //!           {"id": 10, "target": "regpressure", "mlir_batch": ["func.func @a...", "func.func @b..."]}
 //!           {"id": 8, "cmd": "stats"}
 //!           {"id": 9, "cmd": "ping"}
 //!           {"id": 11, "cmd": "cache_get", "key": "00f3a9..."}
-//!           {"id": 12, "cmd": "cache_put", "key": "00f3a9...", "value": 27.4}
-//! Response: {"id": 7, "ok": true, "prediction": 27.4, "variant": "fc_ops", "us": 812}
-//!           {"id": 10, "ok": true, "predictions": [{"ok": true, "prediction": 27.4, "variant": "fc_ops"},
+//!           {"id": 12, "cmd": "cache_put", "key": "00f3a9...", "value": [27.4, 61.0]}
+//! Response: {"id": 7, "ok": true, "prediction": 27.4, "predictions": {"regpressure": 27.4},
+//!            "variant": "fc_ops", "us": 812}
+//!           {"id": 10, "ok": true, "predictions": [{"ok": true, "prediction": 27.4,
+//!                                                   "predictions": {"regpressure": 27.4},
+//!                                                   "variant": "fc_ops"},
 //!                                                  {"ok": false, "error": "..."}], "us": 930}
 //!           {"id": 8, "ok": true, "stats": {...}}
-//!           {"id": 11, "ok": true, "found": true, "value": 27.4}   (or "found": false)
+//!           {"id": 11, "ok": true, "found": true, "value": [27.4, 61.0]}   (or "found": false)
 //!           {"id": 12, "ok": true, "stored": true}
 //!           {"id": 7, "ok": false, "error": "..."}
 //!
@@ -28,12 +32,25 @@
 //! registered variant fails with a per-entry error (and increments
 //! `no_covering_variant` in the stats).
 //!
+//! Predictions are multi-output: one forward pass yields every
+//! characteristic the serving variant's bundle declares, returned as
+//! the `predictions` object (characteristic name → value). The scalar
+//! `prediction` field stays — it carries the bundle's PRIMARY (first
+//! declared) characteristic, so pre-multi-output clients keep working
+//! unchanged. The optional request field `targets` lists the
+//! characteristics the caller requires; a variant that does not serve
+//! all of them is skipped by routing, and when none qualifies the
+//! request fails with a clean `targets_not_served` error (counted in
+//! the stats) — never a silent partial answer.
+//!
 //! `cache_get` / `cache_put` are the cluster tier's peer-to-peer
 //! commands (`crate::cluster`): a node that does not own a cache key
 //! probes the owner with `cache_get` before computing, and writes a
 //! value it had to compute back to the owner with `cache_put`. Keys are
 //! 16-digit hex strings ([`super::cache::key_to_wire`]) because JSON numbers
-//! lose u64 precision. Both commands are pure local-cache operations —
+//! lose u64 precision. Values are JSON arrays (the full characteristic
+//! vector); a bare number is still accepted on read as the pre-vector
+//! wire form, so mixed-version clusters interoperate. Both commands are pure local-cache operations —
 //! they never forward again and never invoke the model, so a `cache_get`
 //! storm from peers costs hash probes, not PJRT calls (and peer chains
 //! cannot recurse or deadlock).
@@ -83,6 +100,7 @@
 
 use super::Service;
 use crate::json::{parse, Json};
+use crate::pred::PredVec;
 use crate::sim::Target;
 use anyhow::{anyhow, Context, Result};
 use minipoll::{Epoll, EventFd, Events, EPOLLIN, EPOLLOUT, EPOLLRDHUP};
@@ -808,11 +826,13 @@ pub fn handle_line(service: &Service, line: &str) -> Json {
                     return fail("missing/invalid 'key' (16-digit hex u64)".into());
                 };
                 match service.cache.get(key) {
+                    // Always the array form on write-out; readers old
+                    // enough to expect a scalar must upgrade first.
                     Some(v) => Json::obj()
                         .with("id", id.clone())
                         .with("ok", Json::Bool(true))
                         .with("found", Json::Bool(true))
-                        .with("value", Json::num(v)),
+                        .with("value", v.to_json()),
                     None => Json::obj()
                         .with("id", id.clone())
                         .with("ok", Json::Bool(true))
@@ -827,8 +847,14 @@ pub fn handle_line(service: &Service, line: &str) -> Json {
                 let Some(key) = key else {
                     return fail("missing/invalid 'key' (16-digit hex u64)".into());
                 };
-                let Some(value) = req.get("value").and_then(Json::as_f64) else {
+                // Version-tolerant: an array is the vector wire form, a
+                // bare number the pre-vector scalar one.
+                let Some(vj) = req.get("value") else {
                     return fail("missing/invalid 'value'".into());
+                };
+                let value = match PredVec::from_json(vj) {
+                    Ok(v) => v,
+                    Err(e) => return fail(format!("invalid 'value': {e:#}")),
                 };
                 if !value.is_finite() {
                     return fail("'value' must be finite".into());
@@ -862,6 +888,40 @@ pub fn handle_line(service: &Service, line: &str) -> Json {
             _ => return fail("'budget_us' must be a non-negative number".into()),
         },
     };
+    // Optional required-characteristic list: only variants serving ALL
+    // of these may answer (see the module docs' targets_not_served
+    // contract).
+    let required: Vec<Target> = match req.get("targets") {
+        None => Vec::new(),
+        Some(j) => {
+            let Some(items) = j.as_arr() else {
+                return fail("'targets' must be an array of characteristic names".into());
+            };
+            let mut out = Vec::with_capacity(items.len());
+            for item in items {
+                match item.as_str().and_then(Target::parse) {
+                    Some(t) => out.push(t),
+                    None => {
+                        return fail(format!("unknown characteristic in 'targets': {item}"))
+                    }
+                }
+            }
+            out
+        }
+    };
+    // One routed row's response fields: the scalar `prediction`
+    // (primary characteristic, back-compat) plus the full `predictions`
+    // object naming every slot of the vector.
+    let row_json = |p: &super::RoutedPrediction| {
+        let mut named = Json::obj();
+        for (t, v) in p.targets.iter().zip(p.value.iter()) {
+            named = named.with(t.name(), Json::num(*v));
+        }
+        Json::obj()
+            .with("prediction", Json::num(p.value.first()))
+            .with("predictions", named)
+            .with("variant", Json::str(&*p.variant))
+    };
     // Batch request: an array of MLIR texts through predict_many.
     if let Some(batch) = req.get("mlir_batch") {
         let Some(items) = batch.as_arr() else {
@@ -874,14 +934,11 @@ pub fn handle_line(service: &Service, line: &str) -> Json {
                 None => return fail("'mlir_batch' entries must be strings".into()),
             }
         }
-        let results = service.predict_many_with(target, &texts, budget_us);
+        let results = service.predict_many_full(target, &texts, budget_us, &required);
         let predictions: Vec<Json> = results
             .into_iter()
             .map(|r| match r {
-                Ok(p) => Json::obj()
-                    .with("ok", Json::Bool(true))
-                    .with("prediction", Json::num(p.value))
-                    .with("variant", Json::str(&*p.variant)),
+                Ok(p) => row_json(&p).with("ok", Json::Bool(true)),
                 Err(e) => Json::obj()
                     .with("ok", Json::Bool(false))
                     .with("error", Json::str(format!("{e:#}"))),
@@ -897,12 +954,10 @@ pub fn handle_line(service: &Service, line: &str) -> Json {
         Ok(m) => m,
         Err(e) => return fail(e.to_string()),
     };
-    match service.predict_with(target, mlir, budget_us) {
-        Ok(p) => Json::obj()
+    match service.predict_full(target, mlir, budget_us, &required) {
+        Ok(p) => row_json(&p)
             .with("id", id)
             .with("ok", Json::Bool(true))
-            .with("prediction", Json::num(p.value))
-            .with("variant", Json::str(&*p.variant))
             .with("us", Json::num(t0.elapsed().as_micros() as f64)),
         Err(e) => fail(format!("{e:#}")),
     }
@@ -1090,6 +1145,51 @@ impl Client {
         Ok((resp.req_f64("prediction")?, resp.req_str("variant")?.to_string()))
     }
 
+    /// Typed multi-output query: require `targets` (the server routes
+    /// only to a variant serving ALL of them, or fails with
+    /// `targets_not_served`) and return each requested characteristic's
+    /// value in the requested order. With an empty `targets` list the
+    /// serving variant's full declared vector comes back in its
+    /// declared order.
+    pub fn predict_multi(
+        &mut self,
+        target: Target,
+        mlir: &str,
+        targets: &[Target],
+    ) -> Result<Vec<(Target, f64)>> {
+        let id = self.next_id();
+        let mut req = Json::obj()
+            .with("id", Json::num(id as f64))
+            .with("target", Json::str(target.name()))
+            .with("mlir", Json::str(mlir));
+        if !targets.is_empty() {
+            req = req.with(
+                "targets",
+                Json::Arr(targets.iter().map(|t| Json::str(t.name())).collect()),
+            );
+        }
+        let resp = self.roundtrip(req)?;
+        let named = resp.req("predictions")?;
+        if targets.is_empty() {
+            let obj = named
+                .as_obj()
+                .ok_or_else(|| anyhow!("'predictions' is not an object"))?;
+            return obj
+                .iter()
+                .map(|(name, v)| {
+                    let t = Target::parse(name)
+                        .ok_or_else(|| anyhow!("unknown characteristic '{name}' in response"))?;
+                    let v = v.as_f64().ok_or_else(|| anyhow!("'{name}' is not a number"))?;
+                    Ok((t, v))
+                })
+                .collect();
+        }
+        targets
+            .iter()
+            .map(|&t| Ok((t, named.req_f64(t.name())?)))
+            .collect()
+    }
+
     /// Query many predictions in one protocol round trip (`mlir_batch`).
     /// Per-entry results mirror `Service::predict_many`.
     pub fn predict_many(&mut self, target: Target, mlirs: &[&str]) -> Result<Vec<Result<f64>>> {
@@ -1128,8 +1228,10 @@ impl Client {
     }
 
     /// Probe the remote node's prediction cache (`cache_get`):
-    /// `Ok(Some(v))` when the remote cache holds the key.
-    pub fn cache_get(&mut self, key: u64) -> Result<Option<f64>> {
+    /// `Ok(Some(v))` when the remote cache holds the key. The value is
+    /// the full characteristic vector; a scalar answer from a
+    /// pre-vector node parses as a 1-wide vector.
+    pub fn cache_get(&mut self, key: u64) -> Result<Option<PredVec>> {
         let id = self.next_id();
         let req = Json::obj()
             .with("id", Json::num(id as f64))
@@ -1137,21 +1239,22 @@ impl Client {
             .with("key", Json::str(super::cache::key_to_wire(key)));
         let resp = self.roundtrip(req)?;
         if resp.get("found").and_then(Json::as_bool) == Some(true) {
-            Ok(Some(resp.req_f64("value")?))
+            Ok(Some(PredVec::from_json(resp.req("value")?)?))
         } else {
             Ok(None)
         }
     }
 
-    /// Write a computed value into the remote node's prediction cache
-    /// (`cache_put`).
-    pub fn cache_put(&mut self, key: u64, value: f64) -> Result<()> {
+    /// Write a computed characteristic vector into the remote node's
+    /// prediction cache (`cache_put`). Always sends the array wire
+    /// form.
+    pub fn cache_put(&mut self, key: u64, value: PredVec) -> Result<()> {
         let id = self.next_id();
         let req = Json::obj()
             .with("id", Json::num(id as f64))
             .with("cmd", Json::str("cache_put"))
             .with("key", Json::str(super::cache::key_to_wire(key)))
-            .with("value", Json::num(value));
+            .with("value", value.to_json());
         self.roundtrip(req)?;
         Ok(())
     }
@@ -1180,6 +1283,33 @@ mod tests {
         let bundle =
             Bundle::untrained(&manifest, "fc_ops", Target::RegPressure, Scheme::OpsOnly, vocab, stats)
                 .unwrap();
+        Some(Arc::new(
+            Service::start(manifest, vec![bundle], BatchPolicy::default(), false).unwrap(),
+        ))
+    }
+
+    /// A service whose one variant declares TWO characteristics, for the
+    /// wire-level multi-output tests.
+    fn multi_service() -> Option<Arc<Service>> {
+        let adir = Path::new(env!("CARGO_MANIFEST_DIR")).parent().unwrap().join("artifacts");
+        if !adir.join("manifest.json").exists() {
+            return None;
+        }
+        let manifest = Arc::new(Manifest::load(&adir).unwrap());
+        let vocab = Vocab::build(vec![vec!["x".to_string()]].iter(), 1);
+        let bundle = Bundle::untrained_multi(
+            &manifest,
+            "fc_ops",
+            &[Target::Cycles, Target::XpuUtil],
+            Scheme::OpsOnly,
+            vocab,
+            vec![
+                TargetStats { mean: 900.0, std: 200.0, min: 100.0, max: 4000.0 },
+                TargetStats { mean: 40.0, std: 10.0, min: 0.0, max: 100.0 },
+            ],
+            Some("xpu-v1".to_string()),
+        )
+        .unwrap();
         Some(Arc::new(
             Service::start(manifest, vec![bundle], BatchPolicy::default(), false).unwrap(),
         ))
@@ -1252,11 +1382,17 @@ mod tests {
         assert!(inner.get("budget_downgrades").is_some());
         assert!(inner.get("no_covering_variant").is_some());
         assert!(inner.get("len_memo_entries").is_some());
+        // The multi-output counter is present (zero) from startup.
+        assert_eq!(inner.req_f64("targets_not_served").unwrap(), 0.0);
         let routed = inner.get("routed_by_variant").expect("routed_by_variant missing");
         assert_eq!(routed.req_f64("regpressure/fc_ops").unwrap(), 0.0);
         let variants = inner.get("variants").expect("variants missing");
         let v = variants.get("regpressure/fc_ops").expect("variant entry missing");
         assert_eq!(v.req_str("model").unwrap(), "fc_ops");
+        // Each variant names its declared characteristics in order.
+        let tnames: Vec<&str> =
+            v.req_arr("targets").unwrap().iter().filter_map(Json::as_str).collect();
+        assert_eq!(tnames, vec!["regpressure"]);
         assert!(v.req_f64("max_len").unwrap() > 0.0);
         assert_eq!(v.req_f64("routed").unwrap(), 0.0);
         assert_eq!(v.req_f64("budget_downgrades").unwrap(), 0.0);
@@ -1336,6 +1472,106 @@ mod tests {
             assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false), "accepted: {bad}");
             assert!(resp.req_str("error").unwrap().contains("budget_us"));
         }
+    }
+
+    /// The acceptance bar from the issue, wire level: ONE `mlir` query
+    /// against a multi-target bundle returns every declared
+    /// characteristic from a single forward pass — no per-target
+    /// re-encode or re-execute.
+    #[test]
+    fn mlir_request_returns_all_characteristics_from_one_pass() {
+        let Some(svc) = multi_service() else { return };
+        let text = graph(61, 62);
+        let req = Json::obj()
+            .with("id", Json::num(1.0))
+            .with("target", Json::str("cycles"))
+            .with("mlir", Json::str(text.as_str()))
+            .with(
+                "targets",
+                Json::Arr(vec![Json::str("cycles"), Json::str("xpuutil")]),
+            );
+        let resp = handle_line(&svc, &req.to_string());
+        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true), "got: {resp}");
+        let named = resp.get("predictions").expect("predictions object missing");
+        let cycles = named.req_f64("cycles").unwrap();
+        let util = named.req_f64("xpuutil").unwrap();
+        assert!(cycles.is_finite() && util.is_finite());
+        // Back-compat scalar answers the primary (first declared) target.
+        assert_eq!(resp.req_f64("prediction").unwrap(), cycles);
+        assert_eq!(resp.req_str("variant").unwrap(), "fc_ops");
+        // ONE model invocation produced both characteristics.
+        assert_eq!(svc.stats.batched_queries.load(Ordering::Relaxed), 1);
+        // Malformed `targets` shapes fail whole-request.
+        for bad in [
+            r#"{"id": 2, "target": "cycles", "mlir": "x", "targets": "cycles"}"#,
+            r#"{"id": 3, "target": "cycles", "mlir": "x", "targets": ["warp_speed"]}"#,
+        ] {
+            let resp = handle_line(&svc, bad);
+            assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false), "accepted: {bad}");
+        }
+    }
+
+    /// Requesting a characteristic the serving variants cannot cover is
+    /// a clean `targets_not_served` error on the wire — never a silent
+    /// partial answer.
+    #[test]
+    fn unserved_targets_fail_cleanly_on_the_wire() {
+        let Some(svc) = service() else { return };
+        let text = graph(71, 72);
+        let req = Json::obj()
+            .with("id", Json::num(1.0))
+            .with("target", Json::str("regpressure"))
+            .with("mlir", Json::str(text.as_str()))
+            .with(
+                "targets",
+                Json::Arr(vec![Json::str("regpressure"), Json::str("cycles")]),
+            );
+        let resp = handle_line(&svc, &req.to_string());
+        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false));
+        let msg = resp.req_str("error").unwrap();
+        assert!(msg.contains("targets_not_served"), "unexpected error: {msg}");
+        assert!(msg.contains("cycles"), "missing characteristic not named: {msg}");
+        assert_eq!(svc.stats.targets_not_served.load(Ordering::Relaxed), 1);
+        // The same request without the extra requirement succeeds.
+        let ok = handle_line(
+            &svc,
+            &Json::obj()
+                .with("id", Json::num(2.0))
+                .with("target", Json::str("regpressure"))
+                .with("mlir", Json::str(text.as_str()))
+                .to_string(),
+        );
+        assert_eq!(ok.get("ok").and_then(Json::as_bool), Some(true));
+        // Single-target responses carry the named object too.
+        assert!(
+            ok.get("predictions").and_then(|p| p.get("regpressure")).is_some(),
+            "single-target response must still name its characteristic"
+        );
+    }
+
+    /// The typed multi-output client accessor over TCP.
+    #[test]
+    fn client_predict_multi_over_tcp() {
+        let Some(svc) = multi_service() else { return };
+        let (addr, stop, server) = spawn_server(svc.clone(), 1);
+        let mut client = Client::connect(&addr).unwrap();
+        let text = graph(81, 82);
+        let pairs = client
+            .predict_multi(Target::Cycles, &text, &[Target::Cycles, Target::XpuUtil])
+            .unwrap();
+        assert_eq!(pairs.len(), 2);
+        assert_eq!(pairs[0].0, Target::Cycles);
+        assert_eq!(pairs[1].0, Target::XpuUtil);
+        assert!(pairs.iter().all(|(_, v)| v.is_finite()));
+        // Scalar accessor agrees with the primary characteristic.
+        let scalar = client.predict(Target::Cycles, &text).unwrap();
+        assert_eq!(scalar, pairs[0].1);
+        // Empty requirement list: the client reads back whatever the
+        // serving variant declares.
+        let all = client.predict_multi(Target::Cycles, &text, &[]).unwrap();
+        assert_eq!(all.len(), 2);
+        stop.trigger();
+        let _ = server.join();
     }
 
     #[test]
@@ -1515,7 +1751,8 @@ mod tests {
             handle_line(&svc, &format!(r#"{{"id": 1, "cmd": "cache_get", "key": "{wire}"}}"#));
         assert_eq!(miss.get("ok").and_then(Json::as_bool), Some(true));
         assert_eq!(miss.get("found").and_then(Json::as_bool), Some(false));
-        // Put, then hit.
+        // Put with the LEGACY scalar form (a bare number): still accepted
+        // on read for old peers, answered in the new array form.
         let put = handle_line(
             &svc,
             &format!(r#"{{"id": 2, "cmd": "cache_put", "key": "{wire}", "value": 12.5}}"#),
@@ -1524,7 +1761,9 @@ mod tests {
         let hit =
             handle_line(&svc, &format!(r#"{{"id": 3, "cmd": "cache_get", "key": "{wire}"}}"#));
         assert_eq!(hit.get("found").and_then(Json::as_bool), Some(true));
-        assert_eq!(hit.req_f64("value").unwrap(), 12.5);
+        let got = PredVec::from_json(hit.req("value").unwrap()).unwrap();
+        assert_eq!(got, PredVec::scalar(12.5));
+        assert!(hit.req_arr("value").is_ok(), "cache_get must answer the array form");
         // Malformed keys and values fail cleanly.
         for bad in [
             r#"{"id": 4, "cmd": "cache_get"}"#,
@@ -1534,6 +1773,55 @@ mod tests {
             let resp = handle_line(&svc, bad);
             assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false), "accepted: {bad}");
         }
+    }
+
+    /// Wire-value fidelity for the vector cache protocol: arrays round-
+    /// trip bit-exactly across magnitudes, the legacy scalar form stays
+    /// readable, and malformed vectors are rejected at the edge.
+    #[test]
+    fn cache_wire_values_round_trip_vectors() {
+        let Some(svc) = service() else { return };
+        let key = crate::coordinator::cache::cache_key("fc_ops", &[7, 7, 7]);
+        let wire = crate::coordinator::cache::key_to_wire(key);
+        // A full vector spanning large and tiny magnitudes.
+        let put = handle_line(
+            &svc,
+            &format!(
+                r#"{{"id": 1, "cmd": "cache_put", "key": "{wire}", "value": [1e300, 1e-300, -2.5]}}"#
+            ),
+        );
+        assert_eq!(put.get("stored").and_then(Json::as_bool), Some(true));
+        let hit =
+            handle_line(&svc, &format!(r#"{{"id": 2, "cmd": "cache_get", "key": "{wire}"}}"#));
+        assert_eq!(hit.get("found").and_then(Json::as_bool), Some(true));
+        let got = PredVec::from_json(hit.req("value").unwrap()).unwrap();
+        assert_eq!(got, PredVec::from_slice(&[1e300, 1e-300, -2.5]));
+        // Malformed vector shapes fail whole-request: empty, too wide,
+        // non-numeric element, non-finite element, wrong type.
+        for bad_value in [
+            "[]",
+            "[1, 2, 3, 4, 5]",
+            r#"[1, "x"]"#,
+            r#"[1e999]"#,
+            r#""3.5""#,
+        ] {
+            let resp = handle_line(
+                &svc,
+                &format!(r#"{{"id": 3, "cmd": "cache_put", "key": "{wire}", "value": {bad_value}}}"#),
+            );
+            assert_eq!(
+                resp.get("ok").and_then(Json::as_bool),
+                Some(false),
+                "accepted value {bad_value}"
+            );
+        }
+        // The rejects above must not have clobbered the stored vector.
+        let again =
+            handle_line(&svc, &format!(r#"{{"id": 4, "cmd": "cache_get", "key": "{wire}"}}"#));
+        assert_eq!(
+            PredVec::from_json(again.req("value").unwrap()).unwrap(),
+            PredVec::from_slice(&[1e300, 1e-300, -2.5])
+        );
     }
 
     /// Client cache helpers over the wire: a value put through one
@@ -1547,8 +1835,13 @@ mod tests {
         let mut b = Client::connect(&addr).unwrap();
         let key = crate::coordinator::cache::cache_key("fc_ops", &[9, 9]);
         assert_eq!(a.cache_get(key).unwrap(), None);
-        a.cache_put(key, 3.25).unwrap();
-        assert_eq!(b.cache_get(key).unwrap(), Some(3.25));
+        a.cache_put(key, PredVec::scalar(3.25)).unwrap();
+        assert_eq!(b.cache_get(key).unwrap(), Some(PredVec::scalar(3.25)));
+        // Vector values ride the same path.
+        let vkey = crate::coordinator::cache::cache_key("fc_ops", &[9, 10]);
+        let vec2 = PredVec::from_slice(&[880.0, 61.5]);
+        a.cache_put(vkey, vec2).unwrap();
+        assert_eq!(b.cache_get(vkey).unwrap(), Some(vec2));
         stop.trigger();
         let _ = server.join();
     }

@@ -30,7 +30,10 @@
 //! length-preferred variant because a `budget_us` would have been
 //! blown) and `no_covering_variant`
 //! (queries longer than every registered variant's `max_len`, rejected
-//! with a clean error). Per-variant detail — routed counts and the
+//! with a clean error). `targets_not_served` counts queries whose
+//! requested characteristic list no eligible variant serves — the
+//! multi-output router refuses partial answers rather than silently
+//! returning a subset. Per-variant detail — routed counts and the
 //! [`LatencyEwma`] each variant's budget decisions read — lives on the
 //! router's variants; `Service::stats_json` merges it in as the
 //! `routed_by_variant` / `variants` objects.
@@ -96,6 +99,10 @@ pub struct ServiceStats {
     /// their target: rejected with a clean error, never truncated
     /// silently and never a panic.
     pub no_covering_variant: AtomicU64,
+    /// Queries whose requested characteristic list no eligible variant
+    /// serves (heterogeneous per-variant target sets): rejected with a
+    /// clean `targets_not_served` error, never a silent partial answer.
+    pub targets_not_served: AtomicU64,
     pub errors: AtomicU64,
     /// Executed flushes per compiled batch size: `exec_by_batch[b]` is
     /// how many chunks ran on the `predict_b{b}` executable. One lock
@@ -286,6 +293,10 @@ impl ServiceStats {
                 "no_covering_variant",
                 Json::num(self.no_covering_variant.load(Ordering::Relaxed) as f64),
             )
+            .with(
+                "targets_not_served",
+                Json::num(self.targets_not_served.load(Ordering::Relaxed) as f64),
+            )
             .with("exec_by_batch", {
                 let mut by_batch = Json::obj();
                 for (b, count) in self.exec_by_batch() {
@@ -373,6 +384,7 @@ mod tests {
         // multi-variant routing happens — dashboards can rely on them.
         assert_eq!(j.req_f64("budget_downgrades").unwrap(), 0.0);
         assert_eq!(j.req_f64("no_covering_variant").unwrap(), 0.0);
+        assert_eq!(j.req_f64("targets_not_served").unwrap(), 0.0);
         assert!(j.get("exec_by_batch").is_some());
     }
 

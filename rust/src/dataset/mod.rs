@@ -161,6 +161,11 @@ impl TargetStats {
         TargetStats::compute(&vals)
     }
 
+    /// Per-target stats for a declared target list, parallel to it.
+    pub fn for_targets(ds: &Dataset, targets: &[Target]) -> Vec<TargetStats> {
+        targets.iter().map(|&t| TargetStats::for_dataset(ds, t)).collect()
+    }
+
     pub fn normalize(&self, v: f64) -> f64 {
         (v - self.mean) / self.std
     }
@@ -193,19 +198,23 @@ impl TargetStats {
 }
 
 /// An encoded batch ready for the PJRT runtime: row-major `[n, max_len]`
-/// token ids and `[n]` normalized targets.
+/// token ids and row-major `[n, n_targets]` normalized label vectors —
+/// one row of characteristics per sample, in the declared target order.
 #[derive(Debug, Clone)]
 pub struct EncodedSet {
     pub ids: Vec<i32>,
     pub targets: Vec<f32>,
     pub n: usize,
     pub max_len: usize,
+    /// Declared characteristics per sample (row width of `targets`).
+    pub n_targets: usize,
     /// Whole-stream OOV tokens across all samples, counted during the
     /// same pass that encodes (no second vocabulary-lookup sweep).
     pub oov: usize,
 }
 
 impl EncodedSet {
+    /// Single-target build — the legacy shape, now a 1-wide label row.
     pub fn build(
         ds: &Dataset,
         streams: &[Vec<String>],
@@ -214,27 +223,49 @@ impl EncodedSet {
         target: Target,
         stats: &TargetStats,
     ) -> EncodedSet {
+        EncodedSet::build_multi(ds, streams, vocab, max_len, &[target], std::slice::from_ref(stats))
+    }
+
+    /// Encode one dataset against a declared target list: every sample's
+    /// labels (all computed by one simulator run) become one normalized
+    /// row of `targets.len()` values — the multi-output head's training
+    /// signal, no per-target re-encode.
+    pub fn build_multi(
+        ds: &Dataset,
+        streams: &[Vec<String>],
+        vocab: &Vocab,
+        max_len: usize,
+        targets: &[Target],
+        stats: &[TargetStats],
+    ) -> EncodedSet {
         assert_eq!(ds.len(), streams.len());
+        assert_eq!(targets.len(), stats.len(), "one TargetStats per declared target");
+        assert!(!targets.is_empty(), "at least one target required");
         let n = ds.len();
+        let k = targets.len();
         let mut ids = Vec::with_capacity(n * max_len);
-        let mut targets = Vec::with_capacity(n);
+        let mut tg = Vec::with_capacity(n * k);
         let mut oov = 0usize;
         for (s, toks) in ds.samples.iter().zip(streams) {
             let (row, row_oov) = encode_with_oov(toks, vocab, max_len);
             ids.extend(row.into_iter().map(|x| x as i32));
             oov += row_oov;
-            targets.push(stats.normalize(target.of(&s.labels)) as f32);
+            for (t, st) in targets.iter().zip(stats) {
+                tg.push(st.normalize(t.of(&s.labels)) as f32);
+            }
         }
-        EncodedSet { ids, targets, n, max_len, oov }
+        EncodedSet { ids, targets: tg, n, max_len, n_targets: k, oov }
     }
 
-    /// Row-slice a minibatch (by precomputed indices).
+    /// Row-slice a minibatch (by precomputed indices): `[b, max_len]`
+    /// ids and `[b, n_targets]` labels.
     pub fn gather(&self, idx: &[usize]) -> (Vec<i32>, Vec<f32>) {
+        let k = self.n_targets;
         let mut ids = Vec::with_capacity(idx.len() * self.max_len);
-        let mut tg = Vec::with_capacity(idx.len());
+        let mut tg = Vec::with_capacity(idx.len() * k);
         for &i in idx {
             ids.extend_from_slice(&self.ids[i * self.max_len..(i + 1) * self.max_len]);
-            tg.push(self.targets[i]);
+            tg.extend_from_slice(&self.targets[i * k..(i + 1) * k]);
         }
         (ids, tg)
     }
@@ -315,6 +346,36 @@ mod tests {
         assert_eq!(bi.len(), 3 * 64);
         assert_eq!(bt.len(), 3);
         assert_eq!(&bi[..64], &enc.ids[..64]);
+    }
+
+    #[test]
+    fn multi_target_rows_are_declared_order() {
+        let ds = Dataset::generate(21, 6, 0).unwrap();
+        let streams = ds.token_streams(Scheme::OpsOnly).unwrap();
+        let vocab = Vocab::build(streams.iter(), 1);
+        let targets = [Target::Cycles, Target::XpuUtil, Target::RegPressure];
+        let stats = TargetStats::for_targets(&ds, &targets);
+        assert_eq!(stats.len(), 3);
+        let enc = EncodedSet::build_multi(&ds, &streams, &vocab, 64, &targets, &stats);
+        assert_eq!(enc.n_targets, 3);
+        assert_eq!(enc.targets.len(), 6 * 3);
+        // Row i column j is target j of sample i, normalized by its own stats.
+        for (i, s) in ds.samples.iter().enumerate() {
+            for (j, (t, st)) in targets.iter().zip(&stats).enumerate() {
+                let want = st.normalize(t.of(&s.labels)) as f32;
+                assert_eq!(enc.targets[i * 3 + j], want, "sample {i} target {j}");
+            }
+        }
+        // gather slices whole label rows.
+        let (_, bt) = enc.gather(&[1, 4]);
+        assert_eq!(bt.len(), 2 * 3);
+        assert_eq!(&bt[..3], &enc.targets[3..6]);
+        assert_eq!(&bt[3..], &enc.targets[12..15]);
+        // The 1-target path is the k==1 special case of the same code.
+        let single = EncodedSet::build(&ds, &streams, &vocab, 64, Target::Cycles, &stats[0]);
+        assert_eq!(single.n_targets, 1);
+        let multi_col0: Vec<f32> = (0..6).map(|i| enc.targets[i * 3]).collect();
+        assert_eq!(single.targets, multi_col0);
     }
 
     #[test]

@@ -4,7 +4,10 @@
 //! Model for MLIR"* (cs.LG 2023): predict hardware characteristics
 //! (register pressure, vector-ALU utilization, cycles) of high-level MLIR
 //! dataflow graphs by treating the IR as text and training NLP-style
-//! sequence regressors.
+//! sequence regressors. Predictions are multi-output end to end: a
+//! bundle declares an ordered list of targets and one forward pass
+//! returns a [`pred::PredVec`] — a fixed-order vector of all declared
+//! characteristics — through cache, cluster wire, and line protocol.
 //!
 //! The stack has three layers:
 //! - **L3 (this crate)** — MLIR substrate, corpus generators, the
@@ -74,6 +77,7 @@ pub mod graphgen;
 pub mod json;
 pub mod lower;
 pub mod mlir;
+pub mod pred;
 pub mod rng;
 pub mod runtime;
 pub mod sim;

@@ -18,6 +18,7 @@ use mlir_cost::coordinator::router::VariantSpec;
 use mlir_cost::coordinator::{server, ServeOptions, Service};
 use mlir_cost::dataset::{Dataset, EncodedSet, TargetStats};
 use mlir_cost::json::Json;
+use mlir_cost::pred::PredVec;
 use mlir_cost::runtime::{Manifest, Runtime};
 use mlir_cost::sim::{ground_truth_default, Target};
 use mlir_cost::tokenizer::{OpIdTable, Scheme, Vocab};
@@ -78,7 +79,8 @@ fn run(args: &[String]) -> Result<()> {
                  cmds:\n  \
                  gen-dataset --count N --augment K --seed S --out-train f --out-test f [--test-frac 0.1]\n  \
                  train --model conv_ops --target regpressure --scheme ops_only --train f --test f \
-                 --steps N --out bundle_dir [--artifacts dir] [--out-metrics m.json]\n  \
+                 --steps N --out bundle_dir [--targets cycles,xpuutil] [--hardware xpu-v1]\n    \
+                 [--artifacts dir] [--out-metrics m.json]\n  \
                  eval --bundle dir --test f [--out metrics.json]\n  \
                  serve --bundles d1,d2,... --addr 127.0.0.1:7071 [--pallas true] [--io-threads 1]\n    \
                  [--variants variants.json] [--workers-per-head 1] [--max-batch 32] [--max-wait-us 2000]\n    \
@@ -121,15 +123,18 @@ struct Encoded {
     train: EncodedSet,
     test: EncodedSet,
     vocab: Vocab,
-    stats: TargetStats,
-    test_truth: Vec<f64>,
+    stats: Vec<TargetStats>,
+    /// Ground truth per declared target, `test_truth[k][i]` = target k,
+    /// sample i — all characteristics come from the one simulator run
+    /// that labeled the dataset.
+    test_truth: Vec<Vec<f64>>,
 }
 
 fn encode_sets(
     train_csv: &Path,
     test_csv: &Path,
     scheme: Scheme,
-    target: Target,
+    targets: &[Target],
     max_len: usize,
 ) -> Result<Encoded> {
     let train = Dataset::load_csv(train_csv)?;
@@ -137,21 +142,45 @@ fn encode_sets(
     let streams_tr = train.token_streams(scheme)?;
     let streams_te = test.token_streams(scheme)?;
     let vocab = Vocab::build(streams_tr.iter(), 2);
-    let stats = TargetStats::for_dataset(&train, target);
-    let enc_tr = EncodedSet::build(&train, &streams_tr, &vocab, max_len, target, &stats);
-    let enc_te = EncodedSet::build(&test, &streams_te, &vocab, max_len, target, &stats);
-    let test_truth: Vec<f64> = test.samples.iter().map(|s| target.of(&s.labels)).collect();
+    let stats = TargetStats::for_targets(&train, targets);
+    let enc_tr = EncodedSet::build_multi(&train, &streams_tr, &vocab, max_len, targets, &stats);
+    let enc_te = EncodedSet::build_multi(&test, &streams_te, &vocab, max_len, targets, &stats);
+    let test_truth: Vec<Vec<f64>> = targets
+        .iter()
+        .map(|&t| test.samples.iter().map(|s| t.of(&s.labels)).collect())
+        .collect();
     Ok(Encoded { train: enc_tr, test: enc_te, vocab, stats, test_truth })
+}
+
+/// The declared characteristic list: `--targets a,b,...` when present,
+/// else the single `--target` (default regpressure). The first entry is
+/// the primary target — the one the scalar protocol surface answers.
+fn parse_targets(flags: &HashMap<String, String>) -> Result<Vec<Target>> {
+    if let Some(list) = flags.get("targets") {
+        let targets: Vec<Target> = list
+            .split(',')
+            .map(|name| {
+                Target::parse(name.trim())
+                    .ok_or_else(|| anyhow!("bad --targets entry '{}'", name.trim()))
+            })
+            .collect::<Result<_>>()?;
+        if targets.is_empty() {
+            bail!("--targets needs at least one characteristic");
+        }
+        return Ok(targets);
+    }
+    Ok(vec![Target::parse(flag(flags, "target", "regpressure"))
+        .ok_or_else(|| anyhow!("bad --target"))?])
 }
 
 fn train(flags: &HashMap<String, String>) -> Result<()> {
     let model = flag(flags, "model", "conv_ops").to_string();
-    let target = Target::parse(flag(flags, "target", "regpressure"))
-        .ok_or_else(|| anyhow!("bad --target"))?;
+    let targets = parse_targets(flags)?;
     let scheme =
         Scheme::parse(flag(flags, "scheme", "ops_only")).ok_or_else(|| anyhow!("bad --scheme"))?;
     let steps: usize = flag(flags, "steps", "300").parse()?;
     let out = PathBuf::from(flag(flags, "out", "runs/bundle"));
+    let hardware = flags.get("hardware").cloned();
     let adir = artifacts_dir(flags);
 
     let rt = Runtime::cpu()?;
@@ -162,12 +191,13 @@ fn train(flags: &HashMap<String, String>) -> Result<()> {
         Path::new(flag(flags, "train", "runs/train.csv")),
         Path::new(flag(flags, "test", "runs/test.csv")),
         scheme,
-        target,
+        &targets,
         max_len,
     )?;
+    let target_names: Vec<&str> = targets.iter().map(|t| t.name()).collect();
     eprintln!(
-        "training {model} on {} ({}; vocab {} tokens, {} train / {} test, {} / {} OOV)",
-        target.name(),
+        "training {model} on [{}] ({}; vocab {} tokens, {} train / {} test, {} / {} OOV)",
+        target_names.join(", "),
         scheme.name(),
         enc.vocab.len(),
         enc.train.n,
@@ -189,23 +219,25 @@ fn train(flags: &HashMap<String, String>) -> Result<()> {
     let op_ids = OpIdTable::build(&enc.vocab);
     let bundle = Bundle {
         model: model.clone(),
-        target,
+        targets: targets.clone(),
         scheme,
         max_len,
         vocab: enc.vocab,
         stats: enc.stats,
+        hardware,
         params: trainer.params().to_vec(),
         op_ids,
     };
     bundle.save(&out, &manifest)?;
     eprintln!("bundle saved to {out:?}");
 
-    // Final metrics.
+    // Final metrics: every declared characteristic, from the ONE
+    // prediction pass over the test set.
     let preds_norm = trainer.predict_set(&enc.test)?;
     let out_metrics = flags.get("out-metrics").map(PathBuf::from);
     print_metrics(
         &model,
-        target,
+        &targets,
         &bundle.stats,
         &preds_norm,
         &enc.test_truth,
@@ -215,40 +247,68 @@ fn train(flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
+/// Per-characteristic metrics from one prediction pass. The metrics
+/// JSON keeps the legacy top-level keys (describing the PRIMARY target,
+/// for dashboards that predate multi-output bundles) and adds a
+/// `by_target` object with one block per declared characteristic.
 #[allow(clippy::too_many_arguments)]
 fn print_metrics(
     model: &str,
-    target: Target,
-    stats: &TargetStats,
-    preds_norm: &[f64],
-    truth: &[f64],
+    targets: &[Target],
+    stats: &[TargetStats],
+    preds_norm: &[PredVec],
+    truth: &[Vec<f64>],
     steps_per_sec: f64,
     out: Option<&Path>,
 ) -> Result<()> {
-    let preds: Vec<f64> = preds_norm.iter().map(|&p| stats.denormalize(p)).collect();
-    let rmse = metrics::rmse(&preds, truth);
-    let rmse_pct = metrics::rmse_pct(&preds, truth, stats.range());
-    let mae = metrics::mae(&preds, truth);
-    let exact = metrics::pct_exact_rounded(&preds, truth);
-    let hist = metrics::abs_error_histogram(&preds, truth, 8);
-    println!(
-        "model={model} target={} rmse={rmse:.3} rmse_pct={rmse_pct:.2}% mae={mae:.3} exact={exact:.1}%",
-        target.name()
-    );
-    let doc = Json::obj()
+    let mut by_target = Json::obj();
+    let mut primary: Option<Json> = None;
+    for (k, (&target, st)) in targets.iter().zip(stats).enumerate() {
+        let preds: Vec<f64> = preds_norm
+            .iter()
+            .map(|p| st.denormalize(p.get(k).unwrap_or_else(|| p.first())))
+            .collect();
+        let truth = &truth[k];
+        let rmse = metrics::rmse(&preds, truth);
+        let rmse_pct = metrics::rmse_pct(&preds, truth, st.range());
+        let mae = metrics::mae(&preds, truth);
+        let exact = metrics::pct_exact_rounded(&preds, truth);
+        let hist = metrics::abs_error_histogram(&preds, truth, 8);
+        println!(
+            "model={model} target={} rmse={rmse:.3} rmse_pct={rmse_pct:.2}% mae={mae:.3} exact={exact:.1}%",
+            target.name()
+        );
+        let block = Json::obj()
+            .with("rmse", Json::num(rmse))
+            .with("rmse_pct_of_range", Json::num(rmse_pct))
+            .with("mae", Json::num(mae))
+            .with("pct_exact", Json::num(exact))
+            .with(
+                "abs_error_histogram",
+                Json::Arr(hist.iter().map(|&h| Json::num(h as f64)).collect()),
+            )
+            .with("target_range", Json::num(st.range()));
+        if k == 0 {
+            primary = Some(block.clone());
+        }
+        by_target = by_target.with(target.name(), block);
+    }
+    let mut doc = Json::obj()
         .with("model", Json::str(model))
-        .with("target", Json::str(target.name()))
-        .with("rmse", Json::num(rmse))
-        .with("rmse_pct_of_range", Json::num(rmse_pct))
-        .with("mae", Json::num(mae))
-        .with("pct_exact", Json::num(exact))
-        .with("steps_per_sec", Json::num(steps_per_sec))
-        .with("n_test", Json::num(truth.len() as f64))
+        .with("target", Json::str(targets[0].name()))
         .with(
-            "abs_error_histogram",
-            Json::Arr(hist.iter().map(|&h| Json::num(h as f64)).collect()),
+            "targets",
+            Json::Arr(targets.iter().map(|t| Json::str(t.name())).collect()),
         )
-        .with("target_range", Json::num(stats.range()));
+        .with("steps_per_sec", Json::num(steps_per_sec))
+        .with("n_test", Json::num(truth[0].len() as f64))
+        .with("by_target", by_target);
+    if let Some(Json::Obj(fields)) = primary {
+        // Legacy flat keys mirror the primary target's block.
+        for (key, value) in fields {
+            doc = doc.with(&key, value);
+        }
+    }
     if let Some(path) = out {
         if let Some(p) = path.parent() {
             std::fs::create_dir_all(p)?;
@@ -267,21 +327,25 @@ fn eval(flags: &HashMap<String, String>) -> Result<()> {
     let bundle = Bundle::load(&bundle_dir, &manifest)?;
     let test = Dataset::load_csv(Path::new(flag(flags, "test", "runs/test.csv")))?;
     let streams = test.token_streams(bundle.scheme)?;
-    let enc = EncodedSet::build(
+    let enc = EncodedSet::build_multi(
         &test,
         &streams,
         &bundle.vocab,
         bundle.max_len,
-        bundle.target,
+        &bundle.targets,
         &bundle.stats,
     );
-    let truth: Vec<f64> = test.samples.iter().map(|s| bundle.target.of(&s.labels)).collect();
+    let truth: Vec<Vec<f64>> = bundle
+        .targets
+        .iter()
+        .map(|&t| test.samples.iter().map(|s| t.of(&s.labels)).collect())
+        .collect();
 
     let mut trainer = Trainer::new(&rt, &manifest, &bundle.model)?;
     trainer.set_params(bundle.params.clone())?;
     let preds_norm = trainer.predict_set(&enc)?;
     let out = flags.get("out").map(PathBuf::from);
-    print_metrics(&bundle.model, bundle.target, &bundle.stats, &preds_norm, &truth, 0.0, out.as_deref())
+    print_metrics(&bundle.model, &bundle.targets, &bundle.stats, &preds_norm, &truth, 0.0, out.as_deref())
 }
 
 fn serve(flags: &HashMap<String, String>) -> Result<()> {
@@ -327,7 +391,7 @@ fn serve(flags: &HashMap<String, String>) -> Result<()> {
                 .unwrap_or(&bundle.model)
                 .to_string();
             if let Some(us) = entry.get("ewma_us").and_then(Json::as_f64) {
-                warm_ewma.push((bundle.target, name.clone(), us));
+                warm_ewma.push((bundle.primary_target(), name.clone(), us));
             }
             specs.push(VariantSpec { name, bundle });
         }
@@ -389,7 +453,7 @@ fn predict(flags: &HashMap<String, String>) -> Result<()> {
     let adir = artifacts_dir(flags);
     let manifest = Arc::new(Manifest::load(&adir)?);
     let bundle = Bundle::load(Path::new(flag(flags, "bundle", "runs/bundle")), &manifest)?;
-    let target = bundle.target;
+    let target = bundle.primary_target();
     let service = Arc::new(Service::start(
         manifest,
         vec![bundle],
@@ -400,8 +464,11 @@ fn predict(flags: &HashMap<String, String>) -> Result<()> {
         true,
     )?);
     let text = std::fs::read_to_string(flag(flags, "file", "graph.mlir"))?;
-    let value = service.predict(target, &text)?;
-    println!("{} = {value:.3}", target.name());
+    // One forward pass answers every characteristic the bundle declares.
+    let routed = service.predict_full(target, &text, None, &[])?;
+    for (t, v) in routed.targets.iter().zip(routed.value.iter()) {
+        println!("{} = {v:.3}", t.name());
+    }
     Ok(())
 }
 

@@ -1,0 +1,210 @@
+//! The prediction value type threaded through every serving layer:
+//! a small fixed-capacity vector of hardware characteristics, in the
+//! order the serving bundle declares its targets.
+//!
+//! The paper's model predicts *several* characteristics (utilization,
+//! cycles, register pressure) from one forward pass over the same
+//! encoder. [`PredVec`] is what that pass returns: element `i` is the
+//! value for the bundle's `targets[i]`. Single-target bundles produce
+//! 1-element vectors, so the scalar serving path degenerates to exactly
+//! the old behavior.
+//!
+//! Deliberately `Copy` with an inline array — no per-query heap
+//! allocation anywhere on the hot path, cache entries stay
+//! uniform-size, and `cluster::PeerReply` keeps its `Copy` derive.
+//! [`MAX_TARGETS`] bounds the capacity at the number of characteristics
+//! the simulator can label ([`crate::sim::Target::ALL`] plus headroom).
+
+use crate::json::Json;
+use anyhow::{bail, Result};
+
+/// Maximum characteristics one bundle may declare. Raising this grows
+/// every cache entry and batch-queue row by 8 bytes per slot — keep it
+/// at "what the simulator labels", not "what might exist someday".
+pub const MAX_TARGETS: usize = 4;
+
+/// A fixed-order vector of predicted hardware characteristics.
+///
+/// Equality is element-wise over the occupied prefix (two `PredVec`s
+/// with different lengths are never equal, regardless of what the
+/// unoccupied slots hold).
+#[derive(Debug, Clone, Copy)]
+pub struct PredVec {
+    vals: [f64; MAX_TARGETS],
+    len: u8,
+}
+
+impl PredVec {
+    /// The empty vector (pushed into via [`PredVec::push`]).
+    pub fn new() -> PredVec {
+        PredVec { vals: [0.0; MAX_TARGETS], len: 0 }
+    }
+
+    /// A 1-element vector — the single-target serving path's value.
+    pub fn scalar(v: f64) -> PredVec {
+        let mut p = PredVec::new();
+        p.push(v);
+        p
+    }
+
+    /// Build from a slice. Panics past [`MAX_TARGETS`] — bundle target
+    /// lists are validated at load time, so an oversized slice here is
+    /// a programmer error, not an input error.
+    pub fn from_slice(vals: &[f64]) -> PredVec {
+        assert!(vals.len() <= MAX_TARGETS, "PredVec overflow: {} values", vals.len());
+        let mut p = PredVec::new();
+        for &v in vals {
+            p.push(v);
+        }
+        p
+    }
+
+    pub fn push(&mut self, v: f64) {
+        assert!((self.len as usize) < MAX_TARGETS, "PredVec overflow");
+        self.vals[self.len as usize] = v;
+        self.len += 1;
+    }
+
+    pub fn len(&self) -> usize {
+        self.len as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn get(&self, i: usize) -> Option<f64> {
+        self.as_slice().get(i).copied()
+    }
+
+    /// The first (primary) characteristic — what the legacy scalar
+    /// `"prediction"` response field and `Service::predict` return.
+    pub fn first(&self) -> f64 {
+        self.vals[0]
+    }
+
+    pub fn as_slice(&self) -> &[f64] {
+        &self.vals[..self.len as usize]
+    }
+
+    pub fn iter(&self) -> std::slice::Iter<'_, f64> {
+        self.as_slice().iter()
+    }
+
+    /// Every occupied element is finite (the wire layer rejects
+    /// non-finite values, mirroring the old scalar check).
+    pub fn is_finite(&self) -> bool {
+        self.as_slice().iter().all(|v| v.is_finite())
+    }
+
+    /// Wire form: always a JSON array, even for one element — readers
+    /// accept the legacy scalar via [`PredVec::from_json`].
+    pub fn to_json(&self) -> Json {
+        Json::arr_num(self.as_slice())
+    }
+
+    /// Version-tolerant wire parse: a JSON array of 1..=[`MAX_TARGETS`]
+    /// numbers, or a bare number (the pre-multi-output scalar form,
+    /// still emitted by older nodes) which becomes a 1-element vector.
+    pub fn from_json(j: &Json) -> Result<PredVec> {
+        if let Some(v) = j.as_f64() {
+            return Ok(PredVec::scalar(v));
+        }
+        let Some(arr) = j.as_arr() else {
+            bail!("prediction value must be a number or an array of numbers");
+        };
+        if arr.is_empty() || arr.len() > MAX_TARGETS {
+            bail!("prediction vector must have 1..={MAX_TARGETS} elements, got {}", arr.len());
+        }
+        let mut p = PredVec::new();
+        for x in arr {
+            match x.as_f64() {
+                Some(v) => p.push(v),
+                None => bail!("prediction vector element is not a number"),
+            }
+        }
+        Ok(p)
+    }
+}
+
+impl Default for PredVec {
+    fn default() -> PredVec {
+        PredVec::new()
+    }
+}
+
+impl PartialEq for PredVec {
+    fn eq(&self, other: &PredVec) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl<'a> IntoIterator for &'a PredVec {
+    type Item = &'a f64;
+    type IntoIter = std::slice::Iter<'a, f64>;
+    fn into_iter(self) -> Self::IntoIter {
+        self.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_and_slice_roundtrip() {
+        let s = PredVec::scalar(7.25);
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.first(), 7.25);
+        assert_eq!(s.as_slice(), &[7.25]);
+        let v = PredVec::from_slice(&[1.0, 2.0, 3.0]);
+        assert_eq!(v.len(), 3);
+        assert_eq!(v.get(2), Some(3.0));
+        assert_eq!(v.get(3), None);
+        assert_eq!(v.first(), 1.0);
+    }
+
+    #[test]
+    fn equality_is_over_the_occupied_prefix() {
+        // A 1-element vector never equals a 2-element one, even when the
+        // unoccupied slot happens to hold the same bits.
+        let a = PredVec::scalar(5.0);
+        let mut b = PredVec::scalar(5.0);
+        b.push(0.0);
+        assert_ne!(a, b);
+        assert_eq!(a, PredVec::scalar(5.0));
+        assert_eq!(PredVec::from_slice(&[1.0, 2.0]), PredVec::from_slice(&[1.0, 2.0]));
+    }
+
+    #[test]
+    fn json_roundtrip_and_legacy_scalar() {
+        let v = PredVec::from_slice(&[27.5, 0.93, 1e300, 1e-300]);
+        let j = v.to_json();
+        assert_eq!(PredVec::from_json(&j).unwrap(), v);
+        // Legacy scalar form parses to a 1-element vector.
+        let legacy = PredVec::from_json(&Json::num(12.5)).unwrap();
+        assert_eq!(legacy, PredVec::scalar(12.5));
+        // Malformed shapes are clean errors.
+        assert!(PredVec::from_json(&Json::Arr(vec![])).is_err());
+        assert!(PredVec::from_json(&Json::str("x")).is_err());
+        assert!(PredVec::from_json(&Json::Arr(vec![Json::str("x")])).is_err());
+        let too_many = Json::arr_num(&[1.0; MAX_TARGETS + 1]);
+        assert!(PredVec::from_json(&too_many).is_err());
+    }
+
+    #[test]
+    fn finiteness_covers_every_element() {
+        assert!(PredVec::from_slice(&[1.0, 2.0]).is_finite());
+        assert!(!PredVec::from_slice(&[1.0, f64::NAN]).is_finite());
+        assert!(!PredVec::from_slice(&[f64::INFINITY]).is_finite());
+    }
+
+    #[test]
+    #[should_panic(expected = "PredVec overflow")]
+    fn push_past_capacity_panics() {
+        let mut p = PredVec::new();
+        for i in 0..=MAX_TARGETS {
+            p.push(i as f64);
+        }
+    }
+}

@@ -22,6 +22,13 @@ pub struct SimReport {
     pub mxu_util_pct: f64,
     /// Total dynamic instructions executed.
     pub dyn_instrs: u64,
+    /// Peak vector-register demand — filled by [`super::report`] from
+    /// the regalloc pass over the same lowered program, so one run
+    /// carries every label. `simulate` alone (no allocation context)
+    /// leaves it 0.
+    pub regpressure: u32,
+    /// Registers spilled at the peak (same provenance as `regpressure`).
+    pub spills: u32,
 }
 
 /// Simulate one segment window with an in-order scoreboard.
@@ -109,6 +116,8 @@ pub fn simulate(prog: &Program, cfg: &XpuConfig) -> SimReport {
         valu_util_pct,
         mxu_util_pct,
         dyn_instrs: prog.dyn_instrs(),
+        regpressure: 0,
+        spills: 0,
     }
 }
 

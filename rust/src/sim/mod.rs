@@ -64,19 +64,46 @@ impl Target {
     }
 }
 
-/// Compile + allocate + simulate one function: the full ground-truth path.
-pub fn ground_truth(f: &Function, opts: &CodegenOpts, cfg: &XpuConfig) -> Result<Labels> {
+impl Labels {
+    /// Every label from one combined report — the single-pass label
+    /// vector the dataset/trainer consume.
+    pub fn from_report(r: &SimReport) -> Labels {
+        Labels {
+            regpressure: r.regpressure as f64,
+            xpu_util: r.valu_util_pct,
+            cycles: r.cycles as f64,
+            spills: r.spills,
+            dyn_instrs: r.dyn_instrs,
+        }
+    }
+}
+
+/// Compile + allocate + simulate one function in a SINGLE pass,
+/// returning the full machine report with the register-allocation
+/// results (`regpressure`/`spills`) folded in. Every characteristic —
+/// cycles, both utilizations, dynamic instructions, register pressure,
+/// spills — comes from this one run; per-target label extraction never
+/// re-lowers or re-simulates.
+pub fn report(f: &Function, opts: &CodegenOpts, cfg: &XpuConfig) -> Result<SimReport> {
     let mut prog = lower(f, opts)?;
     let reg = analyze(&prog);
     apply_spills(&mut prog, &reg);
-    let sim = simulate(&prog, cfg);
-    Ok(Labels {
-        regpressure: reg.max_live as f64,
-        xpu_util: sim.valu_util_pct,
-        cycles: sim.cycles as f64,
-        spills: reg.spilled,
-        dyn_instrs: sim.dyn_instrs,
-    })
+    let mut sim = simulate(&prog, cfg);
+    sim.regpressure = reg.max_live;
+    sim.spills = reg.spilled;
+    Ok(sim)
+}
+
+/// Single-pass report with default compiler/machine settings.
+pub fn report_default(f: &Function) -> Result<SimReport> {
+    report(f, &CodegenOpts::default(), &XpuConfig::default())
+}
+
+/// Compile + allocate + simulate one function: the full ground-truth
+/// path. Thin wrapper over [`report`] — one lower + one simulation
+/// produce every label.
+pub fn ground_truth(f: &Function, opts: &CodegenOpts, cfg: &XpuConfig) -> Result<Labels> {
+    Ok(Labels::from_report(&report(f, opts, cfg)?))
 }
 
 /// Ground truth with default compiler/machine settings.
@@ -159,6 +186,25 @@ mod tests {
             u8.regpressure,
             u1.regpressure
         );
+    }
+
+    /// The single-pass report carries every characteristic at once, and
+    /// the Labels derived from it match the legacy per-function path.
+    #[test]
+    fn single_pass_report_carries_all_characteristics() {
+        let spec = GraphSpec { family: Family::Mlp, structure_seed: 8, shape_seed: 9 };
+        let f = generate(&spec).unwrap();
+        let r = report_default(&f).unwrap();
+        assert!(r.regpressure > 0, "regalloc results must be folded in");
+        assert!(r.cycles > 0 && r.dyn_instrs > 0);
+        let l = ground_truth_default(&f).unwrap();
+        assert_eq!(l, Labels::from_report(&r));
+        assert_eq!(l.regpressure, r.regpressure as f64);
+        assert_eq!(l.xpu_util, r.valu_util_pct);
+        assert_eq!(l.cycles, r.cycles as f64);
+        // `simulate` alone (no allocation context) leaves pressure 0.
+        let prog = crate::lower::lower(&f, &crate::lower::CodegenOpts::default()).unwrap();
+        assert_eq!(simulate(&prog, &XpuConfig::default()).regpressure, 0);
     }
 
     #[test]

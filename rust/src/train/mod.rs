@@ -6,6 +6,7 @@ pub mod checkpoint;
 pub mod metrics;
 
 use crate::dataset::EncodedSet;
+use crate::pred::PredVec;
 use crate::rng::Rng;
 use crate::runtime::{Executable, Manifest, Runtime, Tensor};
 use anyhow::{ensure, Context, Result};
@@ -95,16 +96,25 @@ impl<'rt> Trainer<'rt> {
         Ok(())
     }
 
-    /// One optimizer step on a [B, L] ids + [B] targets batch.
+    /// One optimizer step on a `[B, L]` ids batch with a `[B]` (single
+    /// target) or row-major `[B, K]` (multi-output head) label batch —
+    /// the width is inferred from the label length, so single-target
+    /// callers pass exactly what they always did.
     pub fn step_batch(&mut self, ids: Vec<i32>, targets: Vec<f32>) -> Result<f64> {
         let b = self.train_batch as i64;
         ensure!(ids.len() == (b as usize) * self.max_len, "bad ids length");
-        ensure!(targets.len() == b as usize, "bad target length");
+        ensure!(
+            !targets.is_empty() && targets.len() % b as usize == 0,
+            "target length {} is not a multiple of batch {b}",
+            targets.len()
+        );
+        let k = targets.len() / b as usize;
+        let tshape = if k == 1 { vec![b] } else { vec![b, k as i64] };
         let mut inputs: Vec<Tensor> = Vec::with_capacity(3 * self.n_params + 3);
         inputs.extend(self.state.iter().cloned());
         inputs.push(self.step.clone());
         inputs.push(Tensor::i32(vec![b, self.max_len as i64], ids)?);
-        inputs.push(Tensor::f32(vec![b], targets)?);
+        inputs.push(Tensor::f32(tshape, targets)?);
         let mut out = self.train_exe.run(&inputs)?;
         let loss = out[3 * self.n_params + 1].first_f32()? as f64;
         self.step = out[3 * self.n_params].clone();
@@ -143,7 +153,11 @@ impl<'rt> Trainer<'rt> {
                 eprintln!("[train {}] step {step}/{} loss {loss:.5}", self.model, cfg.steps);
             }
             if cfg.eval_every > 0 && (step % cfg.eval_every == 0 || step == cfg.steps) {
-                let preds = self.predict_set(test)?;
+                let preds: Vec<f64> = self
+                    .predict_set(test)?
+                    .iter()
+                    .flat_map(|p| p.iter().copied())
+                    .collect();
                 let truth: Vec<f64> = test.targets.iter().map(|&t| t as f64).collect();
                 let rmse = metrics::rmse(&preds, &truth);
                 report.evals.push((step, rmse));
@@ -155,13 +169,18 @@ impl<'rt> Trainer<'rt> {
         Ok(report)
     }
 
-    /// Predict (normalized) targets for a whole encoded set using the
-    /// largest-batch predict executable, padding the tail batch.
-    pub fn predict_set(&self, set: &EncodedSet) -> Result<Vec<f64>> {
+    /// Predict normalized label vectors for a whole encoded set using
+    /// the largest-batch predict executable, padding the tail batch.
+    /// One forward pass per batch yields every declared characteristic:
+    /// a `[B, K]` head gives each row its K values; a legacy `[B]` head
+    /// broadcasts its single output across the set's declared width
+    /// (each slot still denormalizes by its own per-target stats).
+    pub fn predict_set(&self, set: &EncodedSet) -> Result<Vec<PredVec>> {
         let mm = self.manifest.model(&self.model)?;
         let (key, b) = mm.predict_key_for(usize::MAX, false);
         let exe = self.rt.load(&self.manifest.path_of(mm.file(&key)?))?;
         let params = self.params().to_vec();
+        let k = set.n_targets.max(1);
         let mut preds = Vec::with_capacity(set.n);
         let mut i = 0usize;
         while i < set.n {
@@ -173,7 +192,15 @@ impl<'rt> Trainer<'rt> {
             inputs.push(Tensor::i32(vec![b as i64, set.max_len as i64], ids)?);
             let out = exe.run(&inputs)?;
             let vals = out[0].as_f32()?;
-            preds.extend(vals[..take].iter().map(|&v| v as f64));
+            let wide = vals.len() >= b * k; // [B, K] row-major head
+            for row in 0..take {
+                let mut p = PredVec::new();
+                for j in 0..k {
+                    let v = if wide { vals[row * k + j] } else { vals[row] };
+                    p.push(v as f64);
+                }
+                preds.push(p);
+            }
             i += take;
         }
         Ok(preds)
@@ -211,19 +238,17 @@ mod tests {
         let enc_te = EncodedSet::build(&test, &streams_te, &vocab, 128, Target::RegPressure, &stats);
 
         let mut trainer = Trainer::new(&rt, &manifest, "fc_ops").unwrap();
-        let before = {
-            let preds = trainer.predict_set(&enc_te).unwrap();
+        let norm_rmse = |trainer: &Trainer| {
+            let preds: Vec<f64> =
+                trainer.predict_set(&enc_te).unwrap().iter().map(|p| p.first()).collect();
             let truth: Vec<f64> = enc_te.targets.iter().map(|&t| t as f64).collect();
             metrics::rmse(&preds, &truth)
         };
+        let before = norm_rmse(&trainer);
         let cfg = TrainConfig { steps: 30, eval_every: 0, log_every: 0, ..Default::default() };
         let report = trainer.run(&cfg, &enc_tr, &enc_te).unwrap();
         assert_eq!(report.total_steps, 30);
-        let after = {
-            let preds = trainer.predict_set(&enc_te).unwrap();
-            let truth: Vec<f64> = enc_te.targets.iter().map(|&t| t as f64).collect();
-            metrics::rmse(&preds, &truth)
-        };
+        let after = norm_rmse(&trainer);
         assert!(
             after < before,
             "30 fc steps should improve test rmse: {before:.4} -> {after:.4}"

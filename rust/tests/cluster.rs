@@ -45,6 +45,24 @@ fn mk_bundle(manifest: &Manifest) -> Bundle {
         .unwrap()
 }
 
+/// A bundle declaring TWO characteristics, for the vector wire tests.
+fn mk_multi_bundle(manifest: &Manifest) -> Bundle {
+    let vocab = Vocab::build(vec![vec!["xpu.matmul".to_string()]].iter(), 1);
+    Bundle::untrained_multi(
+        manifest,
+        "fc_ops",
+        &[Target::Cycles, Target::XpuUtil],
+        Scheme::OpsOnly,
+        vocab,
+        vec![
+            TargetStats { mean: 900.0, std: 200.0, min: 100.0, max: 4000.0 },
+            TargetStats { mean: 40.0, std: 10.0, min: 0.0, max: 100.0 },
+        ],
+        Some("xpu-v1".to_string()),
+    )
+    .unwrap()
+}
+
 struct Node {
     svc: Arc<Service>,
     addr: String,
@@ -55,6 +73,13 @@ struct Node {
 /// Spin up `n` clustered nodes on ephemeral ports. Returns `None` (skip)
 /// when the artifacts are not built.
 fn spawn_cluster(n: usize) -> Option<(Vec<Node>, Bundle)> {
+    spawn_cluster_with(n, mk_bundle)
+}
+
+fn spawn_cluster_with(
+    n: usize,
+    mk: fn(&Manifest) -> Bundle,
+) -> Option<(Vec<Node>, Bundle)> {
     let adir = artifacts_dir();
     if !adir.join("manifest.json").exists() {
         eprintln!("skipping: artifacts not built");
@@ -70,7 +95,7 @@ fn spawn_cluster(n: usize) -> Option<(Vec<Node>, Bundle)> {
     for (i, listener) in listeners.into_iter().enumerate() {
         let mut svc = Service::start(
             manifest.clone(),
-            vec![mk_bundle(&manifest)],
+            vec![mk(&manifest)],
             BatchPolicy::default(),
             false,
         )
@@ -90,7 +115,7 @@ fn spawn_cluster(n: usize) -> Option<(Vec<Node>, Bundle)> {
         };
         nodes.push(Node { svc, addr: addrs[i].clone(), stop, join });
     }
-    Some((nodes, mk_bundle(&manifest)))
+    Some((nodes, mk(&manifest)))
 }
 
 fn teardown(nodes: Vec<Node>) {
@@ -114,7 +139,7 @@ fn graph_text(structure_seed: u64, shape_seed: u64) -> String {
 fn probe_key(bundle: &Bundle, text: &str) -> u64 {
     let func = parse_function(text).unwrap();
     let (ids, _oov) = bundle.encode_ids(&func);
-    let ns = cache_namespace(bundle.target.name(), &bundle.model, &bundle.model);
+    let ns = cache_namespace(bundle.primary_target().name(), &bundle.model, &bundle.model);
     cache_key(&ns, &ids)
 }
 
@@ -193,7 +218,7 @@ fn computed_value_is_written_back_to_owner() {
     let t0 = Instant::now();
     loop {
         if let Some(v) = nodes[1].svc.cache.get(key) {
-            assert_eq!(v, v0, "write-back stored a different value");
+            assert_eq!(v.first(), v0, "write-back stored a different value");
             break;
         }
         assert!(t0.elapsed() < Duration::from_secs(5), "write-back never reached the owner");
@@ -306,5 +331,47 @@ fn predict_many_forwards_and_writes_back() {
     assert_eq!(stats.remote_hits.load(Ordering::Relaxed), 1);
     assert_eq!(stats.forwarded_puts.load(Ordering::Relaxed), 2);
     assert_eq!(stats.degraded_fallbacks.load(Ordering::Relaxed), 0);
+    teardown(nodes);
+}
+
+/// Multi-output values survive the cluster wire intact: a prediction
+/// VECTOR computed off-owner is written back to the owner as a JSON
+/// array, and a third node's remote hit reads the whole vector back —
+/// every characteristic, not just the primary scalar.
+#[test]
+fn vector_values_round_trip_across_three_nodes() {
+    let Some((nodes, bundle)) = spawn_cluster_with(3, mk_multi_bundle) else { return };
+    let required = [Target::Cycles, Target::XpuUtil];
+    let cluster0 = nodes[0].svc.cluster().unwrap();
+    let (text, key) = texts_owned_by(&bundle, cluster0, &nodes[1].addr, 1, 60_000)
+        .pop()
+        .unwrap();
+    // Node 0 (non-owner) computes the full vector and writes it back.
+    let r0 = nodes[0]
+        .svc
+        .predict_full(Target::Cycles, &text, None, &required)
+        .unwrap();
+    assert_eq!(r0.value.len(), 2, "multi bundle must answer both characteristics");
+    assert!(r0.value.iter().all(|v| v.is_finite()));
+    assert_eq!(nodes[0].svc.stats.forwarded_puts.load(Ordering::Relaxed), 1);
+    // The async write-back lands the ENTIRE vector at the owner.
+    let t0 = Instant::now();
+    let stored = loop {
+        if let Some(v) = nodes[1].svc.cache.get(key) {
+            break v;
+        }
+        assert!(t0.elapsed() < Duration::from_secs(5), "write-back never reached the owner");
+        std::thread::sleep(Duration::from_millis(10));
+    };
+    assert_eq!(stored, r0.value, "vector mangled by the cache_put wire encoding");
+    // A third node remote-hits the owner and reads the full vector back
+    // through cache_get — both characteristics identical to the origin.
+    let r2 = nodes[2]
+        .svc
+        .predict_full(Target::Cycles, &text, None, &required)
+        .unwrap();
+    assert_eq!(r2.value, r0.value, "vector mangled by the cache_get wire decoding");
+    assert_eq!(r2.value_for(Target::XpuUtil), r0.value_for(Target::XpuUtil));
+    assert_eq!(nodes[2].svc.stats.remote_hits.load(Ordering::Relaxed), 1);
     teardown(nodes);
 }

@@ -1,0 +1,98 @@
+#!/usr/bin/env python3
+"""Fail CI when a BENCH_*.json drifts from its expected schema.
+
+Each `BENCH_*.json` at the repo root is either a placeholder schema
+(metric values `null`, overwritten by running the bench) or a measured
+result. Either way it must stay machine-readable for the dashboards
+that diff bench runs across PRs:
+
+- valid JSON, top-level object;
+- a `bench` string naming the producing bench (`rust/benches/<bench>.rs`
+  must exist) and a human `note` string;
+- every leaf value is a number, string, bool, or null — a metric that
+  was measured must be a finite number, a metric not yet measured must
+  be null (never "", NaN, or a quoted number);
+- every `scenarios`-style array holds objects sharing ONE key set, so
+  a renamed column cannot silently fork the table's schema.
+
+Usage: python3 scripts/check_bench_schema.py  (from the repo root)
+"""
+
+import json
+import math
+import sys
+from pathlib import Path
+
+
+def leaf_errors(value, path):
+    """Yield (path, message) for every malformed leaf under `value`."""
+    if isinstance(value, dict):
+        for key, child in value.items():
+            yield from leaf_errors(child, f"{path}.{key}")
+    elif isinstance(value, list):
+        rows = [v for v in value if isinstance(v, dict)]
+        if rows and len(rows) == len(value):
+            first_keys = set(rows[0].keys())
+            for i, row in enumerate(rows):
+                if set(row.keys()) != first_keys:
+                    yield (
+                        f"{path}[{i}]",
+                        f"row keys {sorted(row.keys())} differ from "
+                        f"row 0 {sorted(first_keys)}",
+                    )
+        for i, child in enumerate(value):
+            yield from leaf_errors(child, f"{path}[{i}]")
+    elif isinstance(value, float):
+        if math.isnan(value) or math.isinf(value):
+            yield (path, "non-finite number")
+    elif not isinstance(value, (int, str, bool)) and value is not None:
+        yield (path, f"unexpected leaf type {type(value).__name__}")
+
+
+def check_file(root: Path, path: Path) -> int:
+    rel = path.relative_to(root)
+    try:
+        doc = json.loads(path.read_text(encoding="utf-8"))
+    except (json.JSONDecodeError, UnicodeDecodeError) as e:
+        print(f"{rel}: invalid JSON: {e}", file=sys.stderr)
+        return 1
+    errors = 0
+    if not isinstance(doc, dict):
+        print(f"{rel}: top level must be an object", file=sys.stderr)
+        return 1
+    for field in ("bench", "note"):
+        if not isinstance(doc.get(field), str) or not doc.get(field):
+            print(f"{rel}: missing/empty '{field}' string", file=sys.stderr)
+            errors += 1
+    bench = doc.get("bench")
+    if isinstance(bench, str):
+        bench_src = root / "rust" / "benches" / f"{bench}.rs"
+        if not bench_src.exists():
+            print(
+                f"{rel}: 'bench' names {bench!r} but "
+                f"rust/benches/{bench}.rs does not exist",
+                file=sys.stderr,
+            )
+            errors += 1
+    for leaf_path, msg in leaf_errors(doc, path.stem):
+        print(f"{rel}: {leaf_path}: {msg}", file=sys.stderr)
+        errors += 1
+    return errors
+
+
+def check(root: Path) -> int:
+    files = sorted(root.glob("BENCH_*.json"))
+    if not files:
+        print("error: no BENCH_*.json found — wrong cwd?", file=sys.stderr)
+        return 1
+    errors = sum(check_file(root, f) for f in files)
+    checked = ", ".join(str(f.relative_to(root)) for f in files)
+    if errors:
+        print(f"{errors} schema error(s) across: {checked}", file=sys.stderr)
+    else:
+        print(f"bench schemas OK: {checked}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(check(Path.cwd()))
