@@ -1,0 +1,212 @@
+//! E9 — incremental delta encoding: the session tier's text→ids path
+//! (PR 7) against the full re-encode every query otherwise pays.
+//!
+//! Per scenario (one graph family × form, sizes from ~tens to
+//! ~hundreds of lines), the same stream of 1-line edits runs through
+//! two pipelines:
+//!
+//!   full   — parse → fused encode, the cold front end a session-less
+//!            client pays for every probe
+//!   delta  — line-diff against the base + span-table splice: only the
+//!            edited line is re-lexed, everything else is a hash
+//!            lookup (`coordinator::session` + `tokenizer::span`,
+//!            exactly what `mlir_delta` runs)
+//!
+//! Every edit is unique (fresh line hash), so the delta path re-lexes
+//! exactly one line per probe — the steady-state autotuner shape. The
+//! one-time `session_open` cost (index + span warm-up) is measured
+//! separately to show where amortization starts.
+//!
+//! Results print as a table and are recorded to
+//! `BENCH_incremental.json` at the repo root. No model artifacts are
+//! needed — this measures the front end only.
+
+use mlir_cost::benchkit;
+use mlir_cost::coordinator::session::{index_lines, reindex_lines};
+use mlir_cost::graphgen::{generate, Family, GraphSpec};
+use mlir_cost::json::Json;
+use mlir_cost::lower::affine::lower_to_affine;
+use mlir_cost::mlir::{parse_function, print_function};
+use mlir_cost::tokenizer::span::{line_span, splice_ids, tail_span, IdSpan};
+use mlir_cost::tokenizer::{encode_function, token_count, tokenize, OpIdTable, Scheme, Vocab};
+use std::collections::HashMap;
+
+fn repo_root() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).parent().unwrap().to_path_buf()
+}
+
+const MAX_LEN: usize = 512;
+const WARMUP: usize = 2;
+const ITERS: usize = 20;
+/// Edits per timed iteration — one edit is microseconds, so each
+/// sample aggregates a small burst for stable timing.
+const EDITS_PER_ITER: usize = 8;
+
+fn main() {
+    benchkit::section("E9 / incremental delta encoding vs full re-encode");
+    let scheme = Scheme::OpsOperands;
+
+    // Scenario corpus: fc / conv / attention families, each in the
+    // compact xpu form and (for the structured ones) the affine-lowered
+    // loop-nest form — the "hundreds of lines" end of the size axis.
+    let scenarios: Vec<(&str, String)> = {
+        let gen = |family, i: u64| {
+            generate(&GraphSpec { family, structure_seed: 7000 + i, shape_seed: 8000 + i })
+                .expect("graphgen")
+        };
+        let mlp = gen(Family::Mlp, 0);
+        let resnet = gen(Family::Resnet, 1);
+        let bert = gen(Family::Bert, 2);
+        vec![
+            ("mlp/xpu", print_function(&mlp)),
+            ("resnet/xpu", print_function(&resnet)),
+            ("bert/xpu", print_function(&bert)),
+            ("resnet/affine", print_function(&lower_to_affine(&resnet).expect("lower"))),
+            ("bert/affine", print_function(&lower_to_affine(&bert).expect("lower"))),
+        ]
+    };
+
+    let mut rows: Vec<Json> = Vec::new();
+    let mut speedups: Vec<f64> = Vec::new();
+    for (name, base) in &scenarios {
+        let func = parse_function(base).expect("parse base");
+        let streams = vec![tokenize(&func, scheme)];
+        let vocab = Vocab::build(streams.iter(), 1);
+        let ops = OpIdTable::build(&vocab);
+        let tail = tail_span(&vocab);
+        let n_lines = base.lines().count();
+        let n_tokens = token_count(&func, scheme);
+        benchkit::section(&format!("scenario {name}: {n_lines} lines, {n_tokens} tokens"));
+
+        // Pre-built pool of 1-line edits (comment-append keeps every
+        // variant parseable); unique suffixes give every edit a fresh
+        // line hash, so nothing is accidentally warm across probes.
+        let pool: Vec<String> = (0..(WARMUP + ITERS) * EDITS_PER_ITER)
+            .map(|j| {
+                let at = (j * 7 + 3) % n_lines;
+                base.lines()
+                    .enumerate()
+                    .map(|(i, l)| if i == at { format!("{l} // tune {j}") } else { l.to_string() })
+                    .collect::<Vec<_>>()
+                    .join("\n")
+            })
+            .collect();
+
+        // One-time session_open work: index the base + warm the spans.
+        let s_open = benchkit::bench("session_open (index + span warm-up)", WARMUP, ITERS, || {
+            let lines = index_lines(base, scheme).expect("index base");
+            let mut table: HashMap<u64, IdSpan> = HashMap::with_capacity(lines.len());
+            for l in &lines {
+                table
+                    .entry(l.hash)
+                    .or_insert_with(|| line_span(&l.text, scheme, &vocab, &ops).expect("span"));
+            }
+            std::hint::black_box(table.len());
+        });
+        println!("{}", s_open.row());
+
+        // Full re-encode: what every probe costs without a session.
+        let mut kf = 0usize;
+        let s_full = benchkit::bench("full re-encode (parse + encode)", WARMUP, ITERS, || {
+            for _ in 0..EDITS_PER_ITER {
+                let text = &pool[kf % pool.len()];
+                kf += 1;
+                let f = parse_function(text).expect("parse edit");
+                let (ids, _oov) = encode_function(&f, scheme, &vocab, &ops, MAX_LEN);
+                std::hint::black_box(ids);
+            }
+        });
+        println!("{}", s_full.row());
+
+        // Delta splice: diff against the base, splice cached spans,
+        // re-lex only the edited line — the serving path's
+        // `encode_query`, minus the sharded table.
+        let base_lines = index_lines(base, scheme).expect("index base");
+        let mut table: HashMap<u64, IdSpan> = HashMap::with_capacity(base_lines.len());
+        for l in &base_lines {
+            table
+                .entry(l.hash)
+                .or_insert_with(|| line_span(&l.text, scheme, &vocab, &ops).expect("span"));
+        }
+        let mut kd = 0usize;
+        let mut relexed = 0usize;
+        let s_delta = benchkit::bench("delta splice (1-line re-lex)", WARMUP, ITERS, || {
+            for _ in 0..EDITS_PER_ITER {
+                let text = &pool[kd];
+                kd += 1;
+                let (new_lines, _changed) =
+                    reindex_lines(&base_lines, text, scheme).expect("reindex");
+                let mut spans: Vec<IdSpan> = Vec::with_capacity(new_lines.len());
+                for l in &new_lines {
+                    match table.get(&l.hash) {
+                        Some(s) => spans.push(s.clone()),
+                        None => {
+                            relexed += 1;
+                            let s = line_span(&l.text, scheme, &vocab, &ops).expect("span");
+                            table.insert(l.hash, s.clone());
+                            spans.push(s);
+                        }
+                    }
+                }
+                let (ids, _oov) = splice_ids(spans.iter().chain(std::iter::once(&tail)), MAX_LEN);
+                std::hint::black_box(ids);
+            }
+        });
+        println!("{}", s_delta.row());
+        assert_eq!(
+            relexed,
+            (WARMUP + ITERS) * EDITS_PER_ITER,
+            "every probe must re-lex exactly its one edited line"
+        );
+
+        let full_us = s_full.mean_us / EDITS_PER_ITER as f64;
+        let delta_us = s_delta.mean_us / EDITS_PER_ITER as f64;
+        let speedup = full_us / delta_us;
+        speedups.push(speedup);
+        benchkit::kv(
+            "per-edit",
+            format!("full {full_us:.1} us, delta {delta_us:.1} us ({speedup:.2}x)"),
+        );
+        rows.push(
+            Json::obj()
+                .with("scenario", Json::str(*name))
+                .with("lines", Json::num(n_lines as f64))
+                .with("tokens", Json::num(n_tokens as f64))
+                .with("open_us", Json::num(s_open.mean_us))
+                .with("full_us_per_edit", Json::num(full_us))
+                .with("delta_us_per_edit", Json::num(delta_us))
+                .with("delta_speedup", Json::num(speedup)),
+        );
+    }
+
+    let min = speedups.iter().copied().fold(f64::INFINITY, f64::min);
+    let max = speedups.iter().copied().fold(0.0f64, f64::max);
+    benchkit::section("E9 summary");
+    benchkit::kv("delta speedup range", format!("{min:.2}x .. {max:.2}x"));
+    benchkit::kv(
+        "speedup >1x on every scenario (acceptance)",
+        if min > 1.0 { "OK" } else { "VIOLATED" },
+    );
+
+    let doc = Json::obj()
+        .with("bench", Json::str("e9_incremental"))
+        .with(
+            "note",
+            Json::str(
+                "1-line edits per scenario: full parse+encode vs session-tier delta \
+                 splice (re-lex only the edited line). Run `cargo bench --bench \
+                 e9_incremental` from rust/ to refresh.",
+            ),
+        )
+        .with("scheme", Json::str(scheme.name()))
+        .with("max_len", Json::num(MAX_LEN as f64))
+        .with("edits_per_iter", Json::num(EDITS_PER_ITER as f64))
+        .with("scenarios", Json::Arr(rows))
+        .with("delta_speedup_min", Json::num(min))
+        .with("delta_speedup_max", Json::num(max));
+    let out = repo_root().join("BENCH_incremental.json");
+    match std::fs::write(&out, doc.to_string()) {
+        Ok(()) => println!("\nrecorded {out:?}"),
+        Err(e) => eprintln!("\ncould not write {out:?}: {e}"),
+    }
+}

@@ -27,6 +27,7 @@
 
 use fxhash::{FxHashMap, FxHasher};
 use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 /// Shard count (power of two), mirroring the prediction cache's layout.
@@ -54,6 +55,7 @@ pub struct ShardedMemo<V> {
     shards: Vec<Mutex<FxHashMap<u64, V>>>,
     shard_bits: u32,
     per_shard_cap: usize,
+    evictions: AtomicU64,
 }
 
 impl<V: Clone> ShardedMemo<V> {
@@ -74,6 +76,7 @@ impl<V: Clone> ShardedMemo<V> {
             shards: (0..n).map(|_| Mutex::new(FxHashMap::default())).collect(),
             shard_bits: n.trailing_zeros(),
             per_shard_cap: (capacity / n).max(1),
+            evictions: AtomicU64::new(0),
         }
     }
 
@@ -89,6 +92,7 @@ impl<V: Clone> ShardedMemo<V> {
         let mut shard = self.shard(key).lock().unwrap();
         if shard.len() >= self.per_shard_cap && !shard.contains_key(&key) {
             shard.clear();
+            self.evictions.fetch_add(1, Ordering::Relaxed);
         }
         shard.insert(key, value);
     }
@@ -98,7 +102,16 @@ impl<V: Clone> ShardedMemo<V> {
     }
 
     pub fn is_empty(&self) -> bool {
-        self.len() == 0
+        // Short-circuit on the first occupied shard instead of summing
+        // every shard's length under its lock like `len()` does.
+        self.shards.iter().all(|s| s.lock().unwrap().is_empty())
+    }
+
+    /// Wholesale clear-on-full shard wipes since startup. Sustained
+    /// growth means the working set exceeds capacity and the memo is
+    /// churning instead of accelerating.
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
     }
 }
 
@@ -193,6 +206,21 @@ mod tests {
             memo.insert(k, enc(vec![], i));
         }
         assert!(memo.len() <= 8, "memo grew past capacity: {}", memo.len());
+        assert!(!memo.is_empty());
+    }
+
+    #[test]
+    fn evictions_count_shard_wipes() {
+        let memo = FrontendMemo::with_shards(2, 1);
+        assert!(memo.is_empty());
+        memo.insert(1, enc(vec![], 1));
+        memo.insert(2, enc(vec![], 2));
+        assert_eq!(memo.evictions(), 0, "filling to capacity is not an eviction");
+        assert!(!memo.is_empty());
+        memo.insert(3, enc(vec![], 3)); // shard full + new key → wholesale wipe
+        assert_eq!(memo.evictions(), 1);
+        memo.insert(3, enc(vec![], 4)); // refresh is never an eviction
+        assert_eq!(memo.evictions(), 1);
         assert!(!memo.is_empty());
     }
 

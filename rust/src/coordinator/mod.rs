@@ -59,6 +59,7 @@ pub mod cache;
 pub mod frontend;
 pub mod router;
 pub mod server;
+pub mod session;
 pub mod stats;
 
 use crate::bundle::Bundle;
@@ -67,12 +68,14 @@ use crate::mlir::{parse_function, Function};
 use crate::pred::PredVec;
 use crate::runtime::{Executable, Manifest, Runtime, Tensor};
 use crate::sim::Target;
-use crate::tokenizer::token_count;
+use crate::tokenizer::span::{self, IdSpan};
+use crate::tokenizer::{token_count, Scheme};
 use anyhow::{anyhow, bail, Result};
 use batcher::{BatchPolicy, BatchQueue, Pending};
 use cache::{cache_key, cache_namespace, FlightGuard, Lookup, PredictionCache};
 use frontend::{CachedEncode, FrontendMemo};
 use router::{LenMemo, Router, TargetRoutes, Variant, VariantSpec};
+use session::{Delta, SessionLine, SessionStore};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
@@ -148,9 +151,34 @@ pub struct Service {
     /// `hash(target, variant, model, mlir_text)` → `(ids, cache_key)`:
     /// duplicate probes skip parse/tokenize/encode entirely.
     memo: FrontendMemo,
+    /// The incremental tier's registered base texts
+    /// ([`Service::session_open`] / [`Service::predict_delta`]):
+    /// near-duplicate probes re-lex only their changed lines.
+    sessions: SessionStore,
     /// The cluster tier, when this node is one of several sharing one
     /// logical cache ([`Service::set_cluster`]). `None` = single node.
     cluster: Option<Arc<Cluster>>,
+}
+
+/// What [`Service::session_open`] returns: the registered session's id,
+/// the base text's unpadded token count, and the base prediction (the
+/// open doubles as a normal query).
+#[derive(Debug)]
+pub struct SessionOpened {
+    pub session_id: u64,
+    pub token_len: usize,
+    pub prediction: RoutedPrediction,
+}
+
+/// One [`Service::predict_delta`] answer: the routed prediction plus
+/// this request's incremental-tier accounting (how many line spans were
+/// spliced from cache vs re-lexed).
+#[derive(Debug)]
+pub struct DeltaOutcome {
+    pub prediction: RoutedPrediction,
+    pub token_len: usize,
+    pub spans_spliced: u64,
+    pub spans_reencoded: u64,
 }
 
 impl Service {
@@ -269,6 +297,10 @@ impl Service {
                     routed: AtomicU64::new(0),
                     budget_downgrades: AtomicU64::new(0),
                     ewma_us,
+                    span_table: frontend::ShardedMemo::with_shards(
+                        router::SPAN_TABLE_CAPACITY,
+                        router::SPAN_TABLE_SHARDS,
+                    ),
                 },
             ));
         }
@@ -279,6 +311,7 @@ impl Service {
             cache,
             stats,
             memo: FrontendMemo::new(FRONTEND_MEMO_CAPACITY),
+            sessions: SessionStore::new(session::SESSIONS_CAPACITY),
             cluster: None,
         })
     }
@@ -359,6 +392,47 @@ impl Service {
             }
         };
         // Step 2: the routing decision.
+        let vidx = self.choose_on(tr, target, token_len, budget_us, required)?;
+        let variant = &tr.variants[vidx];
+        // Step 3: the chosen variant's encoding, memoized per
+        // (target, variant, model, text) so variants never cross-serve
+        // each other's id rows.
+        let text_key = FrontendMemo::key_from_hash(
+            target.name(),
+            &variant.name,
+            &variant.bundle.model,
+            text_hash,
+        );
+        if let Some(enc) = self.memo.get(text_key) {
+            self.stats.frontend_memo_hits.fetch_add(1, Ordering::Relaxed);
+            self.stats.encode_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            return Ok((vidx, enc));
+        }
+        let func = match parsed.take() {
+            Some(f) => f,
+            None => parse_function(mlir_text)?,
+        };
+        let (ids, _oov) = variant.bundle.encode_ids(&func);
+        let key = cache_key(&variant.cache_ns, &ids);
+        let enc = CachedEncode { ids: Arc::new(ids), key };
+        self.memo.insert(text_key, enc.clone());
+        self.stats.encode_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        Ok((vidx, enc))
+    }
+
+    /// The routing decision proper, shared by the full-text path
+    /// ([`Service::route_on`], which tokenizes to learn `token_len`) and
+    /// the session tier (which *sums cached per-line counts* instead):
+    /// pick a variant by token length + optional budget + required
+    /// coverage, bump the routing counters, or refuse cleanly.
+    fn choose_on(
+        &self,
+        tr: &TargetRoutes,
+        target: Target,
+        token_len: usize,
+        budget_us: Option<u64>,
+        required: &[Target],
+    ) -> Result<usize> {
         let Some((vidx, downgraded)) = tr.choose(token_len, budget_us, required) else {
             // Two distinct refusals: nothing covers the token length
             // (the pre-multi-output error, message unchanged), or the
@@ -389,30 +463,7 @@ impl Service {
             variant.budget_downgrades.fetch_add(1, Ordering::Relaxed);
             self.stats.budget_downgrades.fetch_add(1, Ordering::Relaxed);
         }
-        // Step 3: the chosen variant's encoding, memoized per
-        // (target, variant, model, text) so variants never cross-serve
-        // each other's id rows.
-        let text_key = FrontendMemo::key_from_hash(
-            target.name(),
-            &variant.name,
-            &variant.bundle.model,
-            text_hash,
-        );
-        if let Some(enc) = self.memo.get(text_key) {
-            self.stats.frontend_memo_hits.fetch_add(1, Ordering::Relaxed);
-            self.stats.encode_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
-            return Ok((vidx, enc));
-        }
-        let func = match parsed.take() {
-            Some(f) => f,
-            None => parse_function(mlir_text)?,
-        };
-        let (ids, _oov) = variant.bundle.encode_ids(&func);
-        let key = cache_key(&variant.cache_ns, &ids);
-        let enc = CachedEncode { ids: Arc::new(ids), key };
-        self.memo.insert(text_key, enc.clone());
-        self.stats.encode_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
-        Ok((vidx, enc))
+        Ok(vidx)
     }
 
     /// Predict the primary hardware characteristic for a raw MLIR
@@ -456,20 +507,217 @@ impl Service {
         let tr = self.router.routes(target)?;
         let (vidx, enc) = self.route_on(tr, target, mlir_text, budget_us, required)?;
         let variant = &tr.variants[vidx];
-        let value = match self.cache.lookup(enc.key) {
-            Lookup::Hit(v) => {
-                self.stats.cache_hits.fetch_add(1, Ordering::Relaxed);
-                v
-            }
-            Lookup::Wait(rx) => wait_for_leader(rx)?,
-            Lookup::Miss(guard) => self.complete_miss(variant, &enc, guard)?,
-        };
+        let value = self.serve_encoded(variant, &enc)?;
         self.stats.record_latency_us(t0.elapsed().as_micros() as u64);
         Ok(RoutedPrediction {
             value,
             targets: variant.bundle.targets.clone(),
             variant: variant.name.clone(),
         })
+    }
+
+    /// The back half of a single query, shared by every front end (full
+    /// text, session open, delta): sharded cache lookup → single-flight
+    /// follower wait or leader compute.
+    fn serve_encoded(&self, variant: &Variant, enc: &CachedEncode) -> Result<PredVec> {
+        match self.cache.lookup(enc.key) {
+            Lookup::Hit(v) => {
+                self.stats.cache_hits.fetch_add(1, Ordering::Relaxed);
+                Ok(v)
+            }
+            Lookup::Wait(rx) => wait_for_leader(rx),
+            Lookup::Miss(guard) => self.complete_miss(variant, enc, guard),
+        }
+    }
+
+    /// Register an incremental session: index `mlir_text` line by line
+    /// (per-line token counts under the target's scheme), serve the
+    /// base prediction through the normal full pipeline, and — before
+    /// admitting the session — prove the line tokenizer agrees with
+    /// that pipeline by splicing the base from spans and comparing the
+    /// id rows byte for byte. The splice pass doubles as span-table
+    /// warm-up, so the first [`Service::predict_delta`] already splices
+    /// every unchanged line.
+    ///
+    /// A text the line grammar cannot handle (anything that does not
+    /// match the printer's line forms) is a clean refusal: the client
+    /// keeps using plain full-text queries for it.
+    pub fn session_open(
+        &self,
+        target: Target,
+        mlir_text: &str,
+        budget_us: Option<u64>,
+        required: &[Target],
+    ) -> Result<SessionOpened> {
+        let t0 = Instant::now();
+        self.stats.requests.fetch_add(1, Ordering::Relaxed);
+        let tr = self.router.routes(target)?;
+        let lines = session::index_lines(mlir_text, tr.scheme)?;
+        let token_len = session::indexed_token_len(&lines);
+        // The full pipeline serves the base (and fills the len/encode
+        // memos exactly as a cold plain query would).
+        let (vidx, enc) = self.route_on(tr, target, mlir_text, budget_us, required)?;
+        let variant = &tr.variants[vidx];
+        // Warm the routed variant's span table and gate the session on
+        // byte-identity: a spliced row that differs from the full
+        // pipeline's would silently corrupt every delta after it.
+        let mut spans: Vec<IdSpan> = Vec::with_capacity(lines.len());
+        for line in &lines {
+            let span = match variant.span_table.get(line.hash) {
+                Some(s) => s,
+                None => {
+                    let s = span::line_span(
+                        &line.text,
+                        tr.scheme,
+                        &variant.bundle.vocab,
+                        &variant.bundle.op_ids,
+                    )?;
+                    variant.span_table.insert(line.hash, s.clone());
+                    s
+                }
+            };
+            spans.push(span);
+        }
+        let tail = span::tail_span(&variant.bundle.vocab);
+        let (ids, _oov) =
+            span::splice_ids(spans.iter().chain(std::iter::once(&tail)), variant.bundle.max_len);
+        if ids != *enc.ids {
+            bail!(
+                "session_open integrity check failed for target '{}': spliced ids \
+                 differ from the full pipeline (tokenizer bug, not a client error)",
+                target.name(),
+            );
+        }
+        let value = self.serve_encoded(variant, &enc)?;
+        let prediction = RoutedPrediction {
+            value,
+            targets: variant.bundle.targets.clone(),
+            variant: variant.name.clone(),
+        };
+        let (session_id, evicted) = self.sessions.open(
+            target,
+            Arc::new(mlir_text.to_string()),
+            Arc::new(lines),
+            token_len,
+        );
+        // Net gauge move: one opened, `evicted` LRU-dropped.
+        self.stats.sessions_open.fetch_add(1, Ordering::Relaxed);
+        if evicted > 0 {
+            self.stats.sessions_open.fetch_sub(evicted as u64, Ordering::Relaxed);
+        }
+        self.stats.record_latency_us(t0.elapsed().as_micros() as u64);
+        Ok(SessionOpened { session_id, token_len, prediction })
+    }
+
+    /// Serve an edit against a registered session: materialize the new
+    /// text (byte-range splices or full replacement), line-diff it
+    /// against the base so only the changed middle is ever re-counted,
+    /// route on the summed length, and assemble the id row from the
+    /// routed variant's span table — re-lexing ONLY lines whose spans
+    /// are not already cached. With `rebase`, the result becomes the
+    /// session's new base for subsequent deltas; without it, every
+    /// delta keeps addressing the originally registered text.
+    pub fn predict_delta(
+        &self,
+        session_id: u64,
+        delta: Delta,
+        rebase: bool,
+        budget_us: Option<u64>,
+        required: &[Target],
+    ) -> Result<DeltaOutcome> {
+        let t0 = Instant::now();
+        self.stats.requests.fetch_add(1, Ordering::Relaxed);
+        self.stats.delta_requests.fetch_add(1, Ordering::Relaxed);
+        let Some(base) = self.sessions.snapshot(session_id) else {
+            bail!("unknown session {session_id} (never opened, closed, or evicted)");
+        };
+        let tr = self.router.routes(base.target)?;
+        let new_text = match delta {
+            Delta::Splices(ref splices) => session::apply_splices(&base.text, splices)?,
+            Delta::Full(text) => text,
+        };
+        let (lines, _changed) = session::reindex_lines(&base.lines, &new_text, tr.scheme)?;
+        let token_len = session::indexed_token_len(&lines);
+        // Same length-based decision a full query would make — but the
+        // length came from cached per-line sums, not a tokenizer pass.
+        let vidx = self.choose_on(tr, base.target, token_len, budget_us, required)?;
+        let variant = &tr.variants[vidx];
+        let (enc, spliced, reencoded) = self.encode_query(variant, tr.scheme, &lines)?;
+        let value = self.serve_encoded(variant, &enc)?;
+        let prediction = RoutedPrediction {
+            value,
+            targets: variant.bundle.targets.clone(),
+            variant: variant.name.clone(),
+        };
+        if rebase {
+            self.sessions.rebase(session_id, Arc::new(new_text), Arc::new(lines), token_len);
+        }
+        self.stats.record_latency_us(t0.elapsed().as_micros() as u64);
+        Ok(DeltaOutcome {
+            prediction,
+            token_len,
+            spans_spliced: spliced,
+            spans_reencoded: reencoded,
+        })
+    }
+
+    /// The incremental tier's front end ([`Service::predict_delta`]'s
+    /// encode step): assemble the padded id row by splicing each line's
+    /// cached span out of the variant's span table, re-lexing only the
+    /// misses. Returns the encoding plus this request's splice/re-lex
+    /// split (also accumulated into `spans_spliced` /
+    /// `spans_reencoded` / `delta_bytes_rescanned`).
+    fn encode_query(
+        &self,
+        variant: &Variant,
+        scheme: Scheme,
+        lines: &[SessionLine],
+    ) -> Result<(CachedEncode, u64, u64)> {
+        let t0 = Instant::now();
+        let mut spliced = 0u64;
+        let mut reencoded = 0u64;
+        let mut spans: Vec<IdSpan> = Vec::with_capacity(lines.len());
+        for line in lines {
+            match variant.span_table.get(line.hash) {
+                Some(s) => {
+                    spliced += 1;
+                    spans.push(s);
+                }
+                None => {
+                    let s = span::line_span(
+                        &line.text,
+                        scheme,
+                        &variant.bundle.vocab,
+                        &variant.bundle.op_ids,
+                    )?;
+                    variant.span_table.insert(line.hash, s.clone());
+                    reencoded += 1;
+                    self.stats
+                        .delta_bytes_rescanned
+                        .fetch_add(line.text.len() as u64, Ordering::Relaxed);
+                    spans.push(s);
+                }
+            }
+        }
+        let tail = span::tail_span(&variant.bundle.vocab);
+        let (ids, _oov) =
+            span::splice_ids(spans.iter().chain(std::iter::once(&tail)), variant.bundle.max_len);
+        let key = cache_key(&variant.cache_ns, &ids);
+        self.stats.spans_spliced.fetch_add(spliced, Ordering::Relaxed);
+        self.stats.spans_reencoded.fetch_add(reencoded, Ordering::Relaxed);
+        self.stats.encode_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        Ok((CachedEncode { ids: Arc::new(ids), key }, spliced, reencoded))
+    }
+
+    /// Drop a session (the `session_close` wire command). Returns
+    /// whether the id was live — closing twice is not an error, just
+    /// `false`.
+    pub fn session_close(&self, session_id: u64) -> bool {
+        let closed = self.sessions.close(session_id);
+        if closed {
+            self.stats.sessions_open.fetch_sub(1, Ordering::Relaxed);
+        }
+        closed
     }
 
     /// Resolve a genuine local-cache miss (this thread is the
@@ -817,7 +1065,8 @@ impl Service {
                             Json::num(v.budget_downgrades.load(Ordering::Relaxed) as f64),
                         )
                         .with("ewma_us", Json::num(v.ewma_us.get()))
-                        .with("queued", Json::num(v.queue.queued() as f64)),
+                        .with("queued", Json::num(v.queue.queued() as f64))
+                        .with("span_entries", Json::num(v.span_table.len() as f64)),
                 );
             }
         }
@@ -831,6 +1080,7 @@ impl Service {
             .with("cache_shard_contention", Json::num(self.cache.contended() as f64))
             .with("cache_shards", Json::num(self.cache.shard_count() as f64))
             .with("frontend_memo_entries", Json::num(self.memo.len() as f64))
+            .with("frontend_memo_evictions", Json::num(self.memo.evictions() as f64))
             .with("len_memo_entries", Json::num(self.router.len_memo.len() as f64))
             .with("routed_by_variant", routed)
             .with("variants", variants);

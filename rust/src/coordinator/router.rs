@@ -43,6 +43,7 @@ use super::frontend::ShardedMemo;
 use super::stats::LatencyEwma;
 use crate::bundle::Bundle;
 use crate::sim::Target;
+use crate::tokenizer::span::IdSpan;
 use crate::tokenizer::Scheme;
 use anyhow::{anyhow, bail, Result};
 use fxhash::FxHasher;
@@ -82,6 +83,13 @@ pub(crate) struct Variant {
     /// callers collect results. Cache hits don't feed it — a hit costs
     /// the same on every variant.
     pub(crate) ewma_us: Arc<LatencyEwma>,
+    /// The incremental tier's segment cache: `FxHash(line bytes)` →
+    /// that line's [`IdSpan`] under THIS variant's vocab/op-table
+    /// (spans embed vocabulary ids, so the table is per-variant by
+    /// construction — no salt needed in the key). `session_open` warms
+    /// it for the routed variant; `mlir_delta` splices hits and
+    /// re-lexes only misses (`spans_spliced` / `spans_reencoded`).
+    pub(crate) span_table: ShardedMemo<IdSpan>,
 }
 
 /// All variants serving one target, sorted by `(max_len, name)`
@@ -199,6 +207,15 @@ where
     }
     Some((preferred, false))
 }
+
+/// Entries each variant's span table holds. A span is one *line's* ids
+/// (a handful of u32s), so even ops_operands affine bodies keep this
+/// under ~2 MB per variant; clear-on-full re-warms in one delta.
+pub(crate) const SPAN_TABLE_CAPACITY: usize = 32768;
+
+/// Shard count for the span table (power of two, mirroring the other
+/// serving-path memos).
+pub(crate) const SPAN_TABLE_SHARDS: usize = 16;
 
 /// Entries the token-length memo holds (12 bytes each — a routing
 /// probe on a duplicate text costs one text hash + one shard lookup,

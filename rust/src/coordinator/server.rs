@@ -11,6 +11,10 @@
 //!           {"id": 9, "cmd": "ping"}
 //!           {"id": 11, "cmd": "cache_get", "key": "00f3a9..."}
 //!           {"id": 12, "cmd": "cache_put", "key": "00f3a9...", "value": [27.4, 61.0]}
+//!           {"id": 13, "cmd": "session_open", "target": "regpressure", "mlir": "func.func @f..."}
+//!           {"id": 14, "cmd": "mlir_delta", "session": 1, "splices": [{"start": 120, "end": 138, "text": "..."}]}
+//!           {"id": 15, "cmd": "mlir_delta", "session": 1, "mlir": "func.func @f...", "rebase": true}
+//!           {"id": 16, "cmd": "session_close", "session": 1}
 //! Response: {"id": 7, "ok": true, "prediction": 27.4, "predictions": {"regpressure": 27.4},
 //!            "variant": "fc_ops", "us": 812}
 //!           {"id": 10, "ok": true, "predictions": [{"ok": true, "prediction": 27.4,
@@ -20,7 +24,20 @@
 //!           {"id": 8, "ok": true, "stats": {...}}
 //!           {"id": 11, "ok": true, "found": true, "value": [27.4, 61.0]}   (or "found": false)
 //!           {"id": 12, "ok": true, "stored": true}
+//!           {"id": 13, "ok": true, "session": 1, "token_len": 42, "prediction": 27.4, ...}
+//!           {"id": 14, "ok": true, "prediction": 28.1, "spans_spliced": 11, "spans_reencoded": 1, ...}
+//!           {"id": 16, "ok": true, "closed": true}
 //!           {"id": 7, "ok": false, "error": "..."}
+//!
+//! `session_open` / `mlir_delta` / `session_close` are the incremental
+//! tier (`super::session`): an autotuner registers a base text once,
+//! then sends only what changed — explicit byte-range `splices` into
+//! the base, or the full text for the server to line-diff — and the
+//! tokenizer re-lexes only the changed lines, splicing every unchanged
+//! line's cached id-span (byte-identical to a full re-encode; watch
+//! `spans_spliced` / `spans_reencoded` / `delta_bytes_rescanned` in the
+//! stats). `"rebase": true` promotes a delta's result to the session's
+//! new base; otherwise deltas keep addressing the registered text.
 //!
 //! `mlir` / `mlir_batch` requests route through the serving tier's
 //! variant router: each query's token length picks the cheapest
@@ -98,6 +115,7 @@
 //! [`serve_on_threaded`], kept as the baseline the serving bench
 //! (`benches/e3_serving.rs`) compares the event loop against.
 
+use super::session::{Delta, Splice};
 use super::Service;
 use crate::json::{parse, Json};
 use crate::pred::PredVec;
@@ -803,6 +821,51 @@ pub fn handle_line(service: &Service, line: &str) -> Json {
             .with("ok", Json::Bool(false))
             .with("error", Json::str(msg))
     };
+    // Optional per-request latency budget in microseconds: the router
+    // downgrades to a smaller/faster variant when the length-preferred
+    // one's latency estimate exceeds this. Parsed up front because both
+    // the plain predict path and the session commands honor it.
+    let budget_us = match req.get("budget_us") {
+        None => None,
+        Some(j) => match j.as_f64() {
+            Some(b) if b.is_finite() && b >= 0.0 => Some(b as u64),
+            _ => return fail("'budget_us' must be a non-negative number".into()),
+        },
+    };
+    // Optional required-characteristic list: only variants serving ALL
+    // of these may answer (see the module docs' targets_not_served
+    // contract).
+    let required: Vec<Target> = match req.get("targets") {
+        None => Vec::new(),
+        Some(j) => {
+            let Some(items) = j.as_arr() else {
+                return fail("'targets' must be an array of characteristic names".into());
+            };
+            let mut out = Vec::with_capacity(items.len());
+            for item in items {
+                match item.as_str().and_then(Target::parse) {
+                    Some(t) => out.push(t),
+                    None => {
+                        return fail(format!("unknown characteristic in 'targets': {item}"))
+                    }
+                }
+            }
+            out
+        }
+    };
+    // One routed row's response fields: the scalar `prediction`
+    // (primary characteristic, back-compat) plus the full `predictions`
+    // object naming every slot of the vector.
+    let row_json = |p: &super::RoutedPrediction| {
+        let mut named = Json::obj();
+        for (t, v) in p.targets.iter().zip(p.value.iter()) {
+            named = named.with(t.name(), Json::num(*v));
+        }
+        Json::obj()
+            .with("prediction", Json::num(p.value.first()))
+            .with("predictions", named)
+            .with("variant", Json::str(&*p.variant))
+    };
     if let Some(cmd) = req.get("cmd").and_then(Json::as_str) {
         return match cmd {
             "ping" => Json::obj()
@@ -871,56 +934,97 @@ pub fn handle_line(service: &Service, line: &str) -> Json {
                     service.targets().iter().map(|t| Json::str(t.name())).collect(),
                 ),
             ),
+            // Incremental tier: register a base text for delta probes.
+            "session_open" => {
+                let Some(target) = req.req_str("target").ok().and_then(Target::parse) else {
+                    return fail("missing/invalid 'target'".into());
+                };
+                let mlir = match req.req_str("mlir") {
+                    Ok(m) => m,
+                    Err(e) => return fail(e.to_string()),
+                };
+                match service.session_open(target, mlir, budget_us, &required) {
+                    Ok(opened) => row_json(&opened.prediction)
+                        .with("id", id.clone())
+                        .with("ok", Json::Bool(true))
+                        .with("session", Json::num(opened.session_id as f64))
+                        .with("token_len", Json::num(opened.token_len as f64))
+                        .with("us", Json::num(t0.elapsed().as_micros() as f64)),
+                    Err(e) => fail(format!("{e:#}")),
+                }
+            }
+            // Incremental tier: predict an edit against a session's base,
+            // re-lexing only the changed lines.
+            "mlir_delta" => {
+                let Some(sid) =
+                    req.get("session").and_then(Json::as_f64).filter(|s| *s >= 0.0)
+                else {
+                    return fail("missing/invalid 'session' (id from session_open)".into());
+                };
+                let delta = if let Some(splices) = req.get("splices") {
+                    let Some(items) = splices.as_arr() else {
+                        return fail(
+                            "'splices' must be an array of {start, end, text} objects".into(),
+                        );
+                    };
+                    let mut out = Vec::with_capacity(items.len());
+                    for item in items {
+                        let (Some(start), Some(end), Some(text)) = (
+                            item.get("start").and_then(Json::as_f64),
+                            item.get("end").and_then(Json::as_f64),
+                            item.get("text").and_then(Json::as_str),
+                        ) else {
+                            return fail(
+                                "each splice needs numeric 'start'/'end' and string 'text'"
+                                    .into(),
+                            );
+                        };
+                        if start < 0.0 || end < 0.0 {
+                            return fail("splice 'start'/'end' must be non-negative".into());
+                        }
+                        out.push(Splice {
+                            start: start as usize,
+                            end: end as usize,
+                            text: text.to_string(),
+                        });
+                    }
+                    Delta::Splices(out)
+                } else if let Ok(m) = req.req_str("mlir") {
+                    Delta::Full(m.to_string())
+                } else {
+                    return fail("'mlir_delta' needs either 'splices' or full 'mlir' text".into());
+                };
+                let rebase = req.get("rebase").and_then(Json::as_bool).unwrap_or(false);
+                match service.predict_delta(sid as u64, delta, rebase, budget_us, &required) {
+                    Ok(out) => row_json(&out.prediction)
+                        .with("id", id.clone())
+                        .with("ok", Json::Bool(true))
+                        .with("token_len", Json::num(out.token_len as f64))
+                        .with("spans_spliced", Json::num(out.spans_spliced as f64))
+                        .with("spans_reencoded", Json::num(out.spans_reencoded as f64))
+                        .with("us", Json::num(t0.elapsed().as_micros() as f64)),
+                    Err(e) => fail(format!("{e:#}")),
+                }
+            }
+            // Incremental tier: drop a session (idempotent — a second
+            // close answers `"closed": false`).
+            "session_close" => {
+                let Some(sid) =
+                    req.get("session").and_then(Json::as_f64).filter(|s| *s >= 0.0)
+                else {
+                    return fail("missing/invalid 'session' (id from session_open)".into());
+                };
+                Json::obj()
+                    .with("id", id.clone())
+                    .with("ok", Json::Bool(true))
+                    .with("closed", Json::Bool(service.session_close(sid as u64)))
+            }
             other => fail(format!("unknown cmd '{other}'")),
         };
     }
     let target = match req.req_str("target").ok().and_then(Target::parse) {
         Some(t) => t,
         None => return fail("missing/invalid 'target'".into()),
-    };
-    // Optional per-request latency budget in microseconds: the router
-    // downgrades to a smaller/faster variant when the length-preferred
-    // one's latency estimate exceeds this.
-    let budget_us = match req.get("budget_us") {
-        None => None,
-        Some(j) => match j.as_f64() {
-            Some(b) if b.is_finite() && b >= 0.0 => Some(b as u64),
-            _ => return fail("'budget_us' must be a non-negative number".into()),
-        },
-    };
-    // Optional required-characteristic list: only variants serving ALL
-    // of these may answer (see the module docs' targets_not_served
-    // contract).
-    let required: Vec<Target> = match req.get("targets") {
-        None => Vec::new(),
-        Some(j) => {
-            let Some(items) = j.as_arr() else {
-                return fail("'targets' must be an array of characteristic names".into());
-            };
-            let mut out = Vec::with_capacity(items.len());
-            for item in items {
-                match item.as_str().and_then(Target::parse) {
-                    Some(t) => out.push(t),
-                    None => {
-                        return fail(format!("unknown characteristic in 'targets': {item}"))
-                    }
-                }
-            }
-            out
-        }
-    };
-    // One routed row's response fields: the scalar `prediction`
-    // (primary characteristic, back-compat) plus the full `predictions`
-    // object naming every slot of the vector.
-    let row_json = |p: &super::RoutedPrediction| {
-        let mut named = Json::obj();
-        for (t, v) in p.targets.iter().zip(p.value.iter()) {
-            named = named.with(t.name(), Json::num(*v));
-        }
-        Json::obj()
-            .with("prediction", Json::num(p.value.first()))
-            .with("predictions", named)
-            .with("variant", Json::str(&*p.variant))
     };
     // Batch request: an array of MLIR texts through predict_many.
     if let Some(batch) = req.get("mlir_batch") {
@@ -1258,6 +1362,91 @@ impl Client {
         self.roundtrip(req)?;
         Ok(())
     }
+
+    /// Open an incremental session (`session_open`): register `mlir` as
+    /// the base text subsequent [`Client::predict_delta_splices`] /
+    /// [`Client::predict_delta_full`] calls edit against. Returns the
+    /// session id and the base prediction.
+    pub fn session_open(&mut self, target: Target, mlir: &str) -> Result<(u64, f64)> {
+        let id = self.next_id();
+        let req = Json::obj()
+            .with("id", Json::num(id as f64))
+            .with("cmd", Json::str("session_open"))
+            .with("target", Json::str(target.name()))
+            .with("mlir", Json::str(mlir));
+        let resp = self.roundtrip(req)?;
+        Ok((resp.req_f64("session")? as u64, resp.req_f64("prediction")?))
+    }
+
+    /// Predict an edit (`mlir_delta`) expressed as byte-range splices
+    /// into the session's base text (each `(start, end, replacement)`
+    /// sorted ascending, non-overlapping). Returns the prediction plus
+    /// this request's `(spans_spliced, spans_reencoded)` split.
+    pub fn predict_delta_splices(
+        &mut self,
+        session: u64,
+        splices: &[(usize, usize, &str)],
+        rebase: bool,
+    ) -> Result<(f64, u64, u64)> {
+        let arr: Vec<Json> = splices
+            .iter()
+            .map(|&(start, end, text)| {
+                Json::obj()
+                    .with("start", Json::num(start as f64))
+                    .with("end", Json::num(end as f64))
+                    .with("text", Json::str(text))
+            })
+            .collect();
+        self.mlir_delta(session, ("splices", Json::Arr(arr)), rebase)
+    }
+
+    /// Predict an edit (`mlir_delta`) sent as the full new text; the
+    /// server line-diffs it against the session's base so only changed
+    /// lines are re-lexed. Returns the prediction plus this request's
+    /// `(spans_spliced, spans_reencoded)` split.
+    pub fn predict_delta_full(
+        &mut self,
+        session: u64,
+        mlir: &str,
+        rebase: bool,
+    ) -> Result<(f64, u64, u64)> {
+        self.mlir_delta(session, ("mlir", Json::str(mlir)), rebase)
+    }
+
+    fn mlir_delta(
+        &mut self,
+        session: u64,
+        (field, body): (&str, Json),
+        rebase: bool,
+    ) -> Result<(f64, u64, u64)> {
+        let id = self.next_id();
+        let mut req = Json::obj()
+            .with("id", Json::num(id as f64))
+            .with("cmd", Json::str("mlir_delta"))
+            .with("session", Json::num(session as f64))
+            .with(field, body);
+        if rebase {
+            req = req.with("rebase", Json::Bool(true));
+        }
+        let resp = self.roundtrip(req)?;
+        Ok((
+            resp.req_f64("prediction")?,
+            resp.req_f64("spans_spliced")? as u64,
+            resp.req_f64("spans_reencoded")? as u64,
+        ))
+    }
+
+    /// Drop an incremental session (`session_close`). `Ok(true)` when
+    /// the id was live; closing twice answers `Ok(false)`.
+    pub fn session_close(&mut self, session: u64) -> Result<bool> {
+        let id = self.next_id();
+        let req = Json::obj()
+            .with("id", Json::num(id as f64))
+            .with("cmd", Json::str("session_close"))
+            .with("session", Json::num(session as f64));
+        let resp = self.roundtrip(req)?;
+        Ok(resp.get("closed").and_then(Json::as_bool) == Some(true))
+    }
 }
 
 #[cfg(test)]
@@ -1382,6 +1571,14 @@ mod tests {
         assert!(inner.get("budget_downgrades").is_some());
         assert!(inner.get("no_covering_variant").is_some());
         assert!(inner.get("len_memo_entries").is_some());
+        // ...and the incremental-tier counters, present (zero) from
+        // startup so dashboards can rely on the shape.
+        assert!(inner.get("frontend_memo_evictions").is_some());
+        assert_eq!(inner.req_f64("sessions_open").unwrap(), 0.0);
+        assert_eq!(inner.req_f64("delta_requests").unwrap(), 0.0);
+        assert_eq!(inner.req_f64("spans_spliced").unwrap(), 0.0);
+        assert_eq!(inner.req_f64("spans_reencoded").unwrap(), 0.0);
+        assert_eq!(inner.req_f64("delta_bytes_rescanned").unwrap(), 0.0);
         // The multi-output counter is present (zero) from startup.
         assert_eq!(inner.req_f64("targets_not_served").unwrap(), 0.0);
         let routed = inner.get("routed_by_variant").expect("routed_by_variant missing");
@@ -1397,6 +1594,7 @@ mod tests {
         assert_eq!(v.req_f64("routed").unwrap(), 0.0);
         assert_eq!(v.req_f64("budget_downgrades").unwrap(), 0.0);
         assert_eq!(v.req_f64("ewma_us").unwrap(), 0.0);
+        assert_eq!(v.req_f64("span_entries").unwrap(), 0.0);
         assert!(inner.get("cluster").is_none(), "unclustered service must omit the peer view");
         let targets = handle_line(&svc, r#"{"id": 3, "cmd": "targets"}"#);
         assert_eq!(targets.req_arr("targets").unwrap().len(), 1);
@@ -1404,6 +1602,124 @@ mod tests {
         assert_eq!(bad.get("ok").and_then(Json::as_bool), Some(false));
         let missing = handle_line(&svc, r#"{"id": 4}"#);
         assert_eq!(missing.get("ok").and_then(Json::as_bool), Some(false));
+    }
+
+    /// The incremental tier's acceptance bar, wire level: editing ONE
+    /// line of an N-line function re-lexes only that line —
+    /// `spans_spliced` / `spans_reencoded` in the response prove it —
+    /// and the spliced encoding lands on the same prediction-cache
+    /// entry a full re-encode would (the comment-only edit leaves the
+    /// token stream untouched).
+    #[test]
+    fn session_delta_relexes_only_changed_lines() {
+        let Some(svc) = service() else { return };
+        let text = graph(31, 32);
+        let n_lines = text.lines().count();
+        assert!(n_lines >= 3, "graph too small to edit meaningfully");
+        let open = handle_line(
+            &svc,
+            &Json::obj()
+                .with("id", Json::num(1.0))
+                .with("cmd", Json::str("session_open"))
+                .with("target", Json::str("regpressure"))
+                .with("mlir", Json::str(text.as_str()))
+                .to_string(),
+        );
+        assert_eq!(open.get("ok").and_then(Json::as_bool), Some(true), "{}", open.to_string());
+        let sid = open.req_f64("session").unwrap();
+        let base_pred = open.req_f64("prediction").unwrap();
+        assert!(open.req_f64("token_len").unwrap() > 0.0);
+
+        // Full-text delta: one middle line gains a trailing comment.
+        // The lexer skips comments, so the token stream (and therefore
+        // the prediction) is unchanged — but the line's bytes differ,
+        // so exactly that one line must be re-lexed.
+        let edit_at = n_lines / 2;
+        let edited: Vec<String> = text
+            .lines()
+            .enumerate()
+            .map(|(i, l)| if i == edit_at { format!("{l} // tweaked") } else { l.to_string() })
+            .collect();
+        let resp = handle_line(
+            &svc,
+            &Json::obj()
+                .with("id", Json::num(2.0))
+                .with("cmd", Json::str("mlir_delta"))
+                .with("session", Json::num(sid))
+                .with("mlir", Json::str(edited.join("\n")))
+                .to_string(),
+        );
+        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true), "{}", resp.to_string());
+        assert_eq!(resp.req_f64("spans_spliced").unwrap(), (n_lines - 1) as f64);
+        assert_eq!(resp.req_f64("spans_reencoded").unwrap(), 1.0);
+        assert_eq!(resp.req_f64("prediction").unwrap(), base_pred);
+
+        // Splice-form delta against the same (un-rebased) base: insert
+        // a different comment at the end of the same line. New bytes →
+        // new hash → again exactly one re-lex.
+        let line_end: usize =
+            text.lines().take(edit_at + 1).map(|l| l.len() + 1).sum::<usize>() - 1;
+        let splice = Json::obj()
+            .with("start", Json::num(line_end as f64))
+            .with("end", Json::num(line_end as f64))
+            .with("text", Json::str(" // again"));
+        let resp2 = handle_line(
+            &svc,
+            &Json::obj()
+                .with("id", Json::num(3.0))
+                .with("cmd", Json::str("mlir_delta"))
+                .with("session", Json::num(sid))
+                .with("splices", Json::Arr(vec![splice]))
+                .to_string(),
+        );
+        assert_eq!(resp2.get("ok").and_then(Json::as_bool), Some(true), "{}", resp2.to_string());
+        assert_eq!(resp2.req_f64("spans_spliced").unwrap(), (n_lines - 1) as f64);
+        assert_eq!(resp2.req_f64("spans_reencoded").unwrap(), 1.0);
+        assert_eq!(resp2.req_f64("prediction").unwrap(), base_pred);
+
+        // The stats view agrees with the per-response accounting.
+        let stats = handle_line(&svc, r#"{"id": 4, "cmd": "stats"}"#);
+        let inner = stats.get("stats").unwrap();
+        assert_eq!(inner.req_f64("sessions_open").unwrap(), 1.0);
+        assert_eq!(inner.req_f64("delta_requests").unwrap(), 2.0);
+        assert_eq!(inner.req_f64("spans_spliced").unwrap(), 2.0 * (n_lines - 1) as f64);
+        assert_eq!(inner.req_f64("spans_reencoded").unwrap(), 2.0);
+        assert!(inner.req_f64("delta_bytes_rescanned").unwrap() > 0.0);
+        let v = inner.get("variants").unwrap().get("regpressure/fc_ops").unwrap();
+        assert!(v.req_f64("span_entries").unwrap() >= n_lines as f64);
+
+        // Close is observable and idempotent; a delta on a closed
+        // session is a clean error.
+        let close = handle_line(
+            &svc,
+            &format!(r#"{{"id": 5, "cmd": "session_close", "session": {sid}}}"#),
+        );
+        assert_eq!(close.get("closed").and_then(Json::as_bool), Some(true));
+        let again = handle_line(
+            &svc,
+            &format!(r#"{{"id": 6, "cmd": "session_close", "session": {sid}}}"#),
+        );
+        assert_eq!(again.get("closed").and_then(Json::as_bool), Some(false));
+        let stale = handle_line(
+            &svc,
+            &format!(r#"{{"id": 7, "cmd": "mlir_delta", "session": {sid}, "mlir": "x"}}"#),
+        );
+        assert_eq!(stale.get("ok").and_then(Json::as_bool), Some(false));
+        assert!(stale.req_str("error").unwrap().contains("unknown session"));
+        let stats = handle_line(&svc, r#"{"id": 8, "cmd": "stats"}"#);
+        assert_eq!(stats.get("stats").unwrap().req_f64("sessions_open").unwrap(), 0.0);
+
+        // Malformed session commands fail at the protocol edge.
+        for bad in [
+            r#"{"id": 9, "cmd": "session_open", "target": "regpressure"}"#,
+            r#"{"id": 10, "cmd": "mlir_delta", "session": 1}"#,
+            r#"{"id": 11, "cmd": "mlir_delta", "mlir": "x"}"#,
+            r#"{"id": 12, "cmd": "session_close"}"#,
+            r#"{"id": 13, "cmd": "mlir_delta", "session": 1, "splices": [{"start": 0}]}"#,
+        ] {
+            let resp = handle_line(&svc, bad);
+            assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false), "accepted: {bad}");
+        }
     }
 
     #[test]

@@ -1,0 +1,425 @@
+//! Session tier: incremental delta encoding for edit-heavy traffic.
+//!
+//! Autotuning loops don't just *duplicate* probes (the
+//! [`super::frontend`] memo's territory) — they send long runs of
+//! *near*-duplicates: the same function with one tile size, one attr,
+//! one op swapped per probe. A full re-encode pays
+//! lex→parse→tokenize→encode over the whole text to learn that one line
+//! changed. This tier lets the client say so: `session_open` registers a
+//! base text and returns a session id; `mlir_delta` sends either
+//! explicit byte-range splices or the full new text (line-diffed against
+//! the base here), and only the *changed* lines ever reach a lexer —
+//! every unchanged line splices its cached [`IdSpan`] out of the routed
+//! variant's span table (`FxHash(line bytes)` → span), byte-identical to
+//! the full pipeline by construction (asserted at `session_open`).
+//!
+//! What lives where:
+//! - per-session, variant-agnostic state ([`Session`]): the base text,
+//!   its lines with per-line token counts (scheme is fixed per target,
+//!   so counts are reusable across every variant of the target) — this
+//!   is what routing's length decision sums without re-lexing;
+//! - per-variant state (`span_table` on [`super::router::Variant`]): the
+//!   line → id-span cache, per-variant because spans embed vocabulary
+//!   ids.
+//!
+//! The store is capacity-bounded ([`SESSIONS_CAPACITY`]): opening past
+//! capacity evicts the least-recently-used session (a client holding a
+//! stale id gets a clean `unknown session` error and re-opens). The
+//! `sessions_open` stats gauge tracks live entries.
+
+use crate::sim::Target;
+use crate::tokenizer::span::{line_hash, line_token_count, TAIL_TOKEN_COUNT};
+use crate::tokenizer::Scheme;
+use anyhow::{bail, Context, Result};
+use fxhash::FxHashMap;
+use std::sync::{Arc, Mutex};
+
+/// Live sessions the store holds before LRU eviction kicks in. A
+/// session is the base text plus per-line metadata (~2× text size);
+/// 256 concurrent autotuning clients is far past the paper's traffic.
+pub const SESSIONS_CAPACITY: usize = 256;
+
+/// One indexed line of a session's base text: the raw text (splice
+/// reconstruction + diffing), its span-table key, and its token count
+/// under the target's scheme (variant-agnostic — what routing sums).
+#[derive(Debug, Clone)]
+pub struct SessionLine {
+    pub text: String,
+    pub hash: u64,
+    pub tokens: u32,
+}
+
+/// One registered base text. `text` and `lines` sit behind `Arc` so a
+/// delta snapshots them out of the store lock without copying the text.
+#[derive(Debug, Clone)]
+pub struct Session {
+    pub target: Target,
+    pub text: Arc<String>,
+    pub lines: Arc<Vec<SessionLine>>,
+    /// Unpadded token count of the base (line sums + tail).
+    pub token_len: usize,
+    /// Store tick at last touch — the LRU eviction ordering.
+    last_used: u64,
+}
+
+/// One byte-range edit for [`Delta::Splices`]: replace
+/// `base[start..end]` with `text`. Offsets index the session's
+/// *registered base* bytes; splices must be sorted ascending and
+/// non-overlapping.
+#[derive(Debug, Clone)]
+pub struct Splice {
+    pub start: usize,
+    pub end: usize,
+    pub text: String,
+}
+
+/// The two wire shapes of an edit: explicit byte-range splices into the
+/// base, or the full new text (the server line-diffs it against the
+/// base — same cost model either way, since both reduce to "which lines
+/// changed").
+#[derive(Debug, Clone)]
+pub enum Delta {
+    Splices(Vec<Splice>),
+    Full(String),
+}
+
+struct StoreInner {
+    sessions: FxHashMap<u64, Session>,
+    /// Session ids are sequential from 1 — deterministic for the
+    /// protocol docs' verified examples.
+    next_id: u64,
+    tick: u64,
+}
+
+/// Capacity-bounded, LRU-evicting session registry.
+pub struct SessionStore {
+    inner: Mutex<StoreInner>,
+    capacity: usize,
+}
+
+impl SessionStore {
+    pub fn new(capacity: usize) -> SessionStore {
+        SessionStore {
+            inner: Mutex::new(StoreInner {
+                sessions: FxHashMap::default(),
+                next_id: 1,
+                tick: 0,
+            }),
+            capacity: capacity.max(1),
+        }
+    }
+
+    /// Register a session. Returns its id plus how many older sessions
+    /// were evicted to stay under capacity (the caller adjusts the
+    /// `sessions_open` gauge by `1 - evicted`).
+    pub fn open(
+        &self,
+        target: Target,
+        text: Arc<String>,
+        lines: Arc<Vec<SessionLine>>,
+        token_len: usize,
+    ) -> (u64, usize) {
+        let mut inner = self.inner.lock().unwrap();
+        let mut evicted = 0;
+        while inner.sessions.len() >= self.capacity {
+            // O(n) LRU scan — n is at most SESSIONS_CAPACITY and this
+            // only runs on an open past capacity.
+            let Some(&oldest) = inner
+                .sessions
+                .iter()
+                .min_by_key(|(_, s)| s.last_used)
+                .map(|(id, _)| id)
+            else {
+                break;
+            };
+            inner.sessions.remove(&oldest);
+            evicted += 1;
+        }
+        let id = inner.next_id;
+        inner.next_id += 1;
+        inner.tick += 1;
+        let last_used = inner.tick;
+        inner.sessions.insert(id, Session { target, text, lines, token_len, last_used });
+        (id, evicted)
+    }
+
+    /// Snapshot a session's base (cheap: two `Arc` clones), touching its
+    /// LRU stamp. `None` for an unknown or evicted id.
+    pub fn snapshot(&self, id: u64) -> Option<Session> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        let s = inner.sessions.get_mut(&id)?;
+        s.last_used = tick;
+        Some(s.clone())
+    }
+
+    /// Promote a delta's result to the session's new base (the
+    /// `"rebase": true` wire flag). Concurrent rebases of one session
+    /// are last-writer-wins. Returns false for an unknown id.
+    pub fn rebase(
+        &self,
+        id: u64,
+        text: Arc<String>,
+        lines: Arc<Vec<SessionLine>>,
+        token_len: usize,
+    ) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        let Some(s) = inner.sessions.get_mut(&id) else { return false };
+        s.text = text;
+        s.lines = lines;
+        s.token_len = token_len;
+        s.last_used = tick;
+        true
+    }
+
+    /// Drop a session. Returns whether it existed.
+    pub fn close(&self, id: u64) -> bool {
+        self.inner.lock().unwrap().sessions.remove(&id).is_some()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().sessions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Index a full text into per-line metadata: token counts via the
+/// context-free line tokenizer (one count pass per line, no vocab).
+/// Errors name the offending line — a text the line grammar cannot
+/// handle is "not spliceable" and must be served by the full pipeline
+/// instead of a session.
+pub fn index_lines(text: &str, scheme: Scheme) -> Result<Vec<SessionLine>> {
+    text.lines()
+        .map(|line| {
+            let tokens = line_token_count(line, scheme)
+                .with_context(|| format!("text is not line-spliceable at {:?}", line.trim()))?;
+            Ok(SessionLine {
+                text: line.to_string(),
+                hash: line_hash(line),
+                tokens: tokens as u32,
+            })
+        })
+        .collect()
+}
+
+/// Unpadded token count of an indexed text: line sums + the fixed tail.
+pub fn indexed_token_len(lines: &[SessionLine]) -> usize {
+    lines.iter().map(|l| l.tokens as usize).sum::<usize>() + TAIL_TOKEN_COUNT
+}
+
+/// Apply byte-range splices to the base text. Splices must be sorted by
+/// `start` ascending, non-overlapping, in-bounds, and on UTF-8 char
+/// boundaries — anything else is a clean client error, never a panic.
+pub fn apply_splices(base: &str, splices: &[Splice]) -> Result<String> {
+    let mut out = String::with_capacity(base.len());
+    let mut cursor = 0usize;
+    for (i, sp) in splices.iter().enumerate() {
+        if sp.start > sp.end || sp.end > base.len() {
+            bail!(
+                "splice {i} range {}..{} out of bounds for base of {} bytes",
+                sp.start,
+                sp.end,
+                base.len()
+            );
+        }
+        if sp.start < cursor {
+            bail!("splice {i} overlaps or is out of order (starts at {} before byte {cursor})",
+                sp.start);
+        }
+        let Some(unchanged) = base.get(cursor..sp.start) else {
+            bail!("splice {i} start {} is not on a UTF-8 character boundary", sp.start);
+        };
+        if base.get(sp.start..sp.end).is_none() {
+            bail!("splice {i} end {} is not on a UTF-8 character boundary", sp.end);
+        }
+        out.push_str(unchanged);
+        out.push_str(&sp.text);
+        cursor = sp.end;
+    }
+    out.push_str(&base[cursor..]);
+    Ok(out)
+}
+
+/// Re-index `new_text` against the old line list, reusing per-line
+/// token counts for the common prefix and suffix (string compares only
+/// — no lexing) and running the count pass *only* over the changed
+/// middle. Returns the new line list and how many lines were counted
+/// fresh.
+pub fn reindex_lines(
+    old: &[SessionLine],
+    new_text: &str,
+    scheme: Scheme,
+) -> Result<(Vec<SessionLine>, usize)> {
+    let new_lines: Vec<&str> = new_text.lines().collect();
+    let common = old.len().min(new_lines.len());
+    let mut prefix = 0;
+    while prefix < common && old[prefix].text == new_lines[prefix] {
+        prefix += 1;
+    }
+    let mut suffix = 0;
+    while suffix < common - prefix
+        && old[old.len() - 1 - suffix].text == new_lines[new_lines.len() - 1 - suffix]
+    {
+        suffix += 1;
+    }
+    let mut out = Vec::with_capacity(new_lines.len());
+    out.extend_from_slice(&old[..prefix]);
+    let changed = new_lines.len() - prefix - suffix;
+    for &line in &new_lines[prefix..new_lines.len() - suffix] {
+        let tokens = line_token_count(line, scheme)
+            .with_context(|| format!("delta is not line-spliceable at {:?}", line.trim()))?;
+        out.push(SessionLine {
+            text: line.to_string(),
+            hash: line_hash(line),
+            tokens: tokens as u32,
+        });
+    }
+    out.extend_from_slice(&old[old.len() - suffix..]);
+    Ok((out, changed))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn line(text: &str) -> SessionLine {
+        SessionLine { text: text.to_string(), hash: line_hash(text), tokens: 1 }
+    }
+
+    #[test]
+    fn apply_splices_replaces_ranges_in_order() {
+        let base = "abc def ghi";
+        let out = apply_splices(
+            base,
+            &[
+                Splice { start: 0, end: 3, text: "XY".into() },
+                Splice { start: 4, end: 7, text: "Z".into() },
+            ],
+        )
+        .unwrap();
+        assert_eq!(out, "XY Z ghi");
+        // Pure insert (empty range) and pure delete (empty text).
+        assert_eq!(
+            apply_splices(base, &[Splice { start: 3, end: 3, text: "!".into() }]).unwrap(),
+            "abc! def ghi"
+        );
+        assert_eq!(
+            apply_splices(base, &[Splice { start: 3, end: 7, text: String::new() }]).unwrap(),
+            "abc ghi"
+        );
+        // Empty splice list reproduces the base.
+        assert_eq!(apply_splices(base, &[]).unwrap(), base);
+    }
+
+    #[test]
+    fn apply_splices_rejects_bad_ranges() {
+        let base = "héllo"; // 'é' is 2 bytes: 1..3
+        assert!(apply_splices(base, &[Splice { start: 2, end: 2, text: "x".into() }])
+            .unwrap_err()
+            .to_string()
+            .contains("character boundary"));
+        assert!(apply_splices(base, &[Splice { start: 0, end: 99, text: "x".into() }])
+            .unwrap_err()
+            .to_string()
+            .contains("out of bounds"));
+        assert!(apply_splices(base, &[Splice { start: 4, end: 3, text: "x".into() }])
+            .unwrap_err()
+            .to_string()
+            .contains("out of bounds"));
+        // Overlapping / out-of-order pairs.
+        let overlapping = [
+            Splice { start: 0, end: 4, text: "x".into() },
+            Splice { start: 3, end: 5, text: "y".into() },
+        ];
+        assert!(apply_splices("abcdef", &overlapping)
+            .unwrap_err()
+            .to_string()
+            .contains("overlaps"));
+    }
+
+    #[test]
+    fn reindex_recounts_only_the_changed_middle() {
+        let old = vec![line("a"), line("b"), line("c"), line("d")];
+        // Replace one middle line: `}` is a valid 0-token line, so the
+        // count pass succeeds exactly once.
+        let (new, changed) = reindex_lines(&old, "a\n}\nc\nd", Scheme::OpsOnly).unwrap();
+        assert_eq!(changed, 1);
+        assert_eq!(new.len(), 4);
+        assert_eq!(new[1].text, "}");
+        assert_eq!(new[1].tokens, 0);
+        // Untouched lines keep their (deliberately fake) cached counts —
+        // proof they were never re-counted.
+        assert_eq!(new[0].tokens, 1);
+        assert_eq!(new[3].tokens, 1);
+
+        // Pure insert: every old line is reused.
+        let (new, changed) = reindex_lines(&old, "a\nb\n}\nc\nd", Scheme::OpsOnly).unwrap();
+        assert_eq!((new.len(), changed), (5, 1));
+        // Pure delete: nothing is recounted at all.
+        let (new, changed) = reindex_lines(&old, "a\nc\nd", Scheme::OpsOnly).unwrap();
+        assert_eq!((new.len(), changed), (3, 0));
+        // Identical text: no work.
+        let (_, changed) = reindex_lines(&old, "a\nb\nc\nd", Scheme::OpsOnly).unwrap();
+        assert_eq!(changed, 0);
+    }
+
+    #[test]
+    fn reindex_errors_on_unspliceable_change() {
+        let old = vec![line("a"), line("b")];
+        let err = reindex_lines(&old, "a\nwat wat", Scheme::OpsOnly).unwrap_err();
+        assert!(err.to_string().contains("not line-spliceable"), "{err:#}");
+    }
+
+    #[test]
+    fn store_evicts_least_recently_used_past_capacity() {
+        let store = SessionStore::new(2);
+        let empty = || (Arc::new(String::new()), Arc::new(Vec::new()));
+        let (t, l) = empty();
+        let (id1, ev) = store.open(Target::RegPressure, t, l, 1);
+        assert_eq!(ev, 0);
+        let (t, l) = empty();
+        let (id2, ev) = store.open(Target::RegPressure, t, l, 1);
+        assert_eq!(ev, 0);
+        assert_eq!((id1, id2), (1, 2), "ids are sequential from 1");
+        // Touch id1 so id2 is the LRU entry.
+        assert!(store.snapshot(id1).is_some());
+        let (t, l) = empty();
+        let (id3, ev) = store.open(Target::RegPressure, t, l, 1);
+        assert_eq!(ev, 1);
+        assert!(store.snapshot(id2).is_none(), "LRU session must be gone");
+        assert!(store.snapshot(id1).is_some());
+        assert!(store.snapshot(id3).is_some());
+        assert_eq!(store.len(), 2);
+        // Close is idempotent-ish: second close reports absence.
+        assert!(store.close(id1));
+        assert!(!store.close(id1));
+        assert_eq!(store.len(), 1);
+    }
+
+    #[test]
+    fn rebase_swaps_the_base_for_future_snapshots() {
+        let store = SessionStore::new(4);
+        let (id, _) = store.open(
+            Target::RegPressure,
+            Arc::new("old".to_string()),
+            Arc::new(vec![line("old")]),
+            2,
+        );
+        assert!(store.rebase(
+            id,
+            Arc::new("new".to_string()),
+            Arc::new(vec![line("new")]),
+            3
+        ));
+        let snap = store.snapshot(id).unwrap();
+        assert_eq!(snap.text.as_str(), "new");
+        assert_eq!(snap.token_len, 3);
+        assert!(!store.rebase(99, Arc::new(String::new()), Arc::new(Vec::new()), 0));
+    }
+}

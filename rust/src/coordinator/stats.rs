@@ -103,6 +103,21 @@ pub struct ServiceStats {
     /// serves (heterogeneous per-variant target sets): rejected with a
     /// clean `targets_not_served` error, never a silent partial answer.
     pub targets_not_served: AtomicU64,
+    /// Gauge: delta-encoding sessions currently registered
+    /// (`session_open` adds, `session_close` and capacity eviction
+    /// subtract).
+    pub sessions_open: AtomicU64,
+    /// `mlir_delta` queries served through the incremental splice path.
+    pub delta_requests: AtomicU64,
+    /// Line segments whose cached id-span was spliced without re-lexing
+    /// (the incremental tier's hit counter).
+    pub spans_spliced: AtomicU64,
+    /// Line segments that had to be re-lexed into a fresh id-span
+    /// (changed lines plus span-table evictions).
+    pub spans_reencoded: AtomicU64,
+    /// Bytes of MLIR text the delta path actually re-lexed — compare
+    /// against full probe sizes to see what the splice tier saves.
+    pub delta_bytes_rescanned: AtomicU64,
     pub errors: AtomicU64,
     /// Executed flushes per compiled batch size: `exec_by_batch[b]` is
     /// how many chunks ran on the `predict_b{b}` executable. One lock
@@ -297,6 +312,26 @@ impl ServiceStats {
                 "targets_not_served",
                 Json::num(self.targets_not_served.load(Ordering::Relaxed) as f64),
             )
+            .with(
+                "sessions_open",
+                Json::num(self.sessions_open.load(Ordering::Relaxed) as f64),
+            )
+            .with(
+                "delta_requests",
+                Json::num(self.delta_requests.load(Ordering::Relaxed) as f64),
+            )
+            .with(
+                "spans_spliced",
+                Json::num(self.spans_spliced.load(Ordering::Relaxed) as f64),
+            )
+            .with(
+                "spans_reencoded",
+                Json::num(self.spans_reencoded.load(Ordering::Relaxed) as f64),
+            )
+            .with(
+                "delta_bytes_rescanned",
+                Json::num(self.delta_bytes_rescanned.load(Ordering::Relaxed) as f64),
+            )
             .with("exec_by_batch", {
                 let mut by_batch = Json::obj();
                 for (b, count) in self.exec_by_batch() {
@@ -385,6 +420,13 @@ mod tests {
         assert_eq!(j.req_f64("budget_downgrades").unwrap(), 0.0);
         assert_eq!(j.req_f64("no_covering_variant").unwrap(), 0.0);
         assert_eq!(j.req_f64("targets_not_served").unwrap(), 0.0);
+        // Session-tier counters are present (zero) before any session
+        // opens, so dashboards can rely on them.
+        assert_eq!(j.req_f64("sessions_open").unwrap(), 0.0);
+        assert_eq!(j.req_f64("delta_requests").unwrap(), 0.0);
+        assert_eq!(j.req_f64("spans_spliced").unwrap(), 0.0);
+        assert_eq!(j.req_f64("spans_reencoded").unwrap(), 0.0);
+        assert_eq!(j.req_f64("delta_bytes_rescanned").unwrap(), 0.0);
         assert!(j.get("exec_by_batch").is_some());
     }
 

@@ -22,7 +22,7 @@ use fxhash::FxHashMap;
 /// (thousands of tokens per MLIR function, millions of queries per
 /// compilation). `Copy` keeps the parser's `next()`/`peek()` clone-free.
 #[derive(Debug, Clone, Copy, PartialEq)]
-enum Tok<'a> {
+pub(crate) enum Tok<'a> {
     /// Bare identifier, possibly dotted: `func.func`, `affine.for`, `index`.
     Ident(&'a str),
     /// `%name` (name without the `%`).
@@ -47,7 +47,7 @@ enum Tok<'a> {
     Arrow,
 }
 
-fn lex(src: &str) -> Result<Vec<Tok<'_>>> {
+pub(crate) fn lex(src: &str) -> Result<Vec<Tok<'_>>> {
     let bytes = src.as_bytes();
     let mut toks = Vec::new();
     let mut i = 0usize;
@@ -164,7 +164,7 @@ fn lex(src: &str) -> Result<Vec<Tok<'_>>> {
 }
 
 /// Parse `tensor<1x2xf32>` / `memref<4xbf16>` / `scalar` payloads.
-fn parse_type_lit(lit: &str) -> Result<Type> {
+pub(crate) fn parse_type_lit(lit: &str) -> Result<Type> {
     let (kind, payload) = lit
         .split_once('<')
         .ok_or_else(|| anyhow!("bad type literal {lit}"))?;

@@ -17,6 +17,7 @@
 //! while [`IdSink`] maps tokens straight to vocabulary ids — the serving
 //! hot path never builds a `Vec<String>` at all.
 
+pub mod span;
 pub mod vocab;
 
 pub use vocab::{Vocab, OOV_ID, PAD_ID};

@@ -1,0 +1,765 @@
+//! Segment-level incremental tokenization — the substrate of the
+//! session/delta tier.
+//!
+//! Autotuning traffic is thousands of near-duplicate probes: one-line
+//! edits to a registered base function. The full pipeline re-lexes the
+//! whole text per probe; this module tokenizes each *text line* into an
+//! independent [`IdSpan`] so an edited probe re-lexes only its changed
+//! lines and splices cached spans for the rest.
+//!
+//! Correctness contract: concatenating every line's span in text order,
+//! appending [`tail_span`], then truncating/padding to `max_len`
+//! ([`splice_ids`]) yields ids **byte-identical** to the fused
+//! [`super::encode_function`] pipeline on the same text. This holds
+//! because the printed form ([`crate::mlir::printer`]) is one op per
+//! line and [`super::tokenize_into`]'s walk is pre-order — i.e. textual
+//! line order — with exactly three non-local emissions, each handled
+//! here explicitly:
+//!
+//! - the header's `->` token is emitted even when the text has no
+//!   `-> R` clause (zero-return functions);
+//! - `return` **lines** emit nothing — the single trailing `"return"`
+//!   token is position-independent and becomes the fixed [`tail_span`];
+//! - `affine.for`'s `step` attribute token is always emitted, default 1,
+//!   even when the printed line elides ` step 1`.
+//!
+//! Per-line tokenization is *context-free*: every token a line
+//! contributes is derivable from that line's own bytes (result shapes
+//! come from the line's type annotation; a load's scalar result dtype
+//! from its `: memref<..xD>` suffix). Operand *names* are tokens but
+//! operand *types* are not, so a one-line edit never invalidates
+//! neighbouring spans. Lines are validated against the same grammar as
+//! [`crate::mlir::parser`]; cross-line semantic errors (an operand name
+//! no other line defines) are the one class the full parser rejects
+//! that the splice path cannot see.
+
+use super::{
+    CountSink, OpIdTable, Scheme, TokenSink, Vocab, EMBED_VOCAB_CAP, OOV_ID, PAD_ID,
+};
+use crate::mlir::parser::{lex, parse_type_lit, Tok};
+use crate::mlir::{AffineOp, Attr, Attrs, DType, MemRefOp, OpKind, Type};
+use anyhow::{anyhow, bail, ensure, Context, Result};
+use fxhash::FxHasher;
+use std::fmt::Write as _;
+use std::hash::{Hash, Hasher};
+
+/// One line's cached contribution to the id row: the vocabulary ids
+/// (already [`EMBED_VOCAB_CAP`]-clamped, **not** truncated or padded)
+/// plus how many of them were OOV pre-clamp — exactly the two facts
+/// [`splice_ids`] needs to reproduce `IdSink` semantics.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct IdSpan {
+    pub ids: Vec<u32>,
+    pub oov: u32,
+}
+
+impl IdSpan {
+    /// Memory the cached span retains (the `SpanTable` capacity unit).
+    pub fn len(&self) -> usize {
+        self.ids.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ids.is_empty()
+    }
+}
+
+/// Id-direct sink for one line: same push semantics as
+/// [`super::IdSink`] (OOV counted pre-clamp, ids clamped to
+/// [`EMBED_VOCAB_CAP`]) but *unbounded* — truncation to `max_len`
+/// happens once at splice time, not per span.
+pub struct SpanSink<'v> {
+    vocab: &'v Vocab,
+    ops: &'v OpIdTable,
+    ids: Vec<u32>,
+    oov: u32,
+}
+
+impl<'v> SpanSink<'v> {
+    pub fn new(vocab: &'v Vocab, ops: &'v OpIdTable) -> SpanSink<'v> {
+        SpanSink { vocab, ops, ids: Vec::new(), oov: 0 }
+    }
+
+    #[inline]
+    fn push(&mut self, id: u32) {
+        if id == OOV_ID {
+            self.oov += 1;
+        }
+        self.ids.push(id.min(EMBED_VOCAB_CAP - 1));
+    }
+
+    pub fn finish(self) -> IdSpan {
+        IdSpan { ids: self.ids, oov: self.oov }
+    }
+}
+
+impl TokenSink for SpanSink<'_> {
+    fn token(&mut self, tok: &str) {
+        let id = self.vocab.id_of(tok);
+        self.push(id);
+    }
+
+    fn op(&mut self, kind: &OpKind) {
+        let id = self.ops.id(kind);
+        self.push(id);
+    }
+}
+
+/// FxHash of one line's bytes — the `SpanTable` key. Scheme and vocab
+/// are *not* part of the key because every span table is owned by one
+/// serving variant (fixed scheme, vocab, op table).
+pub fn line_hash(line: &str) -> u64 {
+    let mut h = FxHasher::default();
+    line.hash(&mut h);
+    h.finish()
+}
+
+/// The fixed trailing span: [`super::tokenize_into`] emits one
+/// `"return"` token after the walk regardless of where `return` lines
+/// sit in the text.
+pub fn tail_span(vocab: &Vocab) -> IdSpan {
+    let id = vocab.id_of("return");
+    IdSpan {
+        ids: vec![id.min(EMBED_VOCAB_CAP - 1)],
+        oov: u32::from(id == OOV_ID),
+    }
+}
+
+/// Token count the trailing `"return"` contributes (pairs with
+/// [`line_token_count`] sums the way [`tail_span`] pairs with
+/// [`line_span`]).
+pub const TAIL_TOKEN_COUNT: usize = 1;
+
+/// Concatenate spans in text order into the padded `[max_len]` id row
+/// plus the whole-stream OOV count — `IdSink` semantics exactly: OOV
+/// sums over *all* spans (pre-truncation), ids stop at `max_len`, the
+/// remainder pads with [`PAD_ID`]. The caller chains [`tail_span`] as
+/// the final element.
+pub fn splice_ids<'a>(
+    spans: impl IntoIterator<Item = &'a IdSpan>,
+    max_len: usize,
+) -> (Vec<u32>, usize) {
+    let mut ids: Vec<u32> = Vec::with_capacity(max_len);
+    let mut oov = 0usize;
+    for span in spans {
+        oov += span.oov as usize;
+        if ids.len() < max_len {
+            let take = (max_len - ids.len()).min(span.ids.len());
+            ids.extend_from_slice(&span.ids[..take]);
+        }
+    }
+    ids.resize(max_len, PAD_ID);
+    (ids, oov)
+}
+
+/// Tokenize one text line into `sink`. Empty result for blank /
+/// comment-only / closing-`}` / `return` lines. Errors on any line that
+/// does not match the printed grammar — the session tier treats that as
+/// "not spliceable", never as "emit something close".
+pub fn line_tokens_into<S: TokenSink>(line: &str, scheme: Scheme, sink: &mut S) -> Result<()> {
+    let toks = lex(line).with_context(|| format!("lexing line {line:?}"))?;
+    let mut c = Cursor { toks: &toks, pos: 0 };
+    let mut scratch = String::new();
+    match c.peek().copied() {
+        None => Ok(()), // blank or comment-only line
+        Some(Tok::RBrace) => {
+            c.next()?;
+            c.done()
+        }
+        Some(Tok::Ident("func.func")) => c.header(sink, &mut scratch),
+        Some(Tok::Ident("return")) => c.ret(),
+        Some(Tok::Ident("affine.for")) => c.affine_for(scheme, sink, &mut scratch),
+        Some(Tok::Ident("affine.yield")) => {
+            c.next()?;
+            sink.op(&OpKind::Affine(AffineOp::Yield));
+            c.done()
+        }
+        Some(Tok::Ident(kw @ ("affine.store" | "affine.vector_store"))) => {
+            c.next()?;
+            c.store(kw, scheme, sink, &mut scratch)
+        }
+        Some(Tok::Value(_)) => c.assignment(scheme, sink, &mut scratch),
+        got => bail!("unrecognized line start: {got:?}"),
+    }
+}
+
+/// Unpadded token count one line contributes under `scheme` — what the
+/// router's length-based variant choice sums (plus
+/// [`TAIL_TOKEN_COUNT`]) without touching any vocabulary.
+pub fn line_token_count(line: &str, scheme: Scheme) -> Result<usize> {
+    let mut sink = CountSink::default();
+    line_tokens_into(line, scheme, &mut sink)?;
+    Ok(sink.0)
+}
+
+/// Lex one line into its cached [`IdSpan`] under a variant's
+/// vocab/op-table.
+pub fn line_span(line: &str, scheme: Scheme, vocab: &Vocab, ops: &OpIdTable) -> Result<IdSpan> {
+    let mut sink = SpanSink::new(vocab, ops);
+    line_tokens_into(line, scheme, &mut sink)?;
+    Ok(sink.finish())
+}
+
+/// Full line-by-line encode of `text`: every line through
+/// [`line_span`], spliced with [`tail_span`]. This is the cold path the
+/// session tier pays once at `session_open` (and per *changed* line on
+/// deltas); it exists standalone so tests can assert byte-identity
+/// against [`super::encode_function`] without any session plumbing.
+pub fn encode_lines(
+    text: &str,
+    scheme: Scheme,
+    vocab: &Vocab,
+    ops: &OpIdTable,
+    max_len: usize,
+) -> Result<(Vec<u32>, usize)> {
+    let mut spans = Vec::new();
+    for line in text.lines() {
+        spans.push(line_span(line, scheme, vocab, ops)?);
+    }
+    let tail = tail_span(vocab);
+    Ok(splice_ids(spans.iter().chain(std::iter::once(&tail)), max_len))
+}
+
+/// Line-by-line token count of `text` (tail included) — must equal
+/// [`super::token_count`] of the parsed function.
+pub fn token_count_lines(text: &str, scheme: Scheme) -> Result<usize> {
+    let mut n = TAIL_TOKEN_COUNT;
+    for line in text.lines() {
+        n += line_token_count(line, scheme)?;
+    }
+    Ok(n)
+}
+
+// ---------------------------------------------------------------------------
+// Per-line grammar
+// ---------------------------------------------------------------------------
+
+/// Cursor over one line's borrowed token slice — the same
+/// recursive-descent helpers as [`crate::mlir::parser`]'s `Parser`,
+/// minus symbol state (a line is tokenized context-free).
+struct Cursor<'t, 'a> {
+    toks: &'t [Tok<'a>],
+    pos: usize,
+}
+
+impl<'t, 'a> Cursor<'t, 'a> {
+    fn peek(&self) -> Option<&Tok<'a>> {
+        self.toks.get(self.pos)
+    }
+
+    fn next(&mut self) -> Result<Tok<'a>> {
+        let t = self
+            .toks
+            .get(self.pos)
+            .copied()
+            .ok_or_else(|| anyhow!("unexpected end of line"))?;
+        self.pos += 1;
+        Ok(t)
+    }
+
+    fn expect(&mut self, t: Tok<'a>) -> Result<()> {
+        let got = self.next()?;
+        ensure!(got == t, "expected {t:?}, got {got:?}");
+        Ok(())
+    }
+
+    fn eat(&mut self, t: Tok<'a>) -> bool {
+        if self.peek() == Some(&t) {
+            self.pos += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn done(&self) -> Result<()> {
+        ensure!(self.peek().is_none(), "trailing input on line: {:?}", self.peek());
+        Ok(())
+    }
+
+    fn expect_ident(&mut self, kw: &str) -> Result<()> {
+        match self.next()? {
+            Tok::Ident(s) if s == kw => Ok(()),
+            got => bail!("expected '{kw}', got {got:?}"),
+        }
+    }
+
+    fn value_name(&mut self) -> Result<&'a str> {
+        match self.next()? {
+            Tok::Value(s) => Ok(s),
+            got => bail!("expected %value, got {got:?}"),
+        }
+    }
+
+    fn int(&mut self) -> Result<i64> {
+        match self.next()? {
+            Tok::Number(s) => s.parse::<i64>().with_context(|| format!("bad integer '{s}'")),
+            got => bail!("expected integer, got {got:?}"),
+        }
+    }
+
+    fn parse_type(&mut self) -> Result<Type> {
+        match self.next()? {
+            Tok::TypeLit(lit) => parse_type_lit(lit),
+            Tok::Ident("index") => Ok(Type::Index),
+            Tok::Ident(s) => DType::parse(s)
+                .map(Type::Scalar)
+                .ok_or_else(|| anyhow!("unknown type '{s}'")),
+            got => bail!("expected a type, got {got:?}"),
+        }
+    }
+
+    /// Same value grammar as the full parser's `parse_attr_value`, so a
+    /// re-formatted attr token (`Attr`'s `Display`) is byte-identical
+    /// to what the walk emits for the parsed op.
+    fn parse_attr_value(&mut self) -> Result<Attr> {
+        match self.next()? {
+            Tok::Number(s) => {
+                if s.contains('.') || s.contains('e') || s.contains('E') {
+                    Ok(Attr::Float(s.parse::<f64>().with_context(|| format!("bad float '{s}'"))?))
+                } else {
+                    Ok(Attr::Int(s.parse::<i64>().with_context(|| format!("bad int '{s}'"))?))
+                }
+            }
+            Tok::Str(s) => Ok(Attr::Str(s.to_string())),
+            Tok::Ident("true") => Ok(Attr::Bool(true)),
+            Tok::Ident("false") => Ok(Attr::Bool(false)),
+            Tok::LBracket => {
+                let mut v = Vec::new();
+                if !self.eat(Tok::RBracket) {
+                    loop {
+                        v.push(self.int()?);
+                        if !self.eat(Tok::Comma) {
+                            break;
+                        }
+                    }
+                    self.expect(Tok::RBracket)?;
+                }
+                Ok(Attr::IntArray(v))
+            }
+            got => bail!("expected attribute value, got {got:?}"),
+        }
+    }
+
+    fn parse_attrs(&mut self) -> Result<Attrs> {
+        let mut attrs = Attrs::new();
+        if !self.eat(Tok::LBrace) {
+            return Ok(attrs);
+        }
+        if self.eat(Tok::RBrace) {
+            return Ok(attrs);
+        }
+        loop {
+            let key = match self.next()? {
+                Tok::Ident(s) => s,
+                got => bail!("expected attribute key, got {got:?}"),
+            };
+            self.expect(Tok::Eq)?;
+            let value = self.parse_attr_value()?;
+            attrs.set(key, value);
+            if !self.eat(Tok::Comma) {
+                break;
+            }
+        }
+        self.expect(Tok::RBrace)?;
+        Ok(attrs)
+    }
+
+    /// `[%i, %j]` — returns the index value names in order.
+    fn index_names(&mut self) -> Result<Vec<&'a str>> {
+        self.expect(Tok::LBracket)?;
+        let mut names = Vec::new();
+        if !self.eat(Tok::RBracket) {
+            loop {
+                names.push(self.value_name()?);
+                if !self.eat(Tok::Comma) {
+                    break;
+                }
+            }
+            self.expect(Tok::RBracket)?;
+        }
+        Ok(names)
+    }
+
+    // -- line forms ---------------------------------------------------------
+
+    /// `func.func @name(%a: T, ...) [-> R | -> (R, ...)] {`
+    fn header<S: TokenSink>(&mut self, sink: &mut S, scratch: &mut String) -> Result<()> {
+        self.expect_ident("func.func")?;
+        match self.next()? {
+            Tok::Symbol(_) => {}
+            got => bail!("expected @name, got {got:?}"),
+        }
+        sink.token("func");
+        self.expect(Tok::LParen)?;
+        if !self.eat(Tok::RParen) {
+            loop {
+                self.value_name()?;
+                self.expect(Tok::Colon)?;
+                let ty = self.parse_type()?;
+                sink.token(shape_token(&ty, scratch));
+                if !self.eat(Tok::Comma) {
+                    break;
+                }
+            }
+            self.expect(Tok::RParen)?;
+        }
+        // The walk emits "->" unconditionally; the printed header omits
+        // the arrow clause entirely for zero-return functions.
+        sink.token("->");
+        if self.eat(Tok::Arrow) {
+            if self.eat(Tok::LParen) {
+                loop {
+                    let ty = self.parse_type()?;
+                    sink.token(shape_token(&ty, scratch));
+                    if !self.eat(Tok::Comma) {
+                        break;
+                    }
+                }
+                self.expect(Tok::RParen)?;
+            } else {
+                let ty = self.parse_type()?;
+                sink.token(shape_token(&ty, scratch));
+            }
+        }
+        self.expect(Tok::LBrace)?;
+        self.done()
+    }
+
+    /// `return` / `return %a, %b : T, T` — zero tokens (see [`tail_span`]),
+    /// but the line is still validated.
+    fn ret(&mut self) -> Result<()> {
+        self.expect_ident("return")?;
+        if matches!(self.peek(), Some(Tok::Value(_))) {
+            let mut n = 0usize;
+            loop {
+                self.value_name()?;
+                n += 1;
+                if !self.eat(Tok::Comma) {
+                    break;
+                }
+            }
+            self.expect(Tok::Colon)?;
+            for i in 0..n {
+                if i > 0 {
+                    self.expect(Tok::Comma)?;
+                }
+                self.parse_type()?;
+            }
+        }
+        self.done()
+    }
+
+    /// `affine.for %iv = LB to UB [step S] {` — the induction variable
+    /// is a region argument, never a token; the parser always sets all
+    /// three bound attrs (step defaults to 1 when elided).
+    fn affine_for<S: TokenSink>(
+        &mut self,
+        scheme: Scheme,
+        sink: &mut S,
+        scratch: &mut String,
+    ) -> Result<()> {
+        self.expect_ident("affine.for")?;
+        self.value_name()?;
+        self.expect(Tok::Eq)?;
+        let lb = self.int()?;
+        self.expect_ident("to")?;
+        let ub = self.int()?;
+        let step = if matches!(self.peek(), Some(Tok::Ident(s)) if *s == "step") {
+            self.next()?;
+            self.int()?
+        } else {
+            1
+        };
+        self.expect(Tok::LBrace)?;
+        self.done()?;
+        sink.op(&OpKind::Affine(AffineOp::For));
+        if scheme == Scheme::OpsOperands {
+            let attrs = Attrs::new()
+                .with("lb", Attr::Int(lb))
+                .with("ub", Attr::Int(ub))
+                .with("step", Attr::Int(step));
+            emit_attrs(&attrs, sink, scratch);
+        }
+        Ok(())
+    }
+
+    /// `affine.store %v, %m[%i, ...] [{attrs}] : memref<...>`
+    fn store<S: TokenSink>(
+        &mut self,
+        kw: &str,
+        scheme: Scheme,
+        sink: &mut S,
+        scratch: &mut String,
+    ) -> Result<()> {
+        let value = self.value_name()?;
+        self.expect(Tok::Comma)?;
+        let memref = self.value_name()?;
+        let indices = self.index_names()?;
+        let attrs = self.parse_attrs()?;
+        self.expect(Tok::Colon)?;
+        self.parse_type()?;
+        self.done()?;
+        let op = if kw == "affine.store" { AffineOp::Store } else { AffineOp::VectorStore };
+        sink.op(&OpKind::Affine(op));
+        if scheme == Scheme::OpsOperands {
+            sink.token(value_token(value, scratch));
+            sink.token(value_token(memref, scratch));
+            for ix in &indices {
+                sink.token(value_token(ix, scratch));
+            }
+            emit_attrs(&attrs, sink, scratch);
+        }
+        Ok(())
+    }
+
+    /// `%r = <load | alloc | generic op>` lines.
+    fn assignment<S: TokenSink>(
+        &mut self,
+        scheme: Scheme,
+        sink: &mut S,
+        scratch: &mut String,
+    ) -> Result<()> {
+        let result = self.value_name()?;
+        self.expect(Tok::Eq)?;
+        match self.next()? {
+            // `%r = affine.load %m[%i, ...] [{attrs}] : memref<..xD>` —
+            // the result type is Scalar(D) for load AND vector_load,
+            // recoverable from the line's own memref annotation.
+            Tok::Ident(kw @ ("affine.load" | "affine.vector_load")) => {
+                let memref = self.value_name()?;
+                let indices = self.index_names()?;
+                let attrs = self.parse_attrs()?;
+                self.expect(Tok::Colon)?;
+                let mem_ty = self.parse_type()?;
+                self.done()?;
+                let dtype = match &mem_ty {
+                    Type::MemRef(t) => t.dtype,
+                    _ => bail!("{kw}: annotation is not a memref type"),
+                };
+                let op = if kw == "affine.load" { AffineOp::Load } else { AffineOp::VectorLoad };
+                sink.op(&OpKind::Affine(op));
+                if scheme == Scheme::OpsOperands {
+                    sink.token(value_token(memref, scratch));
+                    for ix in &indices {
+                        sink.token(value_token(ix, scratch));
+                    }
+                    sink.token(value_token(result, scratch));
+                    sink.token(shape_token(&Type::Scalar(dtype), scratch));
+                    emit_attrs(&attrs, sink, scratch);
+                }
+                Ok(())
+            }
+            Tok::Ident("memref.alloc") => {
+                self.expect(Tok::LParen)?;
+                self.expect(Tok::RParen)?;
+                self.expect(Tok::Colon)?;
+                let ty = self.parse_type()?;
+                self.done()?;
+                ensure!(matches!(ty, Type::MemRef(_)), "memref.alloc must yield a memref");
+                sink.op(&OpKind::MemRef(MemRefOp::Alloc));
+                if scheme == Scheme::OpsOperands {
+                    sink.token(value_token(result, scratch));
+                    sink.token(shape_token(&ty, scratch));
+                }
+                Ok(())
+            }
+            // generic: `%r = "dialect.op"(%a, %b) [{attrs}] : (T, T) -> U`
+            Tok::Str(opname) => {
+                let kind = OpKind::parse_name(opname)
+                    .ok_or_else(|| anyhow!("unknown op \"{opname}\""))?;
+                self.expect(Tok::LParen)?;
+                let mut operands = Vec::new();
+                if !self.eat(Tok::RParen) {
+                    loop {
+                        operands.push(self.value_name()?);
+                        if !self.eat(Tok::Comma) {
+                            break;
+                        }
+                    }
+                    self.expect(Tok::RParen)?;
+                }
+                let attrs = self.parse_attrs()?;
+                self.expect(Tok::Colon)?;
+                self.expect(Tok::LParen)?;
+                for i in 0..operands.len() {
+                    if i > 0 {
+                        self.expect(Tok::Comma)?;
+                    }
+                    self.parse_type()?;
+                }
+                self.expect(Tok::RParen)?;
+                self.expect(Tok::Arrow)?;
+                let result_ty = self.parse_type()?;
+                self.done()?;
+                sink.op(&kind);
+                if scheme == Scheme::OpsOperands {
+                    for o in &operands {
+                        sink.token(value_token(o, scratch));
+                    }
+                    sink.token(value_token(result, scratch));
+                    sink.token(shape_token(&result_ty, scratch));
+                    emit_attrs(&attrs, sink, scratch);
+                }
+                Ok(())
+            }
+            got => bail!("unexpected token after '%{result} =': {got:?}"),
+        }
+    }
+}
+
+/// Shape token for an already-parsed type — mirrors the walk's
+/// `shape_token_into`, which reads the type off the function's value
+/// table; here the type comes straight from the line's annotation.
+fn shape_token<'s>(ty: &Type, scratch: &'s mut String) -> &'s str {
+    scratch.clear();
+    match ty {
+        Type::Tensor(t) | Type::MemRef(t) => t.write_shape_token(scratch),
+        Type::Index => scratch.push_str("index"),
+        Type::Scalar(d) => {
+            let _ = write!(scratch, "scalar_{d}");
+        }
+    }
+    scratch
+}
+
+fn value_token<'s>(name: &str, scratch: &'s mut String) -> &'s str {
+    scratch.clear();
+    scratch.push('%');
+    scratch.push_str(name);
+    scratch
+}
+
+/// Emit `{k}={v}` tokens in dictionary order, exactly as the walk does
+/// for the parsed op's attrs.
+fn emit_attrs<S: TokenSink>(attrs: &Attrs, sink: &mut S, scratch: &mut String) {
+    for (k, v) in &attrs.0 {
+        scratch.clear();
+        let _ = write!(scratch, "{k}={v}");
+        sink.token(scratch);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graphgen::{generate, Family, GraphSpec};
+    use crate::mlir::{parse_function, print_function};
+    use crate::tokenizer::{encode_function, token_count, tokenize};
+
+    fn corpus() -> Vec<String> {
+        let mut texts = Vec::new();
+        for i in 0..12u64 {
+            let spec = GraphSpec {
+                family: Family::ALL[(i % Family::ALL.len() as u64) as usize],
+                structure_seed: i,
+                shape_seed: i + 31,
+            };
+            let f = generate(&spec).unwrap();
+            texts.push(print_function(&f));
+            if i % 3 == 0 {
+                let a = crate::lower::affine::lower_to_affine(&f).unwrap();
+                texts.push(print_function(&a));
+            }
+        }
+        texts
+    }
+
+    #[test]
+    fn line_concat_matches_full_pipeline() {
+        for text in corpus() {
+            let f = parse_function(&text).unwrap();
+            for scheme in [Scheme::OpsOnly, Scheme::OpsOperands] {
+                let toks = tokenize(&f, scheme);
+                let vocab = Vocab::build([toks].iter(), 1);
+                let table = OpIdTable::build(&vocab);
+                for max_len in [8, 64, 512] {
+                    let full = encode_function(&f, scheme, &vocab, &table, max_len);
+                    let spliced = encode_lines(&text, scheme, &vocab, &table, max_len).unwrap();
+                    assert_eq!(spliced, full, "{scheme:?}/{max_len}\n{text}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn line_counts_match_full_pipeline() {
+        for text in corpus() {
+            let f = parse_function(&text).unwrap();
+            for scheme in [Scheme::OpsOnly, Scheme::OpsOperands] {
+                assert_eq!(
+                    token_count_lines(&text, scheme).unwrap(),
+                    token_count(&f, scheme),
+                    "{scheme:?}\n{text}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn structural_lines_are_empty_spans() {
+        let vocab = Vocab::build([vec!["func".to_string()]].iter(), 1);
+        let table = OpIdTable::build(&vocab);
+        for line in ["", "   ", "// comment", "}", "  }", "  return %0 : tensor<1xf32>"] {
+            for scheme in [Scheme::OpsOnly, Scheme::OpsOperands] {
+                let span = line_span(line, scheme, &vocab, &table).unwrap();
+                assert!(span.is_empty(), "{line:?} under {scheme:?} produced {:?}", span.ids);
+                assert_eq!(line_token_count(line, scheme).unwrap(), 0);
+            }
+        }
+    }
+
+    #[test]
+    fn zero_return_header_still_emits_arrow() {
+        // The printer omits `-> R` entirely when a function returns
+        // nothing, but the token stream always carries "->".
+        let vocab = Vocab::build([vec!["->".to_string()]].iter(), 1);
+        let table = OpIdTable::build(&vocab);
+        let span =
+            line_span("func.func @f() {", Scheme::OpsOnly, &vocab, &table).unwrap();
+        assert_eq!(span.ids.len(), 2); // "func", "->"
+        assert_eq!(span.ids[1], vocab.id_of("->").min(EMBED_VOCAB_CAP - 1));
+    }
+
+    #[test]
+    fn elided_step_still_emits_step_attr() {
+        let n = line_token_count("affine.for %1 = 0 to 8 {", Scheme::OpsOperands).unwrap();
+        assert_eq!(n, 4, "affine.for + lb= + ub= + step=");
+        let m = line_token_count("affine.for %1 = 0 to 8 step 2 {", Scheme::OpsOperands).unwrap();
+        assert_eq!(m, 4);
+        assert_eq!(line_token_count("affine.for %1 = 0 to 8 {", Scheme::OpsOnly).unwrap(), 1);
+    }
+
+    #[test]
+    fn malformed_lines_error_instead_of_guessing() {
+        for line in [
+            "%0 = \"xpu.bogus\"() : () -> tensor<1xf32>", // unknown op
+            "func.func @f(%a: tensor<1xf32>",              // truncated header
+            "%0 = affine.load %m[%i] : tensor<4xf32>",     // load needs a memref annotation
+            "affine.for %i = 0 to {",                      // missing bound
+            "wat",                                          // not a line form at all
+        ] {
+            assert!(
+                line_tokens_into(line, Scheme::OpsOperands, &mut CountSink::default()).is_err(),
+                "{line:?} should not tokenize"
+            );
+        }
+    }
+
+    #[test]
+    fn splice_truncates_and_pads_like_idsink() {
+        let a = IdSpan { ids: vec![1, 2, 3], oov: 1 };
+        let b = IdSpan { ids: vec![4, 5], oov: 2 };
+        let (ids, oov) = splice_ids([&a, &b], 4);
+        assert_eq!(ids, vec![1, 2, 3, 4]);
+        assert_eq!(oov, 3, "OOV counts the whole stream, past truncation");
+        let (ids, _) = splice_ids([&a, &b], 8);
+        assert_eq!(ids, vec![1, 2, 3, 4, 5, PAD_ID, PAD_ID, PAD_ID]);
+    }
+
+    #[test]
+    fn line_hash_distinguishes_lines() {
+        assert_eq!(line_hash("a"), line_hash("a"));
+        assert_ne!(line_hash("affine.yield"), line_hash("affine.yield "));
+    }
+}

@@ -1,0 +1,137 @@
+//! Incremental-tier property test: delta-spliced id rows must be
+//! byte-identical to the full tokenize→encode pipeline — across every
+//! graph family (plus affine-lowered forms), both tokenization schemes,
+//! and the edit kinds an autotuner produces (replace a line at the
+//! first/middle/last segment, whitespace-only change, insert a line via
+//! a byte-range splice, delete a line), at max_lens that pad AND
+//! truncate (so edits land before, at, and past the padding boundary).
+//!
+//! Needs no artifacts: this exercises the text→ids half only
+//! (`coordinator::session` + `tokenizer::span`), the exact code the
+//! serving path's `session_open`/`mlir_delta` run.
+
+use mlir_cost::coordinator::session::{
+    apply_splices, index_lines, indexed_token_len, reindex_lines, Splice,
+};
+use mlir_cost::graphgen::{generate, Family, GraphSpec};
+use mlir_cost::lower::affine::lower_to_affine;
+use mlir_cost::mlir::{parse_function, print_function};
+use mlir_cost::tokenizer::span::{line_span, splice_ids, tail_span, IdSpan};
+use mlir_cost::tokenizer::{encode_function, token_count, tokenize, OpIdTable, Scheme, Vocab};
+use std::collections::HashMap;
+
+/// All seven families, with an affine-lowered sibling for every third —
+/// the lowered texts carry the loop-nest line forms (affine.for /
+/// load / store / yield) the per-line grammar must handle.
+fn corpus() -> Vec<String> {
+    let mut texts = Vec::new();
+    for i in 0..Family::ALL.len() {
+        let spec = GraphSpec {
+            family: Family::ALL[i],
+            structure_seed: 4000 + i as u64,
+            shape_seed: 5000 + i as u64,
+        };
+        let f = generate(&spec).expect("graphgen");
+        texts.push(print_function(&f));
+        if i % 3 == 0 {
+            texts.push(print_function(&lower_to_affine(&f).expect("affine lowering")));
+        }
+    }
+    texts
+}
+
+/// Edit cases for one base text: `(tag, session base, edited text,
+/// lines that must be re-lexed)`. Every edited text stays parseable
+/// (comment/whitespace edits are invisible to the lexer), so the full
+/// pipeline can adjudicate the spliced row.
+fn edit_cases(base: &str) -> Vec<(&'static str, String, String, usize)> {
+    let lines: Vec<&str> = base.lines().collect();
+    let n = lines.len();
+    assert!(n >= 3, "generated function too small to edit");
+    let mid = n / 2;
+    let with_edit = |at: usize, f: &dyn Fn(&str) -> String| -> String {
+        lines
+            .iter()
+            .enumerate()
+            .map(|(i, l)| if i == at { f(l) } else { l.to_string() })
+            .collect::<Vec<_>>()
+            .join("\n")
+    };
+    // Insert a comment-only line after `mid` through the byte-range
+    // splice path (offsets into the base, exactly as the wire form).
+    let insert_at: usize = lines.iter().take(mid + 1).map(|l| l.len() + 1).sum();
+    let inserted = apply_splices(
+        base,
+        &[Splice { start: insert_at, end: insert_at, text: "// inserted\n".into() }],
+    )
+    .expect("insert splice");
+    vec![
+        ("replace-first", base.into(), with_edit(0, &|l| format!("{l} // edited")), 1),
+        ("replace-mid", base.into(), with_edit(mid, &|l| format!("{l} // edited")), 1),
+        ("replace-last", base.into(), with_edit(n - 1, &|l| format!("{l} // edited")), 1),
+        ("replace-whitespace", base.into(), with_edit(mid, &|l| format!("  {l}")), 1),
+        ("insert-line", base.into(), inserted.clone(), 1),
+        // Delete: open on the longer text, delta back to the base — the
+        // removed line's neighbors all splice, nothing re-lexes.
+        ("delete-line", inserted, base.into(), 0),
+    ]
+}
+
+#[test]
+fn delta_spliced_ids_match_full_pipeline() {
+    for text in corpus() {
+        for scheme in [Scheme::OpsOnly, Scheme::OpsOperands] {
+            // Per-text vocab, as a trained bundle would carry.
+            let streams = vec![tokenize(&parse_function(&text).expect("parse base"), scheme)];
+            let vocab = Vocab::build(streams.iter(), 1);
+            let ops = OpIdTable::build(&vocab);
+            let tail = tail_span(&vocab);
+            for (tag, old_text, new_text, want_relexed) in edit_cases(&text) {
+                let ctx = || format!("{tag} scheme={}", scheme.name());
+                let old_lines = index_lines(&old_text, scheme)
+                    .unwrap_or_else(|e| panic!("{}: index base: {e:#}", ctx()));
+                // Warm span table = what session_open leaves behind.
+                let mut table: HashMap<u64, IdSpan> = HashMap::new();
+                for l in &old_lines {
+                    table.insert(
+                        l.hash,
+                        line_span(&l.text, scheme, &vocab, &ops)
+                            .unwrap_or_else(|e| panic!("{}: base span: {e:#}", ctx())),
+                    );
+                }
+                let (new_lines, _changed) = reindex_lines(&old_lines, &new_text, scheme)
+                    .unwrap_or_else(|e| panic!("{}: reindex: {e:#}", ctx()));
+                // Splice with hit/miss accounting — the serving path's
+                // encode_query, minus the sharded table.
+                let mut relexed = 0usize;
+                let mut spans: Vec<IdSpan> = Vec::with_capacity(new_lines.len());
+                for l in &new_lines {
+                    let span = table.get(&l.hash).cloned().unwrap_or_else(|| {
+                        relexed += 1;
+                        line_span(&l.text, scheme, &vocab, &ops)
+                            .unwrap_or_else(|e| panic!("{}: edited span: {e:#}", ctx()))
+                    });
+                    spans.push(span);
+                }
+                assert_eq!(relexed, want_relexed, "{}: wrong re-lex count", ctx());
+                let func = parse_function(&new_text)
+                    .unwrap_or_else(|e| panic!("{}: edited text must parse: {e:#}", ctx()));
+                // Routing's length: cached line sums == full tokenizer.
+                assert_eq!(
+                    indexed_token_len(&new_lines),
+                    token_count(&func, scheme),
+                    "{}: token length drifted",
+                    ctx()
+                );
+                // max_len 16 truncates every text (edits land past the
+                // boundary), 512 pads; both must agree byte-for-byte.
+                for max_len in [16usize, 64, 512] {
+                    let (ids, _oov) =
+                        splice_ids(spans.iter().chain(std::iter::once(&tail)), max_len);
+                    let (want, _oov) = encode_function(&func, scheme, &vocab, &ops, max_len);
+                    assert_eq!(ids, want, "{} max_len={max_len}: ids diverged", ctx());
+                }
+            }
+        }
+    }
+}

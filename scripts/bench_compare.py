@@ -1,0 +1,140 @@
+#!/usr/bin/env python3
+"""Diff a fresh bench run against the committed BENCH_*.json baselines.
+
+Typical use after rerunning benches locally:
+
+    cd rust && cargo bench --bench e6_frontend --bench e9_incremental
+    git stash -- ../BENCH_*.json        # committed baselines back in place
+    python3 scripts/bench_compare.py /tmp/fresh .   # or any two dirs
+
+For every BENCH_*.json present in BOTH directories, numeric metrics are
+compared leaf-by-leaf (objects by key, scenario arrays by index):
+
+- a `null` on either side is skipped — placeholders (schema files whose
+  metrics were never measured) never fail the comparison;
+- metric *direction* is inferred from the key name: `*_us` / `*_ns` /
+  latency-style keys regress when they grow, `*_per_sec` / `*speedup*` /
+  `*ratio*` keys regress when they shrink; keys with no inferable
+  direction are reported but never fail;
+- a regression beyond --threshold (default 25%, i.e. 1.25x the wrong
+  way) fails with exit 1. Improvements and in-threshold noise print as
+  information only.
+
+CI runs this self-referentially (`bench_compare.py . .`) as a smoke
+test: every committed bench file must parse and identity-compare clean.
+"""
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+SLOWER_IS_WORSE = ("_us", "_ns", "latency", "us_per_edit", "open_us")
+BIGGER_IS_BETTER = ("per_sec", "speedup", "ratio", "hit")
+
+
+def direction(key: str):
+    """+1 if bigger is better, -1 if smaller is better, 0 if unknown."""
+    k = key.lower()
+    if any(tag in k for tag in BIGGER_IS_BETTER):
+        return 1
+    if any(k.endswith(tag) or tag in k for tag in SLOWER_IS_WORSE):
+        return -1
+    return 0
+
+
+def numeric_leaves(value, path=""):
+    """Yield (path, leaf_key, number-or-None) for every metric leaf."""
+    if isinstance(value, dict):
+        for key, child in value.items():
+            yield from numeric_leaves(child, f"{path}.{key}" if path else key)
+    elif isinstance(value, list):
+        for i, child in enumerate(value):
+            yield from numeric_leaves(child, f"{path}[{i}]")
+    elif isinstance(value, bool) or isinstance(value, str):
+        return
+    else:  # number or null
+        leaf_key = path.rsplit(".", 1)[-1]
+        yield path, leaf_key, value
+
+
+def compare_file(name, base_doc, fresh_doc, threshold):
+    """Return (regressions, notes) comparing one bench document."""
+    regressions, notes = [], []
+    base = {p: (k, v) for p, k, v in numeric_leaves(base_doc)}
+    for path, key, fresh_v in numeric_leaves(fresh_doc):
+        if path not in base:
+            notes.append(f"{name}: {path}: new metric (no baseline)")
+            continue
+        _, base_v = base.pop(path)
+        if base_v is None or fresh_v is None:
+            continue  # null-tolerant: unmeasured on either side
+        sense = direction(key)
+        if sense == 0:
+            if base_v != fresh_v:
+                notes.append(f"{name}: {path}: {base_v} -> {fresh_v} (direction unknown)")
+            continue
+        if base_v == 0:
+            continue  # ratio undefined; schema check guards the zeros that matter
+        ratio = fresh_v / base_v
+        # Normalize so `worse > 1` regardless of metric direction.
+        worse = ratio if sense < 0 else (1.0 / ratio if ratio else float("inf"))
+        if worse > 1.0 + threshold:
+            regressions.append(
+                f"{name}: {path}: {base_v:.4g} -> {fresh_v:.4g} "
+                f"({(worse - 1.0) * 100.0:.0f}% worse than baseline)"
+            )
+        elif worse < 1.0:
+            notes.append(f"{name}: {path}: {base_v:.4g} -> {fresh_v:.4g} (improved)")
+    for path, (_, base_v) in sorted(base.items()):
+        if base_v is not None:
+            regressions.append(f"{name}: {path}: measured metric dropped from the fresh run")
+    return regressions, notes
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("baseline", type=Path, help="dir with committed BENCH_*.json")
+    ap.add_argument("fresh", type=Path, help="dir with freshly produced BENCH_*.json")
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=0.25,
+        help="allowed fractional regression per metric (default 0.25 = 25%%)",
+    )
+    args = ap.parse_args()
+    base_files = {p.name: p for p in sorted(args.baseline.glob("BENCH_*.json"))}
+    fresh_files = {p.name: p for p in sorted(args.fresh.glob("BENCH_*.json"))}
+    if not base_files:
+        print(f"error: no BENCH_*.json under {args.baseline}", file=sys.stderr)
+        return 1
+    regressions, notes = [], []
+    compared = []
+    for name, base_path in base_files.items():
+        fresh_path = fresh_files.get(name)
+        if fresh_path is None:
+            notes.append(f"{name}: not in fresh run (skipped)")
+            continue
+        try:
+            base_doc = json.loads(base_path.read_text(encoding="utf-8"))
+            fresh_doc = json.loads(fresh_path.read_text(encoding="utf-8"))
+        except json.JSONDecodeError as e:
+            regressions.append(f"{name}: invalid JSON: {e}")
+            continue
+        r, n = compare_file(name, base_doc, fresh_doc, args.threshold)
+        regressions += r
+        notes += n
+        compared.append(name)
+    for line in notes:
+        print(f"note: {line}")
+    if regressions:
+        for line in regressions:
+            print(f"REGRESSION: {line}", file=sys.stderr)
+        print(f"{len(regressions)} regression(s) across {compared}", file=sys.stderr)
+        return 1
+    print(f"bench comparison clean: {', '.join(compared) or 'nothing comparable'}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
