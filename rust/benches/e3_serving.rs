@@ -254,6 +254,45 @@ fn main() {
             );
         }
     }
+    // Offload pool: a miss-heavy mix (fresh graphs, cold cache) through
+    // ONE io loop, with model execution in-loop (--request-workers 0)
+    // vs handed to the request-worker pool. Same event loop, same
+    // handle_line path either way; the offloaded cell keeps the io
+    // thread parsing/flushing its other connections while pool workers
+    // wait on the model.
+    benchkit::section("E3e: miss-heavy in-loop vs offloaded (--request-workers)");
+    let mut offload_scenarios: Vec<Json> = Vec::new();
+    for (mode, request_workers, seed_base) in
+        [("in_loop", 0usize, 110_000u64), ("offloaded", 2, 130_000)]
+    {
+        // A fresh corpus per cell: both cells pay the same cold-cache
+        // miss work instead of the second riding the first's cache.
+        let miss_texts = corpus_at(32, seed_base);
+        let svc = make_service(32, 2000);
+        let (qps, p50, p99, total) = sweep_offload(&svc, request_workers, 16, &miss_texts);
+        let offloaded =
+            svc.stats.offloaded_misses.load(std::sync::atomic::Ordering::Relaxed);
+        benchkit::kv(
+            &format!("{mode} (request_workers={request_workers}) @ 16 conns"),
+            format!(
+                "{qps:.0} pred/s (p50 {p50} us, p99 {p99} us, {total} queries, \
+                 {offloaded} offloaded)"
+            ),
+        );
+        offload_scenarios.push(
+            Json::obj()
+                .with("mode", Json::str(mode))
+                .with("request_workers", Json::num(request_workers as f64))
+                .with("connections", Json::num(16.0))
+                .with("queries", Json::num(total as f64))
+                .with("queries_per_sec", Json::num(qps))
+                .with("p50_us", Json::num(p50 as f64))
+                .with("p99_us", Json::num(p99 as f64))
+                .with("offloaded_misses", Json::num(offloaded as f64)),
+        );
+        std::mem::forget(svc);
+    }
+
     let doc = Json::obj()
         .with("bench", Json::str("e3_serving"))
         .with(
@@ -261,13 +300,17 @@ fn main() {
             Json::str(
                 "Connection-count sweep: duplicate-heavy probe mix (16 distinct graphs, warm \
                  cache) through the legacy thread-per-connection front end vs the epoll event \
-                 loop (--io-threads 1). Run `cargo bench --bench e3_serving` from rust/ to \
-                 overwrite with measured numbers.",
+                 loop (--io-threads 1). The E3e offload_scenarios push a miss-heavy mix (32 \
+                 fresh graphs, cold cache, 16 connections) through one io loop with model \
+                 execution in-loop (request_workers 0) vs handed to the request-worker pool. \
+                 Run `cargo bench --bench e3_serving` from rust/ to overwrite with measured \
+                 numbers.",
             ),
         )
         .with("duplicate_corpus_texts", Json::num(sweep_texts.len() as f64))
         .with("io_threads", Json::num(1.0))
         .with("scenarios", Json::Arr(scenarios))
+        .with("offload_scenarios", Json::Arr(offload_scenarios))
         .with(
             "acceptance",
             Json::str("event_loop queries_per_sec >= thread_per_conn at 256 connections"),
@@ -308,11 +351,54 @@ fn sweep_frontend(
         })
     };
     // Fixed total work so cells are comparable across connection counts.
-    let per_conn = (2048 / conns).max(4);
+    let per_conn = benchkit::clamp_iters((2048 / conns).max(4));
+    let out = drive_clients(&addr, conns, per_conn, texts);
+    stop.trigger();
+    let _ = server_thread.join();
+    out
+}
+
+/// One offload cell: `conns` concurrent clients through the event loop
+/// with `request_workers` pool workers (0 = in-loop execution). Returns
+/// (queries/sec, p50 us, p99 us, total queries).
+fn sweep_offload(
+    svc: &Arc<Service>,
+    request_workers: usize,
+    conns: usize,
+    texts: &[String],
+) -> (f64, u64, u64, usize) {
+    let stop = server::Stop::new();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let server_thread = {
+        let svc = svc.clone();
+        let stop = stop.clone();
+        std::thread::spawn(move || {
+            let config =
+                server::ServerConfig { io_threads: 1, request_workers, reuseport: false };
+            if let Err(e) = server::serve_on_with(svc, listener, stop, config) {
+                eprintln!("[bench] server exited with error: {e:#}");
+            }
+        })
+    };
+    let per_conn = benchkit::clamp_iters((512 / conns).max(4));
+    let out = drive_clients(&addr, conns, per_conn, texts);
+    stop.trigger();
+    let _ = server_thread.join();
+    out
+}
+
+/// Drive `conns` concurrent clients, `per_conn` queries each, against a
+/// running front end; returns (queries/sec, p50 us, p99 us, total).
+fn drive_clients(
+    addr: &str,
+    conns: usize,
+    per_conn: usize,
+    texts: &[String],
+) -> (f64, u64, u64, usize) {
     let mut latencies: Vec<u64> = Vec::with_capacity(conns * per_conn);
     let t0 = Instant::now();
     std::thread::scope(|s| {
-        let addr = &addr;
         let mut handles = Vec::with_capacity(conns);
         for c in 0..conns {
             handles.push(s.spawn(move || {
@@ -332,8 +418,6 @@ fn sweep_frontend(
         }
     });
     let dt = t0.elapsed().as_secs_f64();
-    stop.trigger();
-    let _ = server_thread.join();
     latencies.sort_unstable();
     let pct = |p: f64| latencies[((latencies.len() as f64 * p) as usize).min(latencies.len() - 1)];
     (latencies.len() as f64 / dt.max(1e-9), pct(0.50), pct(0.99), latencies.len())

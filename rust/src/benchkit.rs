@@ -26,8 +26,37 @@ impl Summary {
     }
 }
 
+/// CI smoke mode: `MLIR_COST_SMOKE=1` clamps every iteration count the
+/// harness sees (see [`clamp_iters`]) so `scripts/bench_smoke.sh` can
+/// prove each bench still runs end-to-end in seconds. Smoke numbers are
+/// execution evidence, not measurements.
+pub fn smoke() -> bool {
+    std::env::var("MLIR_COST_SMOKE").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Iteration ceiling under smoke mode.
+const SMOKE_ITERS: usize = 2;
+
+fn clamp_with(n: usize, smoke: bool) -> usize {
+    if smoke {
+        n.min(SMOKE_ITERS)
+    } else {
+        n
+    }
+}
+
+/// Clamp an iteration count to the smoke budget when `MLIR_COST_SMOKE=1`
+/// (identity otherwise). [`bench`] and [`concurrent_throughput`] apply
+/// this themselves; benches with hand-rolled loops should route their
+/// counts through it too.
+pub fn clamp_iters(n: usize) -> usize {
+    clamp_with(n, smoke())
+}
+
 /// Benchmark a closure: `warmup` untimed runs then `iters` timed runs.
 pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> Summary {
+    let warmup = clamp_iters(warmup);
+    let iters = clamp_iters(iters).max(1);
     for _ in 0..warmup {
         f();
     }
@@ -73,6 +102,9 @@ pub fn concurrent_throughput<F>(threads: usize, per_thread: usize, f: F) -> (f64
 where
     F: Fn(usize, usize) + Sync,
 {
+    // Smoke mode clamps the per-thread count but keeps the thread
+    // count: the concurrency shape IS what the bench exercises.
+    let per_thread = clamp_iters(per_thread).max(1);
     let barrier = std::sync::Barrier::new(threads);
     let t0 = Instant::now();
     std::thread::scope(|s| {
@@ -127,6 +159,15 @@ mod tests {
         assert_eq!(count.load(Ordering::Relaxed), 100);
         assert_eq!(seen_threads.load(Ordering::Relaxed), 4);
         assert!(qps > 0.0 && dt >= 0.0);
+    }
+
+    #[test]
+    fn smoke_clamp_is_identity_unless_enabled() {
+        assert_eq!(clamp_with(1000, false), 1000);
+        assert_eq!(clamp_with(0, false), 0);
+        assert_eq!(clamp_with(1000, true), SMOKE_ITERS);
+        assert_eq!(clamp_with(1, true), 1);
+        assert_eq!(clamp_with(0, true), 0);
     }
 
     #[test]

@@ -14,8 +14,16 @@
 //! drains up to `max_batch` requests under the lock, and whichever
 //! worker wakes first takes the flush — so one slow model invocation
 //! never head-of-line-blocks the next flush when a sibling is idle.
+//!
+//! The policy is **live**: `max_batch`/`max_wait` are atomics read at
+//! every `next_batch` call, so a [`PolicyController`] (one per serving
+//! variant, `--batch-policy adaptive`) can retune them from observed
+//! flush sizes and execute latencies without taking the queue lock.
+//! Tuning only ever changes *when* queries flush, never what a flush
+//! computes — predictions are byte-identical under any policy.
 
 use crate::pred::PredVec;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -55,11 +63,14 @@ struct State {
     closed: bool,
 }
 
-/// Thread-safe queue with deadline-aware draining.
+/// Thread-safe queue with deadline-aware draining. The policy lives in
+/// atomics (not under the state lock) so retuning never contends with
+/// submitters or draining workers.
 pub struct BatchQueue {
     state: Mutex<State>,
     cv: Condvar,
-    policy: BatchPolicy,
+    max_batch: AtomicUsize,
+    max_wait_us: AtomicU64,
 }
 
 impl BatchQueue {
@@ -67,8 +78,25 @@ impl BatchQueue {
         Arc::new(BatchQueue {
             state: Mutex::new(State { queue: Vec::new(), closed: false }),
             cv: Condvar::new(),
-            policy,
+            max_batch: AtomicUsize::new(policy.max_batch.max(1)),
+            max_wait_us: AtomicU64::new(policy.max_wait.as_micros() as u64),
         })
+    }
+
+    /// Snapshot of the live policy (atomics, no lock).
+    pub fn policy(&self) -> BatchPolicy {
+        BatchPolicy {
+            max_batch: self.max_batch.load(Ordering::Relaxed),
+            max_wait: Duration::from_micros(self.max_wait_us.load(Ordering::Relaxed)),
+        }
+    }
+
+    /// Replace the live policy. Takes effect on the next `next_batch`
+    /// deadline computation; a worker already waiting on the old
+    /// deadline finishes that wait under the old values.
+    pub fn set_policy(&self, max_batch: usize, max_wait_us: u64) {
+        self.max_batch.store(max_batch.max(1), Ordering::Relaxed);
+        self.max_wait_us.store(max_wait_us, Ordering::Relaxed);
     }
 
     /// Enqueue a query; returns the receiver for its prediction. After
@@ -129,9 +157,13 @@ impl BatchQueue {
                 st = self.cv.wait(st).expect("queue lock poisoned");
                 continue;
             }
-            // Non-empty: wait for fill-up, deadline, or close.
-            let deadline = Instant::now() + self.policy.max_wait;
-            while st.queue.len() < self.policy.max_batch && !st.closed {
+            // Non-empty: wait for fill-up, deadline, or close. The
+            // policy is re-read per flush so a controller retune
+            // applies from the very next drain.
+            let max_batch = self.max_batch.load(Ordering::Relaxed).max(1);
+            let max_wait = Duration::from_micros(self.max_wait_us.load(Ordering::Relaxed));
+            let deadline = Instant::now() + max_wait;
+            while st.queue.len() < max_batch && !st.closed {
                 let now = Instant::now();
                 if now >= deadline {
                     break;
@@ -145,7 +177,7 @@ impl BatchQueue {
                     break;
                 }
             }
-            let take = st.queue.len().min(self.policy.max_batch);
+            let take = st.queue.len().min(max_batch);
             let batch: Vec<Pending> = st.queue.drain(..take).collect();
             return Some(batch);
         }
@@ -153,6 +185,156 @@ impl BatchQueue {
 
     pub fn queued(&self) -> usize {
         self.state.lock().unwrap().queue.len()
+    }
+}
+
+/// Flushes observed between policy adjustments. Small enough to react
+/// within seconds under load, large enough that one odd flush cannot
+/// whipsaw the policy.
+const RETUNE_WINDOW: u64 = 32;
+/// A window whose mean flush fills at least this fraction of
+/// `max_batch` is saturated: arrivals are being truncated by the cap,
+/// so raising it can amortize more queries per invocation.
+const GROW_FILL: f64 = 0.9;
+/// A window whose mean flush fills at most this fraction is oversized:
+/// demand never approaches the cap, so shrink toward it.
+const SHRINK_FILL: f64 = 0.25;
+
+/// Hard limits the adaptive controller may never leave, derived from
+/// the operator's startup policy: `max_batch` is an upper bound (it is
+/// also the top rung of the compiled predict ladder — a larger flush
+/// could not execute), and `max_wait` is a latency ceiling the
+/// controller may only tighten (down to 1/8th).
+#[derive(Debug, Clone)]
+pub struct PolicyBounds {
+    pub min_batch: usize,
+    pub max_batch: usize,
+    pub min_wait_us: u64,
+    pub max_wait_us: u64,
+}
+
+impl PolicyBounds {
+    pub fn from_startup(policy: &BatchPolicy) -> PolicyBounds {
+        let wait_hi = (policy.max_wait.as_micros() as u64).max(1);
+        PolicyBounds {
+            min_batch: 1,
+            max_batch: policy.max_batch.max(1),
+            min_wait_us: (wait_hi / 8).max(1),
+            max_wait_us: wait_hi,
+        }
+    }
+
+    fn clamp(&self, max_batch: usize, wait_us: u64) -> (usize, u64) {
+        (
+            max_batch.clamp(self.min_batch, self.max_batch),
+            wait_us.clamp(self.min_wait_us, self.max_wait_us),
+        )
+    }
+}
+
+/// Per-window accumulation of flush observations.
+#[derive(Default)]
+struct Window {
+    flushes: u64,
+    queries: u64,
+    exec_us: u64,
+}
+
+/// Per-variant adaptive batch-policy controller (`--batch-policy
+/// adaptive`). Workers feed it one observation per executed flush
+/// (size + execute latency); every [`RETUNE_WINDOW`] flushes it
+/// hill-climbs the owning queue's live policy within [`PolicyBounds`]:
+///
+/// - saturated windows (mean fill ≥ 90% of the cap) double `max_batch`,
+///   starved windows (≤ 25%) halve it — so the cap converges onto the
+///   observed demand instead of the operator's static guess;
+/// - `max_wait` tracks the window's mean execute latency (clamped to
+///   bounds): waiting much longer than one invocation costs latency
+///   without buying amortization, waiting much less under-batches.
+///
+/// With `adaptive == false` (the default `--batch-policy static`) the
+/// controller is inert: observations are dropped and `retunes` stays 0.
+pub struct PolicyController {
+    queue: Arc<BatchQueue>,
+    bounds: PolicyBounds,
+    adaptive: bool,
+    window: Mutex<Window>,
+    retunes: AtomicU64,
+}
+
+impl PolicyController {
+    pub fn new(queue: Arc<BatchQueue>, adaptive: bool) -> Arc<PolicyController> {
+        let bounds = PolicyBounds::from_startup(&queue.policy());
+        Arc::new(PolicyController {
+            queue,
+            bounds,
+            adaptive,
+            window: Mutex::new(Window::default()),
+            retunes: AtomicU64::new(0),
+        })
+    }
+
+    /// Applied policy changes so far (the `policy_retunes` stat).
+    pub fn retunes(&self) -> u64 {
+        self.retunes.load(Ordering::Relaxed)
+    }
+
+    pub fn bounds(&self) -> &PolicyBounds {
+        &self.bounds
+    }
+
+    /// Warm-start the live policy from a variants-manifest `policy`
+    /// entry, clamped to bounds (a manifest may not widen the
+    /// operator's startup ceiling). Counts as a retune only if it
+    /// changes anything.
+    pub fn warm_start(&self, max_batch: Option<usize>, max_wait_us: Option<u64>) {
+        let current = self.queue.policy();
+        let (b, w) = self.bounds.clamp(
+            max_batch.unwrap_or(current.max_batch),
+            max_wait_us.unwrap_or(current.max_wait.as_micros() as u64),
+        );
+        self.apply(current, b, w);
+    }
+
+    /// One executed flush: `flush_len` queries ran in one model
+    /// invocation taking `exec_us`. Called worker-side per chunk, off
+    /// the IO threads.
+    pub fn observe_flush(&self, flush_len: usize, exec_us: u64) {
+        if !self.adaptive {
+            return;
+        }
+        let (mean_fill, mean_exec_us) = {
+            let mut w = self.window.lock().unwrap();
+            w.flushes += 1;
+            w.queries += flush_len as u64;
+            w.exec_us += exec_us;
+            if w.flushes < RETUNE_WINDOW {
+                return;
+            }
+            let fill = w.queries as f64 / w.flushes as f64;
+            let exec = w.exec_us / w.flushes;
+            *w = Window::default();
+            (fill, exec)
+        };
+        let current = self.queue.policy();
+        let mut next_batch = current.max_batch;
+        if mean_fill >= GROW_FILL * current.max_batch as f64 {
+            next_batch = current.max_batch.saturating_mul(2);
+        } else if mean_fill <= SHRINK_FILL * current.max_batch as f64 {
+            next_batch = (current.max_batch / 2).max(1);
+        }
+        let (b, w) = self.bounds.clamp(next_batch, mean_exec_us);
+        self.apply(current, b, w);
+    }
+
+    fn apply(&self, current: BatchPolicy, max_batch: usize, max_wait_us: u64) {
+        if max_batch == current.max_batch
+            && max_wait_us == current.max_wait.as_micros() as u64
+        {
+            return;
+        }
+        self.queue.set_policy(max_batch, max_wait_us);
+        self.retunes.fetch_add(1, Ordering::Relaxed);
     }
 }
 
@@ -326,5 +508,121 @@ mod tests {
         worker.join().unwrap();
         got.sort_by(f64::total_cmp);
         assert_eq!(got, (0..16).map(|i| i as f64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn set_policy_applies_to_next_flush() {
+        let q = BatchQueue::new(BatchPolicy { max_batch: 4, max_wait: Duration::from_secs(10) });
+        let _rxs: Vec<_> = (0..6u32).map(|i| q.submit(vec![i])).collect();
+        assert_eq!(q.next_batch().unwrap().len(), 4);
+        q.set_policy(1, 10_000_000);
+        // The retuned cap applies to the very next drain.
+        assert_eq!(q.next_batch().unwrap().len(), 1);
+        assert_eq!(q.policy().max_batch, 1);
+        assert_eq!(q.policy().max_wait, Duration::from_secs(10));
+    }
+
+    /// Feed a controller one synthetic window: `demand` queries are
+    /// available per flush (flush size = min(demand, live max_batch)),
+    /// and executing a flush of size `b` takes `exec_us(b)`. Returns
+    /// the live `max_batch` after the window retunes.
+    fn drive_window(
+        ctl: &PolicyController,
+        q: &BatchQueue,
+        demand: usize,
+        exec_us: impl Fn(usize) -> u64,
+    ) -> usize {
+        for _ in 0..RETUNE_WINDOW {
+            let b = demand.min(q.policy().max_batch);
+            ctl.observe_flush(b, exec_us(b));
+        }
+        q.policy().max_batch
+    }
+
+    /// Satellite regression: on a synthetic latency table the adaptive
+    /// controller converges MONOTONICALLY (no oscillation) to a fixed
+    /// point, and never leaves the configured bounds.
+    #[test]
+    fn adaptive_policy_converges_monotonically_within_bounds() {
+        // Synthetic table: executing batch b costs 100 + 10*b us.
+        let exec = |b: usize| 100 + 10 * b as u64;
+
+        // Saturated demand (100 queries always waiting), cap starts at
+        // 8 with a 2000us ceiling: max_batch must climb monotonically
+        // 8 → 16 → 32 → 64 → 128 and stop (0.9*128 > 100 > 0.25*128).
+        let q = BatchQueue::new(BatchPolicy { max_batch: 128, max_wait: Duration::from_millis(2) });
+        let ctl = PolicyController::new(q.clone(), true); // bounds from startup policy
+        q.set_policy(8, 2000);
+        let mut trajectory = vec![q.policy().max_batch];
+        for _ in 0..8 {
+            trajectory.push(drive_window(&ctl, &q, 100, exec));
+        }
+        assert!(
+            trajectory.windows(2).all(|w| w[0] <= w[1]),
+            "growth must be monotone: {trajectory:?}"
+        );
+        assert_eq!(*trajectory.last().unwrap(), 128, "fixed point: {trajectory:?}");
+        assert_eq!(trajectory[4], 128, "converged within 4 windows: {trajectory:?}");
+        assert!(ctl.retunes() >= 4);
+        // max_wait tracks mean execute latency for the converged batch
+        // (100 + 10*100 = 1100us), inside [250, 2000].
+        let wait_us = q.policy().max_wait.as_micros() as u64;
+        assert!((250..=2000).contains(&wait_us), "wait {wait_us} left bounds");
+
+        // Starved demand (2 queries per flush), cap starts at the 128
+        // ceiling: max_batch halves monotonically until the fill ratio
+        // leaves the shrink band (2 <= 0.25*8 still shrinks; at cap 4
+        // the window's 2-query flushes sit between the bands), so the
+        // fixed point is 4 — never dipping below the floor of 1.
+        let q2 =
+            BatchQueue::new(BatchPolicy { max_batch: 128, max_wait: Duration::from_millis(2) });
+        let ctl2 = PolicyController::new(q2.clone(), true);
+        let mut shrink = vec![q2.policy().max_batch];
+        for _ in 0..10 {
+            shrink.push(drive_window(&ctl2, &q2, 2, exec));
+        }
+        assert!(
+            shrink.windows(2).all(|w| w[0] >= w[1]),
+            "shrink must be monotone: {shrink:?}"
+        );
+        assert_eq!(*shrink.last().unwrap(), 4, "fixed point: {shrink:?}");
+        assert!(shrink.iter().all(|&b| (1..=128).contains(&b)), "left bounds: {shrink:?}");
+    }
+
+    #[test]
+    fn static_controller_is_inert() {
+        let q = BatchQueue::new(BatchPolicy { max_batch: 32, max_wait: Duration::from_millis(2) });
+        let ctl = PolicyController::new(q.clone(), false);
+        for _ in 0..10 * RETUNE_WINDOW {
+            ctl.observe_flush(32, 50_000);
+        }
+        assert_eq!(ctl.retunes(), 0);
+        assert_eq!(q.policy().max_batch, 32);
+        assert_eq!(q.policy().max_wait, Duration::from_millis(2));
+    }
+
+    #[test]
+    fn warm_start_clamps_to_startup_bounds() {
+        let q =
+            BatchQueue::new(BatchPolicy { max_batch: 32, max_wait: Duration::from_micros(2000) });
+        let ctl = PolicyController::new(q.clone(), true);
+        // A manifest may tighten the policy...
+        ctl.warm_start(Some(8), Some(500));
+        assert_eq!(q.policy().max_batch, 8);
+        assert_eq!(q.policy().max_wait, Duration::from_micros(500));
+        assert_eq!(ctl.retunes(), 1);
+        // ...but never widen past the operator's startup ceiling (the
+        // compiled ladder tops out at the startup max_batch).
+        ctl.warm_start(Some(4096), Some(90_000));
+        assert_eq!(q.policy().max_batch, 32);
+        assert_eq!(q.policy().max_wait, Duration::from_micros(2000));
+        // Partial warm-start leaves the other knob alone.
+        ctl.warm_start(Some(16), None);
+        assert_eq!(q.policy().max_batch, 16);
+        assert_eq!(q.policy().max_wait, Duration::from_micros(2000));
+        // A no-op warm start is not a retune.
+        let before = ctl.retunes();
+        ctl.warm_start(Some(16), None);
+        assert_eq!(ctl.retunes(), before);
     }
 }

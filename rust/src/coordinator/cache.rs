@@ -306,6 +306,18 @@ impl PredictionCache {
         v
     }
 
+    /// Silent probe: is `key` resident right now? No hit/miss counters,
+    /// no LRU promotion, no single-flight registration — the IO thread's
+    /// offload classifier uses this to decide *where* a line runs
+    /// (inline for warm hits, worker pool otherwise) without perturbing
+    /// any statistic the real serving path will count moments later.
+    /// Advisory by nature: an entry can be evicted (or land) between
+    /// this probe and the real lookup, which costs one misclassified
+    /// line, never a wrong answer.
+    pub fn peek(&self, key: u64) -> Option<PredVec> {
+        self.lock_shard(key).entries.get(&key).map(|e| e.value)
+    }
+
     /// Plain insert; bypasses single-flight bookkeeping.
     pub fn put(&self, key: u64, value: PredVec) {
         let mut shard = self.lock_shard(key);
@@ -352,6 +364,33 @@ mod tests {
         c.put(k, PredVec::scalar(7.5));
         assert_eq!(c.get(k), Some(PredVec::scalar(7.5)));
         assert_eq!(c.stats(), (1, 1));
+    }
+
+    #[test]
+    fn peek_is_silent_and_does_not_promote() {
+        // Counters: peek must move neither hits nor misses.
+        let c = PredictionCache::new(8);
+        let k = cache_key("m", &[1, 2, 3]);
+        assert_eq!(c.peek(k), None);
+        c.put(k, PredVec::scalar(7.5));
+        assert_eq!(c.peek(k), Some(PredVec::scalar(7.5)));
+        assert_eq!(c.stats(), (0, 0), "peek must not count hits or misses");
+
+        // LRU: a peeked entry stays cold and evicts first.
+        let c = PredictionCache::with_shards(3, 1);
+        let (ka, kb, kc, kd) = (
+            cache_key("m", &[1]),
+            cache_key("m", &[2]),
+            cache_key("m", &[3]),
+            cache_key("m", &[4]),
+        );
+        c.put(ka, PredVec::scalar(1.0));
+        c.put(kb, PredVec::scalar(2.0));
+        c.put(kc, PredVec::scalar(3.0));
+        assert_eq!(c.peek(ka), Some(PredVec::scalar(1.0)));
+        c.put(kd, PredVec::scalar(4.0));
+        assert_eq!(c.peek(ka), None, "peek must not have promoted ka");
+        assert_eq!(c.peek(kd), Some(PredVec::scalar(4.0)));
     }
 
     #[test]

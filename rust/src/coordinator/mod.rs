@@ -57,6 +57,7 @@
 pub mod batcher;
 pub mod cache;
 pub mod frontend;
+pub mod offload;
 pub mod router;
 pub mod server;
 pub mod session;
@@ -71,7 +72,7 @@ use crate::sim::Target;
 use crate::tokenizer::span::{self, IdSpan};
 use crate::tokenizer::{token_count, Scheme};
 use anyhow::{anyhow, bail, Result};
-use batcher::{BatchPolicy, BatchQueue, Pending};
+use batcher::{BatchPolicy, BatchQueue, Pending, PolicyController};
 use cache::{cache_key, cache_namespace, FlightGuard, Lookup, PredictionCache};
 use frontend::{CachedEncode, FrontendMemo};
 use router::{LenMemo, Router, TargetRoutes, Variant, VariantSpec};
@@ -90,10 +91,10 @@ use std::time::{Duration, Instant};
 /// value, so a chronically slow peer fails *worker-side* too, its health
 /// flips Down after a few strikes, and subsequent probes fail fast
 /// without waiting — the serving thread's worst sustained stall is a few
-/// strikes' worth, not one deadline per query forever. (Fully resuming
-/// the request off-thread instead of parking on the channel is the
-/// ROADMAP "in-loop response generation offload" follow-on, which covers
-/// cache-miss model invocations for the same reason.)
+/// strikes' worth, not one deadline per query forever. (With
+/// `--request-workers ≥ 1` the wait is parked on an [`offload`] pool
+/// worker, never an IO thread — the IO loop keeps serving its other
+/// connections while this deadline runs.)
 const REMOTE_GET_TIMEOUT: Duration = Duration::from_millis(500);
 
 /// Compute-side knobs for [`Service::start_with`] /
@@ -108,11 +109,16 @@ pub struct ServeOptions {
     /// means a slow PJRT call no longer head-of-line-blocks the
     /// variant: the next flush is picked up by an idle pool member.
     pub workers_per_head: usize,
+    /// Let each variant's [`batcher::PolicyController`] retune its
+    /// `max_batch`/`max_wait_us` from observed flush fill and execute
+    /// latency (`--batch-policy adaptive`). Off = the startup policy is
+    /// pinned, exactly the pre-adaptive behavior.
+    pub adaptive_batch: bool,
 }
 
 impl Default for ServeOptions {
     fn default() -> Self {
-        ServeOptions { use_pallas: false, workers_per_head: 1 }
+        ServeOptions { use_pallas: false, workers_per_head: 1, adaptive_batch: false }
     }
 }
 
@@ -181,6 +187,16 @@ pub struct DeltaOutcome {
     pub spans_reencoded: u64,
 }
 
+/// Every point-in-time gauge `stats_json` reports, read back to back at
+/// one instant — see [`Service::gauge_snapshot`].
+struct GaugeSnapshot {
+    cache_entries: usize,
+    frontend_memo_entries: usize,
+    len_memo_entries: usize,
+    sessions_open: u64,
+    offload_queue_depth: u64,
+}
+
 impl Service {
     /// Spin up one single-worker variant per bundle (each named after
     /// its model). `use_pallas` selects the Pallas-kernel predict
@@ -193,7 +209,7 @@ impl Service {
         policy: BatchPolicy,
         use_pallas: bool,
     ) -> Result<Service> {
-        let opts = ServeOptions { use_pallas, workers_per_head: 1 };
+        let opts = ServeOptions { use_pallas, ..ServeOptions::default() };
         Service::start_with(manifest, bundles, policy, opts)
     }
 
@@ -265,8 +281,14 @@ impl Service {
         for (bundle, name, ladder) in planned {
             let queue = BatchQueue::new(policy.clone());
             // Shared with the pool: workers observe each completed
-            // request's queue-wait + execute span into it.
+            // request's queue-wait + execute span into both estimators
+            // (EWMA for back-compat/cold-start, P² sketch for the p95
+            // the budget router actually reads).
             let ewma_us = Arc::new(stats::LatencyEwma::default());
+            let p95_us = Arc::new(stats::QuantileSketch::new(0.95));
+            // The per-variant batch policy: bounds are derived from the
+            // startup policy before anything can retune it.
+            let policy_ctl = PolicyController::new(queue.clone(), opts.adaptive_batch);
             // Only the LAST pool member to fail startup may close the
             // queue — while any worker lives, the variant keeps serving.
             let live = Arc::new(AtomicUsize::new(pool));
@@ -280,6 +302,8 @@ impl Service {
                         queue.clone(),
                         stats.clone(),
                         ewma_us.clone(),
+                        p95_us.clone(),
+                        policy_ctl.clone(),
                         live.clone(),
                     )
                 })
@@ -297,6 +321,8 @@ impl Service {
                     routed: AtomicU64::new(0),
                     budget_downgrades: AtomicU64::new(0),
                     ewma_us,
+                    p95_us,
+                    policy: policy_ctl,
                     span_table: frontend::ShardedMemo::with_shards(
                         router::SPAN_TABLE_CAPACITY,
                         router::SPAN_TABLE_SHARDS,
@@ -349,6 +375,26 @@ impl Service {
             .find(variant)
             .ok_or_else(|| anyhow!("no variant '{variant}' for target '{}'", target.name()))?;
         v.ewma_us.set(us);
+        Ok(())
+    }
+
+    /// Warm-start a variant's live batch policy from known-good values
+    /// (the variants manifest's `policy` keys): either knob may be
+    /// omitted to keep its startup value, and both are clamped to the
+    /// controller's bounds — a manifest can never push a variant outside
+    /// what `--max-batch`/`--max-wait-us` configured.
+    pub fn set_variant_policy(
+        &self,
+        target: Target,
+        variant: &str,
+        max_batch: Option<usize>,
+        max_wait_us: Option<u64>,
+    ) -> Result<()> {
+        let tr = self.router.routes(target)?;
+        let v = tr
+            .find(variant)
+            .ok_or_else(|| anyhow!("no variant '{variant}' for target '{}'", target.name()))?;
+        v.policy.warm_start(max_batch, max_wait_us);
         Ok(())
     }
 
@@ -464,6 +510,47 @@ impl Service {
             self.stats.budget_downgrades.fetch_add(1, Ordering::Relaxed);
         }
         Ok(vidx)
+    }
+
+    /// Silent warm probe for the offload classifier: would this single
+    /// `mlir` query be answered from memo + cache alone? Chains the len
+    /// memo, a *pure* routing choose, the frontend memo, and a cache
+    /// [`PredictionCache::peek`] — no counters move, no single-flight
+    /// guard is taken, nothing is inserted, so the real path still
+    /// counts (and races) exactly once. Error paths (unknown target,
+    /// clean routing refusal) report `true`: the error is produced
+    /// inline in microseconds, no reason to offload it. The answer is
+    /// advisory — a stale probe costs one misrouted line's latency,
+    /// never correctness.
+    pub(crate) fn probe_warm(
+        &self,
+        target: Target,
+        mlir_text: &str,
+        budget_us: Option<u64>,
+        required: &[Target],
+    ) -> bool {
+        let Ok(tr) = self.router.routes(target) else {
+            return true; // unknown target: the error answers inline
+        };
+        let text_hash = FrontendMemo::text_hash(mlir_text);
+        let len_key = LenMemo::key_from_hash(target.name(), text_hash);
+        let Some(token_len) = self.router.len_memo.get(len_key) else {
+            return false; // first sight: must tokenize ⇒ must execute
+        };
+        let Some((vidx, _)) = tr.choose(token_len, budget_us, required) else {
+            return true; // clean refusal answers inline
+        };
+        let variant = &tr.variants[vidx];
+        let text_key = FrontendMemo::key_from_hash(
+            target.name(),
+            &variant.name,
+            &variant.bundle.model,
+            text_hash,
+        );
+        let Some(enc) = self.memo.get(text_key) else {
+            return false; // encoding unknown ⇒ cache key unknown
+        };
+        self.cache.peek(enc.key).is_some()
     }
 
     /// Predict the primary hardware characteristic for a raw MLIR
@@ -1056,6 +1143,9 @@ impl Service {
                 if let Some(hw) = &v.bundle.hardware {
                     vj = vj.with("hardware", Json::str(hw));
                 }
+                // The live policy is read ONCE per variant so the pair
+                // of knobs can never mix two retune generations.
+                let live = v.queue.policy();
                 variants = variants.with(
                     &key,
                     vj.with("max_len", Json::num(v.bundle.max_len as f64))
@@ -1065,29 +1155,58 @@ impl Service {
                             Json::num(v.budget_downgrades.load(Ordering::Relaxed) as f64),
                         )
                         .with("ewma_us", Json::num(v.ewma_us.get()))
+                        .with("p95_us", Json::num(v.p95_us.quantile()))
+                        .with("policy_max_batch", Json::num(live.max_batch as f64))
+                        .with(
+                            "policy_max_wait_us",
+                            Json::num(live.max_wait.as_micros() as f64),
+                        )
+                        .with("policy_retunes", Json::num(v.policy.retunes() as f64))
                         .with("queued", Json::num(v.queue.queued() as f64))
                         .with("span_entries", Json::num(v.span_table.len() as f64)),
                 );
             }
         }
+        let g = self.gauge_snapshot();
         let mut j = self
             .stats
             .to_json()
-            .with("cache_entries", Json::num(self.cache.len() as f64))
+            .with("cache_entries", Json::num(g.cache_entries as f64))
             .with("cache_lookup_hits", Json::num(chits as f64))
             .with("cache_lookup_misses", Json::num(cmisses as f64))
             .with("coalesced_queries", Json::num(self.cache.coalesced() as f64))
             .with("cache_shard_contention", Json::num(self.cache.contended() as f64))
             .with("cache_shards", Json::num(self.cache.shard_count() as f64))
-            .with("frontend_memo_entries", Json::num(self.memo.len() as f64))
+            .with("frontend_memo_entries", Json::num(g.frontend_memo_entries as f64))
             .with("frontend_memo_evictions", Json::num(self.memo.evictions() as f64))
-            .with("len_memo_entries", Json::num(self.router.len_memo.len() as f64))
+            .with("len_memo_entries", Json::num(g.len_memo_entries as f64))
+            .with("sessions_open", Json::num(g.sessions_open as f64))
+            .with("offload_queue_depth", Json::num(g.offload_queue_depth as f64))
             .with("routed_by_variant", routed)
             .with("variants", variants);
         if let Some(cluster) = &self.cluster {
             j = j.with("cluster", cluster.stats_json());
         }
         j
+    }
+
+    /// One consistent read of every point-in-time gauge the stats view
+    /// reports. Counters (monotonic) may lag each other harmlessly, but
+    /// gauges sampled at different instants inside one `stats_json` call
+    /// used to produce impossible responses (e.g. an offload depth from
+    /// after a drain next to a memo count from before it). All gauge
+    /// reads happen here, back to back, and `stats_json` overlays them
+    /// onto the counter export — the single place to extend when a new
+    /// gauge is added, and the single read the line-protocol pin test
+    /// asserts presence-zero against.
+    fn gauge_snapshot(&self) -> GaugeSnapshot {
+        GaugeSnapshot {
+            cache_entries: self.cache.len(),
+            frontend_memo_entries: self.memo.len(),
+            len_memo_entries: self.router.len_memo.len(),
+            sessions_open: self.stats.sessions_open.load(Ordering::Relaxed),
+            offload_queue_depth: self.stats.offload_queue_depth.load(Ordering::Relaxed),
+        }
     }
 
     /// Shut down every variant's worker pool (drains in-flight batches)
@@ -1122,6 +1241,7 @@ fn wait_for_leader(rx: std::sync::mpsc::Receiver<Option<PredVec>>) -> Result<Pre
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn spawn_worker(
     ladder: Vec<(PathBuf, usize)>,
     params: Vec<Tensor>,
@@ -1130,6 +1250,8 @@ fn spawn_worker(
     queue: Arc<BatchQueue>,
     stats: Arc<stats::ServiceStats>,
     ewma_us: Arc<stats::LatencyEwma>,
+    p95_us: Arc<stats::QuantileSketch>,
+    policy: Arc<PolicyController>,
     live: Arc<AtomicUsize>,
 ) -> JoinHandle<()> {
     std::thread::spawn(move || {
@@ -1175,7 +1297,13 @@ fn spawn_worker(
             if pending.is_empty() {
                 continue;
             }
-            serve_flush(&exes, &params, max_len, n_targets, &pending, &stats, &ewma_us);
+            let t_exec = Instant::now();
+            serve_flush(&exes, &params, max_len, n_targets, &pending, &stats, &ewma_us, &p95_us);
+            // One controller observation per drained flush (not per
+            // ladder chunk): the flush is the unit max_batch/max_wait
+            // bound. Execute-only time — queue wait must not feed back
+            // into the wait target it is itself controlled by.
+            policy.observe_flush(pending.len(), t_exec.elapsed().as_micros() as u64);
         }
     })
 }
@@ -1206,9 +1334,10 @@ fn plan_chunks(n: usize, sizes: &[usize]) -> Vec<(usize, usize)> {
 /// are isolated: a failed PJRT call drops that chunk's senders (its
 /// receivers see a disconnect) and the remaining chunks still execute.
 /// Each completed request's `submitted.elapsed()` (queue wait +
-/// execute) is observed into the variant's latency EWMA *before* its
-/// response is sent, so a caller that reads the value and then the
-/// stats always sees the sample included.
+/// execute) is observed into the variant's latency EWMA and P² p95
+/// sketch *before* its response is sent, so a caller that reads the
+/// value and then the stats always sees the sample included.
+#[allow(clippy::too_many_arguments)]
 fn serve_flush(
     exes: &[(Executable, usize)],
     params: &[Tensor],
@@ -1217,6 +1346,7 @@ fn serve_flush(
     pending: &[Pending],
     stats: &stats::ServiceStats,
     ewma_us: &stats::LatencyEwma,
+    p95_us: &stats::QuantileSketch,
 ) {
     let sizes: Vec<usize> = exes.iter().map(|&(_, b)| b).collect();
     let mut off = 0;
@@ -1236,7 +1366,9 @@ fn serve_flush(
                 stats.padded_slots.fetch_add((batch - take) as u64, Ordering::Relaxed);
                 stats.record_exec(batch);
                 for (p, v) in chunk.iter().zip(values) {
-                    ewma_us.observe(p.submitted.elapsed().as_micros() as f64);
+                    let us = p.submitted.elapsed().as_micros() as f64;
+                    ewma_us.observe(us);
+                    p95_us.observe(us);
                     let _ = p.respond.send(v);
                 }
             }
@@ -1618,7 +1750,7 @@ mod tests {
                 manifest,
                 vec![bundle],
                 BatchPolicy { max_batch: 8, max_wait: std::time::Duration::from_micros(500) },
-                ServeOptions { use_pallas: false, workers_per_head: 2 },
+                ServeOptions { workers_per_head: 2, ..ServeOptions::default() },
             )
             .unwrap(),
         );

@@ -1,0 +1,358 @@
+//! Compute offload pool: gets model execution off the IO threads.
+//!
+//! The event loop in [`super::server`] answers most lines without ever
+//! blocking — cache hits, memo hits, stats, session bookkeeping. But a
+//! cache miss executes a model (milliseconds under load) and a cluster
+//! forward waits on a peer (up to the remote-get timeout), and before
+//! this module existed both ran *on the IO thread*, stalling every
+//! readable socket that loop owns. The fix is a small, bounded
+//! request-worker pool:
+//!
+//! - IO threads classify each line with [`LineService::would_block`].
+//!   Lines that stay cheap are answered inline exactly as before.
+//! - Would-block lines become a [`Job`] on the pool's MPMC queue. A
+//!   worker re-executes the line via [`LineService::handle`] (the same
+//!   entry point the inline path uses, so responses are byte-identical),
+//!   renders the response, and pushes a [`Completion`] into the owning
+//!   loop's [`CompletionInbox`], ringing that loop's existing eventfd
+//!   doorbell.
+//! - The owning loop drains completions in its doorbell phase, validates
+//!   the `(conn, gen, seq)` stamp against the connection slot (slots are
+//!   recycled; `gen` detects reuse), appends the rendered bytes to the
+//!   write buffer, and resumes parsing that connection's backlog.
+//!
+//! The queue is bounded: when it is full, `submit` hands the job back
+//! and the caller answers inline — the system degrades to exactly the
+//! pre-offload behavior instead of queueing without limit. Per-connection
+//! response ordering is preserved by the server keeping at most ONE
+//! outstanding offloaded line per connection and not parsing past it.
+//!
+//! The pool speaks to the service through the [`LineService`] trait
+//! rather than `Service` directly so tests can drive it with a fake
+//! (e.g. a deliberately slow head) without building model artifacts.
+
+use super::stats::ServiceStats;
+use crate::json::Json;
+use minipoll::EventFd;
+use std::collections::VecDeque;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// The slice of a service the offload plane needs: classify a line,
+/// execute it, and account for it. Implemented by the real `Service`
+/// (via `handle_line`) and by test fakes.
+pub trait LineService: Send + Sync {
+    /// The stats sink the pool maintains its gauges/counters on.
+    fn stats(&self) -> &ServiceStats;
+
+    /// Would answering this line block the calling thread (model
+    /// execution, peer wait)? Advisory: a wrong answer costs latency,
+    /// never correctness — both paths run the same `handle`.
+    fn would_block(&self, line: &str) -> bool;
+
+    /// Execute one request line to a response. Must be safe to call
+    /// from any thread.
+    fn handle(&self, line: &str) -> Json;
+}
+
+/// One would-block line handed to the pool, stamped with enough to
+/// route its response back to the right connection slot — and to detect
+/// that the slot was recycled while the job was in flight.
+pub struct Job {
+    /// The raw request line (no trailing newline).
+    pub line: String,
+    /// Where the rendered response goes: the owning IO loop's inbox.
+    pub inbox: Arc<CompletionInbox>,
+    /// Connection slab index on the owning loop.
+    pub conn: usize,
+    /// Connection generation; mismatch means the slot was reused.
+    pub gen: u64,
+    /// Per-connection line sequence number, for debug assertions.
+    pub seq: u64,
+}
+
+/// A rendered response on its way back to the IO loop: the exact bytes
+/// (JSON line + `\n`) the inline path would have written.
+pub struct Completion {
+    pub conn: usize,
+    pub gen: u64,
+    pub seq: u64,
+    pub bytes: Vec<u8>,
+}
+
+/// Per-IO-loop return path: workers push rendered completions here and
+/// ring the loop's doorbell; the loop drains in its doorbell phase.
+/// Shares the loop's existing connection-handoff eventfd — one wakeup
+/// source per loop, not two.
+pub struct CompletionInbox {
+    done: Mutex<Vec<Completion>>,
+    doorbell: Arc<EventFd>,
+}
+
+impl CompletionInbox {
+    pub fn new(doorbell: Arc<EventFd>) -> CompletionInbox {
+        CompletionInbox { done: Mutex::new(Vec::new()), doorbell }
+    }
+
+    /// Deliver a completion and wake the owning loop.
+    pub fn push(&self, c: Completion) {
+        self.done.lock().unwrap().push(c);
+        self.doorbell.signal();
+    }
+
+    /// Take everything delivered so far (called from the owning loop).
+    pub fn drain(&self) -> Vec<Completion> {
+        std::mem::take(&mut *self.done.lock().unwrap())
+    }
+}
+
+struct Queue {
+    jobs: VecDeque<Job>,
+    closed: bool,
+}
+
+struct Shared {
+    queue: Mutex<Queue>,
+    ready: Condvar,
+    capacity: usize,
+    svc: Arc<dyn LineService>,
+}
+
+/// Bounded MPMC request-worker pool. `--request-workers N` spawns one;
+/// N = 0 means no pool and the server answers everything inline.
+pub struct OffloadPool {
+    shared: Arc<Shared>,
+    workers: Mutex<Vec<JoinHandle<()>>>,
+}
+
+/// Queue slots per worker: deep enough to absorb a burst, shallow
+/// enough that a stuck backend pushes load back to the inline path
+/// (where it is at least visible as `io_stall_ns`) instead of building
+/// an unbounded backlog.
+const QUEUE_SLOTS_PER_WORKER: usize = 64;
+
+impl OffloadPool {
+    /// Spawn `workers` threads executing would-block lines for `svc`.
+    /// `workers` must be ≥ 1 — a poolless server simply has no
+    /// `OffloadPool` at all.
+    pub fn start(svc: Arc<dyn LineService>, workers: usize) -> Arc<OffloadPool> {
+        let workers = workers.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(Queue { jobs: VecDeque::new(), closed: false }),
+            ready: Condvar::new(),
+            capacity: workers * QUEUE_SLOTS_PER_WORKER,
+            svc,
+        });
+        let handles = (0..workers)
+            .map(|i| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("request-worker-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawning request worker")
+            })
+            .collect();
+        Arc::new(OffloadPool { shared, workers: Mutex::new(handles) })
+    }
+
+    /// Hand a job to the pool. On success the job is counted
+    /// (`offloaded_misses`, `offload_queue_depth`) and a worker will
+    /// deliver its completion. A full or closed queue returns the job
+    /// back so the caller can answer inline — bounded means bounded.
+    pub fn submit(&self, job: Job) -> Result<(), Job> {
+        let mut q = self.shared.queue.lock().unwrap();
+        if q.closed || q.jobs.len() >= self.shared.capacity {
+            return Err(job);
+        }
+        q.jobs.push_back(job);
+        drop(q);
+        let stats = self.shared.svc.stats();
+        stats.offloaded_misses.fetch_add(1, Ordering::Relaxed);
+        stats.offload_queue_depth.fetch_add(1, Ordering::Relaxed);
+        self.shared.ready.notify_one();
+        Ok(())
+    }
+
+    /// Close the queue and join the workers. Already-queued jobs are
+    /// drained and their completions delivered first; new submits are
+    /// refused. Idempotent.
+    pub fn shutdown(&self) {
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.closed = true;
+        }
+        self.shared.ready.notify_all();
+        let handles = std::mem::take(&mut *self.workers.lock().unwrap());
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for OffloadPool {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(job) = q.jobs.pop_front() {
+                    break job;
+                }
+                if q.closed {
+                    return;
+                }
+                q = shared.ready.wait(q).unwrap();
+            }
+        };
+        let stats = shared.svc.stats();
+        stats.offload_queue_depth.fetch_sub(1, Ordering::Relaxed);
+        // Same entry point, same rendering as the inline path: the
+        // response bytes are identical whichever thread produced them.
+        let resp = shared.svc.handle(&job.line);
+        let mut bytes = Vec::with_capacity(128);
+        resp.write_to(&mut bytes).expect("buffer write");
+        bytes.push(b'\n');
+        job.inbox.push(Completion { conn: job.conn, gen: job.gen, seq: job.seq, bytes });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::{Duration, Instant};
+
+    /// Artifact-free stand-in: echoes the line back, optionally slowly.
+    struct Fake {
+        stats: ServiceStats,
+        delay: Duration,
+    }
+
+    impl Fake {
+        fn fast() -> Arc<Fake> {
+            Arc::new(Fake { stats: ServiceStats::default(), delay: Duration::ZERO })
+        }
+
+        fn slow(delay: Duration) -> Arc<Fake> {
+            Arc::new(Fake { stats: ServiceStats::default(), delay })
+        }
+    }
+
+    impl LineService for Fake {
+        fn stats(&self) -> &ServiceStats {
+            &self.stats
+        }
+
+        fn would_block(&self, line: &str) -> bool {
+            line.contains("slow")
+        }
+
+        fn handle(&self, line: &str) -> Json {
+            if !self.delay.is_zero() {
+                std::thread::sleep(self.delay);
+            }
+            Json::obj().with("echo", Json::str(line))
+        }
+    }
+
+    fn inbox() -> Arc<CompletionInbox> {
+        Arc::new(CompletionInbox::new(Arc::new(EventFd::new().unwrap())))
+    }
+
+    fn job(inbox: &Arc<CompletionInbox>, line: &str, seq: u64) -> Job {
+        Job { line: line.to_string(), inbox: inbox.clone(), conn: 3, gen: 9, seq }
+    }
+
+    /// Drain the inbox until `n` completions arrive or the deadline
+    /// passes (tests fail loudly instead of hanging).
+    fn collect(inbox: &CompletionInbox, n: usize) -> Vec<Completion> {
+        let deadline = Instant::now() + Duration::from_secs(10);
+        let mut got = Vec::new();
+        while got.len() < n {
+            got.extend(inbox.drain());
+            assert!(Instant::now() < deadline, "timed out: {}/{n} completions", got.len());
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        got
+    }
+
+    #[test]
+    fn single_worker_preserves_submit_order_and_renders_newline_terminated_json() {
+        let svc = Fake::fast();
+        let pool = OffloadPool::start(svc.clone(), 1);
+        let ib = inbox();
+        for seq in 0..3u64 {
+            pool.submit(job(&ib, &format!("line-{seq}"), seq)).map_err(|_| ()).unwrap();
+        }
+        let got = collect(&ib, 3);
+        for (i, c) in got.iter().enumerate() {
+            assert_eq!(c.seq, i as u64, "one worker must preserve submit order");
+            assert_eq!(c.conn, 3);
+            assert_eq!(c.gen, 9);
+            assert_eq!(*c.bytes.last().unwrap(), b'\n');
+            let text = std::str::from_utf8(&c.bytes).unwrap();
+            assert!(text.contains(&format!("line-{i}")), "bad render: {text}");
+        }
+        // The doorbell accumulated at least one signal per push batch.
+        pool.shutdown();
+        assert_eq!(svc.stats.offloaded_misses.load(Ordering::Relaxed), 3);
+        assert_eq!(svc.stats.offload_queue_depth.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn full_queue_hands_the_job_back() {
+        // One worker stuck on a slow job; fill the queue behind it.
+        let svc = Fake::slow(Duration::from_millis(200));
+        let pool = OffloadPool::start(svc.clone(), 1);
+        let ib = inbox();
+        let cap = QUEUE_SLOTS_PER_WORKER;
+        // The worker may dequeue a couple of jobs while we fill, so
+        // submit until the first refusal; it must come within cap + 8
+        // tries (each dequeued job parks the worker for 200ms).
+        let mut refused = None;
+        for seq in 0..(cap as u64 + 8) {
+            if let Err(back) = pool.submit(job(&ib, "slow", seq)) {
+                refused = Some(back);
+                break;
+            }
+        }
+        let back = refused.expect("bounded queue never refused");
+        assert_eq!(back.line, "slow", "refused job must come back intact");
+        assert_eq!(back.inbox.drain().len(), 0, "refused job must not complete");
+        pool.shutdown();
+    }
+
+    #[test]
+    fn shutdown_drains_queued_jobs_before_returning() {
+        let svc = Fake::slow(Duration::from_millis(5));
+        let pool = OffloadPool::start(svc.clone(), 2);
+        let ib = inbox();
+        for seq in 0..8u64 {
+            pool.submit(job(&ib, "x", seq)).map_err(|_| ()).unwrap();
+        }
+        pool.shutdown();
+        // Everything accepted before close was executed and delivered.
+        assert_eq!(ib.drain().len(), 8);
+        assert_eq!(svc.stats.offload_queue_depth.load(Ordering::Relaxed), 0);
+        // And a post-shutdown submit is refused, not lost.
+        assert!(pool.submit(job(&ib, "late", 99)).is_err());
+    }
+
+    #[test]
+    fn completions_carry_the_stamp_for_slot_reuse_detection() {
+        let svc = Fake::fast();
+        let pool = OffloadPool::start(svc, 1);
+        let ib = inbox();
+        pool.submit(Job { line: "a".into(), inbox: ib.clone(), conn: 17, gen: 4, seq: 2 })
+            .map_err(|_| ())
+            .unwrap();
+        let got = collect(&ib, 1);
+        assert_eq!((got[0].conn, got[0].gen, got[0].seq), (17, 4, 2));
+        pool.shutdown();
+    }
+}

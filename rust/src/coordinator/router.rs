@@ -17,8 +17,10 @@
 //!   `max_len` is rejected with a clean error (`no_covering_variant` in
 //!   the stats), never silently truncated and never a panic.
 //! - **Route by budget.** A request may carry `budget_us`. When the
-//!   length-preferred variant's observed latency
-//!   ([`LatencyEwma`], fed by that variant's model invocations) would
+//!   length-preferred variant's observed latency (a per-variant p95
+//!   from a [`QuantileSketch`], falling back to the [`LatencyEwma`]
+//!   until five real samples exist — see
+//!   [`Variant::latency_estimate_us`]) would
 //!   blow the budget, the router reroutes: first to the cheapest
 //!   *larger covering* variant whose estimate fits (no accuracy loss),
 //!   otherwise *down* to the largest smaller/faster variant whose
@@ -38,9 +40,9 @@
 //! measured once per text under that scheme; mixed schemes would give
 //! each variant a different notion of "length").
 
-use super::batcher::BatchQueue;
+use super::batcher::{BatchQueue, PolicyController};
 use super::frontend::ShardedMemo;
-use super::stats::LatencyEwma;
+use super::stats::{LatencyEwma, QuantileSketch};
 use crate::bundle::Bundle;
 use crate::sim::Target;
 use crate::tokenizer::span::IdSpan;
@@ -76,13 +78,26 @@ pub(crate) struct Variant {
     pub(crate) routed: AtomicU64,
     /// Queries that arrived here via a `budget_us` downgrade.
     pub(crate) budget_downgrades: AtomicU64,
-    /// Observed model-invocation latency (queue wait + PJRT execute),
-    /// the estimate `budget_us` decisions read. Shared with the
-    /// variant's worker pool, which observes each completed request's
-    /// `submitted.elapsed()` — per-request accurate regardless of how
-    /// callers collect results. Cache hits don't feed it — a hit costs
-    /// the same on every variant.
+    /// Observed model-invocation latency (queue wait + PJRT execute).
+    /// Shared with the variant's worker pool, which observes each
+    /// completed request's `submitted.elapsed()` — per-request accurate
+    /// regardless of how callers collect results. Cache hits don't feed
+    /// it — a hit costs the same on every variant. Kept (and exported)
+    /// for back-compat and as the cold-start fallback; `budget_us`
+    /// decisions now read [`Variant::latency_estimate_us`].
     pub(crate) ewma_us: Arc<LatencyEwma>,
+    /// Observed model-invocation latency p95 (same samples as
+    /// `ewma_us`, folded into a P² sketch). This is the estimate
+    /// `budget_us` routing reads once five samples exist: a budget
+    /// check against a mean admits queries that blow the budget half
+    /// the time; the p95 is the honest version of that promise.
+    pub(crate) p95_us: Arc<QuantileSketch>,
+    /// This variant's live batch-policy controller: retunes the
+    /// queue's `max_batch`/`max_wait_us` from observed flush fill and
+    /// execute latency (`--batch-policy adaptive`), or sits inert
+    /// (`static`). Always present so `policy_*` stats export
+    /// unconditionally.
+    pub(crate) policy: Arc<PolicyController>,
     /// The incremental tier's segment cache: `FxHash(line bytes)` →
     /// that line's [`IdSpan`] under THIS variant's vocab/op-table
     /// (spans embed vocabulary ids, so the table is per-variant by
@@ -90,6 +105,24 @@ pub(crate) struct Variant {
     /// it for the routed variant; `mlir_delta` splices hits and
     /// re-lexes only misses (`spans_spliced` / `spans_reencoded`).
     pub(crate) span_table: ShardedMemo<IdSpan>,
+}
+
+/// Samples the p95 sketch needs before routing trusts it over the
+/// EWMA (the sketch's five P² markers must be seeded).
+const P95_MIN_SAMPLES: u64 = 5;
+
+impl Variant {
+    /// The latency estimate `budget_us` decisions read: the sketch's
+    /// p95 once it has real samples, else the EWMA — so warm-started
+    /// variants (`set_variant_ewma_us`, manifest `ewma_us` keys) and
+    /// cold variants keep routing sensibly before traffic exists.
+    pub(crate) fn latency_estimate_us(&self) -> f64 {
+        if self.p95_us.count() >= P95_MIN_SAMPLES {
+            self.p95_us.quantile()
+        } else {
+            self.ewma_us.get()
+        }
+    }
 }
 
 /// All variants serving one target, sorted by `(max_len, name)`
@@ -115,7 +148,7 @@ impl TargetRoutes {
             self.variants.len(),
             |i| {
                 let v = &self.variants[i];
-                (v.bundle.max_len, v.ewma_us.get(), v.bundle.serves_all(required))
+                (v.bundle.max_len, v.latency_estimate_us(), v.bundle.serves_all(required))
             },
             token_len,
             budget_us,

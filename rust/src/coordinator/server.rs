@@ -103,18 +103,36 @@
 //! connections interleave at worst one budget's worth of lines behind
 //! the flood (`fairness_deferrals` in the stats counts requeued turns).
 //!
-//! Request *processing* (including a cache-miss model invocation) runs
-//! on the IO thread that owns the connection: cache hits and memo hits
-//! are microseconds, and miss-heavy concurrent traffic scales across
-//! `--io-threads` loops (each loop handles its connections' requests in
-//! parallel with the others). Offloading misses to the batch workers
-//! without breaking per-connection response order is a noted ROADMAP
-//! follow-on.
+//! Request *processing* splits by cost. Cache hits, memo probes, and
+//! bookkeeping commands are answered inline on the IO thread that owns
+//! the connection — they are microseconds. Any line that would block
+//! the thread (a cache-miss model invocation, a cluster peer wait) is
+//! handed to the bounded request-worker pool (`--request-workers N`,
+//! [`super::offload`]): the worker executes the same `handle_line`
+//! path, renders the identical response bytes, and bounces them back
+//! to the owning loop through that loop's eventfd doorbell. While a
+//! connection has an offloaded line in flight it parks — parsing stops
+//! at that line and `EPOLLIN` is dropped — so per-connection response
+//! order is preserved by construction, and the loop spends the wait
+//! serving its OTHER connections instead of stalling them
+//! (`offloaded_misses` / `offload_queue_depth` / `io_stall_ns` in the
+//! stats; the last counts would-block lines the loop had to run inline
+//! because the pool's bounded queue was full). `--request-workers 0`
+//! (the default) skips classification entirely and runs every line
+//! inline — the pre-offload behavior, byte for byte.
+//!
+//! With `--reuseport`, accept sharding replaces the shared acceptor:
+//! every IO thread owns its own `SO_REUSEPORT` listener socket bound to
+//! the same address and the kernel spreads incoming connections across
+//! them — no cross-thread handoff on accept. Where the option is
+//! unsupported the server logs a warning and falls back to the shared
+//! single-listener accept path.
 //!
 //! The old thread-per-connection loop survives as
 //! [`serve_on_threaded`], kept as the baseline the serving bench
 //! (`benches/e3_serving.rs`) compares the event loop against.
 
+use super::offload::{CompletionInbox, Job, LineService, OffloadPool};
 use super::session::{Delta, Splice};
 use super::Service;
 use crate::json::{parse, Json};
@@ -171,13 +189,24 @@ impl Stop {
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
     /// Event-loop threads. Thread 0 accepts and distributes connections
-    /// round-robin across all loops (including itself).
+    /// round-robin across all loops (including itself) — unless
+    /// `reuseport` shards accepting across every loop.
     pub io_threads: usize,
+    /// Request-worker pool size ([`super::offload`]): would-block lines
+    /// (cache-miss model executions, cluster peer waits) run on these
+    /// workers instead of the IO threads. 0 = no pool, every line runs
+    /// inline on its IO thread (the pre-offload behavior).
+    pub request_workers: usize,
+    /// Give every IO thread its own `SO_REUSEPORT` listener socket so
+    /// the kernel shards accepts across loops, instead of thread 0
+    /// dealing connections out. Falls back to the shared acceptor (with
+    /// a logged warning) where the option is unsupported.
+    pub reuseport: bool,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { io_threads: 1 }
+        ServerConfig { io_threads: 1, request_workers: 0, reuseport: false }
     }
 }
 
@@ -188,9 +217,43 @@ pub fn serve(
     stop: Arc<Stop>,
     config: ServerConfig,
 ) -> Result<()> {
+    if config.reuseport {
+        match bind_reuseport_set(addr, config.io_threads.max(1)) {
+            Ok(listeners) => return serve_loops(service, listeners, stop, config),
+            Err(e) => eprintln!(
+                "[server] --reuseport unavailable ({e:#}); falling back to shared accept"
+            ),
+        }
+    }
     let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
     serve_on_with(service, listener, stop, config)
 }
+
+/// Bind `n` `SO_REUSEPORT` listener sockets to the same address — one
+/// per IO thread, the kernel sharding accepts across them. Port 0 works:
+/// the first bind picks the port, its siblings join it.
+fn bind_reuseport_set(addr: &str, n: usize) -> Result<Vec<TcpListener>> {
+    use std::net::ToSocketAddrs;
+    let sa = addr
+        .to_socket_addrs()
+        .with_context(|| format!("resolving {addr}"))?
+        .next()
+        .ok_or_else(|| anyhow!("no addresses resolved for {addr}"))?;
+    let first = minipoll::listener_reuseport(&sa, ACCEPT_BACKLOG)
+        .with_context(|| format!("reuseport-binding {sa}"))?;
+    let bound = first.local_addr()?;
+    let mut listeners = vec![first];
+    for _ in 1..n {
+        listeners.push(
+            minipoll::listener_reuseport(&bound, ACCEPT_BACKLOG)
+                .with_context(|| format!("reuseport-binding sibling on {bound}"))?,
+        );
+    }
+    Ok(listeners)
+}
+
+/// Listen backlog for reuseport-bound sockets (std's own default).
+const ACCEPT_BACKLOG: i32 = 128;
 
 /// Serve on an already-bound listener (lets tests bind port 0) with one
 /// IO thread.
@@ -207,16 +270,38 @@ pub fn serve_on_with(
     stop: Arc<Stop>,
     config: ServerConfig,
 ) -> Result<()> {
-    listener.set_nonblocking(true)?;
+    serve_loops(service, vec![listener], stop, config)
+}
+
+/// The front end proper, generic over the service so the offload tests
+/// can drive it with an artifact-free fake. One listener = thread 0
+/// accepts and deals connections round-robin; `io_threads` listeners
+/// (the reuseport path) = every thread accepts from its own.
+fn serve_loops(
+    service: Arc<dyn LineService>,
+    mut listeners: Vec<TcpListener>,
+    stop: Arc<Stop>,
+    config: ServerConfig,
+) -> Result<()> {
     let n = config.io_threads.max(1);
+    debug_assert!(listeners.len() == 1 || listeners.len() == n);
+    for l in &listeners {
+        l.set_nonblocking(true)?;
+    }
     eprintln!(
-        "[server] cost-model service listening on {} ({n} io thread{})",
-        listener.local_addr()?,
-        if n == 1 { "" } else { "s" }
+        "[server] cost-model service listening on {} ({n} io thread{}{}{})",
+        listeners[0].local_addr()?,
+        if n == 1 { "" } else { "s" },
+        if listeners.len() > 1 { ", reuseport accept sharding" } else { "" },
+        if config.request_workers > 0 {
+            format!(", {} request worker(s)", config.request_workers)
+        } else {
+            String::new()
+        },
     );
-    // Every loop gets an inbox (handoff queue + doorbell); doorbells are
-    // registered with `stop` up front so a trigger can never race a
-    // loop's startup.
+    // Every loop gets an inbox (handoff queue + completion inbox +
+    // doorbell); doorbells are registered with `stop` up front so a
+    // trigger can never race a loop's startup.
     let mut inboxes: Vec<Arc<Inbox>> = Vec::with_capacity(n);
     for _ in 0..n {
         inboxes.push(Arc::new(Inbox::new()?));
@@ -224,28 +309,49 @@ pub fn serve_on_with(
     for inbox in &inboxes {
         stop.register(&inbox.doorbell);
     }
+    // The request-worker pool is shared by every loop; each loop's jobs
+    // carry that loop's completion inbox home.
+    let pool = (config.request_workers > 0)
+        .then(|| OffloadPool::start(service.clone(), config.request_workers));
+    // One acceptor per listener: index 0 runs on thread 0; with accept
+    // sharding each remaining listener rides its own thread and pushes
+    // into that thread's inbox only.
+    let sharded = listeners.len() > 1;
+    let mut acceptors: Vec<Option<Acceptor>> = listeners
+        .drain(..)
+        .enumerate()
+        .map(|(i, listener)| {
+            let inboxes = if sharded { vec![inboxes[i].clone()] } else { inboxes.clone() };
+            Some(Acceptor { listener, inboxes, next: 0 })
+        })
+        .collect();
     let mut joins = Vec::new();
-    for inbox in inboxes.iter().skip(1).cloned() {
-        let svc = service.clone();
+    for (i, inbox) in inboxes.iter().enumerate().skip(1) {
+        let ctx = LoopCtx { svc: service.clone(), pool: pool.clone() };
+        let inbox = inbox.clone();
         let stop = stop.clone();
+        let acceptor = if sharded { acceptors[i].take() } else { None };
         joins.push(std::thread::spawn(move || {
-            if let Err(e) = io_loop(svc, stop.clone(), inbox, None) {
+            if let Err(e) = io_loop(ctx, stop.clone(), inbox, acceptor) {
                 // A dead loop would silently strand every connection the
                 // acceptor keeps dealing to its inbox — wind the whole
                 // front end down instead.
-                eprintln!("[server] io thread failed, stopping server: {e:#}");
+                eprintln!("[server] io thread {i} failed, stopping server: {e:#}");
                 stop.trigger();
             }
         }));
     }
-    let acceptor = Acceptor { listener, inboxes: inboxes.clone(), next: 0 };
-    let res = io_loop(service, stop.clone(), inboxes[0].clone(), Some(acceptor));
+    let ctx = LoopCtx { svc: service, pool: pool.clone() };
+    let res = io_loop(ctx, stop.clone(), inboxes[0].clone(), acceptors[0].take());
     // If thread 0 failed, the sibling loops are still parked in
     // epoll_wait — trigger so the joins below cannot hang, and the
     // startup/run error reaches the caller.
     stop.trigger();
     for j in joins {
         let _ = j.join();
+    }
+    if let Some(pool) = pool {
+        pool.shutdown();
     }
     res
 }
@@ -255,11 +361,19 @@ pub fn serve_on_with(
 struct Inbox {
     conns: Mutex<VecDeque<TcpStream>>,
     doorbell: Arc<EventFd>,
+    /// Finished offload jobs land here; shares `doorbell`, so the loop
+    /// has exactly one wakeup source for everything handed to it.
+    completions: Arc<CompletionInbox>,
 }
 
 impl Inbox {
     fn new() -> Result<Inbox> {
-        Ok(Inbox { conns: Mutex::new(VecDeque::new()), doorbell: Arc::new(EventFd::new()?) })
+        let doorbell = Arc::new(EventFd::new()?);
+        Ok(Inbox {
+            conns: Mutex::new(VecDeque::new()),
+            completions: Arc::new(CompletionInbox::new(doorbell.clone())),
+            doorbell,
+        })
     }
 
     fn push(&self, stream: TcpStream) {
@@ -270,6 +384,14 @@ impl Inbox {
     fn drain(&self) -> VecDeque<TcpStream> {
         std::mem::take(&mut *self.conns.lock().unwrap())
     }
+}
+
+/// Everything an IO loop needs beyond its own epoll state: the service
+/// (behind the [`LineService`] seam so tests can drive the loop with an
+/// artifact-free fake) and the shared request-worker pool, if any.
+struct LoopCtx {
+    svc: Arc<dyn LineService>,
+    pool: Option<Arc<OffloadPool>>,
 }
 
 /// Thread 0's extra role: own the listener and deal connections out.
@@ -336,6 +458,16 @@ struct Conn {
     /// the buffer ran dry). Lets `finish_conn` know whether a flush that
     /// made room must resume answering — without rescanning `rbuf`.
     deferred_lines: bool,
+    /// Registration stamp, unique per loop: a completion carrying a
+    /// stale `gen` belongs to a previous occupant of this slab slot and
+    /// is dropped.
+    gen: u64,
+    /// Next offload sequence number for this connection.
+    seq: u64,
+    /// `Some(seq)` while an offloaded line is in flight: the connection
+    /// is parked — no parsing past that line, `EPOLLIN` dropped — until
+    /// the matching completion lands, preserving response order.
+    waiting: Option<u64>,
 }
 
 impl Conn {
@@ -371,7 +503,7 @@ impl Conn {
 /// The event loop proper: one epoll instance owning a doorbell, the
 /// listener (thread 0 only), and a slab of nonblocking connections.
 fn io_loop(
-    service: Arc<Service>,
+    ctx: LoopCtx,
     stop: Arc<Stop>,
     inbox: Arc<Inbox>,
     mut acceptor: Option<Acceptor>,
@@ -385,6 +517,10 @@ fn io_loop(
     }
     let mut slab: Vec<Option<Conn>> = Vec::new();
     let mut free: Vec<usize> = Vec::new();
+    // Registration stamp source: slab slots are recycled, so a slot
+    // index alone cannot identify a connection across time — each
+    // registration takes the next stamp and completions carry it.
+    let mut next_gen: u64 = 0;
     let mut events = Events::with_capacity(512);
     let mut touched: Vec<usize> = Vec::new();
     let mut ready: VecDeque<usize> = VecDeque::new();
@@ -393,11 +529,11 @@ fn io_loop(
         // Block until something is ready — no timeout, no sleep. Idle
         // connections park in the kernel for free.
         epoll.wait(&mut events, -1)?;
-        service.stats.epoll_wakeups.fetch_add(1, Ordering::Relaxed);
+        ctx.svc.stats().epoll_wakeups.fetch_add(1, Ordering::Relaxed);
         // Phase 1 — IO: flush backpressured writes, drain readable
-        // sockets into per-connection buffers. No request is answered
-        // yet; connections that survived their IO are queued for the
-        // fairness scheduler.
+        // sockets into per-connection buffers, land finished offload
+        // jobs. No request is answered yet; connections that survived
+        // their IO are queued for the fairness scheduler.
         for ev in events.iter() {
             match ev.token {
                 TOK_DOORBELL => {
@@ -406,17 +542,40 @@ fn io_loop(
                         break 'outer;
                     }
                     for stream in inbox.drain() {
-                        register_conn(&service, &epoll, &mut slab, &mut free, stream);
+                        next_gen += 1;
+                        register_conn(&ctx, &epoll, &mut slab, &mut free, stream, next_gen);
+                    }
+                    for c in inbox.completions.drain() {
+                        let Some(conn) = slab.get_mut(c.conn).and_then(Option::as_mut) else {
+                            continue; // connection closed while its job ran
+                        };
+                        if conn.gen != c.gen {
+                            continue; // slot recycled by a newer connection
+                        }
+                        // At most one job is ever in flight per
+                        // connection, so a live (conn, gen) can only be
+                        // waiting on exactly this completion.
+                        debug_assert_eq!(conn.waiting, Some(c.seq));
+                        if conn.waiting != Some(c.seq) {
+                            continue;
+                        }
+                        conn.waiting = None;
+                        conn.wbuf.extend_from_slice(&c.bytes);
+                        // Drives phase 2 (resume parsing the backlog
+                        // behind the offloaded line) and phase 3 (flush
+                        // + re-arm EPOLLIN). Duplicate indices in
+                        // `touched` are harmless.
+                        touched.push(c.conn);
                     }
                 }
                 TOK_LISTENER => {
                     if let Some(a) = &mut acceptor {
-                        accept_ready(&service, a);
+                        accept_ready(&ctx, a);
                     }
                 }
                 t => {
                     let idx = (t - TOK_CONN_BASE) as usize;
-                    if conn_io(&service, &epoll, &mut slab, &mut free, idx, ev.events) {
+                    if conn_io(&ctx, &epoll, &mut slab, &mut free, idx, ev.events) {
                         touched.push(idx);
                     }
                 }
@@ -431,10 +590,10 @@ fn io_loop(
             let Some(conn) = slab.get_mut(idx).and_then(Option::as_mut) else {
                 continue; // closed earlier this wakeup
             };
-            match respond_turn(&service, conn, FAIR_LINE_BUDGET) {
-                Turn::Closed => close_conn(&service, &epoll, &mut slab, &mut free, idx),
+            match respond_turn(&ctx, &inbox, idx, conn, FAIR_LINE_BUDGET) {
+                Turn::Closed => close_conn(&ctx, &epoll, &mut slab, &mut free, idx),
                 Turn::MoreReady => {
-                    service.stats.fairness_deferrals.fetch_add(1, Ordering::Relaxed);
+                    ctx.svc.stats().fairness_deferrals.fetch_add(1, Ordering::Relaxed);
                     ready.push_back(idx);
                 }
                 Turn::Drained => {}
@@ -443,26 +602,27 @@ fn io_loop(
         // Phase 3 — flush what the kernel will take, close EOF'd
         // connections, re-arm interest.
         for idx in touched.drain(..) {
-            finish_conn(&service, &epoll, &mut slab, &mut free, idx);
+            finish_conn(&ctx, &inbox, &epoll, &mut slab, &mut free, idx);
         }
     }
 
     // Teardown: close every connection this loop owns (and any streams
     // handed off but never registered). `close_conn` no-ops on empty
-    // slots.
+    // slots. In-flight offload completions die with the inbox.
     for idx in 0..slab.len() {
-        close_conn(&service, &epoll, &mut slab, &mut free, idx);
+        close_conn(&ctx, &epoll, &mut slab, &mut free, idx);
     }
     drop(inbox.drain());
+    drop(inbox.completions.drain());
     Ok(())
 }
 
 /// Accept until the listener runs dry, dealing streams round-robin.
-fn accept_ready(service: &Arc<Service>, a: &mut Acceptor) {
+fn accept_ready(ctx: &LoopCtx, a: &mut Acceptor) {
     loop {
         match a.listener.accept() {
             Ok((stream, _peer)) => {
-                service.stats.connections_accepted.fetch_add(1, Ordering::Relaxed);
+                ctx.svc.stats().connections_accepted.fetch_add(1, Ordering::Relaxed);
                 let i = a.next % a.inboxes.len();
                 a.next = a.next.wrapping_add(1);
                 a.inboxes[i].push(stream);
@@ -483,11 +643,12 @@ fn accept_ready(service: &Arc<Service>, a: &mut Acceptor) {
 }
 
 fn register_conn(
-    service: &Arc<Service>,
+    ctx: &LoopCtx,
     epoll: &Epoll,
     slab: &mut Vec<Option<Conn>>,
     free: &mut Vec<usize>,
     stream: TcpStream,
+    gen: u64,
 ) {
     if let Err(e) = stream.set_nonblocking(true) {
         eprintln!("[server] could not make connection nonblocking: {e}");
@@ -513,12 +674,15 @@ fn register_conn(
         interest,
         peer_closed: false,
         deferred_lines: false,
+        gen,
+        seq: 0,
+        waiting: None,
     });
-    service.stats.active_connections.fetch_add(1, Ordering::Relaxed);
+    ctx.svc.stats().active_connections.fetch_add(1, Ordering::Relaxed);
 }
 
 fn close_conn(
-    service: &Arc<Service>,
+    ctx: &LoopCtx,
     epoll: &Epoll,
     slab: &mut [Option<Conn>],
     free: &mut Vec<usize>,
@@ -527,7 +691,7 @@ fn close_conn(
     if let Some(conn) = slab[idx].take() {
         let _ = epoll.delete(conn.stream.as_raw_fd());
         free.push(idx);
-        service.stats.active_connections.fetch_sub(1, Ordering::Relaxed);
+        ctx.svc.stats().active_connections.fetch_sub(1, Ordering::Relaxed);
     }
 }
 
@@ -535,7 +699,7 @@ fn close_conn(
 /// writes, drain the socket into `rbuf`. Returns whether the connection
 /// is still registered (and should take fairness turns this wakeup).
 fn conn_io(
-    service: &Arc<Service>,
+    ctx: &LoopCtx,
     epoll: &Epoll,
     slab: &mut [Option<Conn>],
     free: &mut Vec<usize>,
@@ -577,7 +741,7 @@ fn conn_io(
         }
     }
     if !alive {
-        close_conn(service, epoll, slab, free, idx);
+        close_conn(ctx, epoll, slab, free, idx);
         return false;
     }
     true
@@ -598,7 +762,21 @@ enum Turn {
 /// leftover partial-line bytes stay buffered for the next segment. Stops
 /// early when the write buffer passes the backpressure threshold (the
 /// unanswered lines stay in `rbuf` and resume after a flush makes room).
-fn respond_turn(service: &Service, conn: &mut Conn, budget: usize) -> Turn {
+///
+/// With a request-worker pool, a line classified as would-block is
+/// submitted to the pool instead of being answered here: the connection
+/// parks (`waiting`) and the turn ends — nothing behind the offloaded
+/// line may be answered before its response lands, or per-connection
+/// order would break. The completion re-queues the connection.
+fn respond_turn(ctx: &LoopCtx, inbox: &Inbox, idx: usize, conn: &mut Conn, budget: usize) -> Turn {
+    if conn.waiting.is_some() {
+        // Parked on an in-flight offloaded line. The backlog stays in
+        // `rbuf`; clearing `deferred_lines` keeps `finish_conn`'s
+        // resume loop from spinning on it — the completion (→ touched)
+        // is what resumes this connection.
+        conn.deferred_lines = false;
+        return Turn::Drained;
+    }
     let mut start = 0;
     let mut answered = 0;
     // True when the loop stopped on budget/backpressure with bytes it
@@ -617,7 +795,41 @@ fn respond_turn(service: &Service, conn: &mut Conn, budget: usize) -> Turn {
         start += nl + 1;
         let response = match std::str::from_utf8(line) {
             Ok(text) if text.trim().is_empty() => continue,
-            Ok(text) => handle_line(service, text),
+            Ok(text) => match &ctx.pool {
+                Some(pool) if ctx.svc.would_block(text) => {
+                    let job = Job {
+                        line: text.to_string(),
+                        inbox: inbox.completions.clone(),
+                        conn: idx,
+                        gen: conn.gen,
+                        seq: conn.seq,
+                    };
+                    match pool.submit(job) {
+                        Ok(()) => {
+                            conn.waiting = Some(conn.seq);
+                            conn.seq += 1;
+                            // `start` is already past the offloaded
+                            // line; everything behind it waits in rbuf.
+                            conn.rbuf.drain(..start);
+                            conn.deferred_lines = false;
+                            return Turn::Drained;
+                        }
+                        Err(_refused) => {
+                            // Bounded queue full: degrade to the
+                            // in-loop path and record the stall the
+                            // pool could not absorb.
+                            let t = Instant::now();
+                            let resp = ctx.svc.handle(text);
+                            ctx.svc
+                                .stats()
+                                .io_stall_ns
+                                .fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                            resp
+                        }
+                    }
+                }
+                _ => ctx.svc.handle(text),
+            },
             Err(_) => Json::obj()
                 .with("ok", Json::Bool(false))
                 .with("error", Json::str("request line is not valid UTF-8")),
@@ -653,7 +865,8 @@ fn respond_turn(service: &Service, conn: &mut Conn, budget: usize) -> Turn {
 /// Phase 3 for one touched connection: flush, answer anything a flush
 /// just un-paused, close EOF'd peers, re-arm epoll interest.
 fn finish_conn(
-    service: &Arc<Service>,
+    ctx: &LoopCtx,
+    inbox: &Inbox,
     epoll: &Epoll,
     slab: &mut [Option<Conn>],
     free: &mut Vec<usize>,
@@ -682,21 +895,33 @@ fn finish_conn(
             if paused || !conn.deferred_lines {
                 break; // paused ⇒ wants_write ⇒ EPOLLOUT re-arms below
             }
-            if matches!(respond_turn(service, conn, FAIR_LINE_BUDGET), Turn::Closed) {
+            if matches!(respond_turn(ctx, inbox, idx, conn, FAIR_LINE_BUDGET), Turn::Closed) {
                 close = true;
                 break;
             }
         }
         if !close {
-            if conn.peer_closed {
+            if conn.peer_closed && conn.waiting.is_none() {
+                // A peer that sent EOF right after its request still
+                // gets an in-flight offloaded response: the close waits
+                // for the completion (which re-touches this slot), and
+                // the flush above runs before this check.
                 close = true;
             } else {
                 // Backpressure: past the pause threshold, stop reading
                 // (and thus stop generating responses) until the
-                // backlog drains.
-                let mut want = EPOLLRDHUP | if conn.wants_write() { EPOLLOUT } else { 0 };
-                if conn.wbuf.len() - conn.wpos <= WBUF_PAUSE_BYTES {
-                    want |= EPOLLIN;
+                // backlog drains. Same while an offloaded line is in
+                // flight — the connection is parked, so reading more
+                // would only grow `rbuf` without bound; and once the
+                // peer EOF'd, the read side must go quiet or the
+                // level-triggered EOF would spin the loop until the
+                // completion lands.
+                let mut want = if conn.wants_write() { EPOLLOUT } else { 0 };
+                if !conn.peer_closed && conn.waiting.is_none() {
+                    want |= EPOLLRDHUP;
+                    if conn.wbuf.len() - conn.wpos <= WBUF_PAUSE_BYTES {
+                        want |= EPOLLIN;
+                    }
                 }
                 if want != conn.interest {
                     if epoll
@@ -712,7 +937,7 @@ fn finish_conn(
         }
     }
     if close {
-        close_conn(service, epoll, slab, free, idx);
+        close_conn(ctx, epoll, slab, free, idx);
     }
 }
 
@@ -1064,6 +1289,76 @@ pub fn handle_line(service: &Service, line: &str) -> Json {
             .with("ok", Json::Bool(true))
             .with("us", Json::num(t0.elapsed().as_micros() as f64)),
         Err(e) => fail(format!("{e:#}")),
+    }
+}
+
+/// The offload classifier: would answering this line inline risk
+/// blocking the IO thread? Mirrors [`handle_line`]'s parsing exactly so
+/// every malformed-request error stays inline (errors are microseconds)
+/// — and stays ADVISORY: a wrong answer costs one line's latency, never
+/// correctness, because both paths run the same [`handle_line`].
+fn line_would_block(service: &Service, line: &str) -> bool {
+    let Ok(req) = parse(line) else {
+        return false; // bad json: error answered inline
+    };
+    if let Some(cmd) = req.get("cmd").and_then(Json::as_str) {
+        // `session_open` tokenizes an unseen base and usually executes;
+        // `mlir_delta` re-lexes and may miss the cache. Everything else
+        // (ping/stats/cache_get/cache_put/targets/session_close/unknown)
+        // is pure local bookkeeping.
+        return matches!(cmd, "session_open" | "mlir_delta");
+    }
+    let Some(target) = req.req_str("target").ok().and_then(Target::parse) else {
+        return false; // missing/invalid target: error answered inline
+    };
+    if req.get("mlir_batch").is_some() {
+        // A batch's cost scales with its length and one cold entry
+        // executes the model — not worth probing element-wise.
+        return true;
+    }
+    let Ok(mlir) = req.req_str("mlir") else {
+        return false;
+    };
+    let budget_us = match req.get("budget_us") {
+        None => None,
+        Some(j) => match j.as_f64() {
+            Some(b) if b.is_finite() && b >= 0.0 => Some(b as u64),
+            _ => return false, // malformed budget: error answered inline
+        },
+    };
+    let required: Vec<Target> = match req.get("targets") {
+        None => Vec::new(),
+        Some(j) => {
+            let Some(items) = j.as_arr() else {
+                return false;
+            };
+            let mut out = Vec::with_capacity(items.len());
+            for item in items {
+                match item.as_str().and_then(Target::parse) {
+                    Some(t) => out.push(t),
+                    None => return false, // unknown characteristic: inline error
+                }
+            }
+            out
+        }
+    };
+    // Warm single query (memo'd length + routing + memo'd encoding +
+    // cached prediction) answers in microseconds inline; anything
+    // colder goes to the pool.
+    !service.probe_warm(target, mlir, budget_us, &required)
+}
+
+impl LineService for Service {
+    fn stats(&self) -> &super::stats::ServiceStats {
+        &self.stats
+    }
+
+    fn would_block(&self, line: &str) -> bool {
+        line_would_block(self, line)
+    }
+
+    fn handle(&self, line: &str) -> Json {
+        handle_line(self, line)
     }
 }
 
@@ -1519,9 +1814,8 @@ mod tests {
         let addr = listener.local_addr().unwrap().to_string();
         let server = {
             let stop = stop.clone();
-            std::thread::spawn(move || {
-                serve_on_with(svc, listener, stop, ServerConfig { io_threads })
-            })
+            let config = ServerConfig { io_threads, ..Default::default() };
+            std::thread::spawn(move || serve_on_with(svc, listener, stop, config))
         };
         (addr, stop, server)
     }
@@ -1565,6 +1859,11 @@ mod tests {
         assert!(inner.get("peer_failures").is_some());
         assert!(inner.get("degraded_fallbacks").is_some());
         assert!(inner.get("fairness_deferrals").is_some());
+        // ...and the offload-pool counters, present (zero) from startup
+        // even when no request-worker pool is configured.
+        assert_eq!(inner.req_f64("offloaded_misses").unwrap(), 0.0);
+        assert_eq!(inner.req_f64("io_stall_ns").unwrap(), 0.0);
+        assert_eq!(inner.req_f64("offload_queue_depth").unwrap(), 0.0);
         // ...and the routing-tier counters: the per-variant objects plus
         // the budget/coverage counters, present (zero) from startup so
         // dashboards and peers can rely on the shape.
@@ -1594,6 +1893,14 @@ mod tests {
         assert_eq!(v.req_f64("routed").unwrap(), 0.0);
         assert_eq!(v.req_f64("budget_downgrades").unwrap(), 0.0);
         assert_eq!(v.req_f64("ewma_us").unwrap(), 0.0);
+        // The P² sketch reads 0 until it has seen 5 samples.
+        assert_eq!(v.req_f64("p95_us").unwrap(), 0.0);
+        // The per-variant batch policy is observable from startup:
+        // static bounds until (and unless) the adaptive controller
+        // retunes them.
+        assert!(v.req_f64("policy_max_batch").unwrap() >= 1.0);
+        assert!(v.req_f64("policy_max_wait_us").unwrap() > 0.0);
+        assert_eq!(v.req_f64("policy_retunes").unwrap(), 0.0);
         assert_eq!(v.req_f64("span_entries").unwrap(), 0.0);
         assert!(inner.get("cluster").is_none(), "unclustered service must omit the peer view");
         let targets = handle_line(&svc, r#"{"id": 3, "cmd": "targets"}"#);
@@ -2259,6 +2566,150 @@ mod tests {
             svc.stats.fairness_deferrals.load(Ordering::Relaxed) > 0,
             "the line budget never engaged on a {flood_n}-line burst"
         );
+        stop.trigger();
+        let _ = server.join();
+    }
+
+    /// Artifact-free stand-in for a model head behind the
+    /// [`LineService`] seam: any line containing `"slow"` sleeps for
+    /// `delay` (the deliberately slow model execution) and is classified
+    /// would-block; everything else echoes immediately.
+    struct SlowHead {
+        stats: crate::coordinator::stats::ServiceStats,
+        delay: std::time::Duration,
+    }
+
+    impl SlowHead {
+        fn new(delay_ms: u64) -> Arc<SlowHead> {
+            Arc::new(SlowHead {
+                stats: Default::default(),
+                delay: std::time::Duration::from_millis(delay_ms),
+            })
+        }
+    }
+
+    impl LineService for SlowHead {
+        fn stats(&self) -> &crate::coordinator::stats::ServiceStats {
+            &self.stats
+        }
+
+        fn would_block(&self, line: &str) -> bool {
+            line.contains("slow")
+        }
+
+        fn handle(&self, line: &str) -> Json {
+            if line.contains("slow") {
+                std::thread::sleep(self.delay);
+            }
+            Json::obj().with("ok", Json::Bool(true)).with("echo", Json::str(line))
+        }
+    }
+
+    /// Spawn `serve_loops` over a fake service; returns (addr, stop, join).
+    fn spawn_fake(
+        svc: Arc<dyn LineService>,
+        config: ServerConfig,
+    ) -> (String, Arc<Stop>, std::thread::JoinHandle<Result<()>>) {
+        let stop = Stop::new();
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let server = {
+            let stop = stop.clone();
+            std::thread::spawn(move || serve_loops(svc, vec![listener], stop, config))
+        };
+        (addr, stop, server)
+    }
+
+    /// The offload acceptance bar: a deliberately slow model head on one
+    /// connection must not delay cache-hit-speed responses on a sibling
+    /// connection of the SAME io loop. One loop, one request worker —
+    /// without the offload pool the slow line would hold the loop for
+    /// its full duration and the sibling's answer would arrive after it.
+    #[test]
+    fn slow_head_does_not_stall_siblings_on_the_same_loop() {
+        let svc = SlowHead::new(500);
+        let config = ServerConfig { io_threads: 1, request_workers: 1, reuseport: false };
+        let (addr, stop, server) = spawn_fake(svc.clone(), config);
+
+        let mut slow_conn = TcpStream::connect(&addr).unwrap();
+        let mut fast_conn = TcpStream::connect(&addr).unwrap();
+        slow_conn.write_all(b"{\"kind\": \"slow\"}\n").unwrap();
+        // Give the loop a beat to pick up the slow line and park it on
+        // the worker before the sibling's request lands.
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        let t0 = Instant::now();
+        fast_conn.write_all(b"{\"kind\": \"fast\"}\n").unwrap();
+        let fast_resp = read_response(&fast_conn);
+        let fast_latency = t0.elapsed();
+        assert!(fast_resp.contains("fast"));
+        // Generous bound: far under the 500 ms the slow head is holding
+        // a WORKER for. If the slow line had run on the io thread, this
+        // response could not have arrived before it finished.
+        assert!(
+            fast_latency < std::time::Duration::from_millis(250),
+            "sibling stalled {fast_latency:?} behind an offloaded slow line"
+        );
+        // The slow connection still gets its (correct) answer.
+        let slow_resp = read_response(&slow_conn);
+        assert!(slow_resp.contains("slow"));
+        assert_eq!(svc.stats.offloaded_misses.load(Ordering::Relaxed), 1);
+        assert_eq!(svc.stats.io_stall_ns.load(Ordering::Relaxed), 0);
+        assert_eq!(svc.stats.offload_queue_depth.load(Ordering::Relaxed), 0);
+        stop.trigger();
+        let _ = server.join();
+    }
+
+    /// Per-connection ordering across the offload boundary: a pipelined
+    /// slow-then-fast pair on ONE connection must come back in submit
+    /// order — the fast line waits behind the parked slow one even
+    /// though it could have been answered inline immediately.
+    #[test]
+    fn offloaded_line_preserves_per_connection_order() {
+        let svc = SlowHead::new(200);
+        let config = ServerConfig { io_threads: 1, request_workers: 2, reuseport: false };
+        let (addr, stop, server) = spawn_fake(svc.clone(), config);
+
+        let mut conn = TcpStream::connect(&addr).unwrap();
+        conn.write_all(b"{\"a\": \"slow\"}\n{\"b\": \"fast\"}\n").unwrap();
+        let mut reader = BufReader::new(&conn);
+        let mut first = String::new();
+        reader.read_line(&mut first).unwrap();
+        let mut second = String::new();
+        reader.read_line(&mut second).unwrap();
+        assert!(first.contains("slow"), "responses reordered: got {first:?} first");
+        assert!(second.contains("fast"));
+        stop.trigger();
+        let _ = server.join();
+    }
+
+    /// Accept sharding end-to-end: two reuseport listeners on one
+    /// address, each owned by its own io loop, every connection gets
+    /// answered no matter which listener the kernel handed it to.
+    #[test]
+    fn reuseport_sharded_accept_serves_all_connections() {
+        let listeners = match bind_reuseport_set("127.0.0.1:0", 2) {
+            Ok(l) => l,
+            Err(e) => {
+                eprintln!("skipping: SO_REUSEPORT unsupported here ({e:#})");
+                return;
+            }
+        };
+        let addr = listeners[0].local_addr().unwrap().to_string();
+        let svc = SlowHead::new(0);
+        let stop = Stop::new();
+        let config = ServerConfig { io_threads: 2, request_workers: 0, reuseport: true };
+        let server = {
+            let stop = stop.clone();
+            let svc: Arc<dyn LineService> = svc.clone();
+            std::thread::spawn(move || serve_loops(svc, listeners, stop, config))
+        };
+        for i in 0..8 {
+            let mut conn = TcpStream::connect(&addr).unwrap();
+            conn.write_all(format!("{{\"i\": {i}}}\n").as_bytes()).unwrap();
+            let resp = read_response(&conn);
+            assert!(resp.contains(&format!("\\\"i\\\": {i}")) || resp.contains("echo"));
+        }
+        assert_eq!(svc.stats.connections_accepted.load(Ordering::Relaxed), 8);
         stop.trigger();
         let _ = server.join();
     }

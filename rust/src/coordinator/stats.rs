@@ -37,6 +37,12 @@
 //! [`LatencyEwma`] each variant's budget decisions read — lives on the
 //! router's variants; `Service::stats_json` merges it in as the
 //! `routed_by_variant` / `variants` objects.
+//! Offload-tier counters added with the compute offload pool
+//! (`super::offload`): `offloaded_misses` (lines handed off an IO
+//! thread to the request-worker pool), `io_stall_ns` (nanoseconds IO
+//! threads spent executing would-block lines inline — nonzero only
+//! with `--request-workers 0` or when the offload queue was full), and
+//! `offload_queue_depth` (gauge: jobs currently queued for the pool).
 //! Cache-side counters (shard contention, coalesced single-flight
 //! queries) live on `PredictionCache`; `Service::stats_json` merges both
 //! views (plus the per-peer `cluster` object when clustered) for the
@@ -118,6 +124,18 @@ pub struct ServiceStats {
     /// Bytes of MLIR text the delta path actually re-lexed — compare
     /// against full probe sizes to see what the splice tier saves.
     pub delta_bytes_rescanned: AtomicU64,
+    /// Lines an IO thread handed to the request-worker pool instead of
+    /// executing inline (cache misses, session opens, batch predicts,
+    /// cluster peer waits).
+    pub offloaded_misses: AtomicU64,
+    /// Nanoseconds IO threads spent executing would-block lines inline.
+    /// Zero whenever the offload pool absorbed everything; nonzero
+    /// means `--request-workers 0` or a full offload queue forced the
+    /// IO thread to stall on compute.
+    pub io_stall_ns: AtomicU64,
+    /// Gauge: jobs currently sitting in the offload pool's queue
+    /// (incremented on enqueue, decremented when a worker dequeues).
+    pub offload_queue_depth: AtomicU64,
     pub errors: AtomicU64,
     /// Executed flushes per compiled batch size: `exec_by_batch[b]` is
     /// how many chunks ran on the `predict_b{b}` executable. One lock
@@ -186,6 +204,139 @@ impl LatencyEwma {
     /// deterministic routing tests).
     pub fn set(&self, us: f64) {
         self.bits.store(us.max(0.0).to_bits(), Ordering::Relaxed);
+    }
+}
+
+/// Streaming quantile estimator (Jain & Chlamtac's P² algorithm,
+/// five markers) — constant memory, no sample buffer, one small mutex.
+///
+/// The router's per-variant `budget_us` decisions previously read a
+/// latency EWMA, which tracks the *mean* — a budget check against the
+/// mean admits queries that blow the budget half the time. This sketch
+/// maintains a running estimate of one fixed quantile (p95 for
+/// routing) by keeping five marker heights and nudging the middle
+/// three toward their ideal positions with a piecewise-parabolic fit
+/// on every observation.
+///
+/// `quantile()` returns 0.0 until five samples have arrived (the
+/// markers aren't meaningful yet); callers that need an estimate
+/// earlier should fall back to the EWMA — `Variant` does exactly that,
+/// so warm-started and freshly-spawned variants keep routing sensibly
+/// before real traffic exists. Samples arrive once per *model
+/// invocation* (not per query), so the mutex is nowhere near any hot
+/// path; `quantile()` on the routing path is a lock + two loads.
+pub struct QuantileSketch {
+    state: Mutex<P2State>,
+}
+
+struct P2State {
+    /// Marker heights (sorted observations until seeded, then the P²
+    /// estimates for min / q/2 / q / (1+q)/2 / max).
+    heights: [f64; 5],
+    /// Actual marker positions, 1-indexed as in the paper.
+    pos: [f64; 5],
+    /// Desired marker positions.
+    want: [f64; 5],
+    /// Per-observation increments of the desired positions.
+    dwant: [f64; 5],
+    count: u64,
+}
+
+impl QuantileSketch {
+    /// A sketch tracking quantile `q` in (0, 1), e.g. 0.95 for p95.
+    pub fn new(q: f64) -> QuantileSketch {
+        let q = q.clamp(0.001, 0.999);
+        QuantileSketch {
+            state: Mutex::new(P2State {
+                heights: [0.0; 5],
+                pos: [1.0, 2.0, 3.0, 4.0, 5.0],
+                want: [1.0, 1.0 + 2.0 * q, 1.0 + 4.0 * q, 3.0 + 2.0 * q, 5.0],
+                dwant: [0.0, q / 2.0, q, (1.0 + q) / 2.0, 1.0],
+                count: 0,
+            }),
+        }
+    }
+
+    /// Samples observed so far (garbage samples excluded).
+    pub fn count(&self) -> u64 {
+        self.state.lock().unwrap().count
+    }
+
+    /// Current estimate of the tracked quantile, 0.0 until five
+    /// samples have seeded the markers.
+    pub fn quantile(&self) -> f64 {
+        let st = self.state.lock().unwrap();
+        if st.count < 5 {
+            0.0
+        } else {
+            st.heights[2]
+        }
+    }
+
+    /// Fold one observation into the sketch.
+    pub fn observe(&self, x: f64) {
+        if !x.is_finite() || x < 0.0 {
+            return;
+        }
+        let mut st = self.state.lock().unwrap();
+        if st.count < 5 {
+            let n = st.count as usize;
+            st.heights[n] = x;
+            st.count += 1;
+            if st.count == 5 {
+                st.heights.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            }
+            return;
+        }
+        st.count += 1;
+
+        // Cell k holds the new observation; extreme markers absorb
+        // out-of-range values directly.
+        let k = if x < st.heights[0] {
+            st.heights[0] = x;
+            0
+        } else if x >= st.heights[4] {
+            st.heights[4] = x;
+            3
+        } else {
+            // heights[k] <= x < heights[k+1]
+            (1..4).find(|&i| x < st.heights[i]).unwrap_or(4) - 1
+        };
+
+        for i in (k + 1)..5 {
+            st.pos[i] += 1.0;
+        }
+        for i in 0..5 {
+            st.want[i] += st.dwant[i];
+        }
+
+        // Nudge interior markers toward their desired positions.
+        for i in 1..4 {
+            let d = st.want[i] - st.pos[i];
+            if (d >= 1.0 && st.pos[i + 1] - st.pos[i] > 1.0)
+                || (d <= -1.0 && st.pos[i - 1] - st.pos[i] < -1.0)
+            {
+                let d = d.signum();
+                let parabolic = st.heights[i]
+                    + d / (st.pos[i + 1] - st.pos[i - 1])
+                        * ((st.pos[i] - st.pos[i - 1] + d)
+                            * (st.heights[i + 1] - st.heights[i])
+                            / (st.pos[i + 1] - st.pos[i])
+                            + (st.pos[i + 1] - st.pos[i] - d)
+                                * (st.heights[i] - st.heights[i - 1])
+                                / (st.pos[i] - st.pos[i - 1]));
+                st.heights[i] = if st.heights[i - 1] < parabolic && parabolic < st.heights[i + 1] {
+                    parabolic
+                } else {
+                    // Parabolic fit left the bracket — fall back to the
+                    // linear form, which preserves marker monotonicity.
+                    let j = if d > 0.0 { i + 1 } else { i - 1 };
+                    st.heights[i]
+                        + d * (st.heights[j] - st.heights[i]) / (st.pos[j] - st.pos[i])
+                };
+                st.pos[i] += d;
+            }
+        }
     }
 }
 
@@ -332,6 +483,15 @@ impl ServiceStats {
                 "delta_bytes_rescanned",
                 Json::num(self.delta_bytes_rescanned.load(Ordering::Relaxed) as f64),
             )
+            .with(
+                "offloaded_misses",
+                Json::num(self.offloaded_misses.load(Ordering::Relaxed) as f64),
+            )
+            .with("io_stall_ns", Json::num(self.io_stall_ns.load(Ordering::Relaxed) as f64))
+            .with(
+                "offload_queue_depth",
+                Json::num(self.offload_queue_depth.load(Ordering::Relaxed) as f64),
+            )
             .with("exec_by_batch", {
                 let mut by_batch = Json::obj();
                 for (b, count) in self.exec_by_batch() {
@@ -427,7 +587,94 @@ mod tests {
         assert_eq!(j.req_f64("spans_spliced").unwrap(), 0.0);
         assert_eq!(j.req_f64("spans_reencoded").unwrap(), 0.0);
         assert_eq!(j.req_f64("delta_bytes_rescanned").unwrap(), 0.0);
+        // Offload-tier counters are present (zero) even when serving
+        // runs fully inline — dashboards can rely on them.
+        assert_eq!(j.req_f64("offloaded_misses").unwrap(), 0.0);
+        assert_eq!(j.req_f64("io_stall_ns").unwrap(), 0.0);
+        assert_eq!(j.req_f64("offload_queue_depth").unwrap(), 0.0);
         assert!(j.get("exec_by_batch").is_some());
+    }
+
+    #[test]
+    fn quantile_sketch_cold_reads_zero() {
+        let q = QuantileSketch::new(0.95);
+        assert_eq!(q.quantile(), 0.0);
+        assert_eq!(q.count(), 0);
+        for x in [10.0, 20.0, 30.0, 40.0] {
+            q.observe(x);
+        }
+        // Four samples: markers not seeded yet.
+        assert_eq!(q.quantile(), 0.0, "needs five samples to seed");
+        q.observe(50.0);
+        assert_eq!(q.count(), 5);
+        assert!(q.quantile() > 0.0);
+    }
+
+    #[test]
+    fn quantile_sketch_ignores_garbage() {
+        let q = QuantileSketch::new(0.95);
+        q.observe(f64::NAN);
+        q.observe(f64::INFINITY);
+        q.observe(-3.0);
+        assert_eq!(q.count(), 0, "garbage samples must not seed markers");
+    }
+
+    #[test]
+    fn quantile_sketch_tracks_uniform_p95() {
+        let q = QuantileSketch::new(0.95);
+        // Uniform 1..=1000 in a scrambled but deterministic order
+        // (stride 37 is coprime with 1000, so every value appears once).
+        for i in 0..1000u64 {
+            q.observe(((i * 37) % 1000 + 1) as f64);
+        }
+        let est = q.quantile();
+        assert!(
+            (850.0..=1000.0).contains(&est),
+            "p95 of uniform[1,1000] ≈ 950, sketch said {est}"
+        );
+    }
+
+    #[test]
+    fn quantile_sketch_separates_tail_from_mean() {
+        // 9-in-10 fast samples at 100us, 1-in-10 slow at 2000us: the
+        // mean (an EWMA's target) sits near 290us, the p95 must land in
+        // the slow mode — the whole reason routing switched to a sketch.
+        let q = QuantileSketch::new(0.95);
+        for i in 0..2000u64 {
+            q.observe(if i % 10 == 9 { 2000.0 } else { 100.0 });
+        }
+        let est = q.quantile();
+        assert!(est > 500.0, "p95 must see the slow mode, got {est}");
+    }
+
+    #[test]
+    fn quantile_sketch_median_of_known_sequence() {
+        let q = QuantileSketch::new(0.5);
+        for i in 1..=101u64 {
+            q.observe(i as f64);
+        }
+        let est = q.quantile();
+        assert!((40.0..=62.0).contains(&est), "median of 1..=101 ≈ 51, got {est}");
+    }
+
+    #[test]
+    fn quantile_sketch_concurrent_observes_stay_in_range() {
+        let q = std::sync::Arc::new(QuantileSketch::new(0.95));
+        let mut handles = Vec::new();
+        for t in 0..4u32 {
+            let q = q.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..500u32 {
+                    q.observe(100.0 + ((t * 500 + i) % 100) as f64);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(q.count(), 2000);
+        let v = q.quantile();
+        assert!((100.0..=200.0).contains(&v), "sketch left the sample range: {v}");
     }
 
     #[test]

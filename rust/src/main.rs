@@ -84,6 +84,7 @@ fn run(args: &[String]) -> Result<()> {
                  eval --bundle dir --test f [--out metrics.json]\n  \
                  serve --bundles d1,d2,... --addr 127.0.0.1:7071 [--pallas true] [--io-threads 1]\n    \
                  [--variants variants.json] [--workers-per-head 1] [--max-batch 32] [--max-wait-us 2000]\n    \
+                 [--request-workers 0] [--batch-policy static|adaptive] [--reuseport false]\n    \
                  [--peers host:port,... --node-id host:port [--vnodes 64]]\n  \
                  predict --bundle dir --file graph.mlir\n  \
                  ground-truth --file graph.mlir\n  \
@@ -374,8 +375,10 @@ fn serve(flags: &HashMap<String, String>) -> Result<()> {
             specs.push(VariantSpec { name: bundle.model.clone(), bundle });
         }
     }
-    // Warm-start latencies from the manifest, applied after startup.
+    // Warm-start latencies and batch policies from the manifest,
+    // applied after startup.
     let mut warm_ewma: Vec<(Target, String, f64)> = Vec::new();
+    let mut warm_policy: Vec<(Target, String, Option<usize>, Option<u64>)> = Vec::new();
     if let Some(path) = variants_file {
         let doc = mlir_cost::json::parse(
             &std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?,
@@ -393,6 +396,13 @@ fn serve(flags: &HashMap<String, String>) -> Result<()> {
             if let Some(us) = entry.get("ewma_us").and_then(Json::as_f64) {
                 warm_ewma.push((bundle.primary_target(), name.clone(), us));
             }
+            // Optional `policy` object: known-good batching knobs for
+            // this variant, clamped to the startup bounds on apply.
+            if let Some(p) = entry.get("policy") {
+                let max_batch = p.get("max_batch").and_then(Json::as_f64).map(|v| v as usize);
+                let max_wait_us = p.get("max_wait_us").and_then(Json::as_f64).map(|v| v as u64);
+                warm_policy.push((bundle.primary_target(), name.clone(), max_batch, max_wait_us));
+            }
             specs.push(VariantSpec { name, bundle });
         }
     }
@@ -403,15 +413,28 @@ fn serve(flags: &HashMap<String, String>) -> Result<()> {
         max_batch: flag(flags, "max-batch", "32").parse()?,
         max_wait: std::time::Duration::from_micros(flag(flags, "max-wait-us", "2000").parse()?),
     };
+    let adaptive_batch = match flag(flags, "batch-policy", "static") {
+        "static" => false,
+        "adaptive" => true,
+        other => bail!("--batch-policy must be 'static' or 'adaptive', got '{other}'"),
+    };
     let opts = ServeOptions {
         use_pallas,
         workers_per_head: flag(flags, "workers-per-head", "1").parse()?,
+        adaptive_batch,
     };
-    let config = server::ServerConfig { io_threads: flag(flags, "io-threads", "1").parse()? };
+    let config = server::ServerConfig {
+        io_threads: flag(flags, "io-threads", "1").parse()?,
+        request_workers: flag(flags, "request-workers", "0").parse()?,
+        reuseport: flag(flags, "reuseport", "false") == "true",
+    };
     let addr = flag(flags, "addr", "127.0.0.1:7071");
     let mut service = Service::start_variants(manifest, specs, policy, opts)?;
     for (target, name, us) in warm_ewma {
         service.set_variant_ewma_us(target, &name, us)?;
+    }
+    for (target, name, max_batch, max_wait_us) in warm_policy {
+        service.set_variant_policy(target, &name, max_batch, max_wait_us)?;
     }
     for target in service.targets() {
         eprintln!(

@@ -15,10 +15,16 @@
 //! Level-triggered only (no `EPOLLET`): the server drains sockets to
 //! `WouldBlock` on every wakeup, and level-triggered re-notification is
 //! the forgiving mode if a drain ever stops early.
+//!
+//! One socket-construction helper rides along: [`listener_reuseport`]
+//! builds a `TcpListener` with `SO_REUSEPORT` set *before* bind — which
+//! std's `TcpListener::bind` cannot do — so several listeners can share
+//! one address and the kernel shards accepts across them.
 
 use std::io;
+use std::net::{SocketAddr, TcpListener};
 use std::os::raw::{c_int, c_uint, c_void};
-use std::os::unix::io::{AsRawFd, RawFd};
+use std::os::unix::io::{AsRawFd, FromRawFd, RawFd};
 
 // ---- readiness bits (bit-identical to <sys/epoll.h>) ----
 
@@ -61,6 +67,106 @@ extern "C" {
     fn close(fd: c_int) -> c_int;
     fn read(fd: c_int, buf: *mut c_void, count: usize) -> isize;
     fn write(fd: c_int, buf: *const c_void, count: usize) -> isize;
+    fn socket(domain: c_int, ty: c_int, protocol: c_int) -> c_int;
+    fn bind(fd: c_int, addr: *const c_void, len: c_uint) -> c_int;
+    fn listen(fd: c_int, backlog: c_int) -> c_int;
+    fn setsockopt(fd: c_int, level: c_int, name: c_int, val: *const c_void, len: c_uint) -> c_int;
+}
+
+// ---- SO_REUSEPORT listener construction (values from <sys/socket.h>,
+// <netinet/in.h> on Linux) ----
+
+const AF_INET: c_int = 2;
+const AF_INET6: c_int = 10;
+const SOCK_STREAM: c_int = 1;
+const SOCK_CLOEXEC: c_int = 0o2000000;
+const SOL_SOCKET: c_int = 1;
+const SO_REUSEADDR: c_int = 2;
+const SO_REUSEPORT: c_int = 15;
+
+/// `struct sockaddr_in`, network byte order in `sin_port`/`sin_addr`.
+#[repr(C)]
+struct SockAddrIn {
+    sin_family: u16,
+    sin_port: u16,
+    sin_addr: u32,
+    sin_zero: [u8; 8],
+}
+
+/// `struct sockaddr_in6`.
+#[repr(C)]
+struct SockAddrIn6 {
+    sin6_family: u16,
+    sin6_port: u16,
+    sin6_flowinfo: u32,
+    sin6_addr: [u8; 16],
+    sin6_scope_id: u32,
+}
+
+/// Owns a raw socket fd until it is handed to `TcpListener`; closes it
+/// on every early-error return path.
+struct FdGuard(RawFd);
+
+impl Drop for FdGuard {
+    fn drop(&mut self) {
+        if self.0 >= 0 {
+            unsafe { close(self.0) };
+        }
+    }
+}
+
+/// Build a listening `TcpListener` on `addr` with `SO_REUSEPORT` (and
+/// `SO_REUSEADDR`, matching std) set before bind. Several listeners
+/// built this way can share one address; the kernel load-balances
+/// incoming connections across them. Fails with the OS error where the
+/// option is unsupported — callers fall back to a normal bind.
+pub fn listener_reuseport(addr: &SocketAddr, backlog: i32) -> io::Result<TcpListener> {
+    let domain = if addr.is_ipv4() { AF_INET } else { AF_INET6 };
+    let fd = unsafe { socket(domain, SOCK_STREAM | SOCK_CLOEXEC, 0) };
+    if fd < 0 {
+        return Err(io::Error::last_os_error());
+    }
+    let guard = FdGuard(fd);
+    let one: c_int = 1;
+    let onep = &one as *const c_int as *const c_void;
+    let onelen = std::mem::size_of::<c_int>() as c_uint;
+    for opt in [SO_REUSEADDR, SO_REUSEPORT] {
+        if unsafe { setsockopt(fd, SOL_SOCKET, opt, onep, onelen) } < 0 {
+            return Err(io::Error::last_os_error());
+        }
+    }
+    let rc = match addr {
+        SocketAddr::V4(v4) => {
+            let sa = SockAddrIn {
+                sin_family: AF_INET as u16,
+                sin_port: v4.port().to_be(),
+                // The octets are already network order; keep them as-is.
+                sin_addr: u32::from_ne_bytes(v4.ip().octets()),
+                sin_zero: [0; 8],
+            };
+            let p = &sa as *const SockAddrIn as *const c_void;
+            unsafe { bind(fd, p, std::mem::size_of::<SockAddrIn>() as c_uint) }
+        }
+        SocketAddr::V6(v6) => {
+            let sa = SockAddrIn6 {
+                sin6_family: AF_INET6 as u16,
+                sin6_port: v6.port().to_be(),
+                sin6_flowinfo: v6.flowinfo().to_be(),
+                sin6_addr: v6.ip().octets(),
+                sin6_scope_id: v6.scope_id(),
+            };
+            let p = &sa as *const SockAddrIn6 as *const c_void;
+            unsafe { bind(fd, p, std::mem::size_of::<SockAddrIn6>() as c_uint) }
+        }
+    };
+    if rc < 0 {
+        return Err(io::Error::last_os_error());
+    }
+    if unsafe { listen(fd, backlog) } < 0 {
+        return Err(io::Error::last_os_error());
+    }
+    std::mem::forget(guard);
+    Ok(unsafe { TcpListener::from_raw_fd(fd) })
 }
 
 /// One delivered readiness event: the interest bits that fired plus the
@@ -352,6 +458,36 @@ mod tests {
         assert_eq!(ep.wait(&mut events, 0).unwrap(), 0);
         // Double-delete reports the kernel's ENOENT instead of panicking.
         assert!(ep.delete(efd.as_raw_fd()).is_err());
+    }
+
+    #[test]
+    fn reuseport_listeners_share_one_address() {
+        let a = match listener_reuseport(&"127.0.0.1:0".parse().unwrap(), 16) {
+            Ok(l) => l,
+            Err(e) => {
+                eprintln!("skipping: SO_REUSEPORT unsupported here ({e})");
+                return;
+            }
+        };
+        let addr = a.local_addr().unwrap();
+        // Without SO_REUSEPORT on both sockets this second bind would
+        // fail with EADDRINUSE.
+        let b = listener_reuseport(&addr, 16).unwrap();
+        a.set_nonblocking(true).unwrap();
+        b.set_nonblocking(true).unwrap();
+        let ep = Epoll::new().unwrap();
+        ep.add(a.as_raw_fd(), EPOLLIN, 0).unwrap();
+        ep.add(b.as_raw_fd(), EPOLLIN, 1).unwrap();
+        // The kernel picks which listener gets the connection; epoll
+        // tells us which one to accept on.
+        let _client = TcpStream::connect(addr).unwrap();
+        let mut events = Events::with_capacity(4);
+        let n = ep.wait(&mut events, 5000).unwrap();
+        assert!(n >= 1);
+        let ev = events.iter().next().unwrap();
+        let who = if ev.token == 0 { &a } else { &b };
+        let (_stream, peer) = who.accept().unwrap();
+        assert_eq!(peer.ip(), addr.ip());
     }
 
     #[test]

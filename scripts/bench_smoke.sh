@@ -1,0 +1,49 @@
+#!/usr/bin/env bash
+# Bench smoke: every bench target must still RUN end to end, not just
+# compile. Builds all e1-e9 bench binaries, then — when model artifacts
+# are present — runs each one under MLIR_COST_SMOKE=1, which makes
+# benchkit clamp every iteration count to a tiny budget so the full
+# suite finishes in seconds. Smoke numbers are execution evidence, not
+# measurements: any BENCH_*.json the benches write is restored
+# afterwards so a smoke run never clobbers committed results.
+#
+# Usage: bash scripts/bench_smoke.sh   (from anywhere; cds to repo root)
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+benches=(
+  e1_rmse_table
+  e2_fig6
+  e3_serving
+  e4_model_latency
+  e5_ablation
+  e6_frontend
+  e7_cluster
+  e8_router
+  e9_incremental
+)
+
+echo "== building all bench targets =="
+(cd rust && cargo build --release --benches)
+
+if [[ ! -f artifacts/manifest.json ]]; then
+  echo "== artifacts/ absent: benches built but not run (model-gated) =="
+  exit 0
+fi
+
+# Preserve committed bench results across the smoke run.
+tmp="$(mktemp -d)"
+cp BENCH_*.json "$tmp"/ 2>/dev/null || true
+restore() {
+  cp "$tmp"/BENCH_*.json . 2>/dev/null || true
+  rm -rf "$tmp"
+}
+trap restore EXIT
+
+for b in "${benches[@]}"; do
+  echo "== smoke: $b =="
+  (cd rust && MLIR_COST_SMOKE=1 cargo bench --bench "$b")
+done
+
+echo "== bench smoke OK (${#benches[@]} benches) =="

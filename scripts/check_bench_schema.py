@@ -49,6 +49,44 @@ def leaf_errors(value, path):
         yield (path, f"unexpected leaf type {type(value).__name__}")
 
 
+# Column set of the E3e offload table in BENCH_serving.json: the in-loop
+# vs offloaded comparison the serving dashboards diff across PRs.
+SERVING_OFFLOAD_KEYS = {
+    "mode",
+    "request_workers",
+    "connections",
+    "queries",
+    "queries_per_sec",
+    "p50_us",
+    "p99_us",
+    "offloaded_misses",
+}
+
+
+def serving_offload_errors(doc, stem):
+    """e3_serving-specific: the offload_scenarios table must exist, keep
+    its column set, and carry both an in_loop and an offloaded row."""
+    rows = doc.get("offload_scenarios")
+    if not isinstance(rows, list) or not rows:
+        yield (f"{stem}.offload_scenarios", "missing/empty array")
+        return
+    modes = set()
+    for i, row in enumerate(rows):
+        if not isinstance(row, dict):
+            yield (f"{stem}.offload_scenarios[{i}]", "not an object")
+            continue
+        missing = SERVING_OFFLOAD_KEYS - set(row)
+        if missing:
+            yield (
+                f"{stem}.offload_scenarios[{i}]",
+                f"missing keys {sorted(missing)}",
+            )
+        modes.add(row.get("mode"))
+    for mode in ("in_loop", "offloaded"):
+        if mode not in modes:
+            yield (f"{stem}.offload_scenarios", f"no {mode!r} row")
+
+
 def check_file(root: Path, path: Path) -> int:
     rel = path.relative_to(root)
     try:
@@ -77,6 +115,10 @@ def check_file(root: Path, path: Path) -> int:
     for leaf_path, msg in leaf_errors(doc, path.stem):
         print(f"{rel}: {leaf_path}: {msg}", file=sys.stderr)
         errors += 1
+    if bench == "e3_serving":
+        for leaf_path, msg in serving_offload_errors(doc, path.stem):
+            print(f"{rel}: {leaf_path}: {msg}", file=sys.stderr)
+            errors += 1
     return errors
 
 
