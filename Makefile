@@ -1,0 +1,28 @@
+# Convenience targets for the common workflows. Everything here is a
+# thin wrapper — the scripts/ entries are the source of truth and run
+# fine without make.
+
+.PHONY: build test bench bench-smoke check
+
+build:
+	cd rust && cargo build --release
+
+test:
+	cd rust && cargo test -q
+
+# Full bench run at real iteration counts: overwrites the committed
+# BENCH_*.json results, then self-checks them (schema + regression
+# diff against the pre-run baselines).
+bench:
+	bash scripts/run_benches.sh
+
+# CI's fast twin: every bench must still run end to end under
+# MLIR_COST_SMOKE=1; committed results are restored afterwards.
+bench-smoke:
+	bash scripts/bench_smoke.sh
+
+# The non-cargo checks CI runs (docs, bench schemas, differ smoke).
+check:
+	python3 scripts/check_doc_links.py
+	python3 scripts/check_bench_schema.py
+	python3 scripts/bench_compare.py . . --require-both

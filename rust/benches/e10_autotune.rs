@@ -1,0 +1,196 @@
+//! E10 — the autotune loop closed end to end: cost-model-guided
+//! schedule search (greedy vs beam) with a measured regret oracle.
+//!
+//! Per scenario (graph family × probe backend × probe mode × algorithm)
+//! the staged search runs over a small schedule space (unroll × MXU
+//! tile × per-group fusion when the graph exposes few enough bits to
+//! score exhaustively), then the sim oracle exhaustively scores the
+//! SAME space and reports **measured regret** — sim-measured cost of
+//! the model-chosen schedule over the true optimum — plus throughput
+//! (probes/sec) and speedup found per second of search.
+//!
+//! Probe backends:
+//!   service — an in-process untrained `Service` (conv_full, Cycles):
+//!             the real serving path, cold (`mlir_batch`) and delta
+//!             (`session_open` + `mlir_delta`) probe modes. Model
+//!             artifacts required.
+//!   sim     — the simulator itself as the cost model (perfect probe,
+//!             regret 1.0 wherever the beam covers the space). Used
+//!             for both probe-mode rows when artifacts are absent so
+//!             the recorded doc keeps its shape — the `probe` column
+//!             says which backend actually answered.
+//!
+//! Results print as a table and are recorded to `BENCH_autotune.json`
+//! at the repo root.
+
+use mlir_cost::autotune::{
+    self as at, Objective, ProbeMode, SearchConfig, SearchSpace, ServiceProbe, SimProbe,
+};
+use mlir_cost::benchkit;
+use mlir_cost::bundle::Bundle;
+use mlir_cost::coordinator::batcher::BatchPolicy;
+use mlir_cost::coordinator::Service;
+use mlir_cost::dataset::TargetStats;
+use mlir_cost::graphgen::{generate, Family, GraphSpec};
+use mlir_cost::json::Json;
+use mlir_cost::mlir::Function;
+use mlir_cost::runtime::Manifest;
+use mlir_cost::sim::{Target, XpuConfig};
+use mlir_cost::tokenizer::{Scheme, Vocab};
+use std::sync::Arc;
+
+fn repo_root() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).parent().unwrap().to_path_buf()
+}
+
+const WARMUP: usize = 1;
+const ITERS: usize = 5;
+/// Past this many per-group fusion bits the exhaustive oracle would
+/// blow up, so the space drops the fusion dimension (and says so).
+const MAX_FUSION_BITS: usize = 6;
+
+/// The real serving path as the search's cost model, when artifacts
+/// exist: one untrained conv_full variant (max_len 512 covers every
+/// family graph here) serving Cycles.
+fn service() -> Option<Arc<Service>> {
+    let adir = repo_root().join("artifacts");
+    if !adir.join("manifest.json").exists() {
+        return None;
+    }
+    let manifest = Arc::new(Manifest::load(&adir).expect("artifacts load"));
+    let vocab = Vocab::build(vec![vec!["xpu.relu".to_string()]].iter(), 1);
+    let stats = TargetStats { mean: 20.0, std: 5.0, min: 4.0, max: 60.0 };
+    let bundle =
+        Bundle::untrained(&manifest, "conv_full", Target::Cycles, Scheme::OpsOnly, vocab, stats)
+            .expect("untrained bundle");
+    Some(Arc::new(Service::start(manifest, vec![bundle], BatchPolicy::default(), true).unwrap()))
+}
+
+fn run_search(
+    base: &Function,
+    space: &SearchSpace,
+    cfg: &SearchConfig,
+    svc: &Option<Arc<Service>>,
+    mode: ProbeMode,
+) -> at::SearchOutcome {
+    match svc {
+        Some(svc) => {
+            let mut probe = ServiceProbe::new(svc.clone(), mode);
+            let out = at::search(base, space, cfg, &mut probe).expect("served search");
+            probe.finish();
+            out
+        }
+        None => at::search(base, space, cfg, &mut SimProbe::new()).expect("sim search"),
+    }
+}
+
+fn main() {
+    benchkit::section("E10 / autotune: guided schedule search + measured regret");
+    let xcfg = XpuConfig::default();
+    let objective = Objective::minimize(Target::Cycles);
+    let svc = service();
+    let probe_name = if svc.is_some() { "service" } else { "sim" };
+    if svc.is_none() {
+        benchkit::kv("probe backend", "sim (artifacts absent — served probes skipped)");
+    }
+
+    let families = [(Family::Mlp, 0u64), (Family::Resnet, 1), (Family::Bert, 2)];
+    let algos: [(&str, usize); 2] = [("greedy", 1), ("beam4", 4)];
+
+    let mut rows: Vec<Json> = Vec::new();
+    let mut worst_regret = 0.0f64;
+    for (family, i) in families {
+        let spec = GraphSpec { family, structure_seed: 9300 + i, shape_seed: 9400 + i };
+        let base = generate(&spec).expect("graphgen");
+        let bits = at::fusable_count(&base);
+        let fusion = bits <= MAX_FUSION_BITS;
+        let space = SearchSpace { unrolls: vec![1, 2, 4], tiles: vec![16, 32, 64], fusion };
+        benchkit::section(&format!(
+            "family {}: {} fusable groups, space {}{}",
+            family.name(),
+            bits,
+            space.size(&base),
+            if fusion { "" } else { " (fusion dimension dropped: too many bits)" }
+        ));
+
+        for mode in [ProbeMode::Cold, ProbeMode::Delta] {
+            for (algo, beam) in algos {
+                let cfg = SearchConfig { beam, objective: objective.clone() };
+                let label = format!("{}/{}/{}/{}", family.name(), probe_name, mode.name(), algo);
+                let mut last: Option<at::SearchOutcome> = None;
+                let s = benchkit::bench(&label, WARMUP, ITERS, || {
+                    last = Some(run_search(&base, &space, &cfg, &svc, mode));
+                });
+                println!("{}", s.row());
+                let outcome = last.expect("at least one timed run");
+                let report =
+                    at::regret(&base, &space, &objective, &outcome, &xcfg).expect("oracle");
+                worst_regret = worst_regret.max(report.regret);
+                let search_sec = (s.mean_us / 1e6).max(1e-9);
+                let probes_per_sec = outcome.probes as f64 / search_sec;
+                benchkit::kv(
+                    "regret",
+                    format!(
+                        "{:.4} ({} probes, {} delta, {:.0} probes/s, speedup {:.3}x)",
+                        report.regret,
+                        outcome.probes,
+                        outcome.delta_probes,
+                        probes_per_sec,
+                        report.speedup
+                    ),
+                );
+                rows.push(
+                    Json::obj()
+                        .with("family", Json::str(family.name()))
+                        .with("probe", Json::str(probe_name))
+                        .with("probe_mode", Json::str(mode.name()))
+                        .with("algo", Json::str(algo))
+                        .with("beam", Json::num(beam as f64))
+                        .with("space_size", Json::num(report.space_size as f64))
+                        .with("fusion_bits", Json::num(bits as f64))
+                        .with("fusion_explored", Json::Bool(fusion))
+                        .with("candidates", Json::num(outcome.candidates as f64))
+                        .with("probes", Json::num(outcome.probes as f64))
+                        .with("delta_probes", Json::num(outcome.delta_probes as f64))
+                        .with("search_us", Json::num(s.mean_us))
+                        .with("probes_per_sec", Json::num(probes_per_sec))
+                        .with("chosen", Json::num(report.chosen_measured))
+                        .with("oracle_best", Json::num(report.oracle_measured))
+                        .with("regret", Json::num(report.regret))
+                        .with("speedup", Json::num(report.speedup))
+                        .with("speedup_per_sec", Json::num((report.speedup - 1.0) / search_sec)),
+                );
+            }
+        }
+    }
+
+    benchkit::section("E10 summary");
+    benchkit::kv("worst regret", format!("{worst_regret:.4}"));
+    benchkit::kv(
+        "sim-probe regret == 1.0 wherever the beam covers the space",
+        if probe_name == "sim" { "expected" } else { "n/a (served probes)" },
+    );
+
+    let doc = Json::obj()
+        .with("bench", Json::str("e10_autotune"))
+        .with(
+            "note",
+            Json::str(
+                "Guided schedule search (greedy vs beam) over unroll x tile x fusion \
+                 spaces, scored by cold and delta probes, with the sim oracle \
+                 exhaustively scoring each space for measured regret. `probe` names \
+                 the backend that answered (service needs artifacts/). Run `cargo \
+                 bench --bench e10_autotune` from rust/ to refresh.",
+            ),
+        )
+        .with("objective", Json::str(objective.to_string()))
+        .with("served", Json::Bool(svc.is_some()))
+        .with("iters", Json::num(ITERS as f64))
+        .with("scenarios", Json::Arr(rows))
+        .with("worst_regret", Json::num(worst_regret));
+    let out = repo_root().join("BENCH_autotune.json");
+    match std::fs::write(&out, doc.to_string()) {
+        Ok(()) => println!("\nrecorded {out:?}"),
+        Err(e) => eprintln!("\ncould not write {out:?}: {e}"),
+    }
+}

@@ -1,0 +1,34 @@
+//! Cost-model-guided schedule search — the loop the paper exists to
+//! close.
+//!
+//! The paper's model is built to *guide* fusion / tiling / unroll
+//! decisions; this subsystem is the client that does the guiding:
+//!
+//! - [`space`] enumerates schedule candidates over a declared
+//!   [`SearchSpace`] (elementwise unroll factors, MXU tile edges,
+//!   per-group fusion on/off), each rendered back to MLIR text so
+//!   candidates are ordinary servable queries;
+//! - [`search`](mod@search) ranks them greedily or with beam search by
+//!   probing a cost model — the sim itself ([`SimProbe`]), an
+//!   in-process [`ServiceProbe`], or a remote [`ClientProbe`] — using
+//!   batched cold probes (`mlir_batch`) or near-duplicate delta probes
+//!   (`session_open` + `mlir_delta`);
+//! - [`oracle`] sim-scores the winner and, on small spaces, the whole
+//!   space, reporting **measured regret** (chosen cost ÷ true optimum)
+//!   and speedup found per second of search.
+//!
+//! Driven by the `mlir-cost autotune` CLI subcommand and
+//! `benches/e10_autotune.rs`.
+
+pub mod oracle;
+pub mod search;
+pub mod space;
+
+pub use oracle::{exhaustive, measure, measure_labels, regret, OracleReport};
+pub use search::{
+    search, ClientProbe, CostProbe, Objective, ProbeMode, Scored, SearchConfig, SearchOutcome,
+    ServiceProbe, SimProbe,
+};
+pub use space::{
+    annotate, decode, enumerate, fusable_count, render, Candidate, Knobs, Schedule, SearchSpace,
+};

@@ -1,0 +1,540 @@
+//! Greedy / beam-search schedule drivers ranking candidates with a
+//! served cost model.
+//!
+//! The search is staged over knob dimensions — each per-group fusion
+//! bit, then the unroll factor, then the MXU tile edge. Every stage
+//! expands the surviving configurations along one dimension, probes the
+//! rendered texts through a [`CostProbe`], and keeps the `beam` best by
+//! the [`Objective`] with a deterministic tie-break on the knob key, so
+//! a fixed seed + space chooses a byte-identical schedule on every run.
+//! Greedy search is simply `beam = 1`.
+//!
+//! Probes are ordinary serving traffic: batched cold probes ride
+//! `predict_many` / `mlir_batch`, near-duplicate probes ride
+//! `session_open` + `mlir_delta` — nothing autotune-specific exists on
+//! the wire.
+
+use super::space::{self, Candidate, Knobs, SearchSpace};
+use crate::coordinator::server::Client;
+use crate::coordinator::session::Delta;
+use crate::coordinator::Service;
+use crate::mlir::Function;
+use crate::sim::{ground_truth_with_groups, Target, XpuConfig};
+use anyhow::{anyhow, bail, ensure, Result};
+use std::collections::BTreeSet;
+use std::fmt;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// What the search minimizes: a primary characteristic, subject to
+/// upper-bound caps on others (all served from one `PredVec` bundle).
+///
+/// Text form: `cycles;regpressure<=64` — first token names the target
+/// to minimize, each further `;`-separated token is a `target<=cap`
+/// constraint. A candidate violating any cap scores `+inf` (infeasible).
+#[derive(Debug, Clone)]
+pub struct Objective {
+    pub minimize: Target,
+    pub constraints: Vec<(Target, f64)>,
+}
+
+impl Objective {
+    /// Minimize one characteristic, unconstrained.
+    pub fn minimize(target: Target) -> Objective {
+        Objective { minimize: target, constraints: Vec::new() }
+    }
+
+    /// Parse the `primary[;target<=cap]...` text form.
+    pub fn parse(s: &str) -> Result<Objective> {
+        let mut parts = s.split(';').map(str::trim).filter(|p| !p.is_empty());
+        let first = parts.next().ok_or_else(|| anyhow!("empty objective"))?;
+        let minimize = Target::parse(first)
+            .ok_or_else(|| anyhow!("unknown objective target {first:?}"))?;
+        let mut constraints = Vec::new();
+        for p in parts {
+            let (name, cap) = p
+                .split_once("<=")
+                .ok_or_else(|| anyhow!("constraint must be `target<=cap`, got {p:?}"))?;
+            let t = Target::parse(name.trim())
+                .ok_or_else(|| anyhow!("unknown constraint target {name:?}"))?;
+            let cap: f64 =
+                cap.trim().parse().map_err(|e| anyhow!("bad constraint cap {cap:?}: {e}"))?;
+            constraints.push((t, cap));
+        }
+        Ok(Objective { minimize, constraints })
+    }
+
+    /// Every characteristic a probe must return, primary first.
+    pub fn required(&self) -> Vec<Target> {
+        let mut out = vec![self.minimize];
+        for &(t, _) in &self.constraints {
+            if !out.contains(&t) {
+                out.push(t);
+            }
+        }
+        out
+    }
+
+    /// Scalar score of one candidate from its predicted (or measured)
+    /// characteristic values — lower is better, `+inf` = infeasible.
+    pub fn score(&self, value_of: impl Fn(Target) -> Option<f64>) -> f64 {
+        for &(t, cap) in &self.constraints {
+            match value_of(t) {
+                Some(v) if v <= cap => {}
+                _ => return f64::INFINITY,
+            }
+        }
+        value_of(self.minimize).unwrap_or(f64::INFINITY)
+    }
+}
+
+impl fmt::Display for Objective {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.minimize.name())?;
+        for (t, cap) in &self.constraints {
+            write!(f, ";{}<={cap}", t.name())?;
+        }
+        Ok(())
+    }
+}
+
+/// How a serving-backed probe issues its queries.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ProbeMode {
+    /// Batched full-text probes (`predict_many` / `mlir_batch`).
+    Cold,
+    /// `session_open` on the first candidate, `mlir_delta` (full-text
+    /// form, server-side line diff, no rebase) for every sibling.
+    Delta,
+}
+
+impl ProbeMode {
+    pub fn name(self) -> &'static str {
+        match self {
+            ProbeMode::Cold => "cold",
+            ProbeMode::Delta => "delta",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ProbeMode> {
+        match s {
+            "cold" => Some(ProbeMode::Cold),
+            "delta" => Some(ProbeMode::Delta),
+            _ => None,
+        }
+    }
+}
+
+/// A cost model the search can rank candidates with.
+pub trait CostProbe {
+    /// One predicted value per requested target, per text, input order.
+    fn probe(&mut self, texts: &[String], targets: &[Target]) -> Result<Vec<Vec<f64>>>;
+
+    /// Probes that rode the session/delta path so far.
+    fn delta_probes(&self) -> u64 {
+        0
+    }
+
+    /// Per-search telemetry hook — serving-backed probes mirror these
+    /// into the service's stats counters.
+    fn record_search(&self, _candidates: u64, _elapsed_ns: u64) {}
+}
+
+/// The artifact-free perfect model: scores candidates with the sim
+/// ground truth itself. Zero-regret reference for tests and the
+/// offline CLI default.
+#[derive(Debug, Default)]
+pub struct SimProbe {
+    pub cfg: XpuConfig,
+}
+
+impl SimProbe {
+    pub fn new() -> SimProbe {
+        SimProbe::default()
+    }
+}
+
+impl CostProbe for SimProbe {
+    fn probe(&mut self, texts: &[String], targets: &[Target]) -> Result<Vec<Vec<f64>>> {
+        texts
+            .iter()
+            .map(|t| {
+                let sched = space::decode(t)?;
+                let labels =
+                    ground_truth_with_groups(&sched.func, &sched.opts, &sched.groups, &self.cfg)?;
+                Ok(targets.iter().map(|tg| tg.of(&labels)).collect())
+            })
+            .collect()
+    }
+}
+
+/// In-process probe against a running [`Service`] — the same code path
+/// wire queries take, minus the socket. Increments the service's
+/// `search_*` counters.
+pub struct ServiceProbe {
+    svc: Arc<Service>,
+    mode: ProbeMode,
+    /// Delta mode: the session opened on the first text probed.
+    session: Option<u64>,
+    delta_probes: u64,
+}
+
+impl ServiceProbe {
+    pub fn new(svc: Arc<Service>, mode: ProbeMode) -> ServiceProbe {
+        ServiceProbe { svc, mode, session: None, delta_probes: 0 }
+    }
+
+    /// Close the delta session, if one was opened.
+    pub fn finish(&mut self) {
+        if let Some(id) = self.session.take() {
+            self.svc.session_close(id);
+        }
+    }
+}
+
+impl CostProbe for ServiceProbe {
+    fn probe(&mut self, texts: &[String], targets: &[Target]) -> Result<Vec<Vec<f64>>> {
+        ensure!(!targets.is_empty(), "probe needs at least one target");
+        let primary = targets[0];
+        self.svc.stats.search_probes.fetch_add(texts.len() as u64, Ordering::Relaxed);
+        let row = |p: &crate::coordinator::RoutedPrediction| -> Result<Vec<f64>> {
+            targets
+                .iter()
+                .map(|&t| {
+                    p.value_for(t)
+                        .ok_or_else(|| anyhow!("variant does not serve target {}", t.name()))
+                })
+                .collect()
+        };
+        match self.mode {
+            ProbeMode::Cold => {
+                let refs: Vec<&str> = texts.iter().map(String::as_str).collect();
+                self.svc
+                    .predict_many_full(primary, &refs, None, targets)
+                    .into_iter()
+                    .map(|r| row(&r?))
+                    .collect()
+            }
+            ProbeMode::Delta => texts
+                .iter()
+                .map(|text| {
+                    if let Some(id) = self.session {
+                        let out = self.svc.predict_delta(
+                            id,
+                            Delta::Full(text.clone()),
+                            false,
+                            None,
+                            targets,
+                        )?;
+                        self.delta_probes += 1;
+                        self.svc.stats.search_delta_probes.fetch_add(1, Ordering::Relaxed);
+                        row(&out.prediction)
+                    } else {
+                        let opened = self.svc.session_open(primary, text, None, targets)?;
+                        self.session = Some(opened.session_id);
+                        row(&opened.prediction)
+                    }
+                })
+                .collect(),
+        }
+    }
+
+    fn delta_probes(&self) -> u64 {
+        self.delta_probes
+    }
+
+    fn record_search(&self, candidates: u64, elapsed_ns: u64) {
+        self.svc.stats.search_candidates.fetch_add(candidates, Ordering::Relaxed);
+        self.svc.stats.search_ns.fetch_add(elapsed_ns, Ordering::Relaxed);
+    }
+}
+
+impl Drop for ServiceProbe {
+    fn drop(&mut self) {
+        self.finish();
+    }
+}
+
+/// Remote probe over the wire [`Client`] — what `mlir-cost autotune
+/// --probe ADDR` uses. Cold probes ride `mlir_batch` (single-target
+/// objectives) or per-text `predict_multi` (constrained objectives);
+/// delta probes ride `session_open` + `mlir_delta`, whose wire response
+/// carries only the primary prediction, so delta mode requires an
+/// unconstrained objective.
+pub struct ClientProbe {
+    client: Client,
+    mode: ProbeMode,
+    session: Option<u64>,
+    delta_probes: u64,
+}
+
+impl ClientProbe {
+    pub fn connect(addr: &str, mode: ProbeMode) -> Result<ClientProbe> {
+        Ok(ClientProbe { client: Client::connect(addr)?, mode, session: None, delta_probes: 0 })
+    }
+
+    pub fn finish(&mut self) {
+        if let Some(id) = self.session.take() {
+            let _ = self.client.session_close(id);
+        }
+    }
+}
+
+impl CostProbe for ClientProbe {
+    fn probe(&mut self, texts: &[String], targets: &[Target]) -> Result<Vec<Vec<f64>>> {
+        ensure!(!targets.is_empty(), "probe needs at least one target");
+        let primary = targets[0];
+        match self.mode {
+            ProbeMode::Cold if targets.len() == 1 => {
+                let refs: Vec<&str> = texts.iter().map(String::as_str).collect();
+                self.client
+                    .predict_many(primary, &refs)?
+                    .into_iter()
+                    .map(|r| r.map(|v| vec![v]))
+                    .collect()
+            }
+            ProbeMode::Cold => texts
+                .iter()
+                .map(|text| {
+                    let preds = self.client.predict_multi(primary, text, targets)?;
+                    targets
+                        .iter()
+                        .map(|&t| {
+                            preds.iter().find(|(pt, _)| *pt == t).map(|&(_, v)| v).ok_or_else(
+                                || anyhow!("server did not answer target {}", t.name()),
+                            )
+                        })
+                        .collect()
+                })
+                .collect(),
+            ProbeMode::Delta => {
+                ensure!(
+                    targets.len() == 1,
+                    "delta probes answer only the primary target on the wire — \
+                     use cold probes for constrained objectives"
+                );
+                texts
+                    .iter()
+                    .map(|text| {
+                        if let Some(id) = self.session {
+                            let (v, _, _) = self.client.predict_delta_full(id, text, false)?;
+                            self.delta_probes += 1;
+                            Ok(vec![v])
+                        } else {
+                            let (id, v) = self.client.session_open(primary, text)?;
+                            self.session = Some(id);
+                            Ok(vec![v])
+                        }
+                    })
+                    .collect()
+            }
+        }
+    }
+
+    fn delta_probes(&self) -> u64 {
+        self.delta_probes
+    }
+}
+
+impl Drop for ClientProbe {
+    fn drop(&mut self) {
+        self.finish();
+    }
+}
+
+/// Search knobs: beam width (1 = greedy) and the objective.
+#[derive(Debug, Clone)]
+pub struct SearchConfig {
+    pub beam: usize,
+    pub objective: Objective,
+}
+
+/// One probed candidate with its objective score and the raw predicted
+/// characteristic values behind it.
+#[derive(Debug, Clone)]
+pub struct Scored {
+    pub candidate: Candidate,
+    pub score: f64,
+    pub values: Vec<(Target, f64)>,
+}
+
+/// What a search run found and what it cost.
+#[derive(Debug)]
+pub struct SearchOutcome {
+    /// The model-chosen schedule.
+    pub best: Scored,
+    /// Every candidate probed, in search order.
+    pub evaluated: Vec<Scored>,
+    /// Distinct candidates rendered and probed.
+    pub candidates: u64,
+    /// Model probes issued (== candidates; cold and delta both count).
+    pub probes: u64,
+    /// Probes that rode the session/delta path.
+    pub delta_probes: u64,
+    pub elapsed_ns: u64,
+}
+
+fn score_batch(
+    base: &Function,
+    knobs: &[Knobs],
+    targets: &[Target],
+    objective: &Objective,
+    probe: &mut dyn CostProbe,
+    evaluated: &mut Vec<Scored>,
+) -> Result<Vec<Scored>> {
+    if knobs.is_empty() {
+        return Ok(Vec::new());
+    }
+    let cands: Vec<Candidate> = knobs.iter().map(|k| space::render(base, k)).collect();
+    let texts: Vec<String> = cands.iter().map(|c| c.text.clone()).collect();
+    let rows = probe.probe(&texts, targets)?;
+    ensure!(
+        rows.len() == texts.len(),
+        "probe returned {} rows for {} texts",
+        rows.len(),
+        texts.len()
+    );
+    let mut out = Vec::with_capacity(cands.len());
+    for (cand, r) in cands.into_iter().zip(rows) {
+        ensure!(
+            r.len() == targets.len(),
+            "probe row has {} values for {} targets",
+            r.len(),
+            targets.len()
+        );
+        let values: Vec<(Target, f64)> = targets.iter().copied().zip(r).collect();
+        let score = objective.score(|t| values.iter().find(|(vt, _)| *vt == t).map(|&(_, v)| v));
+        let s = Scored { candidate: cand, score, values };
+        evaluated.push(s.clone());
+        out.push(s);
+    }
+    Ok(out)
+}
+
+/// Keep the `beam` best of parents + freshly scored, ordered by
+/// (score, knob key) — the key tie-break makes the survivor set, and
+/// therefore the chosen schedule, deterministic.
+fn select(mut pool: Vec<Scored>, beam: usize) -> Vec<Scored> {
+    pool.sort_by(|a, b| {
+        a.score
+            .total_cmp(&b.score)
+            .then_with(|| a.candidate.knobs.key().cmp(&b.candidate.knobs.key()))
+    });
+    pool.truncate(beam);
+    pool
+}
+
+/// Run the staged beam search. `cfg.beam == 1` is greedy descent.
+pub fn search(
+    base: &Function,
+    sp: &SearchSpace,
+    cfg: &SearchConfig,
+    probe: &mut dyn CostProbe,
+) -> Result<SearchOutcome> {
+    ensure!(cfg.beam >= 1, "beam width must be >= 1");
+    let start = Instant::now();
+    let targets = cfg.objective.required();
+    let k = sp.fusion_bits(base);
+    let unrolls = sp.unroll_options();
+    let tiles = sp.tile_options();
+
+    let mut evaluated: Vec<Scored> = Vec::new();
+    let mut seen: BTreeSet<String> = BTreeSet::new();
+
+    let init = Knobs::initial(sp, base);
+    seen.insert(init.key());
+    let mut beam = score_batch(base, &[init], &targets, &cfg.objective, probe, &mut evaluated)?;
+
+    // Stage 1..k: each fusion decision in turn.
+    for bit in 0..k {
+        let mut fresh: Vec<Knobs> = Vec::new();
+        for s in &beam {
+            for keep in [true, false] {
+                let mut kn = s.candidate.knobs.clone();
+                kn.fuse_mask[bit] = keep;
+                if seen.insert(kn.key()) {
+                    fresh.push(kn);
+                }
+            }
+        }
+        let scored = score_batch(base, &fresh, &targets, &cfg.objective, probe, &mut evaluated)?;
+        beam = select([beam, scored].concat(), cfg.beam);
+    }
+
+    // Unroll stage.
+    let mut fresh: Vec<Knobs> = Vec::new();
+    for s in &beam {
+        for &u in &unrolls {
+            let kn = Knobs { unroll: u, ..s.candidate.knobs.clone() };
+            if seen.insert(kn.key()) {
+                fresh.push(kn);
+            }
+        }
+    }
+    let scored = score_batch(base, &fresh, &targets, &cfg.objective, probe, &mut evaluated)?;
+    beam = select([beam, scored].concat(), cfg.beam);
+
+    // Tile stage.
+    let mut fresh: Vec<Knobs> = Vec::new();
+    for s in &beam {
+        for &t in &tiles {
+            let kn = Knobs { tile: t, ..s.candidate.knobs.clone() };
+            if seen.insert(kn.key()) {
+                fresh.push(kn);
+            }
+        }
+    }
+    let scored = score_batch(base, &fresh, &targets, &cfg.objective, probe, &mut evaluated)?;
+    beam = select([beam, scored].concat(), cfg.beam);
+
+    let best = beam.first().cloned().ok_or_else(|| anyhow!("empty beam — no candidates"))?;
+    if best.score.is_infinite() {
+        bail!("no feasible schedule in the space for objective `{}`", cfg.objective);
+    }
+    let candidates = evaluated.len() as u64;
+    let elapsed_ns = start.elapsed().as_nanos() as u64;
+    probe.record_search(candidates, elapsed_ns);
+    Ok(SearchOutcome {
+        best,
+        candidates,
+        probes: candidates,
+        delta_probes: probe.delta_probes(),
+        elapsed_ns,
+        evaluated,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn objective_parse_and_score() {
+        let o = Objective::parse("cycles;regpressure<=64").unwrap();
+        assert_eq!(o.minimize, Target::Cycles);
+        assert_eq!(o.constraints, vec![(Target::RegPressure, 64.0)]);
+        assert_eq!(o.required(), vec![Target::Cycles, Target::RegPressure]);
+        assert_eq!(o.to_string(), "cycles;regpressure<=64");
+        let get = |cyc: f64, rp: f64| {
+            move |t: Target| match t {
+                Target::Cycles => Some(cyc),
+                Target::RegPressure => Some(rp),
+                _ => None,
+            }
+        };
+        assert_eq!(o.score(get(1000.0, 32.0)), 1000.0);
+        assert!(o.score(get(1000.0, 65.0)).is_infinite(), "violated cap = infeasible");
+        assert!(Objective::parse("cycles").unwrap().constraints.is_empty());
+        assert!(Objective::parse("bogus").is_err());
+        assert!(Objective::parse("cycles;regpressure<64").is_err());
+    }
+
+    #[test]
+    fn probe_mode_names_round_trip() {
+        for m in [ProbeMode::Cold, ProbeMode::Delta] {
+            assert_eq!(ProbeMode::parse(m.name()), Some(m));
+        }
+        assert_eq!(ProbeMode::parse("warm"), None);
+    }
+}

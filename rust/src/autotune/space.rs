@@ -1,0 +1,299 @@
+//! Schedule candidate enumeration: knob vectors rendered to MLIR text.
+//!
+//! A candidate is an ordinary servable query — a clone of the base
+//! function annotated with `sched.*` attributes (`sched.unroll` /
+//! `sched.tile` on the first code-generating op, `sched.fuse = false`
+//! on each fusion-group root the schedule declines to fuse) and printed
+//! back through [`crate::mlir::print_function`]. The attributes
+//! round-trip through the parser, are ignored by shape inference, and
+//! leave [`crate::lower::fuse`]'s partition unchanged, so the SAME text
+//! drives both the served cost model and the sim oracle: [`decode`]
+//! recovers the knob vector from the text and nothing else.
+
+use crate::lower::fusion::is_noop;
+use crate::lower::{fuse, CodegenOpts, Group};
+use crate::mlir::{parse_function, print_function, Attr, Function};
+use anyhow::{bail, Result};
+
+/// Attribute carrying the elementwise-unroll factor (first non-noop op).
+pub const UNROLL_ATTR: &str = "sched.unroll";
+/// Attribute carrying the MXU tile edge (first non-noop op).
+pub const TILE_ATTR: &str = "sched.tile";
+/// `sched.fuse = false` on a group root splits that group; absent = fused.
+pub const FUSE_ATTR: &str = "sched.fuse";
+
+/// Declared search space: the knob values candidates are drawn from.
+#[derive(Debug, Clone)]
+pub struct SearchSpace {
+    /// Elementwise unroll factors ([`CodegenOpts::unroll`]).
+    pub unrolls: Vec<u32>,
+    /// MXU tile edges ([`CodegenOpts::mxu_tile`]).
+    pub tiles: Vec<i64>,
+    /// Explore per-group fusion on/off (one binary knob per group that
+    /// actually fused a tail).
+    pub fusion: bool,
+}
+
+impl Default for SearchSpace {
+    fn default() -> Self {
+        SearchSpace { unrolls: vec![1, 2, 4], tiles: vec![16, 32, 64], fusion: true }
+    }
+}
+
+impl SearchSpace {
+    /// Unroll options, never empty (empty list = the single default 1).
+    pub fn unroll_options(&self) -> Vec<u32> {
+        if self.unrolls.is_empty() { vec![1] } else { self.unrolls.clone() }
+    }
+
+    /// Tile options, never empty (empty list = the single default 32).
+    pub fn tile_options(&self) -> Vec<i64> {
+        if self.tiles.is_empty() { vec![32] } else { self.tiles.clone() }
+    }
+
+    /// Fusion decisions this space explores for `base`.
+    pub fn fusion_bits(&self, base: &Function) -> usize {
+        if self.fusion { fusable_count(base) } else { 0 }
+    }
+
+    /// Full cross-product size for `base` (saturating).
+    pub fn size(&self, base: &Function) -> usize {
+        let k = self.fusion_bits(base) as u32;
+        let masks = if k >= usize::BITS { usize::MAX } else { 1usize << k };
+        self.unroll_options().len().saturating_mul(self.tile_options().len()).saturating_mul(masks)
+    }
+}
+
+/// One point in the space: the knob vector a candidate carries.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Knobs {
+    pub unroll: u32,
+    pub tile: i64,
+    /// Per fusable group (groups of [`fuse`] that absorbed at least one
+    /// tail op, in program order): `true` keeps the fusion, `false`
+    /// splits the group into singleton ops.
+    pub fuse_mask: Vec<bool>,
+}
+
+impl Knobs {
+    /// The all-default point: first value of each dimension, everything
+    /// fused.
+    pub fn initial(space: &SearchSpace, base: &Function) -> Knobs {
+        Knobs {
+            unroll: space.unroll_options()[0],
+            tile: space.tile_options()[0],
+            fuse_mask: vec![true; space.fusion_bits(base)],
+        }
+    }
+
+    /// Deterministic identity string — dedup key and tie-break ordering.
+    pub fn key(&self) -> String {
+        let mask: String = self.fuse_mask.iter().map(|&b| if b { '1' } else { '0' }).collect();
+        format!("u{}.t{}.f{}", self.unroll, self.tile, mask)
+    }
+}
+
+/// A servable schedule candidate: knob vector + rendered MLIR text.
+#[derive(Debug, Clone)]
+pub struct Candidate {
+    pub knobs: Knobs,
+    pub text: String,
+}
+
+/// Number of per-group fusion decisions `base` exposes.
+pub fn fusable_count(base: &Function) -> usize {
+    fuse(base).iter().filter(|g| !g.fused.is_empty()).count()
+}
+
+/// Clone `base` with `knobs` written into `sched.*` attributes.
+///
+/// Only non-default decisions touch lines beyond the first op
+/// (`sched.fuse = false`), so sibling candidates differ by a handful of
+/// lines — exactly the shape the `mlir_delta` probe path is built for.
+pub fn annotate(base: &Function, knobs: &Knobs) -> Function {
+    let mut f = base.clone();
+    if let Some(first) = f.body.ops.iter().position(|op| !is_noop(op)) {
+        f.body.ops[first].attrs.set(UNROLL_ATTR, Attr::Int(knobs.unroll as i64));
+        f.body.ops[first].attrs.set(TILE_ATTR, Attr::Int(knobs.tile));
+    }
+    let fusable: Vec<usize> =
+        fuse(base).into_iter().filter(|g| !g.fused.is_empty()).map(|g| g.root).collect();
+    for (j, &root) in fusable.iter().enumerate() {
+        if !knobs.fuse_mask.get(j).copied().unwrap_or(true) {
+            f.body.ops[root].attrs.set(FUSE_ATTR, Attr::Bool(false));
+        }
+    }
+    f
+}
+
+/// Render one knob vector to a servable candidate.
+pub fn render(base: &Function, knobs: &Knobs) -> Candidate {
+    Candidate { text: print_function(&annotate(base, knobs)), knobs: knobs.clone() }
+}
+
+/// A decoded candidate: everything the oracle needs to score it exactly.
+#[derive(Debug)]
+pub struct Schedule {
+    pub func: Function,
+    /// Loop-level knobs as codegen options (`fuse` is ignored — the
+    /// partition below is authoritative).
+    pub opts: CodegenOpts,
+    /// Fusion-group partition after applying the candidate's mask.
+    pub groups: Vec<Group>,
+    pub knobs: Knobs,
+}
+
+/// Recover the schedule from candidate text. Unannotated text decodes
+/// to unroll 1 / tile 32 / everything fused.
+pub fn decode(text: &str) -> Result<Schedule> {
+    let func = parse_function(text)?;
+    let mut unroll = 1u32;
+    let mut tile = 32i64;
+    for op in &func.body.ops {
+        if let Some(u) = op.attrs.get_int(UNROLL_ATTR) {
+            unroll = u.max(1) as u32;
+        }
+        if let Some(t) = op.attrs.get_int(TILE_ATTR) {
+            tile = t.max(1);
+        }
+    }
+    let mut groups = Vec::new();
+    let mut fuse_mask = Vec::new();
+    for g in fuse(&func) {
+        if g.fused.is_empty() {
+            groups.push(g);
+            continue;
+        }
+        let keep =
+            func.body.ops[g.root].attrs.get(FUSE_ATTR).and_then(Attr::as_bool).unwrap_or(true);
+        fuse_mask.push(keep);
+        if keep {
+            groups.push(g);
+        } else {
+            let split: Vec<usize> = g.ops().collect();
+            groups.extend(split.into_iter().map(|i| Group { root: i, fused: Vec::new() }));
+        }
+    }
+    let knobs = Knobs { unroll, tile, fuse_mask };
+    let opts =
+        CodegenOpts { unroll: Some(knobs.unroll), mxu_tile: knobs.tile, ..Default::default() };
+    Ok(Schedule { func, opts, groups, knobs })
+}
+
+/// Enumerate the FULL cross product, deterministically ordered
+/// (fusion mask counting up from all-fused, then unrolls, then tiles,
+/// each in declared order). Only for exhaustively-scoreable spaces —
+/// bails past 20 fusion bits rather than materializing 2^k texts.
+pub fn enumerate(base: &Function, space: &SearchSpace) -> Result<Vec<Candidate>> {
+    let k = space.fusion_bits(base);
+    if k > 20 {
+        bail!("search space too large to enumerate: {k} fusion bits");
+    }
+    let unrolls = space.unroll_options();
+    let tiles = space.tile_options();
+    let mut out = Vec::with_capacity(space.size(base));
+    for m in 0..(1usize << k) {
+        // Bit j set = UNfuse fusable group j, so m = 0 is the all-fused
+        // default and comes first.
+        let fuse_mask: Vec<bool> = (0..k).map(|j| m >> j & 1 == 0).collect();
+        for &unroll in &unrolls {
+            for &tile in &tiles {
+                out.push(render(base, &Knobs { unroll, tile, fuse_mask: fuse_mask.clone() }));
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mlir::{verify_function, Attrs, DType, FuncBuilder, Type, XpuOp};
+    use crate::sim::{ground_truth, ground_truth_with_groups, XpuConfig};
+
+    fn t(shape: &[i64]) -> Type {
+        Type::tensor(shape.to_vec(), DType::F32)
+    }
+
+    /// matmul+relu (one fusable group) feeding an elementwise chain.
+    fn base_fn() -> Function {
+        let mut b = FuncBuilder::new("tune");
+        let x = b.arg(t(&[64, 64]));
+        let w = b.arg(t(&[64, 64]));
+        let m = b.xpu(XpuOp::MatMul, &[x, w], Attrs::new()).unwrap();
+        let r = b.xpu(XpuOp::Relu, &[m], Attrs::new()).unwrap();
+        b.ret(&[r]).unwrap()
+    }
+
+    #[test]
+    fn candidates_round_trip_and_verify() {
+        let base = base_fn();
+        assert_eq!(fusable_count(&base), 1);
+        let knobs = Knobs { unroll: 4, tile: 64, fuse_mask: vec![false] };
+        let cand = render(&base, &knobs);
+        let sched = decode(&cand.text).unwrap();
+        assert_eq!(sched.knobs, knobs, "knobs must survive print→parse");
+        verify_function(&sched.func).unwrap();
+        // Split group: matmul and relu each lower as their own group.
+        assert_eq!(sched.groups.len(), 2);
+        // Unannotated text decodes to the defaults.
+        let plain = decode(&crate::mlir::print_function(&base)).unwrap();
+        assert_eq!(plain.knobs, Knobs { unroll: 1, tile: 32, fuse_mask: vec![true] });
+        assert_eq!(plain.groups.len(), 1);
+    }
+
+    #[test]
+    fn enumerate_is_deterministic_and_complete() {
+        let base = base_fn();
+        let space = SearchSpace::default();
+        let cands = enumerate(&base, &space).unwrap();
+        assert_eq!(cands.len(), space.size(&base));
+        assert_eq!(cands.len(), 3 * 3 * 2);
+        let again = enumerate(&base, &space).unwrap();
+        for (a, b) in cands.iter().zip(&again) {
+            assert_eq!(a.text, b.text);
+            assert_eq!(a.knobs, b.knobs);
+        }
+        // All keys distinct.
+        let mut keys: Vec<String> = cands.iter().map(|c| c.knobs.key()).collect();
+        keys.sort();
+        keys.dedup();
+        assert_eq!(keys.len(), cands.len());
+        // First candidate is the all-default point.
+        assert_eq!(cands[0].knobs, Knobs::initial(&space, &base));
+    }
+
+    #[test]
+    fn decoded_schedule_scores_like_direct_opts() {
+        // The text is the only channel: sim-scoring a decoded candidate
+        // must equal lowering the clean base with the same options.
+        let base = base_fn();
+        let cfg = XpuConfig::default();
+        for (unroll, tile) in [(1u32, 16i64), (4, 64)] {
+            let cand = render(&base, &Knobs { unroll, tile, fuse_mask: vec![true] });
+            let sched = decode(&cand.text).unwrap();
+            let via_text =
+                ground_truth_with_groups(&sched.func, &sched.opts, &sched.groups, &cfg).unwrap();
+            let direct = ground_truth(
+                &base,
+                &CodegenOpts { unroll: Some(unroll), mxu_tile: tile, ..Default::default() },
+                &cfg,
+            )
+            .unwrap();
+            assert_eq!(via_text, direct, "u{unroll} t{tile}");
+        }
+        // Full-split mask ≡ the global fuse:false switch for this graph
+        // (every non-noop op its own group).
+        let cand = render(&base, &Knobs { unroll: 2, tile: 32, fuse_mask: vec![false] });
+        let sched = decode(&cand.text).unwrap();
+        let via_text =
+            ground_truth_with_groups(&sched.func, &sched.opts, &sched.groups, &cfg).unwrap();
+        let direct = ground_truth(
+            &base,
+            &CodegenOpts { fuse: false, unroll: Some(2), ..Default::default() },
+            &cfg,
+        )
+        .unwrap();
+        assert_eq!(via_text, direct);
+    }
+}

@@ -1880,6 +1880,12 @@ mod tests {
         assert_eq!(inner.req_f64("delta_bytes_rescanned").unwrap(), 0.0);
         // The multi-output counter is present (zero) from startup.
         assert_eq!(inner.req_f64("targets_not_served").unwrap(), 0.0);
+        // ...and the autotune-search counters, present (zero) before
+        // any search probes this service.
+        assert_eq!(inner.req_f64("search_candidates").unwrap(), 0.0);
+        assert_eq!(inner.req_f64("search_probes").unwrap(), 0.0);
+        assert_eq!(inner.req_f64("search_delta_probes").unwrap(), 0.0);
+        assert_eq!(inner.req_f64("search_ns").unwrap(), 0.0);
         let routed = inner.get("routed_by_variant").expect("routed_by_variant missing");
         assert_eq!(routed.req_f64("regpressure/fc_ops").unwrap(), 0.0);
         let variants = inner.get("variants").expect("variants missing");

@@ -136,6 +136,15 @@ pub struct ServiceStats {
     /// Gauge: jobs currently sitting in the offload pool's queue
     /// (incremented on enqueue, decremented when a worker dequeues).
     pub offload_queue_depth: AtomicU64,
+    /// Schedule candidates enumerated by autotune searches probing this
+    /// service in-process (the `autotune` subcommand / `ServiceProbe`).
+    pub search_candidates: AtomicU64,
+    /// Model probes those searches issued (cold and delta both count).
+    pub search_probes: AtomicU64,
+    /// Search probes that rode the session/delta path.
+    pub search_delta_probes: AtomicU64,
+    /// Total wall-clock nanoseconds spent inside autotune searches.
+    pub search_ns: AtomicU64,
     pub errors: AtomicU64,
     /// Executed flushes per compiled batch size: `exec_by_batch[b]` is
     /// how many chunks ran on the `predict_b{b}` executable. One lock
@@ -492,6 +501,19 @@ impl ServiceStats {
                 "offload_queue_depth",
                 Json::num(self.offload_queue_depth.load(Ordering::Relaxed) as f64),
             )
+            .with(
+                "search_candidates",
+                Json::num(self.search_candidates.load(Ordering::Relaxed) as f64),
+            )
+            .with(
+                "search_probes",
+                Json::num(self.search_probes.load(Ordering::Relaxed) as f64),
+            )
+            .with(
+                "search_delta_probes",
+                Json::num(self.search_delta_probes.load(Ordering::Relaxed) as f64),
+            )
+            .with("search_ns", Json::num(self.search_ns.load(Ordering::Relaxed) as f64))
             .with("exec_by_batch", {
                 let mut by_batch = Json::obj();
                 for (b, count) in self.exec_by_batch() {
@@ -592,6 +614,12 @@ mod tests {
         assert_eq!(j.req_f64("offloaded_misses").unwrap(), 0.0);
         assert_eq!(j.req_f64("io_stall_ns").unwrap(), 0.0);
         assert_eq!(j.req_f64("offload_queue_depth").unwrap(), 0.0);
+        // Autotune-search counters are present (zero) before any search
+        // probes this service — dashboards can rely on them.
+        assert_eq!(j.req_f64("search_candidates").unwrap(), 0.0);
+        assert_eq!(j.req_f64("search_probes").unwrap(), 0.0);
+        assert_eq!(j.req_f64("search_delta_probes").unwrap(), 0.0);
+        assert_eq!(j.req_f64("search_ns").unwrap(), 0.0);
         assert!(j.get("exec_by_batch").is_some());
     }
 

@@ -69,6 +69,7 @@
 //! - **L1 (Pallas, build-time)** — the stacked Conv1D+MaxPool hot path in
 //!   `python/compile/kernels/`, verified against a pure-jnp oracle.
 
+pub mod autotune;
 pub mod bundle;
 pub mod cluster;
 pub mod coordinator;

@@ -681,6 +681,15 @@ pub fn lower(f: &Function, opts: &CodegenOpts) -> Result<Program> {
             .map(|(i, _)| Group { root: i, fused: Vec::new() })
             .collect()
     };
+    lower_with_groups(f, opts, &groups)
+}
+
+/// Lower with an explicitly chosen fusion-group partition instead of
+/// the global `opts.fuse` switch. The autotuner uses this to score
+/// per-group fusion decisions: a group it declines to fuse is passed
+/// as singleton groups, everything else exactly as [`fuse`] produced
+/// it. `opts.fuse` is ignored; every other knob applies unchanged.
+pub fn lower_with_groups(f: &Function, opts: &CodegenOpts, groups: &[Group]) -> Result<Program> {
     let mut ctx = Ctx { f, opts, ra: RegAlloc::default(), prog: Program::default() };
 
     // DMA accounting: args + weight consts stream in, results stream out;
@@ -696,7 +705,7 @@ pub fn lower(f: &Function, opts: &CodegenOpts) -> Result<Program> {
     for &r in &f.ret {
         ctx.prog.dma_out_bytes += ctx.bytes(r);
     }
-    for group in &groups {
+    for group in groups {
         let result = ctx.op(group.ops().last().unwrap_or(group.root)).results.first().copied();
         if let Some(r) = result {
             let b = ctx.bytes(r);

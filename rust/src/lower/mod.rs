@@ -12,7 +12,7 @@ pub mod fusion;
 pub mod isa;
 pub mod regalloc;
 
-pub use codegen::{lower, CodegenOpts};
+pub use codegen::{lower, lower_with_groups, CodegenOpts};
 pub use fusion::{fuse, Group};
 pub use isa::{Instr, Mem, Program, Segment, SfuOp, VArith, VReg};
 pub use regalloc::{analyze, apply_spills, RegReport, VREG_CAPACITY};

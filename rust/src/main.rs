@@ -9,6 +9,7 @@
 //!   serve        — start the cost-model TCP service from bundles
 //!   predict      — one-shot prediction for an MLIR file
 //!   ground-truth — compile+simulate an MLIR file (the label path)
+//!   autotune     — cost-model-guided schedule search with measured regret
 //!   info         — artifact manifest summary
 
 use anyhow::{anyhow, bail, Context, Result};
@@ -20,7 +21,7 @@ use mlir_cost::dataset::{Dataset, EncodedSet, TargetStats};
 use mlir_cost::json::Json;
 use mlir_cost::pred::PredVec;
 use mlir_cost::runtime::{Manifest, Runtime};
-use mlir_cost::sim::{ground_truth_default, Target};
+use mlir_cost::sim::{ground_truth_default, Target, XpuConfig};
 use mlir_cost::tokenizer::{OpIdTable, Scheme, Vocab};
 use mlir_cost::train::{metrics, TrainConfig, Trainer};
 use std::collections::HashMap;
@@ -72,6 +73,7 @@ fn run(args: &[String]) -> Result<()> {
         "serve" => serve(&flags),
         "predict" => predict(&flags),
         "ground-truth" => ground_truth_cmd(&flags),
+        "autotune" => autotune(&flags),
         "info" => info(&flags),
         _ => {
             eprintln!(
@@ -88,6 +90,10 @@ fn run(args: &[String]) -> Result<()> {
                  [--peers host:port,... --node-id host:port [--vnodes 64]]\n  \
                  predict --bundle dir --file graph.mlir\n  \
                  ground-truth --file graph.mlir\n  \
+                 autotune --family mlp --seed 7 [--file graph.mlir] [--objective cycles]\n    \
+                 [--beam 4] [--probe sim|serve|host:port] [--probe-mode cold|delta]\n    \
+                 [--unrolls 1,2,4] [--tiles 16,32,64] [--fusion true] [--oracle auto|on|off]\n    \
+                 (objective syntax: primary[;target<=cap]..., e.g. cycles;regpressure<=64)\n  \
                  info [--artifacts dir]"
             );
             bail!("unknown command '{cmd}'");
@@ -504,6 +510,126 @@ fn ground_truth_cmd(flags: &HashMap<String, String>) -> Result<()> {
         "regpressure={} xpuutil={:.2}% cycles={} spills={} dyn_instrs={}",
         labels.regpressure, labels.xpu_util, labels.cycles, labels.spills, labels.dyn_instrs
     );
+    Ok(())
+}
+
+fn parse_u32_list(s: &str) -> Result<Vec<u32>> {
+    s.split(',')
+        .map(|v| v.trim().parse::<u32>().map_err(|e| anyhow!("bad list entry '{v}': {e}")))
+        .collect()
+}
+
+fn parse_i64_list(s: &str) -> Result<Vec<i64>> {
+    s.split(',')
+        .map(|v| v.trim().parse::<i64>().map_err(|e| anyhow!("bad list entry '{v}': {e}")))
+        .collect()
+}
+
+/// Cost-model-guided schedule search: enumerate `sched.*` candidates of
+/// one graph, rank them with a cost model (the sim itself, an
+/// in-process service, or a remote server), then sim-score the winner —
+/// and, on small spaces, the whole space — to report measured regret.
+fn autotune(flags: &HashMap<String, String>) -> Result<()> {
+    use mlir_cost::autotune as at;
+    // Graph under search: an MLIR file, or a generated corpus graph.
+    let func = if let Some(path) = flags.get("file") {
+        let text = std::fs::read_to_string(path).with_context(|| path.to_string())?;
+        let f = mlir_cost::mlir::parse_function(&text)?;
+        mlir_cost::mlir::verify_function(&f)?;
+        f
+    } else {
+        let family = mlir_cost::graphgen::Family::parse(flag(flags, "family", "mlp"))
+            .ok_or_else(|| anyhow!("bad --family"))?;
+        let spec = mlir_cost::graphgen::GraphSpec {
+            family,
+            structure_seed: flag(flags, "seed", "7").parse()?,
+            shape_seed: flag(flags, "shape-seed", "17").parse()?,
+        };
+        mlir_cost::graphgen::generate(&spec)?
+    };
+    let space = at::SearchSpace {
+        unrolls: parse_u32_list(flag(flags, "unrolls", "1,2,4"))?,
+        tiles: parse_i64_list(flag(flags, "tiles", "16,32,64"))?,
+        fusion: flag(flags, "fusion", "true") == "true",
+    };
+    let objective = at::Objective::parse(flag(flags, "objective", "cycles"))?;
+    let cfg =
+        at::SearchConfig { beam: flag(flags, "beam", "4").parse()?, objective: objective.clone() };
+    let mode = at::ProbeMode::parse(flag(flags, "probe-mode", "cold"))
+        .ok_or_else(|| anyhow!("--probe-mode must be 'cold' or 'delta'"))?;
+
+    let t0 = std::time::Instant::now();
+    let outcome = match flag(flags, "probe", "sim") {
+        "sim" => at::search(&func, &space, &cfg, &mut at::SimProbe::new())?,
+        "serve" => {
+            // In-process service from --bundle: the full serving path
+            // (router, caches, batcher, session tier) minus the socket.
+            let adir = artifacts_dir(flags);
+            let manifest = Arc::new(Manifest::load(&adir)?);
+            let bundle =
+                Bundle::load(Path::new(flag(flags, "bundle", "runs/bundle")), &manifest)?;
+            let svc =
+                Arc::new(Service::start(manifest, vec![bundle], BatchPolicy::default(), true)?);
+            let mut probe = at::ServiceProbe::new(svc, mode);
+            let outcome = at::search(&func, &space, &cfg, &mut probe)?;
+            probe.finish();
+            outcome
+        }
+        addr => {
+            let mut probe = at::ClientProbe::connect(addr, mode)?;
+            let outcome = at::search(&func, &space, &cfg, &mut probe)?;
+            probe.finish();
+            outcome
+        }
+    };
+    println!(
+        "chosen schedule {} (model score {:.3}, objective {objective})",
+        outcome.best.candidate.knobs.key(),
+        outcome.best.score
+    );
+    for (t, v) in &outcome.best.values {
+        println!("  predicted {} = {v:.3}", t.name());
+    }
+    println!(
+        "search: {} candidates, {} probes ({} delta) in {:.3}s",
+        outcome.candidates,
+        outcome.probes,
+        outcome.delta_probes,
+        t0.elapsed().as_secs_f64()
+    );
+
+    let size = space.size(&func);
+    let oracle_max: usize = flag(flags, "oracle-max", "512").parse()?;
+    let run_oracle = match flag(flags, "oracle", "auto") {
+        "on" => true,
+        "off" => false,
+        "auto" => size <= oracle_max,
+        other => bail!("--oracle must be auto|on|off, got '{other}'"),
+    };
+    let xcfg = XpuConfig::default();
+    if run_oracle {
+        let report = at::regret(&func, &space, &objective, &outcome, &xcfg)?;
+        println!(
+            "oracle: best {} measures {:.3} over {} schedules",
+            report.oracle_knobs.key(),
+            report.oracle_measured,
+            report.space_size
+        );
+        println!(
+            "measured regret: {:.4} (chosen {:.3} / oracle best {:.3})",
+            report.regret, report.chosen_measured, report.oracle_measured
+        );
+        println!(
+            "speedup vs default schedule: {:.3}x ({:.4} speedup found per second of search)",
+            report.speedup, report.speedup_per_sec
+        );
+    } else {
+        let measured = at::measure(&outcome.best.candidate.text, &objective, &xcfg)?;
+        println!(
+            "sim-measured chosen objective: {measured:.3} \
+             (space size {size} > --oracle-max {oracle_max}; pass --oracle on to force)"
+        );
+    }
     Ok(())
 }
 

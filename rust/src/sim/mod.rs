@@ -13,7 +13,7 @@ pub mod machine;
 pub use exec::{simulate, SimReport};
 pub use machine::{Unit, XpuConfig};
 
-use crate::lower::{analyze, apply_spills, lower, CodegenOpts};
+use crate::lower::{analyze, apply_spills, lower, lower_with_groups, CodegenOpts, Group};
 use crate::mlir::Function;
 use anyhow::Result;
 
@@ -97,6 +97,34 @@ pub fn report(f: &Function, opts: &CodegenOpts, cfg: &XpuConfig) -> Result<SimRe
 /// Single-pass report with default compiler/machine settings.
 pub fn report_default(f: &Function) -> Result<SimReport> {
     report(f, &CodegenOpts::default(), &XpuConfig::default())
+}
+
+/// [`report`] with an explicit fusion-group partition instead of the
+/// global `opts.fuse` switch — the autotune oracle's scoring path for
+/// per-group fusion decisions.
+pub fn report_with_groups(
+    f: &Function,
+    opts: &CodegenOpts,
+    groups: &[Group],
+    cfg: &XpuConfig,
+) -> Result<SimReport> {
+    let mut prog = lower_with_groups(f, opts, groups)?;
+    let reg = analyze(&prog);
+    apply_spills(&mut prog, &reg);
+    let mut sim = simulate(&prog, cfg);
+    sim.regpressure = reg.max_live;
+    sim.spills = reg.spilled;
+    Ok(sim)
+}
+
+/// [`ground_truth`] with an explicit fusion-group partition.
+pub fn ground_truth_with_groups(
+    f: &Function,
+    opts: &CodegenOpts,
+    groups: &[Group],
+    cfg: &XpuConfig,
+) -> Result<Labels> {
+    Ok(Labels::from_report(&report_with_groups(f, opts, groups, cfg)?))
 }
 
 /// Compile + allocate + simulate one function: the full ground-truth

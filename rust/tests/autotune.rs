@@ -1,0 +1,205 @@
+//! Autotune integration tests — the acceptance bar for the search loop:
+//!
+//! - **Determinism**: a fixed seed + space chooses a byte-identical
+//!   schedule on every run, across graph families (artifact-free, sim
+//!   probe).
+//! - **Bounded regret**: on exhaustively-enumerable spaces, beam >= 2
+//!   search lands within 10% of the exhaustive sim oracle (regret
+//!   <= 1.10) — artifact-free, and exact (1.0) where the staged beam
+//!   provably visits every configuration.
+//! - **Delta == cold**: against a running `Service`, the session/delta
+//!   probe path returns predictions identical to batched cold probes
+//!   for the same candidates, across families — and the `search_*`
+//!   stats counters move. Artifact-gated like every Service test.
+
+use mlir_cost::autotune::{
+    self as at, Objective, ProbeMode, SearchConfig, SearchSpace, ServiceProbe, SimProbe,
+};
+use mlir_cost::bundle::Bundle;
+use mlir_cost::coordinator::batcher::BatchPolicy;
+use mlir_cost::coordinator::Service;
+use mlir_cost::dataset::TargetStats;
+use mlir_cost::graphgen::{generate, Family, GraphSpec};
+use mlir_cost::mlir::{Attrs, DType, FuncBuilder, Function, Type, XpuOp};
+use mlir_cost::runtime::Manifest;
+use mlir_cost::sim::{Target, XpuConfig};
+use mlir_cost::tokenizer::{Scheme, Vocab};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+/// The three-family corpus every test below walks (fixed seeds).
+fn corpus() -> Vec<(Family, Function)> {
+    [Family::Mlp, Family::Resnet, Family::Bert]
+        .into_iter()
+        .enumerate()
+        .map(|(i, family)| {
+            let spec = GraphSpec {
+                family,
+                structure_seed: 9100 + i as u64,
+                shape_seed: 9200 + i as u64,
+            };
+            (family, generate(&spec).expect("graphgen"))
+        })
+        .collect()
+}
+
+/// matmul+relu: exactly one fusable group, so the full space is tiny
+/// and the beam-2 staged search provably visits all of it.
+fn matmul_relu() -> Function {
+    let mut b = FuncBuilder::new("tune");
+    let x = b.arg(Type::tensor(vec![64, 64], DType::F32));
+    let w = b.arg(Type::tensor(vec![64, 64], DType::F32));
+    let m = b.xpu(XpuOp::MatMul, &[x, w], Attrs::new()).unwrap();
+    let r = b.xpu(XpuOp::Relu, &[m], Attrs::new()).unwrap();
+    b.ret(&[r]).unwrap()
+}
+
+#[test]
+fn search_is_deterministic_across_runs() {
+    let sp = SearchSpace { unrolls: vec![1, 2, 4], tiles: vec![16, 32], fusion: true };
+    let cfg = SearchConfig { beam: 2, objective: Objective::minimize(Target::Cycles) };
+    for (family, base) in corpus() {
+        let run = || at::search(&base, &sp, &cfg, &mut SimProbe::new()).expect("search");
+        let (a, b) = (run(), run());
+        assert_eq!(
+            a.best.candidate.text,
+            b.best.candidate.text,
+            "{}: chosen schedule text must be byte-identical across runs",
+            family.name()
+        );
+        assert_eq!(a.best.candidate.knobs, b.best.candidate.knobs, "{}", family.name());
+        // The whole probe sequence replays identically, not just the
+        // winner.
+        let keys = |o: &at::SearchOutcome| {
+            o.evaluated.iter().map(|s| s.candidate.knobs.key()).collect::<Vec<_>>()
+        };
+        assert_eq!(keys(&a), keys(&b), "{}: probe order drifted", family.name());
+        assert_eq!(a.probes, a.candidates);
+        assert_eq!(a.delta_probes, 0, "sim probe never rides the delta path");
+    }
+}
+
+/// Acceptance bar: seeded small space, beam >= 2, regret <= 1.10 vs the
+/// exhaustive sim oracle — artifact-free. The spaces are shaped so the
+/// staged beam visits every configuration (single-point tile dimension,
+/// or beam = |unrolls|), which with the perfect sim probe pins regret
+/// at exactly 1.0; the 1.10 assertion is the bar the issue names.
+#[test]
+fn beam_search_regret_is_bounded_on_enumerable_spaces() {
+    let xcfg = XpuConfig::default();
+    let objective = Objective::minimize(Target::Cycles);
+
+    // One fusable group, fusion explored: 3 unrolls x 1 tile x 2 masks.
+    let base = matmul_relu();
+    let sp = SearchSpace { unrolls: vec![1, 2, 4], tiles: vec![32], fusion: true };
+    let cfg = SearchConfig { beam: 2, objective: objective.clone() };
+    let outcome = at::search(&base, &sp, &cfg, &mut SimProbe::new()).unwrap();
+    let report = at::regret(&base, &sp, &objective, &outcome, &xcfg).unwrap();
+    assert_eq!(report.space_size, 6);
+    assert_eq!(outcome.candidates as usize, report.space_size, "beam 2 must cover this space");
+    assert!(report.regret <= 1.10, "regret {} > 1.10", report.regret);
+    assert!((report.regret - 1.0).abs() < 1e-12, "full coverage => exact optimum");
+    assert!(report.speedup_per_sec.is_finite());
+
+    // Every family, fusion fixed: unroll stage scores the whole unroll
+    // axis, beam = |unrolls| carries all of it into the tile stage, so
+    // all |unrolls| x |tiles| configurations are probed.
+    for (family, base) in corpus() {
+        let sp = SearchSpace { unrolls: vec![1, 2, 4], tiles: vec![16, 32, 64], fusion: false };
+        let cfg = SearchConfig { beam: 3, objective: objective.clone() };
+        let outcome = at::search(&base, &sp, &cfg, &mut SimProbe::new()).unwrap();
+        let report = at::regret(&base, &sp, &objective, &outcome, &xcfg).unwrap();
+        assert_eq!(report.space_size, 9, "{}", family.name());
+        assert_eq!(outcome.candidates, 9, "{}: beam 3 must cover the 3x3 grid", family.name());
+        assert!(
+            report.regret <= 1.10,
+            "{}: regret {} > 1.10 (chosen {:?}, oracle {:?})",
+            family.name(),
+            report.regret,
+            report.chosen_knobs,
+            report.oracle_knobs
+        );
+        assert!(report.chosen_measured >= report.oracle_measured - 1e-9, "{}", family.name());
+    }
+}
+
+fn artifacts_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).parent().unwrap().join("artifacts")
+}
+
+/// One conv_full variant (max_len 512 — covers every family graph here)
+/// serving Cycles, untrained weights: predictions are garbage but
+/// deterministic, which is exactly what probe-path equality needs.
+fn service() -> Option<Arc<Service>> {
+    let adir = artifacts_dir();
+    if !adir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    let manifest = Arc::new(Manifest::load(&adir).unwrap());
+    let vocab = Vocab::build(vec![vec!["xpu.relu".to_string()]].iter(), 1);
+    let stats = TargetStats { mean: 20.0, std: 5.0, min: 4.0, max: 60.0 };
+    let bundle =
+        Bundle::untrained(&manifest, "conv_full", Target::Cycles, Scheme::OpsOnly, vocab, stats)
+            .unwrap();
+    Some(Arc::new(Service::start(manifest, vec![bundle], BatchPolicy::default(), true).unwrap()))
+}
+
+/// Delta probes must predict exactly what cold probes predict: the
+/// spliced id rows are byte-identical to the full pipeline (pinned by
+/// tests/incremental.rs), so the model sees the same input either way.
+#[test]
+fn delta_probes_match_cold_probes_across_families() {
+    let Some(svc) = service() else { return };
+    let sp = SearchSpace { unrolls: vec![1, 2, 4], tiles: vec![16, 32], fusion: true };
+    let cfg = SearchConfig { beam: 2, objective: Objective::minimize(Target::Cycles) };
+    for (family, base) in corpus() {
+        let run = |mode: ProbeMode| {
+            let mut probe = ServiceProbe::new(svc.clone(), mode);
+            let outcome = at::search(&base, &sp, &cfg, &mut probe).expect("served search");
+            probe.finish();
+            outcome
+        };
+        let cold = run(ProbeMode::Cold);
+        let delta = run(ProbeMode::Delta);
+
+        assert_eq!(cold.delta_probes, 0, "{}", family.name());
+        assert_eq!(
+            delta.delta_probes,
+            delta.probes - 1,
+            "{}: every probe after session_open rides mlir_delta",
+            family.name()
+        );
+        assert_eq!(cold.probes, delta.probes, "{}: same space, same probe count", family.name());
+
+        // Identical predictions candidate-by-candidate, and therefore
+        // an identical chosen schedule.
+        assert_eq!(cold.evaluated.len(), delta.evaluated.len(), "{}", family.name());
+        for (c, d) in cold.evaluated.iter().zip(&delta.evaluated) {
+            assert_eq!(c.candidate.knobs, d.candidate.knobs, "{}", family.name());
+            assert_eq!(
+                c.values,
+                d.values,
+                "{} {}: delta prediction diverged from cold",
+                family.name(),
+                c.candidate.knobs.key()
+            );
+        }
+        assert_eq!(
+            cold.best.candidate.text,
+            delta.best.candidate.text,
+            "{}: probe mode changed the chosen schedule",
+            family.name()
+        );
+    }
+
+    // The search counters moved: every probe of every search above.
+    assert!(svc.stats.search_candidates.load(Ordering::Relaxed) > 0);
+    assert!(svc.stats.search_delta_probes.load(Ordering::Relaxed) > 0);
+    assert!(
+        svc.stats.search_probes.load(Ordering::Relaxed)
+            >= svc.stats.search_delta_probes.load(Ordering::Relaxed)
+    );
+    assert!(svc.stats.search_ns.load(Ordering::Relaxed) > 0);
+}

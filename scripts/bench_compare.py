@@ -20,6 +20,12 @@ compared leaf-by-leaf (objects by key, scenario arrays by index):
   way) fails with exit 1. Improvements and in-threshold noise print as
   information only.
 
+A file present on only ONE side (committed baseline with no fresh
+counterpart, or a fresh file with no baseline — e.g. a brand-new bench)
+compares nothing; both directions warn on stderr, and --require-both
+turns either into a failure so CI catches a bench silently dropping out
+of the run.
+
 CI runs this self-referentially (`bench_compare.py . .`) as a smoke
 test: every committed bench file must parse and identity-compare clean.
 """
@@ -102,6 +108,12 @@ def main():
         default=0.25,
         help="allowed fractional regression per metric (default 0.25 = 25%%)",
     )
+    ap.add_argument(
+        "--require-both",
+        action="store_true",
+        help="fail (exit 1) when a BENCH_*.json exists on only one side, "
+        "instead of just warning — CI mode",
+    )
     args = ap.parse_args()
     base_files = {p.name: p for p in sorted(args.baseline.glob("BENCH_*.json"))}
     fresh_files = {p.name: p for p in sorted(args.fresh.glob("BENCH_*.json"))}
@@ -110,10 +122,22 @@ def main():
         return 1
     regressions, notes = [], []
     compared = []
+    one_sided = [
+        f"{name}: in baseline but missing from the fresh run"
+        for name in base_files
+        if name not in fresh_files
+    ] + [
+        f"{name}: in fresh run but has no committed baseline"
+        for name in sorted(fresh_files)
+        if name not in base_files
+    ]
+    for line in one_sided:
+        print(f"warning: {line} — nothing compared", file=sys.stderr)
+    if args.require_both:
+        regressions += [f"{line} (--require-both)" for line in one_sided]
     for name, base_path in base_files.items():
         fresh_path = fresh_files.get(name)
         if fresh_path is None:
-            notes.append(f"{name}: not in fresh run (skipped)")
             continue
         try:
             base_doc = json.loads(base_path.read_text(encoding="utf-8"))

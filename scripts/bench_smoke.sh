@@ -1,6 +1,6 @@
 #!/usr/bin/env bash
 # Bench smoke: every bench target must still RUN end to end, not just
-# compile. Builds all e1-e9 bench binaries, then — when model artifacts
+# compile. Builds all e1-e10 bench binaries, then — when model artifacts
 # are present — runs each one under MLIR_COST_SMOKE=1, which makes
 # benchkit clamp every iteration count to a tiny budget so the full
 # suite finishes in seconds. Smoke numbers are execution evidence, not
@@ -22,6 +22,7 @@ benches=(
   e7_cluster
   e8_router
   e9_incremental
+  e10_autotune
 )
 
 echo "== building all bench targets =="

@@ -87,6 +87,59 @@ def serving_offload_errors(doc, stem):
             yield (f"{stem}.offload_scenarios", f"no {mode!r} row")
 
 
+# Column set of the autotune scenario table in BENCH_autotune.json:
+# one row per family x probe mode x algorithm, diffed across PRs for
+# search quality (regret) and throughput (probes_per_sec).
+AUTOTUNE_KEYS = {
+    "family",
+    "probe",
+    "probe_mode",
+    "algo",
+    "beam",
+    "space_size",
+    "fusion_bits",
+    "fusion_explored",
+    "candidates",
+    "probes",
+    "delta_probes",
+    "search_us",
+    "probes_per_sec",
+    "chosen",
+    "oracle_best",
+    "regret",
+    "speedup",
+    "speedup_per_sec",
+}
+
+
+def autotune_errors(doc, stem):
+    """e10_autotune-specific: the scenarios table must exist, keep its
+    column set (regret + probes_per_sec included), span >= 3 graph
+    families, and carry rows for BOTH probe modes (cold and delta)."""
+    rows = doc.get("scenarios")
+    if not isinstance(rows, list) or not rows:
+        yield (f"{stem}.scenarios", "missing/empty array")
+        return
+    modes, families = set(), set()
+    for i, row in enumerate(rows):
+        if not isinstance(row, dict):
+            yield (f"{stem}.scenarios[{i}]", "not an object")
+            continue
+        missing = AUTOTUNE_KEYS - set(row)
+        if missing:
+            yield (f"{stem}.scenarios[{i}]", f"missing keys {sorted(missing)}")
+        modes.add(row.get("probe_mode"))
+        families.add(row.get("family"))
+    for mode in ("cold", "delta"):
+        if mode not in modes:
+            yield (f"{stem}.scenarios", f"no probe_mode {mode!r} row")
+    if len(families) < 3:
+        yield (
+            f"{stem}.scenarios",
+            f"only {len(families)} graph families (need >= 3)",
+        )
+
+
 def check_file(root: Path, path: Path) -> int:
     rel = path.relative_to(root)
     try:
@@ -117,6 +170,10 @@ def check_file(root: Path, path: Path) -> int:
         errors += 1
     if bench == "e3_serving":
         for leaf_path, msg in serving_offload_errors(doc, path.stem):
+            print(f"{rel}: {leaf_path}: {msg}", file=sys.stderr)
+            errors += 1
+    if bench == "e10_autotune":
+        for leaf_path, msg in autotune_errors(doc, path.stem):
             print(f"{rel}: {leaf_path}: {msg}", file=sys.stderr)
             errors += 1
     return errors

@@ -1,0 +1,78 @@
+#!/usr/bin/env bash
+# Full bench run: build and execute every e1-e10 bench target at real
+# iteration counts, letting each one OVERWRITE its committed
+# BENCH_*.json at the repo root with measured numbers — then self-check
+# the fresh results against the pre-run baselines with bench_compare.py
+# (--require-both: a bench that stops producing its file is an error).
+#
+# This is the `make bench` target. The smoke-mode twin that CI runs is
+# scripts/bench_smoke.sh (tiny iteration counts, results restored).
+#
+# Model-gated benches (e1-e5, e7-e8, and the served scenarios of e10)
+# need artifacts/; without them this script still runs the front-end
+# benches but warns that the rest were skipped.
+#
+# Usage: bash scripts/run_benches.sh [--threshold 0.25]
+#        (from anywhere; cds to repo root; extra args pass through to
+#        bench_compare.py)
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+benches=(
+  e1_rmse_table
+  e2_fig6
+  e3_serving
+  e4_model_latency
+  e5_ablation
+  e6_frontend
+  e7_cluster
+  e8_router
+  e9_incremental
+  e10_autotune
+)
+
+# Benches that refuse to run without model artifacts. The rest measure
+# the front end / sim only (e10 falls back to its sim probe backend).
+model_gated=(e1_rmse_table e2_fig6 e3_serving e4_model_latency e5_ablation e7_cluster e8_router)
+
+have_artifacts=1
+if [[ ! -f artifacts/manifest.json ]]; then
+  have_artifacts=0
+  echo "== artifacts/ absent: model-gated benches will be skipped =="
+fi
+
+echo "== building all bench targets =="
+(cd rust && cargo build --release --benches)
+
+# Snapshot the committed baselines so the fresh run can be diffed
+# against them after the benches overwrite the real files.
+baseline="$(mktemp -d)"
+cp BENCH_*.json "$baseline"/ 2>/dev/null || true
+cleanup() { rm -rf "$baseline"; }
+trap cleanup EXIT
+
+skipped=()
+for b in "${benches[@]}"; do
+  if [[ $have_artifacts -eq 0 ]] && printf '%s\n' "${model_gated[@]}" | grep -qx "$b"; then
+    skipped+=("$b")
+    continue
+  fi
+  echo "== bench: $b =="
+  (cd rust && cargo bench --bench "$b")
+done
+
+if ((${#skipped[@]})); then
+  echo "== skipped (artifacts absent): ${skipped[*]} =="
+fi
+
+echo "== schema check on the fresh results =="
+python3 scripts/check_bench_schema.py
+
+echo "== fresh run vs pre-run baselines =="
+# One-sided files fail only when everything ran; on a partial (artifact-
+# less) run the unrefreshed baselines still compare clean against
+# themselves because the benches overwrite in place.
+python3 scripts/bench_compare.py "$baseline" . --require-both "$@"
+
+echo "== bench run OK (${#benches[@]} targets, ${#skipped[@]} skipped) =="
