@@ -1,0 +1,200 @@
+//! E11 — admission & tenancy benchmark: what tenant tagging buys an
+//! interactive client sharing the offload pool with a flood. A fleet
+//! of flooding connections keeps the request-worker pool saturated
+//! with slow jobs while ONE interactive connection does sequential
+//! request/response; per-connection fair queueing (untenanted — the
+//! pre-tenancy behavior, each connection its own queue key) gives the
+//! interactive client a 1-of-N share, while tagging the whole flood
+//! with one `tenant` label collapses it to a single fair-queue lane
+//! and the interactive client's latency stops scaling with flood
+//! width. Artifact-free: the model head is a fake behind the
+//! [`LineService`] seam, so the numbers isolate the serving plane.
+//! Results go to `BENCH_admission.json` at the repo root.
+
+use mlir_cost::benchkit;
+use mlir_cost::coordinator::offload::LineService;
+use mlir_cost::coordinator::server::{serve_loops, ServerConfig, Stop};
+use mlir_cost::coordinator::stats::ServiceStats;
+use mlir_cost::json::Json;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+fn repo_root() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).parent().unwrap().to_path_buf()
+}
+
+/// Per-job service time of the fake model head. Long enough that queue
+/// position, not syscall noise, dominates the interactive latency.
+const JOB_MS: u64 = 3;
+
+/// Fake model head: every line is a would-block job taking [`JOB_MS`].
+struct SlowHead {
+    stats: ServiceStats,
+}
+
+impl LineService for SlowHead {
+    fn stats(&self) -> &ServiceStats {
+        &self.stats
+    }
+
+    fn would_block(&self, _line: &str) -> bool {
+        true
+    }
+
+    fn handle(&self, line: &str) -> Json {
+        std::thread::sleep(std::time::Duration::from_millis(JOB_MS));
+        let id = mlir_cost::json::parse(line)
+            .ok()
+            .and_then(|r| r.get("id").cloned())
+            .unwrap_or(Json::Null);
+        Json::obj().with("id", id).with("ok", Json::Bool(true))
+    }
+}
+
+/// One request/response over a raw socket.
+fn roundtrip(conn: &mut TcpStream, reader: &mut BufReader<TcpStream>, req: &Json) {
+    conn.write_all(format!("{req}\n").as_bytes()).unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("\"ok\": true") || line.contains("\"ok\":true"), "rejected: {line}");
+}
+
+fn request(id: usize, tenant: Option<&str>) -> Json {
+    let mut req = Json::obj().with("id", Json::num(id as f64));
+    if let Some(t) = tenant {
+        req = req.with("tenant", Json::str(t));
+    }
+    req
+}
+
+/// One sweep cell: `flood_conns` ping-pong flooders + 1 interactive
+/// connection through a 1-loop, 1-worker server. `tagged` = the flood
+/// shares one `tenant` label and the interactive client another (the
+/// fair pool aggregates the flood); untagged = per-connection queue
+/// keys (the flood holds `flood_conns` lanes). Returns the interactive
+/// (p50 us, p95 us) over `interactive_n` queries plus the flood's
+/// completed-query throughput while the interactive client ran.
+fn run_cell(tagged: bool, flood_conns: usize, interactive_n: usize) -> (u64, u64, usize, f64) {
+    let svc = Arc::new(SlowHead { stats: ServiceStats::default() });
+    let config = ServerConfig {
+        io_threads: 1,
+        request_workers: 1,
+        // Tenant labels only flow to the pool's fair queues when some
+        // admission knob is on; an unreachable quota enables the
+        // tagged plumbing without ever rejecting.
+        quota: if tagged { 1e9 } else { 0.0 },
+        ..Default::default()
+    };
+    let stop = Stop::new();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let server = {
+        let (svc, stop) = (svc.clone(), stop.clone());
+        std::thread::spawn(move || serve_loops(svc, vec![listener], stop, config))
+    };
+
+    let done = Arc::new(AtomicBool::new(false));
+    let mut lats: Vec<u64> = Vec::with_capacity(interactive_n);
+    let mut flood_total = 0usize;
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        let mut flooders = Vec::with_capacity(flood_conns);
+        for _ in 0..flood_conns {
+            let (addr, done) = (addr.clone(), done.clone());
+            let tenant = tagged.then_some("flood");
+            flooders.push(s.spawn(move || {
+                let mut conn = TcpStream::connect(&addr).unwrap();
+                let mut reader = BufReader::new(conn.try_clone().unwrap());
+                let mut n = 0usize;
+                // Ping-pong: per-connection order already caps each
+                // connection at one in-flight job, so this keeps the
+                // pool exactly `flood_conns` deep without overflowing
+                // its bounded queue.
+                while !done.load(Ordering::Relaxed) {
+                    roundtrip(&mut conn, &mut reader, &request(n, tenant));
+                    n += 1;
+                }
+                n
+            }));
+        }
+        // Let the flood fill the pool before measuring.
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        let mut conn = TcpStream::connect(&addr).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let tenant = tagged.then_some("ui");
+        for i in 0..interactive_n {
+            let q0 = Instant::now();
+            roundtrip(&mut conn, &mut reader, &request(i, tenant));
+            lats.push(q0.elapsed().as_micros() as u64);
+        }
+        done.store(true, Ordering::Relaxed);
+        for f in flooders {
+            flood_total += f.join().unwrap();
+        }
+    });
+    let dt = t0.elapsed().as_secs_f64();
+    stop.trigger();
+    let _ = server.join();
+    assert_eq!(svc.stats.conservation_debt(), 0, "admission ledger out of balance");
+    lats.sort_unstable();
+    let pct = |p: f64| lats[((lats.len() as f64 * p) as usize).min(lats.len() - 1)];
+    (pct(0.50), pct(0.95), flood_total, flood_total as f64 / dt.max(1e-9))
+}
+
+fn main() {
+    benchkit::section("E11: admission & tenancy (flood vs interactive, fair pool)");
+    let flood_conns = 16usize;
+    let interactive_n = benchkit::clamp_iters(64);
+
+    let mut scenarios: Vec<Json> = Vec::new();
+    for (mode, tagged) in [("fifo_untenanted", false), ("fair_tenant_tagged", true)] {
+        let (p50, p95, flood_q, flood_qps) = run_cell(tagged, flood_conns, interactive_n);
+        benchkit::kv(
+            &format!("{mode} @ {flood_conns} flood conns"),
+            format!(
+                "interactive p50 {p50} us, p95 {p95} us ({interactive_n} queries; \
+                 flood {flood_q} done, {flood_qps:.0}/s)"
+            ),
+        );
+        scenarios.push(
+            Json::obj()
+                .with("mode", Json::str(mode))
+                .with("flood_connections", Json::num(flood_conns as f64))
+                .with("request_workers", Json::num(1.0))
+                .with("interactive_queries", Json::num(interactive_n as f64))
+                .with("interactive_p50_us", Json::num(p50 as f64))
+                .with("interactive_p95_us", Json::num(p95 as f64))
+                .with("flood_queries", Json::num(flood_q as f64))
+                .with("flood_queries_per_sec", Json::num(flood_qps)),
+        );
+    }
+
+    let doc = Json::obj()
+        .with("bench", Json::str("e11_admission"))
+        .with(
+            "note",
+            Json::str(
+                "Flood-vs-interactive sweep through one io loop and one request worker, \
+                 artifact-free (fake 3 ms model head): 16 ping-pong flood connections \
+                 saturate the offload pool while 1 interactive connection measures latency. \
+                 fifo_untenanted keys the fair pool per connection (the flood holds 16 \
+                 lanes); fair_tenant_tagged collapses the flood to one `tenant` lane. Run \
+                 `cargo bench --bench e11_admission` from rust/ to overwrite with measured \
+                 numbers.",
+            ),
+        )
+        .with("job_ms", Json::num(JOB_MS as f64))
+        .with("scenarios", Json::Arr(scenarios))
+        .with(
+            "acceptance",
+            Json::str("fair_tenant_tagged interactive_p50_us < fifo_untenanted interactive_p50_us"),
+        );
+    let out = repo_root().join("BENCH_admission.json");
+    match std::fs::write(&out, doc.to_string()) {
+        Ok(()) => benchkit::kv("sweep recorded", out.display()),
+        Err(e) => eprintln!("\ncould not write {out:?}: {e}"),
+    }
+}

@@ -374,8 +374,11 @@ fn sweep_offload(
         let svc = svc.clone();
         let stop = stop.clone();
         std::thread::spawn(move || {
-            let config =
-                server::ServerConfig { io_threads: 1, request_workers, reuseport: false };
+            let config = server::ServerConfig {
+                io_threads: 1,
+                request_workers,
+                ..Default::default()
+            };
             if let Err(e) = server::serve_on_with(svc, listener, stop, config) {
                 eprintln!("[bench] server exited with error: {e:#}");
             }

@@ -1190,6 +1190,30 @@ impl Service {
         j
     }
 
+    /// The fastest credible latency estimate for `target` across its
+    /// registered variants (p95 once seeded, else EWMA; cold variants
+    /// excluded — see `TargetRoutes::min_latency_estimate_us`). `None`
+    /// when the target is unserved or every variant is cold. This is
+    /// the admission tier's optimistic bound for deadline shedding.
+    pub fn min_latency_estimate_us(&self, target: Target) -> Option<f64> {
+        self.router.routes(target).ok().and_then(|tr| tr.min_latency_estimate_us())
+    }
+
+    /// The full [`Service::stats_json`] view flattened into
+    /// scrape-friendly text: one `name value` pair per line, nested
+    /// objects dot-joined (`variants.regpressure/fc_ops.ewma_us 812`),
+    /// in deterministic (BTreeMap) order. Numbers print plainly
+    /// (`12`, not `12.0`), booleans as `0`/`1`, an empty object as
+    /// `name 0` so documented names never vanish from the scrape;
+    /// strings and arrays (non-metric detail like variant model names)
+    /// are skipped. Served by the `metrics` wire command and the
+    /// `mlir-cost metrics` CLI.
+    pub fn metrics_text(&self) -> String {
+        let mut out = String::new();
+        flatten_metrics("", &self.stats_json(), &mut out);
+        out
+    }
+
     /// One consistent read of every point-in-time gauge the stats view
     /// reports. Counters (monotonic) may lag each other harmlessly, but
     /// gauges sampled at different instants inside one `stats_json` call
@@ -1230,6 +1254,59 @@ impl Drop for Service {
     fn drop(&mut self) {
         self.shutdown();
     }
+}
+
+/// Depth-first flatten of a stats JSON tree into `name value` lines
+/// (see [`Service::metrics_text`] for the format contract). Nested
+/// object keys are dot-joined onto `prefix`; numeric leaves print via
+/// `f64`'s plain `Display`, booleans as `0`/`1`, nulls and empty
+/// objects as `0`; strings and arrays carry no metric value and are
+/// dropped.
+fn flatten_metrics(prefix: &str, j: &crate::json::Json, out: &mut String) {
+    use crate::json::Json;
+    use std::fmt::Write as _;
+    match j {
+        Json::Obj(m) => {
+            if m.is_empty() {
+                if !prefix.is_empty() {
+                    let _ = writeln!(out, "{prefix} 0");
+                }
+                return;
+            }
+            for (k, v) in m {
+                if prefix.is_empty() {
+                    flatten_metrics(k, v, out);
+                } else {
+                    flatten_metrics(&format!("{prefix}.{k}"), v, out);
+                }
+            }
+        }
+        Json::Num(n) => {
+            let _ = writeln!(out, "{prefix} {n}");
+        }
+        Json::Bool(b) => {
+            let _ = writeln!(out, "{prefix} {}", u8::from(*b));
+        }
+        Json::Null => {
+            let _ = writeln!(out, "{prefix} 0");
+        }
+        Json::Str(_) | Json::Arr(_) => {}
+    }
+}
+
+/// The deadline-shedding predicate: is `budget_us` already unmeetable
+/// given the fastest credible per-invocation estimate and the current
+/// offload queue depth? The projection is deliberately optimistic —
+/// the request itself plus every queued job ahead of it, each at the
+/// *fastest* variant's estimate — so a `true` here means even the
+/// best case blows the budget and queueing the work is pointless.
+/// Non-positive or non-finite inputs never shed: a cold router must
+/// not reject traffic it knows nothing about.
+pub fn deadline_unmeetable(min_estimate_us: f64, queue_depth: u64, budget_us: f64) -> bool {
+    if !min_estimate_us.is_finite() || min_estimate_us <= 0.0 || !budget_us.is_finite() {
+        return false;
+    }
+    min_estimate_us * (1.0 + queue_depth as f64) > budget_us
 }
 
 /// Park on a single-flight leader's answer.
@@ -2053,5 +2130,50 @@ mod tests {
             (0..3).map(|r| mk_pending(vec![r * 10, r * 10 + 1])).collect();
         let ids = pack_batch(&chunk, 2, 3);
         assert_eq!(ids, vec![0, 1, 10, 11, 20, 21]);
+    }
+
+    // ---- metrics flattening + deadline shedding: pure helpers ----
+
+    #[test]
+    fn flatten_metrics_dot_joins_and_skips_non_numeric() {
+        use crate::json::Json;
+        let j = Json::obj()
+            .with("plain", Json::num(12.0))
+            .with("frac", Json::num(0.5))
+            .with("on", Json::Bool(true))
+            .with("off", Json::Bool(false))
+            .with("missing", Json::Null)
+            .with("label", Json::str("skipped"))
+            .with("list", Json::Arr(vec![Json::num(1.0)]))
+            .with("empty", Json::obj())
+            .with("nest", Json::obj().with("inner", Json::num(3.0)));
+        let mut out = String::new();
+        flatten_metrics("", &j, &mut out);
+        // BTreeMap order: empty, frac, label, list, missing, nest, off, on, plain.
+        assert_eq!(out, "empty 0\nfrac 0.5\nmissing 0\nnest.inner 3\noff 0\non 1\nplain 12\n");
+    }
+
+    #[test]
+    fn flatten_metrics_empty_root_emits_nothing() {
+        use crate::json::Json;
+        let mut out = String::new();
+        flatten_metrics("", &Json::obj(), &mut out);
+        assert_eq!(out, "");
+    }
+
+    #[test]
+    fn deadline_unmeetable_projects_queue_depth() {
+        // 100us fastest estimate, empty queue: a 150us budget is fine,
+        // a 99us budget is not.
+        assert!(!deadline_unmeetable(100.0, 0, 150.0));
+        assert!(deadline_unmeetable(100.0, 0, 99.0));
+        // Three jobs queued ahead: best case 4 invocations = 400us.
+        assert!(deadline_unmeetable(100.0, 3, 399.0));
+        assert!(!deadline_unmeetable(100.0, 3, 400.0));
+        // A cold router (no credible estimate) never sheds.
+        assert!(!deadline_unmeetable(0.0, 100, 1.0));
+        assert!(!deadline_unmeetable(-1.0, 100, 1.0));
+        assert!(!deadline_unmeetable(f64::NAN, 100, 1.0));
+        assert!(!deadline_unmeetable(100.0, 100, f64::INFINITY));
     }
 }

@@ -22,10 +22,27 @@
 //!   write buffer, and resumes parsing that connection's backlog.
 //!
 //! The queue is bounded: when it is full, `submit` hands the job back
-//! and the caller answers inline — the system degrades to exactly the
-//! pre-offload behavior instead of queueing without limit. Per-connection
-//! response ordering is preserved by the server keeping at most ONE
-//! outstanding offloaded line per connection and not parsing past it.
+//! ([`SubmitError::Full`]) and the caller answers inline — the system
+//! degrades to exactly the pre-offload behavior instead of queueing
+//! without limit. Per-connection response ordering is preserved by the
+//! server keeping at most ONE outstanding offloaded line per connection
+//! and not parsing past it.
+//!
+//! Queueing is *weighted-fair* across tenants, not FIFO across the
+//! whole pool: each [`Job`] carries a tenant key (the wire `tenant`
+//! field, falling back to a per-connection key), jobs wait in their
+//! tenant's own FIFO queue, and workers drain tenants round-robin — a
+//! tenant flooding misses waits behind its own backlog while a tenant
+//! with one queued job is served within one rotation. Because the
+//! server keeps at most one offloaded line in flight per connection,
+//! untenanted traffic (every connection its own key, at most one job
+//! each) drains in exactly the old FIFO arrival order — the fair queue
+//! is behavior-identical until tenants actually share a key. An
+//! optional per-tenant in-flight cap (`--tenant-inflight`) bounds how
+//! many jobs one tenant may have queued + executing; a saturated
+//! tenant's submit returns [`SubmitError::TenantSaturated`] so the
+//! server can answer a typed `overloaded` error instead of letting one
+//! tenant monopolize every worker.
 //!
 //! The pool speaks to the service through the [`LineService`] trait
 //! rather than `Service` directly so tests can drive it with a fake
@@ -34,7 +51,7 @@
 use super::stats::ServiceStats;
 use crate::json::Json;
 use minipoll::EventFd;
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::Ordering;
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -54,6 +71,16 @@ pub trait LineService: Send + Sync {
     /// Execute one request line to a response. Must be safe to call
     /// from any thread.
     fn handle(&self, line: &str) -> Json;
+
+    /// Deadline-shedding probe, consulted at admission when the server
+    /// runs with `--shed-deadlines`: `Some(response)` means this line's
+    /// `budget_us` is already unmeetable and the returned rejection
+    /// (a `shed_deadline` error echoing the request id) should be
+    /// written instead of processing the line. The default never sheds,
+    /// so fakes and pre-tenancy services are unaffected.
+    fn shed(&self, _line: &str) -> Option<Json> {
+        None
+    }
 }
 
 /// One would-block line handed to the pool, stamped with enough to
@@ -70,6 +97,11 @@ pub struct Job {
     pub gen: u64,
     /// Per-connection line sequence number, for debug assertions.
     pub seq: u64,
+    /// Fair-queueing key: the request's `tenant` field when present,
+    /// else a per-connection key. Jobs sharing a tenant share one FIFO
+    /// queue (and one in-flight cap); distinct tenants drain
+    /// round-robin.
+    pub tenant: String,
 }
 
 /// A rendered response on its way back to the IO loop: the exact bytes
@@ -107,8 +139,32 @@ impl CompletionInbox {
     }
 }
 
+/// Why [`OffloadPool::submit`] handed a job back.
+pub enum SubmitError {
+    /// The pool is closed or its global queue is full: the caller
+    /// should degrade to the inline path (the pre-offload behavior).
+    Full(Job),
+    /// The job's tenant already has its in-flight cap's worth of jobs
+    /// queued or executing: the caller should answer a typed
+    /// `overloaded` rejection rather than run the work anyway.
+    TenantSaturated(Job),
+}
+
+/// Weighted-fair queue state: per-tenant FIFOs drained round-robin.
 struct Queue {
-    jobs: VecDeque<Job>,
+    /// Each tenant's waiting jobs, FIFO within the tenant. A tenant is
+    /// present iff it has at least one queued job.
+    per_tenant: HashMap<String, VecDeque<Job>>,
+    /// Round-robin drain order: tenants with queued jobs, each present
+    /// exactly once. Workers pop the front tenant's oldest job and
+    /// rotate the tenant to the back while it still has work.
+    order: VecDeque<String>,
+    /// Total queued jobs across all tenants (the bounded-capacity
+    /// check, and the `offload_queue_depth` gauge's source of truth).
+    queued: usize,
+    /// Jobs currently executing on a worker, per tenant — the other
+    /// half of the in-flight cap (queued + executing).
+    executing: HashMap<String, usize>,
     closed: bool,
 }
 
@@ -116,6 +172,8 @@ struct Shared {
     queue: Mutex<Queue>,
     ready: Condvar,
     capacity: usize,
+    /// Per-tenant cap on jobs queued + executing; 0 = uncapped.
+    tenant_cap: usize,
     svc: Arc<dyn LineService>,
 }
 
@@ -133,15 +191,33 @@ pub struct OffloadPool {
 const QUEUE_SLOTS_PER_WORKER: usize = 64;
 
 impl OffloadPool {
-    /// Spawn `workers` threads executing would-block lines for `svc`.
-    /// `workers` must be ≥ 1 — a poolless server simply has no
-    /// `OffloadPool` at all.
+    /// Spawn `workers` threads executing would-block lines for `svc`,
+    /// with no per-tenant in-flight cap. `workers` must be ≥ 1 — a
+    /// poolless server simply has no `OffloadPool` at all.
     pub fn start(svc: Arc<dyn LineService>, workers: usize) -> Arc<OffloadPool> {
+        OffloadPool::start_with_cap(svc, workers, 0)
+    }
+
+    /// [`OffloadPool::start`] with a per-tenant in-flight cap: a tenant
+    /// may have at most `tenant_cap` jobs queued + executing (0 = no
+    /// cap); submits beyond it return [`SubmitError::TenantSaturated`].
+    pub fn start_with_cap(
+        svc: Arc<dyn LineService>,
+        workers: usize,
+        tenant_cap: usize,
+    ) -> Arc<OffloadPool> {
         let workers = workers.max(1);
         let shared = Arc::new(Shared {
-            queue: Mutex::new(Queue { jobs: VecDeque::new(), closed: false }),
+            queue: Mutex::new(Queue {
+                per_tenant: HashMap::new(),
+                order: VecDeque::new(),
+                queued: 0,
+                executing: HashMap::new(),
+                closed: false,
+            }),
             ready: Condvar::new(),
             capacity: workers * QUEUE_SLOTS_PER_WORKER,
+            tenant_cap,
             svc,
         });
         let handles = (0..workers)
@@ -159,13 +235,31 @@ impl OffloadPool {
     /// Hand a job to the pool. On success the job is counted
     /// (`offloaded_misses`, `offload_queue_depth`) and a worker will
     /// deliver its completion. A full or closed queue returns the job
-    /// back so the caller can answer inline — bounded means bounded.
-    pub fn submit(&self, job: Job) -> Result<(), Job> {
+    /// back ([`SubmitError::Full`]) so the caller can answer inline —
+    /// bounded means bounded — and a tenant at its in-flight cap gets
+    /// [`SubmitError::TenantSaturated`] so the caller can reject it
+    /// with a typed `overloaded` error.
+    pub fn submit(&self, job: Job) -> Result<(), SubmitError> {
         let mut q = self.shared.queue.lock().unwrap();
-        if q.closed || q.jobs.len() >= self.shared.capacity {
-            return Err(job);
+        if q.closed || q.queued >= self.shared.capacity {
+            return Err(SubmitError::Full(job));
         }
-        q.jobs.push_back(job);
+        if self.shared.tenant_cap > 0 {
+            let busy = q.executing.get(&job.tenant).copied().unwrap_or(0)
+                + q.per_tenant.get(&job.tenant).map_or(0, VecDeque::len);
+            if busy >= self.shared.tenant_cap {
+                return Err(SubmitError::TenantSaturated(job));
+            }
+        }
+        // The invariant "present in `per_tenant` iff it has queued
+        // jobs" (workers remove drained entries) makes the order check
+        // a key probe.
+        if !q.per_tenant.contains_key(&job.tenant) {
+            q.order.push_back(job.tenant.clone());
+        }
+        let tenant = job.tenant.clone();
+        q.per_tenant.entry(tenant).or_default().push_back(job);
+        q.queued += 1;
         drop(q);
         let stats = self.shared.svc.stats();
         stats.offloaded_misses.fetch_add(1, Ordering::Relaxed);
@@ -201,7 +295,20 @@ fn worker_loop(shared: &Shared) {
         let job = {
             let mut q = shared.queue.lock().unwrap();
             loop {
-                if let Some(job) = q.jobs.pop_front() {
+                // Round-robin over tenants: take the front tenant's
+                // oldest job; a tenant with more work rotates to the
+                // back of the order so its backlog waits one turn per
+                // competing tenant, not zero.
+                if let Some(tenant) = q.order.pop_front() {
+                    let fifo = q.per_tenant.get_mut(&tenant).expect("ordered tenant queued");
+                    let job = fifo.pop_front().expect("ordered tenant nonempty");
+                    if fifo.is_empty() {
+                        q.per_tenant.remove(&tenant);
+                    } else {
+                        q.order.push_back(tenant.clone());
+                    }
+                    q.queued -= 1;
+                    *q.executing.entry(tenant).or_insert(0) += 1;
                     break job;
                 }
                 if q.closed {
@@ -218,6 +325,19 @@ fn worker_loop(shared: &Shared) {
         let mut bytes = Vec::with_capacity(128);
         resp.write_to(&mut bytes).expect("buffer write");
         bytes.push(b'\n');
+        // Release the tenant's in-flight slot BEFORE delivering the
+        // completion: anyone who has observed the response must be able
+        // to submit the tenant's next job without a spurious
+        // saturation.
+        {
+            let mut q = shared.queue.lock().unwrap();
+            if let Some(n) = q.executing.get_mut(&job.tenant) {
+                *n -= 1;
+                if *n == 0 {
+                    q.executing.remove(&job.tenant);
+                }
+            }
+        }
         job.inbox.push(Completion { conn: job.conn, gen: job.gen, seq: job.seq, bytes });
     }
 }
@@ -265,7 +385,18 @@ mod tests {
     }
 
     fn job(inbox: &Arc<CompletionInbox>, line: &str, seq: u64) -> Job {
-        Job { line: line.to_string(), inbox: inbox.clone(), conn: 3, gen: 9, seq }
+        tenant_job(inbox, line, seq, "t0")
+    }
+
+    fn tenant_job(inbox: &Arc<CompletionInbox>, line: &str, seq: u64, tenant: &str) -> Job {
+        Job {
+            line: line.to_string(),
+            inbox: inbox.clone(),
+            conn: 3,
+            gen: 9,
+            seq,
+            tenant: tenant.to_string(),
+        }
     }
 
     /// Drain the inbox until `n` completions arrive or the deadline
@@ -316,15 +447,79 @@ mod tests {
         // tries (each dequeued job parks the worker for 200ms).
         let mut refused = None;
         for seq in 0..(cap as u64 + 8) {
-            if let Err(back) = pool.submit(job(&ib, "slow", seq)) {
-                refused = Some(back);
+            if let Err(e) = pool.submit(job(&ib, "slow", seq)) {
+                refused = Some(e);
                 break;
             }
         }
-        let back = refused.expect("bounded queue never refused");
+        let back = match refused.expect("bounded queue never refused") {
+            SubmitError::Full(back) => back,
+            SubmitError::TenantSaturated(_) => panic!("uncapped pool reported saturation"),
+        };
         assert_eq!(back.line, "slow", "refused job must come back intact");
         assert_eq!(back.inbox.drain().len(), 0, "refused job must not complete");
         pool.shutdown();
+    }
+
+    #[test]
+    fn round_robin_interleaves_tenants_instead_of_fifo() {
+        // One worker parked on a sacrificial job while two tenants
+        // queue 3 jobs each, tenant A's all submitted before tenant
+        // B's. FIFO would answer A,A,A,B,B,B; the fair queue must
+        // alternate after each tenant's first turn.
+        let svc = Fake::slow(Duration::from_millis(60));
+        let pool = OffloadPool::start(svc, 1);
+        let ib = inbox();
+        pool.submit(tenant_job(&ib, "slow warmup", 0, "warm")).map_err(|_| ()).unwrap();
+        // The worker is now (or imminently) busy for 60ms; everything
+        // below lands in the queue before it next pops.
+        for seq in 0..3u64 {
+            pool.submit(tenant_job(&ib, &format!("slow a{seq}"), 10 + seq, "a"))
+                .map_err(|_| ())
+                .unwrap();
+        }
+        for seq in 0..3u64 {
+            pool.submit(tenant_job(&ib, &format!("slow b{seq}"), 20 + seq, "b"))
+                .map_err(|_| ())
+                .unwrap();
+        }
+        let got = collect(&ib, 7);
+        let order: Vec<u64> = got.iter().map(|c| c.seq).skip(1).collect();
+        assert_eq!(
+            order,
+            vec![10, 20, 11, 21, 12, 22],
+            "tenants must drain round-robin, one job per turn"
+        );
+        pool.shutdown();
+    }
+
+    #[test]
+    fn tenant_inflight_cap_saturates_only_the_offender() {
+        // Cap 1, one worker stuck on tenant A's first job: A's second
+        // submit is saturated (typed rejection), B's first is accepted.
+        let svc = Fake::slow(Duration::from_millis(150));
+        let pool = OffloadPool::start_with_cap(svc.clone(), 1, 1);
+        let ib = inbox();
+        pool.submit(tenant_job(&ib, "slow a0", 0, "a")).map_err(|_| ()).unwrap();
+        // Regardless of whether a0 is still queued or already
+        // executing, tenant A is at its cap of 1.
+        let refused = pool.submit(tenant_job(&ib, "slow a1", 1, "a"));
+        match refused {
+            Err(SubmitError::TenantSaturated(back)) => assert_eq!(back.line, "slow a1"),
+            Err(SubmitError::Full(_)) => panic!("near-empty queue reported Full"),
+            Ok(()) => panic!("cap 1 accepted a second in-flight job for one tenant"),
+        }
+        pool.submit(tenant_job(&ib, "slow b0", 2, "b"))
+            .map_err(|_| ())
+            .expect("an idle tenant must not be blocked by another's cap");
+        // Once A's backlog fully drains, A is admitted again.
+        let got = collect(&ib, 2);
+        assert_eq!(got.len(), 2);
+        pool.submit(tenant_job(&ib, "slow a2", 3, "a"))
+            .map_err(|_| ())
+            .expect("cap must release after the tenant's jobs finish");
+        pool.shutdown();
+        assert_eq!(svc.stats.offload_queue_depth.load(Ordering::Relaxed), 0);
     }
 
     #[test]

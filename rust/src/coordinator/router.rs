@@ -172,6 +172,21 @@ impl TargetRoutes {
             .collect()
     }
 
+    /// The fastest *credible* latency estimate across this target's
+    /// variants — the admission tier's optimistic bound for deadline
+    /// shedding: if even this cannot meet a request's `budget_us`, no
+    /// routing decision can. Cold variants (estimate 0.0 = "no
+    /// evidence yet") are excluded, and `None` comes back when every
+    /// variant is cold — a service with no latency evidence must never
+    /// shed.
+    pub(crate) fn min_latency_estimate_us(&self) -> Option<f64> {
+        self.variants
+            .iter()
+            .map(Variant::latency_estimate_us)
+            .filter(|e| *e > 0.0)
+            .min_by(f64::total_cmp)
+    }
+
     /// The largest registered `max_len` (error messages).
     pub(crate) fn largest_max_len(&self) -> usize {
         self.variants.last().map(|v| v.bundle.max_len).unwrap_or(0)

@@ -15,6 +15,8 @@
 //!           {"id": 14, "cmd": "mlir_delta", "session": 1, "splices": [{"start": 120, "end": 138, "text": "..."}]}
 //!           {"id": 15, "cmd": "mlir_delta", "session": 1, "mlir": "func.func @f...", "rebase": true}
 //!           {"id": 16, "cmd": "session_close", "session": 1}
+//!           {"id": 17, "cmd": "metrics"}
+//!           {"id": 18, "target": "regpressure", "mlir": "...", "tenant": "tuner-a"}
 //! Response: {"id": 7, "ok": true, "prediction": 27.4, "predictions": {"regpressure": 27.4},
 //!            "variant": "fc_ops", "us": 812}
 //!           {"id": 10, "ok": true, "predictions": [{"ok": true, "prediction": 27.4,
@@ -121,6 +123,31 @@
 //! (the default) skips classification entirely and runs every line
 //! inline — the pre-offload behavior, byte for byte.
 //!
+//! Backpressure by buffer is survival; admission control is policy.
+//! With `--quota N` every request line passes a token bucket before it
+//! is processed: the bucket is keyed by the request's optional
+//! `tenant` field (one bucket per tenant NAME, shared across all of
+//! that tenant's connections and all IO threads), falling back to one
+//! bucket per connection for untagged traffic. A line over quota is
+//! answered with a typed `over_quota` error — cheap microseconds on
+//! the IO thread — instead of being queued. `--shed-deadlines` adds
+//! deadline-aware shedding: a prediction whose `budget_us` is already
+//! unmeetable given the fastest variant's latency estimate and the
+//! current offload queue depth is rejected up front with
+//! `shed_deadline` rather than queueing work the client will discard
+//! (requests without `budget_us` are never shed). `--tenant-inflight
+//! K` caps one tenant's simultaneously queued+executing offloaded
+//! lines; the K+1'th is rejected with a typed `overloaded` error while
+//! other tenants' lines keep flowing through the pool's per-tenant
+//! round-robin queues ([`super::offload`]). All three knobs default to
+//! off, and when off the line path is byte-identical to the pre-quota
+//! server. The admission ledger is pinned by
+//! `ServiceStats::conservation_debt`: every admitted line settles as
+//! exactly one of `lines_answered` / `over_quota` / `shed_deadline` /
+//! `rejected_overloaded` / `lines_dropped`. The `metrics` command (and
+//! the `mlir-cost metrics` CLI) exports every stats counter as flat
+//! scrape-friendly `name value` text for fleet dashboards.
+//!
 //! With `--reuseport`, accept sharding replaces the shared acceptor:
 //! every IO thread owns its own `SO_REUSEPORT` listener socket bound to
 //! the same address and the kernel spreads incoming connections across
@@ -132,7 +159,7 @@
 //! [`serve_on_threaded`], kept as the baseline the serving bench
 //! (`benches/e3_serving.rs`) compares the event loop against.
 
-use super::offload::{CompletionInbox, Job, LineService, OffloadPool};
+use super::offload::{CompletionInbox, Job, LineService, OffloadPool, SubmitError};
 use super::session::{Delta, Splice};
 use super::Service;
 use crate::json::{parse, Json};
@@ -140,7 +167,7 @@ use crate::pred::PredVec;
 use crate::sim::Target;
 use anyhow::{anyhow, Context, Result};
 use minipoll::{Epoll, EventFd, Events, EPOLLIN, EPOLLOUT, EPOLLRDHUP};
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::io::{BufRead, BufReader, BufWriter, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::os::unix::io::AsRawFd;
@@ -202,12 +229,88 @@ pub struct ServerConfig {
     /// dealing connections out. Falls back to the shared acceptor (with
     /// a logged warning) where the option is unsupported.
     pub reuseport: bool,
+    /// Admission quota in requests/second per tenant (token bucket;
+    /// tenant = the request's optional `tenant` field, falling back to
+    /// one bucket per connection for untagged traffic). A line over
+    /// quota is answered with a typed `over_quota` error instead of
+    /// being processed. 0 = quotas off (the default): admission is not
+    /// consulted and the line path is byte-identical to the pre-quota
+    /// server.
+    pub quota: f64,
+    /// Token-bucket burst depth — the most unspent quota a tenant can
+    /// bank for a spike. 0 = default to `max(quota, 1)`.
+    pub quota_burst: f64,
+    /// Per-tenant in-flight cap on the request-worker pool: at most
+    /// this many of one tenant's would-block lines queued + executing
+    /// at once; the next is rejected with a typed `overloaded` error
+    /// while other tenants keep flowing. 0 = no cap.
+    pub tenant_inflight: usize,
+    /// Shed doomed work at admission: reject a prediction whose
+    /// `budget_us` is already unmeetable (fastest-variant latency
+    /// estimate × offload queue depth — see
+    /// [`super::deadline_unmeetable`]) with a typed `shed_deadline`
+    /// error instead of queueing it. Requests without `budget_us` are
+    /// never shed.
+    pub shed_deadlines: bool,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { io_threads: 1, request_workers: 0, reuseport: false }
+        ServerConfig {
+            io_threads: 1,
+            request_workers: 0,
+            reuseport: false,
+            quota: 0.0,
+            quota_burst: 0.0,
+            tenant_inflight: 0,
+            shed_deadlines: false,
+        }
     }
+}
+
+/// Classic token bucket: `rate` tokens/second refill up to a `burst`
+/// ceiling; one token buys one admitted line. Refill is computed
+/// lazily from elapsed time at each take — no timer thread, no
+/// background refill work for idle tenants. The clock is an explicit
+/// parameter so unit tests are deterministic.
+struct TokenBucket {
+    tokens: f64,
+    last: Instant,
+    rate: f64,
+    burst: f64,
+}
+
+impl TokenBucket {
+    /// A fresh bucket starts full: a new tenant gets its burst.
+    fn new(rate: f64, burst: f64) -> TokenBucket {
+        TokenBucket { tokens: burst, last: Instant::now(), rate, burst }
+    }
+
+    fn try_take_at(&mut self, n: f64, now: Instant) -> bool {
+        let dt = now.saturating_duration_since(self.last).as_secs_f64();
+        self.last = now;
+        self.tokens = (self.tokens + dt * self.rate).min(self.burst);
+        if self.tokens >= n {
+            self.tokens -= n;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// Shared admission state, one instance for the whole front end: the
+/// quota knobs plus one token bucket per tenant NAME. Shared across
+/// every IO loop so a tenant spreading connections over threads still
+/// draws from a single bucket; untagged traffic uses the per-`Conn`
+/// fallback bucket instead and never touches this map. `None` on
+/// [`LoopCtx`] (every knob off, the default) short-circuits admission
+/// entirely — the line path is byte-identical to the pre-quota server.
+struct Admission {
+    quota: f64,
+    burst: f64,
+    shed_deadlines: bool,
+    tenants: Mutex<HashMap<String, TokenBucket>>,
 }
 
 /// Serve until `stop.trigger()` (or forever).
@@ -273,11 +376,12 @@ pub fn serve_on_with(
     serve_loops(service, vec![listener], stop, config)
 }
 
-/// The front end proper, generic over the service so the offload tests
-/// can drive it with an artifact-free fake. One listener = thread 0
-/// accepts and deals connections round-robin; `io_threads` listeners
-/// (the reuseport path) = every thread accepts from its own.
-fn serve_loops(
+/// The front end proper, generic over the service so tests and benches
+/// can drive it with an artifact-free [`LineService`] fake (the
+/// admission and chaos suites live on this seam). One listener =
+/// thread 0 accepts and deals connections round-robin; `io_threads`
+/// listeners (the reuseport path) = every thread accepts from its own.
+pub fn serve_loops(
     service: Arc<dyn LineService>,
     mut listeners: Vec<TcpListener>,
     stop: Arc<Stop>,
@@ -299,6 +403,23 @@ fn serve_loops(
             String::new()
         },
     );
+    if config.quota > 0.0 || config.tenant_inflight > 0 || config.shed_deadlines {
+        eprintln!(
+            "[server] admission control on: quota {}/s{}{}{}",
+            config.quota,
+            if config.quota_burst > 0.0 {
+                format!(" (burst {})", config.quota_burst)
+            } else {
+                String::new()
+            },
+            if config.tenant_inflight > 0 {
+                format!(", tenant in-flight cap {}", config.tenant_inflight)
+            } else {
+                String::new()
+            },
+            if config.shed_deadlines { ", deadline shedding" } else { "" },
+        );
+    }
     // Every loop gets an inbox (handoff queue + completion inbox +
     // doorbell); doorbells are registered with `stop` up front so a
     // trigger can never race a loop's startup.
@@ -311,8 +432,27 @@ fn serve_loops(
     }
     // The request-worker pool is shared by every loop; each loop's jobs
     // carry that loop's completion inbox home.
-    let pool = (config.request_workers > 0)
-        .then(|| OffloadPool::start(service.clone(), config.request_workers));
+    let pool = (config.request_workers > 0).then(|| {
+        OffloadPool::start_with_cap(service.clone(), config.request_workers, config.tenant_inflight)
+    });
+    // Admission state exists only when some knob is on: a `None` here
+    // keeps the default line path byte-identical to the pre-quota
+    // server (no per-line parse for the tenant field, no bucket math).
+    // `tenant_inflight` alone still needs it — the pool's fair queues
+    // key on the tenant labels admission extracts.
+    let admission = (config.quota > 0.0 || config.tenant_inflight > 0 || config.shed_deadlines)
+        .then(|| {
+            Arc::new(Admission {
+                quota: config.quota,
+                burst: if config.quota_burst > 0.0 {
+                    config.quota_burst
+                } else {
+                    config.quota.max(1.0)
+                },
+                shed_deadlines: config.shed_deadlines,
+                tenants: Mutex::new(HashMap::new()),
+            })
+        });
     // One acceptor per listener: index 0 runs on thread 0; with accept
     // sharding each remaining listener rides its own thread and pushes
     // into that thread's inbox only.
@@ -327,7 +467,11 @@ fn serve_loops(
         .collect();
     let mut joins = Vec::new();
     for (i, inbox) in inboxes.iter().enumerate().skip(1) {
-        let ctx = LoopCtx { svc: service.clone(), pool: pool.clone() };
+        let ctx = LoopCtx {
+            svc: service.clone(),
+            pool: pool.clone(),
+            admission: admission.clone(),
+        };
         let inbox = inbox.clone();
         let stop = stop.clone();
         let acceptor = if sharded { acceptors[i].take() } else { None };
@@ -341,7 +485,7 @@ fn serve_loops(
             }
         }));
     }
-    let ctx = LoopCtx { svc: service, pool: pool.clone() };
+    let ctx = LoopCtx { svc: service.clone(), pool: pool.clone(), admission };
     let res = io_loop(ctx, stop.clone(), inboxes[0].clone(), acceptors[0].take());
     // If thread 0 failed, the sibling loops are still parked in
     // epoll_wait — trigger so the joins below cannot hang, and the
@@ -352,6 +496,16 @@ fn serve_loops(
     }
     if let Some(pool) = pool {
         pool.shutdown();
+    }
+    // Workers that finished after a loop's teardown drain pushed their
+    // completions into an inbox nobody will read again. Those lines
+    // were admitted but never answered — settle them as dropped so the
+    // conservation ledger balances at quiescence.
+    for inbox in &inboxes {
+        let stranded = inbox.completions.drain().len();
+        if stranded > 0 {
+            service.stats().lines_dropped.fetch_add(stranded as u64, Ordering::Relaxed);
+        }
     }
     res
 }
@@ -392,6 +546,9 @@ impl Inbox {
 struct LoopCtx {
     svc: Arc<dyn LineService>,
     pool: Option<Arc<OffloadPool>>,
+    /// Admission state shared by every loop; `None` = every admission
+    /// knob off, the pre-quota fast path.
+    admission: Option<Arc<Admission>>,
 }
 
 /// Thread 0's extra role: own the listener and deal connections out.
@@ -468,6 +625,10 @@ struct Conn {
     /// is parked — no parsing past that line, `EPOLLIN` dropped — until
     /// the matching completion lands, preserving response order.
     waiting: Option<u64>,
+    /// Quota bucket for untagged traffic (no `tenant` field), created
+    /// lazily on this connection's first admitted line. Tagged traffic
+    /// draws from [`Admission::tenants`] instead.
+    bucket: Option<TokenBucket>,
 }
 
 impl Conn {
@@ -547,19 +708,27 @@ fn io_loop(
                     }
                     for c in inbox.completions.drain() {
                         let Some(conn) = slab.get_mut(c.conn).and_then(Option::as_mut) else {
-                            continue; // connection closed while its job ran
+                            // Connection closed while its job ran: the
+                            // line was admitted, its answer has nowhere
+                            // to go — settle it as dropped.
+                            ctx.svc.stats().lines_dropped.fetch_add(1, Ordering::Relaxed);
+                            continue;
                         };
                         if conn.gen != c.gen {
-                            continue; // slot recycled by a newer connection
+                            // Slot recycled by a newer connection.
+                            ctx.svc.stats().lines_dropped.fetch_add(1, Ordering::Relaxed);
+                            continue;
                         }
                         // At most one job is ever in flight per
                         // connection, so a live (conn, gen) can only be
                         // waiting on exactly this completion.
                         debug_assert_eq!(conn.waiting, Some(c.seq));
                         if conn.waiting != Some(c.seq) {
+                            ctx.svc.stats().lines_dropped.fetch_add(1, Ordering::Relaxed);
                             continue;
                         }
                         conn.waiting = None;
+                        ctx.svc.stats().lines_answered.fetch_add(1, Ordering::Relaxed);
                         conn.wbuf.extend_from_slice(&c.bytes);
                         // Drives phase 2 (resume parsing the backlog
                         // behind the offloaded line) and phase 3 (flush
@@ -608,12 +777,18 @@ fn io_loop(
 
     // Teardown: close every connection this loop owns (and any streams
     // handed off but never registered). `close_conn` no-ops on empty
-    // slots. In-flight offload completions die with the inbox.
+    // slots. In-flight offload completions die with the inbox — their
+    // lines were admitted but never answered, so they settle as
+    // dropped (completions still in flight at this instant are caught
+    // by `serve_loops`' post-shutdown drain).
     for idx in 0..slab.len() {
         close_conn(&ctx, &epoll, &mut slab, &mut free, idx);
     }
     drop(inbox.drain());
-    drop(inbox.completions.drain());
+    let stranded = inbox.completions.drain().len();
+    if stranded > 0 {
+        ctx.svc.stats().lines_dropped.fetch_add(stranded as u64, Ordering::Relaxed);
+    }
     Ok(())
 }
 
@@ -677,6 +852,7 @@ fn register_conn(
         gen,
         seq: 0,
         waiting: None,
+        bucket: None,
     });
     ctx.svc.stats().active_connections.fetch_add(1, Ordering::Relaxed);
 }
@@ -758,6 +934,78 @@ enum Turn {
     Closed,
 }
 
+/// One line's admission verdict.
+enum Admit {
+    /// Admitted; carries the request's `tenant` label when present
+    /// (the offload pool's fair-queueing key).
+    Pass(Option<String>),
+    /// Rejected at admission; the typed error response to write. The
+    /// rejecting gate has already counted the outcome in the stats.
+    Reject(Json),
+}
+
+/// A typed admission rejection: same shape as every other protocol
+/// error, echoing the request's id.
+fn reject_json(id: Json, error: String) -> Json {
+    Json::obj().with("id", id).with("ok", Json::Bool(false)).with("error", Json::str(error))
+}
+
+/// The admission gate, run once per complete line BEFORE any
+/// processing: quota bucket first (cheapest, and a flooding tenant
+/// must not reach the shed estimator), deadline shedding second. With
+/// no admission state configured every line passes untouched — no
+/// parse, no allocation, the pre-quota path byte for byte. `bucket` is
+/// the connection's untagged-traffic fallback bucket (a disjoint field
+/// borrow of `Conn` so `text` may keep borrowing `rbuf`).
+fn admit_line(ctx: &LoopCtx, bucket: &mut Option<TokenBucket>, text: &str) -> Admit {
+    let Some(adm) = &ctx.admission else {
+        return Admit::Pass(None);
+    };
+    // One parse for the id (echoed on rejections) and the tenant
+    // label. A malformed line passes through with neither —
+    // `handle_line` owns its error reply, and quota still applies via
+    // the connection bucket so garbage cannot bypass the limiter.
+    let (id, tenant) = match parse(text) {
+        Ok(req) => (
+            req.get("id").cloned().unwrap_or(Json::Null),
+            req.get("tenant").and_then(Json::as_str).map(str::to_string),
+        ),
+        Err(_) => (Json::Null, None),
+    };
+    if adm.quota > 0.0 {
+        let now = Instant::now();
+        let ok = match &tenant {
+            Some(t) => adm
+                .tenants
+                .lock()
+                .unwrap()
+                .entry(t.clone())
+                .or_insert_with(|| TokenBucket::new(adm.quota, adm.burst))
+                .try_take_at(1.0, now),
+            None => bucket
+                .get_or_insert_with(|| TokenBucket::new(adm.quota, adm.burst))
+                .try_take_at(1.0, now),
+        };
+        if !ok {
+            ctx.svc.stats().over_quota.fetch_add(1, Ordering::Relaxed);
+            return Admit::Reject(reject_json(
+                id,
+                format!(
+                    "over_quota: rate limit exceeded ({} req/s, burst {})",
+                    adm.quota, adm.burst
+                ),
+            ));
+        }
+    }
+    if adm.shed_deadlines {
+        if let Some(resp) = ctx.svc.shed(text) {
+            ctx.svc.stats().shed_deadline.fetch_add(1, Ordering::Relaxed);
+            return Admit::Reject(resp);
+        }
+    }
+    Admit::Pass(tenant)
+}
+
 /// Answer up to `budget` `\n`-terminated requests sitting in `rbuf`;
 /// leftover partial-line bytes stay buffered for the next segment. Stops
 /// early when the write buffer passes the backpressure threshold (the
@@ -795,44 +1043,95 @@ fn respond_turn(ctx: &LoopCtx, inbox: &Inbox, idx: usize, conn: &mut Conn, budge
         start += nl + 1;
         let response = match std::str::from_utf8(line) {
             Ok(text) if text.trim().is_empty() => continue,
-            Ok(text) => match &ctx.pool {
-                Some(pool) if ctx.svc.would_block(text) => {
-                    let job = Job {
-                        line: text.to_string(),
-                        inbox: inbox.completions.clone(),
-                        conn: idx,
-                        gen: conn.gen,
-                        seq: conn.seq,
-                    };
-                    match pool.submit(job) {
-                        Ok(()) => {
-                            conn.waiting = Some(conn.seq);
-                            conn.seq += 1;
-                            // `start` is already past the offloaded
-                            // line; everything behind it waits in rbuf.
-                            conn.rbuf.drain(..start);
-                            conn.deferred_lines = false;
-                            return Turn::Drained;
+            Ok(text) => {
+                // Every complete non-empty line enters the admission
+                // ledger here and must settle as exactly one of
+                // answered / over_quota / shed_deadline /
+                // rejected_overloaded / dropped (pinned by
+                // `ServiceStats::conservation_debt`).
+                ctx.svc.stats().lines_admitted.fetch_add(1, Ordering::Relaxed);
+                // `&mut conn.bucket` + `text` (borrowing `conn.rbuf`)
+                // are disjoint field borrows.
+                match admit_line(ctx, &mut conn.bucket, text) {
+                    Admit::Reject(resp) => resp,
+                    Admit::Pass(tenant) => match &ctx.pool {
+                        Some(pool) if ctx.svc.would_block(text) => {
+                            // Fair-queueing key: the wire tenant when
+                            // tagged, else a per-connection key —
+                            // doorbell fd + gen, unique across loops
+                            // (gen alone collides between threads).
+                            let tenant = tenant.unwrap_or_else(|| {
+                                format!("conn:{}/{}", inbox.doorbell.as_raw_fd(), conn.gen)
+                            });
+                            let job = Job {
+                                line: text.to_string(),
+                                inbox: inbox.completions.clone(),
+                                conn: idx,
+                                gen: conn.gen,
+                                seq: conn.seq,
+                                tenant,
+                            };
+                            match pool.submit(job) {
+                                Ok(()) => {
+                                    conn.waiting = Some(conn.seq);
+                                    conn.seq += 1;
+                                    // `start` is already past the offloaded
+                                    // line; everything behind it waits in rbuf.
+                                    conn.rbuf.drain(..start);
+                                    conn.deferred_lines = false;
+                                    return Turn::Drained;
+                                }
+                                Err(SubmitError::Full(job)) => {
+                                    // Bounded queue full: degrade to the
+                                    // in-loop path and record the stall the
+                                    // pool could not absorb.
+                                    let t = Instant::now();
+                                    let resp = ctx.svc.handle(&job.line);
+                                    let stalled = t.elapsed().as_nanos() as u64;
+                                    let stats = ctx.svc.stats();
+                                    stats.io_stall_ns.fetch_add(stalled, Ordering::Relaxed);
+                                    stats.lines_answered.fetch_add(1, Ordering::Relaxed);
+                                    resp
+                                }
+                                Err(SubmitError::TenantSaturated(job)) => {
+                                    // This tenant already has its
+                                    // in-flight cap's worth of work in
+                                    // the pool: typed rejection; other
+                                    // tenants' lines keep flowing.
+                                    ctx.svc
+                                        .stats()
+                                        .rejected_overloaded
+                                        .fetch_add(1, Ordering::Relaxed);
+                                    let id = parse(&job.line)
+                                        .ok()
+                                        .and_then(|r| r.get("id").cloned())
+                                        .unwrap_or(Json::Null);
+                                    reject_json(
+                                        id,
+                                        "overloaded: tenant in-flight cap reached, retry later"
+                                            .to_string(),
+                                    )
+                                }
+                            }
                         }
-                        Err(_refused) => {
-                            // Bounded queue full: degrade to the
-                            // in-loop path and record the stall the
-                            // pool could not absorb.
-                            let t = Instant::now();
+                        _ => {
                             let resp = ctx.svc.handle(text);
-                            ctx.svc
-                                .stats()
-                                .io_stall_ns
-                                .fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                            ctx.svc.stats().lines_answered.fetch_add(1, Ordering::Relaxed);
                             resp
                         }
-                    }
+                    },
                 }
-                _ => ctx.svc.handle(text),
-            },
-            Err(_) => Json::obj()
-                .with("ok", Json::Bool(false))
-                .with("error", Json::str("request line is not valid UTF-8")),
+            }
+            Err(_) => {
+                // An unparseable line still settles in the ledger:
+                // admitted and immediately answered with an error.
+                let stats = ctx.svc.stats();
+                stats.lines_admitted.fetch_add(1, Ordering::Relaxed);
+                stats.lines_answered.fetch_add(1, Ordering::Relaxed);
+                Json::obj()
+                    .with("ok", Json::Bool(false))
+                    .with("error", Json::str("request line is not valid UTF-8"))
+            }
         };
         // Vec<u8> writes are infallible.
         response.write_to(&mut conn.wbuf).expect("buffer write");
@@ -1244,6 +1543,13 @@ pub fn handle_line(service: &Service, line: &str) -> Json {
                     .with("ok", Json::Bool(true))
                     .with("closed", Json::Bool(service.session_close(sid as u64)))
             }
+            // The full stats view flattened into scrape-friendly
+            // `name value` text (see `Service::metrics_text`) — what
+            // the `mlir-cost metrics` CLI prints for a fleet scraper.
+            "metrics" => Json::obj()
+                .with("id", id.clone())
+                .with("ok", Json::Bool(true))
+                .with("metrics", Json::str(service.metrics_text())),
             other => fail(format!("unknown cmd '{other}'")),
         };
     }
@@ -1304,8 +1610,8 @@ fn line_would_block(service: &Service, line: &str) -> bool {
     if let Some(cmd) = req.get("cmd").and_then(Json::as_str) {
         // `session_open` tokenizes an unseen base and usually executes;
         // `mlir_delta` re-lexes and may miss the cache. Everything else
-        // (ping/stats/cache_get/cache_put/targets/session_close/unknown)
-        // is pure local bookkeeping.
+        // (ping/stats/metrics/cache_get/cache_put/targets/session_close/
+        // unknown) is pure local bookkeeping.
         return matches!(cmd, "session_open" | "mlir_delta");
     }
     let Some(target) = req.req_str("target").ok().and_then(Target::parse) else {
@@ -1348,6 +1654,39 @@ fn line_would_block(service: &Service, line: &str) -> bool {
     !service.probe_warm(target, mlir, budget_us, &required)
 }
 
+/// The deadline shedder: `Some(rejection)` when this line is a
+/// prediction whose `budget_us` is already unmeetable — the fastest
+/// credible variant estimate times (1 + offload queue depth) exceeds
+/// the budget (see [`super::deadline_unmeetable`]). Advisory like the
+/// offload classifier and deliberately conservative: commands, lines
+/// without `budget_us`, malformed requests, and cold routers (no
+/// latency samples yet) all return `None` and proceed to
+/// [`handle_line`], which owns their real answer or error.
+fn line_shed(service: &Service, line: &str) -> Option<Json> {
+    let req = parse(line).ok()?;
+    if req.get("cmd").is_some() {
+        return None; // commands carry no prediction deadline
+    }
+    let budget = req
+        .get("budget_us")
+        .and_then(Json::as_f64)
+        .filter(|b| b.is_finite() && *b >= 0.0)?;
+    let target = req.req_str("target").ok().and_then(Target::parse)?;
+    let est = service.min_latency_estimate_us(target)?;
+    let depth = service.stats.offload_queue_depth.load(Ordering::Relaxed);
+    if !super::deadline_unmeetable(est, depth, budget) {
+        return None;
+    }
+    let id = req.get("id").cloned().unwrap_or(Json::Null);
+    Some(reject_json(
+        id,
+        format!(
+            "shed_deadline: budget_us {budget} unmeetable \
+             (fastest variant ~{est:.0} us, {depth} queued)"
+        ),
+    ))
+}
+
 impl LineService for Service {
     fn stats(&self) -> &super::stats::ServiceStats {
         &self.stats
@@ -1359,6 +1698,10 @@ impl LineService for Service {
 
     fn handle(&self, line: &str) -> Json {
         handle_line(self, line)
+    }
+
+    fn shed(&self, line: &str) -> Option<Json> {
+        line_shed(self, line)
     }
 }
 
@@ -1411,6 +1754,10 @@ pub struct Client {
     connect_timeout: std::time::Duration,
     io_timeout: Option<std::time::Duration>,
     next_id: u64,
+    /// Tenant label stamped onto every request (the server's
+    /// quota/fairness identity); `None` = untagged, per-connection
+    /// admission.
+    tenant: Option<String>,
 }
 
 impl Client {
@@ -1430,7 +1777,15 @@ impl Client {
             connect_timeout: timeout,
             io_timeout: None,
             next_id: 1,
+            tenant: None,
         })
+    }
+
+    /// Tag every subsequent request with a tenant label — the server's
+    /// quota and fair-queueing identity. Survives reconnects: the
+    /// label rides in each request line, not in connection state.
+    pub fn set_tenant(&mut self, tenant: &str) {
+        self.tenant = Some(tenant.to_string());
     }
 
     /// Bound every subsequent socket read/write (`None` = block forever,
@@ -1474,7 +1829,10 @@ impl Client {
         Ok(resp)
     }
 
-    fn roundtrip(&mut self, req: Json) -> Result<Json> {
+    fn roundtrip(&mut self, mut req: Json) -> Result<Json> {
+        if let Some(t) = &self.tenant {
+            req = req.with("tenant", Json::str(t));
+        }
         let line = req.to_string();
         let resp_line = match self.wire_roundtrip(&line) {
             Ok(l) => l,
@@ -1624,6 +1982,16 @@ impl Client {
             .with("id", Json::num(id as f64))
             .with("cmd", Json::str("stats"));
         Ok(self.roundtrip(req)?.req("stats")?.clone())
+    }
+
+    /// Fetch the flat `name value` metrics export (`metrics` command)
+    /// — every stats counter, one per line, ready for a scraper.
+    pub fn metrics(&mut self) -> Result<String> {
+        let id = self.next_id();
+        let req = Json::obj()
+            .with("id", Json::num(id as f64))
+            .with("cmd", Json::str("metrics"));
+        Ok(self.roundtrip(req)?.req_str("metrics")?.to_string())
     }
 
     /// Probe the remote node's prediction cache (`cache_get`):
@@ -1886,6 +2254,16 @@ mod tests {
         assert_eq!(inner.req_f64("search_probes").unwrap(), 0.0);
         assert_eq!(inner.req_f64("search_delta_probes").unwrap(), 0.0);
         assert_eq!(inner.req_f64("search_ns").unwrap(), 0.0);
+        // ...and the admission-tier ledger, present (zero) from startup
+        // — these direct handle_line calls never cross line admission,
+        // so every side of the conservation invariant is untouched.
+        assert_eq!(inner.req_f64("lines_admitted").unwrap(), 0.0);
+        assert_eq!(inner.req_f64("lines_answered").unwrap(), 0.0);
+        assert_eq!(inner.req_f64("lines_dropped").unwrap(), 0.0);
+        assert_eq!(inner.req_f64("over_quota").unwrap(), 0.0);
+        assert_eq!(inner.req_f64("shed_deadline").unwrap(), 0.0);
+        assert_eq!(inner.req_f64("rejected_overloaded").unwrap(), 0.0);
+        assert_eq!(svc.stats.conservation_debt(), 0);
         let routed = inner.get("routed_by_variant").expect("routed_by_variant missing");
         assert_eq!(routed.req_f64("regpressure/fc_ops").unwrap(), 0.0);
         let variants = inner.get("variants").expect("variants missing");
@@ -1909,6 +2287,28 @@ mod tests {
         assert_eq!(v.req_f64("policy_retunes").unwrap(), 0.0);
         assert_eq!(v.req_f64("span_entries").unwrap(), 0.0);
         assert!(inner.get("cluster").is_none(), "unclustered service must omit the peer view");
+        // The metrics command exports the same view as flat
+        // `name value` text: every admission counter is scrapable and
+        // nested variant metrics are dot-joined.
+        let metrics = handle_line(&svc, r#"{"id": 9, "cmd": "metrics"}"#);
+        assert_eq!(metrics.get("ok").and_then(Json::as_bool), Some(true));
+        let text = metrics.req_str("metrics").unwrap();
+        for want in [
+            "requests ",
+            "lines_admitted 0",
+            "lines_answered 0",
+            "lines_dropped 0",
+            "over_quota 0",
+            "shed_deadline 0",
+            "rejected_overloaded 0",
+            "offload_queue_depth 0",
+            "variants.regpressure/fc_ops.ewma_us 0",
+        ] {
+            assert!(
+                text.lines().any(|l| l.starts_with(want)),
+                "metrics export missing '{want}':\n{text}"
+            );
+        }
         let targets = handle_line(&svc, r#"{"id": 3, "cmd": "targets"}"#);
         assert_eq!(targets.req_arr("targets").unwrap().len(), 1);
         let bad = handle_line(&svc, "{nope");
@@ -2574,6 +2974,13 @@ mod tests {
         );
         stop.trigger();
         let _ = server.join();
+        // Every line of the burst plus the interactive conversation
+        // settled as answered — no quotas configured, nothing shed or
+        // dropped, and the ledger balances at quiescence.
+        assert!(svc.stats.lines_admitted.load(Ordering::Relaxed) >= flood_n as u64);
+        assert_eq!(svc.stats.over_quota.load(Ordering::Relaxed), 0);
+        assert_eq!(svc.stats.shed_deadline.load(Ordering::Relaxed), 0);
+        assert_eq!(svc.stats.conservation_debt(), 0, "admission ledger out of balance");
     }
 
     /// Artifact-free stand-in for a model head behind the
@@ -2634,7 +3041,7 @@ mod tests {
     #[test]
     fn slow_head_does_not_stall_siblings_on_the_same_loop() {
         let svc = SlowHead::new(500);
-        let config = ServerConfig { io_threads: 1, request_workers: 1, reuseport: false };
+        let config = ServerConfig { io_threads: 1, request_workers: 1, ..Default::default() };
         let (addr, stop, server) = spawn_fake(svc.clone(), config);
 
         let mut slow_conn = TcpStream::connect(&addr).unwrap();
@@ -2663,6 +3070,10 @@ mod tests {
         assert_eq!(svc.stats.offload_queue_depth.load(Ordering::Relaxed), 0);
         stop.trigger();
         let _ = server.join();
+        // At quiescence every admitted line settled: one offloaded
+        // (answered via its completion), one inline.
+        assert_eq!(svc.stats.lines_admitted.load(Ordering::Relaxed), 2);
+        assert_eq!(svc.stats.conservation_debt(), 0, "admission ledger out of balance");
     }
 
     /// Per-connection ordering across the offload boundary: a pipelined
@@ -2672,7 +3083,7 @@ mod tests {
     #[test]
     fn offloaded_line_preserves_per_connection_order() {
         let svc = SlowHead::new(200);
-        let config = ServerConfig { io_threads: 1, request_workers: 2, reuseport: false };
+        let config = ServerConfig { io_threads: 1, request_workers: 2, ..Default::default() };
         let (addr, stop, server) = spawn_fake(svc.clone(), config);
 
         let mut conn = TcpStream::connect(&addr).unwrap();
@@ -2686,6 +3097,49 @@ mod tests {
         assert!(second.contains("fast"));
         stop.trigger();
         let _ = server.join();
+        // Both pipelined lines settled in the admission ledger — the
+        // offloaded one through its completion.
+        assert_eq!(svc.stats.lines_admitted.load(Ordering::Relaxed), 2);
+        assert_eq!(svc.stats.conservation_debt(), 0, "admission ledger out of balance");
+    }
+
+    /// Deadline shedding end-to-end on the REAL service: with the only
+    /// variant's latency EWMA seeded far above a request's `budget_us`,
+    /// admission answers a typed `shed_deadline` error before any model
+    /// work — and the SAME request without a budget is never shed (the
+    /// acceptance bar: no `budget_us`, no shedding).
+    #[test]
+    fn shed_deadline_fires_only_when_a_budget_is_supplied() {
+        let Some(svc) = service() else { return };
+        svc.set_variant_ewma_us(Target::RegPressure, "fc_ops", 50_000.0).unwrap();
+        let config = ServerConfig { shed_deadlines: true, ..Default::default() };
+        let (addr, stop, server) = spawn_fake(svc.clone(), config);
+        let mut conn = TcpStream::connect(&addr).unwrap();
+        let mlir = graph(1, 1);
+        let doomed = Json::obj()
+            .with("id", Json::num(1.0))
+            .with("target", Json::str("regpressure"))
+            .with("mlir", Json::str(&mlir))
+            .with("budget_us", Json::num(100.0));
+        conn.write_all(format!("{doomed}\n").as_bytes()).unwrap();
+        let resp = parse(&read_response(&conn)).unwrap();
+        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false));
+        assert!(
+            resp.req_str("error").unwrap().starts_with("shed_deadline"),
+            "expected a shed_deadline error, got {resp}"
+        );
+        // No budget: the request must be handled normally, never shed.
+        let plain = Json::obj()
+            .with("id", Json::num(2.0))
+            .with("target", Json::str("regpressure"))
+            .with("mlir", Json::str(&mlir));
+        conn.write_all(format!("{plain}\n").as_bytes()).unwrap();
+        let resp = parse(&read_response(&conn)).unwrap();
+        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true));
+        assert_eq!(svc.stats.shed_deadline.load(Ordering::Relaxed), 1);
+        stop.trigger();
+        let _ = server.join();
+        assert_eq!(svc.stats.conservation_debt(), 0, "admission ledger out of balance");
     }
 
     /// Accept sharding end-to-end: two reuseport listeners on one
@@ -2703,7 +3157,12 @@ mod tests {
         let addr = listeners[0].local_addr().unwrap().to_string();
         let svc = SlowHead::new(0);
         let stop = Stop::new();
-        let config = ServerConfig { io_threads: 2, request_workers: 0, reuseport: true };
+        let config = ServerConfig {
+            io_threads: 2,
+            request_workers: 0,
+            reuseport: true,
+            ..Default::default()
+        };
         let server = {
             let stop = stop.clone();
             let svc: Arc<dyn LineService> = svc.clone();
@@ -2718,5 +3177,37 @@ mod tests {
         assert_eq!(svc.stats.connections_accepted.load(Ordering::Relaxed), 8);
         stop.trigger();
         let _ = server.join();
+    }
+
+    /// The quota primitive, deterministic via the explicit clock: burst
+    /// drains, refill accrues at `rate`, banking caps at `burst`.
+    #[test]
+    fn token_bucket_refills_at_rate_and_caps_at_burst() {
+        let t0 = Instant::now();
+        let mut b = TokenBucket::new(10.0, 2.0);
+        assert!(b.try_take_at(1.0, t0));
+        assert!(b.try_take_at(1.0, t0));
+        assert!(!b.try_take_at(1.0, t0), "burst exhausted, same instant");
+        // 100 ms at 10 tokens/s refills one token — and only one.
+        let t1 = t0 + std::time::Duration::from_millis(100);
+        assert!(b.try_take_at(1.0, t1));
+        assert!(!b.try_take_at(1.0, t1));
+        // A long idle stretch banks at most `burst`, not rate × time.
+        let t2 = t1 + std::time::Duration::from_secs(3600);
+        assert!(b.try_take_at(1.0, t2));
+        assert!(b.try_take_at(1.0, t2));
+        assert!(!b.try_take_at(1.0, t2), "banked more than the burst");
+    }
+
+    /// A clock that does not advance (or an Instant from before the
+    /// bucket's creation) must not mint tokens.
+    #[test]
+    fn token_bucket_never_refills_backwards() {
+        let t0 = Instant::now();
+        let mut b = TokenBucket::new(1000.0, 1.0);
+        assert!(b.try_take_at(1.0, t0));
+        for _ in 0..100 {
+            assert!(!b.try_take_at(1.0, t0));
+        }
     }
 }

@@ -43,6 +43,20 @@
 //! threads spent executing would-block lines inline — nonzero only
 //! with `--request-workers 0` or when the offload queue was full), and
 //! `offload_queue_depth` (gauge: jobs currently queued for the pool).
+//! Admission-control counters added with the tenancy layer
+//! (quotas / weighted-fair offload queueing / deadline shedding in
+//! `super::server` + `super::offload`): `lines_admitted` (request
+//! lines the event loop dispatched), `lines_answered` (responses
+//! produced — inline answers, offload completions delivered, and
+//! protocol-error replies alike), `over_quota` (lines rejected by a
+//! tenant/connection token bucket), `shed_deadline` (lines rejected at
+//! admission because their `budget_us` was already unmeetable),
+//! `rejected_overloaded` (would-block lines refused because their
+//! tenant hit its offload in-flight cap), and `lines_dropped`
+//! (offloaded lines whose connection died before the completion could
+//! be written). Together they satisfy the conservation invariant
+//! checked by [`ServiceStats::conservation_debt`]: at quiescence every
+//! admitted line is accounted for exactly once — no silent drops.
 //! Cache-side counters (shard contention, coalesced single-flight
 //! queries) live on `PredictionCache`; `Service::stats_json` merges both
 //! views (plus the per-peer `cluster` object when clustered) for the
@@ -83,6 +97,34 @@ pub struct ServiceStats {
     /// Round-robin turns where a connection exhausted its per-wakeup
     /// line budget and went to the back of the ready queue.
     pub fairness_deferrals: AtomicU64,
+    /// Request lines the event loop dispatched (complete, non-empty
+    /// lines pulled from a connection's read buffer). Every admitted
+    /// line settles in exactly one of `lines_answered` / `over_quota` /
+    /// `shed_deadline` / `rejected_overloaded` / `lines_dropped` — the
+    /// conservation invariant ([`ServiceStats::conservation_debt`]).
+    pub lines_admitted: AtomicU64,
+    /// Responses produced for admitted lines: inline answers, offload
+    /// completions delivered to their connection, and protocol-error
+    /// replies (bad JSON, invalid UTF-8) alike.
+    pub lines_answered: AtomicU64,
+    /// Offloaded lines whose rendered response could not be delivered —
+    /// the connection closed (or its slab slot was recycled) while the
+    /// job ran, or the server shut down with the completion in flight.
+    pub lines_dropped: AtomicU64,
+    /// Lines rejected at admission by a per-tenant / per-connection
+    /// token bucket (`--quota`), answered with the typed `over_quota`
+    /// error instead of being processed.
+    pub over_quota: AtomicU64,
+    /// Lines rejected at admission because their `budget_us` was
+    /// already unmeetable given the fastest variant's latency estimate
+    /// and the current offload backlog (`--shed-deadlines`), answered
+    /// with the typed `shed_deadline` error instead of queueing doomed
+    /// work. Never fires for requests that carry no `budget_us`.
+    pub shed_deadline: AtomicU64,
+    /// Would-block lines refused because their tenant already had
+    /// `--tenant-inflight` jobs queued or executing in the offload
+    /// pool, answered with the typed `overloaded` error.
+    pub rejected_overloaded: AtomicU64,
     /// Remote-owner cache probes attempted (cluster tier).
     pub forwarded_gets: AtomicU64,
     /// Remote probes the owner answered from its cache.
@@ -350,6 +392,21 @@ impl QuantileSketch {
 }
 
 impl ServiceStats {
+    /// The admission conservation invariant, as a signed debt:
+    /// `lines_admitted − (lines_answered + over_quota + shed_deadline +
+    /// rejected_overloaded + lines_dropped)`. Positive means admitted
+    /// lines are still in flight (offloaded jobs running) — or, at a
+    /// quiescent point, that a request was silently dropped. Tests
+    /// assert 0 at quiescence so any future drop path fails loudly.
+    pub fn conservation_debt(&self) -> i64 {
+        let settled = self.lines_answered.load(Ordering::Relaxed)
+            + self.over_quota.load(Ordering::Relaxed)
+            + self.shed_deadline.load(Ordering::Relaxed)
+            + self.rejected_overloaded.load(Ordering::Relaxed)
+            + self.lines_dropped.load(Ordering::Relaxed);
+        self.lines_admitted.load(Ordering::Relaxed) as i64 - settled as i64
+    }
+
     /// Record one executed chunk on the `batch`-sized executable.
     pub fn record_exec(&self, batch: usize) {
         *self.exec_by_batch.lock().unwrap().entry(batch).or_insert(0) += 1;
@@ -419,6 +476,10 @@ impl ServiceStats {
             )
             .with("batch_fill_ratio", Json::num(self.batch_fill_ratio()))
             .with(
+                "batch_slots",
+                Json::num(self.batch_slots.load(Ordering::Relaxed) as f64),
+            )
+            .with(
                 "padded_slots",
                 Json::num(self.padded_slots.load(Ordering::Relaxed) as f64),
             )
@@ -442,6 +503,27 @@ impl ServiceStats {
             .with(
                 "fairness_deferrals",
                 Json::num(self.fairness_deferrals.load(Ordering::Relaxed) as f64),
+            )
+            .with(
+                "lines_admitted",
+                Json::num(self.lines_admitted.load(Ordering::Relaxed) as f64),
+            )
+            .with(
+                "lines_answered",
+                Json::num(self.lines_answered.load(Ordering::Relaxed) as f64),
+            )
+            .with(
+                "lines_dropped",
+                Json::num(self.lines_dropped.load(Ordering::Relaxed) as f64),
+            )
+            .with("over_quota", Json::num(self.over_quota.load(Ordering::Relaxed) as f64))
+            .with(
+                "shed_deadline",
+                Json::num(self.shed_deadline.load(Ordering::Relaxed) as f64),
+            )
+            .with(
+                "rejected_overloaded",
+                Json::num(self.rejected_overloaded.load(Ordering::Relaxed) as f64),
             )
             .with(
                 "forwarded_gets",
@@ -585,6 +667,7 @@ mod tests {
         let j = s.to_json();
         assert_eq!(j.req_f64("requests").unwrap(), 3.0);
         assert_eq!(j.req_f64("batch_fill_ratio").unwrap(), 0.0);
+        assert_eq!(j.req_f64("batch_slots").unwrap(), 0.0);
         assert_eq!(j.req_f64("padded_slots").unwrap(), 0.0);
         assert_eq!(j.req_f64("frontend_memo_hits").unwrap(), 2.0);
         assert_eq!(j.req_f64("encode_ns").unwrap(), 1500.0);
@@ -614,6 +697,14 @@ mod tests {
         assert_eq!(j.req_f64("offloaded_misses").unwrap(), 0.0);
         assert_eq!(j.req_f64("io_stall_ns").unwrap(), 0.0);
         assert_eq!(j.req_f64("offload_queue_depth").unwrap(), 0.0);
+        // Admission-tier counters are present (zero) before any quotas
+        // or shedding are configured — dashboards can rely on them.
+        assert_eq!(j.req_f64("lines_admitted").unwrap(), 0.0);
+        assert_eq!(j.req_f64("lines_answered").unwrap(), 0.0);
+        assert_eq!(j.req_f64("lines_dropped").unwrap(), 0.0);
+        assert_eq!(j.req_f64("over_quota").unwrap(), 0.0);
+        assert_eq!(j.req_f64("shed_deadline").unwrap(), 0.0);
+        assert_eq!(j.req_f64("rejected_overloaded").unwrap(), 0.0);
         // Autotune-search counters are present (zero) before any search
         // probes this service — dashboards can rely on them.
         assert_eq!(j.req_f64("search_candidates").unwrap(), 0.0);
@@ -621,6 +712,23 @@ mod tests {
         assert_eq!(j.req_f64("search_delta_probes").unwrap(), 0.0);
         assert_eq!(j.req_f64("search_ns").unwrap(), 0.0);
         assert!(j.get("exec_by_batch").is_some());
+    }
+
+    #[test]
+    fn conservation_debt_balances_every_outcome() {
+        let s = ServiceStats::default();
+        assert_eq!(s.conservation_debt(), 0, "fresh stats owe nothing");
+        s.lines_admitted.fetch_add(10, Ordering::Relaxed);
+        assert_eq!(s.conservation_debt(), 10, "admitted lines are in flight");
+        s.lines_answered.fetch_add(5, Ordering::Relaxed);
+        s.over_quota.fetch_add(2, Ordering::Relaxed);
+        s.shed_deadline.fetch_add(1, Ordering::Relaxed);
+        s.rejected_overloaded.fetch_add(1, Ordering::Relaxed);
+        s.lines_dropped.fetch_add(1, Ordering::Relaxed);
+        assert_eq!(s.conservation_debt(), 0, "every outcome settles one admission");
+        // Over-settling (a double count) goes negative, not modular.
+        s.lines_answered.fetch_add(1, Ordering::Relaxed);
+        assert_eq!(s.conservation_debt(), -1);
     }
 
     #[test]

@@ -10,6 +10,7 @@
 //!   predict      — one-shot prediction for an MLIR file
 //!   ground-truth — compile+simulate an MLIR file (the label path)
 //!   autotune     — cost-model-guided schedule search with measured regret
+//!   metrics      — scrape a running server's counters as `name value` text
 //!   info         — artifact manifest summary
 
 use anyhow::{anyhow, bail, Context, Result};
@@ -74,6 +75,7 @@ fn run(args: &[String]) -> Result<()> {
         "predict" => predict(&flags),
         "ground-truth" => ground_truth_cmd(&flags),
         "autotune" => autotune(&flags),
+        "metrics" => metrics_cmd(&flags),
         "info" => info(&flags),
         _ => {
             eprintln!(
@@ -87,7 +89,9 @@ fn run(args: &[String]) -> Result<()> {
                  serve --bundles d1,d2,... --addr 127.0.0.1:7071 [--pallas true] [--io-threads 1]\n    \
                  [--variants variants.json] [--workers-per-head 1] [--max-batch 32] [--max-wait-us 2000]\n    \
                  [--request-workers 0] [--batch-policy static|adaptive] [--reuseport false]\n    \
+                 [--quota 0] [--quota-burst 0] [--tenant-inflight 0] [--shed-deadlines false]\n    \
                  [--peers host:port,... --node-id host:port [--vnodes 64]]\n  \
+                 metrics [--addr 127.0.0.1:7071]\n  \
                  predict --bundle dir --file graph.mlir\n  \
                  ground-truth --file graph.mlir\n  \
                  autotune --family mlp --seed 7 [--file graph.mlir] [--objective cycles]\n    \
@@ -433,6 +437,12 @@ fn serve(flags: &HashMap<String, String>) -> Result<()> {
         io_threads: flag(flags, "io-threads", "1").parse()?,
         request_workers: flag(flags, "request-workers", "0").parse()?,
         reuseport: flag(flags, "reuseport", "false") == "true",
+        // Admission control: all off by default (a 0 quota means the
+        // line path is byte-identical to the pre-quota server).
+        quota: flag(flags, "quota", "0").parse()?,
+        quota_burst: flag(flags, "quota-burst", "0").parse()?,
+        tenant_inflight: flag(flags, "tenant-inflight", "0").parse()?,
+        shed_deadlines: flag(flags, "shed-deadlines", "false") == "true",
     };
     let addr = flag(flags, "addr", "127.0.0.1:7071");
     let mut service = Service::start_variants(manifest, specs, policy, opts)?;
@@ -476,6 +486,16 @@ fn serve(flags: &HashMap<String, String>) -> Result<()> {
     // `Stop::trigger()` is the shutdown path; the CLI serves until killed.
     let stop = server::Stop::new();
     server::serve(service, addr, stop, config)
+}
+
+/// Scrape a running server's stats as flat `name value` text (the
+/// `metrics` wire command) — pipeable straight into a fleet collector:
+/// `mlir-cost metrics --addr host:7071`.
+fn metrics_cmd(flags: &HashMap<String, String>) -> Result<()> {
+    let addr = flag(flags, "addr", "127.0.0.1:7071");
+    let mut client = server::Client::connect(addr)?;
+    print!("{}", client.metrics()?);
+    Ok(())
 }
 
 fn predict(flags: &HashMap<String, String>) -> Result<()> {

@@ -1,0 +1,394 @@
+//! Wire-level admission-control suite: quotas, per-connection
+//! fallback buckets, flood-vs-interactive tenancy, and deterministic
+//! deadline shedding — all artifact-free through the [`LineService`]
+//! seam (`serve_loops` over a fake model head, no `artifacts/`
+//! needed), so the suite runs on every CI machine.
+//!
+//! Pinned behavior (the issue's acceptance bar):
+//! - a tenant over its token-bucket quota gets a typed `over_quota`
+//!   error, and is admitted again once the bucket refills;
+//! - untagged traffic draws from per-connection buckets — one
+//!   connection's exhaustion never throttles a sibling;
+//! - a flooding tenant cannot starve an interactive tenant: the
+//!   interactive one's requests all answer correctly while the abuser
+//!   accumulates `over_quota` rejections;
+//! - weighted-fair queueing on the offload pool bounds how long one
+//!   tenant's backlog can delay another tenant's single job;
+//! - `shed_deadline` fires deterministically from seeded latency
+//!   estimates, and NEVER fires when no `budget_us` is supplied;
+//! - with every knob at its default the admission layer is off and
+//!   responses are byte-identical to a direct `handle()` render;
+//! - at quiescence the conservation ledger balances:
+//!   `admitted == answered + over_quota + shed_deadline + overloaded
+//!   + dropped`.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use mlir_cost::coordinator::deadline_unmeetable;
+use mlir_cost::coordinator::offload::LineService;
+use mlir_cost::coordinator::server::{serve_loops, ServerConfig, Stop};
+use mlir_cost::coordinator::stats::{LatencyEwma, ServiceStats};
+use mlir_cost::json::{parse, Json};
+
+/// Artifact-free model head: echoes every line back; lines containing
+/// `"slow"` are classified would-block and sleep `delay_ms` (the
+/// stand-in for a cache-miss model execution on the offload pool).
+/// `shed` mirrors the real service's contract — consulted only for
+/// requests that carry a `budget_us`, against a seeded latency EWMA —
+/// so the shedding tests are deterministic without artifacts.
+struct Echo {
+    stats: ServiceStats,
+    delay: Duration,
+    /// Seeded fastest-variant latency estimate for `shed`; 0 = the
+    /// fake has no estimate and never sheds (like a cold router).
+    est: LatencyEwma,
+}
+
+impl Echo {
+    fn new(delay_ms: u64) -> Arc<Echo> {
+        Arc::new(Echo {
+            stats: ServiceStats::default(),
+            delay: Duration::from_millis(delay_ms),
+            est: LatencyEwma::default(),
+        })
+    }
+}
+
+impl LineService for Echo {
+    fn stats(&self) -> &ServiceStats {
+        &self.stats
+    }
+
+    fn would_block(&self, line: &str) -> bool {
+        line.contains("slow")
+    }
+
+    fn handle(&self, line: &str) -> Json {
+        if line.contains("slow") {
+            std::thread::sleep(self.delay);
+        }
+        let id = parse(line).ok().and_then(|r| r.get("id").cloned()).unwrap_or(Json::Null);
+        Json::obj()
+            .with("id", id)
+            .with("ok", Json::Bool(true))
+            .with("echo", Json::str(line))
+    }
+
+    fn shed(&self, line: &str) -> Option<Json> {
+        let req = parse(line).ok()?;
+        let budget = req
+            .get("budget_us")
+            .and_then(Json::as_f64)
+            .filter(|b| b.is_finite() && *b >= 0.0)?;
+        let est = self.est.get();
+        if est <= 0.0 || !deadline_unmeetable(est, 0, budget) {
+            return None;
+        }
+        let id = req.get("id").cloned().unwrap_or(Json::Null);
+        Some(
+            Json::obj()
+                .with("id", id)
+                .with("ok", Json::Bool(false))
+                .with("error", Json::str(format!("shed_deadline: budget_us {budget} unmeetable"))),
+        )
+    }
+}
+
+/// Spawn `serve_loops` over a fake on port 0; (addr, stop, join).
+fn spawn(
+    svc: Arc<dyn LineService>,
+    config: ServerConfig,
+) -> (String, Arc<Stop>, std::thread::JoinHandle<anyhow::Result<()>>) {
+    let stop = Stop::new();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let server = {
+        let stop = stop.clone();
+        std::thread::spawn(move || serve_loops(svc, vec![listener], stop, config))
+    };
+    (addr, stop, server)
+}
+
+/// Write `n` request lines in one burst, tagged with `tenant` when
+/// given, then read `n` responses back. Returns (ok, over_quota)
+/// counts and asserts every response answers its request in order.
+fn burst(conn: &mut TcpStream, tenant: Option<&str>, n: usize) -> (usize, usize) {
+    let mut buf = String::new();
+    for i in 0..n {
+        let mut req = Json::obj().with("id", Json::num(i as f64));
+        if let Some(t) = tenant {
+            req = req.with("tenant", Json::str(t));
+        }
+        buf.push_str(&req.to_string());
+        buf.push('\n');
+    }
+    conn.write_all(buf.as_bytes()).unwrap();
+    let mut reader = BufReader::new(conn);
+    let (mut ok, mut over) = (0, 0);
+    for i in 0..n {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let resp = parse(&line).unwrap();
+        assert_eq!(
+            resp.get("id").and_then(Json::as_f64),
+            Some(i as f64),
+            "response desync at line {i}: {line:?}"
+        );
+        if resp.get("ok").and_then(Json::as_bool) == Some(true) {
+            ok += 1;
+        } else {
+            let err = resp.req_str("error").unwrap();
+            assert!(err.starts_with("over_quota"), "unexpected error form: {err}");
+            over += 1;
+        }
+    }
+    (ok, over)
+}
+
+/// Quota exhaustion returns the typed `over_quota` error — and the
+/// tenant is admitted again once the bucket refills at `quota`/s.
+#[test]
+fn quota_exhaustion_returns_over_quota_and_recovers_after_refill() {
+    let svc = Echo::new(0);
+    let config = ServerConfig { quota: 2.0, quota_burst: 2.0, ..Default::default() };
+    let (addr, stop, server) = spawn(svc.clone(), config);
+
+    let mut conn = TcpStream::connect(&addr).unwrap();
+    let (ok, over) = burst(&mut conn, Some("tuner-a"), 10);
+    // A fresh bucket holds exactly the burst; the 10-line burst lands
+    // well inside one refill interval, so at most a token's worth of
+    // slack beyond it can be admitted.
+    assert!((2..=3).contains(&ok), "burst of 2 admitted {ok} of 10");
+    assert!(over >= 7, "expected >= 7 over_quota rejections, got {over}");
+    // Refill: at 2 tokens/s, 700 ms banks at least one token.
+    std::thread::sleep(Duration::from_millis(700));
+    let mut conn2 = TcpStream::connect(&addr).unwrap();
+    let (ok2, _) = burst(&mut conn2, Some("tuner-a"), 1);
+    assert_eq!(ok2, 1, "tenant not re-admitted after refill");
+
+    stop.trigger();
+    let _ = server.join();
+    assert!(svc.stats.over_quota.load(Ordering::Relaxed) >= 7);
+    assert_eq!(svc.stats.conservation_debt(), 0, "admission ledger out of balance");
+}
+
+/// Untagged traffic falls back to one bucket per connection: one
+/// connection burning its burst must not throttle a sibling.
+#[test]
+fn untagged_connections_get_independent_buckets() {
+    let svc = Echo::new(0);
+    let config = ServerConfig { quota: 1.0, quota_burst: 1.0, ..Default::default() };
+    let (addr, stop, server) = spawn(svc.clone(), config);
+
+    let mut a = TcpStream::connect(&addr).unwrap();
+    let mut b = TcpStream::connect(&addr).unwrap();
+    let (ok_a, over_a) = burst(&mut a, None, 2);
+    let (ok_b, over_b) = burst(&mut b, None, 2);
+    // Each connection gets its own burst of 1 — the first line passes
+    // on BOTH connections, the immediate second is rejected on both.
+    assert_eq!((ok_a, over_a), (1, 1));
+    assert_eq!((ok_b, over_b), (1, 1));
+
+    stop.trigger();
+    let _ = server.join();
+    assert_eq!(svc.stats.over_quota.load(Ordering::Relaxed), 2);
+    assert_eq!(svc.stats.conservation_debt(), 0, "admission ledger out of balance");
+}
+
+/// The flood bar: one io thread, an abusive tenant pipelining a large
+/// burst, an interactive tenant doing paced request/response — the
+/// interactive tenant's requests ALL answer correctly while the
+/// abuser accumulates `over_quota` rejections, and the event loop's
+/// round-robin records fairness deferrals against the flooder.
+#[test]
+fn flooding_tenant_cannot_starve_interactive_tenant() {
+    let svc = Echo::new(0);
+    let config = ServerConfig {
+        io_threads: 1,
+        quota: 200.0,
+        quota_burst: 16.0,
+        ..Default::default()
+    };
+    let (addr, stop, server) = spawn(svc.clone(), config);
+
+    let flood_n = 512;
+    let mut abuser = TcpStream::connect(&addr).unwrap();
+    let flooder = std::thread::spawn(move || burst(&mut abuser, Some("abuser"), flood_n));
+
+    let mut ui = TcpStream::connect(&addr).unwrap();
+    ui.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    let mut reader = BufReader::new(ui.try_clone().unwrap());
+    let mut worst = Duration::ZERO;
+    for i in 0..20 {
+        let req = Json::obj().with("id", Json::num(i as f64)).with("tenant", Json::str("ui"));
+        let t0 = Instant::now();
+        ui.write_all(format!("{req}\n").as_bytes()).unwrap();
+        let mut line = String::new();
+        // A read timeout here (empty line) fails the id assert below —
+        // that IS the starvation detector.
+        reader.read_line(&mut line).unwrap();
+        let resp = parse(&line).unwrap();
+        assert_eq!(resp.get("id").and_then(Json::as_f64), Some(i as f64), "ui desync: {line:?}");
+        // Any rejection fails the test: the paced tenant stays far
+        // inside its own quota no matter what the abuser does.
+        assert_eq!(
+            resp.get("ok").and_then(Json::as_bool),
+            Some(true),
+            "interactive request rejected: {line:?}"
+        );
+        worst = worst.max(t0.elapsed());
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let (flood_ok, flood_over) = flooder.join().unwrap();
+    // The abuser burned its burst and little more; the bulk of the
+    // flood was rejected without model work.
+    assert!(flood_ok < flood_n / 2, "flood mostly admitted: {flood_ok}/{flood_n}");
+    assert!(flood_over > flood_n / 2, "expected most of the flood rejected, got {flood_over}");
+    // Interactive latency stayed sane (generous CI bound — the point
+    // is "not behind a 512-line flood", not a precise percentile).
+    assert!(worst < Duration::from_secs(2), "interactive tenant stalled {worst:?} behind flood");
+
+    stop.trigger();
+    let _ = server.join();
+    assert!(svc.stats.over_quota.load(Ordering::Relaxed) >= flood_over as u64);
+    assert_eq!(svc.stats.shed_deadline.load(Ordering::Relaxed), 0);
+    assert_eq!(svc.stats.conservation_debt(), 0, "admission ledger out of balance");
+}
+
+/// Weighted-fair queueing on the offload pool: a tenant with a deep
+/// backlog of slow jobs cannot make another tenant's single job wait
+/// behind the whole backlog — round-robin interleaves tenants, so the
+/// single job is served after at most ~one job's service time.
+#[test]
+fn fair_queueing_bounds_cross_tenant_offload_delay() {
+    let svc = Echo::new(8);
+    // Quota far above the traffic: admission exists (so tenant labels
+    // reach the pool's fair queues) but never rejects.
+    let config = ServerConfig {
+        io_threads: 1,
+        request_workers: 1,
+        quota: 100_000.0,
+        ..Default::default()
+    };
+    let (addr, stop, server) = spawn(svc.clone(), config);
+
+    // 48 slow jobs x 8 ms = a ~380 ms backlog for the abuser tenant
+    // (safely under the pool's 64-slot bound, so nothing falls back to
+    // an inline answer on the io thread).
+    let backlog = 48;
+    let mut abuser = TcpStream::connect(&addr).unwrap();
+    let mut buf = String::new();
+    for i in 0..backlog {
+        let req = Json::obj()
+            .with("id", Json::num(i as f64))
+            .with("tenant", Json::str("abuser"))
+            .with("kind", Json::str("slow"));
+        buf.push_str(&req.to_string());
+        buf.push('\n');
+    }
+    abuser.write_all(buf.as_bytes()).unwrap();
+    // Let the loop admit the backlog into the pool's abuser queue.
+    std::thread::sleep(Duration::from_millis(60));
+
+    let mut ui = TcpStream::connect(&addr).unwrap();
+    let req = Json::obj()
+        .with("id", Json::num(0.0))
+        .with("tenant", Json::str("ui"))
+        .with("kind", Json::str("slow"));
+    let t0 = Instant::now();
+    ui.write_all(format!("{req}\n").as_bytes()).unwrap();
+    let mut reader = BufReader::new(&ui);
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let waited = t0.elapsed();
+    assert!(parse(&line).unwrap().get("ok").and_then(Json::as_bool) == Some(true));
+    // FIFO would serve the ui job after the remaining ~300+ ms of
+    // abuser backlog; fair queueing serves it after at most a couple
+    // of service times. Generous CI bound.
+    assert!(waited < Duration::from_millis(150), "ui job waited {waited:?} behind a FIFO backlog");
+
+    // Drain the abuser's responses so teardown sees a quiet server.
+    let mut reader = BufReader::new(&abuser);
+    for _ in 0..backlog {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+    }
+    stop.trigger();
+    let _ = server.join();
+    assert_eq!(svc.stats.conservation_debt(), 0, "admission ledger out of balance");
+}
+
+/// Deadline shedding is deterministic against seeded estimates: an
+/// unmeetable `budget_us` is rejected with the typed `shed_deadline`
+/// error, a generous budget passes, and a request WITHOUT a budget is
+/// never shed — even with the estimate seeded sky-high.
+#[test]
+fn shed_deadline_is_deterministic_from_seeded_estimates() {
+    let svc = Echo::new(0);
+    svc.est.set(1_000.0); // "fastest variant takes ~1000 us"
+    let config = ServerConfig { shed_deadlines: true, ..Default::default() };
+    let (addr, stop, server) = spawn(svc.clone(), config);
+
+    let mut conn = TcpStream::connect(&addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    let mut send = |req: Json| -> Json {
+        conn.write_all(format!("{req}\n").as_bytes()).unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        parse(&line).unwrap()
+    };
+
+    // budget 100 us < 1000 us estimate: shed, typed error.
+    let resp = send(Json::obj().with("id", Json::num(1.0)).with("budget_us", Json::num(100.0)));
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false));
+    assert!(resp.req_str("error").unwrap().starts_with("shed_deadline"));
+    // budget 10000 us: meetable, handled normally.
+    let resp = send(Json::obj().with("id", Json::num(2.0)).with("budget_us", Json::num(10_000.0)));
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true));
+    // No budget at all: NEVER shed, whatever the estimate says.
+    let resp = send(Json::obj().with("id", Json::num(3.0)));
+    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true));
+
+    stop.trigger();
+    let _ = server.join();
+    assert_eq!(svc.stats.shed_deadline.load(Ordering::Relaxed), 1);
+    assert_eq!(svc.stats.conservation_debt(), 0, "admission ledger out of balance");
+}
+
+/// The off switch IS off: with every admission knob at its default the
+/// wire responses are byte-identical to a direct `handle()` render and
+/// the admission-only counters stay untouched except the ledger pair.
+#[test]
+fn default_config_is_byte_identical_to_direct_handles() {
+    let svc = Echo::new(0);
+    let (addr, stop, server) = spawn(svc.clone(), ServerConfig::default());
+
+    let lines = [
+        r#"{"id": 1}"#,
+        r#"{"id": 2, "tenant": "ignored-when-off"}"#,
+        r#"{"id": 3, "budget_us": 0.001}"#,
+        r#"{"id": 4, "payload": "xyz"}"#,
+    ];
+    let mut conn = TcpStream::connect(&addr).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    for line in lines {
+        conn.write_all(format!("{line}\n").as_bytes()).unwrap();
+        let mut got = String::new();
+        reader.read_line(&mut got).unwrap();
+        let want = format!("{}\n", svc.handle(line));
+        assert_eq!(got, want, "wire response diverged from direct handle for {line}");
+    }
+
+    stop.trigger();
+    let _ = server.join();
+    assert_eq!(svc.stats.over_quota.load(Ordering::Relaxed), 0);
+    assert_eq!(svc.stats.shed_deadline.load(Ordering::Relaxed), 0);
+    assert_eq!(svc.stats.rejected_overloaded.load(Ordering::Relaxed), 0);
+    assert_eq!(svc.stats.lines_admitted.load(Ordering::Relaxed), lines.len() as u64);
+    assert_eq!(svc.stats.lines_answered.load(Ordering::Relaxed), lines.len() as u64);
+    assert_eq!(svc.stats.conservation_debt(), 0, "admission ledger out of balance");
+}

@@ -9,25 +9,36 @@
 //!       ok:true and carry every listed key
 //!   <!-- verify: error contains=bad json -->         response must be
 //!       ok:false with an "error" containing the substring
+//!   <!-- verify: admission contains=over_quota -->   the request is
+//!       replayed against a live admission-enabled mini-server (NOT
+//!       `handle_line` — these rejections fire at line admission) and
+//!       must be rejected with an error containing the substring
 //!
 //! If the doc drifts from the server (a renamed field, a removed
 //! command, an example that no longer parses), this test fails — the
 //! CI `docs-check` step runs it explicitly.
 //!
-//! Artifact-gated like every Service test: without `artifacts/` it is
-//! skipped.
+//! Artifact-gated like every Service test — except the admission
+//! examples, which run against a fake [`LineService`] and need no
+//! artifacts.
 
 use mlir_cost::bundle::Bundle;
 use mlir_cost::coordinator::batcher::BatchPolicy;
+use mlir_cost::coordinator::offload::LineService;
 use mlir_cost::coordinator::router::VariantSpec;
+use mlir_cost::coordinator::server::{serve_loops, ServerConfig, Stop};
+use mlir_cost::coordinator::stats::ServiceStats;
 use mlir_cost::coordinator::{server, ServeOptions, Service};
 use mlir_cost::dataset::TargetStats;
 use mlir_cost::json::Json;
 use mlir_cost::runtime::Manifest;
 use mlir_cost::sim::Target;
 use mlir_cost::tokenizer::{Scheme, Vocab};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
+use std::time::Duration;
 
 fn repo_root() -> PathBuf {
     Path::new(env!("CARGO_MANIFEST_DIR")).parent().unwrap().to_path_buf()
@@ -69,6 +80,9 @@ struct Example {
 enum Mode {
     Ok { keys: Vec<String> },
     Error { contains: Option<String> },
+    /// Rejection produced at line admission (quota / shedding / tenant
+    /// cap) — exercised over a real socket by its own test below.
+    Admission { contains: String },
 }
 
 /// Pull every `<!-- verify: ... -->` + following ```json fence out of
@@ -99,6 +113,15 @@ fn extract(doc: &str) -> Vec<Example> {
                 }
                 "error" => Mode::Error {
                     contains: rest.strip_prefix("contains=").map(|s| s.trim().to_string()),
+                },
+                "admission" => Mode::Admission {
+                    contains: rest
+                        .strip_prefix("contains=")
+                        .unwrap_or_else(|| {
+                            panic!("line {}: admission marker needs contains=", i + 1)
+                        })
+                        .trim()
+                        .to_string(),
                 },
                 other => panic!("line {}: unknown verify mode '{other}'", i + 1),
             };
@@ -151,6 +174,12 @@ fn every_documented_request_round_trips() {
     );
     let Some(svc) = service() else { return };
     for ex in examples {
+        // Admission rejections never reach handle_line; the
+        // documented_admission_errors_fire_on_the_wire test below
+        // replays those against a live admission-enabled server.
+        if matches!(ex.mode, Mode::Admission { .. }) {
+            continue;
+        }
         let resp = server::handle_line(&svc, &ex.request);
         let ok = resp.get("ok").and_then(Json::as_bool);
         match &ex.mode {
@@ -172,6 +201,7 @@ fn every_documented_request_round_trips() {
                     );
                 }
             }
+            Mode::Admission { .. } => unreachable!("skipped above"),
             Mode::Error { contains } => {
                 assert_eq!(
                     ok,
@@ -217,5 +247,219 @@ fn protocol_doc_markers_parse() {
         mlir_cost::json::parse(&ex.request).unwrap_or_else(|e| {
             panic!("protocol.md:{}: example does not parse: {e:#}", ex.line_no)
         });
+    }
+}
+
+/// Artifact-free stand-in behind the [`LineService`] seam for the
+/// admission examples: every line is would-block (so the tenant
+/// in-flight cap is exercisable), `handle` sleeps `delay` then answers
+/// ok, and `shed` rejects any `budget_us` below a fixed 1000 us
+/// fastest-variant estimate — mirroring the real service's contract.
+struct AdmissionFake {
+    stats: ServiceStats,
+    delay: Duration,
+}
+
+impl LineService for AdmissionFake {
+    fn stats(&self) -> &ServiceStats {
+        &self.stats
+    }
+
+    fn would_block(&self, _line: &str) -> bool {
+        true
+    }
+
+    fn handle(&self, line: &str) -> Json {
+        std::thread::sleep(self.delay);
+        let id = mlir_cost::json::parse(line)
+            .ok()
+            .and_then(|r| r.get("id").cloned())
+            .unwrap_or(Json::Null);
+        Json::obj().with("id", id).with("ok", Json::Bool(true))
+    }
+
+    fn shed(&self, line: &str) -> Option<Json> {
+        let req = mlir_cost::json::parse(line).ok()?;
+        let budget = req
+            .get("budget_us")
+            .and_then(Json::as_f64)
+            .filter(|b| b.is_finite() && *b >= 0.0)?;
+        if !mlir_cost::coordinator::deadline_unmeetable(1_000.0, 0, budget) {
+            return None;
+        }
+        Some(
+            Json::obj()
+                .with("id", req.get("id").cloned().unwrap_or(Json::Null))
+                .with("ok", Json::Bool(false))
+                .with(
+                    "error",
+                    Json::str(format!(
+                        "shed_deadline: budget_us {budget} unmeetable \
+                         (fastest variant ~1000 us, 0 queued)"
+                    )),
+                ),
+        )
+    }
+}
+
+fn spawn_admission(
+    delay: Duration,
+    config: ServerConfig,
+) -> (String, Arc<Stop>, std::thread::JoinHandle<anyhow::Result<()>>) {
+    let svc = Arc::new(AdmissionFake { stats: ServiceStats::default(), delay });
+    let stop = Stop::new();
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let server = {
+        let stop = stop.clone();
+        std::thread::spawn(move || serve_loops(svc, vec![listener], stop, config))
+    };
+    (addr, stop, server)
+}
+
+fn roundtrip(conn: &mut TcpStream, line: &str) -> Json {
+    conn.write_all(format!("{line}\n").as_bytes()).unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    let mut resp = String::new();
+    reader.read_line(&mut resp).unwrap();
+    mlir_cost::json::parse(&resp).unwrap()
+}
+
+/// Every `admission` example in protocol.md really is rejected, over
+/// a real socket, with the documented error class — against the
+/// matching admission configuration. Artifact-free.
+#[test]
+fn documented_admission_errors_fire_on_the_wire() {
+    let doc_path = repo_root().join("docs/protocol.md");
+    let doc = std::fs::read_to_string(&doc_path).unwrap();
+    let admission: Vec<Example> = extract(&doc)
+        .into_iter()
+        .filter(|ex| matches!(ex.mode, Mode::Admission { .. }))
+        .collect();
+    assert_eq!(admission.len(), 3, "expected over_quota/shed_deadline/overloaded examples");
+    for ex in admission {
+        let Mode::Admission { contains } = &ex.mode else { unreachable!() };
+        let rejected = match contains.as_str() {
+            "over_quota" => {
+                // Burst of 1: the first send passes, the replayed one
+                // is over quota.
+                let config =
+                    ServerConfig { quota: 1.0, quota_burst: 1.0, ..Default::default() };
+                let (addr, stop, server) = spawn_admission(Duration::ZERO, config);
+                let mut conn = TcpStream::connect(&addr).unwrap();
+                let first = roundtrip(&mut conn, &ex.request);
+                assert_eq!(first.get("ok").and_then(Json::as_bool), Some(true));
+                let second = roundtrip(&mut conn, &ex.request);
+                stop.trigger();
+                let _ = server.join();
+                second
+            }
+            "shed_deadline" => {
+                let config = ServerConfig { shed_deadlines: true, ..Default::default() };
+                let (addr, stop, server) = spawn_admission(Duration::ZERO, config);
+                let mut conn = TcpStream::connect(&addr).unwrap();
+                let resp = roundtrip(&mut conn, &ex.request);
+                stop.trigger();
+                let _ = server.join();
+                resp
+            }
+            "overloaded" => {
+                // One slow job parks the tenant at its in-flight cap
+                // of 1; the same tenant's next line (another
+                // connection, same `tenant` field) is rejected.
+                let config = ServerConfig {
+                    request_workers: 1,
+                    tenant_inflight: 1,
+                    ..Default::default()
+                };
+                let (addr, stop, server) =
+                    spawn_admission(Duration::from_millis(400), config);
+                let mut parked = TcpStream::connect(&addr).unwrap();
+                parked.write_all(format!("{}\n", ex.request).as_bytes()).unwrap();
+                // Let the first line reach the worker before replaying.
+                std::thread::sleep(Duration::from_millis(100));
+                let mut conn = TcpStream::connect(&addr).unwrap();
+                let resp = roundtrip(&mut conn, &ex.request);
+                // The parked line still answers ok once its job runs.
+                let mut reader = BufReader::new(&parked);
+                let mut line = String::new();
+                reader.read_line(&mut line).unwrap();
+                assert_eq!(
+                    mlir_cost::json::parse(&line).unwrap().get("ok").and_then(Json::as_bool),
+                    Some(true)
+                );
+                stop.trigger();
+                let _ = server.join();
+                resp
+            }
+            other => panic!(
+                "protocol.md:{}: no admission scenario for '{other}'",
+                ex.line_no
+            ),
+        };
+        assert_eq!(
+            rejected.get("ok").and_then(Json::as_bool),
+            Some(false),
+            "protocol.md:{}: admission example was not rejected: {rejected}",
+            ex.line_no
+        );
+        let msg = rejected.get("error").and_then(Json::as_str).unwrap_or("");
+        assert!(
+            msg.contains(contains.as_str()),
+            "protocol.md:{}: error '{msg}' does not mention '{contains}'",
+            ex.line_no
+        );
+        // The rejection echoes the request's id — pipelined clients
+        // stay in sync across rejections.
+        let want_id = mlir_cost::json::parse(&ex.request).unwrap().get("id").cloned();
+        assert_eq!(rejected.get("id").cloned(), want_id);
+    }
+}
+
+/// The `metrics` export really carries every counter operations.md
+/// documents: every backticked name in the first column of the
+/// runbook's counter tables appears in the flat text, either as a
+/// plain `name value` line or as a dotted `name.…` prefix (objects).
+/// Per-variant and `cluster.`-scoped rows are skipped — they live
+/// under computed prefixes the doc spells out in prose.
+#[test]
+fn metrics_exports_every_documented_counter() {
+    let ops_path = repo_root().join("docs/operations.md");
+    let doc = std::fs::read_to_string(&ops_path)
+        .unwrap_or_else(|e| panic!("reading {ops_path:?}: {e}"));
+    let mut names: Vec<String> = Vec::new();
+    for line in doc.lines() {
+        if !line.starts_with("| `") {
+            continue;
+        }
+        let first_cell = line.split('|').nth(1).unwrap_or("");
+        if first_cell.contains("(per variant)") {
+            continue;
+        }
+        let mut rest = first_cell;
+        while let Some(start) = rest.find('`') {
+            let after = &rest[start + 1..];
+            let Some(end) = after.find('`') else { break };
+            let name = &after[..end];
+            rest = &after[end + 1..];
+            // Flags (`--quota`), nested cluster keys (`cluster.nodes`),
+            // and array-valued rows (`cluster.peers[]`) are not flat
+            // counters.
+            if name.starts_with('-') || name.contains('.') || name.contains('[') {
+                continue;
+            }
+            names.push(name.to_string());
+        }
+    }
+    assert!(names.len() >= 40, "only {} documented counters found — parser drift?", names.len());
+    let Some(svc) = service() else { return };
+    let text = svc.metrics_text();
+    for name in &names {
+        let flat = format!("{name} ");
+        let nested = format!("{name}.");
+        assert!(
+            text.lines().any(|l| l.starts_with(&flat) || l.starts_with(&nested)),
+            "operations.md documents counter '{name}' but the metrics export lacks it"
+        );
     }
 }

@@ -23,6 +23,7 @@ benches=(
   e8_router
   e9_incremental
   e10_autotune
+  e11_admission
 )
 
 echo "== building all bench targets =="

@@ -140,6 +140,42 @@ def autotune_errors(doc, stem):
         )
 
 
+# Column set of the flood-vs-interactive sweep in BENCH_admission.json:
+# one row per pool mode (per-connection FIFO-equivalent vs tenant-tagged
+# fair queueing), diffed across PRs for interactive tail latency.
+ADMISSION_KEYS = {
+    "mode",
+    "flood_connections",
+    "request_workers",
+    "interactive_queries",
+    "interactive_p50_us",
+    "interactive_p95_us",
+    "flood_queries",
+    "flood_queries_per_sec",
+}
+
+
+def admission_errors(doc, stem):
+    """e11_admission-specific: the scenarios table must exist, keep its
+    column set, and carry both the untenanted and tenant-tagged rows."""
+    rows = doc.get("scenarios")
+    if not isinstance(rows, list) or not rows:
+        yield (f"{stem}.scenarios", "missing/empty array")
+        return
+    modes = set()
+    for i, row in enumerate(rows):
+        if not isinstance(row, dict):
+            yield (f"{stem}.scenarios[{i}]", "not an object")
+            continue
+        missing = ADMISSION_KEYS - set(row)
+        if missing:
+            yield (f"{stem}.scenarios[{i}]", f"missing keys {sorted(missing)}")
+        modes.add(row.get("mode"))
+    for mode in ("fifo_untenanted", "fair_tenant_tagged"):
+        if mode not in modes:
+            yield (f"{stem}.scenarios", f"no {mode!r} row")
+
+
 def check_file(root: Path, path: Path) -> int:
     rel = path.relative_to(root)
     try:
@@ -174,6 +210,10 @@ def check_file(root: Path, path: Path) -> int:
             errors += 1
     if bench == "e10_autotune":
         for leaf_path, msg in autotune_errors(doc, path.stem):
+            print(f"{rel}: {leaf_path}: {msg}", file=sys.stderr)
+            errors += 1
+    if bench == "e11_admission":
+        for leaf_path, msg in admission_errors(doc, path.stem):
             print(f"{rel}: {leaf_path}: {msg}", file=sys.stderr)
             errors += 1
     return errors

@@ -30,6 +30,7 @@ benches=(
   e8_router
   e9_incremental
   e10_autotune
+  e11_admission
 )
 
 # Benches that refuse to run without model artifacts. The rest measure
